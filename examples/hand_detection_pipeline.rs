@@ -1,0 +1,108 @@
+//! **End-to-end validation driver** (EXPERIMENTS.md §E2E): the full serving
+//! stack on a realistic workload — a synthetic ego-view hand camera streams
+//! frames at the paper's IPS_min (10), the rust coordinator batches them to
+//! the PJRT-compiled DetNet (JAX+Pallas AOT artifact; python never runs
+//! here), predictions are scored against the generator's ground truth, and
+//! the power-gate controller charges the Table-3 energy model for every
+//! wakeup/inference/idle interval so measured latency and modeled memory
+//! power come out of one run.
+//!
+//! Run: `make artifacts && cargo run --release --example hand_detection_pipeline`
+
+use std::time::{Duration, Instant};
+use xr_edge_dse::arch::{simba, MemFlavor, PeConfig};
+use xr_edge_dse::coordinator::{gating::GateController, sensor::Sensor, Config, Coordinator};
+use xr_edge_dse::mapping::map_network;
+use xr_edge_dse::power::power_model;
+use xr_edge_dse::tech::{Device, Node};
+use xr_edge_dse::workload::builtin;
+
+fn main() -> anyhow::Result<()> {
+    let fps = 10.0; // Table 3: IPS_min for hand detection
+    let seconds = 6.0;
+
+    // --- the modeled accelerator variants whose ledgers we track ---
+    let net = builtin::by_name("detnet")?;
+    let arch = simba(PeConfig::V2);
+    let map = map_network(&arch, &net);
+    let mut ledgers: Vec<(String, GateController)> = MemFlavor::ALL
+        .iter()
+        .map(|&f| {
+            let pm = power_model(&arch, &map, Node::N7, f, Device::VgsotMram);
+            (f.label().to_string(), GateController::new(pm))
+        })
+        .collect();
+
+    // --- the real serving pipeline ---
+    println!("loading DetNet artifact + compiling on PJRT CPU…");
+    let coord = Coordinator::start(Config {
+        artifacts_dir: "artifacts".into(),
+        model: "detnet".into(),
+        queue_depth: 4,
+    })?;
+    let mut cam = Sensor::hand_camera(fps, 42);
+
+    let t0 = Instant::now();
+    let mut submitted = 0u64;
+    let mut truths: Vec<(u64, Vec<f32>)> = Vec::new();
+    while t0.elapsed().as_secs_f64() < seconds {
+        std::thread::sleep(Duration::from_secs_f64(cam.next_gap_s()));
+        let frame = cam.capture();
+        truths.push((frame.id, frame.truth.clone()));
+        if coord.submit(frame) {
+            submitted += 1;
+        }
+        // charge the modeled accelerators for the same event schedule
+        let period_ns = 1e9 / fps;
+        for (_, g) in ledgers.iter_mut() {
+            let before = g.elapsed_ns;
+            g.inference();
+            g.idle((period_ns - (g.elapsed_ns - before)).max(0.0));
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    // --- collect predictions and score them ---
+    let mut n_scored = 0usize;
+    let mut center_err_sum = 0.0f64;
+    while let Ok(res) = coord.results.try_recv() {
+        if let Some((_, truth)) = truths.iter().find(|(id, _)| *id == res.frame_id) {
+            // outputs[0] = sigmoid centers (x,y for 2 hands); truth = cx,cy,r
+            let c = &res.outputs[0];
+            let (dx, dy) = (c[0] - truth[0], c[1] - truth[1]);
+            center_err_sum += ((dx * dx + dy * dy) as f64).sqrt();
+            n_scored += 1;
+        }
+    }
+    let dropped = coord.dropped_frames();
+    let stats = coord.shutdown()?;
+    print!(
+        "{}",
+        stats.render(&format!("hand-detection e2e @{fps} fps (DetNet via PJRT)"), wall, dropped)
+    );
+    if n_scored > 0 {
+        println!(
+            "prediction center error (normalized): {:.3} over {} frames{}",
+            center_err_sum / n_scored as f64,
+            n_scored,
+            if std::path::Path::new("artifacts/detnet.params.npz").exists() {
+                " [trained params]"
+            } else {
+                " [untrained init — run `make train-curves` for a real model]"
+            }
+        );
+    }
+
+    println!("\nmodeled memory power at the observed schedule (Table-3 cross-check):");
+    for (label, g) in &ledgers {
+        println!(
+            "  {label:9} {:8.1} µW  ({} inferences, {} wakeups, {:.1} IPS observed)",
+            g.avg_power_uw(),
+            g.inferences,
+            g.wakeups,
+            g.observed_ips()
+        );
+    }
+    println!("\nsubmitted {submitted} frames; see EXPERIMENTS.md §E2E for the recorded run");
+    Ok(())
+}

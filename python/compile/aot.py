@@ -1,0 +1,119 @@
+"""AOT compile path: lower the JAX models (with L1 Pallas kernels inlined
+via interpret=True) to **HLO text** and export the workload JSON the rust
+analytical models consume.
+
+HLO *text*, not serialized HloModuleProto: jax ≥ 0.5 emits 64-bit
+instruction ids that the `xla` crate's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Outputs per network under --out (default ../artifacts):
+  <net>.hlo.txt        — the compiled inference function (batch 1)
+  <net>.meta.json      — input shape + output names for rust/src/runtime
+  <net>.workload.json  — layer list for rust/src/workload
+Plus, if trained params exist (<net>.params.npz from compile.train), the
+lowered function closes over them; otherwise over seeded random init.
+
+Usage: cd python && python -m compile.aot [--out ../artifacts] [--net both]
+       [--no-pallas]  (lower the pure-jnp path instead — ablation)
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def outputs_for(name: str):
+    if name == "detnet":
+        return ["centers", "radii", "label_logits"]
+    return ["mask_logits"]
+
+
+def build_fn(name, spec, params, use_pallas):
+    if name == "detnet":
+
+        def fn(x):
+            logits = M.forward(spec, params, x, use_pallas=use_pallas)
+            c, r, lab = M.detnet_outputs(logits)
+            return (c, r, lab)
+
+    else:
+
+        def fn(x):
+            logits = M.forward(spec, params, x, use_pallas=use_pallas)
+            return (logits,)
+
+    return fn
+
+
+def export_net(name: str, out_dir: str, use_pallas: bool = True) -> str:
+    spec = M.spec_by_name(name)
+
+    params_path = os.path.join(out_dir, f"{name}.params.npz")
+    if os.path.exists(params_path):
+        from .train import load_params
+
+        params = load_params(params_path)
+        trained = True
+    else:
+        params = M.init_params(spec, jax.random.PRNGKey(0))
+        trained = False
+
+    c, h, w = spec.input
+    x_spec = jax.ShapeDtypeStruct((1, c, h, w), jnp.float32)
+    fn = build_fn(name, spec, params, use_pallas)
+    lowered = jax.jit(fn).lower(x_spec)
+    hlo = to_hlo_text(lowered)
+
+    hlo_path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(hlo)
+
+    meta = dict(
+        name=name,
+        input_chw=[c, h, w],
+        outputs=outputs_for(name),
+        trained=trained,
+        pallas=use_pallas,
+    )
+    with open(os.path.join(out_dir, f"{name}.meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+
+    with open(os.path.join(out_dir, f"{name}.workload.json"), "w") as f:
+        json.dump(M.export_workload(spec), f, indent=1)
+
+    return hlo_path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--net", choices=["detnet", "edsnet", "both"], default="both")
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="lower the pure-jnp reference path (ablation)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    nets = ["detnet", "edsnet"] if args.net == "both" else [args.net]
+    for name in nets:
+        path = export_net(name, args.out, use_pallas=not args.no_pallas)
+        size = os.path.getsize(path)
+        print(f"{name}: wrote {path} ({size/1e6:.1f} MB)")
+
+
+if __name__ == "__main__":
+    main()

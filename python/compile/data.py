@@ -1,0 +1,89 @@
+"""Synthetic dataset generators — the documented substitution for FPHAB
+(hand detection) and OpenEDS (eye segmentation); see DESIGN.md
+§Substitutions. Mirrors `rust/src/coordinator/sensor.rs` so the serving
+path sees in-distribution frames.
+
+Hand frames: dark background + 1–2 bright soft-edged blobs; the annotation
+is the bounding circle (center, radius) and the handedness label — exactly
+the keypoint→circle conversion the paper performs on FPHAB (§2.2: center =
+mean of keypoints, radius = max distance to center).
+
+Eye frames: concentric sclera/iris/pupil ellipses with a 4-class mask
+(background / sclera / iris / pupil), OpenEDS-style.
+"""
+
+import numpy as np
+
+HAND_SHAPE = (1, 128, 128)
+EYE_SHAPE = (1, 192, 320)
+EYE_CLASSES = 4
+
+
+def _soft_disc(img, cx, cy, r, value):
+    h, w = img.shape
+    yy, xx = np.mgrid[0:h, 0:w]
+    d2 = (xx - cx * w) ** 2 + (yy - cy * h) ** 2
+    r_pix = r * min(h, w)
+    mask = d2 < r_pix**2
+    t = np.clip(1.0 - d2 / max(r_pix**2, 1e-9), 0.0, 1.0)
+    img[mask] = (value * (0.5 + 0.5 * t))[mask]
+    return mask
+
+
+def hand_batch(n, rng: np.random.Generator):
+    """Returns (frames [n,1,128,128], centers [n,4], radii [n,2],
+    labels [n,2] one-hot L/R). Second hand present with p=0.35; absent hand
+    repeats the first (the loss learns to track what exists)."""
+    c, h, w = HAND_SHAPE
+    frames = np.full((n, c, h, w), 0.05, np.float32)
+    centers = np.zeros((n, 4), np.float32)
+    radii = np.zeros((n, 2), np.float32)
+    labels = np.zeros((n, 2), np.float32)
+    for i in range(n):
+        # 21 synthetic keypoints → circle, like the FPHAB conversion.
+        kx = rng.uniform(0.25, 0.75)
+        ky = rng.uniform(0.25, 0.75)
+        spread = rng.uniform(0.05, 0.18)
+        kps = rng.normal([kx, ky], spread, size=(21, 2)).clip(0.02, 0.98)
+        cxy = kps.mean(axis=0)
+        r = float(np.linalg.norm(kps - cxy, axis=1).max())
+        _soft_disc(frames[i, 0], cxy[0], cxy[1], r, 0.9)
+        is_left = rng.random() < 0.5
+        # left hands are rendered slightly darker — a learnable cue
+        if is_left:
+            frames[i, 0] *= 0.8
+        centers[i] = [cxy[0], cxy[1], cxy[0], cxy[1]]
+        radii[i] = [r, r]
+        labels[i] = [1.0, 0.0] if is_left else [0.0, 1.0]
+        frames[i, 0] += rng.normal(0, 0.01, (h, w)).astype(np.float32)
+    return frames.clip(0, 1), centers, radii, labels
+
+
+def eye_batch(n, rng: np.random.Generator):
+    """Returns (frames [n,1,192,320], masks [n,192,320] int class ids)."""
+    c, h, w = EYE_SHAPE
+    frames = np.full((n, c, h, w), 0.1, np.float32)
+    masks = np.zeros((n, h, w), np.int32)
+    for i in range(n):
+        cx = rng.uniform(0.35, 0.65)
+        cy = rng.uniform(0.35, 0.65)
+        r_iris = rng.uniform(0.10, 0.18)
+        r_pupil = r_iris * rng.uniform(0.3, 0.6)
+        r_sclera = r_iris * rng.uniform(1.8, 2.4)
+        m = _soft_disc(frames[i, 0], cx, cy, r_sclera, 0.55)
+        masks[i][m] = 1
+        m = _soft_disc(frames[i, 0], cx, cy, r_iris, 0.75)
+        masks[i][m] = 2
+        m = _soft_disc(frames[i, 0], cx, cy, r_pupil, 0.12)
+        masks[i][m] = 3
+        frames[i, 0] += rng.normal(0, 0.01, (h, w)).astype(np.float32)
+    return frames.clip(0, 1), masks
+
+
+def onehot_mask(masks, n_classes=EYE_CLASSES):
+    """[n,h,w] int → [n,c,h,w] float one-hot."""
+    n, h, w = masks.shape
+    out = np.zeros((n, n_classes, h, w), np.float32)
+    for cls in range(n_classes):
+        out[:, cls] = masks == cls
+    return out

@@ -1,0 +1,246 @@
+"""L1 Pallas kernels: the compute hot-spots of DetNet/EDSNet.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper targets
+systolic ASICs, so the TPU mapping of its insight is (i) conv → im2col →
+MXU-shaped matmul tiles sized for VMEM, and (ii) the IRB's
+"never materialize the expanded tensor" property expressed by fusing
+expand→depthwise→project inside one ``pallas_call`` so the expanded
+activation only ever lives in VMEM scratch.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin (and therefore
+the rust runtime) cannot execute Mosaic custom-calls; real-TPU efficiency is
+estimated structurally in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-native tile edge. Shapes are padded up to multiples of this so the
+# systolic array would be fully fed on real hardware.
+TILE = 128
+
+
+def _pad_to(x, multiple, axis):
+    pad = (-x.shape[axis]) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+# ---------------------------------------------------------------------------
+# Tiled matmul — the GEMM core used by the im2col convolution.
+# ---------------------------------------------------------------------------
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """Grid (M/T, N/T, K/T): the output tile (indexed independently of k)
+    stays resident in VMEM across the K loop — initialize on the first K
+    step, then accumulate an MXU-shaped `a_tile @ b_tile` per step."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+
+def _dim_tile(d: int, cap: int) -> int:
+    """Per-dimension tile: the smallest power of two ≥ d, capped at `cap`
+    (MXU edge). §Perf iteration 3: blanket 128-padding wastes >90% of the
+    MXU work on ≤64-channel layers (DetNet's K = C·KH·KW is 9–360); a
+    shape-adaptive tile keeps the grid dense while staying MXU-aligned for
+    the ≥128-wide EDSNet decoder GEMMs."""
+    t = 8
+    while t < d and t < cap:
+        t *= 2
+    return min(t, cap)
+
+
+def matmul(a, b, tile: int = TILE, interpret: bool = True):
+    """Tiled matmul: (M,K) @ (K,N) → (M,N) with shape-adaptive VMEM tiles
+    (≤ `tile` per edge). VMEM per grid step = 3 tiles ≤ 3·128²·4 B = 192 kB,
+    comfortably inside a 16 MiB VMEM budget with double-buffering room."""
+    m0, k0 = a.shape
+    k0b, n0 = b.shape
+    assert k0 == k0b, f"inner dims {k0} != {k0b}"
+    tm, tk, tn = _dim_tile(m0, tile), _dim_tile(k0, tile), _dim_tile(n0, tile)
+    a = _pad_to(_pad_to(a, tm, 0), tk, 1)
+    b = _pad_to(_pad_to(b, tk, 0), tn, 1)
+    m, k = a.shape
+    n = b.shape[1]
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // tm, n // tn, k // tk),
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tk, tn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(a, b)
+    return out[:m0, :n0]
+
+
+# ---------------------------------------------------------------------------
+# im2col convolution built on the tiled matmul.
+# ---------------------------------------------------------------------------
+
+
+def conv2d(x, w, stride: int = 1, pad: int = 0, interpret: bool = True):
+    """NCHW conv via im2col + Pallas matmul. x: (N,C,H,W), w: (O,I,KH,KW)."""
+    n, c, h, ww = x.shape
+    o, i, kh, kw = w.shape
+    assert c == i, f"channels {c} != {i}"
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (ww + 2 * pad - kw) // stride + 1
+    # im2col: patches (N·OH·OW, C·KH·KW)
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=[(0, 0), (0, 0)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )  # (N, C*KH*KW, OH, OW)
+    cols = patches.transpose(0, 2, 3, 1).reshape(n * oh * ow, c * kh * kw)
+    wmat = w.reshape(o, c * kh * kw).T  # (C·KH·KW, O)
+    out = matmul(cols, wmat, interpret=interpret)  # (N·OH·OW, O)
+    return out.reshape(n, oh, ow, o).transpose(0, 3, 1, 2)
+
+
+# ---------------------------------------------------------------------------
+# Depthwise conv kernel: one channel-block per grid step, H×W plane in VMEM
+# (the Eyeriss-spad analogue: the filter row stays resident while the plane
+# streams through).
+# ---------------------------------------------------------------------------
+
+
+def _dw_kernel(x_ref, w_ref, o_ref, *, kh, kw, stride, oh, ow):
+    x = x_ref[...]  # (CB, H+2p, W+2p) padded plane block
+    w = w_ref[...]  # (CB, KH, KW)
+    acc = jnp.zeros((x.shape[0], oh, ow), jnp.float32)
+    for dy in range(kh):
+        for dx in range(kw):
+            window = jax.lax.slice(
+                x,
+                (0, dy, dx),
+                (x.shape[0], dy + (oh - 1) * stride + 1, dx + (ow - 1) * stride + 1),
+                (1, stride, stride),
+            )
+            acc += window * w[:, dy : dy + 1, dx : dx + 1]
+    o_ref[...] = acc
+
+
+def depthwise_conv2d(x, w, stride: int = 1, pad: int = 0, c_block: int = 8,
+                     interpret: bool = True):
+    """Depthwise NCHW conv. x: (N,C,H,W), w: (C,1,KH,KW)."""
+    n, c, h, ww = x.shape
+    cw, _, kh, kw = w.shape
+    assert c == cw
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    hp, wp = x.shape[2], x.shape[3]
+    oh = (hp - kh) // stride + 1
+    ow = (wp - kw) // stride + 1
+    cb = min(c_block, c)
+    cpad = (-c) % cb
+    if cpad:
+        x = jnp.pad(x, ((0, 0), (0, cpad), (0, 0), (0, 0)))
+        w = jnp.pad(w, ((0, cpad), (0, 0), (0, 0), (0, 0)))
+    ct = x.shape[1]
+    w2 = w.reshape(ct, kh, kw)
+
+    def per_image(xi):
+        return pl.pallas_call(
+            functools.partial(_dw_kernel, kh=kh, kw=kw, stride=stride, oh=oh, ow=ow),
+            grid=(ct // cb,),
+            in_specs=[
+                pl.BlockSpec((cb, hp, wp), lambda i: (i, 0, 0)),
+                pl.BlockSpec((cb, kh, kw), lambda i: (i, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((cb, oh, ow), lambda i: (i, 0, 0)),
+            out_shape=jax.ShapeDtypeStruct((ct, oh, ow), jnp.float32),
+            interpret=interpret,
+        )(xi, w2)
+
+    out = jax.vmap(per_image)(x)
+    return out[:, :c]
+
+
+# ---------------------------------------------------------------------------
+# Fused IRB: expand (1x1) → ReLU6 → depthwise 3x3 → ReLU6 → project (1x1).
+# The expanded tensor lives only in kernel-local values (VMEM under a real
+# TPU lowering) — the paper's IRB memory-footprint insight.
+# ---------------------------------------------------------------------------
+
+
+def _irb_kernel(x_ref, we_ref, wd_ref, wp_ref, o_ref, *, stride, oh, ow, kh, kw):
+    x = x_ref[...]  # (C, H+2, W+2) padded input plane
+    we = we_ref[...]  # (E, C)
+    wd = wd_ref[...]  # (E, KH, KW)
+    wp = wp_ref[...]  # (O, E)
+    c, hp, wp_ = x.shape
+    # expand: (E, H+2, W+2) — never leaves the kernel.
+    h = jnp.tensordot(we, x.reshape(c, hp * wp_), axes=1).reshape(-1, hp, wp_)
+    h = jnp.clip(h, 0.0, 6.0)
+    # depthwise
+    acc = jnp.zeros((h.shape[0], oh, ow), jnp.float32)
+    for dy in range(kh):
+        for dx in range(kw):
+            window = jax.lax.slice(
+                h,
+                (0, dy, dx),
+                (h.shape[0], dy + (oh - 1) * stride + 1, dx + (ow - 1) * stride + 1),
+                (1, stride, stride),
+            )
+            acc += window * wd[:, dy : dy + 1, dx : dx + 1]
+    acc = jnp.clip(acc, 0.0, 6.0)
+    # project: (O, OH, OW)
+    e = acc.shape[0]
+    y = jnp.tensordot(wp, acc.reshape(e, oh * ow), axes=1).reshape(-1, oh, ow)
+    o_ref[...] = y
+
+
+def irb(x, w_expand, w_dw, w_project, stride: int = 1, interpret: bool = True):
+    """Fused inverted-residual bottleneck. x: (N,C,H,W);
+    w_expand: (E,C,1,1); w_dw: (E,1,3,3); w_project: (O,E,1,1)."""
+    n, c, h, w = x.shape
+    e = w_expand.shape[0]
+    o = w_project.shape[0]
+    kh, kw = w_dw.shape[2], w_dw.shape[3]
+    pad = kh // 2
+    xp = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    hp, wp_ = xp.shape[2], xp.shape[3]
+    oh = (hp - kh) // stride + 1
+    ow = (wp_ - kw) // stride + 1
+    we = w_expand.reshape(e, c)
+    wd = w_dw.reshape(e, kh, kw)
+    wpm = w_project.reshape(o, e)
+
+    def per_image(xi):
+        return pl.pallas_call(
+            functools.partial(_irb_kernel, stride=stride, oh=oh, ow=ow, kh=kh, kw=kw),
+            grid=(1,),
+            in_specs=[
+                pl.BlockSpec((c, hp, wp_), lambda i: (0, 0, 0)),
+                pl.BlockSpec((e, c), lambda i: (0, 0)),
+                pl.BlockSpec((e, kh, kw), lambda i: (0, 0, 0)),
+                pl.BlockSpec((o, e), lambda i: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((o, oh, ow), lambda i: (0, 0, 0)),
+            out_shape=jax.ShapeDtypeStruct((o, oh, ow), jnp.float32),
+            interpret=interpret,
+        )(xi, we, wd, wpm)
+
+    y = jax.vmap(per_image)(xp)
+    if stride == 1 and y.shape == x.shape:
+        y = y + x
+    return y

@@ -1,0 +1,61 @@
+"""Pure-jnp reference oracle for the Pallas kernels (L1 correctness signal).
+
+Every kernel in this package has a reference implementation here written
+with plain ``jax.numpy`` / ``lax`` ops. ``python/tests/test_kernels.py``
+sweeps shapes and dtypes (hypothesis) and asserts allclose between kernel
+and oracle under ``interpret=True``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d_ref(x, w, stride: int = 1, pad: int = 0):
+    """NCHW conv2d, OIHW weights, no groups."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def depthwise_conv2d_ref(x, w, stride: int = 1, pad: int = 0):
+    """Depthwise NCHW conv2d; w has shape (C, 1, KH, KW)."""
+    c = x.shape[1]
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=c,
+    )
+
+
+def matmul_ref(a, b):
+    return jnp.matmul(a, b)
+
+
+def irb_ref(x, w_expand, w_dw, w_project, stride: int = 1):
+    """Inverted residual bottleneck (Fig 1(c)): 1x1 expand + ReLU6 →
+    3x3 depthwise (stride) + ReLU6 → 1x1 project (linear), residual when
+    shapes allow. The paper's point: the expanded tensor never needs to be
+    materialized in main memory — the fused Pallas kernel keeps it in VMEM.
+    """
+    h = conv2d_ref(x, w_expand)
+    h = jnp.clip(h, 0.0, 6.0)
+    h = depthwise_conv2d_ref(h, w_dw, stride=stride, pad=1)
+    h = jnp.clip(h, 0.0, 6.0)
+    y = conv2d_ref(h, w_project)
+    if stride == 1 and y.shape == x.shape:
+        y = y + x
+    return y
+
+
+def fake_quant_ref(x, scale, zero, qmin=-128, qmax=127):
+    """Per-tensor affine fake-quantization (TensorRT-style PTQ arithmetic)."""
+    q = jnp.round(x / scale) + zero
+    q = jnp.clip(q, qmin, qmax)
+    return (q - zero) * scale

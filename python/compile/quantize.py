@@ -1,0 +1,87 @@
+"""Post-training quantization (§2.2): per-tensor affine INT8, the TensorRT
+recipe — symmetric min/max for weights, calibrated activation ranges. The
+paper evaluates FP32 vs INT8 predictions (Fig 1(g)/(h)) and weight
+histograms (Fig 1(i)); `python/tests/test_quantize.py` and the
+`fig1_training` bench reproduce those comparisons on the synthetic data.
+
+The rust serving path mirrors this arithmetic in `rust/src/quant` so frames
+can be quantized without python at runtime.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .kernels.ref import fake_quant_ref
+
+
+def quantize_weights(params: dict) -> tuple[dict, dict]:
+    """Symmetric per-tensor INT8 fake-quant of every weight tensor.
+    Returns (quantized params, {layer: scale})."""
+    out = {}
+    scales = {}
+    for name, p in params.items():
+        absmax = float(jnp.max(jnp.abs(p["w"])))
+        scale = max(absmax / 127.0, 1e-12)
+        wq = fake_quant_ref(p["w"], scale, 0, -127, 127)
+        out[name] = {"w": wq, "b": p["b"]}  # biases stay FP32 (TensorRT)
+        scales[name] = scale
+    return out, scales
+
+
+def calibrate_input(frames: np.ndarray) -> tuple[float, int]:
+    """Asymmetric UINT8 activation calibration over a batch of frames."""
+    lo = min(float(frames.min()), 0.0)
+    hi = max(float(frames.max()), 0.0)
+    scale = max((hi - lo) / 255.0, 1e-12)
+    zero = int(round(-lo / scale))
+    return scale, zero
+
+
+def quantize_input(frames, scale, zero):
+    q = jnp.round(frames / scale) + zero
+    return (jnp.clip(q, 0, 255) - zero) * scale
+
+
+def weight_histogram(params: dict, bins: int = 101):
+    """Pooled weight histogram (Fig 1(i)): returns (edges, counts)."""
+    allw = np.concatenate([np.asarray(p["w"]).ravel() for p in params.values()])
+    lo, hi = float(allw.min()), float(allw.max())
+    counts, edges = np.histogram(allw, bins=bins, range=(lo, hi))
+    return edges, counts
+
+
+def distinct_levels(params: dict) -> int:
+    """Distinct weight values — quantized nets collapse to ≤255 levels per
+    tensor ('discrete levels', Fig 1(i))."""
+    return int(
+        max(
+            len(np.unique(np.asarray(p["w"]))) for p in params.values()
+        )
+    )
+
+
+def int8_eval_detnet(spec, params, params_q, frames, centers, radii):
+    """FP32-vs-INT8 prediction comparison (Fig 1(g) analogue): returns the
+    mean center error (normalized units) for both precisions."""
+    x = jnp.asarray(frames)
+
+    def center_err(p):
+        logits = M.forward(spec, p, x, use_pallas=False)
+        c, r, _ = M.detnet_outputs(logits)
+        return float(jnp.mean(jnp.linalg.norm(c - centers, axis=-1)))
+
+    return center_err(params), center_err(params_q)
+
+
+def int8_eval_edsnet(spec, params, params_q, frames, masks):
+    """FP32-vs-INT8 IoU comparison (Fig 1(h) analogue)."""
+    x = jnp.asarray(frames)
+
+    def miou(p):
+        logits = M.forward(spec, p, x, use_pallas=False)
+        pred = jnp.argmax(logits, axis=1)
+        return M.iou(pred, jnp.asarray(masks))
+
+    return miou(params), miou(params_q)

@@ -1,0 +1,148 @@
+"""Training (Fig 1(f) reproduction): DetNet with AdamW on circle + label
+losses; EDSNet with Adam on DiceLoss — the paper's optimizers and loss
+functions (§2.2), on the synthetic FPHAB/OpenEDS stand-ins, scaled down to
+a build-time budget (the paper trained 300 epochs / 6 epochs on real data;
+we train a few hundred steps — the qualitative claim reproduced is the
+loss-curve *shape*: circle-MSE dropping orders of magnitude, Dice
+converging within a fraction of the schedule).
+
+Usage: python -m compile.train --net detnet --steps 200 --out ../artifacts
+Writes <out>/loss_curves.json (merged across nets) and
+<out>/<net>.params.npz.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data, model as M
+
+
+def adamw_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": 0}
+
+
+def adamw_step(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8, wd=1e-4):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1**t)
+    vhat_scale = 1.0 / (1 - b2**t)
+
+    def upd(p, m, v):
+        return p - lr * (m * mhat_scale / (jnp.sqrt(v * vhat_scale) + eps) + wd * p)
+
+    return jax.tree.map(upd, params, m, v), {"m": m, "v": v, "t": t}
+
+
+def train_detnet(steps=200, batch=16, seed=0, log_every=10):
+    spec = M.detnet_spec()
+    params = M.init_params(spec, jax.random.PRNGKey(seed))
+    state = adamw_init(params)
+    rng = np.random.default_rng(seed)
+
+    @jax.jit
+    def step(params, state, x, c, r, y):
+        def loss_fn(p):
+            logits = M.forward(spec, p, x, use_pallas=False)
+            circle, ce = M.detnet_loss(logits, c, r, y)
+            return circle + 0.1 * ce, (circle, ce)
+
+        (loss, (circle, ce)), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, state = adamw_step(params, grads, state)  # AdamW (§2.2)
+        return params, state, loss, circle, ce
+
+    curve = []
+    for i in range(steps):
+        frames, centers, radii, labels = data.hand_batch(batch, rng)
+        params, state, loss, circle, ce = step(
+            params, state, jnp.asarray(frames), jnp.asarray(centers),
+            jnp.asarray(radii), jnp.asarray(labels)
+        )
+        if i % log_every == 0 or i == steps - 1:
+            curve.append(
+                dict(step=i, loss=float(loss), circle=float(circle), label=float(ce))
+            )
+    return spec, params, curve
+
+
+def train_edsnet(steps=60, batch=4, seed=0, log_every=5):
+    spec = M.edsnet_spec()
+    params = M.init_params(spec, jax.random.PRNGKey(seed))
+    state = adamw_init(params)
+    rng = np.random.default_rng(seed)
+
+    @jax.jit
+    def step(params, state, x, m1h):
+        def loss_fn(p):
+            logits = M.forward(spec, p, x, use_pallas=False)
+            return M.dice_loss(logits, m1h)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        # Adam == AdamW with wd=0 (§2.2 uses Adam for EDSNet)
+        params, state = adamw_step(params, grads, state, wd=0.0)
+        return params, state, loss
+
+    curve = []
+    for i in range(steps):
+        frames, masks = data.eye_batch(batch, rng)
+        params, state, loss = step(
+            params, state, jnp.asarray(frames), jnp.asarray(data.onehot_mask(masks))
+        )
+        if i % log_every == 0 or i == steps - 1:
+            curve.append(dict(step=i, dice=float(loss)))
+    return spec, params, curve
+
+
+def save_params(params, path):
+    flat = {}
+    for name, p in params.items():
+        flat[f"{name}.w"] = np.asarray(p["w"])
+        flat[f"{name}.b"] = np.asarray(p["b"])
+    np.savez(path, **flat)
+
+
+def load_params(path):
+    flat = np.load(path)
+    params = {}
+    for key in flat.files:
+        name, kind = key.rsplit(".", 1)
+        params.setdefault(name, {})[kind] = jnp.asarray(flat[key])
+    return params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--net", choices=["detnet", "edsnet", "both"], default="both")
+    ap.add_argument("--steps", type=int, default=0, help="0 = per-net default")
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    curves_path = os.path.join(args.out, "loss_curves.json")
+    curves = {}
+    if os.path.exists(curves_path):
+        curves = json.load(open(curves_path))
+
+    if args.net in ("detnet", "both"):
+        spec, params, curve = train_detnet(steps=args.steps or 200)
+        save_params(params, os.path.join(args.out, "detnet.params.npz"))
+        curves["detnet"] = curve
+        print(f"detnet: circle loss {curve[0]['circle']:.4f} -> {curve[-1]['circle']:.6f}")
+    if args.net in ("edsnet", "both"):
+        spec, params, curve = train_edsnet(steps=args.steps or 60)
+        save_params(params, os.path.join(args.out, "edsnet.params.npz"))
+        curves["edsnet"] = curve
+        print(f"edsnet: dice loss {curve[0]['dice']:.4f} -> {curve[-1]['dice']:.4f}")
+
+    json.dump(curves, open(curves_path, "w"), indent=1)
+    print(f"wrote {curves_path}")
+
+
+if __name__ == "__main__":
+    main()

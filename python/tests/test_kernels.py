@@ -1,0 +1,146 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle, swept over shapes
+and strides with hypothesis. This is the CORE correctness signal for the
+compile path — the AOT artifact embeds exactly these kernels."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv as K
+from compile.kernels import ref as R
+
+jax.config.update("jax_platform_name", "cpu")
+
+TOL = dict(rtol=1e-4, atol=1e-4)
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 200),
+    n=st.integers(1, 160),
+)
+def test_matmul_matches_ref(m, k, n):
+    rng = np.random.default_rng(m * 31 + k * 7 + n)
+    a, b = rand(rng, m, k), rand(rng, k, n)
+    np.testing.assert_allclose(K.matmul(a, b), R.matmul_ref(a, b), **TOL)
+
+
+def test_matmul_exact_tile_boundary():
+    rng = np.random.default_rng(0)
+    a, b = rand(rng, 128, 256), rand(rng, 256, 128)
+    np.testing.assert_allclose(K.matmul(a, b), R.matmul_ref(a, b), **TOL)
+
+
+def test_matmul_small_tile():
+    rng = np.random.default_rng(1)
+    a, b = rand(rng, 40, 50), rand(rng, 50, 30)
+    np.testing.assert_allclose(K.matmul(a, b, tile=32), R.matmul_ref(a, b), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# conv2d (im2col + pallas matmul)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n=st.integers(1, 2),
+    c=st.integers(1, 8),
+    o=st.integers(1, 12),
+    hw=st.integers(6, 24),
+    k=st.sampled_from([1, 3, 5]),
+    stride=st.sampled_from([1, 2]),
+)
+def test_conv2d_matches_ref(n, c, o, hw, k, stride):
+    rng = np.random.default_rng(n + c * 3 + o * 5 + hw * 7 + k * 11 + stride)
+    x = rand(rng, n, c, hw, hw)
+    w = rand(rng, o, c, k, k)
+    pad = k // 2
+    np.testing.assert_allclose(
+        K.conv2d(x, w, stride, pad), R.conv2d_ref(x, w, stride, pad), **TOL
+    )
+
+
+def test_conv2d_rectangular_and_no_pad():
+    rng = np.random.default_rng(5)
+    x = rand(rng, 1, 3, 17, 29)
+    w = rand(rng, 6, 3, 3, 3)
+    np.testing.assert_allclose(K.conv2d(x, w, 1, 0), R.conv2d_ref(x, w, 1, 0), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# depthwise conv
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    c=st.integers(1, 24),
+    hw=st.integers(6, 20),
+    stride=st.sampled_from([1, 2]),
+    cb=st.sampled_from([1, 4, 8]),
+)
+def test_depthwise_matches_ref(c, hw, stride, cb):
+    rng = np.random.default_rng(c * 13 + hw + stride + cb)
+    x = rand(rng, 2, c, hw, hw)
+    w = rand(rng, c, 1, 3, 3)
+    np.testing.assert_allclose(
+        K.depthwise_conv2d(x, w, stride, 1, c_block=cb),
+        R.depthwise_conv2d_ref(x, w, stride, 1),
+        **TOL,
+    )
+
+
+# ---------------------------------------------------------------------------
+# fused IRB
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    c=st.integers(2, 10),
+    e_mult=st.sampled_from([2, 4, 6]),
+    o=st.integers(2, 10),
+    hw=st.integers(6, 16),
+    stride=st.sampled_from([1, 2]),
+)
+def test_irb_matches_ref(c, e_mult, o, hw, stride):
+    rng = np.random.default_rng(c + e_mult + o * 3 + hw * 5 + stride)
+    e = c * e_mult
+    x = rand(rng, 1, c, hw, hw)
+    we = rand(rng, e, c, 1, 1)
+    wd = rand(rng, e, 1, 3, 3)
+    wp = rand(rng, o, e, 1, 1)
+    np.testing.assert_allclose(
+        K.irb(x, we, wd, wp, stride), R.irb_ref(x, we, wd, wp, stride), **TOL
+    )
+
+
+def test_irb_residual_path_active():
+    """When in_c == out_c and stride 1, the residual must be added."""
+    rng = np.random.default_rng(9)
+    c, e = 4, 16
+    x = rand(rng, 1, c, 8, 8)
+    we, wd = rand(rng, e, c, 1, 1), rand(rng, e, 1, 3, 3)
+    wp = jnp.zeros((c, e, 1, 1), jnp.float32)  # projection outputs zero
+    out = K.irb(x, we, wd, wp, 1)
+    np.testing.assert_allclose(out, x, **TOL)  # residual passthrough
+
+
+def test_fake_quant_ref_discretizes():
+    x = jnp.linspace(-1, 1, 1001)
+    q = R.fake_quant_ref(x, 1.0 / 127, 0)
+    assert len(np.unique(np.asarray(q))) <= 255
+    np.testing.assert_allclose(q, x, atol=1.0 / 127)

@@ -1,0 +1,152 @@
+"""L2 correctness: model shapes, pallas-vs-ref forward agreement, loss
+behaviour, and the workload-export contract with the rust side."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data, model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def det():
+    spec = M.detnet_spec()
+    params = M.init_params(spec, jax.random.PRNGKey(0))
+    return spec, params
+
+
+@pytest.fixture(scope="module")
+def eds():
+    spec = M.edsnet_spec()
+    params = M.init_params(spec, jax.random.PRNGKey(1))
+    return spec, params
+
+
+def test_detnet_output_shape(det):
+    spec, params = det
+    x = jnp.zeros((2, 1, 128, 128))
+    y = M.forward(spec, params, x, use_pallas=False)
+    assert y.shape == (2, 8)
+
+
+def test_edsnet_output_shape(eds):
+    spec, params = eds
+    x = jnp.zeros((1, 1, 192, 320))
+    y = M.forward(spec, params, x, use_pallas=False)
+    assert y.shape == (1, 4, 192, 320)
+
+
+def test_detnet_pallas_matches_ref(det):
+    spec, params = det
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.random((1, 1, 128, 128), dtype=np.float32))
+    y_ref = M.forward(spec, params, x, use_pallas=False)
+    y_pl = M.forward(spec, params, x, use_pallas=True)
+    np.testing.assert_allclose(y_pl, y_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_macs_match_rust_builtin_anchors(det, eds):
+    """The rust built-ins must agree; these anchors are asserted on both
+    sides (rust: workload::builtin tests; integration: test_workload_json)."""
+    d_macs = M.total_macs(det[0])
+    e_macs = M.total_macs(eds[0])
+    assert 5e6 < d_macs < 1e8
+    ratio = e_macs / d_macs
+    assert 20 < ratio < 500, ratio
+
+
+def test_workload_export_schema(det):
+    j = M.export_workload(det[0])
+    assert j["name"] == "detnet"
+    assert j["input"] == [1, 128, 128]
+    for l in j["layers"]:
+        for key in ("name", "kind", "in_c", "in_h", "in_w", "out_c", "out_h", "out_w"):
+            assert key in l, l
+        if l["kind"] in ("conv", "dwconv"):
+            assert {"kh", "kw", "stride", "pad", "groups"} <= set(l)
+        assert "src" not in l and "tap" not in l  # control flow stripped
+
+
+def test_weights_fit_gwb(det, eds):
+    """No DRAM: both models must fit the 512 kB global weight buffer at
+    INT8 (arch invariant shared with rust)."""
+    for spec in (det[0], eds[0]):
+        assert M.total_weights(spec) <= 512 * 1024, spec.name
+
+
+def test_residual_sources_resolved(det):
+    adds = [l for l in det[0].layers if l["kind"] == "add"]
+    assert adds, "detnet must have residual blocks"
+    for l in adds:
+        assert "src" in l
+        src = det[0].layers[l["src"]]
+        # residual operand is the *input* of the block's first layer: its
+        # in_c/in_h/in_w must equal the add's output shape
+        assert (src["in_c"], src["in_h"], src["in_w"]) == (
+            l["out_c"], l["out_h"], l["out_w"],
+        )
+
+
+def test_detnet_loss_decreases_on_easy_batch(det):
+    """One gradient step on a fixed batch must reduce the loss (training
+    machinery sanity; the full curve is produced by compile.train)."""
+    from compile.train import adamw_init, adamw_step
+
+    spec, params = det
+    rng = np.random.default_rng(3)
+    frames, centers, radii, labels = data.hand_batch(8, rng)
+    x, c, r, y = map(jnp.asarray, (frames, centers, radii, labels))
+
+    def loss_fn(p):
+        logits = M.forward(spec, p, x, use_pallas=False)
+        circle, ce = M.detnet_loss(logits, c, r, y)
+        return circle + 0.1 * ce
+
+    state = adamw_init(params)
+    l0, grads = jax.value_and_grad(loss_fn)(params)
+    p1, state = adamw_step(params, grads, state, lr=1e-3)
+    l1 = loss_fn(p1)
+    assert float(l1) < float(l0)
+
+
+def test_dice_loss_bounds(eds):
+    spec, _ = eds
+    n, c, h, w = 1, 4, 8, 8
+    onehot = jnp.zeros((n, c, h, w)).at[:, 0].set(1.0)
+    perfect = onehot * 1e3  # logits strongly favoring the right class
+    assert float(M.dice_loss(perfect, onehot)) < 0.05
+    # fully-wrong prediction: the two *present* classes score 0, the two
+    # absent classes score 1 under the smoothed convention → loss 0.5
+    wrong = jnp.roll(onehot, 1, axis=1) * 1e3
+    assert float(M.dice_loss(wrong, onehot)) > 0.45
+
+
+def test_iou_perfect_and_disjoint():
+    a = jnp.array([[0, 1], [2, 3]])
+    assert M.iou(a, a) == 1.0
+    b = jnp.array([[1, 0], [3, 2]])
+    assert M.iou(a, b) < 0.5
+
+
+def test_hand_batch_statistics():
+    rng = np.random.default_rng(0)
+    frames, centers, radii, labels = data.hand_batch(16, rng)
+    assert frames.shape == (16, 1, 128, 128)
+    assert frames.min() >= 0.0 and frames.max() <= 1.0
+    assert np.all((centers > 0) & (centers < 1))
+    assert np.all(labels.sum(axis=1) == 1.0)
+
+
+def test_eye_batch_statistics():
+    rng = np.random.default_rng(0)
+    frames, masks = data.eye_batch(4, rng)
+    assert frames.shape == (4, 1, 192, 320)
+    assert set(np.unique(masks)) <= {0, 1, 2, 3}
+    # pupil (3) must exist and sit inside iris (2)
+    assert (masks == 3).any() and (masks == 2).any()
+    onehot = data.onehot_mask(masks)
+    assert onehot.shape == (4, 4, 192, 320)
+    np.testing.assert_allclose(onehot.sum(axis=1), 1.0)

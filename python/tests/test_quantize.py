@@ -1,0 +1,77 @@
+"""PTQ correctness (Fig 1(g)-(i) analogues): INT8 weights collapse to
+discrete levels, quantized predictions stay close to FP32, calibration
+round-trips."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data, model as M, quantize as Q
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def det():
+    spec = M.detnet_spec()
+    params = M.init_params(spec, jax.random.PRNGKey(0))
+    return spec, params
+
+
+def test_quantized_weights_are_discrete(det):
+    _, params = det
+    params_q, scales = Q.quantize_weights(params)
+    assert set(params_q) == set(params)
+    for name, p in params_q.items():
+        levels = len(np.unique(np.asarray(p["w"])))
+        assert levels <= 255, f"{name}: {levels} levels"
+        assert scales[name] > 0
+        # max quantization error ≤ scale/2
+        err = np.abs(np.asarray(p["w"]) - np.asarray(params[name]["w"])).max()
+        assert err <= scales[name] / 2 + 1e-7
+
+
+def test_biases_stay_fp32(det):
+    _, params = det
+    # give one bias many distinct values
+    name = next(iter(params))
+    params = dict(params)
+    params[name] = {
+        "w": params[name]["w"],
+        "b": jnp.asarray(np.random.default_rng(0).random(params[name]["b"].shape, np.float32)),
+    }
+    params_q, _ = Q.quantize_weights(params)
+    np.testing.assert_array_equal(params_q[name]["b"], params[name]["b"])
+
+
+def test_int8_predictions_close_to_fp32(det):
+    spec, params = det
+    params_q, _ = Q.quantize_weights(params)
+    rng = np.random.default_rng(1)
+    frames, centers, radii, _ = data.hand_batch(4, rng)
+    err_fp, err_q = Q.int8_eval_detnet(
+        spec, params, params_q, frames, jnp.asarray(centers), jnp.asarray(radii)
+    )
+    # Untrained net: both errors are large but must be mutually close — the
+    # INT8 degradation bound is what Fig 1(g) demonstrates qualitatively.
+    assert abs(err_q - err_fp) < 0.15 * max(err_fp, 1e-6) + 0.02
+
+
+def test_input_calibration_roundtrip():
+    rng = np.random.default_rng(0)
+    frames = rng.random((2, 1, 8, 8), dtype=np.float32)
+    scale, zero = Q.calibrate_input(frames)
+    q = Q.quantize_input(jnp.asarray(frames), scale, zero)
+    assert float(jnp.max(jnp.abs(q - frames))) <= scale / 2 + 1e-7
+
+
+def test_weight_histogram_mass(det):
+    _, params = det
+    edges, counts = Q.weight_histogram(params, bins=51)
+    total = sum(int(np.asarray(p["w"]).size) for p in params.values())
+    assert counts.sum() == total
+    assert len(edges) == 52
+    params_q, _ = Q.quantize_weights(params)
+    assert Q.distinct_levels(params_q) <= 255
+    assert Q.distinct_levels(params) > 255

@@ -1,0 +1,63 @@
+"""Training-loop and AOT-export smoke tests (short budgets — the full runs
+happen under `make train-curves` / `make artifacts`)."""
+
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot, model as M, train as T
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_detnet_training_reduces_circle_loss():
+    # Fig 1(f) shape: the circle loss must drop substantially within a
+    # short budget on the synthetic data.
+    _, _, curve = T.train_detnet(steps=40, batch=8, seed=0, log_every=5)
+    first, last = curve[0]["circle"], curve[-1]["circle"]
+    assert last < 0.5 * first, f"{first} -> {last}"
+
+
+@pytest.mark.slow
+def test_edsnet_training_reduces_dice():
+    _, _, curve = T.train_edsnet(steps=10, batch=2, seed=0, log_every=2)
+    assert curve[-1]["dice"] < curve[0]["dice"]
+
+
+def test_params_roundtrip(tmp_path):
+    spec = M.detnet_spec()
+    params = M.init_params(spec, jax.random.PRNGKey(0))
+    path = tmp_path / "p.npz"
+    T.save_params(params, path)
+    loaded = T.load_params(path)
+    assert set(loaded) == set(params)
+    for name in params:
+        np.testing.assert_array_equal(loaded[name]["w"], params[name]["w"])
+
+
+def test_aot_export_detnet(tmp_path):
+    path = aot.export_net("detnet", str(tmp_path), use_pallas=False)
+    text = open(path).read()
+    assert text.startswith("HloModule")
+    meta = json.load(open(tmp_path / "detnet.meta.json"))
+    assert meta["input_chw"] == [1, 128, 128]
+    assert meta["outputs"] == ["centers", "radii", "label_logits"]
+    wl = json.load(open(tmp_path / "detnet.workload.json"))
+    assert wl["name"] == "detnet"
+    assert len(wl["layers"]) > 20
+
+
+def test_adamw_decays_weights():
+    import jax.numpy as jnp
+
+    params = {"l": {"w": jnp.ones((4, 4)), "b": jnp.zeros((4,))}}
+    grads = {"l": {"w": jnp.zeros((4, 4)), "b": jnp.zeros((4,))}}
+    state = T.adamw_init(params)
+    p1, _ = T.adamw_step(params, grads, state, lr=0.1, wd=0.5)
+    # zero gradient, nonzero weight decay → weights shrink
+    assert float(p1["l"]["w"].mean()) < 1.0
+    p2, _ = T.adamw_step(params, grads, state, lr=0.1, wd=0.0)
+    np.testing.assert_allclose(p2["l"]["w"], 1.0)

@@ -1,0 +1,78 @@
+//! Fig 1(f)/(g)/(h)/(i): training-loss curves, FP32-vs-INT8 evaluation and
+//! weight-distribution summary. The heavy lifting happens at build time in
+//! python (`make train-curves` → artifacts/loss_curves.json;
+//! `compile.quantize` inside pytest); this bench renders the recorded
+//! curves and asserts their shape. Paper claims: circle loss reaches
+//! ~1e-3-scale within the schedule (Fig 1(f) left); Dice converges within
+//! the first half of its schedule (right); quantized weights collapse to
+//! discrete levels (Fig 1(i)); INT8 predictions stay close to FP32.
+
+use xr_edge_dse::report::Table;
+use xr_edge_dse::util::benchkit::figure_header;
+use xr_edge_dse::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    figure_header(
+        "Fig 1(f)(i) — training curves & quantization (from python build artifacts)",
+        "circle-MSE drops orders of magnitude; Dice converges early; INT8 ≈ FP32",
+    );
+
+    let path = std::path::Path::new("artifacts/loss_curves.json");
+    if !path.exists() {
+        println!(
+            "artifacts/loss_curves.json not found — run `make train-curves` first.\n\
+             (Skipping gracefully: training is a build-time python step.)"
+        );
+        return Ok(());
+    }
+    let curves = Json::parse_file(path)?;
+
+    if let Some(det) = curves.get("detnet").as_arr() {
+        let mut t = Table::new("Fig 1(f) left — DetNet losses (AdamW)", &["step", "circle (MSE)", "label (CE)"]);
+        for p in det {
+            t.row(vec![
+                format!("{}", p.req_f64("step")? as i64),
+                format!("{:.5}", p.req_f64("circle")?),
+                format!("{:.4}", p.req_f64("label")?),
+            ]);
+        }
+        print!("{}", t.render());
+        let first = det.first().unwrap().req_f64("circle")?;
+        let last = det.last().unwrap().req_f64("circle")?;
+        assert!(
+            last < 0.25 * first,
+            "circle loss must drop substantially: {first} -> {last}"
+        );
+        println!("shape check PASS: circle {first:.4} → {last:.5} ({}× drop)", (first / last) as i64);
+    }
+
+    if let Some(eds) = curves.get("edsnet").as_arr() {
+        let mut t = Table::new("Fig 1(f) right — EDSNet Dice (Adam)", &["step", "dice loss"]);
+        for p in eds {
+            t.row(vec![
+                format!("{}", p.req_f64("step")? as i64),
+                format!("{:.4}", p.req_f64("dice")?),
+            ]);
+        }
+        print!("{}", t.render());
+        let first = eds.first().unwrap().req_f64("dice")?;
+        let last = eds.last().unwrap().req_f64("dice")?;
+        assert!(last < first, "dice must decrease: {first} -> {last}");
+        // "converges within three epochs" analogue: halfway point already
+        // captures most of the improvement
+        if eds.len() > 3 {
+            let mid = eds[eds.len() / 2].req_f64("dice")?;
+            let frac = (first - mid) / (first - last).max(1e-9);
+            println!("shape check PASS: dice {first:.3} → {last:.3}; {:.0}% of the drop by mid-schedule", frac * 100.0);
+        }
+    }
+
+    // Fig 1(g,h,i) are covered quantitatively by python/tests/test_quantize.py
+    // (INT8-vs-FP32 prediction deltas, ≤255 discrete weight levels,
+    // histogram mass conservation). Point the reader there:
+    println!(
+        "\nFig 1(g)(h)(i): see python/tests/test_quantize.py (INT8 vs FP32 predictions,\n\
+         discrete weight levels, histogram) — run under `make test`."
+    );
+    Ok(())
+}

@@ -1,0 +1,73 @@
+//! Fig 2(e): energy breakdown (compute vs memory) of the simulated
+//! architectures at their baseline nodes (45 nm CPU, 40 nm accelerators),
+//! SRAM-only. Paper claim: "memory power dissipation is far more
+//! significant than that of compute" for the systolic accelerators, with
+//! the CPU reversed (sequential dataflow reduces unnecessary fetches).
+
+use xr_edge_dse::arch::{cpu, eyeriss, simba, Arch, MemFlavor, PeConfig};
+use xr_edge_dse::energy::estimate;
+use xr_edge_dse::mapping::map_network;
+use xr_edge_dse::report::Table;
+use xr_edge_dse::tech::{Device, Node};
+use xr_edge_dse::util::benchkit::{bench, figure_header};
+use xr_edge_dse::workload::builtin;
+
+fn main() -> anyhow::Result<()> {
+    figure_header(
+        "Fig 2(e) — energy breakdown of simulated architectures (SRAM-only, baseline nodes)",
+        "memory ≫ compute on Eyeriss/Simba; compute ≫ memory on the CPU",
+    );
+
+    let cases: Vec<(Arch, Node)> = vec![
+        (cpu(), Node::N45),
+        (eyeriss(PeConfig::V2), Node::N40),
+        (simba(PeConfig::V2), Node::N40),
+    ];
+    let mut t = Table::new(
+        "per-inference energy breakdown (µJ)",
+        &["arch", "net", "compute", "memory", "mem share"],
+    );
+    for (arch, node) in &cases {
+        for name in ["detnet", "edsnet"] {
+            let net = builtin::by_name(name)?;
+            let map = map_network(arch, &net);
+            let b = estimate(arch, &map, *node, MemFlavor::SramOnly, Device::SttMram);
+            t.row(vec![
+                arch.name.clone(),
+                name.into(),
+                format!("{:.2}", b.compute_pj * 1e-6),
+                format!("{:.2}", b.mem_pj() * 1e-6),
+                format!("{:.0}%", b.mem_pj() / b.total_pj() * 100.0),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+
+    // shape assertions (the bench doubles as a regression gate)
+    for (arch, node) in &cases {
+        let net = builtin::by_name("detnet")?;
+        let map = map_network(arch, &net);
+        let b = estimate(arch, &map, *node, MemFlavor::SramOnly, Device::SttMram);
+        if arch.cpu_style {
+            assert!(b.compute_pj > b.mem_pj(), "cpu must be compute-dominated");
+        } else {
+            assert!(b.mem_pj() > b.compute_pj, "{} must be memory-dominated", arch.name);
+        }
+    }
+    println!("shape check PASS: memory dominates on systolic, compute on CPU");
+
+    // timing: the full figure evaluation
+    let nets: Vec<_> = ["detnet", "edsnet"]
+        .iter()
+        .map(|n| builtin::by_name(n).unwrap())
+        .collect();
+    bench("fig2e full evaluation", 3, 20, || {
+        for (arch, node) in &cases {
+            for net in &nets {
+                let map = map_network(arch, net);
+                std::hint::black_box(estimate(arch, &map, *node, MemFlavor::SramOnly, Device::SttMram));
+            }
+        }
+    });
+    Ok(())
+}

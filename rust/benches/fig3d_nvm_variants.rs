@@ -1,0 +1,106 @@
+//! Fig 3(d): single-inference energy for the nine architectural variants
+//! (CPU/Eyeriss/Simba × SRAM-only/P0/P1) at 28 nm (STT-MRAM) and 7 nm
+//! (VGSOT-MRAM), both workloads. Paper claims: (i) P0/P1 cost energy at
+//! 7 nm on the systolic accelerators but are ~neutral on the CPU; (ii) P1
+//! costs more everywhere; (iii) P0 *saves* at 28 nm and reverses at 7 nm
+//! (STT read-optimized vs VGSOT write-optimized).
+
+use xr_edge_dse::arch::MemFlavor;
+use xr_edge_dse::dse::{fig3d_grid, paper_sweeper};
+use xr_edge_dse::report::{pct, Csv, Table};
+use xr_edge_dse::tech::Node;
+use xr_edge_dse::util::benchkit::{bench, figure_header};
+
+fn main() -> anyhow::Result<()> {
+    figure_header(
+        "Fig 3(d) — single-inference energy, 9 variants × 2 nodes × 2 workloads",
+        "P1 > SRAM everywhere; P0 saves @28nm, reverses @7nm; CPU ~flat",
+    );
+
+    let s = paper_sweeper()?;
+    let pts = fig3d_grid(&s);
+    let base = |p: &xr_edge_dse::dse::DesignPoint| {
+        pts.iter()
+            .find(|q| {
+                q.arch == p.arch
+                    && q.network == p.network
+                    && q.node == p.node
+                    && q.flavor == MemFlavor::SramOnly
+            })
+            .unwrap()
+            .energy
+            .total_pj()
+    };
+
+    let mut t = Table::new(
+        "single-inference energy (µJ)",
+        &["net", "node", "arch", "SRAM-only", "P0", "P1", "P0 vs SRAM", "P1 vs SRAM"],
+    );
+    let mut csv = Csv::new(&["net", "node_nm", "arch", "flavor", "mram", "total_pj"]);
+    for net in ["detnet", "edsnet"] {
+        for node in [Node::N28, Node::N7] {
+            for arch in ["cpu", "eyeriss_v2", "simba_v2"] {
+                let get = |f: MemFlavor| {
+                    pts.iter()
+                        .find(|p| p.arch == arch && p.network == net && p.node == node && p.flavor == f)
+                        .unwrap()
+                };
+                let (s0, p0, p1) = (get(MemFlavor::SramOnly), get(MemFlavor::P0), get(MemFlavor::P1));
+                t.row(vec![
+                    net.into(),
+                    node.label(),
+                    arch.into(),
+                    format!("{:.2}", s0.energy.total_pj() * 1e-6),
+                    format!("{:.2}", p0.energy.total_pj() * 1e-6),
+                    format!("{:.2}", p1.energy.total_pj() * 1e-6),
+                    pct(p0.energy.total_pj() / s0.energy.total_pj() - 1.0),
+                    pct(p1.energy.total_pj() / s0.energy.total_pj() - 1.0),
+                ]);
+            }
+        }
+    }
+    for p in &pts {
+        csv.row(vec![
+            p.network.clone(),
+            format!("{}", p.node.nm()),
+            p.arch.clone(),
+            p.flavor.label().into(),
+            p.mram.label().into(),
+            format!("{:.3e}", p.energy.total_pj()),
+        ]);
+    }
+    print!("{}", t.render());
+    csv.save(std::path::Path::new("artifacts/figures/fig3d_energy.csv"))?;
+    println!("series saved to artifacts/figures/fig3d_energy.csv");
+
+    // --- shape checks over the full grid ---
+    let mut checks = 0;
+    for p in &pts {
+        let b = base(p);
+        match (p.flavor, p.node, p.arch.as_str()) {
+            (MemFlavor::P1, _, _) => {
+                assert!(p.energy.total_pj() > b, "{}@{:?} P1 must cost", p.arch, p.node);
+                checks += 1;
+            }
+            (MemFlavor::P0, Node::N28, _) => {
+                assert!(p.energy.total_pj() < b, "{}@28 P0 must save", p.arch);
+                checks += 1;
+            }
+            (MemFlavor::P0, Node::N7, a) if a != "cpu" => {
+                assert!(p.energy.total_pj() > b, "{a}@7 P0 must cost");
+                checks += 1;
+            }
+            _ => {}
+        }
+        if p.arch == "cpu" && p.flavor == MemFlavor::P1 {
+            let delta = (p.energy.total_pj() - b).abs() / b;
+            assert!(delta < 0.5, "cpu must stay ~flat, delta {delta}");
+        }
+    }
+    println!("shape check PASS ({checks} grid assertions)");
+
+    bench("fig3d 36-point grid", 2, 10, || {
+        std::hint::black_box(fig3d_grid(&s));
+    });
+    Ok(())
+}

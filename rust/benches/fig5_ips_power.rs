@@ -1,0 +1,140 @@
+//! Fig 5: memory power vs IPS for Simba and Eyeriss (8 panels: 2 archs ×
+//! 2 workloads × {P1 top row, P0 bottom row}) with SRAM/STT/SOT/VGSOT
+//! devices at 7 nm, annotating the cut-off (crossover) IPS per device.
+//! Paper claims: device read/write asymmetries separate the curves; with
+//! VGSOT the achievable P0 cut-off improves for Simba but *decreases* for
+//! Eyeriss (its small weight spads read the MRAM per MAC); P0 cut-offs are
+//! clipped by the memory-limited max rate.
+
+use xr_edge_dse::arch::{eyeriss, simba, MemFlavor, PeConfig};
+use xr_edge_dse::mapping::map_network;
+use xr_edge_dse::power::{crossover_ips, power_model};
+use xr_edge_dse::report::{Csv, Table};
+use xr_edge_dse::tech::{Device, Node};
+use xr_edge_dse::util::benchkit::{bench, figure_header};
+use xr_edge_dse::workload::builtin;
+
+fn main() -> anyhow::Result<()> {
+    figure_header(
+        "Fig 5 — memory power vs IPS, cut-off points per device (7 nm, v2)",
+        "NVM wins below the cut-off; VGSOT P0 cut-off: better on Simba, worse on Eyeriss",
+    );
+
+    let archs = [simba(PeConfig::V2), eyeriss(PeConfig::V2)];
+    let nets = [builtin::by_name("detnet")?, builtin::by_name("edsnet")?];
+
+    let mut t = Table::new(
+        "cut-off IPS (NVM beats SRAM below this rate; ∞ = up to max rate)",
+        &["panel", "arch", "net", "flavor", "STT", "SOT", "VGSOT"],
+    );
+    let mut csv = Csv::new(&["arch", "net", "flavor", "device", "ips", "p_mem_uw", "p_weight_uw"]);
+    let mut panel = 0;
+    let mut vgsot_p0: Vec<(String, f64)> = Vec::new();
+    for flavor in [MemFlavor::P1, MemFlavor::P0] {
+        for arch in &archs {
+            for net in &nets {
+                panel += 1;
+                let map = map_network(arch, net);
+                let mut cells = Vec::new();
+                for device in Device::MRAMS {
+                    let sram = power_model(arch, &map, Node::N7, MemFlavor::SramOnly, device);
+                    let nvm = power_model(arch, &map, Node::N7, flavor, device);
+                    // curve samples for the CSV (log-spaced)
+                    let mut ips = 0.05;
+                    while ips <= nvm.max_ips() && ips < 2e4 {
+                        csv.row(vec![
+                            arch.name.clone(),
+                            net.name.clone(),
+                            flavor.label().into(),
+                            device.label().into(),
+                            format!("{ips:.3}"),
+                            format!("{:.3}", nvm.p_mem_uw(ips)),
+                            format!("{:.3}", nvm.p_weight_uw(ips)),
+                        ]);
+                        ips *= 2.0;
+                    }
+                    let x = crossover_ips(&sram, &nvm);
+                    if device == Device::VgsotMram && flavor == MemFlavor::P0 {
+                        vgsot_p0.push((arch.name.clone(), x.unwrap_or(0.0)));
+                    }
+                    cells.push(match x {
+                        Some(v) if (v - nvm.max_ips()).abs() < 1e-6 => "∞".into(),
+                        Some(v) => format!("{v:.1}"),
+                        None => "-".to_string(),
+                    });
+                }
+                t.row(vec![
+                    format!("({panel})"),
+                    arch.name.clone(),
+                    net.name.clone(),
+                    flavor.label().into(),
+                    cells[0].clone(),
+                    cells[1].clone(),
+                    cells[2].clone(),
+                ]);
+            }
+        }
+    }
+    print!("{}", t.render());
+    csv.save(std::path::Path::new("artifacts/figures/fig5_ips_power.csv"))?;
+    println!("curves saved to artifacts/figures/fig5_ips_power.csv");
+
+    // Render one representative panel as an ASCII plot (Fig 5(b):
+    // Simba/DetNet/P1) so the bench log carries the figure itself.
+    {
+        let arch = &archs[0];
+        let net = &nets[0];
+        let map = map_network(arch, net);
+        let mut chart = xr_edge_dse::report::plot::Chart::new(
+            "Fig 5(b) — Simba/DetNet P1 @7nm: P_mem (µW) vs IPS (log-log)",
+            72,
+            18,
+        )
+        .log_log();
+        for device in Device::ALL {
+            let f = if device == Device::Sram { MemFlavor::SramOnly } else { MemFlavor::P1 };
+            let pm = power_model(arch, &map, Node::N7, f, device);
+            let mut pts = Vec::new();
+            let mut ips = 0.1;
+            while ips <= pm.max_ips().min(1.5e3) {
+                pts.push((ips, pm.p_mem_uw(ips)));
+                ips *= 1.6;
+            }
+            chart.add(device.label(), pts);
+        }
+        print!("{}", chart.render());
+    }
+
+    // --- shape checks ---
+    // VGSOT P0 cut-off: Simba's exceeds Eyeriss's for both workloads (§5).
+    let simba_cut: f64 = vgsot_p0.iter().filter(|(a, _)| a.starts_with("simba")).map(|(_, x)| x).sum();
+    let ey_cut: f64 = vgsot_p0.iter().filter(|(a, _)| a.starts_with("eyeriss")).map(|(_, x)| x).sum();
+    assert!(
+        simba_cut > ey_cut,
+        "Simba VGSOT-P0 cut-offs ({simba_cut}) must exceed Eyeriss's ({ey_cut})"
+    );
+    // Below every finite crossover, the NVM curve is lower.
+    let map = map_network(&archs[0], &nets[0]);
+    let sram = power_model(&archs[0], &map, Node::N7, MemFlavor::SramOnly, Device::VgsotMram);
+    let p1 = power_model(&archs[0], &map, Node::N7, MemFlavor::P1, Device::VgsotMram);
+    if let Some(x) = crossover_ips(&sram, &p1) {
+        assert!(p1.p_mem_uw(x * 0.3) < sram.p_mem_uw(x * 0.3));
+    }
+    println!("shape check PASS: Simba VGSOT-P0 cut-off > Eyeriss's; curves cross correctly");
+
+    bench("fig5 8-panel × 4-device evaluation", 1, 5, || {
+        for arch in &archs {
+            for net in &nets {
+                let map = map_network(arch, net);
+                for flavor in [MemFlavor::P0, MemFlavor::P1] {
+                    for device in Device::MRAMS {
+                        let s = power_model(arch, &map, Node::N7, MemFlavor::SramOnly, device);
+                        let n = power_model(arch, &map, Node::N7, flavor, device);
+                        std::hint::black_box(crossover_ips(&s, &n));
+                    }
+                }
+            }
+        }
+    });
+    Ok(())
+}

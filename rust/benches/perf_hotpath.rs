@@ -1,0 +1,91 @@
+//! Performance benches for the hot paths (EXPERIMENTS.md §Perf):
+//!   L3a — analytical DSE grid (the tool's interactive loop; target <100 ms
+//!         for the full Fig-3(d) 36-point grid);
+//!   L3b — mapper throughput per network;
+//!   L3c — the PJRT inference hot path (model execute, batch 1) plus the
+//!         coordinator overhead around it (target: overhead <5%);
+//!   util — JSON parse of the largest workload artifact.
+
+use xr_edge_dse::arch::{simba, PeConfig};
+use xr_edge_dse::dse::{fig3d_grid, paper_sweeper};
+use xr_edge_dse::mapping::map_network;
+use xr_edge_dse::util::benchkit::{bench, figure_header};
+use xr_edge_dse::workload::builtin;
+
+fn main() -> anyhow::Result<()> {
+    figure_header("§Perf — hot-path benches", "see EXPERIMENTS.md §Perf for the iteration log");
+
+    // L3a: full grid (includes mapper, energy, power, area per point).
+    let s = paper_sweeper()?;
+    let (grid_mean, _, _) = bench("L3a fig3d 36-point DSE grid", 3, 30, || {
+        std::hint::black_box(fig3d_grid(&s));
+    });
+    assert!(grid_mean < 0.1, "DSE grid must stay interactive (<100 ms), got {grid_mean}s");
+
+    // L3b: mapper alone on the big workload.
+    let arch = simba(PeConfig::V2);
+    let eds = builtin::by_name("edsnet")?;
+    bench("L3b map edsnet on simba_v2", 3, 50, || {
+        std::hint::black_box(map_network(&arch, &eds));
+    });
+
+    // Ablation: weight residency (DESIGN.md design choice) — how much of
+    // Simba's NVM viability comes from pinning the model in the per-PE
+    // weight buffers? Compare the residency-aware network mapping against
+    // per-layer streaming (map_layer).
+    {
+        use xr_edge_dse::energy::estimate;
+        use xr_edge_dse::mapping::{map_layer, LayerMap, NetworkMap};
+        let det = builtin::by_name("detnet")?;
+        let resident = map_network(&arch, &det);
+        let streaming = NetworkMap {
+            arch: arch.name.clone(),
+            network: det.name.clone(),
+            per_layer: det.layers.iter().map(|l| map_layer(&arch, l)).collect::<Vec<LayerMap>>(),
+        };
+        let node = xr_edge_dse::tech::Node::N7;
+        let mram = xr_edge_dse::tech::Device::VgsotMram;
+        let e_res = estimate(&arch, &resident, node, xr_edge_dse::arch::MemFlavor::P0, mram).mem_pj();
+        let e_str = estimate(&arch, &streaming, node, xr_edge_dse::arch::MemFlavor::P0, mram).mem_pj();
+        println!(
+            "ablation: weight residency cuts Simba P0 memory energy {:.3} → {:.3} µJ ({:.0}%)",
+            e_str * 1e-6,
+            e_res * 1e-6,
+            (1.0 - e_res / e_str) * 100.0
+        );
+        assert!(e_res < e_str, "residency must reduce weight-path energy");
+    }
+
+    // util: JSON parse of the exported workload (rust<->python interchange).
+    if let Ok(text) = std::fs::read_to_string("artifacts/edsnet.workload.json") {
+        bench("util parse edsnet.workload.json", 3, 50, || {
+            std::hint::black_box(xr_edge_dse::util::json::Json::parse(&text).unwrap());
+        });
+    }
+
+    // L3c: PJRT hot path — only when artifacts exist (needs `make artifacts`).
+    if std::path::Path::new("artifacts/detnet.hlo.txt").exists() {
+        let rt = xr_edge_dse::runtime::Runtime::cpu()?;
+        let exe = rt.load(std::path::Path::new("artifacts"), "detnet")?;
+        let (c, h, w) = exe.input_chw;
+        let frame = vec![0.5f32; c * h * w];
+        let (infer_mean, _, _) = bench("L3c detnet PJRT infer (batch 1)", 3, 20, || {
+            std::hint::black_box(exe.infer(&frame).unwrap());
+        });
+        // coordinator overhead: quantize pre-processing + channel hop is
+        // bounded by one frame copy; measure the copy+quant alone.
+        let qp = xr_edge_dse::quant::QParams::calibrate(0.0, 1.0);
+        let (pre_mean, _, _) = bench("L3c frame quant pre-processing", 3, 50, || {
+            let mut f = frame.clone();
+            xr_edge_dse::quant::fake_quant_u8(&mut f, qp);
+            std::hint::black_box(f);
+        });
+        println!(
+            "coordinator pre-processing overhead: {:.2}% of inference",
+            pre_mean / infer_mean * 100.0
+        );
+    } else {
+        println!("artifacts/detnet.hlo.txt missing — run `make artifacts` for the L3c bench");
+    }
+    Ok(())
+}

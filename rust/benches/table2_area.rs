@@ -1,0 +1,68 @@
+//! Table 2: area of the systolic accelerators at 7 nm under SRAM-only /
+//! P0 / P1 (VGSOT). Paper numbers: Simba 2.89 / 2.41 / 1.88 mm²
+//! (16.56% / 34.97% saving); Eyeriss 2.56 / 2.11 / 1.67 (17.52% / 34.98%).
+//! Reproduction target is the *savings structure* (P1 ≈ 2× P0, both
+//! double-digit) — absolute mm² depend on the cell library.
+
+use xr_edge_dse::arch::{eyeriss, simba, MemFlavor, PeConfig};
+use xr_edge_dse::area::{estimate, saving_vs_sram};
+use xr_edge_dse::report::{pct, Table};
+use xr_edge_dse::tech::{Device, Node};
+use xr_edge_dse::util::benchkit::{bench, figure_header};
+
+fn main() {
+    figure_header(
+        "Table 2 — area at 7 nm (v2, VGSOT-MRAM)",
+        "Simba 2.89/2.41/1.88 mm² (−16.6%/−35.0%); Eyeriss 2.56/2.11/1.67 (−17.5%/−35.0%)",
+    );
+
+    const PAPER: [(&str, [f64; 3]); 2] = [
+        ("simba_v2", [2.89, 2.41, 1.88]),
+        ("eyeriss_v2", [2.56, 2.11, 1.67]),
+    ];
+
+    let mut t = Table::new(
+        "area (mm²) — measured vs paper",
+        &["arch", "flavor", "measured", "paper", "saving (measured)", "saving (paper)"],
+    );
+    for (arch, paper) in PAPER {
+        let a = if arch.starts_with("simba") {
+            simba(PeConfig::V2)
+        } else {
+            eyeriss(PeConfig::V2)
+        };
+        let base = estimate(&a, Node::N7, MemFlavor::SramOnly, Device::VgsotMram).total_mm2();
+        for (i, flavor) in MemFlavor::ALL.iter().enumerate() {
+            let m = estimate(&a, Node::N7, *flavor, Device::VgsotMram).total_mm2();
+            t.row(vec![
+                arch.into(),
+                flavor.label().into(),
+                format!("{m:.2}"),
+                format!("{:.2}", paper[i]),
+                pct(1.0 - m / base),
+                pct(1.0 - paper[i] / paper[0]),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+
+    // --- shape checks ---
+    for a in [simba(PeConfig::V2), eyeriss(PeConfig::V2)] {
+        let p0 = saving_vs_sram(&a, Node::N7, MemFlavor::P0, Device::VgsotMram);
+        let p1 = saving_vs_sram(&a, Node::N7, MemFlavor::P1, Device::VgsotMram);
+        assert!(p0 > 0.05 && p0 < 0.30, "{}: P0 saving {p0}", a.name);
+        assert!(p1 > 0.20 && p1 < 0.45, "{}: P1 saving {p1}", a.name);
+        assert!(p1 > 1.5 * p0, "{}: P1 must be ≫ P0", a.name);
+        let total = estimate(&a, Node::N7, MemFlavor::SramOnly, Device::VgsotMram).total_mm2();
+        assert!((1.0..6.0).contains(&total), "{}: {total} mm²", a.name);
+    }
+    println!("shape check PASS: double-digit P0, ~2× for P1, mm²-scale dies");
+
+    bench("table2 area model (6 variants)", 5, 50, || {
+        for a in [simba(PeConfig::V2), eyeriss(PeConfig::V2)] {
+            for f in MemFlavor::ALL {
+                std::hint::black_box(estimate(&a, Node::N7, f, Device::VgsotMram));
+            }
+        }
+    });
+}

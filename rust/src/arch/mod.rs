@@ -1,0 +1,476 @@
+//! Architecture descriptions (Fig 2(a)-(d)): a generic CPU, Eyeriss
+//! (row-stationary) and Simba (weight-stationary), in the paper's modified
+//! form — **DRAM removed**, activation global buffer sized to the workload,
+//! an explicit **Global Weight Buffer (GWB)** holding the entire (INT8)
+//! model since there is no backing store, and INT8 datapaths (40 nm Aladdin
+//! cell library baseline for the accelerators, 45 nm for the CPU).
+//!
+//! `v1` configurations mirror the published chips' PE counts (Fig 2(f)
+//! node-scaling study); `v2` scales both accelerators to 64×64 = 4096 MAC
+//! lanes (Table 2 / Table 3 / Fig 5 use v2, per the Table 3 caption).
+
+use crate::mem::{MacroModel, MacroSpec};
+use crate::tech::{Device, Node};
+
+/// Dataflow family — determines the Timeloop-lite mapping formulas.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dataflow {
+    /// Eyeriss [1]: filter rows pinned in per-PE spads, ifmap diagonally
+    /// reused, psums accumulated vertically.
+    RowStationary,
+    /// Simba [16]: weight tiles pinned in per-PE weight buffers, inputs
+    /// broadcast, outputs accumulated in the accumulation buffer.
+    WeightStationary,
+    /// In-order CPU with a unified on-chip SRAM (QKeras model [2]).
+    CpuSequential,
+}
+
+/// What a buffer level stores — decides which levels the P0/P1 MRAM
+/// strategies replace and which traffic classes the mapper routes to it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BufferRole {
+    /// Weights (per-PE weight buffer / spad).
+    Weight,
+    /// The global weight buffer (whole model resident; no DRAM).
+    GlobalWeight,
+    /// Input activations.
+    Input,
+    /// Partial sums / accumulators.
+    Accum,
+    /// Unified activation global buffer (inputs + outputs).
+    Activation,
+    /// CPU unified memory (weights + activations).
+    Unified,
+}
+
+/// Physical implementation of a level: SRAM-macro levels are candidates for
+/// MRAM replacement; register files are flip-flop based and always CMOS
+/// (ifmap/psum spads in Eyeriss).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LevelKind {
+    SramMacro,
+    RegFile,
+}
+
+/// One level of the memory hierarchy.
+#[derive(Debug, Clone)]
+pub struct BufferLevel {
+    pub name: &'static str,
+    pub role: BufferRole,
+    pub kind: LevelKind,
+    /// Capacity per instance, bytes.
+    pub capacity_bytes: usize,
+    /// Access width, bits (Fig 2(d) bracket numbers).
+    pub bus_bits: usize,
+    /// Number of instances (e.g. one weight buffer per PE).
+    pub count: usize,
+}
+
+/// The paper's memory-replacement strategies (§4, Fig 3(c)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MemFlavor {
+    /// All buffers SRAM.
+    SramOnly,
+    /// P0: Weight Buffer + Global Weight Buffer → MRAM.
+    P0,
+    /// P1: every SRAM macro → MRAM (register files stay CMOS).
+    P1,
+}
+
+impl MemFlavor {
+    pub const ALL: [MemFlavor; 3] = [MemFlavor::SramOnly, MemFlavor::P0, MemFlavor::P1];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            MemFlavor::SramOnly => "SRAM-only",
+            MemFlavor::P0 => "P0",
+            MemFlavor::P1 => "P1",
+        }
+    }
+
+    /// Device used for a given level under this flavor.
+    pub fn device_for(self, level: &BufferLevel, mram: Device) -> Device {
+        if level.kind == LevelKind::RegFile {
+            return Device::Sram; // FF-based; modeled as SRAM-class CMOS
+        }
+        match self {
+            MemFlavor::SramOnly => Device::Sram,
+            MemFlavor::P0 => match level.role {
+                BufferRole::Weight | BufferRole::GlobalWeight => mram,
+                _ => Device::Sram,
+            },
+            MemFlavor::P1 => mram,
+        }
+    }
+}
+
+/// A complete architecture instance.
+#[derive(Debug, Clone)]
+pub struct Arch {
+    pub name: String,
+    pub dataflow: Dataflow,
+    /// Spatial MAC lanes, expressed as a grid: `pe_count` processing
+    /// elements × `macs_per_pe` lanes each.
+    pub pe_count: usize,
+    pub macs_per_pe: usize,
+    /// Output-channel lanes per PE (Simba's 8×8 vector MAC: 8 input lanes
+    /// × 8 output lanes — each input read is broadcast across `vec_out`
+    /// MACs, the input-buffer reuse that makes MRAM input buffers viable).
+    pub vec_out: usize,
+    /// Datum width, bits (INT8 study).
+    pub datum_bits: usize,
+    pub levels: Vec<BufferLevel>,
+    /// Node the published chip / reference model was characterized at.
+    pub base_node: Node,
+    /// Logic clock at `base_node`, MHz.
+    pub base_freq_mhz: f64,
+    /// True for the QKeras CPU-style model (instruction-overhead MACs).
+    pub cpu_style: bool,
+}
+
+impl Arch {
+    pub fn total_macs(&self) -> usize {
+        self.pe_count * self.macs_per_pe
+    }
+
+    pub fn level(&self, name: &str) -> Option<&BufferLevel> {
+        self.levels.iter().find(|l| l.name == name)
+    }
+
+    /// Logic clock scaled to `node` (DeepScale delay factors).
+    pub fn logic_freq_mhz(&self, node: Node) -> f64 {
+        let base = crate::tech::node_scaling(self.base_node).delay;
+        let target = crate::tech::node_scaling(node).delay;
+        self.base_freq_mhz * base / target
+    }
+
+    /// Memory-limited clock: the slowest macro in the chosen flavor bounds
+    /// the pipeline ("operational frequency is primarily limited by
+    /// memory"). Register files don't bound the clock.
+    pub fn mem_freq_mhz(&self, node: Node, flavor: MemFlavor, mram: Device) -> f64 {
+        self.macro_models(node, flavor, mram)
+            .iter()
+            .filter(|(lvl, _)| lvl.kind == LevelKind::SramMacro)
+            .map(|(_, m)| m.max_freq_mhz())
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Effective accelerator clock for latency estimates.
+    pub fn clock_mhz(&self, node: Node, flavor: MemFlavor, mram: Device) -> f64 {
+        self.logic_freq_mhz(node).min(self.mem_freq_mhz(node, flavor, mram))
+    }
+
+    /// Instantiate CACTI-lite models for every level under a flavor.
+    pub fn macro_models(
+        &self,
+        node: Node,
+        flavor: MemFlavor,
+        mram: Device,
+    ) -> Vec<(&BufferLevel, MacroModel)> {
+        self.macro_models_assigned(node, &|lvl| flavor.device_for(lvl, mram))
+    }
+
+    /// Instantiate CACTI-lite models under an arbitrary per-level device
+    /// assignment — the hybrid-split exploration (§5: "fine-tune the
+    /// proportion of the splits between NVM and SRAM") builds on this.
+    /// Register-file levels are forced to SRAM-class CMOS regardless.
+    pub fn macro_models_assigned(
+        &self,
+        node: Node,
+        assign: &dyn Fn(&BufferLevel) -> Device,
+    ) -> Vec<(&BufferLevel, MacroModel)> {
+        self.levels
+            .iter()
+            .map(|lvl| {
+                let device = if lvl.kind == LevelKind::RegFile {
+                    Device::Sram
+                } else {
+                    assign(lvl)
+                };
+                let model = MacroSpec {
+                    capacity_bytes: lvl.capacity_bytes,
+                    bus_bits: lvl.bus_bits,
+                    device,
+                    node,
+                    count: lvl.count,
+                }
+                .model();
+                (lvl, model)
+            })
+            .collect()
+    }
+
+    /// Total SRAM-macro capacity (bytes) — sanity metric for reports.
+    pub fn total_macro_bytes(&self) -> usize {
+        self.levels
+            .iter()
+            .filter(|l| l.kind == LevelKind::SramMacro)
+            .map(|l| l.capacity_bytes * l.count)
+            .sum()
+    }
+}
+
+/// Accelerator PE-array generation used in the paper's tables.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PeConfig {
+    /// Published-chip PE counts (Eyeriss 14×12, Simba 16×64).
+    V1,
+    /// Scaled 64×64 = 4096 MAC lanes (Table 3: "PE configuration v2").
+    V2,
+}
+
+/// The generic CPU reference (QKeras model [2]): sequential datapath, 64-bit
+/// unified SRAM, characterized at 45 nm.
+pub fn cpu() -> Arch {
+    Arch {
+        name: "cpu".into(),
+        dataflow: Dataflow::CpuSequential,
+        pe_count: 1,
+        macs_per_pe: 1,
+        vec_out: 1,
+        datum_bits: 8,
+        levels: vec![
+            BufferLevel {
+                name: "unified_sram",
+                role: BufferRole::Unified,
+                kind: LevelKind::SramMacro,
+                capacity_bytes: 1024 * 1024 + 512 * 1024,
+                bus_bits: 64,
+                count: 1,
+            },
+            // Weight partition, separated so the P0/P1 strategies apply to
+            // the CPU pipeline too (Fig 3(d) shows nine variants incl. CPU).
+            BufferLevel {
+                name: "gwb",
+                role: BufferRole::GlobalWeight,
+                kind: LevelKind::SramMacro,
+                capacity_bytes: 512 * 1024,
+                bus_bits: 64,
+                count: 1,
+            },
+        ],
+        base_node: Node::N45,
+        base_freq_mhz: 1000.0,
+        cpu_style: true,
+    }
+}
+
+/// Eyeriss (row-stationary) [1], modified per §3: DRAM removed, GWB added.
+/// Per-PE: filter spad is a small SRAM (224×16b in the 65 nm chip → 224 B
+/// INT8 here), ifmap/psum spads are register files.
+pub fn eyeriss(cfg: PeConfig) -> Arch {
+    let (rows, cols) = match cfg {
+        PeConfig::V1 => (12, 14),
+        PeConfig::V2 => (64, 64),
+    };
+    let pe_count = rows * cols;
+    Arch {
+        name: format!("eyeriss_{}", if cfg == PeConfig::V1 { "v1" } else { "v2" }),
+        dataflow: Dataflow::RowStationary,
+        pe_count,
+        macs_per_pe: 1,
+        vec_out: 1,
+        datum_bits: 8,
+        levels: vec![
+            BufferLevel {
+                name: "weight_spad",
+                role: BufferRole::Weight,
+                kind: LevelKind::SramMacro,
+                capacity_bytes: 128,
+                bus_bits: 8,
+                count: pe_count,
+            },
+            BufferLevel {
+                name: "ifmap_spad",
+                role: BufferRole::Input,
+                kind: LevelKind::RegFile,
+                capacity_bytes: 24,
+                bus_bits: 8,
+                count: pe_count,
+            },
+            BufferLevel {
+                name: "psum_spad",
+                role: BufferRole::Accum,
+                kind: LevelKind::RegFile,
+                capacity_bytes: 48,
+                bus_bits: 16,
+                count: pe_count,
+            },
+            BufferLevel {
+                name: "glb",
+                role: BufferRole::Activation,
+                kind: LevelKind::SramMacro,
+                capacity_bytes: 2 * 1024 * 1024,
+                bus_bits: 64,
+                count: 1,
+            },
+            BufferLevel {
+                name: "gwb",
+                role: BufferRole::GlobalWeight,
+                kind: LevelKind::SramMacro,
+                capacity_bytes: 512 * 1024,
+                bus_bits: 64,
+                count: 1,
+            },
+        ],
+        base_node: Node::N40,
+        base_freq_mhz: 250.0,
+        cpu_style: false,
+    }
+}
+
+/// Simba (weight-stationary chiplet) [16], modified per §3. Per-PE weight
+/// buffer sized to the ~12 kB optimized working set the paper reports;
+/// shared input & accumulation buffers per PE row.
+pub fn simba(cfg: PeConfig) -> Arch {
+    let (pe_count, macs_per_pe) = match cfg {
+        PeConfig::V1 => (16, 64),  // published chiplet: 16 PEs × 8×8 MACs
+        PeConfig::V2 => (64, 64),  // v2: 64×64 lanes
+    };
+    Arch {
+        name: format!("simba_{}", if cfg == PeConfig::V1 { "v1" } else { "v2" }),
+        dataflow: Dataflow::WeightStationary,
+        pe_count,
+        macs_per_pe,
+        vec_out: 8, // 8×8 vector MAC per PE [16]
+        datum_bits: 8,
+        levels: vec![
+            BufferLevel {
+                name: "weight_buf",
+                role: BufferRole::Weight,
+                kind: LevelKind::SramMacro,
+                capacity_bytes: 12 * 1024,
+                bus_bits: 64,
+                count: pe_count,
+            },
+            BufferLevel {
+                name: "input_buf",
+                role: BufferRole::Input,
+                kind: LevelKind::SramMacro,
+                capacity_bytes: 8 * 1024,
+                bus_bits: 64,
+                count: pe_count,
+            },
+            BufferLevel {
+                name: "accum_buf",
+                role: BufferRole::Accum,
+                kind: LevelKind::SramMacro,
+                capacity_bytes: 3 * 1024,
+                bus_bits: 24,
+                count: pe_count,
+            },
+            BufferLevel {
+                name: "glb",
+                role: BufferRole::Activation,
+                kind: LevelKind::SramMacro,
+                capacity_bytes: 2 * 1024 * 1024,
+                bus_bits: 64,
+                count: 1,
+            },
+            BufferLevel {
+                name: "gwb",
+                role: BufferRole::GlobalWeight,
+                kind: LevelKind::SramMacro,
+                capacity_bytes: 512 * 1024,
+                bus_bits: 64,
+                count: 1,
+            },
+        ],
+        base_node: Node::N40,
+        base_freq_mhz: 500.0,
+        cpu_style: false,
+    }
+}
+
+/// Resolve an architecture by CLI name.
+pub fn by_name(name: &str) -> crate::Result<Arch> {
+    Ok(match name.to_ascii_lowercase().as_str() {
+        "cpu" => cpu(),
+        "eyeriss" | "eyeriss_v2" => eyeriss(PeConfig::V2),
+        "eyeriss_v1" => eyeriss(PeConfig::V1),
+        "simba" | "simba_v2" => simba(PeConfig::V2),
+        "simba_v1" => simba(PeConfig::V1),
+        other => anyhow::bail!("unknown architecture '{other}'"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn v2_is_64x64() {
+        assert_eq!(eyeriss(PeConfig::V2).total_macs(), 4096);
+        assert_eq!(simba(PeConfig::V2).total_macs(), 4096);
+    }
+
+    #[test]
+    fn v1_matches_published_chips() {
+        assert_eq!(eyeriss(PeConfig::V1).total_macs(), 168);
+        assert_eq!(simba(PeConfig::V1).total_macs(), 1024);
+    }
+
+    #[test]
+    fn p0_replaces_only_weight_memories() {
+        let arch = simba(PeConfig::V2);
+        let mram = Device::VgsotMram;
+        for lvl in &arch.levels {
+            let d = MemFlavor::P0.device_for(lvl, mram);
+            match lvl.role {
+                BufferRole::Weight | BufferRole::GlobalWeight => assert_eq!(d, mram),
+                _ => assert_eq!(d, Device::Sram),
+            }
+        }
+    }
+
+    #[test]
+    fn p1_replaces_all_macros_but_not_regfiles() {
+        let arch = eyeriss(PeConfig::V2);
+        let mram = Device::SttMram;
+        for lvl in &arch.levels {
+            let d = MemFlavor::P1.device_for(lvl, mram);
+            if lvl.kind == LevelKind::RegFile {
+                assert_eq!(d, Device::Sram);
+            } else {
+                assert_eq!(d, mram);
+            }
+        }
+    }
+
+    #[test]
+    fn gwb_holds_both_workloads() {
+        // No DRAM: every network's full INT8 weights must fit the GWB.
+        let gwb = simba(PeConfig::V2).level("gwb").unwrap().capacity_bytes as u64;
+        for net in [crate::workload::builtin::detnet(), crate::workload::builtin::edsnet()] {
+            assert!(
+                net.weight_bytes(8) <= gwb,
+                "{} weights {} exceed GWB {gwb}",
+                net.name,
+                net.weight_bytes(8)
+            );
+        }
+    }
+
+    #[test]
+    fn clock_is_memory_limited_for_mram_writes() {
+        let arch = simba(PeConfig::V2);
+        let sram_clk = arch.clock_mhz(Node::N28, MemFlavor::SramOnly, Device::SttMram);
+        let p1_clk = arch.clock_mhz(Node::N28, MemFlavor::P1, Device::SttMram);
+        // STT write ~10 ns at 28 nm must slow the pipeline.
+        assert!(p1_clk < sram_clk, "p1={p1_clk} sram={sram_clk}");
+    }
+
+    #[test]
+    fn logic_freq_scales_up_with_node() {
+        let arch = eyeriss(PeConfig::V2);
+        assert!(arch.logic_freq_mhz(Node::N7) > arch.logic_freq_mhz(Node::N40));
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for n in ["cpu", "eyeriss", "simba", "eyeriss_v1", "simba_v1"] {
+            assert!(by_name(n).is_ok(), "{n}");
+        }
+        assert!(by_name("tpu").is_err());
+    }
+}

@@ -1,0 +1,130 @@
+//! Area estimation (Table 2): compute area scaled with DeepScale factors
+//! [14], memory area from the CACTI-lite macro model (FinCACTI-style
+//! periphery overheads at subarray/MAT/bank level [15]), MRAM cell-area
+//! factors from [18].
+
+use crate::arch::{Arch, LevelKind, MemFlavor};
+use crate::tech::{mac_area_um2, Device, Node};
+use crate::util::units::UM2_PER_MM2;
+
+/// Area report for one architecture variant.
+#[derive(Debug, Clone)]
+pub struct AreaReport {
+    pub arch: String,
+    pub node: Node,
+    pub flavor: MemFlavor,
+    pub mram: Device,
+    pub compute_mm2: f64,
+    /// (level name, total area mm²) per hierarchy level.
+    pub memory_mm2: Vec<(String, f64)>,
+}
+
+impl AreaReport {
+    pub fn memory_total_mm2(&self) -> f64 {
+        self.memory_mm2.iter().map(|(_, a)| a).sum()
+    }
+    pub fn total_mm2(&self) -> f64 {
+        self.compute_mm2 + self.memory_total_mm2()
+    }
+}
+
+/// Per-PE register-file bit area (µm²/bit) — flip-flop based, several times
+/// the SRAM cell (charged to *memory* area but never replaced by MRAM).
+fn regfile_um2_per_bit(node: Node) -> f64 {
+    // ≈8 F²-equivalent FF + clocking at 40nm ≈ 2.2 µm²/bit, logic-scaled.
+    2.2 * crate::tech::node_scaling(node).area / crate::tech::node_scaling(Node::N40).area
+}
+
+/// Estimate the die area of `arch` at `node` under a memory flavor.
+pub fn estimate(arch: &Arch, node: Node, flavor: MemFlavor, mram: Device) -> AreaReport {
+    let compute_mm2 = arch.total_macs() as f64 * mac_area_um2(node) / UM2_PER_MM2;
+    let mut memory_mm2 = Vec::new();
+    for (lvl, model) in arch.macro_models(node, flavor, mram) {
+        let area = match lvl.kind {
+            LevelKind::SramMacro => model.total_area_um2(),
+            LevelKind::RegFile => {
+                (lvl.capacity_bytes * 8 * lvl.count) as f64 * regfile_um2_per_bit(node)
+            }
+        };
+        memory_mm2.push((lvl.name.to_string(), area / UM2_PER_MM2));
+    }
+    AreaReport {
+        arch: arch.name.clone(),
+        node,
+        flavor,
+        mram,
+        compute_mm2,
+        memory_mm2,
+    }
+}
+
+/// Area saving of a flavor vs the SRAM-only baseline (fraction of total).
+pub fn saving_vs_sram(arch: &Arch, node: Node, flavor: MemFlavor, mram: Device) -> f64 {
+    let base = estimate(arch, node, MemFlavor::SramOnly, mram).total_mm2();
+    let v = estimate(arch, node, flavor, mram).total_mm2();
+    1.0 - v / base
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{eyeriss, simba, PeConfig};
+
+    const VG: Device = Device::VgsotMram;
+
+    #[test]
+    fn table2_savings_shape() {
+        // Table 2: P0 ≈ 16.5–17.5%, P1 ≈ 35% at 7 nm for both accelerators.
+        for arch in [simba(PeConfig::V2), eyeriss(PeConfig::V2)] {
+            let p0 = saving_vs_sram(&arch, Node::N7, MemFlavor::P0, VG);
+            let p1 = saving_vs_sram(&arch, Node::N7, MemFlavor::P1, VG);
+            assert!(p1 > p0, "{}: P1 must beat P0", arch.name);
+            assert!(
+                (0.05..0.30).contains(&p0),
+                "{}: P0 saving {p0} outside the Table-2 band",
+                arch.name
+            );
+            assert!(
+                (0.20..0.45).contains(&p1),
+                "{}: P1 saving {p1} outside the Table-2 band",
+                arch.name
+            );
+        }
+    }
+
+    #[test]
+    fn table2_absolute_magnitudes() {
+        // Table 2 absolute totals at 7 nm: Simba 2.89 mm², Eyeriss 2.56 mm²
+        // (SRAM-only). Our substrate is a re-derived model, so assert the
+        // right order of magnitude and ordering, not the third digit.
+        let s = estimate(&simba(PeConfig::V2), Node::N7, MemFlavor::SramOnly, VG).total_mm2();
+        let e = estimate(&eyeriss(PeConfig::V2), Node::N7, MemFlavor::SramOnly, VG).total_mm2();
+        assert!((1.0..6.0).contains(&s), "simba {s} mm2");
+        assert!((1.0..6.0).contains(&e), "eyeriss {e} mm2");
+    }
+
+    #[test]
+    fn p1_area_monotone_in_density() {
+        // Denser MRAM → more saving: STT (2.5×) ≥ VGSOT (2.3×) > SOT (1.3×).
+        let arch = simba(PeConfig::V2);
+        let stt = saving_vs_sram(&arch, Node::N7, MemFlavor::P1, Device::SttMram);
+        let vg = saving_vs_sram(&arch, Node::N7, MemFlavor::P1, Device::VgsotMram);
+        let sot = saving_vs_sram(&arch, Node::N7, MemFlavor::P1, Device::SotMram);
+        assert!(stt >= vg && vg > sot, "stt={stt} vg={vg} sot={sot}");
+    }
+
+    #[test]
+    fn sram_only_flavor_has_zero_saving() {
+        let arch = eyeriss(PeConfig::V2);
+        let s = saving_vs_sram(&arch, Node::N7, MemFlavor::SramOnly, VG);
+        assert!(s.abs() < 1e-12);
+    }
+
+    #[test]
+    fn area_shrinks_with_node() {
+        let arch = simba(PeConfig::V2);
+        let a28 = estimate(&arch, Node::N28, MemFlavor::SramOnly, VG).total_mm2();
+        let a7 = estimate(&arch, Node::N7, MemFlavor::SramOnly, VG).total_mm2();
+        assert!(a7 < a28);
+    }
+}

@@ -1,0 +1,184 @@
+//! Power-gate controller: tracks the accelerator's Fig-3 operating mode in
+//! real time and charges the DTCO energy model for every interval, so the
+//! serving pipeline reports *modeled* memory energy alongside measured
+//! latency. This is the runtime embodiment of the paper's P_mem-vs-IPS
+//! analysis: run the same frame schedule and the accumulated energy divided
+//! by wall time reproduces `PowerModel::p_mem_uw` at the observed IPS.
+
+use crate::pipeline::Mode;
+use crate::power::PowerModel;
+
+/// Energy ledger for one simulated accelerator variant.
+#[derive(Debug, Clone)]
+pub struct GateController {
+    model: PowerModel,
+    mode: Mode,
+    /// Accumulated memory energy, pJ.
+    pub energy_pj: f64,
+    /// Time accounted so far, ns.
+    pub elapsed_ns: f64,
+    /// Inference + wakeup event counts.
+    pub inferences: u64,
+    pub wakeups: u64,
+}
+
+impl GateController {
+    pub fn new(model: PowerModel) -> GateController {
+        let mode = if model.p_retention_uw > 0.0 {
+            Mode::Retention
+        } else {
+            Mode::PowerGated
+        };
+        GateController {
+            model,
+            mode,
+            energy_pj: 0.0,
+            elapsed_ns: 0.0,
+            inferences: 0,
+            wakeups: 0,
+        }
+    }
+
+    pub fn mode(&self) -> Mode {
+        self.mode
+    }
+
+    /// Any NVM macros present → the variant pays a wakeup per event.
+    fn has_nvm(&self) -> bool {
+        self.model.e_wakeup_pj > 0.0
+    }
+
+    /// Fully gated (no SRAM retention) while idle?
+    fn is_fully_gated(&self) -> bool {
+        self.model.p_retention_uw == 0.0
+    }
+
+    /// Advance the clock by an idle interval.
+    pub fn idle(&mut self, dur_ns: f64) {
+        self.mode = if self.is_fully_gated() {
+            Mode::PowerGated
+        } else {
+            Mode::Retention
+        };
+        self.energy_pj += self.model.p_retention_uw * dur_ns * 1e-3; // µW·ns → pJ
+        self.elapsed_ns += dur_ns;
+    }
+
+    /// Process one inference event: wakeup (NVM only) + inference energy +
+    /// the model's latency on the clock. Returns the charged energy (pJ).
+    pub fn inference(&mut self) -> f64 {
+        let mut charged = 0.0;
+        if self.has_nvm() {
+            self.mode = Mode::Wakeup;
+            charged += self.model.e_wakeup_pj;
+            self.elapsed_ns += crate::mem::WAKEUP_NS;
+            self.wakeups += 1;
+        }
+        self.mode = Mode::Inference;
+        charged += self.model.e_mem_inf_pj;
+        self.elapsed_ns += self.model.latency_ns;
+        self.energy_pj += charged;
+        self.inferences += 1;
+        self.mode = if self.is_fully_gated() {
+            Mode::PowerGated
+        } else {
+            Mode::Retention
+        };
+        charged
+    }
+
+    /// Average memory power over the tracked interval, µW.
+    pub fn avg_power_uw(&self) -> f64 {
+        if self.elapsed_ns == 0.0 {
+            0.0
+        } else {
+            self.energy_pj / self.elapsed_ns * 1e3
+        }
+    }
+
+    /// Observed inference rate, IPS.
+    pub fn observed_ips(&self) -> f64 {
+        if self.elapsed_ns == 0.0 {
+            0.0
+        } else {
+            self.inferences as f64 / (self.elapsed_ns * 1e-9)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{simba, MemFlavor, PeConfig};
+    use crate::mapping::map_network;
+    use crate::power::power_model;
+    use crate::tech::{Device, Node};
+    use crate::workload::builtin::detnet;
+
+    fn model(flavor: MemFlavor) -> PowerModel {
+        let arch = simba(PeConfig::V2);
+        let net = detnet();
+        let map = map_network(&arch, &net);
+        power_model(&arch, &map, Node::N7, flavor, Device::VgsotMram)
+    }
+
+    fn run_schedule(flavor: MemFlavor, ips: f64, n: usize) -> GateController {
+        let m = model(flavor);
+        let mut g = GateController::new(m.clone());
+        let period_ns = 1e9 / ips;
+        for _ in 0..n {
+            let t0 = g.elapsed_ns;
+            g.inference();
+            let idle = (period_ns - (g.elapsed_ns - t0)).max(0.0);
+            g.idle(idle);
+        }
+        g
+    }
+
+    #[test]
+    fn ledger_matches_closed_form_power() {
+        for flavor in [MemFlavor::SramOnly, MemFlavor::P0, MemFlavor::P1] {
+            let ips = 10.0;
+            let g = run_schedule(flavor, ips, 100);
+            let closed = model(flavor).p_mem_uw(ips);
+            let rel = (g.avg_power_uw() - closed).abs() / closed;
+            assert!(
+                rel < 0.05,
+                "{flavor:?}: ledger {} vs closed-form {closed}",
+                g.avg_power_uw()
+            );
+        }
+    }
+
+    #[test]
+    fn observed_ips_tracks_schedule() {
+        let g = run_schedule(MemFlavor::P1, 20.0, 200);
+        assert!((g.observed_ips() - 20.0).abs() / 20.0 < 0.02, "{}", g.observed_ips());
+    }
+
+    #[test]
+    fn nvm_wakes_sram_retains() {
+        let g = run_schedule(MemFlavor::P1, 10.0, 10);
+        assert_eq!(g.wakeups, 10);
+        assert_eq!(g.mode(), Mode::PowerGated);
+        let g = run_schedule(MemFlavor::SramOnly, 10.0, 10);
+        assert_eq!(g.wakeups, 0);
+        assert_eq!(g.mode(), Mode::Retention);
+        // P0 is hybrid: NVM weight macros wake, activation SRAM retains.
+        let g = run_schedule(MemFlavor::P0, 10.0, 10);
+        assert_eq!(g.wakeups, 10);
+        assert_eq!(g.mode(), Mode::Retention);
+    }
+
+    #[test]
+    fn nvm_beats_sram_at_low_rate_loses_at_high_rate() {
+        let lo_s = run_schedule(MemFlavor::SramOnly, 1.0, 50).avg_power_uw();
+        let lo_n = run_schedule(MemFlavor::P1, 1.0, 50).avg_power_uw();
+        assert!(lo_n < lo_s, "low rate: NVM {lo_n} must beat SRAM {lo_s}");
+        let m = model(MemFlavor::P1);
+        let hi = (m.max_ips() * 0.5).min(1500.0);
+        let hi_s = run_schedule(MemFlavor::SramOnly, hi, 50).avg_power_uw();
+        let hi_n = run_schedule(MemFlavor::P1, hi, 50).avg_power_uw();
+        assert!(hi_n > hi_s, "high rate ({hi}): NVM {hi_n} must lose to SRAM {hi_s}");
+    }
+}

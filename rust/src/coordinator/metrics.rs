@@ -1,0 +1,86 @@
+//! Serving metrics: latency distributions, throughput, drop accounting.
+
+use crate::util::stats::{summarize, Summary};
+
+/// Stats collected by the inference worker thread.
+#[derive(Debug, Clone, Default)]
+pub struct WorkerStats {
+    pub exec_s: Vec<f64>,
+    pub queue_s: Vec<f64>,
+}
+
+impl WorkerStats {
+    pub fn record(&mut self, exec_s: f64, queue_s: f64) {
+        self.exec_s.push(exec_s);
+        self.queue_s.push(queue_s);
+    }
+
+    pub fn count(&self) -> usize {
+        self.exec_s.len()
+    }
+
+    pub fn exec_summary(&self) -> Summary {
+        summarize(&self.exec_s)
+    }
+
+    pub fn queue_summary(&self) -> Summary {
+        summarize(&self.queue_s)
+    }
+
+    /// Render a one-screen report.
+    pub fn render(&self, title: &str, wall_s: f64, dropped: u64) -> String {
+        let e = self.exec_summary();
+        let q = self.queue_summary();
+        let mut t = crate::report::Table::new(
+            title,
+            &["metric", "count", "mean", "p50", "p95", "p99", "max"],
+        );
+        let ms = |x: f64| format!("{:.3} ms", x * 1e3);
+        t.row(vec![
+            "exec latency".into(),
+            e.count.to_string(),
+            ms(e.mean),
+            ms(e.p50),
+            ms(e.p95),
+            ms(e.p99),
+            ms(e.max),
+        ]);
+        t.row(vec![
+            "queue wait".into(),
+            q.count.to_string(),
+            ms(q.mean),
+            ms(q.p50),
+            ms(q.p95),
+            ms(q.p99),
+            ms(q.max),
+        ]);
+        let mut s = t.render();
+        s.push_str(&format!(
+            "throughput: {:.2} IPS over {:.2}s wall, dropped {}\n",
+            self.count() as f64 / wall_s.max(1e-9),
+            wall_s,
+            dropped
+        ));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_summarize() {
+        let mut w = WorkerStats::default();
+        for i in 1..=100 {
+            w.record(i as f64 * 1e-3, 0.5e-3);
+        }
+        assert_eq!(w.count(), 100);
+        let e = w.exec_summary();
+        assert!((e.mean - 0.0505).abs() < 1e-6);
+        assert!(e.p99 >= e.p50);
+        let r = w.render("t", 10.0, 2);
+        assert!(r.contains("throughput: 10.00 IPS"));
+        assert!(r.contains("dropped 2"));
+    }
+}

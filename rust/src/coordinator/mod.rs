@@ -1,0 +1,178 @@
+//! XR serving coordinator (L3): synthetic sensor streams feed frames to an
+//! inference worker that executes the AOT-compiled model via PJRT, with a
+//! power-gate controller tracking the Fig-3 operating modes and charging
+//! the energy model for every wakeup / inference / idle interval.
+//!
+//! Concurrency is std threads + channels (tokio is not vendored in the
+//! offline environment — DESIGN.md §Substitutions): one worker thread owns
+//! the (non-Send-shared) PJRT executable, sensor threads produce frames,
+//! and the caller collects `InferenceResult`s from the output channel.
+
+pub mod sensor;
+pub mod gating;
+pub mod metrics;
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::runtime::{Executable, Runtime};
+use sensor::Frame;
+
+/// A completed inference with its bookkeeping.
+#[derive(Debug, Clone)]
+pub struct InferenceResult {
+    pub frame_id: u64,
+    pub sensor: String,
+    /// Model outputs (one flat vector per model output).
+    pub outputs: Vec<Vec<f32>>,
+    /// End-to-end latency from frame timestamp to completion, seconds.
+    pub e2e_latency_s: f64,
+    /// Pure model-execution latency, seconds.
+    pub exec_latency_s: f64,
+    /// Time spent queued before the worker picked the frame up, seconds.
+    pub queue_latency_s: f64,
+}
+
+/// Coordinator configuration.
+pub struct Config {
+    pub artifacts_dir: PathBuf,
+    pub model: String,
+    /// Queue capacity before backpressure drops the oldest frame (XR
+    /// freshness: stale frames are worthless — drop-oldest, not block).
+    pub queue_depth: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            artifacts_dir: PathBuf::from("artifacts"),
+            model: "detnet".into(),
+            queue_depth: 4,
+        }
+    }
+}
+
+enum WorkerMsg {
+    Frame(Frame),
+    Stop,
+}
+
+/// Handle to a running coordinator.
+pub struct Coordinator {
+    tx: mpsc::SyncSender<WorkerMsg>,
+    pub results: mpsc::Receiver<InferenceResult>,
+    worker: Option<std::thread::JoinHandle<crate::Result<metrics::WorkerStats>>>,
+    dropped: std::sync::Arc<std::sync::atomic::AtomicU64>,
+}
+
+impl Coordinator {
+    /// Start the worker thread: loads + compiles + warms the model, and
+    /// only returns once it is ready to serve (so callers' sensor clocks
+    /// start after compilation, not during — §Perf iteration 2).
+    pub fn start(cfg: Config) -> crate::Result<Coordinator> {
+        let (tx, rx) = mpsc::sync_channel::<WorkerMsg>(cfg.queue_depth.max(1));
+        let (res_tx, res_rx) = mpsc::channel::<InferenceResult>();
+        let (ready_tx, ready_rx) = mpsc::channel::<crate::Result<()>>();
+        let dropped = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let worker = std::thread::Builder::new()
+            .name("xr-infer-worker".into())
+            .spawn(move || -> crate::Result<metrics::WorkerStats> {
+                let setup = (|| -> crate::Result<Executable> {
+                    let rt = Runtime::cpu()?;
+                    let exe: Executable = rt.load(&cfg.artifacts_dir, &cfg.model)?;
+                    // XLA's first execution JITs/initializes internals
+                    // (~1 s observed) — pay it before signalling readiness.
+                    let (c, h, w) = exe.input_chw;
+                    let _ = exe.infer(&vec![0.0f32; c * h * w])?;
+                    Ok(exe)
+                })();
+                let exe = match setup {
+                    Ok(exe) => {
+                        let _ = ready_tx.send(Ok(()));
+                        exe
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(anyhow::anyhow!("{e:#}")));
+                        return Err(e);
+                    }
+                };
+                let mut stats = metrics::WorkerStats::default();
+                while let Ok(msg) = rx.recv() {
+                    let frame = match msg {
+                        WorkerMsg::Frame(f) => f,
+                        WorkerMsg::Stop => break,
+                    };
+                    let picked = Instant::now();
+                    let queue_s = picked.duration_since(frame.captured).as_secs_f64();
+                    let outputs = exe.infer(&frame.pixels)?;
+                    let exec_s = picked.elapsed().as_secs_f64();
+                    stats.record(exec_s, queue_s);
+                    let _ = res_tx.send(InferenceResult {
+                        frame_id: frame.id,
+                        sensor: frame.sensor.clone(),
+                        outputs,
+                        e2e_latency_s: queue_s + exec_s,
+                        exec_latency_s: exec_s,
+                        queue_latency_s: queue_s,
+                    });
+                }
+                Ok(stats)
+            })?;
+        // Block until the model is compiled + warmed (or failed).
+        match ready_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                let _ = worker.join();
+                return Err(e);
+            }
+            Err(_) => {
+                let _ = worker.join();
+                anyhow::bail!("worker exited before signalling readiness");
+            }
+        }
+        Ok(Coordinator {
+            tx,
+            results: res_rx,
+            worker: Some(worker),
+            dropped,
+        })
+    }
+
+    /// Submit a frame; drops (and counts) it when the queue is full —
+    /// freshness-first backpressure.
+    pub fn submit(&self, frame: Frame) -> bool {
+        match self.tx.try_send(WorkerMsg::Frame(frame)) {
+            Ok(()) => true,
+            Err(_) => {
+                self.dropped
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                false
+            }
+        }
+    }
+
+    pub fn dropped_frames(&self) -> u64 {
+        self.dropped.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Stop the worker and collect its stats.
+    pub fn shutdown(mut self) -> crate::Result<metrics::WorkerStats> {
+        let _ = self.tx.send(WorkerMsg::Stop);
+        match self.worker.take() {
+            Some(h) => h
+                .join()
+                .map_err(|_| anyhow::anyhow!("worker thread panicked"))?,
+            None => anyhow::bail!("already shut down"),
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.send(WorkerMsg::Stop);
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,191 @@
+//! Synthetic sensor streams: the substitution for FPHAB/OpenEDS camera
+//! feeds (DESIGN.md §Substitutions). Each sensor produces frames with the
+//! same statistics the python data generator uses for training, so the
+//! served model sees in-distribution inputs.
+
+use crate::util::prng::Prng;
+use std::time::Instant;
+
+/// One captured frame (CHW f32, normalized [0,1]).
+#[derive(Debug, Clone)]
+pub struct Frame {
+    pub id: u64,
+    pub sensor: String,
+    pub pixels: Vec<f32>,
+    pub captured: Instant,
+    /// Ground truth for accuracy tracking (hand sensor: circle cx,cy,r in
+    /// normalized coords; eye sensor: pupil cx,cy + radii).
+    pub truth: Vec<f32>,
+}
+
+/// Frame-arrival process.
+#[derive(Debug, Clone, Copy)]
+pub enum Arrival {
+    /// Fixed frame rate (camera-driven).
+    Periodic { fps: f64 },
+    /// Poisson events (event-driven / motion-triggered capture, the
+    /// "sporadic" compute profile the paper cites from [6]).
+    Poisson { rate: f64 },
+}
+
+impl Arrival {
+    /// Seconds until the next frame.
+    pub fn next_gap(&self, rng: &mut Prng) -> f64 {
+        match *self {
+            Arrival::Periodic { fps } => 1.0 / fps,
+            Arrival::Poisson { rate } => rng.exp(rate),
+        }
+    }
+}
+
+/// Synthetic generator shared by hand/eye sensors.
+pub struct Sensor {
+    pub name: String,
+    pub chw: (usize, usize, usize),
+    pub arrival: Arrival,
+    rng: Prng,
+    next_id: u64,
+}
+
+impl Sensor {
+    pub fn hand_camera(fps: f64, seed: u64) -> Sensor {
+        Sensor {
+            name: "hand_cam".into(),
+            chw: (1, 128, 128),
+            arrival: Arrival::Periodic { fps },
+            rng: Prng::new(seed),
+            next_id: 0,
+        }
+    }
+
+    pub fn eye_camera(rate: f64, seed: u64) -> Sensor {
+        Sensor {
+            name: "eye_cam".into(),
+            chw: (1, 192, 320),
+            arrival: Arrival::Poisson { rate },
+            rng: Prng::new(seed),
+            next_id: 0,
+        }
+    }
+
+    pub fn next_gap_s(&mut self) -> f64 {
+        let mut rng = self.rng.clone();
+        let gap = self.arrival.next_gap(&mut rng);
+        self.rng = rng;
+        gap
+    }
+
+    /// Produce the next frame: a dark background with 1–2 bright
+    /// gaussian-ish blobs ("hands") for the hand camera, or concentric
+    /// ellipses (sclera/iris/pupil) for the eye camera — mirroring
+    /// `python/compile/data.py`.
+    pub fn capture(&mut self) -> Frame {
+        let (c, h, w) = self.chw;
+        let mut pixels = vec![0.05f32; c * h * w];
+        let truth;
+        if self.name.starts_with("hand") {
+            // Match python/compile/data.py: centers from the keypoint-cloud
+            // band, left hands rendered darker (the handedness cue).
+            let cx = self.rng.range_f64(0.25, 0.75);
+            let cy = self.rng.range_f64(0.25, 0.75);
+            let r = self.rng.range_f64(0.08, 0.25);
+            truth = vec![cx as f32, cy as f32, r as f32];
+            draw_blob(&mut pixels, h, w, cx, cy, r, 0.9, &mut self.rng);
+            if self.rng.bool(0.5) {
+                for p in pixels.iter_mut() {
+                    *p *= 0.8; // left hand
+                }
+            }
+        } else {
+            let cx = self.rng.range_f64(0.35, 0.65);
+            let cy = self.rng.range_f64(0.35, 0.65);
+            let r_iris = self.rng.range_f64(0.12, 0.2);
+            let r_pupil = r_iris * self.rng.range_f64(0.3, 0.6);
+            truth = vec![cx as f32, cy as f32, r_pupil as f32, r_iris as f32];
+            draw_blob(&mut pixels, h, w, cx, cy, r_iris * 2.2, 0.5, &mut self.rng); // sclera
+            draw_blob(&mut pixels, h, w, cx, cy, r_iris, 0.75, &mut self.rng); // iris
+            draw_blob(&mut pixels, h, w, cx, cy, r_pupil, 0.15, &mut self.rng); // pupil (dark)
+        }
+        // sensor noise
+        for p in pixels.iter_mut() {
+            *p = (*p + self.rng.gaussian() as f32 * 0.01).clamp(0.0, 1.0);
+        }
+        let f = Frame {
+            id: self.next_id,
+            sensor: self.name.clone(),
+            pixels,
+            captured: Instant::now(),
+            truth,
+        };
+        self.next_id += 1;
+        f
+    }
+}
+
+fn draw_blob(pixels: &mut [f32], h: usize, w: usize, cx: f64, cy: f64, r: f64, value: f32, _rng: &mut Prng) {
+    let (cx, cy, r) = (cx * w as f64, cy * h as f64, r * h.min(w) as f64);
+    let r2 = r * r;
+    for y in 0..h {
+        for x in 0..w {
+            let d2 = (x as f64 - cx).powi(2) + (y as f64 - cy).powi(2);
+            if d2 < r2 {
+                // soft edge
+                let t = (1.0 - d2 / r2) as f32;
+                let v = value * (0.5 + 0.5 * t);
+                pixels[y * w + x] = v;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hand_frames_have_bright_blob() {
+        let mut s = Sensor::hand_camera(30.0, 42);
+        let f = s.capture();
+        assert_eq!(f.pixels.len(), 128 * 128);
+        let max = f.pixels.iter().cloned().fold(0.0f32, f32::max);
+        assert!(max > 0.5, "blob missing, max={max}");
+        assert_eq!(f.truth.len(), 3);
+    }
+
+    #[test]
+    fn eye_frames_have_dark_pupil_inside_bright_iris() {
+        let mut s = Sensor::eye_camera(5.0, 7);
+        let f = s.capture();
+        let (h, w) = (192, 320);
+        let (cx, cy) = (f.truth[0] as f64 * w as f64, f.truth[1] as f64 * h as f64);
+        let center = f.pixels[cy as usize * w + cx as usize];
+        assert!(center < 0.4, "pupil must be dark, got {center}");
+    }
+
+    #[test]
+    fn frame_ids_increment() {
+        let mut s = Sensor::hand_camera(30.0, 1);
+        assert_eq!(s.capture().id, 0);
+        assert_eq!(s.capture().id, 1);
+    }
+
+    #[test]
+    fn periodic_gap_is_constant_poisson_varies() {
+        let mut s = Sensor::hand_camera(50.0, 1);
+        assert!((s.next_gap_s() - 0.02).abs() < 1e-12);
+        let mut e = Sensor::eye_camera(10.0, 1);
+        let gaps: Vec<f64> = (0..20).map(|_| e.next_gap_s()).collect();
+        let all_same = gaps.windows(2).all(|w| (w[0] - w[1]).abs() < 1e-12);
+        assert!(!all_same);
+        // mean ≈ 1/rate
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        assert!((0.02..0.6).contains(&mean), "mean={mean}");
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Sensor::hand_camera(30.0, 9);
+        let mut b = Sensor::hand_camera(30.0, 9);
+        assert_eq!(a.capture().pixels, b.capture().pixels);
+    }
+}

@@ -1,0 +1,212 @@
+//! Hybrid NVM/SRAM split exploration — the paper's concluding suggestion
+//! made executable: *"based on the exact nature of the workload … one needs
+//! to carefully fine-tune the proportion of the splits between NVM and
+//! SRAM to achieve the optimal results"* (§5).
+//!
+//! We enumerate every per-level device assignment (each SRAM-macro level
+//! independently SRAM or MRAM — ≤2⁵ = 32 configs per architecture), score
+//! each by average memory power at the application's IPS_min, and report
+//! the Pareto-optimal split. P0 and P1 are two points of this lattice; the
+//! exploration shows where (and whether) a finer split beats both.
+
+use crate::arch::{Arch, BufferLevel, LevelKind};
+use crate::energy::LevelEnergy;
+use crate::mapping::{accesses_at, NetworkMap};
+use crate::tech::{Device, Node};
+
+/// One hybrid configuration: the subset of macro levels implemented in MRAM
+/// (bitmask over `macro_level_names`).
+#[derive(Debug, Clone)]
+pub struct HybridPoint {
+    pub mram_levels: Vec<String>,
+    pub e_mem_inf_pj: f64,
+    pub e_wakeup_pj: f64,
+    pub p_retention_uw: f64,
+    pub p_mem_uw: f64,
+    pub area_mm2: f64,
+}
+
+/// Names of the assignable (SRAM-macro) levels of an architecture.
+pub fn macro_level_names(arch: &Arch) -> Vec<&'static str> {
+    arch.levels
+        .iter()
+        .filter(|l| l.kind == LevelKind::SramMacro)
+        .map(|l| l.name)
+        .collect()
+}
+
+/// Evaluate one assignment at `ips`. `mram_mask` bit i ↔
+/// `macro_level_names()[i]` in MRAM.
+pub fn evaluate(
+    arch: &Arch,
+    map: &NetworkMap,
+    node: Node,
+    mram: Device,
+    mram_mask: u32,
+    ips: f64,
+) -> HybridPoint {
+    let names = macro_level_names(arch);
+    let in_mram = |lvl: &BufferLevel| -> bool {
+        names
+            .iter()
+            .position(|n| *n == lvl.name)
+            .map(|i| mram_mask & (1 << i) != 0)
+            .unwrap_or(false)
+    };
+    let assign = |lvl: &BufferLevel| -> Device {
+        if in_mram(lvl) {
+            mram
+        } else {
+            Device::Sram
+        }
+    };
+
+    // Per-inference memory energy under this assignment.
+    let models = arch.macro_models_assigned(node, &assign);
+    let totals = map.level_totals();
+    let mut levels: Vec<LevelEnergy> = Vec::new();
+    let mut e_wakeup_pj = 0.0;
+    let mut p_retention_uw = 0.0;
+    let mut area_um2 = arch.total_macs() as f64 * crate::tech::mac_area_um2(node);
+    for (lvl, model) in &models {
+        if lvl.kind == LevelKind::SramMacro {
+            if in_mram(lvl) {
+                e_wakeup_pj += model.wakeup_pj() * lvl.count as f64;
+            } else {
+                // Retention is only *required* for state that must survive
+                // (weights); but as in the flavor model, any SRAM macro
+                // stays on the retention rail while idle.
+                p_retention_uw += model.total_standby_uw();
+            }
+            area_um2 += model.total_area_um2();
+        }
+        if let Some(t) = totals.iter().find(|t| t.level == lvl.name) {
+            let read_tx = accesses_at(lvl, t.reads, t.accum, arch.datum_bits);
+            let write_tx = accesses_at(lvl, t.writes, t.accum, arch.datum_bits);
+            levels.push(LevelEnergy {
+                level: lvl.name.to_string(),
+                device: model.spec.device,
+                is_macro: lvl.kind == LevelKind::SramMacro,
+                read_pj: read_tx * model.read_pj,
+                write_pj: write_tx * model.write_pj,
+            });
+        }
+    }
+    let e_mem_inf_pj: f64 = levels.iter().map(|l| l.read_pj + l.write_pj).sum();
+
+    // Latency under this assignment: the slowest macro bounds the clock
+    // (same rule as `Arch::clock_mhz`).
+    let mem_freq = models
+        .iter()
+        .filter(|(l, _)| l.kind == LevelKind::SramMacro)
+        .map(|(_, m)| m.max_freq_mhz())
+        .fold(f64::INFINITY, f64::min);
+    let clock_mhz = arch.logic_freq_mhz(node).min(mem_freq);
+    let latency_ns = map.total_cycles() / clock_mhz * 1e3;
+
+    // Same average-power formula as `PowerModel::p_mem_uw`.
+    let active = (e_mem_inf_pj + e_wakeup_pj) * ips * 1e-6;
+    let idle_frac = (1.0 - ips * latency_ns * 1e-9).max(0.0);
+    let p_mem_uw = active + p_retention_uw * idle_frac;
+
+    HybridPoint {
+        mram_levels: names
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| mram_mask & (1 << i) != 0)
+            .map(|(_, n)| n.to_string())
+            .collect(),
+        e_mem_inf_pj,
+        e_wakeup_pj,
+        p_retention_uw,
+        p_mem_uw,
+        area_mm2: area_um2 / crate::util::units::UM2_PER_MM2,
+    }
+}
+
+/// Exhaustive sweep; returns all points sorted by memory power (best
+/// first).
+pub fn sweep(arch: &Arch, map: &NetworkMap, node: Node, mram: Device, ips: f64) -> Vec<HybridPoint> {
+    let n = macro_level_names(arch).len();
+    let mut pts: Vec<HybridPoint> = (0..(1u32 << n))
+        .map(|mask| evaluate(arch, map, node, mram, mask, ips))
+        .collect();
+    pts.sort_by(|a, b| a.p_mem_uw.partial_cmp(&b.p_mem_uw).unwrap());
+    pts
+}
+
+/// The mask corresponding to a named flavor (for cross-checks).
+pub fn flavor_mask(arch: &Arch, flavor: crate::arch::MemFlavor) -> u32 {
+    let names = macro_level_names(arch);
+    let mut mask = 0;
+    for (i, name) in names.iter().enumerate() {
+        let lvl = arch.level(name).unwrap();
+        let dev = flavor.device_for(lvl, Device::VgsotMram);
+        if dev.is_nvm() {
+            mask |= 1 << i;
+        }
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{simba, MemFlavor, PeConfig};
+    use crate::mapping::map_network;
+    use crate::power::power_model;
+    use crate::workload::builtin::detnet;
+
+    fn setup() -> (Arch, NetworkMap) {
+        let arch = simba(PeConfig::V2);
+        let net = detnet();
+        let map = map_network(&arch, &net);
+        (arch, map)
+    }
+
+    #[test]
+    fn lattice_contains_the_named_flavors() {
+        let (arch, map) = setup();
+        for flavor in MemFlavor::ALL {
+            let mask = flavor_mask(&arch, flavor);
+            let h = evaluate(&arch, &map, Node::N7, Device::VgsotMram, mask, 10.0);
+            let pm = power_model(&arch, &map, Node::N7, flavor, Device::VgsotMram);
+            let rel = (h.p_mem_uw - pm.p_mem_uw(10.0)).abs() / pm.p_mem_uw(10.0);
+            assert!(rel < 1e-9, "{flavor:?}: hybrid {} vs flavor {}", h.p_mem_uw, pm.p_mem_uw(10.0));
+        }
+    }
+
+    #[test]
+    fn sweep_is_exhaustive_and_sorted() {
+        let (arch, map) = setup();
+        let pts = sweep(&arch, &map, Node::N7, Device::VgsotMram, 10.0);
+        assert_eq!(pts.len(), 1 << macro_level_names(&arch).len());
+        for w in pts.windows(2) {
+            assert!(w[0].p_mem_uw <= w[1].p_mem_uw);
+        }
+    }
+
+    #[test]
+    fn best_hybrid_beats_or_ties_p0_and_p1() {
+        // The named flavors are lattice points, so the sweep optimum can
+        // only be ≤ them — the quantitative form of the §5 suggestion.
+        let (arch, map) = setup();
+        let best = &sweep(&arch, &map, Node::N7, Device::VgsotMram, 10.0)[0];
+        for flavor in [MemFlavor::P0, MemFlavor::P1] {
+            let pm = power_model(&arch, &map, Node::N7, flavor, Device::VgsotMram);
+            assert!(best.p_mem_uw <= pm.p_mem_uw(10.0) + 1e-9);
+        }
+    }
+
+    #[test]
+    fn all_sram_mask_has_retention_all_mram_has_wakeup() {
+        let (arch, map) = setup();
+        let sram = evaluate(&arch, &map, Node::N7, Device::VgsotMram, 0, 10.0);
+        assert!(sram.p_retention_uw > 0.0);
+        assert_eq!(sram.e_wakeup_pj, 0.0);
+        let n = macro_level_names(&arch).len();
+        let full = evaluate(&arch, &map, Node::N7, Device::VgsotMram, (1 << n) - 1, 10.0);
+        assert_eq!(full.p_retention_uw, 0.0);
+        assert!(full.e_wakeup_pj > 0.0);
+    }
+}

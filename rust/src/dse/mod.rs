@@ -1,0 +1,186 @@
+//! Design-space sweep driver: enumerates (architecture × node × memory
+//! flavor × MRAM device × workload) and produces the records behind every
+//! figure and table of the paper's evaluation. The benches and the CLI are
+//! thin renderers over this module.
+
+pub mod hybrid;
+pub mod pareto;
+
+use crate::arch::{Arch, MemFlavor, PeConfig};
+use crate::energy::{estimate, latency_ns, EnergyBreakdown};
+use crate::mapping::{map_network, NetworkMap};
+use crate::power::{power_model, PowerModel};
+use crate::tech::{paper_mram_for, Device, Node};
+use crate::workload::Network;
+
+/// One evaluated design point.
+#[derive(Debug, Clone)]
+pub struct DesignPoint {
+    pub arch: String,
+    pub network: String,
+    pub node: Node,
+    pub flavor: MemFlavor,
+    pub mram: Device,
+    pub energy: EnergyBreakdown,
+    pub power: PowerModel,
+    pub latency_ns: f64,
+    pub utilization: f64,
+    pub area_mm2: f64,
+}
+
+impl DesignPoint {
+    pub fn edp(&self) -> f64 {
+        crate::energy::edp(self.energy.total_pj(), self.latency_ns)
+    }
+}
+
+/// Cached per-(arch, network) mapping so sweeps don't re-run the mapper for
+/// every node/flavor (the mapping is node-independent).
+pub struct Sweeper {
+    maps: Vec<(String, String, Arch, Network, NetworkMap)>,
+}
+
+impl Sweeper {
+    pub fn new(archs: Vec<Arch>, nets: Vec<Network>) -> Sweeper {
+        let mut maps = Vec::new();
+        for arch in &archs {
+            for net in &nets {
+                let map = map_network(arch, net);
+                maps.push((arch.name.clone(), net.name.clone(), arch.clone(), net.clone(), map));
+            }
+        }
+        Sweeper { maps }
+    }
+
+    /// Evaluate one design point (arch/net resolved by name).
+    pub fn point(
+        &self,
+        arch_name: &str,
+        net_name: &str,
+        node: Node,
+        flavor: MemFlavor,
+        mram: Device,
+    ) -> Option<DesignPoint> {
+        let (_, _, arch, _net, map) = self
+            .maps
+            .iter()
+            .find(|(a, n, ..)| a == arch_name && n == net_name)?;
+        Some(eval_point(arch, map, node, flavor, mram))
+    }
+
+    /// Full grid over the provided axes.
+    pub fn grid(
+        &self,
+        nodes: &[Node],
+        flavors: &[MemFlavor],
+        mram_of: impl Fn(Node) -> Device,
+    ) -> Vec<DesignPoint> {
+        let mut out = Vec::new();
+        for (_, _, arch, _net, map) in &self.maps {
+            for &node in nodes {
+                for &flavor in flavors {
+                    out.push(eval_point(arch, map, node, flavor, mram_of(node)));
+                }
+            }
+        }
+        out
+    }
+}
+
+fn eval_point(
+    arch: &Arch,
+    map: &NetworkMap,
+    node: Node,
+    flavor: MemFlavor,
+    mram: Device,
+) -> DesignPoint {
+    let energy = estimate(arch, map, node, flavor, mram);
+    let lat = latency_ns(arch, map, node, flavor, mram);
+    let power = power_model(arch, map, node, flavor, mram);
+    let area = crate::area::estimate(arch, node, flavor, mram).total_mm2();
+    DesignPoint {
+        arch: arch.name.clone(),
+        network: map.network.clone(),
+        node,
+        flavor,
+        mram,
+        utilization: map.utilization(arch),
+        energy,
+        power,
+        latency_ns: lat,
+        area_mm2: area,
+    }
+}
+
+/// The paper's standard evaluation set: CPU + Eyeriss + Simba (v2) over
+/// DetNet + EDSNet.
+pub fn paper_sweeper() -> crate::Result<Sweeper> {
+    Ok(Sweeper::new(
+        vec![
+            crate::arch::cpu(),
+            crate::arch::eyeriss(PeConfig::V2),
+            crate::arch::simba(PeConfig::V2),
+        ],
+        vec![
+            crate::workload::builtin::by_name("detnet")?,
+            crate::workload::builtin::by_name("edsnet")?,
+        ],
+    ))
+}
+
+/// Fig 3(d)'s nine variants (3 arch × 3 flavors) × 2 nodes × 2 networks.
+pub fn fig3d_grid(sweeper: &Sweeper) -> Vec<DesignPoint> {
+    sweeper.grid(&[Node::N28, Node::N7], &MemFlavor::ALL, paper_mram_for)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3d_grid_has_36_points() {
+        let s = paper_sweeper().unwrap();
+        let g = fig3d_grid(&s);
+        // 3 archs × 2 nets × 2 nodes × 3 flavors
+        assert_eq!(g.len(), 36);
+    }
+
+    #[test]
+    fn grid_uses_paper_device_per_node() {
+        let s = paper_sweeper().unwrap();
+        for p in fig3d_grid(&s) {
+            match p.node {
+                Node::N7 => assert_eq!(p.mram, Device::VgsotMram),
+                _ => assert_eq!(p.mram, Device::SttMram),
+            }
+        }
+    }
+
+    #[test]
+    fn point_lookup_matches_grid() {
+        let s = paper_sweeper().unwrap();
+        let p = s
+            .point("simba_v2", "detnet", Node::N7, MemFlavor::P1, Device::VgsotMram)
+            .unwrap();
+        let g = fig3d_grid(&s);
+        let q = g
+            .iter()
+            .find(|q| {
+                q.arch == "simba_v2"
+                    && q.network == "detnet"
+                    && q.node == Node::N7
+                    && q.flavor == MemFlavor::P1
+            })
+            .unwrap();
+        assert_eq!(p.energy.total_pj(), q.energy.total_pj());
+        assert_eq!(p.latency_ns, q.latency_ns);
+    }
+
+    #[test]
+    fn unknown_point_is_none() {
+        let s = paper_sweeper().unwrap();
+        assert!(s
+            .point("tpu", "detnet", Node::N7, MemFlavor::P0, Device::SttMram)
+            .is_none());
+    }
+}

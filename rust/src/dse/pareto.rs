@@ -1,0 +1,111 @@
+//! Pareto-frontier extraction over design points: the DSE deliverable a
+//! designer actually consumes — which (arch × node × flavor) variants are
+//! undominated in (memory power @ IPS_min, area, latency).
+
+use super::DesignPoint;
+
+/// Objective vector extracted from a design point (all minimized).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Objectives {
+    pub p_mem_uw: f64,
+    pub area_mm2: f64,
+    pub latency_ms: f64,
+}
+
+pub fn objectives(p: &DesignPoint, ips: f64) -> Objectives {
+    Objectives {
+        p_mem_uw: p.power.p_mem_uw(ips),
+        area_mm2: p.area_mm2,
+        latency_ms: p.latency_ns / 1e6,
+    }
+}
+
+/// `a` dominates `b` when it is ≤ on every objective and < on at least one.
+pub fn dominates(a: &Objectives, b: &Objectives) -> bool {
+    let le = a.p_mem_uw <= b.p_mem_uw && a.area_mm2 <= b.area_mm2 && a.latency_ms <= b.latency_ms;
+    let lt = a.p_mem_uw < b.p_mem_uw || a.area_mm2 < b.area_mm2 || a.latency_ms < b.latency_ms;
+    le && lt
+}
+
+/// Indices of the undominated points, in input order.
+pub fn frontier(points: &[DesignPoint], ips: f64) -> Vec<usize> {
+    let objs: Vec<Objectives> = points.iter().map(|p| objectives(p, ips)).collect();
+    (0..points.len())
+        .filter(|&i| !objs.iter().enumerate().any(|(j, o)| j != i && dominates(o, &objs[i])))
+        .collect()
+}
+
+/// Filter to points that can sustain `ips` at all (latency feasibility).
+pub fn feasible(points: &[DesignPoint], ips: f64) -> Vec<usize> {
+    (0..points.len())
+        .filter(|&i| points[i].latency_ns * 1e-9 * ips <= 1.0)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::MemFlavor;
+    use crate::dse::{fig3d_grid, paper_sweeper};
+    use crate::tech::Node;
+
+    fn grid() -> Vec<DesignPoint> {
+        fig3d_grid(&paper_sweeper().unwrap())
+            .into_iter()
+            .filter(|p| p.network == "detnet" && p.node == Node::N7)
+            .collect()
+    }
+
+    #[test]
+    fn frontier_is_nonempty_and_undominated() {
+        let pts = grid();
+        let f = frontier(&pts, 10.0);
+        assert!(!f.is_empty());
+        assert!(f.len() < pts.len(), "at 9 variants some must be dominated");
+        // pairwise: no frontier point dominates another frontier point
+        for &i in &f {
+            for &j in &f {
+                if i != j {
+                    assert!(
+                        !dominates(&objectives(&pts[i], 10.0), &objectives(&pts[j], 10.0)),
+                        "{i} dominates {j}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dominated_points_have_a_dominator_on_the_frontier() {
+        let pts = grid();
+        let f = frontier(&pts, 10.0);
+        for i in 0..pts.len() {
+            if f.contains(&i) {
+                continue;
+            }
+            let oi = objectives(&pts[i], 10.0);
+            assert!(
+                f.iter().any(|&j| dominates(&objectives(&pts[j], 10.0), &oi)),
+                "point {i} dominated by no frontier point"
+            );
+        }
+    }
+
+    #[test]
+    fn dominance_is_irreflexive_and_antisymmetric() {
+        let a = Objectives { p_mem_uw: 1.0, area_mm2: 1.0, latency_ms: 1.0 };
+        let b = Objectives { p_mem_uw: 2.0, area_mm2: 1.0, latency_ms: 1.0 };
+        assert!(!dominates(&a, &a));
+        assert!(dominates(&a, &b));
+        assert!(!dominates(&b, &a));
+    }
+
+    #[test]
+    fn feasibility_screens_slow_points() {
+        let pts = grid();
+        // every DetNet@7nm variant sustains 10 IPS (latencies ≈ ms)
+        assert_eq!(feasible(&pts, 10.0).len(), pts.len());
+        // at an absurd rate nothing survives
+        assert!(feasible(&pts, 1e8).is_empty());
+    }
+}

@@ -1,0 +1,283 @@
+//! Accelergy-lite: combine Timeloop-lite access counts with the CACTI-lite
+//! macro energies and the compute-energy table to produce per-inference
+//! energy with compute / memory-read / memory-write breakdowns
+//! (Fig 2(e), Fig 3(d), Fig 4).
+
+use crate::arch::{Arch, MemFlavor};
+use crate::mapping::{accesses_at, NetworkMap};
+use crate::tech::{mac_energy_pj, Device, Node};
+
+/// Per-level energy contribution (pJ per inference).
+#[derive(Debug, Clone)]
+pub struct LevelEnergy {
+    pub level: String,
+    pub device: Device,
+    /// SRAM/MRAM macro (true) vs FF register file (false). Fig 4's
+    /// read/write NVM analysis concerns macros only; register files are
+    /// CMOS datapath state and never replaced.
+    pub is_macro: bool,
+    pub read_pj: f64,
+    pub write_pj: f64,
+}
+
+/// Full per-inference energy breakdown (pJ).
+#[derive(Debug, Clone)]
+pub struct EnergyBreakdown {
+    pub arch: String,
+    pub network: String,
+    pub node: Node,
+    pub flavor: MemFlavor,
+    pub mram: Device,
+    pub compute_pj: f64,
+    pub levels: Vec<LevelEnergy>,
+}
+
+impl EnergyBreakdown {
+    pub fn mem_read_pj(&self) -> f64 {
+        self.levels.iter().map(|l| l.read_pj).sum()
+    }
+    pub fn mem_write_pj(&self) -> f64 {
+        self.levels.iter().map(|l| l.write_pj).sum()
+    }
+    /// Macro-only (SRAM/MRAM) read energy — the Fig-4 series.
+    pub fn macro_read_pj(&self) -> f64 {
+        self.levels.iter().filter(|l| l.is_macro).map(|l| l.read_pj).sum()
+    }
+    /// Macro-only (SRAM/MRAM) write energy — the Fig-4 series.
+    pub fn macro_write_pj(&self) -> f64 {
+        self.levels.iter().filter(|l| l.is_macro).map(|l| l.write_pj).sum()
+    }
+    pub fn mem_pj(&self) -> f64 {
+        self.mem_read_pj() + self.mem_write_pj()
+    }
+    pub fn total_pj(&self) -> f64 {
+        self.compute_pj + self.mem_pj()
+    }
+    /// Memory energy restricted to weight-holding levels (Fig 5's "weight"
+    /// power series).
+    pub fn weight_mem_pj(&self, arch: &Arch) -> f64 {
+        self.levels
+            .iter()
+            .filter(|l| {
+                arch.level(&l.level)
+                    .map(|lvl| {
+                        matches!(
+                            lvl.role,
+                            crate::arch::BufferRole::Weight | crate::arch::BufferRole::GlobalWeight
+                        )
+                    })
+                    .unwrap_or(false)
+            })
+            .map(|l| l.read_pj + l.write_pj)
+            .sum()
+    }
+}
+
+/// Fraction of a MAC's energy charged per elementwise ALU op (pool/add).
+const ALU_FRACTION: f64 = 0.15;
+
+/// Estimate the energy of one inference for a mapped network.
+pub fn estimate(
+    arch: &Arch,
+    map: &NetworkMap,
+    node: Node,
+    flavor: MemFlavor,
+    mram: Device,
+) -> EnergyBreakdown {
+    let mac_pj = mac_energy_pj(node, arch.cpu_style);
+    let mut compute_pj = 0.0;
+    for lm in &map.per_layer {
+        compute_pj += lm.macs * mac_pj + lm.alu_ops * mac_pj * ALU_FRACTION;
+    }
+
+    let models = arch.macro_models(node, flavor, mram);
+    let totals = map.level_totals();
+    let mut levels = Vec::new();
+    for (lvl, model) in &models {
+        let Some(t) = totals.iter().find(|t| t.level == lvl.name) else {
+            continue;
+        };
+        let read_tx = accesses_at(lvl, t.reads, t.accum, arch.datum_bits);
+        let write_tx = accesses_at(lvl, t.writes, t.accum, arch.datum_bits);
+        levels.push(LevelEnergy {
+            level: lvl.name.to_string(),
+            device: model.spec.device,
+            is_macro: lvl.kind == crate::arch::LevelKind::SramMacro,
+            read_pj: read_tx * model.read_pj,
+            write_pj: write_tx * model.write_pj,
+        });
+    }
+
+    EnergyBreakdown {
+        arch: arch.name.clone(),
+        network: map.network.clone(),
+        node,
+        flavor,
+        mram,
+        compute_pj,
+        levels,
+    }
+}
+
+/// Convenience: map + estimate in one call with the paper's node-appropriate
+/// MRAM device ([`crate::tech::paper_mram_for`]).
+pub fn estimate_paper_variant(
+    arch: &Arch,
+    net: &crate::workload::Network,
+    node: Node,
+    flavor: MemFlavor,
+) -> EnergyBreakdown {
+    let map = crate::mapping::map_network(arch, net);
+    estimate(arch, &map, node, flavor, crate::tech::paper_mram_for(node))
+}
+
+/// Inference latency in ns for a mapped network at a node/flavor.
+pub fn latency_ns(
+    arch: &Arch,
+    map: &NetworkMap,
+    node: Node,
+    flavor: MemFlavor,
+    mram: Device,
+) -> f64 {
+    let clock_mhz = arch.clock_mhz(node, flavor, mram);
+    map.total_cycles() / clock_mhz * 1e3 // cycles / MHz = µs → ns ×1e3
+}
+
+/// Energy-delay product (J·s scaled: pJ × ns = 1e-21 J·s); reported raw for
+/// relative comparisons (Fig 2(f)).
+pub fn edp(energy_pj: f64, latency_ns: f64) -> f64 {
+    energy_pj * latency_ns
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{cpu, eyeriss, simba, PeConfig};
+    use crate::mapping::map_network;
+    use crate::workload::builtin::{detnet, edsnet};
+
+    fn breakdown(arch: &Arch, node: Node, flavor: MemFlavor) -> EnergyBreakdown {
+        let net = detnet();
+        let map = map_network(arch, &net);
+        estimate(arch, &map, node, flavor, crate::tech::paper_mram_for(node))
+    }
+
+    #[test]
+    fn memory_dominates_on_systolic_compute_on_cpu() {
+        // Fig 2(e): "memory power dissipation is far more significant than
+        // that of compute" for Eyeriss/Simba; reversed for the CPU.
+        for arch in [eyeriss(PeConfig::V2), simba(PeConfig::V2)] {
+            let b = breakdown(&arch, Node::N40, MemFlavor::SramOnly);
+            assert!(b.mem_pj() > b.compute_pj, "{}: mem must dominate", arch.name);
+        }
+        let b = breakdown(&cpu(), Node::N45, MemFlavor::SramOnly);
+        assert!(b.compute_pj > b.mem_pj(), "cpu: compute must dominate");
+    }
+
+    #[test]
+    fn node_scaling_reduces_energy() {
+        let arch = simba(PeConfig::V2);
+        let e40 = breakdown(&arch, Node::N40, MemFlavor::SramOnly).total_pj();
+        let e7 = breakdown(&arch, Node::N7, MemFlavor::SramOnly).total_pj();
+        let ratio = e40 / e7;
+        assert!((2.0..6.0).contains(&ratio), "40→7nm ratio {ratio}");
+    }
+
+    #[test]
+    fn p0_saves_at_28nm_reverses_at_7nm() {
+        // §5 bullet 3: STT@28 is read-optimized → P0 saves; VGSOT@7 is
+        // write-optimized → P0 costs (weight traffic is read-dominated).
+        for arch in [eyeriss(PeConfig::V2), simba(PeConfig::V2)] {
+            let sram28 = breakdown(&arch, Node::N28, MemFlavor::SramOnly).total_pj();
+            let p028 = breakdown(&arch, Node::N28, MemFlavor::P0).total_pj();
+            assert!(p028 < sram28, "{}: P0@28 must save ({p028} vs {sram28})", arch.name);
+
+            let sram7 = breakdown(&arch, Node::N7, MemFlavor::SramOnly).total_pj();
+            let p07 = breakdown(&arch, Node::N7, MemFlavor::P0).total_pj();
+            assert!(p07 > sram7, "{}: P0@7 must cost ({p07} vs {sram7})", arch.name);
+        }
+    }
+
+    #[test]
+    fn p1_always_costs_more_energy_per_inference() {
+        // §5 bullet 2: P1 shows higher energy for all arch/workloads/nodes.
+        for arch in [eyeriss(PeConfig::V2), simba(PeConfig::V2), cpu()] {
+            for node in [Node::N28, Node::N7] {
+                let sram = breakdown(&arch, node, MemFlavor::SramOnly).total_pj();
+                let p1 = breakdown(&arch, node, MemFlavor::P1).total_pj();
+                assert!(
+                    p1 > sram,
+                    "{} @{node:?}: P1 {p1} must exceed SRAM {sram}",
+                    arch.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cpu_nvm_impact_is_small() {
+        // §5 bullet 1: CPU energy "nearly equivalent" across flavors
+        // (compute-dominated).
+        let sram = breakdown(&cpu(), Node::N7, MemFlavor::SramOnly).total_pj();
+        let p1 = breakdown(&cpu(), Node::N7, MemFlavor::P1).total_pj();
+        let delta = (p1 - sram).abs() / sram;
+        assert!(delta < 0.35, "cpu P1 delta {delta}");
+    }
+
+    #[test]
+    fn p1_7nm_reads_dominate_writes_heavily() {
+        // Fig 4: at P1-7nm memory reads dominate writes overwhelmingly
+        // (paper: ≈50× on their access mix; our mapping keeps symmetric
+        // accumulation-buffer traffic in the split, which bounds the ratio
+        // lower — see EXPERIMENTS.md §Deviations). Assert the *shape*: the
+        // VGSOT asymmetry amplifies read-dominance well beyond the
+        // SRAM-only baseline, and Eyeriss (pure read-path weights) exceeds
+        // 10×.
+        for arch in [eyeriss(PeConfig::V2), simba(PeConfig::V2)] {
+            let sram = breakdown(&arch, Node::N7, MemFlavor::SramOnly);
+            let p1 = breakdown(&arch, Node::N7, MemFlavor::P1);
+            let base = sram.macro_read_pj() / sram.macro_write_pj();
+            let ratio = p1.macro_read_pj() / p1.macro_write_pj();
+            assert!(ratio > 3.0, "{}: read/write ratio {ratio}", arch.name);
+            assert!(ratio > 2.0 * base, "{}: {ratio} vs baseline {base}", arch.name);
+        }
+        let ey = breakdown(&eyeriss(PeConfig::V2), Node::N7, MemFlavor::P1);
+        assert!(ey.macro_read_pj() / ey.macro_write_pj() > 10.0);
+    }
+
+    #[test]
+    fn p1_28nm_writes_dominate_for_eyeriss() {
+        // Fig 4: at 28 nm (STT write-expensive) the trend reverses for
+        // Eyeriss (write-heavy spad refills).
+        let b = breakdown(&eyeriss(PeConfig::V2), Node::N28, MemFlavor::P1);
+        assert!(
+            b.macro_write_pj() > b.macro_read_pj(),
+            "write {} vs read {}",
+            b.macro_write_pj(),
+            b.macro_read_pj()
+        );
+    }
+
+    #[test]
+    fn latency_edsnet_much_larger_than_detnet() {
+        let arch = simba(PeConfig::V2);
+        let d = map_network(&arch, &detnet());
+        let e = map_network(&arch, &edsnet());
+        let ld = latency_ns(&arch, &d, Node::N7, MemFlavor::P0, Device::VgsotMram);
+        let le = latency_ns(&arch, &e, Node::N7, MemFlavor::P0, Device::VgsotMram);
+        // Table 3: 0.34 ms vs 48.57 ms ≈ 140×
+        let ratio = le / ld;
+        assert!((20.0..1000.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn p1_latency_penalty_moderate() {
+        // §5: P1 incurs ≈20% higher inference latency (MRAM-limited clock).
+        let arch = simba(PeConfig::V2);
+        let map = map_network(&arch, &detnet());
+        let p0 = latency_ns(&arch, &map, Node::N7, MemFlavor::P0, Device::VgsotMram);
+        let p1 = latency_ns(&arch, &map, Node::N7, MemFlavor::P1, Device::VgsotMram);
+        assert!(p1 >= p0);
+        assert!(p1 / p0 < 3.0, "p1/p0 = {}", p1 / p0);
+    }
+}

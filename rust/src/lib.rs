@@ -1,0 +1,42 @@
+//! # xr-edge-dse
+//!
+//! Reproduction of *"Memory-Oriented Design-Space Exploration of Edge-AI
+//! Hardware for XR Applications"* (tinyML Research Symposium 2023).
+//!
+//! The crate is organised in three tiers:
+//!
+//! 1. **Substrates** the paper's toolchain provided and we re-implement from
+//!    scratch (the environment is offline; only the `xla` crate is vendored):
+//!    [`util`] (JSON, PRNG, stats, CLI parsing), [`testkit`] (property
+//!    testing), [`mem`] (CACTI-lite), [`tech`] (DeepScale-lite + device
+//!    library), [`mapping`] (Timeloop-lite), [`energy`] (Accelergy-lite).
+//! 2. **The paper's contribution**: memory-oriented DTCO — [`area`],
+//!    [`power`] (P_mem-vs-IPS with power gating), [`pipeline`] (temporal
+//!    operation cycle), [`dse`] (sweep driver), [`report`].
+//! 3. **The serving runtime** proving the stack end-to-end: [`runtime`]
+//!    (PJRT load/execute of JAX-AOT'd DetNet/EDSNet), [`coordinator`]
+//!    (sensor streams, scheduler, power-gate controller, metrics),
+//!    [`quant`] (INT8 pre/post-processing on the request path).
+//!
+//! See `DESIGN.md` for the experiment index mapping every paper table and
+//! figure to a bench target, and `EXPERIMENTS.md` for measured results.
+
+pub mod util;
+pub mod testkit;
+pub mod workload;
+pub mod arch;
+pub mod tech;
+pub mod mem;
+pub mod mapping;
+pub mod energy;
+pub mod area;
+pub mod power;
+pub mod pipeline;
+pub mod quant;
+pub mod dse;
+pub mod report;
+pub mod runtime;
+pub mod coordinator;
+
+/// Crate-wide result alias (anyhow is the only error substrate vendored).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,382 @@
+//! `xr-edge-dse` CLI — the launcher over the DSE library and the serving
+//! coordinator.
+//!
+//! ```text
+//! xr-edge-dse map     --arch simba --net detnet          # mapper report
+//! xr-edge-dse energy  --arch simba --net detnet --node 7 --flavor p1
+//! xr-edge-dse area    --node 7                           # Table 2
+//! xr-edge-dse ips     --node 7                           # Table 3
+//! xr-edge-dse edp                                        # Fig 2(f)
+//! xr-edge-dse fig3d                                      # Fig 3(d)
+//! xr-edge-dse sweep   --out artifacts/figures            # all CSV series
+//! xr-edge-dse serve   --model detnet --fps 10 --seconds 5  # PJRT serving
+//! ```
+
+use xr_edge_dse::arch::{self, MemFlavor, PeConfig};
+use xr_edge_dse::report::{pct, sci, Table};
+use xr_edge_dse::tech::{paper_mram_for, Device, Node};
+use xr_edge_dse::util::cli::{parse, usage, OptSpec};
+use xr_edge_dse::{dse, energy, mapping, power, workload};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn specs() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "arch", takes_value: true, help: "cpu|eyeriss|simba[_v1]", default: Some("simba") },
+        OptSpec { name: "net", takes_value: true, help: "detnet|edsnet|tiny_cnn", default: Some("detnet") },
+        OptSpec { name: "node", takes_value: true, help: "tech node nm (45|40|28|22|7)", default: Some("7") },
+        OptSpec { name: "flavor", takes_value: true, help: "sram|p0|p1", default: Some("sram") },
+        OptSpec { name: "device", takes_value: true, help: "stt|sot|vgsot (default: paper pick per node)", default: None },
+        OptSpec { name: "ips", takes_value: true, help: "inference rate for power eval", default: Some("10") },
+        OptSpec { name: "model", takes_value: true, help: "artifact model name for serve", default: Some("detnet") },
+        OptSpec { name: "fps", takes_value: true, help: "sensor frame rate for serve", default: Some("10") },
+        OptSpec { name: "seconds", takes_value: true, help: "serve duration", default: Some("5") },
+        OptSpec { name: "artifacts", takes_value: true, help: "artifacts directory", default: Some("artifacts") },
+        OptSpec { name: "out", takes_value: true, help: "output dir for sweep CSVs", default: Some("artifacts/figures") },
+        OptSpec { name: "verbose", takes_value: false, help: "per-layer detail", default: None },
+    ]
+}
+
+fn flavor_of(s: &str) -> anyhow::Result<MemFlavor> {
+    Ok(match s.to_ascii_lowercase().as_str() {
+        "sram" | "sram-only" => MemFlavor::SramOnly,
+        "p0" => MemFlavor::P0,
+        "p1" => MemFlavor::P1,
+        other => anyhow::bail!("unknown flavor '{other}'"),
+    })
+}
+
+fn run(argv: &[String]) -> anyhow::Result<()> {
+    let Some(cmd) = argv.first() else {
+        print_help();
+        return Ok(());
+    };
+    let args = parse(&argv[1..], &specs())?;
+    let node = Node::from_nm(args.get_usize("node")?.unwrap_or(7))?;
+    let mram = match args.get("device") {
+        Some(d) => Device::from_str(d)?,
+        None => paper_mram_for(node),
+    };
+
+    match cmd.as_str() {
+        "map" => {
+            let a = arch::by_name(args.get("arch").unwrap())?;
+            let net = workload::builtin::by_name(args.get("net").unwrap())?;
+            let map = mapping::map_network(&a, &net);
+            let mut t = Table::new(
+                &format!("mapping {} on {}", net.name, a.name),
+                &["layer", "macs", "cycles", "bw-bound", "util"],
+            );
+            for lm in &map.per_layer {
+                if !args.flag("verbose") && lm.macs == 0.0 {
+                    continue;
+                }
+                t.row(vec![
+                    lm.layer.clone(),
+                    sci(lm.macs),
+                    sci(lm.cycles()),
+                    if lm.bandwidth_cycles > lm.compute_cycles { "yes" } else { "no" }.into(),
+                    format!("{:.3}", lm.macs / (lm.cycles() * a.total_macs() as f64).max(1.0)),
+                ]);
+            }
+            print!("{}", t.render());
+            println!(
+                "total: {} MACs, {} cycles, avg util {:.3}",
+                sci(map.total_macs()),
+                sci(map.total_cycles()),
+                map.utilization(&a)
+            );
+        }
+        "energy" => {
+            let a = arch::by_name(args.get("arch").unwrap())?;
+            let net = workload::builtin::by_name(args.get("net").unwrap())?;
+            let flavor = flavor_of(args.get("flavor").unwrap())?;
+            let map = mapping::map_network(&a, &net);
+            let b = energy::estimate(&a, &map, node, flavor, mram);
+            let mut t = Table::new(
+                &format!(
+                    "energy {} on {} @{} {} ({})",
+                    net.name,
+                    a.name,
+                    node.label(),
+                    flavor.label(),
+                    mram.label()
+                ),
+                &["component", "read (µJ)", "write (µJ)", "total (µJ)"],
+            );
+            let uj = 1e-6;
+            t.row(vec!["compute".into(), "-".into(), "-".into(), format!("{:.3}", b.compute_pj * uj)]);
+            for l in &b.levels {
+                t.row(vec![
+                    format!("{} [{}]", l.level, l.device.label()),
+                    format!("{:.3}", l.read_pj * uj),
+                    format!("{:.3}", l.write_pj * uj),
+                    format!("{:.3}", (l.read_pj + l.write_pj) * uj),
+                ]);
+            }
+            t.row(vec!["TOTAL".into(), format!("{:.3}", b.mem_read_pj() * uj), format!("{:.3}", b.mem_write_pj() * uj), format!("{:.3}", b.total_pj() * uj)]);
+            print!("{}", t.render());
+            let lat = energy::latency_ns(&a, &map, node, flavor, mram);
+            println!("latency: {:.3} ms   EDP: {}", lat / 1e6, sci(energy::edp(b.total_pj(), lat)));
+        }
+        "area" => {
+            let mut t = Table::new(
+                &format!("Table 2 — area at {} ({})", node.label(), mram.label()),
+                &["architecture", "SRAM-only (mm²)", "P0 (mm²)", "P1 (mm²)", "P0 saving", "P1 saving"],
+            );
+            for a in [arch::simba(PeConfig::V2), arch::eyeriss(PeConfig::V2)] {
+                let base = xr_edge_dse::area::estimate(&a, node, MemFlavor::SramOnly, mram).total_mm2();
+                let p0 = xr_edge_dse::area::estimate(&a, node, MemFlavor::P0, mram).total_mm2();
+                let p1 = xr_edge_dse::area::estimate(&a, node, MemFlavor::P1, mram).total_mm2();
+                t.row(vec![
+                    a.name.clone(),
+                    format!("{base:.2}"),
+                    format!("{p0:.2}"),
+                    format!("{p1:.2}"),
+                    pct(1.0 - p0 / base),
+                    pct(1.0 - p1 / base),
+                ]);
+            }
+            print!("{}", t.render());
+        }
+        "ips" => {
+            let rows = power::table3(
+                &[
+                    (workload::builtin::by_name("detnet")?, 10.0),
+                    (workload::builtin::by_name("edsnet")?, 0.1),
+                ],
+                &[arch::simba(PeConfig::V2), arch::eyeriss(PeConfig::V2)],
+                node,
+                mram,
+            );
+            let mut t = Table::new(
+                &format!("Table 3 — IPS analysis @{} v2 (64×64)", node.label()),
+                &["workload", "arch", "IPS_min", "lat P0 (ms)", "lat P1 (ms)", "P_mem save P0", "P_mem save P1"],
+            );
+            for r in rows {
+                t.row(vec![
+                    r.workload,
+                    r.arch,
+                    format!("{}", r.ips_min),
+                    format!("{:.2}", r.latency_p0_ms),
+                    format!("{:.2}", r.latency_p1_ms),
+                    pct(r.savings_p0),
+                    pct(r.savings_p1),
+                ]);
+            }
+            print!("{}", t.render());
+        }
+        "edp" => {
+            let s = dse::paper_sweeper()?;
+            let pts = s.grid(&Node::ALL, &[MemFlavor::SramOnly], paper_mram_for);
+            let mut t = Table::new(
+                "Fig 2(f) — EDP vs node (SRAM-only)",
+                &["arch", "net", "node", "energy (µJ)", "latency (ms)", "EDP (µJ·ms)"],
+            );
+            for p in pts {
+                t.row(vec![
+                    p.arch.clone(),
+                    p.network.clone(),
+                    p.node.label(),
+                    format!("{:.2}", p.energy.total_pj() * 1e-6),
+                    format!("{:.3}", p.latency_ns / 1e6),
+                    format!("{:.3}", p.energy.total_pj() * 1e-6 * p.latency_ns / 1e6),
+                ]);
+            }
+            print!("{}", t.render());
+        }
+        "fig3d" => {
+            let s = dse::paper_sweeper()?;
+            let mut t = Table::new(
+                "Fig 3(d) — single-inference energy, 9 variants × 2 nodes",
+                &["net", "node", "arch", "flavor", "total (µJ)", "vs SRAM"],
+            );
+            let pts = dse::fig3d_grid(&s);
+            for p in &pts {
+                let base = pts
+                    .iter()
+                    .find(|q| {
+                        q.arch == p.arch
+                            && q.network == p.network
+                            && q.node == p.node
+                            && q.flavor == MemFlavor::SramOnly
+                    })
+                    .unwrap();
+                t.row(vec![
+                    p.network.clone(),
+                    p.node.label(),
+                    p.arch.clone(),
+                    p.flavor.label().into(),
+                    format!("{:.2}", p.energy.total_pj() * 1e-6),
+                    pct(p.energy.total_pj() / base.energy.total_pj() - 1.0),
+                ]);
+            }
+            print!("{}", t.render());
+        }
+        "hybrid" => {
+            // §5's concluding suggestion, executable: enumerate every
+            // NVM/SRAM split and rank by memory power at --ips.
+            let a = arch::by_name(args.get("arch").unwrap())?;
+            let net = workload::builtin::by_name(args.get("net").unwrap())?;
+            let ips = args.get_f64("ips")?.unwrap_or(10.0);
+            let map = mapping::map_network(&a, &net);
+            let pts = dse::hybrid::sweep(&a, &map, node, mram, ips);
+            let mut t = Table::new(
+                &format!("hybrid NVM/SRAM splits — {} on {} @{} {} IPS (best first)",
+                    net.name, a.name, node.label(), ips),
+                &["MRAM levels", "P_mem (µW)", "E_mem/inf (µJ)", "retention (µW)", "area (mm²)"],
+            );
+            for p in pts.iter().take(8) {
+                t.row(vec![
+                    if p.mram_levels.is_empty() { "(none — SRAM-only)".into() } else { p.mram_levels.join("+") },
+                    format!("{:.2}", p.p_mem_uw),
+                    format!("{:.3}", p.e_mem_inf_pj * 1e-6),
+                    format!("{:.2}", p.p_retention_uw),
+                    format!("{:.2}", p.area_mm2),
+                ]);
+            }
+            print!("{}", t.render());
+            let p0 = dse::hybrid::flavor_mask(&a, MemFlavor::P0);
+            let p1 = dse::hybrid::flavor_mask(&a, MemFlavor::P1);
+            let find = |mask: u32| dse::hybrid::evaluate(&a, &map, node, mram, mask, ips).p_mem_uw;
+            println!("named flavors: P0 {:.2} µW, P1 {:.2} µW, best split {:.2} µW",
+                find(p0), find(p1), pts[0].p_mem_uw);
+        }
+        "sweep" => {
+            let out = std::path::PathBuf::from(args.get("out").unwrap());
+            let n = write_figure_csvs(&out)?;
+            println!("wrote {n} CSV series to {}", out.display());
+        }
+        "serve" => {
+            serve(&args)?;
+        }
+        "help" | "--help" | "-h" => print_help(),
+        other => {
+            print_help();
+            anyhow::bail!("unknown command '{other}'");
+        }
+    }
+    Ok(())
+}
+
+/// Write every figure's data series as CSV (used by `make figures`).
+fn write_figure_csvs(out: &std::path::Path) -> anyhow::Result<usize> {
+    use xr_edge_dse::report::Csv;
+    std::fs::create_dir_all(out)?;
+    let s = dse::paper_sweeper()?;
+    let mut n = 0;
+
+    // Fig 2(f): EDP vs node.
+    let mut c = Csv::new(&["arch", "net", "node_nm", "energy_pj", "latency_ns", "edp"]);
+    for p in s.grid(&Node::ALL, &[MemFlavor::SramOnly], paper_mram_for) {
+        c.row(vec![
+            p.arch.clone(),
+            p.network.clone(),
+            format!("{}", p.node.nm()),
+            sci(p.energy.total_pj()),
+            sci(p.latency_ns),
+            sci(p.edp()),
+        ]);
+    }
+    c.save(&out.join("fig2f_edp.csv"))?;
+    n += 1;
+
+    // Fig 3(d) energies + Fig 4 breakdowns.
+    let mut c = Csv::new(&[
+        "net", "node_nm", "arch", "flavor", "compute_pj", "mem_read_pj", "mem_write_pj",
+    ]);
+    for p in dse::fig3d_grid(&s) {
+        c.row(vec![
+            p.network.clone(),
+            format!("{}", p.node.nm()),
+            p.arch.clone(),
+            p.flavor.label().into(),
+            sci(p.energy.compute_pj),
+            sci(p.energy.mem_read_pj()),
+            sci(p.energy.mem_write_pj()),
+        ]);
+    }
+    c.save(&out.join("fig3d_fig4_energy.csv"))?;
+    n += 1;
+
+    // Fig 5: P_mem vs IPS curves for every device.
+    let mut c = Csv::new(&["arch", "net", "flavor", "device", "ips", "p_mem_uw"]);
+    for arch in [arch::simba(PeConfig::V2), arch::eyeriss(PeConfig::V2)] {
+        for net in [workload::builtin::by_name("detnet")?, workload::builtin::by_name("edsnet")?] {
+            let map = mapping::map_network(&arch, &net);
+            for flavor in [MemFlavor::P0, MemFlavor::P1] {
+                for device in Device::ALL {
+                    let f = if device == Device::Sram { MemFlavor::SramOnly } else { flavor };
+                    let pm = power::power_model(&arch, &map, Node::N7, f, device);
+                    let mut ips = 0.05;
+                    while ips <= pm.max_ips() && ips < 2e4 {
+                        c.row(vec![
+                            arch.name.clone(),
+                            net.name.clone(),
+                            flavor.label().into(),
+                            device.label().into(),
+                            sci(ips),
+                            sci(pm.p_mem_uw(ips)),
+                        ]);
+                        ips *= 1.5;
+                    }
+                }
+            }
+        }
+    }
+    c.save(&out.join("fig5_ips_power.csv"))?;
+    n += 1;
+    Ok(n)
+}
+
+/// `serve`: run the PJRT serving pipeline on synthetic sensor frames.
+fn serve(args: &xr_edge_dse::util::cli::Args) -> anyhow::Result<()> {
+    use xr_edge_dse::coordinator::{sensor::Sensor, Config, Coordinator};
+    let model = args.get("model").unwrap().to_string();
+    let fps = args.get_f64("fps")?.unwrap_or(10.0);
+    let seconds = args.get_f64("seconds")?.unwrap_or(5.0);
+    let artifacts = std::path::PathBuf::from(args.get("artifacts").unwrap());
+
+    let coord = Coordinator::start(Config {
+        artifacts_dir: artifacts,
+        model: model.clone(),
+        queue_depth: 4,
+    })?;
+    let mut sensor = if model.contains("eds") {
+        Sensor::eye_camera(fps, 42)
+    } else {
+        Sensor::hand_camera(fps, 42)
+    };
+    let t0 = std::time::Instant::now();
+    let mut submitted = 0u64;
+    while t0.elapsed().as_secs_f64() < seconds {
+        let gap = sensor.next_gap_s();
+        std::thread::sleep(std::time::Duration::from_secs_f64(gap));
+        coord.submit(sensor.capture());
+        submitted += 1;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let dropped = coord.dropped_frames();
+    let stats = coord.shutdown()?;
+    print!("{}", stats.render(&format!("serve {model} @{fps} fps"), wall, dropped));
+    println!("submitted {submitted}");
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "xr-edge-dse — memory-oriented DSE of edge-AI hardware for XR (tinyML'23 reproduction)\n\
+         commands: map | energy | area | ips | edp | fig3d | hybrid | sweep | serve | help\n\n{}",
+        usage(&specs())
+    );
+}

@@ -1,0 +1,496 @@
+//! Timeloop-lite: analytical dataflow mapping.
+//!
+//! The paper used Timeloop [10] to obtain "cycle-wise operation mapping"
+//! and per-buffer access counts for Eyeriss (row-stationary) and Simba
+//! (weight-stationary), and QKeras's instruction-mapping for the CPU. The
+//! paper's mappings are *fixed* per architecture (no mapping search), so a
+//! closed-form reuse model per dataflow reproduces the same access counts:
+//!
+//! - every MAC reads its operands from the innermost level that holds them;
+//! - traffic at an outer level = datum footprint × refetch factor, where
+//!   the refetch factor is the number of temporal passes forced by the
+//!   *capacity* of the inner level (this is exactly where Eyeriss's tiny
+//!   weight spads hurt: weights re-stream from the GWB once per spatial
+//!   fold — §5's "smaller local weight buffers … increased read operations
+//!   in the global weight-memory");
+//! - cycle counts come from the spatial occupancy of the PE array
+//!   (ceil-division mapping losses) and a bandwidth bound per shared buffer
+//!   ("operational frequency is primarily limited by memory").
+//!
+//! All counts are **element** accesses; [`accesses_at`] converts to
+//! bus-width transactions for energy/bandwidth.
+
+use crate::arch::{Arch, BufferLevel, Dataflow};
+use crate::workload::{Layer, Network, Op};
+
+/// Per-level traffic for one layer, in element accesses.
+#[derive(Debug, Clone)]
+pub struct LevelAccess {
+    pub level: &'static str,
+    pub reads: f64,
+    pub writes: f64,
+    /// True when the elements are partial sums (wider datum).
+    pub accum: bool,
+}
+
+/// Mapping result for a single layer.
+#[derive(Debug, Clone)]
+pub struct LayerMap {
+    pub layer: String,
+    /// True MACs executed on the array.
+    pub macs: f64,
+    /// Non-MAC elementwise ALU ops (pool/add/upsample), charged at a
+    /// fraction of a MAC.
+    pub alu_ops: f64,
+    /// Compute-bound cycle count (spatial occupancy included).
+    pub compute_cycles: f64,
+    /// Bandwidth-bound cycle count (worst shared buffer).
+    pub bandwidth_cycles: f64,
+    pub access: Vec<LevelAccess>,
+}
+
+impl LayerMap {
+    pub fn cycles(&self) -> f64 {
+        self.compute_cycles.max(self.bandwidth_cycles)
+    }
+}
+
+/// Whole-network mapping.
+#[derive(Debug, Clone)]
+pub struct NetworkMap {
+    pub arch: String,
+    pub network: String,
+    pub per_layer: Vec<LayerMap>,
+}
+
+impl NetworkMap {
+    pub fn total_cycles(&self) -> f64 {
+        self.per_layer.iter().map(|l| l.cycles()).sum()
+    }
+    pub fn total_macs(&self) -> f64 {
+        self.per_layer.iter().map(|l| l.macs).sum()
+    }
+    /// Aggregate element accesses per level name.
+    pub fn level_totals(&self) -> Vec<LevelAccess> {
+        let mut out: Vec<LevelAccess> = Vec::new();
+        for lm in &self.per_layer {
+            for a in &lm.access {
+                match out.iter_mut().find(|o| o.level == a.level) {
+                    Some(o) => {
+                        o.reads += a.reads;
+                        o.writes += a.writes;
+                    }
+                    None => out.push(a.clone()),
+                }
+            }
+        }
+        out
+    }
+    /// Average spatial utilization of the MAC array (true MACs per cycle /
+    /// peak lanes) — reported by the DSE summary.
+    pub fn utilization(&self, arch: &Arch) -> f64 {
+        self.total_macs() / (self.total_cycles() * arch.total_macs() as f64)
+    }
+}
+
+/// Convert element traffic at a level into bus transactions.
+pub fn accesses_at(level: &BufferLevel, elems: f64, accum: bool, datum_bits: usize) -> f64 {
+    let bits = if accum { 2 * datum_bits } else { datum_bits } as f64;
+    elems * bits / level.bus_bits as f64
+}
+
+fn ceil_div(a: usize, b: usize) -> usize {
+    a.div_ceil(b.max(1))
+}
+
+/// Map one layer onto the architecture (weights assumed streaming; use
+/// [`map_network`] for the residency-aware whole-network mapping).
+pub fn map_layer(arch: &Arch, layer: &Layer) -> LayerMap {
+    map_layer_ext(arch, layer, false)
+}
+
+/// `weights_resident`: the whole model fits the per-PE weight buffers
+/// (weight-stationary only) — weights are loaded once at boot, so the
+/// per-inference GWB traffic and weight-buffer refills vanish. This is the
+/// dataflow asymmetry behind §5's "weight-stationary … reduced stress on
+/// memory bandwidth … facilitates the applicability of NVM": Simba's
+/// 64×12 kB buffers hold DetNet/EDSNet entirely, Eyeriss's 128 B spads
+/// (per-PE *replicated* filter rows) cannot.
+pub fn map_layer_ext(arch: &Arch, layer: &Layer, weights_resident: bool) -> LayerMap {
+    match layer.op {
+        Op::Conv2d { .. } | Op::Linear => map_compute_layer(arch, layer, weights_resident),
+        _ => map_elementwise_layer(arch, layer),
+    }
+}
+
+/// Pool / add / upsample / concat: streamed through the activation path,
+/// no MAC-array occupancy (charged as ALU ops on the vector lanes).
+fn map_elementwise_layer(arch: &Arch, layer: &Layer) -> LayerMap {
+    let ops = layer.macs() as f64; // elementwise op count (k²-weighted pools)
+    let in_e = layer.input_elems() as f64;
+    let out_e = layer.output_elems() as f64;
+    let glb = if arch.cpu_style { "unified_sram" } else { "glb" };
+    let access = vec![LevelAccess {
+        level: glb_name(arch, glb),
+        reads: in_e,
+        writes: out_e,
+        accum: false,
+    }];
+    let lanes = arch.total_macs() as f64;
+    LayerMap {
+        layer: layer.name.clone(),
+        macs: 0.0,
+        alu_ops: ops,
+        compute_cycles: ops / lanes,
+        bandwidth_cycles: bandwidth_cycles(arch, &access),
+        access,
+    }
+}
+
+/// Intern level names through the arch so LevelAccess can carry &'static.
+fn glb_name(arch: &Arch, name: &str) -> &'static str {
+    arch.levels
+        .iter()
+        .find(|l| l.name == name)
+        .map(|l| l.name)
+        .unwrap_or("glb")
+}
+
+fn bandwidth_cycles(arch: &Arch, access: &[LevelAccess]) -> f64 {
+    let mut worst: f64 = 0.0;
+    for a in access {
+        if let Some(level) = arch.level(a.level) {
+            // RegFiles are per-lane and never the bottleneck.
+            if level.kind == crate::arch::LevelKind::RegFile {
+                continue;
+            }
+            let tx = accesses_at(level, a.reads + a.writes, a.accum, arch.datum_bits);
+            worst = worst.max(tx / level.count as f64);
+        }
+    }
+    worst
+}
+
+fn map_compute_layer(arch: &Arch, layer: &Layer, weights_resident: bool) -> LayerMap {
+    let m = layer.true_macs() as f64;
+    let w = layer.weights() as f64;
+    let i = layer.input_elems() as f64;
+    let o = layer.output_elems() as f64;
+    let (kh, kw, groups) = match layer.op {
+        Op::Conv2d { kh, kw, groups, .. } => (kh, kw, groups),
+        _ => (1, 1, 1),
+    };
+    let in_cg = layer.in_c / groups; // input channels per group
+    let red = in_cg * kh * kw; // reduction depth per output element
+
+    let mut access: Vec<LevelAccess> = Vec::new();
+    let mut push = |level: &'static str, reads: f64, writes: f64, accum: bool| {
+        access.push(LevelAccess {
+            level,
+            reads,
+            writes,
+            accum,
+        });
+    };
+
+    let compute_cycles;
+    match arch.dataflow {
+        // ------------------------------------------------------------------
+        Dataflow::CpuSequential => {
+            // QKeras instruction mapping [2]: one MAC per step; inputs from
+            // the unified SRAM, weights from the weight memory (the split
+            // lets the P0/P1 strategies apply to the CPU too, Fig 3(d)),
+            // outputs stored back. Register blocking (4×4 tiles in the
+            // architectural registers) cuts operand refetches by ~4×.
+            const REG_BLOCK: f64 = 4.0;
+            push(glb_name(arch, "unified_sram"), m / REG_BLOCK, o, false);
+            push("gwb", m / REG_BLOCK, 0.0, false);
+            compute_cycles = m;
+        }
+        // ------------------------------------------------------------------
+        Dataflow::WeightStationary => {
+            // Simba [16]: output channels across PEs × per-PE output lanes
+            // (vec_out), the reduction (in_cg × kh × kw) across each PE's
+            // input lanes. Weights pinned in the per-PE weight buffer;
+            // inputs broadcast from the GLB via the input buffers (one read
+            // serves vec_out MACs); psums settle in the accumulation buffer.
+            let pe = arch.pe_count;
+            let vec_out = arch.vec_out.max(1);
+            let vec_in = (arch.macs_per_pe / vec_out).max(1);
+            let oc_passes = ceil_div(layer.out_c, pe * vec_out);
+            let red_passes = ceil_div(red, vec_in);
+            let spatial = (layer.out_h * layer.out_w) as f64;
+            compute_cycles = spatial * oc_passes as f64 * red_passes as f64;
+
+            // Weights: staged GWB → weight_buf, then held *stationary* in
+            // the datapath registers across the spatial sweep — the weight
+            // buffer is read once per weight per (oc, reduction) slice, NOT
+            // per MAC (the point of weight-stationary, and why Simba
+            // tolerates MRAM weight buffers while Eyeriss's per-MAC spad
+            // reads do not — §5). When the whole model is resident in the
+            // per-PE buffers (`weights_resident`), the per-inference GWB
+            // stream and buffer refill disappear entirely (boot-time cost).
+            let wbuf = arch.level("weight_buf").expect("simba weight_buf");
+            let w_per_pe_bytes =
+                (w / pe as f64 * (arch.datum_bits as f64 / 8.0)).max(1.0);
+            let w_folds = (w_per_pe_bytes / wbuf.capacity_bytes as f64).ceil().max(1.0);
+            if weights_resident {
+                push("weight_buf", w, 0.0, false);
+            } else {
+                push("gwb", w * w_folds, 0.0, false);
+                push("weight_buf", w * w_folds, w * w_folds, false);
+            }
+
+            // Inputs: refetched from GLB once per output-channel pass,
+            // staged through the input buffer; each read feeds vec_out MACs.
+            let i_glb = i * oc_passes as f64;
+            push("glb", i_glb, o, false);
+            push("input_buf", m / vec_out as f64, i_glb, false);
+
+            // Psums: one accumulation-buffer update per reduction pass.
+            let acc_updates = o * red_passes as f64;
+            push("accum_buf", acc_updates, acc_updates, true);
+        }
+        // ------------------------------------------------------------------
+        Dataflow::RowStationary => {
+            // Eyeriss [1]: PE columns sweep output-row strips, PE rows hold
+            // filter rows (kh) stacked per output channel. Grid assumed
+            // square-ish: rows ≈ cols ≈ √pe_count.
+            let side = (arch.pe_count as f64).sqrt();
+            let cols = side.floor().max(1.0) as usize;
+            let rows = (arch.pe_count / cols).max(1);
+
+            // Simultaneous output channels limited by vertical stacking.
+            let oc_sim = (rows / kh).clamp(1, layer.out_c.max(1));
+            let oc_passes = ceil_div(layer.out_c, oc_sim);
+            // Output-row folding when out_h exceeds the columns.
+            let h_folds = ceil_div(layer.out_h, cols);
+            // Filter-spad capacity bounds the input channels per pass.
+            let spad = arch.level("weight_spad").expect("eyeriss weight_spad");
+            let ic_per_pass = (spad.capacity_bytes / (kw.max(1) * (arch.datum_bits / 8).max(1)))
+                .clamp(1, in_cg.max(1));
+            let ic_passes = ceil_div(in_cg, ic_per_pass);
+
+            let active = (kh * oc_sim * layer.out_h.min(cols)) as f64;
+            compute_cycles = m / active.min(arch.pe_count as f64).max(1.0);
+
+            // Weights re-stream from the GWB once per output-row fold and
+            // per ic pass (small spads — the §5 effect).
+            let w_refetch = (h_folds * ic_passes.max(1)) as f64;
+            push("gwb", w * w_refetch, 0.0, false);
+            push("weight_spad", m, w * w_refetch, false);
+
+            // Ifmap: GLB supplies the array once per output-channel pass
+            // (diagonal reuse covers the kh rows within a pass).
+            let i_glb = i * oc_passes as f64;
+            push("glb", i_glb, o, false);
+            // Ifmap spad: each datum enters once per pass and is reused kw
+            // times horizontally.
+            push("ifmap_spad", m, m / kw.max(1) as f64, false);
+
+            // Psums accumulate in the psum spad; cross-ic-pass partials
+            // spill to the GLB (read+write per extra pass).
+            push("psum_spad", m, m, true);
+            let spill = o * (ic_passes.saturating_sub(1)) as f64;
+            if spill > 0.0 {
+                push("glb", spill, spill, true);
+            }
+        }
+    }
+
+    let bandwidth_cycles = bandwidth_cycles(arch, &access);
+    LayerMap {
+        layer: layer.name.clone(),
+        macs: m,
+        alu_ops: 0.0,
+        compute_cycles,
+        bandwidth_cycles,
+        access,
+    }
+}
+
+/// Map a whole network. Weight residency is decided here: under
+/// weight-stationary dataflow, if the entire INT8 model fits the combined
+/// per-PE weight buffers, weights are pinned across inferences.
+pub fn map_network(arch: &Arch, net: &Network) -> NetworkMap {
+    let resident = arch.dataflow == Dataflow::WeightStationary
+        && arch
+            .level("weight_buf")
+            .map(|wb| net.weight_bytes(arch.datum_bits as u32) <= (wb.capacity_bytes * wb.count) as u64)
+            .unwrap_or(false);
+    NetworkMap {
+        arch: arch.name.clone(),
+        network: net.name.clone(),
+        per_layer: net
+            .layers
+            .iter()
+            .map(|l| map_layer_ext(arch, l, resident))
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{cpu, eyeriss, simba, PeConfig};
+    use crate::workload::builtin::{detnet, edsnet, tiny_cnn};
+
+    #[test]
+    fn cpu_mapping_is_sequential() {
+        let arch = cpu();
+        let net = tiny_cnn();
+        let map = map_network(&arch, &net);
+        // one MAC per cycle
+        assert!(
+            (map.total_cycles() - net.total_macs() as f64).abs() / (net.total_macs() as f64) < 0.5
+        );
+    }
+
+    #[test]
+    fn mac_conservation() {
+        // Every dataflow must execute exactly the workload's true MACs.
+        let net = detnet();
+        for arch in [cpu(), eyeriss(PeConfig::V2), simba(PeConfig::V2)] {
+            let map = map_network(&arch, &net);
+            assert_eq!(map.total_macs() as u64, net.true_macs(), "{}", arch.name);
+        }
+    }
+
+    #[test]
+    fn traffic_never_below_footprint() {
+        // Weight-level read traffic can't be below the weight footprint
+        // (every weight must reach the datapath at least once, whether from
+        // the GWB stream or the resident per-PE buffers; no DRAM).
+        let net = detnet();
+        for arch in [eyeriss(PeConfig::V2), simba(PeConfig::V2)] {
+            let map = map_network(&arch, &net);
+            let weight_reads: f64 = map
+                .level_totals()
+                .iter()
+                .filter(|a| matches!(a.level, "gwb" | "weight_buf" | "weight_spad"))
+                .map(|a| a.reads)
+                .sum();
+            assert!(
+                weight_reads >= net.total_weights() as f64,
+                "{}: weight reads {weight_reads} < weights {}",
+                arch.name,
+                net.total_weights()
+            );
+        }
+    }
+
+    #[test]
+    fn simba_weights_are_resident_eyeriss_streams() {
+        // §5: weight-stationary reduces memory-bandwidth stress — the whole
+        // model fits Simba's per-PE weight buffers, so the per-inference
+        // GWB stream vanishes; Eyeriss must keep re-streaming.
+        let net = detnet();
+        let gwb_reads = |arch: &Arch| -> f64 {
+            map_network(arch, &net)
+                .level_totals()
+                .iter()
+                .filter(|a| a.level == "gwb")
+                .map(|a| a.reads)
+                .sum()
+        };
+        assert_eq!(gwb_reads(&simba(PeConfig::V2)), 0.0);
+        assert!(gwb_reads(&eyeriss(PeConfig::V2)) >= net.total_weights() as f64);
+    }
+
+    #[test]
+    fn eyeriss_rereads_weights_more_than_simba() {
+        // §5: "smaller local weight buffers used by Eyeriss requiring
+        // increased read operations in the global weight-memory".
+        let net = edsnet();
+        let gwb_reads = |arch: &Arch| -> f64 {
+            map_network(arch, &net)
+                .level_totals()
+                .iter()
+                .filter(|a| a.level == "gwb")
+                .map(|a| a.reads)
+                .sum()
+        };
+        let ey = gwb_reads(&eyeriss(PeConfig::V2));
+        let si = gwb_reads(&simba(PeConfig::V2));
+        assert!(ey > si, "eyeriss {ey} must exceed simba {si}");
+    }
+
+    #[test]
+    fn systolic_is_much_faster_than_cpu() {
+        let net = detnet();
+        let c = map_network(&cpu(), &net).total_cycles();
+        let s = map_network(&simba(PeConfig::V2), &net).total_cycles();
+        assert!(c / s > 20.0, "cpu {c} vs simba {s}");
+    }
+
+    #[test]
+    fn edsnet_is_input_read_intensive() {
+        // §5: EDSNet "heavily uses the input buffer" — its input-side read
+        // traffic dwarfs its weight traffic, far more than DetNet's does
+        // (this is what erodes VGSOT's P1 savings on EDSNet).
+        let arch = simba(PeConfig::V2);
+        let input_to_weight = |net: &Network| {
+            let map = map_network(&arch, net);
+            let t = map.level_totals();
+            let input: f64 = t
+                .iter()
+                .filter(|a| matches!(a.level, "glb" | "input_buf"))
+                .map(|a| a.reads)
+                .sum();
+            input / net.total_weights() as f64
+        };
+        assert!(
+            input_to_weight(&edsnet()) > 3.0 * input_to_weight(&detnet()),
+            "eds {} vs det {}",
+            input_to_weight(&edsnet()),
+            input_to_weight(&detnet())
+        );
+    }
+
+    #[test]
+    fn utilization_is_sane() {
+        let net = edsnet();
+        for arch in [eyeriss(PeConfig::V2), simba(PeConfig::V2)] {
+            let map = map_network(&arch, &net);
+            let u = map.utilization(&arch);
+            assert!(u > 0.001 && u <= 1.0, "{}: util {u}", arch.name);
+        }
+    }
+
+    #[test]
+    fn elementwise_layers_have_no_macs() {
+        let net = edsnet();
+        let arch = simba(PeConfig::V2);
+        for (layer, lm) in net.layers.iter().zip(map_network(&arch, &net).per_layer) {
+            if !layer.is_compute() {
+                assert_eq!(lm.macs, 0.0, "{}", layer.name);
+                assert!(lm.alu_ops > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn depthwise_underutilizes_weight_stationary_lanes() {
+        // A depthwise layer's reduction depth (9) ≪ 64 lanes → per-MAC
+        // cycle cost must be higher than a dense pointwise layer's.
+        let arch = simba(PeConfig::V2);
+        let net = detnet();
+        let map = map_network(&arch, &net);
+        let cost = |pred: fn(&Layer) -> bool| -> f64 {
+            let mut cycles = 0.0;
+            let mut macs = 0.0;
+            for (l, lm) in net.layers.iter().zip(&map.per_layer) {
+                if pred(l) && l.is_compute() {
+                    cycles += lm.compute_cycles;
+                    macs += lm.macs;
+                }
+            }
+            cycles / macs
+        };
+        let dw = cost(|l| l.is_depthwise());
+        let dense = cost(|l| !l.is_depthwise());
+        // the 8-lane vector granularity softens but does not remove the
+        // depthwise penalty (9-deep reductions on 8 input lanes)
+        assert!(dw > 1.2 * dense, "dw {dw} vs dense {dense}");
+    }
+}

@@ -1,0 +1,137 @@
+//! Temporal operation-cycle simulator (Fig 3(a)-(b)): WU (wakeup) → FA
+//! (frame acquisition) → AI Inference → PG (power-gate), repeated per
+//! inference event. Used by the power-gate controller in the coordinator
+//! and by the Fig-3 bench to visualize the SRAM-vs-NVM activity profiles.
+
+use crate::power::PowerModel;
+
+/// Execution modes of the XR-AI pipeline (Fig 3(a)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    Wakeup,
+    FrameAcquire,
+    Inference,
+    PowerGated,
+    /// SRAM retention while idle (the SRAM-only pipeline cannot fully gate).
+    Retention,
+}
+
+/// One segment of the simulated timeline.
+#[derive(Debug, Clone)]
+pub struct Segment {
+    pub mode: Mode,
+    pub start_ns: f64,
+    pub dur_ns: f64,
+    /// Average memory power during this segment, µW.
+    pub power_uw: f64,
+}
+
+/// Frame-acquisition time: sensor readout, modeled at 1 ms (camera MIPI
+/// readout of a small ROI; overlaps are ignored as in the paper's Fig 3).
+pub const FRAME_ACQ_NS: f64 = 1_000_000.0;
+
+/// Simulate `n_frames` periodic inference events at `ips` and return the
+/// timeline plus the average memory power (which converges to
+/// [`PowerModel::p_mem_uw`] — property-tested below).
+pub fn simulate(model: &PowerModel, ips: f64, n_frames: usize) -> (Vec<Segment>, f64) {
+    let period_ns = 1e9 / ips;
+    let is_nvm = model.p_retention_uw == 0.0;
+    let wakeup_ns = if is_nvm { crate::mem::WAKEUP_NS } else { 0.0 };
+    let mut segs = Vec::new();
+    let mut energy_pj = 0.0;
+    let mut t = 0.0;
+    for _ in 0..n_frames {
+        let frame_start = t;
+        if is_nvm {
+            // Wakeup: rail charge, energy charged from the model.
+            let p = model.e_wakeup_pj / wakeup_ns.max(1.0) * 1e3; // pJ/ns → µW ×1e3
+            segs.push(Segment { mode: Mode::Wakeup, start_ns: t, dur_ns: wakeup_ns, power_uw: p });
+            energy_pj += model.e_wakeup_pj;
+            t += wakeup_ns;
+        }
+        segs.push(Segment { mode: Mode::FrameAcquire, start_ns: t, dur_ns: FRAME_ACQ_NS, power_uw: 0.0 });
+        t += FRAME_ACQ_NS;
+        let p_inf = model.e_mem_inf_pj / model.latency_ns * 1e3;
+        segs.push(Segment { mode: Mode::Inference, start_ns: t, dur_ns: model.latency_ns, power_uw: p_inf });
+        energy_pj += model.e_mem_inf_pj;
+        t += model.latency_ns;
+        // Idle until the next period tick.
+        let idle_ns = (frame_start + period_ns - t).max(0.0);
+        let (mode, p_idle) = if is_nvm {
+            (Mode::PowerGated, 0.0)
+        } else {
+            (Mode::Retention, model.p_retention_uw)
+        };
+        segs.push(Segment { mode, start_ns: t, dur_ns: idle_ns, power_uw: p_idle });
+        energy_pj += p_idle * idle_ns * 1e-3; // µW × ns → pJ (×1e-3)
+        t = frame_start + period_ns.max(t - frame_start);
+    }
+    let avg_uw = energy_pj / t * 1e3; // pJ / ns → µW
+    (segs, avg_uw)
+}
+
+/// Whether the pipeline meets the application's IPS_min with this model
+/// (frame acquisition + wakeup + inference must fit in the period).
+pub fn meets_ips(model: &PowerModel, ips_min: f64) -> bool {
+    let is_nvm = model.p_retention_uw == 0.0;
+    let overhead = if is_nvm { crate::mem::WAKEUP_NS } else { 0.0 } + FRAME_ACQ_NS;
+    overhead + model.latency_ns <= 1e9 / ips_min
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{simba, MemFlavor, PeConfig};
+    use crate::mapping::map_network;
+    use crate::power::power_model;
+    use crate::tech::{Device, Node};
+    use crate::workload::builtin::detnet;
+
+    fn model(flavor: MemFlavor) -> PowerModel {
+        let arch = simba(PeConfig::V2);
+        let net = detnet();
+        let map = map_network(&arch, &net);
+        power_model(&arch, &map, Node::N7, flavor, Device::VgsotMram)
+    }
+
+    #[test]
+    fn timeline_modes_differ_sram_vs_nvm() {
+        let (sram_segs, _) = simulate(&model(MemFlavor::SramOnly), 10.0, 3);
+        let (nvm_segs, _) = simulate(&model(MemFlavor::P1), 10.0, 3);
+        assert!(sram_segs.iter().any(|s| s.mode == Mode::Retention));
+        assert!(!sram_segs.iter().any(|s| s.mode == Mode::Wakeup));
+        assert!(nvm_segs.iter().any(|s| s.mode == Mode::PowerGated));
+        assert!(nvm_segs.iter().any(|s| s.mode == Mode::Wakeup));
+    }
+
+    #[test]
+    fn timeline_average_matches_closed_form() {
+        // The simulated average power must converge to the analytical
+        // P_mem(ips) (modulo the frame-acquisition segment which carries no
+        // memory power) — ties Fig 3 to Fig 5.
+        for flavor in [MemFlavor::SramOnly, MemFlavor::P1] {
+            let m = model(flavor);
+            let (_, avg) = simulate(&m, 10.0, 50);
+            let closed = m.p_mem_uw(10.0);
+            let rel = (avg - closed).abs() / closed.max(1e-9);
+            assert!(rel < 0.05, "{flavor:?}: sim {avg} vs closed {closed}");
+        }
+    }
+
+    #[test]
+    fn segments_tile_the_timeline() {
+        let (segs, _) = simulate(&model(MemFlavor::P1), 20.0, 5);
+        for w in segs.windows(2) {
+            let end = w[0].start_ns + w[0].dur_ns;
+            assert!((end - w[1].start_ns).abs() < 1.0, "gap at {end}");
+        }
+    }
+
+    #[test]
+    fn detnet_meets_its_ips_min() {
+        // Table 3: DetNet IPS_min = 10 must be satisfiable on Simba (P0/P1).
+        for flavor in [MemFlavor::P0, MemFlavor::P1] {
+            assert!(meets_ips(&model(flavor), 10.0), "{flavor:?}");
+        }
+    }
+}

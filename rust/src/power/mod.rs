@@ -1,0 +1,303 @@
+//! Memory-power-vs-IPS model with power gating (Fig 5, Table 3).
+//!
+//! The paper's temporal model (§5): the accelerator can be power-gated
+//! between the completion of an inference and the next request. What must
+//! stay alive while gated is the state that cannot be recovered — **the
+//! model weights**, because DRAM was removed and there is no backing store:
+//!
+//! - **SRAM-only**: the SRAM domain stays in retention while idle
+//!   (paper's standby assumption from [11]); no wakeup reload is needed.
+//! - **P0**: weight memories are MRAM (power off completely); the
+//!   remaining activation SRAM is state-free and gates off too, but the
+//!   MRAM macros charge a wakeup-energy per inference event (100 µs rail
+//!   charge, §5).
+//! - **P1**: everything gates to ≈0; every macro pays wakeup.
+//!
+//! Average memory power at a given inference rate (IPS):
+//!
+//! `P_mem(ips) = (E_mem_inf + E_wakeup) × ips + P_retention × idle_frac`
+//!
+//! where `idle_frac = max(0, 1 − ips × t_inf)`. The P_mem curves of SRAM vs
+//! an MRAM variant cross at the paper's "cut-off IPS": below it the NVM
+//! variant wins. P0/P1 curves are clipped at `IPS_max = 1/t_inf` ("limited
+//! based on maximum frequency supported by the memory architecture").
+
+use crate::arch::{Arch, LevelKind, MemFlavor};
+use crate::energy::EnergyBreakdown;
+use crate::mapping::NetworkMap;
+use crate::tech::{Device, Node};
+
+/// Everything needed to evaluate P_mem(IPS) for one architectural variant.
+#[derive(Debug, Clone)]
+pub struct PowerModel {
+    pub arch: String,
+    pub network: String,
+    pub node: Node,
+    pub flavor: MemFlavor,
+    pub mram: Device,
+    /// Memory energy per inference, pJ (reads + writes over all levels).
+    pub e_mem_inf_pj: f64,
+    /// Weight-memory share of `e_mem_inf_pj` (Fig 5 plots weight & I/O
+    /// buffer series separately).
+    pub e_weight_inf_pj: f64,
+    /// Wakeup energy charged per inference event, pJ (NVM macros only).
+    pub e_wakeup_pj: f64,
+    /// Retention power while idle, µW (SRAM macros that must stay alive).
+    pub p_retention_uw: f64,
+    /// Inference latency, ns.
+    pub latency_ns: f64,
+}
+
+impl PowerModel {
+    /// Average memory power at `ips` inferences/second, µW.
+    pub fn p_mem_uw(&self, ips: f64) -> f64 {
+        let active = (self.e_mem_inf_pj + self.e_wakeup_pj) * ips * 1e-6; // pJ·Hz → µW
+        let idle_frac = (1.0 - ips * self.latency_ns * 1e-9).max(0.0);
+        active + self.p_retention_uw * idle_frac
+    }
+
+    /// Weight-memory component of the power (Fig 5's weight series), µW.
+    pub fn p_weight_uw(&self, ips: f64) -> f64 {
+        self.e_weight_inf_pj * ips * 1e-6
+    }
+
+    /// Max sustainable inference rate (memory-frequency limited latency).
+    pub fn max_ips(&self) -> f64 {
+        1e9 / self.latency_ns
+    }
+}
+
+/// Build the power model for a mapped network variant.
+pub fn power_model(
+    arch: &Arch,
+    map: &NetworkMap,
+    node: Node,
+    flavor: MemFlavor,
+    mram: Device,
+) -> PowerModel {
+    let breakdown: EnergyBreakdown = crate::energy::estimate(arch, map, node, flavor, mram);
+    let latency_ns = crate::energy::latency_ns(arch, map, node, flavor, mram);
+
+    let mut e_wakeup_pj = 0.0;
+    let mut p_retention_uw = 0.0;
+    for (lvl, model) in arch.macro_models(node, flavor, mram) {
+        if lvl.kind != LevelKind::SramMacro {
+            continue; // regfiles are inside the gated logic domain
+        }
+        let device = flavor.device_for(lvl, mram);
+        if device.is_nvm() {
+            e_wakeup_pj += model.wakeup_pj() * lvl.count as f64;
+        } else {
+            // Any SRAM macro stays on the retention rail while idle (the
+            // paper's Fig 3(b)-(i) SRAM profile: the SRAM pipeline cannot
+            // fully power off, there is no DRAM to reload from). NVM macros
+            // power off completely. So SRAM-only retains everything, P0
+            // retains the activation-side SRAM, P1 retains nothing.
+            p_retention_uw += model.total_standby_uw();
+        }
+    }
+
+    PowerModel {
+        arch: arch.name.clone(),
+        network: map.network.clone(),
+        node,
+        flavor,
+        mram,
+        e_mem_inf_pj: breakdown.mem_pj(),
+        e_weight_inf_pj: breakdown.weight_mem_pj(arch),
+        e_wakeup_pj,
+        p_retention_uw,
+        latency_ns,
+    }
+}
+
+/// Find the cut-off IPS where the NVM variant's memory power equals the
+/// SRAM baseline's (bisection; both curves are monotone in ips). Returns
+/// `None` when the NVM variant never wins below its max-IPS clip.
+pub fn crossover_ips(sram: &PowerModel, nvm: &PowerModel) -> Option<f64> {
+    let diff = |ips: f64| nvm.p_mem_uw(ips) - sram.p_mem_uw(ips);
+    let hi_clip = nvm.max_ips();
+    // NVM must win at (near) zero rate for a crossover to exist.
+    if diff(1e-6) >= 0.0 {
+        return None;
+    }
+    if diff(hi_clip) < 0.0 {
+        // NVM wins across the whole feasible range; crossover beyond clip.
+        return Some(hi_clip);
+    }
+    let (mut lo, mut hi) = (1e-6, hi_clip);
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if diff(mid) < 0.0 {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    Some(0.5 * (lo + hi))
+}
+
+/// Memory-power saving of an NVM variant vs SRAM at a given IPS (Table 3's
+/// "P_Mem Savings @ IPS_min"); positive = NVM wins.
+pub fn savings_at(sram: &PowerModel, nvm: &PowerModel, ips: f64) -> f64 {
+    1.0 - nvm.p_mem_uw(ips) / sram.p_mem_uw(ips)
+}
+
+/// One row of Table 3.
+#[derive(Debug, Clone)]
+pub struct IpsSummaryRow {
+    pub workload: String,
+    pub arch: String,
+    pub ips_min: f64,
+    pub latency_p0_ms: f64,
+    pub latency_p1_ms: f64,
+    pub savings_p0: f64,
+    pub savings_p1: f64,
+}
+
+/// Build Table 3 for the given (workload, ips_min) pairs at 7 nm, v2 PEs.
+pub fn table3(
+    rows: &[(crate::workload::Network, f64)],
+    archs: &[Arch],
+    node: Node,
+    mram: Device,
+) -> Vec<IpsSummaryRow> {
+    let mut out = Vec::new();
+    for (net, ips_min) in rows {
+        for arch in archs {
+            let map = crate::mapping::map_network(arch, net);
+            let sram = power_model(arch, &map, node, MemFlavor::SramOnly, mram);
+            let p0 = power_model(arch, &map, node, MemFlavor::P0, mram);
+            let p1 = power_model(arch, &map, node, MemFlavor::P1, mram);
+            out.push(IpsSummaryRow {
+                workload: net.name.clone(),
+                arch: arch.name.clone(),
+                ips_min: *ips_min,
+                latency_p0_ms: p0.latency_ns / 1e6,
+                latency_p1_ms: p1.latency_ns / 1e6,
+                savings_p0: savings_at(&sram, &p0, *ips_min),
+                savings_p1: savings_at(&sram, &p1, *ips_min),
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{eyeriss, simba, PeConfig};
+    use crate::mapping::map_network;
+    use crate::workload::builtin::{detnet, edsnet};
+
+    fn pm(arch: &Arch, net: &crate::workload::Network, flavor: MemFlavor) -> PowerModel {
+        let map = map_network(arch, net);
+        power_model(arch, &map, Node::N7, flavor, Device::VgsotMram)
+    }
+
+    #[test]
+    fn sram_has_retention_nvm_has_wakeup() {
+        let arch = simba(PeConfig::V2);
+        let net = detnet();
+        let s = pm(&arch, &net, MemFlavor::SramOnly);
+        let p1 = pm(&arch, &net, MemFlavor::P1);
+        assert!(s.p_retention_uw > 0.0);
+        assert!(s.e_wakeup_pj == 0.0);
+        assert_eq!(p1.p_retention_uw, 0.0);
+        assert!(p1.e_wakeup_pj > 0.0);
+    }
+
+    #[test]
+    fn p0_gates_weight_retention_only() {
+        let arch = simba(PeConfig::V2);
+        let net = detnet();
+        let s = pm(&arch, &net, MemFlavor::SramOnly);
+        let p0 = pm(&arch, &net, MemFlavor::P0);
+        // P0 keeps no SRAM retention in our model (activation SRAM is
+        // transient once weights are NVM) → retention strictly below SRAM.
+        assert!(p0.p_retention_uw < s.p_retention_uw);
+    }
+
+    #[test]
+    fn power_is_monotone_in_ips() {
+        let arch = eyeriss(PeConfig::V2);
+        let net = detnet();
+        for flavor in MemFlavor::ALL {
+            let m = pm(&arch, &net, flavor);
+            let mut last = 0.0;
+            for i in 1..50 {
+                let p = m.p_mem_uw(i as f64);
+                assert!(p >= last, "{flavor:?} not monotone at {i}");
+                last = p;
+            }
+        }
+    }
+
+    #[test]
+    fn crossover_exists_for_simba_detnet() {
+        // Fig 5(b)/(f): Simba DetNet shows a crossover; NVM wins below it.
+        let arch = simba(PeConfig::V2);
+        let net = detnet();
+        let s = pm(&arch, &net, MemFlavor::SramOnly);
+        let p1 = pm(&arch, &net, MemFlavor::P1);
+        let x = crossover_ips(&s, &p1).expect("crossover must exist");
+        assert!(x > 10.0, "cut-off {x} must lie above IPS_min=10 (Table 3 savings are positive)");
+        // below crossover NVM saves, above it loses
+        assert!(p1.p_mem_uw(x * 0.5) < s.p_mem_uw(x * 0.5));
+        if x < p1.max_ips() * 0.99 {
+            assert!(p1.p_mem_uw((x * 1.5).min(p1.max_ips())) >= s.p_mem_uw((x * 1.5).min(p1.max_ips())));
+        }
+    }
+
+    #[test]
+    fn table3_shape() {
+        let rows = table3(
+            &[(detnet(), 10.0), (edsnet(), 0.1)],
+            &[simba(PeConfig::V2), eyeriss(PeConfig::V2)],
+            Node::N7,
+            Device::VgsotMram,
+        );
+        assert_eq!(rows.len(), 4);
+        let get = |w: &str, a: &str| rows.iter().find(|r| r.workload == w && r.arch.starts_with(a)).unwrap().clone();
+
+        // Table 3 signs: Simba saves for both workloads & both variants.
+        let sd = get("detnet", "simba");
+        assert!(sd.savings_p0 > 0.0 && sd.savings_p1 > 0.0, "{sd:?}");
+        let se = get("edsnet", "simba");
+        assert!(se.savings_p0 > 0.0 && se.savings_p1 > 0.0, "{se:?}");
+
+        // Eyeriss EDSNet: negative for both (read-intensive workload on a
+        // read-penalized device + per-MAC weight-spad reads).
+        let ee = get("edsnet", "eyeriss");
+        assert!(ee.savings_p0 < 0.0, "{ee:?}");
+
+        // Latencies: P1 ≥ P0; EDSNet ≫ DetNet.
+        for r in &rows {
+            assert!(r.latency_p1_ms >= r.latency_p0_ms * 0.999, "{r:?}");
+        }
+        assert!(se.latency_p0_ms / sd.latency_p0_ms > 20.0);
+        // Order of magnitude vs paper (0.34 ms / 48.57 ms on Simba).
+        assert!((0.05..5.0).contains(&sd.latency_p0_ms), "{}", sd.latency_p0_ms);
+        assert!((5.0..500.0).contains(&se.latency_p0_ms), "{}", se.latency_p0_ms);
+    }
+
+    #[test]
+    fn savings_decrease_with_ips() {
+        // NVM advantage shrinks as the duty cycle rises.
+        let arch = simba(PeConfig::V2);
+        let net = detnet();
+        let s = pm(&arch, &net, MemFlavor::SramOnly);
+        let p1 = pm(&arch, &net, MemFlavor::P1);
+        let lo = savings_at(&s, &p1, 1.0);
+        let hi = savings_at(&s, &p1, 100.0);
+        assert!(lo > hi, "lo={lo} hi={hi}");
+    }
+
+    #[test]
+    fn max_ips_is_latency_bound() {
+        let arch = simba(PeConfig::V2);
+        let net = edsnet();
+        let p0 = pm(&arch, &net, MemFlavor::P0);
+        assert!((p0.max_ips() - 1e9 / p0.latency_ns).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,154 @@
+//! INT8 post-training-quantization helpers used on the rust side of the
+//! serving path (pre/post-processing around the PJRT executable) and by the
+//! quantization-accuracy report (Fig 1(g)-(i) analogue).
+//!
+//! The python compile path (`python/compile/quantize.py`) performs the
+//! actual calibration (per-tensor affine, min/max, symmetric weights — the
+//! TensorRT recipe the paper used); this module mirrors the arithmetic so
+//! rust can quantize camera frames into the model's expected scale and
+//! dequantize outputs, without python on the request path.
+
+/// Per-tensor affine quantization parameters: `real = scale × (q − zero)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QParams {
+    pub scale: f32,
+    pub zero: i32,
+}
+
+impl QParams {
+    /// Calibrate asymmetric UINT8-style params over a data range.
+    pub fn calibrate(min: f32, max: f32) -> QParams {
+        let (min, max) = (min.min(0.0), max.max(0.0)); // range must span 0
+        let scale = ((max - min) / 255.0).max(f32::EPSILON);
+        let zero = (-min / scale).round() as i32;
+        QParams { scale, zero: zero.clamp(0, 255) }
+    }
+
+    /// Calibrate symmetric INT8 params (weights): zero = 0.
+    pub fn calibrate_symmetric(absmax: f32) -> QParams {
+        QParams { scale: (absmax / 127.0).max(f32::EPSILON), zero: 0 }
+    }
+
+    pub fn quantize(&self, x: f32) -> i32 {
+        (x / self.scale).round() as i32 + self.zero
+    }
+
+    pub fn dequantize(&self, q: i32) -> f32 {
+        (q - self.zero) as f32 * self.scale
+    }
+
+    /// Quantize-dequantize round trip (fake-quant) — what the INT8 model
+    /// evaluation applies to tensors.
+    pub fn fake_quant(&self, x: f32, lo: i32, hi: i32) -> f32 {
+        self.dequantize(self.quantize(x).clamp(lo, hi))
+    }
+}
+
+/// Fake-quantize a buffer in place with u8 range.
+pub fn fake_quant_u8(xs: &mut [f32], qp: QParams) {
+    for x in xs.iter_mut() {
+        *x = qp.fake_quant(*x, 0, 255);
+    }
+}
+
+/// Calibrate over a sample buffer.
+pub fn calibrate_from(xs: &[f32]) -> QParams {
+    let mut min = f32::INFINITY;
+    let mut max = f32::NEG_INFINITY;
+    for &x in xs {
+        min = min.min(x);
+        max = max.max(x);
+    }
+    if !min.is_finite() || !max.is_finite() {
+        return QParams { scale: 1.0, zero: 0 };
+    }
+    QParams::calibrate(min, max)
+}
+
+/// Histogram of a tensor (Fig 1(i) weight-distribution analogue): `bins`
+/// equal-width buckets over [lo, hi].
+pub fn histogram(xs: &[f32], lo: f32, hi: f32, bins: usize) -> Vec<usize> {
+    let mut h = vec![0usize; bins];
+    let w = (hi - lo) / bins as f32;
+    for &x in xs {
+        if x >= lo && x < hi {
+            h[((x - lo) / w) as usize] += 1;
+        } else if x == hi {
+            h[bins - 1] += 1;
+        }
+    }
+    h
+}
+
+/// Count distinct values — quantized tensors collapse to ≤256 levels
+/// ("discrete levels" in Fig 1(i)).
+pub fn distinct_levels(xs: &[f32]) -> usize {
+    let mut v: Vec<u32> = xs.iter().map(|x| x.to_bits()).collect();
+    v.sort_unstable();
+    v.dedup();
+    v.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::check;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn quantize_dequantize_identity_at_levels() {
+        let qp = QParams::calibrate(-1.0, 1.0);
+        for q in 0..=255 {
+            let x = qp.dequantize(q);
+            assert_eq!(qp.quantize(x), q);
+        }
+    }
+
+    #[test]
+    fn fake_quant_error_bounded_by_half_scale() {
+        check("fq error bound", 300, |g| {
+            let lo = g.f64_in(-10.0, -0.1) as f32;
+            let hi = g.f64_in(0.1, 10.0) as f32;
+            let qp = QParams::calibrate(lo, hi);
+            let x = g.f64_in(lo as f64, hi as f64) as f32;
+            let err = (qp.fake_quant(x, 0, 255) - x).abs();
+            assert!(err <= qp.scale * 0.5 + 1e-6, "err {err} scale {}", qp.scale);
+        });
+    }
+
+    #[test]
+    fn symmetric_weights_have_zero_zero_point() {
+        let qp = QParams::calibrate_symmetric(0.35);
+        assert_eq!(qp.zero, 0);
+        assert!((qp.dequantize(127) - 0.35).abs() < 1e-3);
+        assert!((qp.dequantize(-127) + 0.35).abs() < 1e-3);
+    }
+
+    #[test]
+    fn quantized_buffer_collapses_to_discrete_levels() {
+        let mut rng = Prng::new(1);
+        let mut xs: Vec<f32> = (0..10_000).map(|_| rng.gaussian() as f32 * 0.2).collect();
+        assert!(distinct_levels(&xs) > 9000);
+        let qp = calibrate_from(&xs);
+        fake_quant_u8(&mut xs, qp);
+        assert!(distinct_levels(&xs) <= 256, "levels {}", distinct_levels(&xs));
+    }
+
+    #[test]
+    fn histogram_counts_everything_in_range() {
+        let xs = [0.0f32, 0.1, 0.5, 0.9, 1.0];
+        let h = histogram(&xs, 0.0, 1.0, 10);
+        assert_eq!(h.iter().sum::<usize>(), 5);
+        assert_eq!(h[0], 1);
+        assert_eq!(h[9], 2); // 0.9 and the hi-edge 1.0
+    }
+
+    #[test]
+    fn calibrate_spans_zero() {
+        let qp = QParams::calibrate(0.2, 1.0); // min forced to 0
+        assert_eq!(qp.zero, 0);
+        let qp = calibrate_from(&[-2.0, 4.0]);
+        let z = qp.dequantize(qp.zero);
+        assert!(z.abs() < 1e-6, "zero must map to 0.0, got {z}");
+    }
+}

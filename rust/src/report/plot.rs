@@ -1,0 +1,217 @@
+//! ASCII plotting for terminal figure reproduction: log/linear line charts
+//! (Fig 5's P_mem-vs-IPS curves, Fig 2(f)'s EDP-vs-node trends) rendered
+//! into the bench output so `bench_output.txt` carries the figures, not
+//! just their tables.
+
+/// One named series of (x, y) points.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+    /// Glyph used for this series.
+    pub glyph: char,
+}
+
+/// Axis scale.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    Linear,
+    Log10,
+}
+
+/// A character-grid chart.
+pub struct Chart {
+    pub title: String,
+    pub width: usize,
+    pub height: usize,
+    pub x_scale: Scale,
+    pub y_scale: Scale,
+    pub series: Vec<Series>,
+}
+
+impl Chart {
+    pub fn new(title: &str, width: usize, height: usize) -> Chart {
+        Chart {
+            title: title.to_string(),
+            width: width.max(20),
+            height: height.max(5),
+            x_scale: Scale::Linear,
+            y_scale: Scale::Linear,
+            series: Vec::new(),
+        }
+    }
+
+    pub fn log_log(mut self) -> Chart {
+        self.x_scale = Scale::Log10;
+        self.y_scale = Scale::Log10;
+        self
+    }
+
+    pub fn add(&mut self, name: &str, points: Vec<(f64, f64)>) -> &mut Self {
+        const GLYPHS: [char; 8] = ['*', 'o', '+', 'x', '#', '@', '%', '&'];
+        let glyph = GLYPHS[self.series.len() % GLYPHS.len()];
+        self.series.push(Series {
+            name: name.to_string(),
+            points,
+            glyph,
+        });
+        self
+    }
+
+    fn tx(&self, v: f64, scale: Scale) -> f64 {
+        match scale {
+            Scale::Linear => v,
+            Scale::Log10 => v.max(1e-300).log10(),
+        }
+    }
+
+    /// Render the chart to a string.
+    pub fn render(&self) -> String {
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for s in &self.series {
+            for &(x, y) in &s.points {
+                if x.is_finite() && y.is_finite() {
+                    xs.push(self.tx(x, self.x_scale));
+                    ys.push(self.tx(y, self.y_scale));
+                }
+            }
+        }
+        if xs.is_empty() {
+            return format!("== {} == (no data)\n", self.title);
+        }
+        let (x_min, x_max) = min_max(&xs);
+        let (y_min, y_max) = min_max(&ys);
+        let x_span = (x_max - x_min).max(1e-12);
+        let y_span = (y_max - y_min).max(1e-12);
+
+        let mut grid = vec![vec![' '; self.width]; self.height];
+        for s in &self.series {
+            // draw with linear interpolation between consecutive points
+            let pts: Vec<(f64, f64)> = s
+                .points
+                .iter()
+                .filter(|(x, y)| x.is_finite() && y.is_finite())
+                .map(|&(x, y)| {
+                    (
+                        (self.tx(x, self.x_scale) - x_min) / x_span,
+                        (self.tx(y, self.y_scale) - y_min) / y_span,
+                    )
+                })
+                .collect();
+            for w in pts.windows(2) {
+                let steps = self.width * 2;
+                for i in 0..=steps {
+                    let t = i as f64 / steps as f64;
+                    let x = w[0].0 + (w[1].0 - w[0].0) * t;
+                    let y = w[0].1 + (w[1].1 - w[0].1) * t;
+                    let col = ((x * (self.width - 1) as f64).round() as usize).min(self.width - 1);
+                    let row = self.height - 1
+                        - ((y * (self.height - 1) as f64).round() as usize).min(self.height - 1);
+                    grid[row][col] = s.glyph;
+                }
+            }
+            if pts.len() == 1 {
+                let col = ((pts[0].0 * (self.width - 1) as f64).round() as usize).min(self.width - 1);
+                let row = self.height - 1
+                    - ((pts[0].1 * (self.height - 1) as f64).round() as usize).min(self.height - 1);
+                grid[row][col] = s.glyph;
+            }
+        }
+
+        let untx = |v: f64, scale: Scale| match scale {
+            Scale::Linear => v,
+            Scale::Log10 => 10f64.powf(v),
+        };
+        let mut out = format!("== {} ==\n", self.title);
+        for (i, row) in grid.iter().enumerate() {
+            let y_val = untx(y_max - y_span * i as f64 / (self.height - 1) as f64, self.y_scale);
+            out.push_str(&format!("{:>10} |", short(y_val)));
+            out.extend(row.iter());
+            out.push('\n');
+        }
+        out.push_str(&format!("{:>10} +{}\n", "", "-".repeat(self.width)));
+        out.push_str(&format!(
+            "{:>10}  {}{}{}\n",
+            "",
+            short(untx(x_min, self.x_scale)),
+            " ".repeat(self.width.saturating_sub(
+                short(untx(x_min, self.x_scale)).len() + short(untx(x_max, self.x_scale)).len()
+            )),
+            short(untx(x_max, self.x_scale)),
+        ));
+        let legend: Vec<String> = self
+            .series
+            .iter()
+            .map(|s| format!("{} {}", s.glyph, s.name))
+            .collect();
+        out.push_str(&format!("  legend: {}\n", legend.join("   ")));
+        out
+    }
+}
+
+fn min_max(v: &[f64]) -> (f64, f64) {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for &x in v {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    (lo, hi)
+}
+
+fn short(v: f64) -> String {
+    if v == 0.0 {
+        "0".into()
+    } else if v.abs() >= 0.01 && v.abs() < 1e4 {
+        format!("{v:.2}")
+    } else {
+        format!("{v:.1e}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_monotone_series() {
+        let mut c = Chart::new("t", 40, 10);
+        c.add("up", (0..10).map(|i| (i as f64, i as f64 * 2.0)).collect());
+        let s = c.render();
+        assert!(s.contains("== t =="));
+        assert!(s.contains('*'));
+        assert!(s.contains("legend: * up"));
+        // monotone increasing: glyph on the top row appears to the right of
+        // the glyph on the bottom row
+        let rows: Vec<&str> = s.lines().filter(|l| l.contains('|')).collect();
+        let top = rows.first().unwrap().find('*').unwrap();
+        let bottom = rows.last().unwrap().find('*').unwrap();
+        assert!(top > bottom, "top {top} bottom {bottom}");
+    }
+
+    #[test]
+    fn log_log_handles_decades() {
+        let mut c = Chart::new("ll", 40, 8).log_log();
+        c.add("pow", vec![(0.1, 1.0), (1.0, 10.0), (10.0, 100.0), (100.0, 1000.0)]);
+        let s = c.render();
+        assert!(s.contains('*'));
+        // y-axis labels should span 1.00 … 1000
+        assert!(s.contains("1000") || s.contains("1.0e3"));
+    }
+
+    #[test]
+    fn multiple_series_get_distinct_glyphs() {
+        let mut c = Chart::new("m", 30, 6);
+        c.add("a", vec![(0.0, 0.0), (1.0, 1.0)]);
+        c.add("b", vec![(0.0, 1.0), (1.0, 0.0)]);
+        let s = c.render();
+        assert!(s.contains('*') && s.contains('o'));
+    }
+
+    #[test]
+    fn empty_chart_is_graceful() {
+        let c = Chart::new("e", 30, 6);
+        assert!(c.render().contains("no data"));
+    }
+}

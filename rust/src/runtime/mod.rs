@@ -1,0 +1,115 @@
+//! PJRT runtime: load JAX-AOT'd HLO text artifacts, compile once on the
+//! PJRT CPU client, execute on the request path. Python never runs here
+//! (see `python/compile/aot.py` for the build-time half).
+
+use std::path::Path;
+
+/// A compiled model executable plus its I/O metadata (read from the
+/// artifact's sidecar `<name>.meta.json` written by `aot.py`).
+pub struct Executable {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+    /// Input tensor shape (c, h, w) — batch 1.
+    pub input_chw: (usize, usize, usize),
+    /// Output names in tuple order.
+    pub outputs: Vec<String>,
+}
+
+/// The PJRT client wrapper; one per process, executables share it.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> crate::Result<Runtime> {
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt: {e:?}"))?,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load `artifacts/<name>.hlo.txt` (+ `<name>.meta.json`) and compile.
+    pub fn load(&self, artifacts_dir: &Path, name: &str) -> crate::Result<Executable> {
+        let hlo_path = artifacts_dir.join(format!("{name}.hlo.txt"));
+        anyhow::ensure!(
+            hlo_path.exists(),
+            "missing {} — run `make artifacts` first",
+            hlo_path.display()
+        );
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path
+                .to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
+
+        let meta =
+            crate::util::json::Json::parse_file(&artifacts_dir.join(format!("{name}.meta.json")))?;
+        let input = meta.req("input_chw")?;
+        let arr = input
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("input_chw must be [c,h,w]"))?;
+        let outputs = meta
+            .req("outputs")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("outputs must be an array"))?
+            .iter()
+            .map(|o| o.as_str().unwrap_or("out").to_string())
+            .collect();
+        Ok(Executable {
+            name: name.to_string(),
+            exe,
+            input_chw: (
+                arr[0].as_usize().unwrap_or(1),
+                arr[1].as_usize().unwrap_or(1),
+                arr[2].as_usize().unwrap_or(1),
+            ),
+            outputs,
+        })
+    }
+}
+
+impl Executable {
+    /// Run one inference on a CHW f32 frame (batch 1, NCHW). Returns one
+    /// flat f32 vector per model output.
+    pub fn infer(&self, frame: &[f32]) -> crate::Result<Vec<Vec<f32>>> {
+        let (c, h, w) = self.input_chw;
+        anyhow::ensure!(
+            frame.len() == c * h * w,
+            "frame len {} != {}x{}x{}",
+            frame.len(),
+            c,
+            h,
+            w
+        );
+        let lit = xla::Literal::vec1(frame)
+            .reshape(&[1, c as i64, h as i64, w as i64])
+            .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True.
+        let tuple = result
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("tuple: {e:?}"))?;
+        let mut out = Vec::with_capacity(tuple.len());
+        for t in tuple {
+            out.push(
+                t.to_vec::<f32>()
+                    .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?,
+            );
+        }
+        Ok(out)
+    }
+}

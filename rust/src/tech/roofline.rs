@@ -1,0 +1,158 @@
+//! Roofline analysis: arithmetic intensity of each workload layer vs the
+//! compute/bandwidth rooflines of each architecture — the standard check
+//! that the mapper's compute-bound/bandwidth-bound verdicts are physical,
+//! and the source of DESIGN.md's L1 efficiency estimates (the paper's
+//! efficiency-ratio framing translated to this substrate).
+
+use crate::arch::{Arch, LevelKind, MemFlavor};
+use crate::mapping::{accesses_at, LayerMap};
+use crate::tech::{Device, Node};
+
+/// Roofline operating point for one layer on one architecture.
+#[derive(Debug, Clone)]
+pub struct LayerRoofline {
+    pub layer: String,
+    /// MACs per byte moved through the worst shared buffer.
+    pub arithmetic_intensity: f64,
+    /// Attainable MACs/cycle = min(peak, AI × bytes/cycle).
+    pub attainable_macs_per_cycle: f64,
+    /// Peak MACs/cycle of the array.
+    pub peak_macs_per_cycle: f64,
+    /// True when the bandwidth roof binds (matches the mapper's
+    /// `bandwidth_cycles > compute_cycles` verdict).
+    pub bandwidth_bound: bool,
+}
+
+/// Compute the roofline point of a mapped layer.
+pub fn layer_roofline(arch: &Arch, lm: &LayerMap) -> LayerRoofline {
+    // Worst shared-buffer traffic in bytes (per-instance, as the mapper's
+    // bandwidth bound does).
+    let mut worst_bytes: f64 = 0.0;
+    for a in &lm.access {
+        if let Some(level) = arch.level(a.level) {
+            if level.kind == LevelKind::RegFile {
+                continue;
+            }
+            let tx = accesses_at(level, a.reads + a.writes, a.accum, arch.datum_bits);
+            let bytes = tx * level.bus_bits as f64 / 8.0 / level.count as f64;
+            worst_bytes = worst_bytes.max(bytes);
+        }
+    }
+    let peak = arch.total_macs() as f64;
+    let ai = if worst_bytes > 0.0 { lm.macs / worst_bytes } else { f64::INFINITY };
+    // Attainable under the mapper's one-transaction-per-cycle bandwidth
+    // model: the bandwidth roof is macs / bandwidth_cycles.
+    let bw_roof = if lm.bandwidth_cycles > 0.0 {
+        lm.macs / lm.bandwidth_cycles
+    } else {
+        f64::INFINITY
+    };
+    let attainable = peak.min(bw_roof).max(0.0);
+    LayerRoofline {
+        layer: lm.layer.clone(),
+        arithmetic_intensity: ai,
+        attainable_macs_per_cycle: attainable,
+        peak_macs_per_cycle: peak,
+        bandwidth_bound: lm.bandwidth_cycles > lm.compute_cycles,
+    }
+}
+
+/// Whole-network achieved-vs-roofline efficiency (the paper's "efficiency
+/// ratio" translated): achieved MACs/cycle ÷ attainable MACs/cycle,
+/// aggregated over compute layers.
+pub fn network_efficiency(arch: &Arch, map: &crate::mapping::NetworkMap) -> f64 {
+    let mut achieved = 0.0;
+    let mut attainable = 0.0;
+    for lm in &map.per_layer {
+        if lm.macs == 0.0 {
+            continue;
+        }
+        let r = layer_roofline(arch, lm);
+        achieved += lm.macs; // over lm.cycles() each
+        attainable += r.attainable_macs_per_cycle * lm.cycles();
+    }
+    if attainable == 0.0 {
+        return 0.0;
+    }
+    achieved / attainable
+}
+
+/// GOPS at a node/flavor (for reports): achieved MACs/s × 2 (mul+add).
+pub fn achieved_gops(
+    arch: &Arch,
+    map: &crate::mapping::NetworkMap,
+    node: Node,
+    flavor: MemFlavor,
+    mram: Device,
+) -> f64 {
+    let lat_s = crate::energy::latency_ns(arch, map, node, flavor, mram) * 1e-9;
+    2.0 * map.total_macs() / lat_s / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{eyeriss, simba, PeConfig};
+    use crate::mapping::map_network;
+    use crate::workload::builtin::{detnet, edsnet};
+
+    #[test]
+    fn attainable_never_exceeds_peak() {
+        for arch in [simba(PeConfig::V2), eyeriss(PeConfig::V2)] {
+            let map = map_network(&arch, &edsnet());
+            for lm in &map.per_layer {
+                let r = layer_roofline(&arch, lm);
+                assert!(r.attainable_macs_per_cycle <= r.peak_macs_per_cycle + 1e-9);
+                assert!(r.arithmetic_intensity >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn efficiency_in_unit_interval() {
+        for arch in [simba(PeConfig::V2), eyeriss(PeConfig::V2)] {
+            for net in [detnet(), edsnet()] {
+                let map = map_network(&arch, &net);
+                let e = network_efficiency(&arch, &map);
+                assert!(e > 0.0 && e <= 1.0 + 1e-9, "{} {}: {e}", arch.name, net.name);
+            }
+        }
+    }
+
+    #[test]
+    fn pointwise_convs_have_lower_intensity_than_3x3() {
+        // 1×1 convs move more bytes per MAC than 3×3 (no kernel reuse) —
+        // a basic roofline sanity on the mapper's traffic model.
+        let arch = simba(PeConfig::V2);
+        let net = edsnet();
+        let map = map_network(&arch, &net);
+        let mut pw_ai = Vec::new();
+        let mut k3_ai = Vec::new();
+        for (l, lm) in net.layers.iter().zip(&map.per_layer) {
+            if !l.is_compute() || l.is_depthwise() {
+                continue;
+            }
+            if let crate::workload::Op::Conv2d { kh, .. } = l.op {
+                let ai = layer_roofline(&arch, lm).arithmetic_intensity;
+                if kh == 1 {
+                    pw_ai.push(ai);
+                } else {
+                    k3_ai.push(ai);
+                }
+            }
+        }
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        assert!(mean(&k3_ai) > mean(&pw_ai), "3x3 {} vs 1x1 {}", mean(&k3_ai), mean(&pw_ai));
+    }
+
+    #[test]
+    fn gops_positive_and_bounded_by_peak() {
+        let arch = simba(PeConfig::V2);
+        let map = map_network(&arch, &detnet());
+        let node = Node::N7;
+        let g = achieved_gops(&arch, &map, node, MemFlavor::SramOnly, Device::VgsotMram);
+        let peak_gops =
+            2.0 * arch.total_macs() as f64 * arch.clock_mhz(node, MemFlavor::SramOnly, Device::VgsotMram) * 1e6 / 1e9;
+        assert!(g > 0.0 && g <= peak_gops, "achieved {g} peak {peak_gops}");
+    }
+}

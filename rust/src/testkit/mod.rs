@@ -1,0 +1,162 @@
+//! proptest-lite: a deterministic property-testing harness (proptest is not
+//! vendored in the offline environment — see DESIGN.md §Substitutions).
+//!
+//! Usage (`no_run`: doctest binaries miss the xla rpath in this repo):
+//! ```no_run
+//! use xr_edge_dse::testkit::{Gen, check};
+//! check("addition commutes", 200, |g| {
+//!     let (a, b) = (g.f64_in(-1e6, 1e6), g.f64_in(-1e6, 1e6));
+//!     assert!((a + b - (b + a)).abs() < 1e-9);
+//! });
+//! ```
+//!
+//! Every case is generated from a seed derived from (property name, case
+//! index), so a failure report like `property 'x' failed on case 17
+//! (seed 0x...)` reproduces exactly with `replay("x", 17, |g| ...)`.
+
+use crate::util::prng::Prng;
+
+/// Random-input generator handed to each property case.
+pub struct Gen {
+    rng: Prng,
+    /// Trace of drawn values for the failure report.
+    trace: Vec<String>,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Gen {
+            rng: Prng::new(seed),
+            trace: Vec::new(),
+        }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        let v = self.rng.range_usize(lo, hi);
+        self.trace.push(format!("usize_in({lo},{hi})={v}"));
+        v
+    }
+
+    pub fn u64_in(&mut self, lo: u64, hi: u64) -> u64 {
+        let v = self.rng.range_u64(lo, hi);
+        self.trace.push(format!("u64_in({lo},{hi})={v}"));
+        v
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        let v = self.rng.range_f64(lo, hi);
+        self.trace.push(format!("f64_in({lo},{hi})={v}"));
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        let v = self.rng.bool(0.5);
+        self.trace.push(format!("bool()={v}"));
+        v
+    }
+
+    /// Pick one of the provided choices (cloned).
+    pub fn choose<T: Clone + std::fmt::Debug>(&mut self, items: &[T]) -> T {
+        let v = self.rng.pick(items).clone();
+        self.trace.push(format!("choose={v:?}"));
+        v
+    }
+
+    /// A power of two in [2^lo_exp, 2^hi_exp].
+    pub fn pow2(&mut self, lo_exp: u32, hi_exp: u32) -> usize {
+        let e = self.rng.range_u64(lo_exp as u64, hi_exp as u64 + 1) as u32;
+        let v = 1usize << e;
+        self.trace.push(format!("pow2({lo_exp},{hi_exp})={v}"));
+        v
+    }
+
+    /// Vector of f64s.
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.rng.range_f64(lo, hi)).collect()
+    }
+}
+
+fn case_seed(name: &str, case: u64) -> u64 {
+    // FNV-1a over the name, mixed with the case index.
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h ^ case.wrapping_mul(0x9e3779b97f4a7c15)
+}
+
+/// Run `cases` random cases of the property. Panics (with the generator
+/// trace) on the first failing case.
+pub fn check<F: FnMut(&mut Gen)>(name: &str, cases: u64, mut prop: F) {
+    for case in 0..cases {
+        let seed = case_seed(name, case);
+        let mut g = Gen::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed:#x}):\n  {msg}\n  drawn: [{}]\n  replay with testkit::replay(\"{name}\", {case}, ...)",
+                g.trace.join(", ")
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by (name, case index).
+pub fn replay<F: FnMut(&mut Gen)>(name: &str, case: u64, mut prop: F) {
+    let mut g = Gen::new(case_seed(name, case));
+    prop(&mut g);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivial", 50, |g| {
+            let x = g.f64_in(0.0, 1.0);
+            assert!((0.0..1.0).contains(&x));
+            count += 1;
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails' failed on case")]
+    fn failing_property_reports_case() {
+        check("fails", 20, |g| {
+            let x = g.usize_in(0, 100);
+            assert!(x < 40, "x={x} too big");
+        });
+    }
+
+    #[test]
+    fn replay_reproduces_case_values() {
+        let mut first: Option<(usize, f64)> = None;
+        replay("repro", 3, |g| {
+            first = Some((g.usize_in(0, 1000), g.f64_in(-1.0, 1.0)));
+        });
+        let mut second: Option<(usize, f64)> = None;
+        replay("repro", 3, |g| {
+            second = Some((g.usize_in(0, 1000), g.f64_in(-1.0, 1.0)));
+        });
+        assert_eq!(first, second);
+        assert!(first.is_some());
+    }
+
+    #[test]
+    fn pow2_in_range() {
+        check("pow2 range", 100, |g| {
+            let v = g.pow2(3, 10);
+            assert!(v.is_power_of_two());
+            assert!((8..=1024).contains(&v));
+        });
+    }
+}

@@ -1,0 +1,74 @@
+//! Criterion-lite bench harness (criterion is not vendored offline):
+//! warmup + timed iterations with mean/p50/min reporting, plus helpers the
+//! figure benches share. Each `[[bench]]` target is a plain `fn main()`
+//! that both *times* the model evaluation and *prints* the regenerated
+//! table/figure, so `cargo bench | tee bench_output.txt` is a full
+//! reproduction record.
+
+use std::time::Instant;
+
+/// Measure a closure: `warmup` unmeasured runs, then `iters` timed runs.
+/// Returns (mean_s, min_s, p50_s) and prints a criterion-style line.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> (f64, f64, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    let p50 = crate::util::stats::percentile(&samples, 0.5);
+    println!(
+        "bench {name:<40} mean {:>10}  p50 {:>10}  min {:>10}  ({iters} iters)",
+        fmt_s(mean),
+        fmt_s(p50),
+        fmt_s(min)
+    );
+    (mean, min, p50)
+}
+
+fn fmt_s(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{s:.2} s")
+    }
+}
+
+/// Standard header every figure bench prints.
+pub fn figure_header(id: &str, paper_claim: &str) {
+    println!("\n================================================================");
+    println!("{id}");
+    println!("paper claim: {paper_claim}");
+    println!("================================================================");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut n = 0;
+        let (mean, min, p50) = bench("noop", 2, 10, || n += 1);
+        assert_eq!(n, 12);
+        assert!(mean >= min);
+        assert!(p50 >= min);
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert!(fmt_s(2.5e-9).ends_with("ns"));
+        assert!(fmt_s(2.5e-5).ends_with("µs"));
+        assert!(fmt_s(2.5e-2).ends_with("ms"));
+        assert!(fmt_s(2.5).ends_with("s"));
+    }
+}

@@ -1,0 +1,175 @@
+//! Tiny CLI argument parser (clap substitute). Supports subcommands,
+//! `--flag`, `--key value` / `--key=value`, and positionals; generates a
+//! usage string from the declared options.
+
+use std::collections::BTreeMap;
+
+/// Declarative option spec: name (without `--`), takes-value?, help, default.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments: options (flags map to "true"), positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub opts: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+    pub fn flag(&self, name: &str) -> bool {
+        self.get(name) == Some("true")
+    }
+    pub fn get_f64(&self, name: &str) -> crate::Result<Option<f64>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<f64>()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("--{name}: {e}")),
+        }
+    }
+    pub fn get_usize(&self, name: &str) -> crate::Result<Option<usize>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<usize>()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("--{name}: {e}")),
+        }
+    }
+}
+
+/// Parse `argv` (not including the program/subcommand name) against specs.
+pub fn parse(argv: &[String], specs: &[OptSpec]) -> crate::Result<Args> {
+    let mut args = Args::default();
+    for s in specs {
+        if let Some(d) = s.default {
+            args.opts.insert(s.name.to_string(), d.to_string());
+        }
+    }
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(stripped) = a.strip_prefix("--") {
+            let (name, inline_val) = match stripped.split_once('=') {
+                Some((n, v)) => (n, Some(v.to_string())),
+                None => (stripped, None),
+            };
+            let spec = specs
+                .iter()
+                .find(|s| s.name == name)
+                .ok_or_else(|| anyhow::anyhow!("unknown option --{name}\n{}", usage(specs)))?;
+            let value = if spec.takes_value {
+                match inline_val {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        argv.get(i)
+                            .cloned()
+                            .ok_or_else(|| anyhow::anyhow!("--{name} requires a value"))?
+                    }
+                }
+            } else {
+                if inline_val.is_some() {
+                    anyhow::bail!("--{name} does not take a value");
+                }
+                "true".to_string()
+            };
+            args.opts.insert(name.to_string(), value);
+        } else {
+            args.positional.push(a.clone());
+        }
+        i += 1;
+    }
+    Ok(args)
+}
+
+/// Render a usage block from the specs.
+pub fn usage(specs: &[OptSpec]) -> String {
+    let mut s = String::from("options:\n");
+    for spec in specs {
+        let head = if spec.takes_value {
+            format!("  --{} <v>", spec.name)
+        } else {
+            format!("  --{}", spec.name)
+        };
+        let default = spec
+            .default
+            .map(|d| format!(" [default: {d}]"))
+            .unwrap_or_default();
+        s.push_str(&format!("{head:<24} {}{default}\n", spec.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec {
+                name: "node",
+                takes_value: true,
+                help: "tech node",
+                default: Some("7"),
+            },
+            OptSpec {
+                name: "verbose",
+                takes_value: false,
+                help: "chatty",
+                default: None,
+            },
+        ]
+    }
+
+    fn sv(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[], &specs()).unwrap();
+        assert_eq!(a.get("node"), Some("7"));
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn key_value_both_styles() {
+        let a = parse(&sv(&["--node", "28"]), &specs()).unwrap();
+        assert_eq!(a.get("node"), Some("28"));
+        let a = parse(&sv(&["--node=22"]), &specs()).unwrap();
+        assert_eq!(a.get("node"), Some("22"));
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = parse(&sv(&["--verbose", "detnet", "simba"]), &specs()).unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["detnet", "simba"]);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse(&sv(&["--bogus"]), &specs()).is_err());
+        assert!(parse(&sv(&["--node"]), &specs()).is_err());
+        assert!(parse(&sv(&["--verbose=1"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse(&sv(&["--node", "28"]), &specs()).unwrap();
+        assert_eq!(a.get_f64("node").unwrap(), Some(28.0));
+        assert_eq!(a.get_usize("node").unwrap(), Some(28));
+        let a = parse(&sv(&["--node", "x"]), &specs()).unwrap();
+        assert!(a.get_f64("node").is_err());
+    }
+}

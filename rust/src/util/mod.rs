@@ -1,0 +1,10 @@
+//! Environment substrates: the offline build vendored only the `xla` crate
+//! closure, so the usual ecosystem crates (serde_json, rand, clap) are
+//! re-implemented here as small, well-tested modules.
+
+pub mod json;
+pub mod prng;
+pub mod stats;
+pub mod cli;
+pub mod units;
+pub mod benchkit;

@@ -1,0 +1,164 @@
+//! Small statistics helpers shared by the coordinator metrics, the bench
+//! harness, and the perf pass.
+
+/// Online mean/min/max/variance accumulator (Welford).
+#[derive(Debug, Clone, Default)]
+pub struct Accum {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Accum {
+    pub fn new() -> Self {
+        Accum {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+/// Percentile over an unsorted sample (nearest-rank on a sorted copy).
+/// `q` in [0,1]. Returns NaN on an empty sample.
+pub fn percentile(samples: &[f64], q: f64) -> f64 {
+    if samples.is_empty() {
+        return f64::NAN;
+    }
+    let mut v: Vec<f64> = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((q.clamp(0.0, 1.0)) * (v.len() - 1) as f64).round() as usize;
+    v[rank]
+}
+
+/// Latency summary used by coordinator metrics and the bench harness.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+pub fn summarize(samples: &[f64]) -> Summary {
+    let mut acc = Accum::new();
+    for &s in samples {
+        acc.push(s);
+    }
+    Summary {
+        count: samples.len(),
+        mean: acc.mean(),
+        p50: percentile(samples, 0.50),
+        p95: percentile(samples, 0.95),
+        p99: percentile(samples, 0.99),
+        min: if samples.is_empty() { f64::NAN } else { acc.min() },
+        max: if samples.is_empty() { f64::NAN } else { acc.max() },
+    }
+}
+
+/// Geometric mean — used when aggregating energy ratios across workloads.
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Linear interpolation helper for the IPS crossover solver.
+pub fn lerp(a: f64, b: f64, t: f64) -> f64 {
+    a + (b - a) * t
+}
+
+/// Relative difference |a-b| / max(|a|,|b|,eps) — tolerance checks between
+/// the rust energy model and python-exported goldens.
+pub fn rel_diff(a: f64, b: f64) -> f64 {
+    (a - b).abs() / a.abs().max(b.abs()).max(1e-30)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accum_matches_naive() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut a = Accum::new();
+        for &x in &xs {
+            a.push(x);
+        }
+        assert_eq!(a.count(), 8);
+        assert!((a.mean() - 5.0).abs() < 1e-12);
+        // sample variance of this classic set is 32/7
+        assert!((a.variance() - 32.0 / 7.0).abs() < 1e-12);
+        assert_eq!(a.min(), 2.0);
+        assert_eq!(a.max(), 9.0);
+    }
+
+    #[test]
+    fn percentile_basics() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 100.0);
+        assert!((percentile(&xs, 0.5) - 50.0).abs() <= 1.0);
+        assert!(percentile(&[], 0.5).is_nan());
+    }
+
+    #[test]
+    fn summary_on_constant_stream() {
+        let s = summarize(&[3.0; 10]);
+        assert_eq!(s.count, 10);
+        assert_eq!(s.p99, 3.0);
+        assert_eq!(s.mean, 3.0);
+    }
+
+    #[test]
+    fn geomean_of_powers() {
+        assert!((geomean(&[1.0, 4.0, 16.0]) - 4.0).abs() < 1e-12);
+        assert!(geomean(&[]).is_nan());
+    }
+
+    #[test]
+    fn rel_diff_symmetric() {
+        assert!(rel_diff(100.0, 110.0) - rel_diff(110.0, 100.0) < 1e-15);
+        assert_eq!(rel_diff(0.0, 0.0), 0.0);
+    }
+}

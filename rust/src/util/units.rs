@@ -1,0 +1,90 @@
+//! Unit conventions and pretty-printers.
+//!
+//! Internal convention (documented once, asserted everywhere):
+//! - energy: **picojoules (pJ)** — component energies from the literature
+//!   are naturally pJ/access at these nodes;
+//! - time: **nanoseconds (ns)** for latency, seconds for rates;
+//! - power: **microwatts (µW)** for the Fig-5 memory-power axis;
+//! - area: **µm²** internally, reported in mm²;
+//! - capacity: bytes.
+
+pub const PJ_PER_UJ: f64 = 1e6;
+pub const NS_PER_MS: f64 = 1e6;
+pub const NS_PER_S: f64 = 1e9;
+pub const UM2_PER_MM2: f64 = 1e6;
+
+/// pJ energy consumed at a given rate (1/s) → average power in µW.
+/// 1 pJ × 1 Hz = 1e-12 W = 1e-6 µW.
+pub fn pj_at_rate_to_uw(energy_pj: f64, rate_hz: f64) -> f64 {
+    energy_pj * rate_hz * 1e-6
+}
+
+/// Human-readable engineering notation, e.g. `format_si(3.2e-5, "J")`.
+pub fn format_si(value: f64, unit: &str) -> String {
+    if value == 0.0 || !value.is_finite() {
+        return format!("{value} {unit}");
+    }
+    const PREFIXES: &[(f64, &str)] = &[
+        (1e12, "T"),
+        (1e9, "G"),
+        (1e6, "M"),
+        (1e3, "k"),
+        (1.0, ""),
+        (1e-3, "m"),
+        (1e-6, "µ"),
+        (1e-9, "n"),
+        (1e-12, "p"),
+        (1e-15, "f"),
+    ];
+    let mag = value.abs();
+    for &(scale, prefix) in PREFIXES {
+        if mag >= scale {
+            return format!("{:.3} {}{}", value / scale, prefix, unit);
+        }
+    }
+    format!("{value:.3e} {unit}")
+}
+
+/// Bytes with binary prefix.
+pub fn format_bytes(bytes: usize) -> String {
+    const UNITS: &[&str] = &["B", "KiB", "MiB", "GiB"];
+    let mut v = bytes as f64;
+    let mut i = 0;
+    while v >= 1024.0 && i + 1 < UNITS.len() {
+        v /= 1024.0;
+        i += 1;
+    }
+    if i == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.2} {}", UNITS[i])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn power_conversion() {
+        // 100 pJ per inference at 10 IPS = 1e-9 W = 1e-3 µW
+        assert!((pj_at_rate_to_uw(100.0, 10.0) - 1e-3).abs() < 1e-18);
+        // 1e6 pJ (1 µJ) at 1000 Hz = 1 mW = 1000 µW
+        assert!((pj_at_rate_to_uw(1e6, 1000.0) - 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn si_formatting() {
+        assert_eq!(format_si(3200.0, "J"), "3.200 kJ");
+        assert_eq!(format_si(0.0032, "W"), "3.200 mW");
+        assert_eq!(format_si(4.2e-12, "J"), "4.200 pJ");
+        assert_eq!(format_si(0.0, "J"), "0 J");
+    }
+
+    #[test]
+    fn byte_formatting() {
+        assert_eq!(format_bytes(512), "512 B");
+        assert_eq!(format_bytes(12 * 1024), "12.00 KiB");
+        assert_eq!(format_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+}

@@ -1,0 +1,259 @@
+//! Shape-propagating network builder: each method appends a layer whose
+//! input shape is the previous layer's output shape, so architectures read
+//! like the papers' block diagrams (Fig 1(d), 1(e)).
+
+use super::{Layer, Network, Op};
+
+pub struct NetBuilder {
+    name: String,
+    layers: Vec<Layer>,
+    input: (usize, usize, usize),
+    /// Current tensor shape (c, h, w).
+    cur: (usize, usize, usize),
+    /// Saved shapes for skip connections (UNet) keyed by tag.
+    saved: Vec<(String, (usize, usize, usize))>,
+}
+
+impl NetBuilder {
+    pub fn new(name: &str, c: usize, h: usize, w: usize) -> Self {
+        NetBuilder {
+            name: name.to_string(),
+            layers: Vec::new(),
+            input: (c, h, w),
+            cur: (c, h, w),
+            saved: Vec::new(),
+        }
+    }
+
+    pub fn shape(&self) -> (usize, usize, usize) {
+        self.cur
+    }
+
+    fn push(&mut self, name: String, op: Op, out: (usize, usize, usize)) -> &mut Self {
+        let (in_c, in_h, in_w) = self.cur;
+        self.layers.push(Layer {
+            name,
+            op,
+            in_c,
+            in_h,
+            in_w,
+            out_c: out.0,
+            out_h: out.1,
+            out_w: out.2,
+        });
+        self.cur = out;
+        self
+    }
+
+    fn auto_name(&self, kind: &str) -> String {
+        format!("{kind}{}", self.layers.len())
+    }
+
+    /// Standard convolution, 'same' padding for odd k when stride divides.
+    pub fn conv(&mut self, out_c: usize, k: usize, stride: usize) -> &mut Self {
+        let pad = k / 2;
+        let (c, h, w) = self.cur;
+        let _ = c;
+        let oh = (h + 2 * pad - k) / stride + 1;
+        let ow = (w + 2 * pad - k) / stride + 1;
+        let name = self.auto_name("conv");
+        self.push(
+            name,
+            Op::Conv2d {
+                kh: k,
+                kw: k,
+                stride,
+                pad,
+                groups: 1,
+            },
+            (out_c, oh, ow),
+        )
+    }
+
+    /// Pointwise (1x1) convolution.
+    pub fn pw(&mut self, out_c: usize) -> &mut Self {
+        self.conv(out_c, 1, 1)
+    }
+
+    /// Depthwise 3x3 convolution.
+    pub fn dw(&mut self, k: usize, stride: usize) -> &mut Self {
+        let pad = k / 2;
+        let (c, h, w) = self.cur;
+        let oh = (h + 2 * pad - k) / stride + 1;
+        let ow = (w + 2 * pad - k) / stride + 1;
+        let name = self.auto_name("dw");
+        self.push(
+            name,
+            Op::Conv2d {
+                kh: k,
+                kw: k,
+                stride,
+                pad,
+                groups: c,
+            },
+            (c, oh, ow),
+        )
+    }
+
+    /// MobileNetV2 inverted residual bottleneck (Fig 1(c)):
+    /// 1x1 expand (×`expand`), 3x3 depthwise (stride s), 1x1 project to
+    /// `out_c`; residual add when stride==1 and in_c==out_c.
+    pub fn irb(&mut self, out_c: usize, expand: usize, stride: usize) -> &mut Self {
+        let (in_c, _, _) = self.cur;
+        let residual = stride == 1 && in_c == out_c;
+        if expand > 1 {
+            self.pw(in_c * expand);
+        }
+        self.dw(3, stride);
+        self.pw(out_c);
+        if residual {
+            let (c, h, w) = self.cur;
+            let name = self.auto_name("add");
+            self.push(name, Op::Add, (c, h, w));
+        }
+        self
+    }
+
+    pub fn maxpool(&mut self, k: usize, stride: usize) -> &mut Self {
+        let (c, h, w) = self.cur;
+        let name = self.auto_name("maxpool");
+        self.push(
+            name,
+            Op::MaxPool { k, stride },
+            (c, (h - k) / stride + 1, (w - k) / stride + 1),
+        )
+    }
+
+    pub fn global_avgpool(&mut self) -> &mut Self {
+        let (c, h, _w) = self.cur;
+        let name = self.auto_name("gap");
+        let k = h;
+        self.push(name, Op::AvgPool { k, stride: k }, (c, 1, 1))
+    }
+
+    pub fn upsample(&mut self, factor: usize) -> &mut Self {
+        let (c, h, w) = self.cur;
+        let name = self.auto_name("up");
+        self.push(name, Op::Upsample { factor }, (c, h * factor, w * factor))
+    }
+
+    /// Record the current shape as a skip-connection source.
+    pub fn save_skip(&mut self, tag: &str) -> &mut Self {
+        self.saved.push((tag.to_string(), self.cur));
+        self
+    }
+
+    /// Concatenate the saved skip tensor onto the current one (UNet decoder).
+    pub fn concat_skip(&mut self, tag: &str) -> &mut Self {
+        let (_, (sc, sh, sw)) = self
+            .saved
+            .iter()
+            .rev()
+            .find(|(t, _)| t == tag)
+            .unwrap_or_else(|| panic!("no saved skip '{tag}'"))
+            .clone();
+        let (c, h, w) = self.cur;
+        assert_eq!((sh, sw), (h, w), "skip '{tag}' spatial dims must match");
+        // Model concat as a layer moving (c + sc) elements.
+        self.cur = (c + sc, h, w);
+        let name = self.auto_name("concat");
+        self.layers.push(Layer {
+            name,
+            op: Op::Concat,
+            in_c: c + sc,
+            in_h: h,
+            in_w: w,
+            out_c: c + sc,
+            out_h: h,
+            out_w: w,
+        });
+        self
+    }
+
+    pub fn linear(&mut self, out: usize) -> &mut Self {
+        let (c, h, w) = self.cur;
+        let in_feat = c * h * w;
+        let name = self.auto_name("fc");
+        let (in_c, in_h, in_w) = (in_feat, 1, 1);
+        self.layers.push(Layer {
+            name,
+            op: Op::Linear,
+            in_c,
+            in_h,
+            in_w,
+            out_c: out,
+            out_h: 1,
+            out_w: 1,
+        });
+        self.cur = (out, 1, 1);
+        self
+    }
+
+    pub fn build(&self) -> Network {
+        let net = Network {
+            name: self.name.clone(),
+            layers: self.layers.clone(),
+            input: self.input,
+        };
+        net.validate().expect("builder produced invalid network");
+        net
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_propagate() {
+        let mut b = NetBuilder::new("t", 3, 64, 64);
+        b.conv(16, 3, 2).irb(16, 1, 1).irb(24, 6, 2);
+        let net = b.build();
+        assert_eq!(net.input, (3, 64, 64));
+        // conv stride2: 32x32; irb stride1 keeps; irb stride2: 16x16
+        let last = net.layers.last().unwrap();
+        assert_eq!((last.out_c, last.out_h, last.out_w), (24, 16, 16));
+    }
+
+    #[test]
+    fn irb_has_residual_only_when_shapes_match() {
+        let mut b = NetBuilder::new("t", 3, 32, 32);
+        b.conv(16, 3, 1).irb(16, 6, 1); // in_c==out_c, stride1 → residual
+        let net = b.build();
+        assert!(net.layers.iter().any(|l| matches!(l.op, Op::Add)));
+
+        let mut b = NetBuilder::new("t", 3, 32, 32);
+        b.conv(16, 3, 1).irb(24, 6, 1); // channel change → no residual
+        let net = b.build();
+        assert!(!net.layers.iter().any(|l| matches!(l.op, Op::Add)));
+    }
+
+    #[test]
+    fn unet_skip_concat() {
+        let mut b = NetBuilder::new("u", 1, 32, 32);
+        b.conv(8, 3, 1).save_skip("s0").conv(16, 3, 2).upsample(2).concat_skip("s0").pw(8);
+        let net = b.build();
+        let cat = net.layers.iter().find(|l| matches!(l.op, Op::Concat)).unwrap();
+        assert_eq!(cat.in_c, 16 + 8);
+        let last = net.layers.last().unwrap();
+        assert_eq!(last.in_c, 24);
+        assert_eq!(last.out_c, 8);
+    }
+
+    #[test]
+    fn linear_flattens() {
+        let mut b = NetBuilder::new("t", 3, 8, 8);
+        b.conv(4, 3, 1).linear(10);
+        let net = b.build();
+        let fc = net.layers.last().unwrap();
+        assert_eq!(fc.in_c, 4 * 8 * 8);
+        assert_eq!(fc.out_c, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "no saved skip")]
+    fn missing_skip_panics() {
+        let mut b = NetBuilder::new("t", 1, 8, 8);
+        b.conv(4, 3, 1).concat_skip("nope");
+    }
+}

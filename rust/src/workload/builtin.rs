@@ -1,0 +1,155 @@
+//! Built-in workload definitions mirroring the paper's two networks
+//! (§2.2, Fig 1(d)/(e)). The python compile path
+//! (`python/compile/model.py`) implements the *same* architectures in JAX;
+//! `make artifacts` exports their layer lists to
+//! `artifacts/<net>.workload.json` and an integration test cross-checks the
+//! two (total MACs / weights must agree exactly).
+//!
+//! Sizing notes:
+//! - **DetNet** — MobileNetV2-style feature extractor (width-reduced for the
+//!   edge budget; the paper reports the optimized weight-buffer requirement
+//!   at ~12 kB, which here corresponds to the largest single-layer weight
+//!   tensor at INT8) + three regression heads (center, radius, L/R label)
+//!   over a 1×128×128 ego-view frame.
+//! - **EDSNet** — UNet decoder over a MobileNetV2 encoder on a 1×192×320
+//!   eye crop (OpenEDS aspect), ~70× the MACs of DetNet, matching the
+//!   paper's latency ratio between the two workloads (Table 3).
+
+use super::builder::NetBuilder;
+use super::Network;
+
+/// DetNet: hand detection (bounding-circle regression + handedness label).
+pub fn detnet() -> Network {
+    let mut b = NetBuilder::new("detnet", 1, 128, 128);
+    b.conv(8, 3, 2); // 64x64 stem
+    b.irb(8, 1, 1);
+    b.irb(16, 6, 2); // 32x32
+    b.irb(16, 6, 1);
+    b.irb(24, 6, 2); // 16x16
+    b.irb(24, 6, 1);
+    b.irb(40, 6, 2); // 8x8
+    b.irb(40, 6, 1);
+    b.irb(80, 4, 2); // 4x4 (expand 4 keeps the projection ≈12 kB INT8)
+    b.pw(128);
+    b.global_avgpool();
+    // Three regression "networks" (Fig 1(d)): shared trunk then heads.
+    // Modeled sequentially for the mapper: fc trunk + center(2 hands × x,y)
+    // + radius(2) + label(2).
+    b.linear(64);
+    b.linear(4 + 2 + 2);
+    b.build()
+}
+
+/// EDSNet: eye segmentation (4-class mask: background/sclera/iris/pupil).
+pub fn edsnet() -> Network {
+    let mut b = NetBuilder::new("edsnet", 1, 192, 320);
+    // --- MobileNetV2 encoder ---
+    b.conv(16, 3, 2); // 96x160
+    b.save_skip("s1");
+    b.irb(24, 6, 2); // 48x80
+    b.irb(24, 6, 1);
+    b.save_skip("s2");
+    b.irb(32, 6, 2); // 24x40
+    b.irb(32, 6, 1);
+    b.save_skip("s3");
+    b.irb(64, 6, 2); // 12x20
+    b.irb(64, 6, 1);
+    b.irb(96, 6, 1);
+    // --- UNet decoder (two 3×3 convs per stage, as in [12]) ---
+    b.upsample(2); // 24x40
+    b.concat_skip("s3");
+    b.pw(128);
+    b.conv(128, 3, 1);
+    b.upsample(2); // 48x80
+    b.concat_skip("s2");
+    b.pw(64);
+    b.conv(64, 3, 1);
+    b.conv(64, 3, 1);
+    b.upsample(2); // 96x160
+    b.concat_skip("s1");
+    b.pw(32);
+    b.conv(32, 3, 1);
+    b.conv(32, 3, 1);
+    b.conv(16, 3, 1);
+    b.upsample(2); // 192x320
+    b.conv(8, 3, 1);
+    b.pw(4);
+    b.build()
+}
+
+/// Tiny CNN used by unit tests and the quickstart example (fast to map).
+pub fn tiny_cnn() -> Network {
+    let mut b = NetBuilder::new("tiny_cnn", 3, 32, 32);
+    b.conv(8, 3, 1);
+    b.irb(8, 2, 1);
+    b.conv(16, 3, 2);
+    b.global_avgpool();
+    b.linear(10);
+    b.build()
+}
+
+/// Resolve a workload by name, preferring the python-exported JSON under
+/// `artifacts/` (so the serving model and the analytical model agree), and
+/// falling back to the built-in definition.
+pub fn by_name(name: &str) -> crate::Result<Network> {
+    let artifact = std::path::PathBuf::from(format!("artifacts/{name}.workload.json"));
+    if artifact.exists() {
+        return Network::load(&artifact);
+    }
+    match name {
+        "detnet" => Ok(detnet()),
+        "edsnet" => Ok(edsnet()),
+        "tiny_cnn" => Ok(tiny_cnn()),
+        other => anyhow::bail!("unknown workload '{other}' (and no artifacts/{other}.workload.json)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detnet_is_valid_and_edge_sized() {
+        let net = detnet();
+        net.validate().unwrap();
+        let macs = net.true_macs();
+        // Edge-scale: tens of millions of MACs, not billions.
+        assert!(macs > 5_000_000, "detnet too small: {macs}");
+        assert!(macs < 100_000_000, "detnet too big: {macs}");
+        // Paper anchor: optimized weight-buffer requirement ≈ 12 kB (largest
+        // single-layer weight tensor at INT8).
+        let max_layer_weights = net.layers.iter().map(|l| l.weights()).max().unwrap();
+        assert!(
+            (8_000..20_000).contains(&max_layer_weights),
+            "max layer weights {max_layer_weights} out of the ~12kB band"
+        );
+    }
+
+    #[test]
+    fn edsnet_is_valid_and_much_larger() {
+        let det = detnet();
+        let eds = edsnet();
+        eds.validate().unwrap();
+        let ratio = eds.true_macs() as f64 / det.true_macs() as f64;
+        // Table 3: EDSNet latency / DetNet latency ≈ 140x on Simba; MAC
+        // ratio should be the same order (latency also depends on mapping).
+        assert!(ratio > 20.0, "EDSNet/DetNet MAC ratio only {ratio:.1}");
+        assert!(ratio < 500.0, "EDSNet/DetNet MAC ratio {ratio:.1} too extreme");
+    }
+
+    #[test]
+    fn edsnet_output_is_4class_fullres() {
+        let eds = edsnet();
+        let last = eds.layers.last().unwrap();
+        assert_eq!(last.out_c, 4);
+        assert_eq!((last.out_h, last.out_w), (192, 320));
+    }
+
+    #[test]
+    fn by_name_resolves_builtins() {
+        assert!(by_name("detnet").is_ok());
+        assert!(by_name("edsnet").is_ok());
+        assert!(by_name("tiny_cnn").is_ok());
+        assert!(by_name("nope").is_err());
+    }
+}

@@ -1,0 +1,470 @@
+//! Neural-network workload IR.
+//!
+//! The paper maps two networks (DetNet for hand detection, EDSNet for eye
+//! segmentation) onto accelerator dataflows via Timeloop. This module is the
+//! layer-level intermediate representation that our Timeloop-lite mapper
+//! ([`crate::mapping`]) consumes: a flat list of shape-resolved layers with
+//! MAC / parameter / activation accounting.
+//!
+//! Workloads are either built programmatically ([`builder::NetBuilder`],
+//! [`builtin`]) or loaded from the JSON exported by the python compile path
+//! (`python -m compile.aot` writes `artifacts/<net>.workload.json`), so the
+//! rust analytical models and the JAX serving models stay in lock-step.
+
+pub mod builder;
+pub mod builtin;
+
+use crate::util::json::Json;
+
+/// Operator kind. Convolutions carry their full geometry; `groups` expresses
+/// depthwise convs (`groups == in_c`), the key ingredient of the paper's
+/// inverted-residual-bottleneck analysis (§2.2).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    Conv2d {
+        kh: usize,
+        kw: usize,
+        stride: usize,
+        pad: usize,
+        groups: usize,
+    },
+    /// Fully-connected layer (DetNet regression heads).
+    Linear,
+    /// Average pooling (also used for global pooling with k == in_h/in_w).
+    AvgPool { k: usize, stride: usize },
+    MaxPool { k: usize, stride: usize },
+    /// Nearest-neighbour upsample (EDSNet/UNet decoder).
+    Upsample { factor: usize },
+    /// Elementwise residual add (MobileNetV2 skip connections).
+    Add,
+    /// Channel concatenation (UNet skip connections). `in_c` is the total.
+    Concat,
+}
+
+impl Op {
+    pub fn kind_str(&self) -> &'static str {
+        match self {
+            Op::Conv2d { groups, .. } if *groups > 1 => "dwconv",
+            Op::Conv2d { .. } => "conv",
+            Op::Linear => "linear",
+            Op::AvgPool { .. } => "avgpool",
+            Op::MaxPool { .. } => "maxpool",
+            Op::Upsample { .. } => "upsample",
+            Op::Add => "add",
+            Op::Concat => "concat",
+        }
+    }
+}
+
+/// A shape-resolved layer. All dims are element counts (not bytes).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Layer {
+    pub name: String,
+    pub op: Op,
+    pub in_c: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub out_c: usize,
+    pub out_h: usize,
+    pub out_w: usize,
+}
+
+impl Layer {
+    /// Multiply-accumulate count (the unit the energy model charges compute
+    /// for). Non-MAC ops (pool/add/upsample) are charged as ALU ops by the
+    /// mapper at a fraction of a MAC; here they report their elementwise op
+    /// count.
+    pub fn macs(&self) -> u64 {
+        let out = (self.out_c * self.out_h * self.out_w) as u64;
+        match &self.op {
+            Op::Conv2d { kh, kw, groups, .. } => {
+                let cpg = self.in_c / groups; // channels per group
+                out * (cpg * kh * kw) as u64
+            }
+            Op::Linear => (self.in_c * self.out_c) as u64,
+            Op::AvgPool { k, .. } | Op::MaxPool { k, .. } => out * (*k * *k) as u64,
+            Op::Upsample { .. } | Op::Add | Op::Concat => out,
+        }
+    }
+
+    /// True multiply-accumulates (conv/linear only) — used for roofline and
+    /// utilization; pooling/adds don't occupy the MAC array.
+    pub fn true_macs(&self) -> u64 {
+        match self.op {
+            Op::Conv2d { .. } | Op::Linear => self.macs(),
+            _ => 0,
+        }
+    }
+
+    /// Weight parameter count (elements).
+    pub fn weights(&self) -> u64 {
+        match &self.op {
+            Op::Conv2d { kh, kw, groups, .. } => {
+                ((self.in_c / groups) * kh * kw * self.out_c) as u64
+            }
+            Op::Linear => (self.in_c * self.out_c) as u64,
+            _ => 0,
+        }
+    }
+
+    pub fn input_elems(&self) -> u64 {
+        (self.in_c * self.in_h * self.in_w) as u64
+    }
+
+    pub fn output_elems(&self) -> u64 {
+        (self.out_c * self.out_h * self.out_w) as u64
+    }
+
+    pub fn is_depthwise(&self) -> bool {
+        matches!(self.op, Op::Conv2d { groups, .. } if groups > 1)
+    }
+
+    pub fn is_compute(&self) -> bool {
+        matches!(self.op, Op::Conv2d { .. } | Op::Linear)
+    }
+
+    // ---- JSON (interchange with python/compile/aot.py) --------------------
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("name", Json::str(self.name.clone())),
+            ("kind", Json::str(self.op.kind_str())),
+            ("in_c", Json::num(self.in_c as f64)),
+            ("in_h", Json::num(self.in_h as f64)),
+            ("in_w", Json::num(self.in_w as f64)),
+            ("out_c", Json::num(self.out_c as f64)),
+            ("out_h", Json::num(self.out_h as f64)),
+            ("out_w", Json::num(self.out_w as f64)),
+        ];
+        match &self.op {
+            Op::Conv2d {
+                kh,
+                kw,
+                stride,
+                pad,
+                groups,
+            } => {
+                pairs.push(("kh", Json::num(*kh as f64)));
+                pairs.push(("kw", Json::num(*kw as f64)));
+                pairs.push(("stride", Json::num(*stride as f64)));
+                pairs.push(("pad", Json::num(*pad as f64)));
+                pairs.push(("groups", Json::num(*groups as f64)));
+            }
+            Op::AvgPool { k, stride } | Op::MaxPool { k, stride } => {
+                pairs.push(("k", Json::num(*k as f64)));
+                pairs.push(("stride", Json::num(*stride as f64)));
+            }
+            Op::Upsample { factor } => pairs.push(("factor", Json::num(*factor as f64))),
+            _ => {}
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Layer> {
+        let kind = j.req_str("kind")?;
+        let (in_c, in_h, in_w) = (j.req_usize("in_c")?, j.req_usize("in_h")?, j.req_usize("in_w")?);
+        let (out_c, out_h, out_w) =
+            (j.req_usize("out_c")?, j.req_usize("out_h")?, j.req_usize("out_w")?);
+        let op = match kind {
+            "conv" | "dwconv" => Op::Conv2d {
+                kh: j.req_usize("kh")?,
+                kw: j.req_usize("kw")?,
+                stride: j.req_usize("stride")?,
+                pad: j.req_usize("pad")?,
+                groups: j.get("groups").as_usize().unwrap_or(1),
+            },
+            "linear" => Op::Linear,
+            "avgpool" => Op::AvgPool {
+                k: j.req_usize("k")?,
+                stride: j.req_usize("stride")?,
+            },
+            "maxpool" => Op::MaxPool {
+                k: j.req_usize("k")?,
+                stride: j.req_usize("stride")?,
+            },
+            "upsample" => Op::Upsample {
+                factor: j.req_usize("factor")?,
+            },
+            "add" => Op::Add,
+            "concat" => Op::Concat,
+            other => anyhow::bail!("unknown layer kind '{other}'"),
+        };
+        Ok(Layer {
+            name: j.req_str("name")?.to_string(),
+            op,
+            in_c,
+            in_h,
+            in_w,
+            out_c,
+            out_h,
+            out_w,
+        })
+    }
+}
+
+/// A full network workload: ordered layers plus bookkeeping.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub name: String,
+    pub layers: Vec<Layer>,
+    /// Input tensor (c, h, w).
+    pub input: (usize, usize, usize),
+}
+
+impl Network {
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+    pub fn true_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.true_macs()).sum()
+    }
+    pub fn total_weights(&self) -> u64 {
+        self.layers.iter().map(|l| l.weights()).sum()
+    }
+    /// Weight storage in bytes at the given per-element bit width.
+    pub fn weight_bytes(&self, bits: u32) -> u64 {
+        (self.total_weights() * bits as u64).div_ceil(8)
+    }
+    /// Largest single-layer activation working set (in+out), the sizing
+    /// anchor for the global activation buffer (paper removes DRAM and sizes
+    /// the GLB "as per workload requirement", Fig 2(d)).
+    pub fn peak_activation_elems(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| l.input_elems() + l.output_elems())
+            .max()
+            .unwrap_or(0)
+    }
+    pub fn peak_activation_bytes(&self, bits: u32) -> u64 {
+        (self.peak_activation_elems() * bits as u64).div_ceil(8)
+    }
+
+    pub fn compute_layers(&self) -> impl Iterator<Item = &Layer> {
+        self.layers.iter().filter(|l| l.is_compute())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            (
+                "input",
+                Json::arr([
+                    Json::num(self.input.0 as f64),
+                    Json::num(self.input.1 as f64),
+                    Json::num(self.input.2 as f64),
+                ]),
+            ),
+            (
+                "layers",
+                Json::Arr(self.layers.iter().map(|l| l.to_json()).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Network> {
+        let input = j.req("input")?;
+        let arr = input
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("input must be [c,h,w]"))?;
+        anyhow::ensure!(arr.len() == 3, "input must be [c,h,w]");
+        let layers = j
+            .req("layers")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("layers must be an array"))?
+            .iter()
+            .map(Layer::from_json)
+            .collect::<crate::Result<Vec<_>>>()?;
+        let net = Network {
+            name: j.req_str("name")?.to_string(),
+            layers,
+            input: (
+                arr[0].as_usize().unwrap_or(0),
+                arr[1].as_usize().unwrap_or(0),
+                arr[2].as_usize().unwrap_or(0),
+            ),
+        };
+        net.validate()?;
+        Ok(net)
+    }
+
+    pub fn load(path: &std::path::Path) -> crate::Result<Network> {
+        Network::from_json(&Json::parse_file(path)?)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> crate::Result<()> {
+        std::fs::write(path, self.to_json().to_pretty())?;
+        Ok(())
+    }
+
+    /// Shape-consistency validation: every layer's geometry must be
+    /// self-consistent (conv output dims match stride/pad arithmetic,
+    /// depthwise groups divide channels, ...).
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(!self.layers.is_empty(), "network '{}' has no layers", self.name);
+        for l in &self.layers {
+            anyhow::ensure!(
+                l.in_c > 0 && l.in_h > 0 && l.in_w > 0 && l.out_c > 0 && l.out_h > 0 && l.out_w > 0,
+                "layer '{}' has zero-sized dims",
+                l.name
+            );
+            match &l.op {
+                Op::Conv2d {
+                    kh,
+                    kw,
+                    stride,
+                    pad,
+                    groups,
+                } => {
+                    anyhow::ensure!(
+                        l.in_c % groups == 0 && l.out_c % groups == 0,
+                        "layer '{}': groups {} must divide in_c {} and out_c {}",
+                        l.name,
+                        groups,
+                        l.in_c,
+                        l.out_c
+                    );
+                    let eh = (l.in_h + 2 * pad - kh) / stride + 1;
+                    let ew = (l.in_w + 2 * pad - kw) / stride + 1;
+                    anyhow::ensure!(
+                        eh == l.out_h && ew == l.out_w,
+                        "layer '{}': expected out {}x{}, declared {}x{}",
+                        l.name,
+                        eh,
+                        ew,
+                        l.out_h,
+                        l.out_w
+                    );
+                }
+                Op::Upsample { factor } => {
+                    anyhow::ensure!(
+                        l.out_h == l.in_h * factor && l.out_w == l.in_w * factor,
+                        "layer '{}': bad upsample dims",
+                        l.name
+                    );
+                }
+                Op::Add => {
+                    anyhow::ensure!(
+                        l.in_c == l.out_c && l.in_h == l.out_h && l.in_w == l.out_w,
+                        "layer '{}': add must preserve shape",
+                        l.name
+                    );
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv(name: &str, in_c: usize, out_c: usize, hw: usize, k: usize, stride: usize) -> Layer {
+        let out_hw = (hw + 2 * (k / 2) - k) / stride + 1;
+        Layer {
+            name: name.into(),
+            op: Op::Conv2d {
+                kh: k,
+                kw: k,
+                stride,
+                pad: k / 2,
+                groups: 1,
+            },
+            in_c,
+            in_h: hw,
+            in_w: hw,
+            out_c,
+            out_h: out_hw,
+            out_w: out_hw,
+        }
+    }
+
+    #[test]
+    fn conv_macs_and_weights() {
+        // 3x3 conv, 8->16ch, 32x32 input, stride 1: out 32x32x16
+        let l = conv("c", 8, 16, 32, 3, 1);
+        assert_eq!(l.out_h, 32);
+        assert_eq!(l.macs(), 16 * 32 * 32 * 8 * 9);
+        assert_eq!(l.weights(), 8 * 9 * 16);
+        assert_eq!(l.input_elems(), 8 * 32 * 32);
+    }
+
+    #[test]
+    fn depthwise_macs() {
+        let l = Layer {
+            name: "dw".into(),
+            op: Op::Conv2d {
+                kh: 3,
+                kw: 3,
+                stride: 1,
+                pad: 1,
+                groups: 16,
+            },
+            in_c: 16,
+            in_h: 10,
+            in_w: 10,
+            out_c: 16,
+            out_h: 10,
+            out_w: 10,
+        };
+        assert!(l.is_depthwise());
+        assert_eq!(l.macs(), 16 * 100 * 9); // one input channel per output
+        assert_eq!(l.weights(), 9 * 16);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let net = Network {
+            name: "tiny".into(),
+            input: (3, 32, 32),
+            layers: vec![conv("c1", 3, 8, 32, 3, 2), conv("c2", 8, 16, 16, 3, 1)],
+        };
+        let j = net.to_json();
+        let net2 = Network::from_json(&j).unwrap();
+        assert_eq!(net.layers, net2.layers);
+        assert_eq!(net.total_macs(), net2.total_macs());
+    }
+
+    #[test]
+    fn validate_rejects_bad_shapes() {
+        let mut l = conv("c", 3, 8, 32, 3, 2);
+        l.out_h = 99; // inconsistent
+        let net = Network {
+            name: "bad".into(),
+            input: (3, 32, 32),
+            layers: vec![l],
+        };
+        assert!(net.validate().is_err());
+    }
+
+    #[test]
+    fn peak_activation() {
+        let net = Network {
+            name: "t".into(),
+            input: (3, 32, 32),
+            layers: vec![conv("c1", 3, 8, 32, 3, 1), conv("c2", 8, 4, 32, 3, 1)],
+        };
+        // c1: 3*32*32 + 8*32*32 = 11*1024; c2: 8*32*32+4*32*32 = 12*1024
+        assert_eq!(net.peak_activation_elems(), 12 * 1024);
+        assert_eq!(net.peak_activation_bytes(8), 12 * 1024);
+        assert_eq!(net.peak_activation_bytes(4), 6 * 1024);
+    }
+
+    #[test]
+    fn linear_layer_accounting() {
+        let l = Layer {
+            name: "fc".into(),
+            op: Op::Linear,
+            in_c: 128,
+            in_h: 1,
+            in_w: 1,
+            out_c: 10,
+            out_h: 1,
+            out_w: 1,
+        };
+        assert_eq!(l.macs(), 1280);
+        assert_eq!(l.weights(), 1280);
+        assert_eq!(l.true_macs(), 1280);
+    }
+}

@@ -1,0 +1,143 @@
+//! Integration calibration tests: the paper's headline quantitative claims
+//! evaluated against the full stack (workload → mapping → energy/area/power)
+//! — these are the "does the reproduction hold the paper's shape" gates,
+//! complementing the per-module unit tests.
+
+use xr_edge_dse::arch::{cpu, eyeriss, simba, MemFlavor, PeConfig};
+use xr_edge_dse::dse::{fig3d_grid, paper_sweeper};
+use xr_edge_dse::mapping::map_network;
+use xr_edge_dse::power::{power_model, savings_at, table3};
+use xr_edge_dse::tech::{Device, Node};
+use xr_edge_dse::workload::builtin;
+
+/// Abstract claim (paper §1): "significant energy benefits (≥24%) can be
+/// achieved for hand detection (IPS=10) and eye segmentation (IPS=0.1) by
+/// introducing non-volatile memory ... at 7nm while meeting minimum IPS."
+#[test]
+fn abstract_claim_energy_benefits_at_ips_min() {
+    let arch = simba(PeConfig::V2);
+    for (net_name, ips) in [("detnet", 10.0), ("edsnet", 0.1)] {
+        let net = builtin::by_name(net_name).unwrap();
+        let map = map_network(&arch, &net);
+        let sram = power_model(&arch, &map, Node::N7, MemFlavor::SramOnly, Device::VgsotMram);
+        let best = MemFlavor::ALL
+            .iter()
+            .skip(1)
+            .map(|&f| {
+                let pm = power_model(&arch, &map, Node::N7, f, Device::VgsotMram);
+                savings_at(&sram, &pm, ips)
+            })
+            .fold(f64::NEG_INFINITY, f64::max);
+        assert!(
+            best >= 0.20,
+            "{net_name}@{ips} IPS: best NVM saving {best:.2} below the paper's ≥24% band"
+        );
+        // and the design must meet IPS_min
+        let p0 = power_model(&arch, &map, Node::N7, MemFlavor::P0, Device::VgsotMram);
+        assert!(xr_edge_dse::pipeline::meets_ips(&p0, ips), "{net_name} must meet IPS_min");
+    }
+}
+
+/// Abstract claim: "substantial reduction in area (≥30%)" with MRAM (P1).
+#[test]
+fn abstract_claim_area_reduction() {
+    for arch in [simba(PeConfig::V2), eyeriss(PeConfig::V2)] {
+        let s = xr_edge_dse::area::saving_vs_sram(&arch, Node::N7, MemFlavor::P1, Device::VgsotMram);
+        assert!(s >= 0.25, "{}: P1 area saving {s:.2} below the ≥30% band", arch.name);
+    }
+}
+
+/// §1 contribution (v): P0 memory power savings ~27%, P1 ~24%-31%-class
+/// numbers for the favourable (Simba) configuration.
+#[test]
+fn intro_claim_memory_power_savings_bands() {
+    let rows = table3(
+        &[(builtin::by_name("detnet").unwrap(), 10.0)],
+        &[simba(PeConfig::V2)],
+        Node::N7,
+        Device::VgsotMram,
+    );
+    let r = &rows[0];
+    assert!(
+        (0.10..0.50).contains(&r.savings_p0),
+        "Simba DetNet P0 saving {:.2} outside the paper band (0.27)",
+        r.savings_p0
+    );
+    assert!(
+        (0.10..0.60).contains(&r.savings_p1),
+        "Simba DetNet P1 saving {:.2} outside the paper band (0.31)",
+        r.savings_p1
+    );
+}
+
+/// §3: Simba saves energy vs Eyeriss at the baseline nodes — paper: 26%
+/// (DetNet) and 33% (EDSNet). Assert Simba wins by a double-digit margin.
+#[test]
+fn simba_beats_eyeriss_at_baseline_nodes() {
+    for net_name in ["detnet", "edsnet"] {
+        let net = builtin::by_name(net_name).unwrap();
+        let e = |arch: &xr_edge_dse::arch::Arch| {
+            let map = map_network(arch, &net);
+            xr_edge_dse::energy::estimate(arch, &map, Node::N40, MemFlavor::SramOnly, Device::SttMram)
+                .total_pj()
+        };
+        let saving = 1.0 - e(&simba(PeConfig::V2)) / e(&eyeriss(PeConfig::V2));
+        assert!(
+            saving > 0.10,
+            "{net_name}: Simba-vs-Eyeriss saving {saving:.2} below double digits"
+        );
+    }
+}
+
+/// Full Fig-3(d) grid sanity: every point has positive finite energy,
+/// latency and area; utilization ≤ 1.
+#[test]
+fn fig3d_grid_is_physical() {
+    let s = paper_sweeper().unwrap();
+    for p in fig3d_grid(&s) {
+        assert!(p.energy.total_pj() > 0.0 && p.energy.total_pj().is_finite(), "{p:?}");
+        assert!(p.latency_ns > 0.0 && p.latency_ns.is_finite());
+        assert!(p.area_mm2 > 0.0 && p.area_mm2 < 100.0);
+        assert!(p.utilization > 0.0 && p.utilization <= 1.0);
+        assert!(p.power.p_mem_uw(1.0) > 0.0);
+    }
+}
+
+/// The CPU is orders of magnitude slower than the accelerators but not
+/// energy-catastrophic (Fig 2(f) structure).
+#[test]
+fn cpu_latency_vs_energy_tradeoff() {
+    let net = builtin::by_name("detnet").unwrap();
+    let c = cpu();
+    let s = simba(PeConfig::V2);
+    let cm = map_network(&c, &net);
+    let sm = map_network(&s, &net);
+    let lat_cpu = xr_edge_dse::energy::latency_ns(&c, &cm, Node::N7, MemFlavor::SramOnly, Device::VgsotMram);
+    let lat_simba = xr_edge_dse::energy::latency_ns(&s, &sm, Node::N7, MemFlavor::SramOnly, Device::VgsotMram);
+    assert!(lat_cpu / lat_simba > 10.0, "systolic latency advantage");
+    let e_cpu = xr_edge_dse::energy::estimate(&c, &cm, Node::N7, MemFlavor::SramOnly, Device::VgsotMram).total_pj();
+    let e_simba = xr_edge_dse::energy::estimate(&s, &sm, Node::N7, MemFlavor::SramOnly, Device::VgsotMram).total_pj();
+    // paper: "energy costs increase significantly as compared to a baseline
+    // CPU" for the systolic parts — i.e. the CPU is NOT worse on energy by
+    // the same factor it is on latency.
+    assert!(e_cpu / e_simba < lat_cpu / lat_simba, "energy gap must be far smaller than latency gap");
+}
+
+/// Latency claim (§5): P1 incurs a bounded latency penalty vs P0 (paper
+/// ≈20%; accept <2.5× given our coarser multi-cycle model) and both still
+/// meet the application IPS floors.
+#[test]
+fn p1_latency_penalty_bounded() {
+    let rows = table3(
+        &[(builtin::by_name("detnet").unwrap(), 10.0), (builtin::by_name("edsnet").unwrap(), 0.1)],
+        &[simba(PeConfig::V2), eyeriss(PeConfig::V2)],
+        Node::N7,
+        Device::VgsotMram,
+    );
+    for r in &rows {
+        let pen = r.latency_p1_ms / r.latency_p0_ms;
+        assert!((1.0..2.5).contains(&pen), "{}/{}: P1 penalty {pen}", r.workload, r.arch);
+        let lat_s = r.latency_p1_ms * 1e-3;
+        assert!(lat_s < 1.0 / r.ips_min, "{}/{} must meet IPS_min", r.workload, r.arch);
+    }
+}

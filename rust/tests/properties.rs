@@ -1,0 +1,166 @@
+//! Property-based integration tests (testkit = proptest-lite): invariants
+//! of the mapper, energy model, power model and quantizer over randomized
+//! workloads, architectures and operating points.
+
+use xr_edge_dse::arch::{cpu, eyeriss, simba, Arch, MemFlavor, PeConfig};
+use xr_edge_dse::mapping::map_network;
+use xr_edge_dse::power::{crossover_ips, power_model};
+use xr_edge_dse::tech::{Device, Node};
+use xr_edge_dse::testkit::{check, Gen};
+use xr_edge_dse::workload::builder::NetBuilder;
+use xr_edge_dse::workload::Network;
+
+/// Random small CNN with valid shapes.
+fn random_net(g: &mut Gen) -> Network {
+    let c = g.usize_in(1, 4);
+    let hw = g.pow2(4, 6); // 16..64
+    let mut b = NetBuilder::new("rand", c, hw, hw);
+    let n_blocks = g.usize_in(1, 5);
+    b.conv(g.pow2(2, 4), 3, 1);
+    for _ in 0..n_blocks {
+        match g.usize_in(0, 4) {
+            0 => {
+                let (cc, _, _) = b.shape();
+                let _ = cc;
+                b.conv(g.pow2(2, 5), g.choose(&[1usize, 3]), g.choose(&[1usize, 2]))
+            }
+            1 => b.dw(3, 1),
+            2 => b.irb(g.pow2(2, 5), g.choose(&[1usize, 2, 4]), 1),
+            3 => b.pw(g.pow2(2, 5)),
+            _ => b.upsample(1).pw(g.pow2(2, 4)),
+        };
+    }
+    b.build()
+}
+
+fn random_arch(g: &mut Gen) -> Arch {
+    match g.usize_in(0, 3) {
+        0 => cpu(),
+        1 => eyeriss(if g.bool() { PeConfig::V1 } else { PeConfig::V2 }),
+        _ => simba(if g.bool() { PeConfig::V1 } else { PeConfig::V2 }),
+    }
+}
+
+#[test]
+fn prop_mapping_conserves_macs() {
+    check("mapping conserves MACs", 120, |g| {
+        let net = random_net(g);
+        let arch = random_arch(g);
+        let map = map_network(&arch, &net);
+        assert_eq!(map.total_macs() as u64, net.true_macs(), "{}", arch.name);
+    });
+}
+
+#[test]
+fn prop_traffic_nonnegative_and_finite() {
+    check("traffic sane", 120, |g| {
+        let net = random_net(g);
+        let arch = random_arch(g);
+        let map = map_network(&arch, &net);
+        for t in map.level_totals() {
+            assert!(t.reads >= 0.0 && t.reads.is_finite(), "{t:?}");
+            assert!(t.writes >= 0.0 && t.writes.is_finite(), "{t:?}");
+        }
+        assert!(map.total_cycles() > 0.0);
+        let u = map.utilization(&arch);
+        assert!(u > 0.0 && u <= 1.0 + 1e-9, "util {u} on {}", arch.name);
+    });
+}
+
+#[test]
+fn prop_energy_monotone_in_node_scaling() {
+    // For any random net/arch/flavor: energy at 7nm < energy at 28nm
+    // < energy at the 40/45nm baselines (dynamic scaling dominates).
+    check("energy monotone in node", 60, |g| {
+        let net = random_net(g);
+        let arch = random_arch(g);
+        let flavor = g.choose(&[MemFlavor::SramOnly, MemFlavor::P0, MemFlavor::P1]);
+        let map = map_network(&arch, &net);
+        let e = |node: Node| {
+            xr_edge_dse::energy::estimate(&arch, &map, node, flavor, xr_edge_dse::tech::paper_mram_for(node))
+                .total_pj()
+        };
+        assert!(e(Node::N7) < e(Node::N28), "{}", arch.name);
+        assert!(e(Node::N28) < e(Node::N45), "{}", arch.name);
+    });
+}
+
+#[test]
+fn prop_p1_energy_geq_sram_at_7nm() {
+    // §5: P1 costs energy per inference everywhere (VGSOT reads ≫ SRAM).
+    check("P1 >= SRAM energy @7nm", 60, |g| {
+        let net = random_net(g);
+        let arch = random_arch(g);
+        let map = map_network(&arch, &net);
+        let e = |f: MemFlavor| {
+            xr_edge_dse::energy::estimate(&arch, &map, Node::N7, f, Device::VgsotMram).total_pj()
+        };
+        assert!(e(MemFlavor::P1) >= e(MemFlavor::SramOnly) * 0.999, "{}", arch.name);
+    });
+}
+
+#[test]
+fn prop_power_curves_monotone_and_cross_once() {
+    check("P_mem monotone; crossover unique", 60, |g| {
+        let net = random_net(g);
+        let arch = random_arch(g);
+        let map = map_network(&arch, &net);
+        let device = g.choose(&[Device::SttMram, Device::SotMram, Device::VgsotMram]);
+        let flavor = g.choose(&[MemFlavor::P0, MemFlavor::P1]);
+        let sram = power_model(&arch, &map, Node::N7, MemFlavor::SramOnly, device);
+        let nvm = power_model(&arch, &map, Node::N7, flavor, device);
+        // monotone in ips
+        let mut last = -1.0;
+        for i in 0..30 {
+            let ips = 0.01 * 1.5f64.powi(i);
+            let p = nvm.p_mem_uw(ips.min(nvm.max_ips()));
+            assert!(p >= last - 1e-9);
+            last = p;
+        }
+        // crossover, when it exists, separates win/lose regions
+        if let Some(x) = crossover_ips(&sram, &nvm) {
+            if x > 1e-3 && x < nvm.max_ips() * 0.99 {
+                assert!(nvm.p_mem_uw(x * 0.5) <= sram.p_mem_uw(x * 0.5) + 1e-9);
+                assert!(nvm.p_mem_uw((x * 2.0).min(nvm.max_ips())) >= sram.p_mem_uw((x * 2.0).min(nvm.max_ips())) - 1e-9);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_workload_json_roundtrip() {
+    check("workload JSON roundtrip", 80, |g| {
+        let net = random_net(g);
+        let j = net.to_json().to_pretty();
+        let net2 = Network::from_json(&xr_edge_dse::util::json::Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(net.total_macs(), net2.total_macs());
+        assert_eq!(net.total_weights(), net2.total_weights());
+        assert_eq!(net.layers.len(), net2.layers.len());
+    });
+}
+
+#[test]
+fn prop_quant_roundtrip_error_bounded() {
+    check("quant error ≤ scale/2", 200, |g| {
+        let lo = g.f64_in(-8.0, -0.01) as f32;
+        let hi = g.f64_in(0.01, 8.0) as f32;
+        let qp = xr_edge_dse::quant::QParams::calibrate(lo, hi);
+        for _ in 0..16 {
+            let x = g.f64_in(lo as f64, hi as f64) as f32;
+            let err = (qp.fake_quant(x, 0, 255) - x).abs();
+            assert!(err <= qp.scale * 0.5 + 1e-5);
+        }
+    });
+}
+
+#[test]
+fn prop_area_decreases_with_mram_density() {
+    check("area: P1 ≤ P0 ≤ SRAM", 40, |g| {
+        let arch = if g.bool() { simba(PeConfig::V2) } else { eyeriss(PeConfig::V2) };
+        let node = g.choose(&[Node::N28, Node::N7]);
+        let device = g.choose(&[Device::SttMram, Device::VgsotMram]);
+        let a = |f: MemFlavor| xr_edge_dse::area::estimate(&arch, node, f, device).total_mm2();
+        assert!(a(MemFlavor::P1) <= a(MemFlavor::P0) + 1e-12);
+        assert!(a(MemFlavor::P0) <= a(MemFlavor::SramOnly) + 1e-12);
+    });
+}

@@ -1,0 +1,118 @@
+//! Runtime + coordinator integration tests. These require `make artifacts`
+//! (the JAX-AOT'd HLO) and skip gracefully when it hasn't been run, so
+//! `cargo test` stays green on a fresh checkout.
+
+use std::path::Path;
+use xr_edge_dse::coordinator::{sensor::Sensor, Config, Coordinator};
+use xr_edge_dse::runtime::Runtime;
+use xr_edge_dse::workload::Network;
+
+fn artifacts() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("detnet.hlo.txt").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn load_and_infer_detnet() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load(dir, "detnet").unwrap();
+    assert_eq!(exe.input_chw, (1, 128, 128));
+    assert_eq!(exe.outputs, vec!["centers", "radii", "label_logits"]);
+    let frame = vec![0.5f32; 128 * 128];
+    let out = exe.infer(&frame).unwrap();
+    assert_eq!(out.len(), 3);
+    assert_eq!(out[0].len(), 4); // centers: 2 hands × (x,y)
+    assert_eq!(out[1].len(), 2); // radii
+    assert_eq!(out[2].len(), 2); // label logits
+    // centers are sigmoid-bounded
+    for &c in &out[0] {
+        assert!((0.0..=1.0).contains(&c), "center {c}");
+    }
+    // determinism
+    let out2 = exe.infer(&frame).unwrap();
+    assert_eq!(out[0], out2[0]);
+}
+
+#[test]
+fn infer_rejects_wrong_frame_size() {
+    let Some(dir) = artifacts() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load(dir, "detnet").unwrap();
+    assert!(exe.infer(&vec![0.0; 10]).is_err());
+}
+
+#[test]
+fn missing_artifact_is_a_clean_error() {
+    let rt = Runtime::cpu().unwrap();
+    let err = match rt.load(Path::new("artifacts"), "nonexistent") {
+        Err(e) => e,
+        Ok(_) => panic!("loading a nonexistent artifact must fail"),
+    };
+    assert!(format!("{err}").contains("make artifacts"), "{err}");
+}
+
+#[test]
+fn coordinator_serves_frames_end_to_end() {
+    let Some(_) = artifacts() else { return };
+    let coord = Coordinator::start(Config {
+        artifacts_dir: "artifacts".into(),
+        model: "detnet".into(),
+        queue_depth: 8,
+    })
+    .unwrap();
+    let mut cam = Sensor::hand_camera(30.0, 7);
+    let n = 5;
+    // Submit with pacing so the queue never overflows even on slow CI.
+    let mut accepted = 0;
+    for _ in 0..n {
+        if coord.submit(cam.capture()) {
+            accepted += 1;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(30));
+    }
+    let mut results = Vec::new();
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(120);
+    while results.len() < accepted && std::time::Instant::now() < deadline {
+        if let Ok(r) = coord.results.recv_timeout(std::time::Duration::from_secs(30)) {
+            results.push(r);
+        } else {
+            break;
+        }
+    }
+    let stats = coord.shutdown().unwrap();
+    assert!(!results.is_empty(), "no inferences completed");
+    assert_eq!(stats.count(), results.len());
+    for r in &results {
+        assert_eq!(r.sensor, "hand_cam");
+        assert_eq!(r.outputs.len(), 3);
+        assert!(r.exec_latency_s > 0.0);
+        assert!(r.e2e_latency_s >= r.exec_latency_s);
+    }
+}
+
+#[test]
+fn workload_artifact_matches_rust_builtin() {
+    // The python-exported workload JSON and the rust builtin must agree on
+    // the global accounting (they drive the same Table-3 rows).
+    for name in ["detnet", "edsnet"] {
+        let path = format!("artifacts/{name}.workload.json");
+        if !Path::new(&path).exists() {
+            eprintln!("skipping {name}: run `make artifacts`");
+            continue;
+        }
+        let exported = Network::load(Path::new(&path)).unwrap();
+        let builtin = match name {
+            "detnet" => xr_edge_dse::workload::builtin::detnet(),
+            _ => xr_edge_dse::workload::builtin::edsnet(),
+        };
+        assert_eq!(exported.true_macs(), builtin.true_macs(), "{name} MACs");
+        assert_eq!(exported.total_weights(), builtin.total_weights(), "{name} weights");
+        assert_eq!(exported.layers.len(), builtin.layers.len(), "{name} layer count");
+    }
+}
