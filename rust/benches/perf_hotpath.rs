@@ -1,14 +1,17 @@
 //! Performance benches for the hot paths (EXPERIMENTS.md §Perf):
 //!   L3a — analytical DSE grid (the tool's interactive loop; target <100 ms
-//!         for the full Fig-3(d) 36-point grid);
+//!         for the full Fig-3(d) 36-point grid), measured end-to-end as
+//!         sequential vs thread-sharded engine sweeps so the unified
+//!         engine's speedup is measured, not asserted;
 //!   L3b — mapper throughput per network;
 //!   L3c — the PJRT inference hot path (model execute, batch 1) plus the
 //!         coordinator overhead around it (target: overhead <5%);
 //!   util — JSON parse of the largest workload artifact.
 
-use xr_edge_dse::arch::{simba, PeConfig};
-use xr_edge_dse::dse::{fig3d_grid, paper_sweeper};
+use xr_edge_dse::arch::{simba, MemFlavor, PeConfig};
+use xr_edge_dse::dse::{fig3d_grid, paper_sweeper, DesignSpace};
 use xr_edge_dse::mapping::map_network;
+use xr_edge_dse::tech::{paper_mram_for, Node};
 use xr_edge_dse::util::benchkit::{bench, figure_header};
 use xr_edge_dse::workload::builtin;
 
@@ -21,6 +24,32 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(fig3d_grid(&s));
     });
     assert!(grid_mean < 0.1, "DSE grid must stay interactive (<100 ms), got {grid_mean}s");
+
+    // L3a': engine sequential vs parallel on the same 36-point space —
+    // the unified-engine speedup, end-to-end (identical outputs is a
+    // tested invariant; here we time it).
+    {
+        let space = DesignSpace::new(&[Node::N28, Node::N7], &MemFlavor::ALL);
+        let engine = s.engine();
+        let (seq_mean, _, _) = bench("L3a' fig3d grid sequential (engine)", 3, 30, || {
+            std::hint::black_box(engine.grid_seq(&space, paper_mram_for));
+        });
+        let (par_mean, _, _) = bench("L3a' fig3d grid parallel   (engine)", 3, 30, || {
+            std::hint::black_box(engine.grid(&space, paper_mram_for));
+        });
+        println!(
+            "engine speedup (seq/par): {:.2}× over {} points ({} workers available)",
+            seq_mean / par_mean,
+            space.cardinality(engine),
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        );
+        // Parallel must not be pathologically slower than sequential even
+        // on a single-core box (spawn overhead bound).
+        assert!(
+            par_mean < seq_mean * 3.0 + 0.01,
+            "parallel grid unreasonably slow: {par_mean}s vs {seq_mean}s"
+        );
+    }
 
     // L3b: mapper alone on the big workload.
     let arch = simba(PeConfig::V2);

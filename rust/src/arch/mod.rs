@@ -146,13 +146,11 @@ impl Arch {
 
     /// Memory-limited clock: the slowest macro in the chosen flavor bounds
     /// the pipeline ("operational frequency is primarily limited by
-    /// memory"). Register files don't bound the clock.
+    /// memory"). Register files don't bound the clock. Delegates to the
+    /// unified engine's [`crate::eval::MacroSet`].
     pub fn mem_freq_mhz(&self, node: Node, flavor: MemFlavor, mram: Device) -> f64 {
-        self.macro_models(node, flavor, mram)
-            .iter()
-            .filter(|(lvl, _)| lvl.kind == LevelKind::SramMacro)
-            .map(|(_, m)| m.max_freq_mhz())
-            .fold(f64::INFINITY, f64::min)
+        let assignment = crate::eval::DeviceAssignment::from_flavor(self, flavor, mram);
+        crate::eval::MacroSet::new(self, node, assignment).mem_freq_mhz()
     }
 
     /// Effective accelerator clock for latency estimates.

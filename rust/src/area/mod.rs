@@ -3,9 +3,13 @@
 //! periphery overheads at subarray/MAT/bank level [15]), MRAM cell-area
 //! factors from [18].
 
-use crate::arch::{Arch, LevelKind, MemFlavor};
-use crate::tech::{mac_area_um2, Device, Node};
-use crate::util::units::UM2_PER_MM2;
+//! Since the unified-engine refactor, [`estimate`] is a thin wrapper over
+//! [`crate::eval::MacroSet`] — the same macro models the energy/power/DSE
+//! paths share.
+
+use crate::arch::{Arch, MemFlavor};
+use crate::eval::{DeviceAssignment, MacroSet};
+use crate::tech::{Device, Node};
 
 /// Area report for one architecture variant.
 #[derive(Debug, Clone)]
@@ -30,32 +34,15 @@ impl AreaReport {
 
 /// Per-PE register-file bit area (µm²/bit) — flip-flop based, several times
 /// the SRAM cell (charged to *memory* area but never replaced by MRAM).
-fn regfile_um2_per_bit(node: Node) -> f64 {
+pub(crate) fn regfile_um2_per_bit(node: Node) -> f64 {
     // ≈8 F²-equivalent FF + clocking at 40nm ≈ 2.2 µm²/bit, logic-scaled.
     2.2 * crate::tech::node_scaling(node).area / crate::tech::node_scaling(Node::N40).area
 }
 
-/// Estimate the die area of `arch` at `node` under a memory flavor.
+/// Estimate the die area of `arch` at `node` under a memory flavor (thin
+/// wrapper over the unified engine's macro set).
 pub fn estimate(arch: &Arch, node: Node, flavor: MemFlavor, mram: Device) -> AreaReport {
-    let compute_mm2 = arch.total_macs() as f64 * mac_area_um2(node) / UM2_PER_MM2;
-    let mut memory_mm2 = Vec::new();
-    for (lvl, model) in arch.macro_models(node, flavor, mram) {
-        let area = match lvl.kind {
-            LevelKind::SramMacro => model.total_area_um2(),
-            LevelKind::RegFile => {
-                (lvl.capacity_bytes * 8 * lvl.count) as f64 * regfile_um2_per_bit(node)
-            }
-        };
-        memory_mm2.push((lvl.name.to_string(), area / UM2_PER_MM2));
-    }
-    AreaReport {
-        arch: arch.name.clone(),
-        node,
-        flavor,
-        mram,
-        compute_mm2,
-        memory_mm2,
-    }
+    MacroSet::new(arch, node, DeviceAssignment::from_flavor(arch, flavor, mram)).area_report()
 }
 
 /// Area saving of a flavor vs the SRAM-only baseline (fraction of total).

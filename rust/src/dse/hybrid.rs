@@ -8,11 +8,17 @@
 //! each by average memory power at the application's IPS_min, and report
 //! the Pareto-optimal split. P0 and P1 are two points of this lattice; the
 //! exploration shows where (and whether) a finer split beats both.
+//!
+//! Since the unified-engine refactor, [`evaluate`] is a wrapper over
+//! [`crate::eval::EvalContext`] with a [`DeviceAssignment`] lowered from
+//! the bitmask — the named flavors and the hybrid lattice share one
+//! energy/latency/power code path instead of three.
 
-use crate::arch::{Arch, BufferLevel, LevelKind};
-use crate::energy::LevelEnergy;
-use crate::mapping::{accesses_at, NetworkMap};
+use crate::arch::{Arch, LevelKind};
+use crate::eval::{DeviceAssignment, EvalContext};
+use crate::mapping::NetworkMap;
 use crate::tech::{Device, Node};
+use crate::util::units::UM2_PER_MM2;
 
 /// One hybrid configuration: the subset of macro levels implemented in MRAM
 /// (bitmask over `macro_level_names`).
@@ -36,7 +42,10 @@ pub fn macro_level_names(arch: &Arch) -> Vec<&'static str> {
 }
 
 /// Evaluate one assignment at `ips`. `mram_mask` bit i ↔
-/// `macro_level_names()[i]` in MRAM.
+/// `macro_level_names()[i]` in MRAM. Wrapper over the unified engine: the
+/// bitmask lowers into a [`DeviceAssignment`], and the energy / latency /
+/// power numbers come from the same [`EvalContext`] derivations the named
+/// flavors use (no duplicated formulas).
 pub fn evaluate(
     arch: &Arch,
     map: &NetworkMap,
@@ -45,108 +54,31 @@ pub fn evaluate(
     mram_mask: u32,
     ips: f64,
 ) -> HybridPoint {
-    let names = macro_level_names(arch);
-    let in_mram = |lvl: &BufferLevel| -> bool {
-        names
-            .iter()
-            .position(|n| *n == lvl.name)
-            .map(|i| mram_mask & (1 << i) != 0)
-            .unwrap_or(false)
-    };
-    let assign = |lvl: &BufferLevel| -> Device {
-        if in_mram(lvl) {
-            mram
-        } else {
-            Device::Sram
-        }
-    };
-
-    // Per-inference memory energy under this assignment.
-    let models = arch.macro_models_assigned(node, &assign);
-    let totals = map.level_totals();
-    let mut levels: Vec<LevelEnergy> = Vec::new();
-    let mut e_wakeup_pj = 0.0;
-    let mut p_retention_uw = 0.0;
-    let mut area_um2 = arch.total_macs() as f64 * crate::tech::mac_area_um2(node);
-    for (lvl, model) in &models {
-        if lvl.kind == LevelKind::SramMacro {
-            if in_mram(lvl) {
-                e_wakeup_pj += model.wakeup_pj() * lvl.count as f64;
-            } else {
-                // Retention is only *required* for state that must survive
-                // (weights); but as in the flavor model, any SRAM macro
-                // stays on the retention rail while idle.
-                p_retention_uw += model.total_standby_uw();
-            }
-            area_um2 += model.total_area_um2();
-        }
-        if let Some(t) = totals.iter().find(|t| t.level == lvl.name) {
-            let read_tx = accesses_at(lvl, t.reads, t.accum, arch.datum_bits);
-            let write_tx = accesses_at(lvl, t.writes, t.accum, arch.datum_bits);
-            levels.push(LevelEnergy {
-                level: lvl.name.to_string(),
-                device: model.spec.device,
-                is_macro: lvl.kind == LevelKind::SramMacro,
-                read_pj: read_tx * model.read_pj,
-                write_pj: write_tx * model.write_pj,
-            });
-        }
-    }
-    let e_mem_inf_pj: f64 = levels.iter().map(|l| l.read_pj + l.write_pj).sum();
-
-    // Latency under this assignment: the slowest macro bounds the clock
-    // (same rule as `Arch::clock_mhz`).
-    let mem_freq = models
-        .iter()
-        .filter(|(l, _)| l.kind == LevelKind::SramMacro)
-        .map(|(_, m)| m.max_freq_mhz())
-        .fold(f64::INFINITY, f64::min);
-    let clock_mhz = arch.logic_freq_mhz(node).min(mem_freq);
-    let latency_ns = map.total_cycles() / clock_mhz * 1e3;
-
-    // Same average-power formula as `PowerModel::p_mem_uw`.
-    let active = (e_mem_inf_pj + e_wakeup_pj) * ips * 1e-6;
-    let idle_frac = (1.0 - ips * latency_ns * 1e-9).max(0.0);
-    let p_mem_uw = active + p_retention_uw * idle_frac;
-
+    let assignment = DeviceAssignment::from_mask(arch, mram_mask, mram);
+    let ctx = EvalContext::new(arch, map, node, assignment);
     HybridPoint {
-        mram_levels: names
-            .iter()
-            .enumerate()
-            .filter(|(i, _)| mram_mask & (1 << i) != 0)
-            .map(|(_, n)| n.to_string())
-            .collect(),
-        e_mem_inf_pj,
-        e_wakeup_pj,
-        p_retention_uw,
-        p_mem_uw,
-        area_mm2: area_um2 / crate::util::units::UM2_PER_MM2,
+        mram_levels: ctx.assignment().mram_level_names(arch),
+        e_mem_inf_pj: ctx.e_mem_inf_pj(),
+        e_wakeup_pj: ctx.e_wakeup_pj,
+        p_retention_uw: ctx.p_retention_uw,
+        p_mem_uw: ctx.p_mem_uw(ips),
+        area_mm2: ctx.macros.hybrid_area_um2() / UM2_PER_MM2,
     }
 }
 
-/// Exhaustive sweep; returns all points sorted by memory power (best
-/// first).
+/// Exhaustive sweep over the full per-level lattice; returns all points
+/// sorted by memory power (best first; NaN-safe total order).
 pub fn sweep(arch: &Arch, map: &NetworkMap, node: Node, mram: Device, ips: f64) -> Vec<HybridPoint> {
-    let n = macro_level_names(arch).len();
-    let mut pts: Vec<HybridPoint> = (0..(1u32 << n))
+    let mut pts: Vec<HybridPoint> = (0..DeviceAssignment::lattice_size(arch))
         .map(|mask| evaluate(arch, map, node, mram, mask, ips))
         .collect();
-    pts.sort_by(|a, b| a.p_mem_uw.partial_cmp(&b.p_mem_uw).unwrap());
+    pts.sort_by(|a, b| a.p_mem_uw.total_cmp(&b.p_mem_uw));
     pts
 }
 
 /// The mask corresponding to a named flavor (for cross-checks).
 pub fn flavor_mask(arch: &Arch, flavor: crate::arch::MemFlavor) -> u32 {
-    let names = macro_level_names(arch);
-    let mut mask = 0;
-    for (i, name) in names.iter().enumerate() {
-        let lvl = arch.level(name).unwrap();
-        let dev = flavor.device_for(lvl, Device::VgsotMram);
-        if dev.is_nvm() {
-            mask |= 1 << i;
-        }
-    }
-    mask
+    DeviceAssignment::from_flavor(arch, flavor, Device::VgsotMram).mask(arch)
 }
 
 #[cfg(test)]

@@ -2,57 +2,41 @@
 //! flavor × MRAM device × workload) and produces the records behind every
 //! figure and table of the paper's evaluation. The benches and the CLI are
 //! thin renderers over this module.
+//!
+//! Since the unified-engine refactor the heavy lifting lives in
+//! [`crate::eval`]: [`Sweeper`] wraps an [`Engine`] (every (arch × net)
+//! pair mapped once and indexed by key), [`Sweeper::grid`] shards the
+//! sweep across threads with deterministic ordering, and each design point
+//! costs exactly one macro-model construction.
 
 pub mod hybrid;
 pub mod pareto;
 
+pub use crate::eval::{DesignPoint, DesignSpace, Engine};
+
 use crate::arch::{Arch, MemFlavor, PeConfig};
-use crate::energy::{estimate, latency_ns, EnergyBreakdown};
-use crate::mapping::{map_network, NetworkMap};
-use crate::power::{power_model, PowerModel};
 use crate::tech::{paper_mram_for, Device, Node};
 use crate::workload::Network;
 
-/// One evaluated design point.
-#[derive(Debug, Clone)]
-pub struct DesignPoint {
-    pub arch: String,
-    pub network: String,
-    pub node: Node,
-    pub flavor: MemFlavor,
-    pub mram: Device,
-    pub energy: EnergyBreakdown,
-    pub power: PowerModel,
-    pub latency_ns: f64,
-    pub utilization: f64,
-    pub area_mm2: f64,
-}
-
-impl DesignPoint {
-    pub fn edp(&self) -> f64 {
-        crate::energy::edp(self.energy.total_pj(), self.latency_ns)
-    }
-}
-
 /// Cached per-(arch, network) mapping so sweeps don't re-run the mapper for
-/// every node/flavor (the mapping is node-independent).
+/// every node/flavor (the mapping is node-independent). Thin wrapper over
+/// [`crate::eval::Engine`] kept for source compatibility with the benches
+/// and examples.
 pub struct Sweeper {
-    maps: Vec<(String, String, Arch, Network, NetworkMap)>,
+    engine: Engine,
 }
 
 impl Sweeper {
     pub fn new(archs: Vec<Arch>, nets: Vec<Network>) -> Sweeper {
-        let mut maps = Vec::new();
-        for arch in &archs {
-            for net in &nets {
-                let map = map_network(arch, net);
-                maps.push((arch.name.clone(), net.name.clone(), arch.clone(), net.clone(), map));
-            }
-        }
-        Sweeper { maps }
+        Sweeper { engine: Engine::new(archs, nets) }
     }
 
-    /// Evaluate one design point (arch/net resolved by name).
+    /// The underlying evaluation engine.
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Evaluate one design point (arch/net resolved by keyed lookup).
     pub fn point(
         &self,
         arch_name: &str,
@@ -61,54 +45,29 @@ impl Sweeper {
         flavor: MemFlavor,
         mram: Device,
     ) -> Option<DesignPoint> {
-        let (_, _, arch, _net, map) = self
-            .maps
-            .iter()
-            .find(|(a, n, ..)| a == arch_name && n == net_name)?;
-        Some(eval_point(arch, map, node, flavor, mram))
+        self.engine.point(arch_name, net_name, node, flavor, mram)
     }
 
-    /// Full grid over the provided axes.
+    /// Full grid over the provided axes, sharded across threads (output
+    /// order and bit patterns identical to [`Sweeper::grid_seq`]).
     pub fn grid(
+        &self,
+        nodes: &[Node],
+        flavors: &[MemFlavor],
+        mram_of: impl Fn(Node) -> Device + Sync,
+    ) -> Vec<DesignPoint> {
+        self.engine.grid(&DesignSpace::new(nodes, flavors), mram_of)
+    }
+
+    /// Sequential reference sweep (the legacy loop; kept for the
+    /// determinism tests and the perf bench's speedup baseline).
+    pub fn grid_seq(
         &self,
         nodes: &[Node],
         flavors: &[MemFlavor],
         mram_of: impl Fn(Node) -> Device,
     ) -> Vec<DesignPoint> {
-        let mut out = Vec::new();
-        for (_, _, arch, _net, map) in &self.maps {
-            for &node in nodes {
-                for &flavor in flavors {
-                    out.push(eval_point(arch, map, node, flavor, mram_of(node)));
-                }
-            }
-        }
-        out
-    }
-}
-
-fn eval_point(
-    arch: &Arch,
-    map: &NetworkMap,
-    node: Node,
-    flavor: MemFlavor,
-    mram: Device,
-) -> DesignPoint {
-    let energy = estimate(arch, map, node, flavor, mram);
-    let lat = latency_ns(arch, map, node, flavor, mram);
-    let power = power_model(arch, map, node, flavor, mram);
-    let area = crate::area::estimate(arch, node, flavor, mram).total_mm2();
-    DesignPoint {
-        arch: arch.name.clone(),
-        network: map.network.clone(),
-        node,
-        flavor,
-        mram,
-        utilization: map.utilization(arch),
-        energy,
-        power,
-        latency_ns: lat,
-        area_mm2: area,
+        self.engine.grid_seq(&DesignSpace::new(nodes, flavors), mram_of)
     }
 }
 
@@ -183,4 +142,8 @@ mod tests {
             .point("tpu", "detnet", Node::N7, MemFlavor::P0, Device::SttMram)
             .is_none());
     }
+
+    // Parallel-vs-sequential bitwise equality is covered at the unit level
+    // in `eval::space` and exhaustively (all DesignPoint fields, full
+    // 36-point grid) in `tests/engine_equivalence.rs`.
 }

@@ -1,6 +1,9 @@
 //! Pareto-frontier extraction over design points: the DSE deliverable a
 //! designer actually consumes — which (arch × node × flavor) variants are
 //! undominated in (memory power @ IPS_min, area, latency).
+//!
+//! Operates on the unified engine's [`DesignPoint`]s (one shared
+//! evaluation path — `xr-edge-dse pareto` drives this from the CLI).
 
 use super::DesignPoint;
 

@@ -2,10 +2,16 @@
 //! macro energies and the compute-energy table to produce per-inference
 //! energy with compute / memory-read / memory-write breakdowns
 //! (Fig 2(e), Fig 3(d), Fig 4).
+//!
+//! Since the unified-engine refactor, [`estimate`] and [`latency_ns`] are
+//! thin wrappers over [`crate::eval::EvalContext`] — the macro models,
+//! level totals and per-level bus transactions are built once there and
+//! shared with the power/area/DSE paths.
 
 use crate::arch::{Arch, MemFlavor};
-use crate::mapping::{accesses_at, NetworkMap};
-use crate::tech::{mac_energy_pj, Device, Node};
+use crate::eval::{DeviceAssignment, EvalContext, MacroSet};
+use crate::mapping::NetworkMap;
+use crate::tech::{Device, Node};
 
 /// Per-level energy contribution (pJ per inference).
 #[derive(Debug, Clone)]
@@ -73,10 +79,8 @@ impl EnergyBreakdown {
     }
 }
 
-/// Fraction of a MAC's energy charged per elementwise ALU op (pool/add).
-const ALU_FRACTION: f64 = 0.15;
-
-/// Estimate the energy of one inference for a mapped network.
+/// Estimate the energy of one inference for a mapped network (thin wrapper
+/// over the unified engine).
 pub fn estimate(
     arch: &Arch,
     map: &NetworkMap,
@@ -84,39 +88,8 @@ pub fn estimate(
     flavor: MemFlavor,
     mram: Device,
 ) -> EnergyBreakdown {
-    let mac_pj = mac_energy_pj(node, arch.cpu_style);
-    let mut compute_pj = 0.0;
-    for lm in &map.per_layer {
-        compute_pj += lm.macs * mac_pj + lm.alu_ops * mac_pj * ALU_FRACTION;
-    }
-
-    let models = arch.macro_models(node, flavor, mram);
-    let totals = map.level_totals();
-    let mut levels = Vec::new();
-    for (lvl, model) in &models {
-        let Some(t) = totals.iter().find(|t| t.level == lvl.name) else {
-            continue;
-        };
-        let read_tx = accesses_at(lvl, t.reads, t.accum, arch.datum_bits);
-        let write_tx = accesses_at(lvl, t.writes, t.accum, arch.datum_bits);
-        levels.push(LevelEnergy {
-            level: lvl.name.to_string(),
-            device: model.spec.device,
-            is_macro: lvl.kind == crate::arch::LevelKind::SramMacro,
-            read_pj: read_tx * model.read_pj,
-            write_pj: write_tx * model.write_pj,
-        });
-    }
-
-    EnergyBreakdown {
-        arch: arch.name.clone(),
-        network: map.network.clone(),
-        node,
-        flavor,
-        mram,
-        compute_pj,
-        levels,
-    }
+    let assignment = DeviceAssignment::from_flavor(arch, flavor, mram);
+    EvalContext::new(arch, map, node, assignment).energy_breakdown()
 }
 
 /// Convenience: map + estimate in one call with the paper's node-appropriate
@@ -131,7 +104,9 @@ pub fn estimate_paper_variant(
     estimate(arch, &map, node, flavor, crate::tech::paper_mram_for(node))
 }
 
-/// Inference latency in ns for a mapped network at a node/flavor.
+/// Inference latency in ns for a mapped network at a node/flavor (thin
+/// wrapper over the unified engine's memory-bounded clock — uses the
+/// static [`MacroSet`] only, no energy derivation).
 pub fn latency_ns(
     arch: &Arch,
     map: &NetworkMap,
@@ -139,7 +114,8 @@ pub fn latency_ns(
     flavor: MemFlavor,
     mram: Device,
 ) -> f64 {
-    let clock_mhz = arch.clock_mhz(node, flavor, mram);
+    let assignment = DeviceAssignment::from_flavor(arch, flavor, mram);
+    let clock_mhz = MacroSet::new(arch, node, assignment).clock_mhz();
     map.total_cycles() / clock_mhz * 1e3 // cycles / MHz = µs → ns ×1e3
 }
 

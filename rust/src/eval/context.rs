@@ -1,0 +1,342 @@
+//! The per-design-point evaluation state: macro models ([`MacroSet`]) and
+//! mapped-workload traffic ([`EvalContext`]), each built **once** per
+//! (arch, node, assignment) and shared by every derived product.
+
+use super::DeviceAssignment;
+use crate::arch::{Arch, BufferLevel, LevelKind, MemFlavor};
+use crate::area::AreaReport;
+use crate::energy::{EnergyBreakdown, LevelEnergy};
+use crate::mapping::{accesses_at, NetworkMap};
+use crate::mem::MacroModel;
+use crate::power::PowerModel;
+use crate::tech::{mac_area_um2, mac_energy_pj, Node};
+use crate::util::units::UM2_PER_MM2;
+
+/// Fraction of a MAC's energy charged per elementwise ALU op (pool/add).
+pub(crate) const ALU_FRACTION: f64 = 0.15;
+
+/// The CACTI-lite macro models of one (arch, node, [`DeviceAssignment`]).
+/// Everything that needs only the *static* hardware view (area, clock
+/// bounds, retention/wakeup characteristics) derives from this; adding a
+/// mapped workload upgrades it to an [`EvalContext`].
+pub struct MacroSet<'a> {
+    pub arch: &'a Arch,
+    pub node: Node,
+    pub assignment: DeviceAssignment,
+    models: Vec<(&'a BufferLevel, MacroModel)>,
+}
+
+impl<'a> MacroSet<'a> {
+    /// Build the macro models — the **single** `Arch::macro_models*` call
+    /// site of the evaluation engine.
+    pub fn new(arch: &'a Arch, node: Node, assignment: DeviceAssignment) -> MacroSet<'a> {
+        let models = {
+            let assign = |lvl: &BufferLevel| assignment.device_for(arch, lvl);
+            arch.macro_models_assigned(node, &assign)
+        };
+        MacroSet { arch, node, assignment, models }
+    }
+
+    /// The per-level models, in `arch.levels` order.
+    pub fn models(&self) -> &[(&'a BufferLevel, MacroModel)] {
+        &self.models
+    }
+
+    /// Memory-limited clock: the slowest macro bounds the pipeline
+    /// ("operational frequency is primarily limited by memory").
+    pub fn mem_freq_mhz(&self) -> f64 {
+        self.models
+            .iter()
+            .filter(|(lvl, _)| lvl.kind == LevelKind::SramMacro)
+            .map(|(_, m)| m.max_freq_mhz())
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Effective clock for latency estimates: logic vs memory bound.
+    pub fn clock_mhz(&self) -> f64 {
+        self.arch.logic_freq_mhz(self.node).min(self.mem_freq_mhz())
+    }
+
+    /// Wakeup energy charged per inference event (NVM macros only), pJ.
+    pub fn e_wakeup_pj(&self) -> f64 {
+        let mut e = 0.0;
+        for (lvl, model) in &self.models {
+            if lvl.kind == LevelKind::SramMacro && model.spec.device.is_nvm() {
+                e += model.wakeup_pj() * lvl.count as f64;
+            }
+        }
+        e
+    }
+
+    /// Retention power of the SRAM macros that stay alive while idle, µW.
+    pub fn p_retention_uw(&self) -> f64 {
+        let mut p = 0.0;
+        for (lvl, model) in &self.models {
+            if lvl.kind == LevelKind::SramMacro && !model.spec.device.is_nvm() {
+                p += model.total_standby_uw();
+            }
+        }
+        p
+    }
+
+    /// Die-area report (Table 2). Requires a named-flavor assignment (the
+    /// report struct is flavor-tagged); arbitrary lattice points use
+    /// [`MacroSet::hybrid_area_um2`].
+    pub fn area_report(&self) -> AreaReport {
+        let compute_mm2 = self.arch.total_macs() as f64 * mac_area_um2(self.node) / UM2_PER_MM2;
+        let mut memory_mm2 = Vec::new();
+        for (lvl, model) in &self.models {
+            let area = match lvl.kind {
+                LevelKind::SramMacro => model.total_area_um2(),
+                LevelKind::RegFile => {
+                    (lvl.capacity_bytes * 8 * lvl.count) as f64
+                        * crate::area::regfile_um2_per_bit(self.node)
+                }
+            };
+            memory_mm2.push((lvl.name.to_string(), area / UM2_PER_MM2));
+        }
+        AreaReport {
+            arch: self.arch.name.clone(),
+            node: self.node,
+            flavor: self.named_flavor(),
+            mram: self.assignment.mram,
+            compute_mm2,
+            memory_mm2,
+        }
+    }
+
+    /// Compute + SRAM-macro area in µm² — the hybrid sweep's accounting
+    /// (register files excluded, matching the legacy `hybrid::evaluate`).
+    pub fn hybrid_area_um2(&self) -> f64 {
+        let mut area_um2 = self.arch.total_macs() as f64 * mac_area_um2(self.node);
+        for (lvl, model) in &self.models {
+            if lvl.kind == LevelKind::SramMacro {
+                area_um2 += model.total_area_um2();
+            }
+        }
+        area_um2
+    }
+
+    /// The named flavor behind this assignment; panics for arbitrary
+    /// lattice points, which have no flavor-tagged report form.
+    pub fn named_flavor(&self) -> MemFlavor {
+        self.assignment.flavor.expect(
+            "this product requires a named-flavor assignment (DeviceAssignment::from_flavor); \
+             arbitrary lattice points expose level_energies()/p_mem_uw() instead",
+        )
+    }
+}
+
+/// Per-level bus transactions for one mapped workload on one assignment.
+#[derive(Debug, Clone, Copy)]
+pub struct LevelTraffic {
+    pub level: &'static str,
+    pub read_tx: f64,
+    pub write_tx: f64,
+}
+
+/// Everything needed to evaluate one (arch, workload-map, node,
+/// assignment) design point, built once: the macro models, the aggregated
+/// level totals converted to bus transactions, compute energy, the
+/// gating/retention characteristics and the memory-bounded latency. The
+/// `EnergyBreakdown`, `PowerModel`, `AreaReport` and `DesignPoint`
+/// constructors are pure derivations over this state.
+pub struct EvalContext<'a> {
+    pub macros: MacroSet<'a>,
+    pub map: &'a NetworkMap,
+    /// Compute (MAC + ALU) energy per inference, pJ.
+    pub compute_pj: f64,
+    /// Per-level bus transactions (levels with mapped traffic only).
+    level_traffic: Vec<LevelTraffic>,
+    /// Per-level read/write energies (same order as `level_traffic`).
+    level_energies: Vec<LevelEnergy>,
+    /// Wakeup energy charged per inference event, pJ (NVM macros only).
+    pub e_wakeup_pj: f64,
+    /// Retention power while idle, µW (SRAM macros that stay alive).
+    pub p_retention_uw: f64,
+    /// Effective clock, MHz (logic vs slowest macro).
+    pub clock_mhz: f64,
+    /// Inference latency, ns.
+    pub latency_ns: f64,
+}
+
+impl<'a> EvalContext<'a> {
+    pub fn new(
+        arch: &'a Arch,
+        map: &'a NetworkMap,
+        node: Node,
+        assignment: DeviceAssignment,
+    ) -> EvalContext<'a> {
+        let macros = MacroSet::new(arch, node, assignment);
+
+        let mac_pj = mac_energy_pj(node, arch.cpu_style);
+        let mut compute_pj = 0.0;
+        for lm in &map.per_layer {
+            compute_pj += lm.macs * mac_pj + lm.alu_ops * mac_pj * ALU_FRACTION;
+        }
+
+        let totals = map.level_totals();
+        let mut level_traffic = Vec::new();
+        let mut level_energies = Vec::new();
+        for (lvl, model) in macros.models() {
+            let Some(t) = totals.iter().find(|t| t.level == lvl.name) else {
+                continue;
+            };
+            let read_tx = accesses_at(lvl, t.reads, t.accum, arch.datum_bits);
+            let write_tx = accesses_at(lvl, t.writes, t.accum, arch.datum_bits);
+            level_traffic.push(LevelTraffic { level: lvl.name, read_tx, write_tx });
+            level_energies.push(LevelEnergy {
+                level: lvl.name.to_string(),
+                device: model.spec.device,
+                is_macro: lvl.kind == LevelKind::SramMacro,
+                read_pj: read_tx * model.read_pj,
+                write_pj: write_tx * model.write_pj,
+            });
+        }
+
+        let e_wakeup_pj = macros.e_wakeup_pj();
+        let p_retention_uw = macros.p_retention_uw();
+        let clock_mhz = macros.clock_mhz();
+        let latency_ns = map.total_cycles() / clock_mhz * 1e3; // cycles/MHz = µs → ns
+
+        EvalContext {
+            macros,
+            map,
+            compute_pj,
+            level_traffic,
+            level_energies,
+            e_wakeup_pj,
+            p_retention_uw,
+            clock_mhz,
+            latency_ns,
+        }
+    }
+
+    pub fn arch(&self) -> &'a Arch {
+        self.macros.arch
+    }
+
+    pub fn node(&self) -> Node {
+        self.macros.node
+    }
+
+    pub fn assignment(&self) -> &DeviceAssignment {
+        &self.macros.assignment
+    }
+
+    /// Per-level bus transactions (levels with mapped traffic only).
+    pub fn level_traffic(&self) -> &[LevelTraffic] {
+        &self.level_traffic
+    }
+
+    /// Per-level read/write energies.
+    pub fn level_energies(&self) -> &[LevelEnergy] {
+        &self.level_energies
+    }
+
+    pub fn mem_read_pj(&self) -> f64 {
+        self.level_energies.iter().map(|l| l.read_pj).sum()
+    }
+
+    pub fn mem_write_pj(&self) -> f64 {
+        self.level_energies.iter().map(|l| l.write_pj).sum()
+    }
+
+    /// Memory energy per inference, pJ (reads + writes over all levels).
+    pub fn e_mem_inf_pj(&self) -> f64 {
+        self.mem_read_pj() + self.mem_write_pj()
+    }
+
+    /// Average memory power at `ips`, µW ([`super::p_mem_uw`]).
+    pub fn p_mem_uw(&self, ips: f64) -> f64 {
+        super::p_mem_uw(self.e_mem_inf_pj(), self.e_wakeup_pj, self.p_retention_uw, self.latency_ns, ips)
+    }
+
+    /// The flavor-tagged energy report (named-flavor assignments only).
+    pub fn energy_breakdown(&self) -> EnergyBreakdown {
+        EnergyBreakdown {
+            arch: self.arch().name.clone(),
+            network: self.map.network.clone(),
+            node: self.node(),
+            flavor: self.macros.named_flavor(),
+            mram: self.assignment().mram,
+            compute_pj: self.compute_pj,
+            levels: self.level_energies.clone(),
+        }
+    }
+
+    /// The flavor-tagged power model (named-flavor assignments only).
+    pub fn power_model(&self) -> PowerModel {
+        self.power_model_from(&self.energy_breakdown())
+    }
+
+    /// Power model derived from an already-built breakdown of this context
+    /// (lets callers that need both products construct the breakdown once).
+    pub fn power_model_from(&self, breakdown: &EnergyBreakdown) -> PowerModel {
+        PowerModel {
+            arch: self.arch().name.clone(),
+            network: self.map.network.clone(),
+            node: self.node(),
+            flavor: self.macros.named_flavor(),
+            mram: self.assignment().mram,
+            e_mem_inf_pj: breakdown.mem_pj(),
+            e_weight_inf_pj: breakdown.weight_mem_pj(self.arch()),
+            e_wakeup_pj: self.e_wakeup_pj,
+            p_retention_uw: self.p_retention_uw,
+            latency_ns: self.latency_ns,
+        }
+    }
+
+    /// The flavor-tagged area report (named-flavor assignments only).
+    pub fn area_report(&self) -> AreaReport {
+        self.macros.area_report()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{simba, PeConfig};
+    use crate::mapping::map_network;
+    use crate::tech::Device;
+    use crate::workload::builtin::detnet;
+
+    fn setup() -> (Arch, NetworkMap) {
+        let arch = simba(PeConfig::V2);
+        let net = detnet();
+        let map = map_network(&arch, &net);
+        (arch, map)
+    }
+
+    #[test]
+    fn traffic_and_energies_align() {
+        let (arch, map) = setup();
+        let a = DeviceAssignment::from_flavor(&arch, MemFlavor::P1, Device::VgsotMram);
+        let ctx = EvalContext::new(&arch, &map, Node::N7, a);
+        assert_eq!(ctx.level_traffic().len(), ctx.level_energies().len());
+        for (t, e) in ctx.level_traffic().iter().zip(ctx.level_energies()) {
+            assert_eq!(t.level, e.level.as_str());
+            assert!(t.read_tx >= 0.0 && t.write_tx >= 0.0);
+        }
+        assert!(ctx.e_mem_inf_pj() > 0.0);
+        assert!(ctx.latency_ns > 0.0);
+    }
+
+    #[test]
+    fn sram_assignment_has_retention_not_wakeup() {
+        let (arch, map) = setup();
+        let a = DeviceAssignment::from_flavor(&arch, MemFlavor::SramOnly, Device::VgsotMram);
+        let ctx = EvalContext::new(&arch, &map, Node::N7, a);
+        assert!(ctx.p_retention_uw > 0.0);
+        assert_eq!(ctx.e_wakeup_pj, 0.0);
+    }
+
+    #[test]
+    fn macroset_area_matches_context_area() {
+        let (arch, map) = setup();
+        let a = DeviceAssignment::from_flavor(&arch, MemFlavor::P0, Device::VgsotMram);
+        let standalone = MacroSet::new(&arch, Node::N7, a.clone()).area_report().total_mm2();
+        let via_ctx = EvalContext::new(&arch, &map, Node::N7, a).area_report().total_mm2();
+        assert_eq!(standalone.to_bits(), via_ctx.to_bits());
+    }
+}

@@ -1,0 +1,209 @@
+//! The unified evaluation engine.
+//!
+//! Historically every product of the analytical stack rebuilt its own
+//! CACTI-lite macro models and access totals: `energy::estimate`,
+//! `energy::latency_ns`, `power::power_model` (which re-called both) and
+//! `area::estimate` each instantiated `Arch::macro_models*`, and
+//! `dse::hybrid::evaluate` re-implemented the same energy/latency/power
+//! math a third way. This module is the single core behind all of them:
+//!
+//! - [`DeviceAssignment`] — an explicit per-level device choice. The named
+//!   [`MemFlavor`]s (`SramOnly`/`P0`/`P1`) and the hybrid-split bitmasks
+//!   both *lower* into it, so the flavors are lattice points of one code
+//!   path instead of a parallel implementation.
+//! - [`MacroSet`] — the macro models for one (arch, node, assignment),
+//!   built **once**. This is the only call site of `Arch::macro_models*`
+//!   in the evaluation path.
+//! - [`EvalContext`] — adds the mapped workload: level totals and
+//!   per-level bus transactions computed once, from which the
+//!   `EnergyBreakdown`, latency, `PowerModel` and `AreaReport` all derive.
+//! - [`Engine`] / [`DesignSpace`] — the sweep driver: (arch × net) pairs
+//!   mapped once and indexed by key, with a [`Engine::grid`] that shards
+//!   design points across `std::thread::scope` workers while keeping the
+//!   exact output ordering (and bit patterns) of the sequential loop.
+//!
+//! The legacy entry points (`energy::estimate`, `power::power_model`,
+//! `area::estimate`, `dse::Sweeper`, `dse::hybrid::evaluate`) remain as
+//! thin wrappers, so the benches and examples stay source-compatible.
+
+mod context;
+mod space;
+
+pub use context::{EvalContext, LevelTraffic, MacroSet};
+pub use space::{DesignPoint, DesignSpace, Engine, EngineEntry};
+
+use crate::arch::{Arch, BufferLevel, LevelKind, MemFlavor};
+use crate::tech::Device;
+
+/// A per-level device choice for one architecture: the generalized form of
+/// [`MemFlavor`] (§5: "fine-tune the proportion of the splits between NVM
+/// and SRAM"). Register-file levels are always CMOS/SRAM-class regardless
+/// of the assignment, mirroring `Arch::macro_models_assigned`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DeviceAssignment {
+    /// Device per `arch.levels` index (regfiles already forced to SRAM).
+    devices: Vec<Device>,
+    /// The MRAM device used for NVM levels (kept even when no level is
+    /// NVM, so reports record which device the sweep considered).
+    pub mram: Device,
+    /// The named flavor this assignment was lowered from, when any.
+    /// Arbitrary lattice points (hybrid splits) carry `None` and expose
+    /// their results through [`EvalContext`] accessors rather than the
+    /// flavor-tagged report structs.
+    pub flavor: Option<MemFlavor>,
+}
+
+impl DeviceAssignment {
+    /// Lower a named memory flavor (the paper's SRAM-only / P0 / P1).
+    pub fn from_flavor(arch: &Arch, flavor: MemFlavor, mram: Device) -> DeviceAssignment {
+        let devices = arch.levels.iter().map(|lvl| flavor.device_for(lvl, mram)).collect();
+        DeviceAssignment { devices, mram, flavor: Some(flavor) }
+    }
+
+    /// Lower a hybrid-split bitmask: bit *i* puts the *i*-th SRAM-macro
+    /// level (in `arch.levels` order, regfiles skipped — the
+    /// `dse::hybrid::macro_level_names` convention) in MRAM.
+    pub fn from_mask(arch: &Arch, mram_mask: u32, mram: Device) -> DeviceAssignment {
+        let mut devices = Vec::with_capacity(arch.levels.len());
+        let mut bit = 0u32;
+        for lvl in &arch.levels {
+            if lvl.kind == LevelKind::SramMacro {
+                devices.push(if mram_mask & (1 << bit) != 0 { mram } else { Device::Sram });
+                bit += 1;
+            } else {
+                devices.push(Device::Sram);
+            }
+        }
+        DeviceAssignment { devices, mram, flavor: None }
+    }
+
+    /// Device for the level at `arch.levels` index `i`.
+    pub fn device_at(&self, i: usize) -> Device {
+        self.devices[i]
+    }
+
+    /// Device for a level, resolved by name within `arch`.
+    pub fn device_for(&self, arch: &Arch, level: &BufferLevel) -> Device {
+        arch.levels
+            .iter()
+            .position(|l| l.name == level.name)
+            .map(|i| self.devices[i])
+            .unwrap_or(Device::Sram)
+    }
+
+    /// Lower back to the hybrid bitmask convention.
+    pub fn mask(&self, arch: &Arch) -> u32 {
+        let mut mask = 0u32;
+        let mut bit = 0u32;
+        for (i, lvl) in arch.levels.iter().enumerate() {
+            if lvl.kind == LevelKind::SramMacro {
+                if self.devices[i].is_nvm() {
+                    mask |= 1 << bit;
+                }
+                bit += 1;
+            }
+        }
+        mask
+    }
+
+    /// Names of the SRAM-macro levels this assignment implements in MRAM.
+    pub fn mram_level_names(&self, arch: &Arch) -> Vec<String> {
+        arch.levels
+            .iter()
+            .enumerate()
+            .filter(|(i, lvl)| lvl.kind == LevelKind::SramMacro && self.devices[*i].is_nvm())
+            .map(|(_, lvl)| lvl.name.to_string())
+            .collect()
+    }
+
+    /// Size of the full per-level lattice for an architecture (the hybrid
+    /// sweep's `2^macro_levels`).
+    pub fn lattice_size(arch: &Arch) -> u32 {
+        let n = arch.levels.iter().filter(|l| l.kind == LevelKind::SramMacro).count();
+        1u32 << n
+    }
+}
+
+/// Average memory power at `ips` inferences/second, µW — the one place the
+/// paper's temporal power formula lives:
+///
+/// `P_mem(ips) = (E_mem_inf + E_wakeup) × ips + P_retention × idle_frac`
+///
+/// with `idle_frac = max(0, 1 − ips × t_inf)`. `power::PowerModel::p_mem_uw`
+/// and the hybrid sweep both delegate here.
+pub fn p_mem_uw(
+    e_mem_inf_pj: f64,
+    e_wakeup_pj: f64,
+    p_retention_uw: f64,
+    latency_ns: f64,
+    ips: f64,
+) -> f64 {
+    let active = (e_mem_inf_pj + e_wakeup_pj) * ips * 1e-6; // pJ·Hz → µW
+    let idle_frac = (1.0 - ips * latency_ns * 1e-9).max(0.0);
+    active + p_retention_uw * idle_frac
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{eyeriss, simba, PeConfig};
+
+    #[test]
+    fn flavor_lowering_matches_device_for() {
+        let arch = simba(PeConfig::V2);
+        for flavor in MemFlavor::ALL {
+            let a = DeviceAssignment::from_flavor(&arch, flavor, Device::VgsotMram);
+            for (i, lvl) in arch.levels.iter().enumerate() {
+                assert_eq!(a.device_at(i), flavor.device_for(lvl, Device::VgsotMram), "{flavor:?}/{}", lvl.name);
+                assert_eq!(a.device_for(&arch, lvl), a.device_at(i));
+            }
+            assert_eq!(a.flavor, Some(flavor));
+        }
+    }
+
+    #[test]
+    fn mask_lowering_forces_regfiles_to_sram() {
+        let arch = eyeriss(PeConfig::V2);
+        let full = DeviceAssignment::lattice_size(&arch) - 1;
+        let a = DeviceAssignment::from_mask(&arch, full, Device::SttMram);
+        for (i, lvl) in arch.levels.iter().enumerate() {
+            if lvl.kind == LevelKind::SramMacro {
+                assert_eq!(a.device_at(i), Device::SttMram, "{}", lvl.name);
+            } else {
+                assert_eq!(a.device_at(i), Device::Sram, "{}", lvl.name);
+            }
+        }
+        assert_eq!(a.mask(&arch), full);
+        assert_eq!(a.flavor, None);
+    }
+
+    #[test]
+    fn mask_roundtrips_through_assignment() {
+        let arch = simba(PeConfig::V2);
+        for mask in 0..DeviceAssignment::lattice_size(&arch) {
+            let a = DeviceAssignment::from_mask(&arch, mask, Device::VgsotMram);
+            assert_eq!(a.mask(&arch), mask);
+        }
+    }
+
+    #[test]
+    fn flavor_masks_are_lattice_points() {
+        let arch = simba(PeConfig::V2);
+        let sram = DeviceAssignment::from_flavor(&arch, MemFlavor::SramOnly, Device::VgsotMram);
+        assert_eq!(sram.mask(&arch), 0);
+        assert!(sram.mram_level_names(&arch).is_empty());
+        let p1 = DeviceAssignment::from_flavor(&arch, MemFlavor::P1, Device::VgsotMram);
+        assert_eq!(p1.mask(&arch), DeviceAssignment::lattice_size(&arch) - 1);
+        let p0 = DeviceAssignment::from_flavor(&arch, MemFlavor::P0, Device::VgsotMram);
+        assert_eq!(p0.mram_level_names(&arch), vec!["weight_buf".to_string(), "gwb".to_string()]);
+    }
+
+    #[test]
+    fn p_mem_formula_shape() {
+        // zero rate → pure retention; rising rate → active term dominates
+        assert_eq!(p_mem_uw(1e6, 0.0, 50.0, 1e6, 0.0), 50.0);
+        let lo = p_mem_uw(1e6, 1e4, 50.0, 1e6, 1.0);
+        let hi = p_mem_uw(1e6, 1e4, 50.0, 1e6, 100.0);
+        assert!(hi > lo);
+    }
+}

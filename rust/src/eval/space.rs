@@ -1,0 +1,280 @@
+//! The sweep driver: (arch × net) pairs mapped once and indexed by key
+//! ([`Engine`]), an axis enumerator ([`DesignSpace`]), and a parallel
+//! [`Engine::grid`] that shards evaluation across `std::thread::scope`
+//! workers with deterministic (sequential-identical) output ordering.
+
+use std::collections::HashMap;
+
+use super::{DeviceAssignment, EvalContext};
+use crate::arch::{Arch, MemFlavor};
+use crate::energy::EnergyBreakdown;
+use crate::mapping::{map_network, NetworkMap};
+use crate::power::PowerModel;
+use crate::tech::{Device, Node};
+use crate::workload::Network;
+
+/// One evaluated design point.
+#[derive(Debug, Clone)]
+pub struct DesignPoint {
+    pub arch: String,
+    pub network: String,
+    pub node: Node,
+    pub flavor: MemFlavor,
+    pub mram: Device,
+    pub energy: EnergyBreakdown,
+    pub power: PowerModel,
+    pub latency_ns: f64,
+    pub utilization: f64,
+    pub area_mm2: f64,
+}
+
+impl DesignPoint {
+    pub fn edp(&self) -> f64 {
+        crate::energy::edp(self.energy.total_pj(), self.latency_ns)
+    }
+}
+
+/// One mapped (architecture, workload) pair — the node-independent part of
+/// a design point, cached so sweeps never re-run the mapper.
+pub struct EngineEntry {
+    pub arch: Arch,
+    pub net: Network,
+    pub map: NetworkMap,
+}
+
+/// The evaluation engine: every (arch × net) pair mapped once at
+/// construction and indexed by `(arch name, net name)` key, with point
+/// lookup and sequential/parallel grid sweeps on top.
+pub struct Engine {
+    entries: Vec<EngineEntry>,
+    index: HashMap<(String, String), usize>,
+}
+
+impl Engine {
+    /// Map every (arch × net) pair (arch-major order, matching the legacy
+    /// `Sweeper::new`).
+    pub fn new(archs: Vec<Arch>, nets: Vec<Network>) -> Engine {
+        let mut entries = Vec::with_capacity(archs.len() * nets.len());
+        let mut index = HashMap::new();
+        for arch in &archs {
+            for net in &nets {
+                let map = map_network(arch, net);
+                index.insert((arch.name.clone(), net.name.clone()), entries.len());
+                entries.push(EngineEntry { arch: arch.clone(), net: net.clone(), map });
+            }
+        }
+        Engine { entries, index }
+    }
+
+    pub fn entries(&self) -> &[EngineEntry] {
+        &self.entries
+    }
+
+    /// Keyed lookup (replaces the legacy linear name scan).
+    pub fn entry(&self, arch_name: &str, net_name: &str) -> Option<&EngineEntry> {
+        self.index
+            .get(&(arch_name.to_string(), net_name.to_string()))
+            .map(|&i| &self.entries[i])
+    }
+
+    /// Evaluate one entry at a named flavor: one [`EvalContext`] (one
+    /// macro-model construction) per design point.
+    pub fn eval_entry(
+        &self,
+        entry: &EngineEntry,
+        node: Node,
+        flavor: MemFlavor,
+        mram: Device,
+    ) -> DesignPoint {
+        let assignment = DeviceAssignment::from_flavor(&entry.arch, flavor, mram);
+        let ctx = EvalContext::new(&entry.arch, &entry.map, node, assignment);
+        let energy = ctx.energy_breakdown();
+        let power = ctx.power_model_from(&energy);
+        DesignPoint {
+            arch: entry.arch.name.clone(),
+            network: entry.map.network.clone(),
+            node,
+            flavor,
+            mram,
+            utilization: entry.map.utilization(&entry.arch),
+            energy,
+            power,
+            latency_ns: ctx.latency_ns,
+            area_mm2: ctx.area_report().total_mm2(),
+        }
+    }
+
+    /// Evaluate one design point by (arch, net) name.
+    pub fn point(
+        &self,
+        arch_name: &str,
+        net_name: &str,
+        node: Node,
+        flavor: MemFlavor,
+        mram: Device,
+    ) -> Option<DesignPoint> {
+        let entry = self.entry(arch_name, net_name)?;
+        Some(self.eval_entry(entry, node, flavor, mram))
+    }
+
+    /// Sequential grid sweep (the reference ordering): entries-major, then
+    /// nodes, then flavors — identical to the legacy `Sweeper::grid` loop.
+    pub fn grid_seq(
+        &self,
+        space: &DesignSpace,
+        mram_of: impl Fn(Node) -> Device,
+    ) -> Vec<DesignPoint> {
+        space
+            .coords(self)
+            .into_iter()
+            .map(|(e, node, flavor)| self.eval_entry(&self.entries[e], node, flavor, mram_of(node)))
+            .collect()
+    }
+
+    /// Parallel grid sweep: the same coordinate enumeration as
+    /// [`Engine::grid_seq`], sharded over `std::thread::scope` workers in
+    /// contiguous chunks. Each worker writes into its own disjoint slice of
+    /// the (pre-sized) output, so the result order — and every bit of every
+    /// design point — is identical to the sequential sweep.
+    pub fn grid(
+        &self,
+        space: &DesignSpace,
+        mram_of: impl Fn(Node) -> Device + Sync,
+    ) -> Vec<DesignPoint> {
+        let jobs = space.coords(self);
+        let n = jobs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let workers = worker_count(n);
+        if workers <= 1 {
+            return jobs
+                .into_iter()
+                .map(|(e, node, flavor)| {
+                    self.eval_entry(&self.entries[e], node, flavor, mram_of(node))
+                })
+                .collect();
+        }
+        let chunk = n.div_ceil(workers);
+        let mut out: Vec<Option<DesignPoint>> = (0..n).map(|_| None).collect();
+        let mram_of = &mram_of;
+        std::thread::scope(|s| {
+            for (slots, coords) in out.chunks_mut(chunk).zip(jobs.chunks(chunk)) {
+                s.spawn(move || {
+                    for (slot, &(e, node, flavor)) in slots.iter_mut().zip(coords) {
+                        *slot =
+                            Some(self.eval_entry(&self.entries[e], node, flavor, mram_of(node)));
+                    }
+                });
+            }
+        });
+        out.into_iter().map(|p| p.expect("every grid slot filled by its worker")).collect()
+    }
+}
+
+/// The sweep axes: evaluated as (entry × node × flavor), entry-major.
+/// Extending the lattice (more nodes, finer hybrid splits, more devices)
+/// means extending this enumerator — the evaluation path is shared.
+#[derive(Debug, Clone)]
+pub struct DesignSpace {
+    pub nodes: Vec<Node>,
+    pub flavors: Vec<MemFlavor>,
+}
+
+impl DesignSpace {
+    pub fn new(nodes: &[Node], flavors: &[MemFlavor]) -> DesignSpace {
+        DesignSpace { nodes: nodes.to_vec(), flavors: flavors.to_vec() }
+    }
+
+    /// Number of design points this space spans over an engine's pairs.
+    pub fn cardinality(&self, engine: &Engine) -> usize {
+        engine.entries().len() * self.nodes.len() * self.flavors.len()
+    }
+
+    /// The full coordinate list, in canonical (deterministic) order.
+    pub fn coords(&self, engine: &Engine) -> Vec<(usize, Node, MemFlavor)> {
+        let mut out = Vec::with_capacity(self.cardinality(engine));
+        for e in 0..engine.entries().len() {
+            for &node in &self.nodes {
+                for &flavor in &self.flavors {
+                    out.push((e, node, flavor));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Worker-thread count for parallel sweeps: the machine's parallelism,
+/// capped by the job count, overridable with `XR_DSE_THREADS` (1 forces
+/// the sequential path — useful for benchmarking the speedup).
+fn worker_count(jobs: usize) -> usize {
+    let hw = std::env::var("XR_DSE_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1));
+    hw.min(jobs).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{simba, PeConfig};
+    use crate::tech::paper_mram_for;
+    use crate::workload::builtin::{detnet, edsnet};
+
+    fn engine() -> Engine {
+        Engine::new(vec![simba(PeConfig::V2)], vec![detnet(), edsnet()])
+    }
+
+    #[test]
+    fn keyed_lookup_finds_pairs() {
+        let e = engine();
+        assert!(e.entry("simba_v2", "detnet").is_some());
+        assert!(e.entry("simba_v2", "edsnet").is_some());
+        assert!(e.entry("simba_v2", "nope").is_none());
+        assert!(e.entry("tpu", "detnet").is_none());
+    }
+
+    #[test]
+    fn space_cardinality_and_order() {
+        let e = engine();
+        let space = DesignSpace::new(&[Node::N28, Node::N7], &MemFlavor::ALL);
+        assert_eq!(space.cardinality(&e), 2 * 2 * 3);
+        let coords = space.coords(&e);
+        assert_eq!(coords.len(), 12);
+        // entry-major, node, then flavor
+        assert_eq!(coords[0], (0, Node::N28, MemFlavor::SramOnly));
+        assert_eq!(coords[1], (0, Node::N28, MemFlavor::P0));
+        assert_eq!(coords[3], (0, Node::N7, MemFlavor::SramOnly));
+        assert_eq!(coords[6], (1, Node::N28, MemFlavor::SramOnly));
+    }
+
+    #[test]
+    fn parallel_grid_is_bitwise_identical_to_sequential() {
+        let e = engine();
+        let space = DesignSpace::new(&[Node::N28, Node::N7], &MemFlavor::ALL);
+        let seq = e.grid_seq(&space, paper_mram_for);
+        let par = e.grid(&space, paper_mram_for);
+        assert_eq!(seq.len(), par.len());
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.arch, b.arch);
+            assert_eq!(a.network, b.network);
+            assert_eq!(a.node, b.node);
+            assert_eq!(a.flavor, b.flavor);
+            assert_eq!(a.mram, b.mram);
+            assert_eq!(a.energy.total_pj().to_bits(), b.energy.total_pj().to_bits());
+            assert_eq!(a.latency_ns.to_bits(), b.latency_ns.to_bits());
+            assert_eq!(a.area_mm2.to_bits(), b.area_mm2.to_bits());
+            assert_eq!(a.power.p_mem_uw(10.0).to_bits(), b.power.p_mem_uw(10.0).to_bits());
+        }
+    }
+
+    #[test]
+    fn empty_space_yields_empty_grid() {
+        let e = engine();
+        let space = DesignSpace::new(&[], &MemFlavor::ALL);
+        assert!(e.grid(&space, paper_mram_for).is_empty());
+    }
+}

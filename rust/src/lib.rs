@@ -10,9 +10,12 @@
 //!    [`util`] (JSON, PRNG, stats, CLI parsing), [`testkit`] (property
 //!    testing), [`mem`] (CACTI-lite), [`tech`] (DeepScale-lite + device
 //!    library), [`mapping`] (Timeloop-lite), [`energy`] (Accelergy-lite).
-//! 2. **The paper's contribution**: memory-oriented DTCO — [`area`],
-//!    [`power`] (P_mem-vs-IPS with power gating), [`pipeline`] (temporal
-//!    operation cycle), [`dse`] (sweep driver), [`report`].
+//! 2. **The paper's contribution**: memory-oriented DTCO — [`eval`] (the
+//!    unified evaluation engine: one `EvalContext` + `DeviceAssignment`
+//!    core and a parallel grid sweep), with [`area`], [`power`]
+//!    (P_mem-vs-IPS with power gating) and [`energy`] as thin wrappers
+//!    over it, [`pipeline`] (temporal operation cycle), [`dse`] (sweep
+//!    driver over the engine), [`report`].
 //! 3. **The serving runtime** proving the stack end-to-end: [`runtime`]
 //!    (PJRT load/execute of JAX-AOT'd DetNet/EDSNet), [`coordinator`]
 //!    (sensor streams, scheduler, power-gate controller, metrics),
@@ -29,6 +32,7 @@ pub mod tech;
 pub mod mem;
 pub mod mapping;
 pub mod energy;
+pub mod eval;
 pub mod area;
 pub mod power;
 pub mod pipeline;

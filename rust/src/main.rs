@@ -8,9 +8,14 @@
 //! xr-edge-dse ips     --node 7                           # Table 3
 //! xr-edge-dse edp                                        # Fig 2(f)
 //! xr-edge-dse fig3d                                      # Fig 3(d)
+//! xr-edge-dse pareto  --node 7 --ips 10                  # undominated designs
 //! xr-edge-dse sweep   --out artifacts/figures            # all CSV series
 //! xr-edge-dse serve   --model detnet --fps 10 --seconds 5  # PJRT serving
 //! ```
+//!
+//! All analytical commands route through the unified evaluation engine
+//! (`xr_edge_dse::eval`): grids are sharded across threads (override with
+//! `XR_DSE_THREADS`, 1 = sequential) with deterministic output ordering.
 
 use xr_edge_dse::arch::{self, MemFlavor, PeConfig};
 use xr_edge_dse::report::{pct, sci, Table};
@@ -252,6 +257,43 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
             println!("named flavors: P0 {:.2} µW, P1 {:.2} µW, best split {:.2} µW",
                 find(p0), find(p1), pts[0].p_mem_uw);
         }
+        "pareto" => {
+            // Which (arch × flavor) variants at --node are undominated in
+            // (P_mem @ --ips, area, latency)? Engine-evaluated grid +
+            // pareto::frontier, the §5 decision procedure as a command.
+            let ips = args.get_f64("ips")?.unwrap_or(10.0);
+            let net = workload::builtin::by_name(args.get("net").unwrap())?;
+            let s = dse::Sweeper::new(
+                vec![arch::cpu(), arch::eyeriss(PeConfig::V2), arch::simba(PeConfig::V2)],
+                vec![net.clone()],
+            );
+            let pts: Vec<dse::DesignPoint> = s.grid(&[node], &MemFlavor::ALL, |_| mram);
+            let feasible = dse::pareto::feasible(&pts, ips);
+            let front = dse::pareto::frontier(&pts, ips);
+            let mut t = Table::new(
+                &format!(
+                    "Pareto frontier — {} @{} {} IPS (engine grid, {} points)",
+                    net.name,
+                    node.label(),
+                    ips,
+                    pts.len()
+                ),
+                &["arch", "flavor", "P_mem (µW)", "area (mm²)", "latency (ms)", "feasible", "frontier"],
+            );
+            for (i, p) in pts.iter().enumerate() {
+                let o = dse::pareto::objectives(p, ips);
+                t.row(vec![
+                    p.arch.clone(),
+                    p.flavor.label().into(),
+                    format!("{:.2}", o.p_mem_uw),
+                    format!("{:.2}", o.area_mm2),
+                    format!("{:.3}", o.latency_ms),
+                    if feasible.contains(&i) { "yes" } else { "NO" }.into(),
+                    if front.contains(&i) { "★" } else { "" }.into(),
+                ]);
+            }
+            print!("{}", t.render());
+        }
         "sweep" => {
             let out = std::path::PathBuf::from(args.get("out").unwrap());
             let n = write_figure_csvs(&out)?;
@@ -376,7 +418,7 @@ fn serve(args: &xr_edge_dse::util::cli::Args) -> anyhow::Result<()> {
 fn print_help() {
     println!(
         "xr-edge-dse — memory-oriented DSE of edge-AI hardware for XR (tinyML'23 reproduction)\n\
-         commands: map | energy | area | ips | edp | fig3d | hybrid | sweep | serve | help\n\n{}",
+         commands: map | energy | area | ips | edp | fig3d | pareto | hybrid | sweep | serve | help\n\n{}",
         usage(&specs())
     );
 }

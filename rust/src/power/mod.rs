@@ -22,8 +22,13 @@
 //! variant wins. P0/P1 curves are clipped at `IPS_max = 1/t_inf` ("limited
 //! based on maximum frequency supported by the memory architecture").
 
-use crate::arch::{Arch, LevelKind, MemFlavor};
-use crate::energy::EnergyBreakdown;
+//! Since the unified-engine refactor, [`power_model`] is a thin wrapper
+//! over [`crate::eval::EvalContext`], and [`PowerModel::p_mem_uw`]
+//! delegates to [`crate::eval::p_mem_uw`] — the single home of the
+//! temporal power formula shared with the hybrid-split sweep.
+
+use crate::arch::{Arch, MemFlavor};
+use crate::eval::{DeviceAssignment, EvalContext};
 use crate::mapping::NetworkMap;
 use crate::tech::{Device, Node};
 
@@ -51,9 +56,13 @@ pub struct PowerModel {
 impl PowerModel {
     /// Average memory power at `ips` inferences/second, µW.
     pub fn p_mem_uw(&self, ips: f64) -> f64 {
-        let active = (self.e_mem_inf_pj + self.e_wakeup_pj) * ips * 1e-6; // pJ·Hz → µW
-        let idle_frac = (1.0 - ips * self.latency_ns * 1e-9).max(0.0);
-        active + self.p_retention_uw * idle_frac
+        crate::eval::p_mem_uw(
+            self.e_mem_inf_pj,
+            self.e_wakeup_pj,
+            self.p_retention_uw,
+            self.latency_ns,
+            ips,
+        )
     }
 
     /// Weight-memory component of the power (Fig 5's weight series), µW.
@@ -67,7 +76,14 @@ impl PowerModel {
     }
 }
 
-/// Build the power model for a mapped network variant.
+/// Build the power model for a mapped network variant (thin wrapper over
+/// the unified engine: one macro-model construction shared with the
+/// energy/latency derivation). The gating semantics live in
+/// `eval::MacroSet`: any SRAM macro stays on the retention rail while idle
+/// (the paper's Fig 3(b)-(i) SRAM profile — there is no DRAM to reload
+/// from), NVM macros power off completely and charge a wakeup energy per
+/// inference event. So SRAM-only retains everything, P0 retains the
+/// activation-side SRAM, P1 retains nothing.
 pub fn power_model(
     arch: &Arch,
     map: &NetworkMap,
@@ -75,40 +91,8 @@ pub fn power_model(
     flavor: MemFlavor,
     mram: Device,
 ) -> PowerModel {
-    let breakdown: EnergyBreakdown = crate::energy::estimate(arch, map, node, flavor, mram);
-    let latency_ns = crate::energy::latency_ns(arch, map, node, flavor, mram);
-
-    let mut e_wakeup_pj = 0.0;
-    let mut p_retention_uw = 0.0;
-    for (lvl, model) in arch.macro_models(node, flavor, mram) {
-        if lvl.kind != LevelKind::SramMacro {
-            continue; // regfiles are inside the gated logic domain
-        }
-        let device = flavor.device_for(lvl, mram);
-        if device.is_nvm() {
-            e_wakeup_pj += model.wakeup_pj() * lvl.count as f64;
-        } else {
-            // Any SRAM macro stays on the retention rail while idle (the
-            // paper's Fig 3(b)-(i) SRAM profile: the SRAM pipeline cannot
-            // fully power off, there is no DRAM to reload from). NVM macros
-            // power off completely. So SRAM-only retains everything, P0
-            // retains the activation-side SRAM, P1 retains nothing.
-            p_retention_uw += model.total_standby_uw();
-        }
-    }
-
-    PowerModel {
-        arch: arch.name.clone(),
-        network: map.network.clone(),
-        node,
-        flavor,
-        mram,
-        e_mem_inf_pj: breakdown.mem_pj(),
-        e_weight_inf_pj: breakdown.weight_mem_pj(arch),
-        e_wakeup_pj,
-        p_retention_uw,
-        latency_ns,
-    }
+    let assignment = DeviceAssignment::from_flavor(arch, flavor, mram);
+    EvalContext::new(arch, map, node, assignment).power_model()
 }
 
 /// Find the cut-off IPS where the NVM variant's memory power equals the

@@ -62,7 +62,7 @@ pub fn percentile(samples: &[f64], q: f64) -> f64 {
         return f64::NAN;
     }
     let mut v: Vec<f64> = samples.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp); // NaN-safe: total order instead of panicking partial_cmp
     let rank = ((q.clamp(0.0, 1.0)) * (v.len() - 1) as f64).round() as usize;
     v[rank]
 }

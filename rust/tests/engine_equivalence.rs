@@ -1,0 +1,176 @@
+//! Unified-engine equivalence gates:
+//!
+//! 1. **Flavor vs assignment** — every named `MemFlavor`, lowered to its
+//!    hybrid bitmask and evaluated through `DeviceAssignment::from_mask`,
+//!    reproduces the flavor-path `energy::estimate` / `power::power_model`
+//!    numbers **bitwise** (the named flavors are lattice points of one
+//!    code path, not a parallel implementation).
+//! 2. **Parallel vs sequential** — the threaded `Sweeper::grid` produces
+//!    the same order and bit-identical totals as the sequential reference
+//!    loop for the full Fig-3(d) 36-point grid.
+
+use xr_edge_dse::arch::{cpu, eyeriss, simba, Arch, MemFlavor, PeConfig};
+use xr_edge_dse::dse::{fig3d_grid, hybrid, paper_sweeper};
+use xr_edge_dse::eval::{DesignSpace, DeviceAssignment, EvalContext};
+use xr_edge_dse::mapping::map_network;
+use xr_edge_dse::power::power_model;
+use xr_edge_dse::tech::{paper_mram_for, Node};
+use xr_edge_dse::workload::builtin;
+
+fn archs() -> Vec<Arch> {
+    vec![cpu(), eyeriss(PeConfig::V2), simba(PeConfig::V2)]
+}
+
+#[test]
+fn flavor_masks_reproduce_legacy_energy_bitwise() {
+    let net = builtin::by_name("detnet").unwrap();
+    for arch in archs() {
+        let map = map_network(&arch, &net);
+        for node in [Node::N28, Node::N7] {
+            let mram = paper_mram_for(node);
+            for flavor in MemFlavor::ALL {
+                let mask = hybrid::flavor_mask(&arch, flavor);
+                let ctx = EvalContext::new(
+                    &arch,
+                    &map,
+                    node,
+                    DeviceAssignment::from_mask(&arch, mask, mram),
+                );
+                let legacy = xr_edge_dse::energy::estimate(&arch, &map, node, flavor, mram);
+
+                assert_eq!(
+                    ctx.compute_pj.to_bits(),
+                    legacy.compute_pj.to_bits(),
+                    "{} {flavor:?} @{node:?}: compute",
+                    arch.name
+                );
+                assert_eq!(
+                    ctx.level_energies().len(),
+                    legacy.levels.len(),
+                    "{} {flavor:?} @{node:?}: level count",
+                    arch.name
+                );
+                for (a, b) in ctx.level_energies().iter().zip(&legacy.levels) {
+                    assert_eq!(a.level, b.level, "{}: level order", arch.name);
+                    assert_eq!(a.device, b.device, "{}/{}: device", arch.name, a.level);
+                    assert_eq!(
+                        a.read_pj.to_bits(),
+                        b.read_pj.to_bits(),
+                        "{}/{}: read energy",
+                        arch.name,
+                        a.level
+                    );
+                    assert_eq!(
+                        a.write_pj.to_bits(),
+                        b.write_pj.to_bits(),
+                        "{}/{}: write energy",
+                        arch.name,
+                        a.level
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn flavor_masks_reproduce_legacy_power_bitwise() {
+    let net = builtin::by_name("detnet").unwrap();
+    for arch in archs() {
+        let map = map_network(&arch, &net);
+        for node in [Node::N28, Node::N7] {
+            let mram = paper_mram_for(node);
+            for flavor in MemFlavor::ALL {
+                let mask = hybrid::flavor_mask(&arch, flavor);
+                let ctx = EvalContext::new(
+                    &arch,
+                    &map,
+                    node,
+                    DeviceAssignment::from_mask(&arch, mask, mram),
+                );
+                let legacy = power_model(&arch, &map, node, flavor, mram);
+
+                let tag = format!("{} {flavor:?} @{node:?}", arch.name);
+                assert_eq!(ctx.e_mem_inf_pj().to_bits(), legacy.e_mem_inf_pj.to_bits(), "{tag}: E_mem");
+                assert_eq!(ctx.e_wakeup_pj.to_bits(), legacy.e_wakeup_pj.to_bits(), "{tag}: E_wakeup");
+                assert_eq!(
+                    ctx.p_retention_uw.to_bits(),
+                    legacy.p_retention_uw.to_bits(),
+                    "{tag}: P_retention"
+                );
+                assert_eq!(ctx.latency_ns.to_bits(), legacy.latency_ns.to_bits(), "{tag}: latency");
+                for ips in [0.1, 10.0, 1000.0] {
+                    assert_eq!(
+                        ctx.p_mem_uw(ips).to_bits(),
+                        legacy.p_mem_uw(ips).to_bits(),
+                        "{tag}: P_mem @{ips}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn hybrid_evaluate_matches_power_model_at_named_flavors() {
+    // The acceptance gate behind `lattice_contains_the_named_flavors`,
+    // tightened: through the unified engine the two paths are identical,
+    // not merely within tolerance.
+    let net = builtin::by_name("detnet").unwrap();
+    for arch in [eyeriss(PeConfig::V2), simba(PeConfig::V2)] {
+        let map = map_network(&arch, &net);
+        let mram = paper_mram_for(Node::N7);
+        for flavor in MemFlavor::ALL {
+            let mask = hybrid::flavor_mask(&arch, flavor);
+            let h = hybrid::evaluate(&arch, &map, Node::N7, mram, mask, 10.0);
+            let pm = power_model(&arch, &map, Node::N7, flavor, mram);
+            assert_eq!(
+                h.p_mem_uw.to_bits(),
+                pm.p_mem_uw(10.0).to_bits(),
+                "{} {flavor:?}",
+                arch.name
+            );
+        }
+    }
+}
+
+#[test]
+fn parallel_grid_is_deterministic_and_bitwise_equal() {
+    let s = paper_sweeper().unwrap();
+    let par = fig3d_grid(&s); // threaded
+    let seq = s.grid_seq(&[Node::N28, Node::N7], &MemFlavor::ALL, paper_mram_for);
+    assert_eq!(par.len(), 36);
+    assert_eq!(par.len(), seq.len());
+    for (a, b) in par.iter().zip(&seq) {
+        assert_eq!(a.arch, b.arch);
+        assert_eq!(a.network, b.network);
+        assert_eq!(a.node, b.node);
+        assert_eq!(a.flavor, b.flavor);
+        assert_eq!(a.mram, b.mram);
+        assert_eq!(a.energy.total_pj().to_bits(), b.energy.total_pj().to_bits());
+        assert_eq!(a.energy.compute_pj.to_bits(), b.energy.compute_pj.to_bits());
+        assert_eq!(a.latency_ns.to_bits(), b.latency_ns.to_bits());
+        assert_eq!(a.area_mm2.to_bits(), b.area_mm2.to_bits());
+        assert_eq!(a.utilization.to_bits(), b.utilization.to_bits());
+        assert_eq!(a.power.p_mem_uw(10.0).to_bits(), b.power.p_mem_uw(10.0).to_bits());
+    }
+}
+
+#[test]
+fn grid_is_stable_across_repeated_parallel_runs() {
+    let s = paper_sweeper().unwrap();
+    let a = fig3d_grid(&s);
+    let b = fig3d_grid(&s);
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.arch, y.arch);
+        assert_eq!(x.flavor, y.flavor);
+        assert_eq!(x.energy.total_pj().to_bits(), y.energy.total_pj().to_bits());
+    }
+}
+
+#[test]
+fn design_space_cardinality_matches_grid_len() {
+    let s = paper_sweeper().unwrap();
+    let space = DesignSpace::new(&[Node::N28, Node::N7], &MemFlavor::ALL);
+    assert_eq!(space.cardinality(s.engine()), fig3d_grid(&s).len());
+}

@@ -1,0 +1,118 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no registry access, so this path dependency
+//! re-implements exactly the surface `xr-edge-dse` uses: [`Error`],
+//! [`Result`], and the [`anyhow!`] / [`bail!`] / [`ensure!`] macros.
+//! Errors are flattened to their display string at construction (no
+//! source-chain retention) — sufficient for a CLI whose only consumer of
+//! errors is terminal output.
+//!
+//! Like the real `anyhow`, [`Error`] deliberately does **not** implement
+//! `std::error::Error`, which is what makes the blanket
+//! `From<E: std::error::Error>` conversion (and thus `?` on `io::Error`
+//! etc.) coherent.
+
+use std::fmt;
+
+/// A flattened error message.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything printable (the `anyhow!` entry point).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// `{e:?}` and `{e:#}` both print the message — there is no retained chain.
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string (or any `Display` value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error built by [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn macros_build_errors() {
+        fn inner(fail: bool) -> crate::Result<u32> {
+            crate::ensure!(!fail, "failed with {}", 42);
+            Ok(7)
+        }
+        assert_eq!(inner(false).unwrap(), 7);
+        let e = inner(true).unwrap_err();
+        assert_eq!(format!("{e}"), "failed with 42");
+        assert_eq!(format!("{e:#}"), "failed with 42");
+        assert_eq!(format!("{e:?}"), "failed with 42");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn read() -> crate::Result<String> {
+            Ok(std::fs::read_to_string("/definitely/not/a/path")?)
+        }
+        assert!(read().is_err());
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f() -> crate::Result<()> {
+            crate::bail!("stop {}", "now");
+        }
+        assert_eq!(f().unwrap_err().to_string(), "stop now");
+    }
+}
