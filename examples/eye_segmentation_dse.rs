@@ -3,16 +3,16 @@
 //! application's IPS_min at the lowest memory power, and what does it cost
 //! in area? This is the §5 decision procedure ("one needs to carefully
 //! fine-tune the proportion of the splits between NVM and SRAM") run as a
-//! program.
+//! program — expressed as one query with a vs-SRAM baseline, plus a
+//! `.pareto(..)` stage for the shortlist.
 //!
 //! Run: `cargo run --release --example eye_segmentation_dse`
 
 use xr_edge_dse::arch::{eyeriss, simba, MemFlavor, PeConfig};
-use xr_edge_dse::mapping::map_network;
+use xr_edge_dse::eval::{Engine, Query};
 use xr_edge_dse::pipeline::meets_ips;
-use xr_edge_dse::power::{power_model, savings_at};
 use xr_edge_dse::report::{pct, Table};
-use xr_edge_dse::tech::{paper_mram_for, Node};
+use xr_edge_dse::tech::Node;
 use xr_edge_dse::workload::builtin;
 
 fn main() -> anyhow::Result<()> {
@@ -24,63 +24,55 @@ fn main() -> anyhow::Result<()> {
         net.true_macs() as f64 / 1e6
     );
 
+    let engine = Engine::new(vec![simba(PeConfig::V2), eyeriss(PeConfig::V2)], vec![net]);
+
     let mut t = Table::new(
         "eye-segmentation design space @ IPS_min",
         &["arch", "node", "flavor", "feasible", "P_mem (µW)", "vs SRAM", "latency (ms)", "area (mm²)"],
     );
     let mut best: Option<(f64, String)> = None;
-    for arch in [simba(PeConfig::V2), eyeriss(PeConfig::V2)] {
-        let map = map_network(&arch, &net);
-        for node in [Node::N28, Node::N7] {
-            let mram = paper_mram_for(node);
-            let sram = power_model(&arch, &map, node, MemFlavor::SramOnly, mram);
-            for flavor in MemFlavor::ALL {
-                let pm = power_model(&arch, &map, node, flavor, mram);
-                let feasible = meets_ips(&pm, ips_min);
-                let p = pm.p_mem_uw(ips_min);
-                let a = xr_edge_dse::area::estimate(&arch, node, flavor, mram).total_mm2();
-                t.row(vec![
-                    arch.name.clone(),
-                    node.label(),
-                    flavor.label().into(),
-                    if feasible { "yes" } else { "NO" }.into(),
-                    format!("{p:.1}"),
-                    pct(savings_at(&sram, &pm, ips_min)),
-                    format!("{:.2}", pm.latency_ns / 1e6),
-                    format!("{a:.2}"),
-                ]);
-                let key = format!("{} @{} {}", arch.name, node.label(), flavor.label());
-                if feasible && best.as_ref().map(|(bp, _)| p < *bp).unwrap_or(true) {
-                    best = Some((p, key));
-                }
+    // Devices default to the paper's per-node pick (STT @28nm, VGSOT @7nm).
+    Query::over(&engine)
+        .nodes(&[Node::N28, Node::N7])
+        .baseline(|p| p.flavor() == Some(MemFlavor::SramOnly))
+        .for_each(|row| {
+            let p = &row.point;
+            let feasible = meets_ips(&p.power, ips_min);
+            let p_mem = p.p_mem_uw(ips_min);
+            t.row(vec![
+                p.arch.clone(),
+                p.node.label(),
+                p.flavor_label().into(),
+                if feasible { "yes" } else { "NO" }.into(),
+                format!("{p_mem:.1}"),
+                pct(row.p_mem_saving(ips_min).expect("baseline attached")),
+                format!("{:.2}", p.latency_ns / 1e6),
+                format!("{:.2}", p.area_mm2),
+            ]);
+            let key = format!("{} @{} {}", p.arch, p.node.label(), p.flavor_label());
+            if feasible && best.as_ref().map(|(bp, _)| p_mem < *bp).unwrap_or(true) {
+                best = Some((p_mem, key));
             }
-        }
-    }
+        });
     print!("{}", t.render());
     if let Some((p, key)) = best {
         println!("\nlowest-memory-power feasible design: {key} at {p:.1} µW");
     }
 
     // Pareto frontier over (P_mem, area, latency) at 7 nm — the undominated
-    // designs a team would actually shortlist.
+    // designs a team would actually shortlist, straight from the query's
+    // `.pareto(..)` stage.
     {
-        use xr_edge_dse::dse::{paper_sweeper, pareto};
-        let s = paper_sweeper()?;
-        let pts: Vec<_> = xr_edge_dse::dse::fig3d_grid(&s)
-            .into_iter()
-            .filter(|p| p.network == "edsnet" && p.node == Node::N7 && p.arch != "cpu")
-            .collect();
-        let front = pareto::frontier(&pts, ips_min);
+        let front = Query::over(&engine).nodes(&[Node::N7]).pareto(ips_min).points();
         println!("\nPareto-optimal variants (P_mem @{ips_min} IPS, area, latency):");
-        for &i in &front {
-            let o = pareto::objectives(&pts[i], ips_min);
+        for p in &front {
             println!(
                 "  {} {:10} P_mem {:6.1} µW  area {:.2} mm²  latency {:.1} ms",
-                pts[i].arch,
-                pts[i].flavor.label(),
-                o.p_mem_uw,
-                o.area_mm2,
-                o.latency_ms
+                p.arch,
+                p.flavor_label(),
+                p.p_mem_uw(ips_min),
+                p.area_mm2,
+                p.latency_ns / 1e6
             );
         }
     }

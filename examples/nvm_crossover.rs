@@ -3,12 +3,17 @@
 //! this binary with the env overrides, and print the cut-off IPS for every
 //! (arch × workload × flavor × device) cell — the quantity Fig 5 annotates.
 //!
+//! The grid is one query with an explicit MRAM-device axis
+//! (`Devices::Each`) and the SRAM-only point of each (arch, net, device)
+//! group attached as baseline, so every crossover comes from the row
+//! itself.
+//!
 //! Run: `cargo run --release --example nvm_crossover`
 //! Sweep: `XR_DSE_VGSOT_READ_MULT=2.0 cargo run --release --example nvm_crossover`
 
 use xr_edge_dse::arch::{eyeriss, simba, MemFlavor, PeConfig};
-use xr_edge_dse::mapping::map_network;
-use xr_edge_dse::power::{crossover_ips, power_model};
+use xr_edge_dse::eval::{Devices, Engine, Query};
+use xr_edge_dse::power::crossover_ips;
 use xr_edge_dse::report::Table;
 use xr_edge_dse::tech::{knobs, Device, Node};
 use xr_edge_dse::workload::builtin;
@@ -20,37 +25,50 @@ fn main() -> anyhow::Result<()> {
         k.ret_uw_per_kb_7nm, k.wakeup_pj_per_byte_7nm, k.vgsot_read_mult
     );
 
+    let engine = Engine::new(
+        vec![simba(PeConfig::V2), eyeriss(PeConfig::V2)],
+        vec![builtin::by_name("detnet")?, builtin::by_name("edsnet")?],
+    );
+    let rows = Query::over(&engine)
+        .nodes(&[Node::N7])
+        .devices(Devices::Each(Device::MRAMS.to_vec()))
+        .baseline(|p| p.flavor() == Some(MemFlavor::SramOnly))
+        .collect();
+
     let mut t = Table::new(
         "Fig 5 — cut-off IPS (NVM wins below; '∞' = wins up to its max rate; '-' = never)",
         &["arch", "workload", "flavor", "STT", "SOT", "VGSOT", "max IPS"],
     );
-    for arch in [simba(PeConfig::V2), eyeriss(PeConfig::V2)] {
-        for net_name in ["detnet", "edsnet"] {
-            let net = builtin::by_name(net_name)?;
-            let map = map_network(&arch, &net);
-            for flavor in [MemFlavor::P1, MemFlavor::P0] {
-                let mut cells = Vec::new();
-                let mut max_ips = f64::INFINITY;
-                for device in Device::MRAMS {
-                    let sram = power_model(&arch, &map, Node::N7, MemFlavor::SramOnly, device);
-                    let nvm = power_model(&arch, &map, Node::N7, flavor, device);
-                    max_ips = nvm.max_ips();
-                    cells.push(match crossover_ips(&sram, &nvm) {
-                        Some(x) if (x - nvm.max_ips()).abs() < 1e-6 => "∞".to_string(),
-                        Some(x) => format!("{x:.1}"),
-                        None => "-".to_string(),
-                    });
-                }
-                t.row(vec![
-                    arch.name.clone(),
-                    net_name.into(),
-                    flavor.label().into(),
-                    cells[0].clone(),
-                    cells[1].clone(),
-                    cells[2].clone(),
-                    format!("{max_ips:.0}"),
-                ]);
+    // Rows arrive in canonical entry → device → flavor order, so every
+    // cell is a direct index — no per-cell scan over the grid.
+    let per_device = MemFlavor::ALL.len();
+    let per_entry = Device::MRAMS.len() * per_device;
+    for (ei, entry) in engine.entries().iter().enumerate() {
+        for flavor in [MemFlavor::P1, MemFlavor::P0] {
+            let fi = MemFlavor::ALL.iter().position(|&f| f == flavor).unwrap();
+            let mut cells = Vec::new();
+            let mut max_ips = f64::INFINITY;
+            for di in 0..Device::MRAMS.len() {
+                let row = &rows[ei * per_entry + di * per_device + fi];
+                assert_eq!(row.point.flavor(), Some(flavor), "canonical order");
+                let sram = &row.baseline.as_ref().expect("baseline attached").power;
+                let nvm = &row.point.power;
+                max_ips = nvm.max_ips();
+                cells.push(match crossover_ips(sram, nvm) {
+                    Some(x) if (x - nvm.max_ips()).abs() < 1e-6 => "∞".to_string(),
+                    Some(x) => format!("{x:.1}"),
+                    None => "-".to_string(),
+                });
             }
+            t.row(vec![
+                entry.arch.name.clone(),
+                entry.map.network.clone(),
+                flavor.label().into(),
+                cells[0].clone(),
+                cells[1].clone(),
+                cells[2].clone(),
+                format!("{max_ips:.0}"),
+            ]);
         }
     }
     print!("{}", t.render());

@@ -1,19 +1,19 @@
 //! Quickstart: evaluate one design point end-to-end with the analytical
-//! stack — map a workload onto an accelerator, estimate energy / latency /
-//! area, and ask the power model whether MRAM pays off at your frame rate.
+//! stack — map a workload onto an accelerator, sweep the three memory
+//! flavors with one query, and ask whether MRAM pays off at your frame
+//! rate.
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use xr_edge_dse::arch::{simba, MemFlavor, PeConfig};
-use xr_edge_dse::mapping::map_network;
-use xr_edge_dse::power::{crossover_ips, power_model, savings_at};
+use xr_edge_dse::eval::{Devices, Engine, Query};
+use xr_edge_dse::power::crossover_ips;
 use xr_edge_dse::tech::{Device, Node};
 use xr_edge_dse::util::units::format_si;
 use xr_edge_dse::workload::builtin;
-use xr_edge_dse::{area, energy};
 
 fn main() -> anyhow::Result<()> {
-    // 1. A workload and an architecture.
+    // 1. A workload and an architecture, mapped once into an engine.
     let net = builtin::by_name("detnet")?;
     let arch = simba(PeConfig::V2);
     println!(
@@ -22,9 +22,10 @@ fn main() -> anyhow::Result<()> {
         net.true_macs() as f64 / 1e6,
         xr_edge_dse::util::units::format_bytes(net.weight_bytes(8) as usize),
     );
+    let engine = Engine::new(vec![arch.clone()], vec![net]);
 
-    // 2. Map it (Timeloop-lite).
-    let map = map_network(&arch, &net);
+    // 2. The cached mapping (Timeloop-lite ran once, at engine build).
+    let map = &engine.entries()[0].map;
     println!(
         "mapped onto {}: {:.0} cycles, {:.1}% array utilization",
         arch.name,
@@ -32,33 +33,34 @@ fn main() -> anyhow::Result<()> {
         map.utilization(&arch) * 100.0
     );
 
-    // 3. Energy + latency at 7 nm for the three memory flavors.
-    let node = Node::N7;
-    let mram = Device::VgsotMram;
-    for flavor in MemFlavor::ALL {
-        let e = energy::estimate(&arch, &map, node, flavor, mram);
-        let lat = energy::latency_ns(&arch, &map, node, flavor, mram);
-        let a = area::estimate(&arch, node, flavor, mram);
+    // 3. Energy + latency + area at 7 nm for the three memory flavors —
+    //    one query, with the SRAM-only point attached as baseline.
+    let rows = Query::over(&engine)
+        .nodes(&[Node::N7])
+        .devices(Devices::Fixed(Device::VgsotMram))
+        .baseline(|p| p.flavor() == Some(MemFlavor::SramOnly))
+        .collect();
+    for row in &rows {
+        let p = &row.point;
         println!(
             "  {:9} energy {:>10}  latency {:>9}  area {:.2} mm²",
-            flavor.label(),
-            format_si(e.total_pj() * 1e-12, "J"),
-            format_si(lat * 1e-9, "s"),
-            a.total_mm2()
+            p.flavor_label(),
+            format_si(p.energy.total_pj() * 1e-12, "J"),
+            format_si(p.latency_ns * 1e-9, "s"),
+            p.area_mm2
         );
     }
 
     // 4. Should you use MRAM at 10 inferences/second? (Table 3's question.)
-    let sram = power_model(&arch, &map, node, MemFlavor::SramOnly, mram);
-    let p1 = power_model(&arch, &map, node, MemFlavor::P1, mram);
+    let (sram, p1) = (&rows[0], &rows[2]);
     let ips = 10.0;
     println!(
         "\nat {ips} IPS: SRAM {:.1} µW vs P1 {:.1} µW → P1 saves {:.1}%",
-        sram.p_mem_uw(ips),
-        p1.p_mem_uw(ips),
-        savings_at(&sram, &p1, ips) * 100.0
+        sram.point.p_mem_uw(ips),
+        p1.point.p_mem_uw(ips),
+        p1.p_mem_saving(ips).expect("baseline attached") * 100.0
     );
-    if let Some(x) = crossover_ips(&sram, &p1) {
+    if let Some(x) = crossover_ips(&sram.point.power, &p1.point.power) {
         println!("P1 wins below the cut-off of {x:.0} IPS");
     }
     Ok(())

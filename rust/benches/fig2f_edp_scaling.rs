@@ -3,11 +3,13 @@
 //! Paper claims: node scaling buys up to 4.5× energy; systolic accelerators
 //! win latency but the CPU stays energy-competitive; Simba saves 26%
 //! (DetNet) / 33% (EDSNet) energy vs Eyeriss at the baseline nodes.
+//!
+//! Both the v1 and v2 grids are queries over the unified engine.
 
-use xr_edge_dse::dse::paper_sweeper;
 use xr_edge_dse::arch::MemFlavor;
+use xr_edge_dse::dse::{paper_sweeper, Assignments, Engine, Query};
 use xr_edge_dse::report::{Csv, Table};
-use xr_edge_dse::tech::{paper_mram_for, Node};
+use xr_edge_dse::tech::Node;
 use xr_edge_dse::util::benchkit::{bench, figure_header};
 
 fn main() -> anyhow::Result<()> {
@@ -17,14 +19,16 @@ fn main() -> anyhow::Result<()> {
     );
 
     let s = paper_sweeper()?;
-    let pts = s.grid(&Node::ALL, &[MemFlavor::SramOnly], paper_mram_for);
+    let pts = Query::over(s.engine())
+        .nodes(&Node::ALL)
+        .assignments(Assignments::Flavors(vec![MemFlavor::SramOnly]))
+        .points();
 
     // The paper's Fig 2(f) baseline uses the published chips' PE counts
     // (v1: Eyeriss 14×12, Simba 16×64); print those EDPs alongside the v2
     // grid used by Tables 2/3 so both generations are on record.
     {
-        use xr_edge_dse::dse::Sweeper;
-        let v1 = Sweeper::new(
+        let v1 = Engine::new(
             vec![
                 xr_edge_dse::arch::eyeriss(xr_edge_dse::arch::PeConfig::V1),
                 xr_edge_dse::arch::simba(xr_edge_dse::arch::PeConfig::V1),
@@ -34,19 +38,23 @@ fn main() -> anyhow::Result<()> {
                 xr_edge_dse::workload::builtin::by_name("edsnet")?,
             ],
         );
-        let mut t1 = Table::new(
-            "v1 (published-chip PE counts) EDP at baseline 40 nm",
-            &["net", "arch", "energy (µJ)", "latency (ms)", "EDP (µJ·ms)"],
-        );
-        for p in v1.grid(&[Node::N40], &[MemFlavor::SramOnly], paper_mram_for) {
-            t1.row(vec![
-                p.network.clone(),
-                p.arch.clone(),
-                format!("{:.2}", p.energy.total_pj() * 1e-6),
-                format!("{:.3}", p.latency_ns / 1e6),
-                format!("{:.2}", p.energy.total_pj() * 1e-6 * p.latency_ns / 1e6),
-            ]);
-        }
+        let t1 = Query::over(&v1)
+            .nodes(&[Node::N40])
+            .assignments(Assignments::Flavors(vec![MemFlavor::SramOnly]))
+            .to_table(
+                "v1 (published-chip PE counts) EDP at baseline 40 nm",
+                &["net", "arch", "energy (µJ)", "latency (ms)", "EDP (µJ·ms)"],
+                |row| {
+                    let p = &row.point;
+                    vec![
+                        p.network.clone(),
+                        p.arch.clone(),
+                        format!("{:.2}", p.energy.total_pj() * 1e-6),
+                        format!("{:.3}", p.latency_ns / 1e6),
+                        format!("{:.2}", p.energy.total_pj() * 1e-6 * p.latency_ns / 1e6),
+                    ]
+                },
+            );
         print!("{}", t1.render());
     }
 
@@ -98,8 +106,13 @@ fn main() -> anyhow::Result<()> {
     assert!(se < ee, "simba {se} must beat eyeriss {ee} on DetNet");
     println!("shape check PASS: scaling ≤4.5×, systolic latency wins, Simba ≤ Eyeriss energy");
 
-    bench("fig2f 30-point grid", 2, 10, || {
-        std::hint::black_box(s.grid(&Node::ALL, &[MemFlavor::SramOnly], paper_mram_for));
+    bench("fig2f 30-point grid (query)", 2, 10, || {
+        std::hint::black_box(
+            Query::over(s.engine())
+                .nodes(&Node::ALL)
+                .assignments(Assignments::Flavors(vec![MemFlavor::SramOnly]))
+                .points(),
+        );
     });
     Ok(())
 }

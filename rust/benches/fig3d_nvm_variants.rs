@@ -4,9 +4,12 @@
 //! 7 nm on the systolic accelerators but are ~neutral on the CPU; (ii) P1
 //! costs more everywhere; (iii) P0 *saves* at 28 nm and reverses at 7 nm
 //! (STT read-optimized vs VGSOT write-optimized).
+//!
+//! The grid is a query with a vs-SRAM baseline stage: every row carries
+//! its group baseline, so the deltas need no quadratic scan.
 
 use xr_edge_dse::arch::MemFlavor;
-use xr_edge_dse::dse::{fig3d_grid, paper_sweeper};
+use xr_edge_dse::dse::{paper_sweeper, Query};
 use xr_edge_dse::report::{pct, Csv, Table};
 use xr_edge_dse::tech::Node;
 use xr_edge_dse::util::benchkit::{bench, figure_header};
@@ -18,54 +21,38 @@ fn main() -> anyhow::Result<()> {
     );
 
     let s = paper_sweeper()?;
-    let pts = fig3d_grid(&s);
-    let base = |p: &xr_edge_dse::dse::DesignPoint| {
-        pts.iter()
-            .find(|q| {
-                q.arch == p.arch
-                    && q.network == p.network
-                    && q.node == p.node
-                    && q.flavor == MemFlavor::SramOnly
-            })
-            .unwrap()
-            .energy
-            .total_pj()
-    };
+    let rows = Query::over(s.engine())
+        .nodes(&[Node::N28, Node::N7])
+        .baseline(|p| p.flavor() == Some(MemFlavor::SramOnly))
+        .collect();
 
+    // One flavor group per (arch × net × node): [SRAM-only, P0, P1].
     let mut t = Table::new(
         "single-inference energy (µJ)",
         &["net", "node", "arch", "SRAM-only", "P0", "P1", "P0 vs SRAM", "P1 vs SRAM"],
     );
-    let mut csv = Csv::new(&["net", "node_nm", "arch", "flavor", "mram", "total_pj"]);
-    for net in ["detnet", "edsnet"] {
-        for node in [Node::N28, Node::N7] {
-            for arch in ["cpu", "eyeriss_v2", "simba_v2"] {
-                let get = |f: MemFlavor| {
-                    pts.iter()
-                        .find(|p| p.arch == arch && p.network == net && p.node == node && p.flavor == f)
-                        .unwrap()
-                };
-                let (s0, p0, p1) = (get(MemFlavor::SramOnly), get(MemFlavor::P0), get(MemFlavor::P1));
-                t.row(vec![
-                    net.into(),
-                    node.label(),
-                    arch.into(),
-                    format!("{:.2}", s0.energy.total_pj() * 1e-6),
-                    format!("{:.2}", p0.energy.total_pj() * 1e-6),
-                    format!("{:.2}", p1.energy.total_pj() * 1e-6),
-                    pct(p0.energy.total_pj() / s0.energy.total_pj() - 1.0),
-                    pct(p1.energy.total_pj() / s0.energy.total_pj() - 1.0),
-                ]);
-            }
-        }
+    for group in rows.chunks(MemFlavor::ALL.len()) {
+        let (s0, p0, p1) = (&group[0], &group[1], &group[2]);
+        t.row(vec![
+            s0.point.network.clone(),
+            s0.point.node.label(),
+            s0.point.arch.clone(),
+            format!("{:.2}", s0.point.energy.total_pj() * 1e-6),
+            format!("{:.2}", p0.point.energy.total_pj() * 1e-6),
+            format!("{:.2}", p1.point.energy.total_pj() * 1e-6),
+            pct(p0.energy_vs_baseline().expect("baseline attached")),
+            pct(p1.energy_vs_baseline().expect("baseline attached")),
+        ]);
     }
-    for p in &pts {
+    let mut csv = Csv::new(&["net", "node_nm", "arch", "flavor", "mram", "total_pj"]);
+    for row in &rows {
+        let p = &row.point;
         csv.row(vec![
             p.network.clone(),
             format!("{}", p.node.nm()),
             p.arch.clone(),
-            p.flavor.label().into(),
-            p.mram.label().into(),
+            p.flavor_label().into(),
+            p.mram().label().into(),
             format!("{:.3e}", p.energy.total_pj()),
         ]);
     }
@@ -75,32 +62,33 @@ fn main() -> anyhow::Result<()> {
 
     // --- shape checks over the full grid ---
     let mut checks = 0;
-    for p in &pts {
-        let b = base(p);
-        match (p.flavor, p.node, p.arch.as_str()) {
-            (MemFlavor::P1, _, _) => {
+    for row in &rows {
+        let p = &row.point;
+        let b = row.baseline.as_ref().expect("baseline attached").energy.total_pj();
+        match (p.flavor(), p.node, p.arch.as_str()) {
+            (Some(MemFlavor::P1), _, _) => {
                 assert!(p.energy.total_pj() > b, "{}@{:?} P1 must cost", p.arch, p.node);
                 checks += 1;
             }
-            (MemFlavor::P0, Node::N28, _) => {
+            (Some(MemFlavor::P0), Node::N28, _) => {
                 assert!(p.energy.total_pj() < b, "{}@28 P0 must save", p.arch);
                 checks += 1;
             }
-            (MemFlavor::P0, Node::N7, a) if a != "cpu" => {
+            (Some(MemFlavor::P0), Node::N7, a) if a != "cpu" => {
                 assert!(p.energy.total_pj() > b, "{a}@7 P0 must cost");
                 checks += 1;
             }
             _ => {}
         }
-        if p.arch == "cpu" && p.flavor == MemFlavor::P1 {
+        if p.arch == "cpu" && p.flavor() == Some(MemFlavor::P1) {
             let delta = (p.energy.total_pj() - b).abs() / b;
             assert!(delta < 0.5, "cpu must stay ~flat, delta {delta}");
         }
     }
     println!("shape check PASS ({checks} grid assertions)");
 
-    bench("fig3d 36-point grid", 2, 10, || {
-        std::hint::black_box(fig3d_grid(&s));
+    bench("fig3d 36-point grid (query)", 2, 10, || {
+        std::hint::black_box(Query::over(s.engine()).nodes(&[Node::N28, Node::N7]).points());
     });
     Ok(())
 }

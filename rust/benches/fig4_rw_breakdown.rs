@@ -4,9 +4,12 @@
 //! (VGSOT write-optimized → read ≈50× write on their access mix); (ii) the
 //! trend reverses at P1-28nm (STT write-expensive) except Simba+EDSNet;
 //! (iii) compute dominates on the CPU, memory on the accelerators.
+//!
+//! The NVM variants are selected directly on the query's assignment axis
+//! (no post-hoc SRAM-row skipping).
 
 use xr_edge_dse::arch::MemFlavor;
-use xr_edge_dse::dse::{fig3d_grid, paper_sweeper};
+use xr_edge_dse::dse::{paper_sweeper, Assignments, Query};
 use xr_edge_dse::report::{Csv, Table};
 use xr_edge_dse::tech::Node;
 use xr_edge_dse::util::benchkit::{bench, figure_header};
@@ -18,7 +21,11 @@ fn main() -> anyhow::Result<()> {
     );
 
     let s = paper_sweeper()?;
-    let pts = fig3d_grid(&s);
+    let nvm = Assignments::Flavors(vec![MemFlavor::P0, MemFlavor::P1]);
+    let pts = Query::over(s.engine())
+        .nodes(&[Node::N28, Node::N7])
+        .assignments(nvm.clone())
+        .points();
 
     let mut t = Table::new(
         "energy breakdown (µJ; macro-level reads/writes)",
@@ -26,15 +33,12 @@ fn main() -> anyhow::Result<()> {
     );
     let mut csv = Csv::new(&["net", "arch", "node_nm", "flavor", "compute_pj", "read_pj", "write_pj"]);
     for p in &pts {
-        if p.flavor == MemFlavor::SramOnly {
-            continue; // Fig 4 shows the NVM variants
-        }
         let (r, w) = (p.energy.macro_read_pj(), p.energy.macro_write_pj());
         t.row(vec![
             p.network.clone(),
             p.arch.clone(),
             p.node.label(),
-            p.flavor.label().into(),
+            p.flavor_label().into(),
             format!("{:.2}", p.energy.compute_pj * 1e-6),
             format!("{:.2}", r * 1e-6),
             format!("{:.2}", w * 1e-6),
@@ -44,7 +48,7 @@ fn main() -> anyhow::Result<()> {
             p.network.clone(),
             p.arch.clone(),
             format!("{}", p.node.nm()),
-            p.flavor.label().into(),
+            p.flavor_label().into(),
             format!("{:.3e}", p.energy.compute_pj),
             format!("{:.3e}", r),
             format!("{:.3e}", w),
@@ -57,12 +61,14 @@ fn main() -> anyhow::Result<()> {
     // --- shape checks ---
     for p in &pts {
         let (r, w) = (p.energy.macro_read_pj(), p.energy.macro_write_pj());
-        match (p.flavor, p.node) {
-            (MemFlavor::P0, _) => assert!(r > w, "{} {:?} P0: reads must dominate", p.arch, p.node),
-            (MemFlavor::P1, Node::N7) => {
+        match (p.flavor(), p.node) {
+            (Some(MemFlavor::P0), _) => {
+                assert!(r > w, "{} {:?} P0: reads must dominate", p.arch, p.node)
+            }
+            (Some(MemFlavor::P1), Node::N7) => {
                 assert!(r > 3.0 * w, "{} P1@7: read {r} !≫ write {w}", p.arch)
             }
-            (MemFlavor::P1, Node::N28) if p.arch == "eyeriss_v2" => {
+            (Some(MemFlavor::P1), Node::N28) if p.arch == "eyeriss_v2" => {
                 assert!(w > r, "eyeriss P1@28: writes must dominate ({w} vs {r})")
             }
             _ => {}
@@ -71,7 +77,7 @@ fn main() -> anyhow::Result<()> {
         // weight-residency optimization makes Simba+EDSNet P0@7nm
         // borderline (memory ≈ compute), so assert dominance with a small
         // tolerance for the accelerators.
-        if p.flavor == MemFlavor::P0 {
+        if p.flavor() == Some(MemFlavor::P0) {
             if p.arch == "cpu" {
                 assert!(p.energy.compute_pj > p.energy.mem_pj());
             } else {
@@ -89,8 +95,10 @@ fn main() -> anyhow::Result<()> {
     }
     println!("shape check PASS");
 
-    bench("fig4 breakdown recompute", 2, 10, || {
-        std::hint::black_box(fig3d_grid(&s));
+    bench("fig4 breakdown recompute (query)", 2, 10, || {
+        std::hint::black_box(
+            Query::over(s.engine()).nodes(&[Node::N28, Node::N7]).assignments(nvm.clone()).points(),
+        );
     });
     Ok(())
 }

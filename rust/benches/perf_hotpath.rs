@@ -49,6 +49,19 @@ fn main() -> anyhow::Result<()> {
             par_mean < seq_mean * 3.0 + 0.01,
             "parallel grid unreasonably slow: {par_mean}s vs {seq_mean}s"
         );
+
+        // L3a'': the query surface over the same space — its batching /
+        // staging layer must be ~free relative to raw engine grids.
+        use xr_edge_dse::dse::Query;
+        let (query_mean, _, _) = bench("L3a'' fig3d grid via Query   (engine)", 3, 30, || {
+            std::hint::black_box(
+                Query::over(engine).nodes(&[Node::N28, Node::N7]).points(),
+            );
+        });
+        assert!(
+            query_mean < par_mean * 3.0 + 0.01,
+            "query overhead unreasonable: {query_mean}s vs {par_mean}s"
+        );
     }
 
     // L3b: mapper alone on the big workload.

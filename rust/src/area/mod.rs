@@ -16,7 +16,9 @@ use crate::tech::{Device, Node};
 pub struct AreaReport {
     pub arch: String,
     pub node: Node,
-    pub flavor: MemFlavor,
+    /// The named flavor this report was evaluated at; `None` for arbitrary
+    /// hybrid lattice points.
+    pub flavor: Option<MemFlavor>,
     pub mram: Device,
     pub compute_mm2: f64,
     /// (level name, total area mm²) per hierarchy level.

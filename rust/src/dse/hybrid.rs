@@ -12,13 +12,15 @@
 //! Since the unified-engine refactor, [`evaluate`] is a wrapper over
 //! [`crate::eval::EvalContext`] with a [`DeviceAssignment`] lowered from
 //! the bitmask — the named flavors and the hybrid lattice share one
-//! energy/latency/power code path instead of three.
+//! energy/latency/power code path instead of three. [`sweep`] is a
+//! [`Query`] with [`Assignments::Lattice`]: the lattice is a first-class
+//! axis of the query surface, and this module is a thin ranking shim over
+//! it.
 
 use crate::arch::{Arch, LevelKind};
-use crate::eval::{DeviceAssignment, EvalContext};
+use crate::eval::{Assignments, DesignPoint, DeviceAssignment, Devices, Engine, EvalContext, Query};
 use crate::mapping::NetworkMap;
 use crate::tech::{Device, Node};
-use crate::util::units::UM2_PER_MM2;
 
 /// One hybrid configuration: the subset of macro levels implemented in MRAM
 /// (bitmask over `macro_level_names`).
@@ -62,18 +64,38 @@ pub fn evaluate(
         e_wakeup_pj: ctx.e_wakeup_pj,
         p_retention_uw: ctx.p_retention_uw,
         p_mem_uw: ctx.p_mem_uw(ips),
-        area_mm2: ctx.macros.hybrid_area_um2() / UM2_PER_MM2,
+        area_mm2: ctx.area_report().total_mm2(),
+    }
+}
+
+/// Convert an engine design point (lattice assignment) to the ranked form.
+fn hybrid_point(arch: &Arch, p: &DesignPoint, ips: f64) -> HybridPoint {
+    HybridPoint {
+        mram_levels: p.assignment.mram_level_names(arch),
+        e_mem_inf_pj: p.power.e_mem_inf_pj,
+        e_wakeup_pj: p.power.e_wakeup_pj,
+        p_retention_uw: p.power.p_retention_uw,
+        p_mem_uw: p.p_mem_uw(ips),
+        area_mm2: p.area_mm2,
     }
 }
 
 /// Exhaustive sweep over the full per-level lattice; returns all points
-/// sorted by memory power (best first; NaN-safe total order).
+/// sorted by memory power (best first; NaN-safe total order). This is a
+/// [`Query`] with [`Assignments::Lattice`] ranked through `top_k` — the
+/// enumeration, parallel evaluation and stable ordering all come from the
+/// query surface.
 pub fn sweep(arch: &Arch, map: &NetworkMap, node: Node, mram: Device, ips: f64) -> Vec<HybridPoint> {
-    let mut pts: Vec<HybridPoint> = (0..DeviceAssignment::lattice_size(arch))
-        .map(|mask| evaluate(arch, map, node, mram, mask, ips))
-        .collect();
-    pts.sort_by(|a, b| a.p_mem_uw.total_cmp(&b.p_mem_uw));
-    pts
+    let engine = Engine::from_mapped(arch.clone(), map.clone());
+    Query::over(&engine)
+        .nodes(&[node])
+        .devices(Devices::Fixed(mram))
+        .assignments(Assignments::Lattice)
+        .top_k(move |p| p.p_mem_uw(ips), usize::MAX)
+        .points()
+        .iter()
+        .map(|p| hybrid_point(arch, p, ips))
+        .collect()
 }
 
 /// The mask corresponding to a named flavor (for cross-checks).

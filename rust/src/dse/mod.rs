@@ -8,11 +8,16 @@
 //! pair mapped once and indexed by key), [`Sweeper::grid`] shards the
 //! sweep across threads with deterministic ordering, and each design point
 //! costs exactly one macro-model construction.
+//!
+//! New consumers should prefer the composable [`Query`] surface
+//! (re-exported here) over the legacy [`Sweeper`] shim: it spans the same
+//! grid plus device axes and the hybrid lattice, with baseline /
+//! feasibility / Pareto / top-k stages built in.
 
 pub mod hybrid;
 pub mod pareto;
 
-pub use crate::eval::{DesignPoint, DesignSpace, Engine};
+pub use crate::eval::{Assignments, DesignPoint, DesignSpace, Devices, Engine, Query, QueryRow};
 
 use crate::arch::{Arch, MemFlavor, PeConfig};
 use crate::tech::{paper_mram_for, Device, Node};
@@ -109,8 +114,8 @@ mod tests {
         let s = paper_sweeper().unwrap();
         for p in fig3d_grid(&s) {
             match p.node {
-                Node::N7 => assert_eq!(p.mram, Device::VgsotMram),
-                _ => assert_eq!(p.mram, Device::SttMram),
+                Node::N7 => assert_eq!(p.mram(), Device::VgsotMram),
+                _ => assert_eq!(p.mram(), Device::SttMram),
             }
         }
     }
@@ -128,7 +133,7 @@ mod tests {
                 q.arch == "simba_v2"
                     && q.network == "detnet"
                     && q.node == Node::N7
-                    && q.flavor == MemFlavor::P1
+                    && q.flavor() == Some(MemFlavor::P1)
             })
             .unwrap();
         assert_eq!(p.energy.total_pj(), q.energy.total_pj());

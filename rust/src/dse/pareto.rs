@@ -38,11 +38,10 @@ pub fn frontier(points: &[DesignPoint], ips: f64) -> Vec<usize> {
         .collect()
 }
 
-/// Filter to points that can sustain `ips` at all (latency feasibility).
+/// Filter to points that can sustain `ips` at all (latency feasibility —
+/// one definition, owned by [`DesignPoint::feasible_at`]).
 pub fn feasible(points: &[DesignPoint], ips: f64) -> Vec<usize> {
-    (0..points.len())
-        .filter(|&i| points[i].latency_ns * 1e-9 * ips <= 1.0)
-        .collect()
+    (0..points.len()).filter(|&i| points[i].feasible_at(ips)).collect()
 }
 
 #[cfg(test)]

@@ -32,7 +32,9 @@ pub struct EnergyBreakdown {
     pub arch: String,
     pub network: String,
     pub node: Node,
-    pub flavor: MemFlavor,
+    /// The named flavor this breakdown was evaluated at; `None` for
+    /// arbitrary hybrid lattice points.
+    pub flavor: Option<MemFlavor>,
     pub mram: Device,
     pub compute_pj: f64,
     pub levels: Vec<LevelEnergy>,

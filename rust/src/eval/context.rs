@@ -3,7 +3,7 @@
 //! (arch, node, assignment) and shared by every derived product.
 
 use super::DeviceAssignment;
-use crate::arch::{Arch, BufferLevel, LevelKind, MemFlavor};
+use crate::arch::{Arch, BufferLevel, LevelKind};
 use crate::area::AreaReport;
 use crate::energy::{EnergyBreakdown, LevelEnergy};
 use crate::mapping::{accesses_at, NetworkMap};
@@ -79,9 +79,8 @@ impl<'a> MacroSet<'a> {
         p
     }
 
-    /// Die-area report (Table 2). Requires a named-flavor assignment (the
-    /// report struct is flavor-tagged); arbitrary lattice points use
-    /// [`MacroSet::hybrid_area_um2`].
+    /// Die-area report (Table 2). Works for every assignment; the report's
+    /// `flavor` tag is `None` for arbitrary lattice points.
     pub fn area_report(&self) -> AreaReport {
         let compute_mm2 = self.arch.total_macs() as f64 * mac_area_um2(self.node) / UM2_PER_MM2;
         let mut memory_mm2 = Vec::new();
@@ -98,32 +97,11 @@ impl<'a> MacroSet<'a> {
         AreaReport {
             arch: self.arch.name.clone(),
             node: self.node,
-            flavor: self.named_flavor(),
+            flavor: self.assignment.flavor,
             mram: self.assignment.mram,
             compute_mm2,
             memory_mm2,
         }
-    }
-
-    /// Compute + SRAM-macro area in µm² — the hybrid sweep's accounting
-    /// (register files excluded, matching the legacy `hybrid::evaluate`).
-    pub fn hybrid_area_um2(&self) -> f64 {
-        let mut area_um2 = self.arch.total_macs() as f64 * mac_area_um2(self.node);
-        for (lvl, model) in &self.models {
-            if lvl.kind == LevelKind::SramMacro {
-                area_um2 += model.total_area_um2();
-            }
-        }
-        area_um2
-    }
-
-    /// The named flavor behind this assignment; panics for arbitrary
-    /// lattice points, which have no flavor-tagged report form.
-    pub fn named_flavor(&self) -> MemFlavor {
-        self.assignment.flavor.expect(
-            "this product requires a named-flavor assignment (DeviceAssignment::from_flavor); \
-             arbitrary lattice points expose level_energies()/p_mem_uw() instead",
-        )
     }
 }
 
@@ -252,20 +230,20 @@ impl<'a> EvalContext<'a> {
         super::p_mem_uw(self.e_mem_inf_pj(), self.e_wakeup_pj, self.p_retention_uw, self.latency_ns, ips)
     }
 
-    /// The flavor-tagged energy report (named-flavor assignments only).
+    /// The energy report (flavor tag `None` for unnamed lattice points).
     pub fn energy_breakdown(&self) -> EnergyBreakdown {
         EnergyBreakdown {
             arch: self.arch().name.clone(),
             network: self.map.network.clone(),
             node: self.node(),
-            flavor: self.macros.named_flavor(),
+            flavor: self.macros.assignment.flavor,
             mram: self.assignment().mram,
             compute_pj: self.compute_pj,
             levels: self.level_energies.clone(),
         }
     }
 
-    /// The flavor-tagged power model (named-flavor assignments only).
+    /// The power model (flavor tag `None` for unnamed lattice points).
     pub fn power_model(&self) -> PowerModel {
         self.power_model_from(&self.energy_breakdown())
     }
@@ -277,7 +255,7 @@ impl<'a> EvalContext<'a> {
             arch: self.arch().name.clone(),
             network: self.map.network.clone(),
             node: self.node(),
-            flavor: self.macros.named_flavor(),
+            flavor: self.macros.assignment.flavor,
             mram: self.assignment().mram,
             e_mem_inf_pj: breakdown.mem_pj(),
             e_weight_inf_pj: breakdown.weight_mem_pj(self.arch()),
@@ -287,7 +265,7 @@ impl<'a> EvalContext<'a> {
         }
     }
 
-    /// The flavor-tagged area report (named-flavor assignments only).
+    /// The area report (flavor tag `None` for unnamed lattice points).
     pub fn area_report(&self) -> AreaReport {
         self.macros.area_report()
     }
@@ -296,7 +274,7 @@ impl<'a> EvalContext<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::arch::{simba, PeConfig};
+    use crate::arch::{simba, MemFlavor, PeConfig};
     use crate::mapping::map_network;
     use crate::tech::Device;
     use crate::workload::builtin::detnet;

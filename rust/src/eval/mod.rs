@@ -21,16 +21,22 @@
 //!   mapped once and indexed by key, with a [`Engine::grid`] that shards
 //!   design points across `std::thread::scope` workers while keeping the
 //!   exact output ordering (and bit patterns) of the sequential loop.
+//! - [`Query`] — the public sweep surface: a fluent, composable query over
+//!   the engine's axes (archs × nets × nodes × devices × assignments, the
+//!   hybrid lattice included) with chainable stages (baseline attach,
+//!   feasibility filter, Pareto, top-k) and streaming/collected sinks.
 //!
 //! The legacy entry points (`energy::estimate`, `power::power_model`,
 //! `area::estimate`, `dse::Sweeper`, `dse::hybrid::evaluate`) remain as
 //! thin wrappers, so the benches and examples stay source-compatible.
 
 mod context;
+mod query;
 mod space;
 
 pub use context::{EvalContext, LevelTraffic, MacroSet};
-pub use space::{DesignPoint, DesignSpace, Engine, EngineEntry};
+pub use query::{Assignments, Devices, Query, QueryRow};
+pub use space::{AssignSpec, Coord, DesignPoint, DesignSpace, Engine, EngineEntry};
 
 use crate::arch::{Arch, BufferLevel, LevelKind, MemFlavor};
 use crate::tech::Device;

@@ -1,0 +1,617 @@
+//! `eval::query` — the composable, query-first sweep surface over
+//! [`Engine`].
+//!
+//! Every consumer of the design space (CLI commands, figure CSV writers,
+//! benches, examples) used to hand-roll its own grid loop, feasibility
+//! filter and O(n²) baseline lookup. A [`Query`] replaces those loops with
+//! one declarative pipeline:
+//!
+//! ```text
+//! Query::over(&engine)                 // every (arch × net) pair
+//!     .archs(&["simba_v2"])            // optional axis filters
+//!     .nets(&["detnet"])
+//!     .nodes(&[Node::N28, Node::N7])
+//!     .devices(Devices::PaperPick)     // or Fixed(..) / Each(vec![..])
+//!     .assignments(Assignments::Flavors(MemFlavor::ALL.to_vec()))
+//!     //           Assignments::Lattice | Assignments::Masks(vec![..])
+//!     .baseline(|p| p.flavor() == Some(MemFlavor::SramOnly))
+//!     .filter_feasible(10.0)
+//!     .pareto(10.0)                    // or .top_k(metric, k)
+//!     .for_each(|row| ..)              // or .collect/.points/.to_table/.to_csv
+//! ```
+//!
+//! Execution reuses the engine's deterministic sharded evaluation
+//! ([`Engine::eval_coords`]): coordinates are enumerated in the canonical
+//! entry → node → device → assignment order, evaluated in parallel batches
+//! of whole baseline groups, and visited in that same order — so a
+//! collected query over named flavors is bitwise-identical to the legacy
+//! `Sweeper::grid`, and `for_each` streams full hybrid lattices without
+//! ever materializing the evaluated grid.
+//!
+//! Stages apply in a fixed order regardless of call order: evaluate →
+//! baseline attach → feasibility filter → pareto → top-k → sink. The
+//! baseline is resolved *within* each (arch, net, node, device) group —
+//! the group is evaluated as a unit, so attaching it is O(group), not a
+//! quadratic scan over the whole grid. `pareto` and `top_k` keep only a
+//! bounded archive (the running frontier / the current best k) while
+//! streaming.
+
+use crate::arch::{Arch, MemFlavor};
+use crate::dse::pareto::{dominates, objectives, Objectives};
+use crate::report::{Csv, Table};
+use crate::tech::{paper_mram_for, Device, Node};
+
+use super::space::{AssignSpec, Coord};
+use super::{DesignPoint, DeviceAssignment, Engine};
+
+/// Points evaluated (in parallel) per streaming batch. Batches always end
+/// on a baseline-group boundary, so a batch can exceed this by at most one
+/// group.
+const STREAM_BATCH: usize = 512;
+
+/// The assignment axis of a query.
+#[derive(Debug, Clone)]
+pub enum Assignments {
+    /// Named memory flavors (the paper's SRAM-only / P0 / P1 points).
+    Flavors(Vec<MemFlavor>),
+    /// Explicit hybrid-split bitmasks (bit *i* puts the *i*-th SRAM-macro
+    /// level in MRAM — the `dse::hybrid` convention).
+    Masks(Vec<u32>),
+    /// The full per-level NVM/SRAM lattice of each architecture
+    /// (`2^macro_levels` points; §5's "fine-tune the proportion of the
+    /// splits"). Arch-dependent: the lattice is enumerated per entry.
+    Lattice,
+}
+
+/// The MRAM-device axis of a query.
+#[derive(Debug, Clone)]
+pub enum Devices {
+    /// The paper's node-appropriate pick (STT at ≤28 nm, VGSOT at 7 nm).
+    PaperPick,
+    /// One fixed device for every node.
+    Fixed(Device),
+    /// An explicit device axis: one design point per listed device.
+    Each(Vec<Device>),
+}
+
+/// One result row: the evaluated point plus the group baseline attached by
+/// [`Query::baseline`] (the baseline row carries itself as baseline, so
+/// delta columns read +0.0% there, matching the legacy tables).
+#[derive(Debug, Clone)]
+pub struct QueryRow {
+    pub point: DesignPoint,
+    pub baseline: Option<DesignPoint>,
+}
+
+impl QueryRow {
+    /// Total-energy delta vs the group baseline (`energy/base − 1`;
+    /// positive = costs more than the baseline). `None` without a
+    /// `.baseline(..)` stage.
+    pub fn energy_vs_baseline(&self) -> Option<f64> {
+        self.baseline
+            .as_ref()
+            .map(|b| self.point.energy.total_pj() / b.energy.total_pj() - 1.0)
+    }
+
+    /// Memory-power saving vs the group baseline at `ips` (`1 − p/base`;
+    /// positive = this point wins), the Table-3 savings convention.
+    pub fn p_mem_saving(&self, ips: f64) -> Option<f64> {
+        self.baseline
+            .as_ref()
+            .map(|b| 1.0 - self.point.p_mem_uw(ips) / b.p_mem_uw(ips))
+    }
+
+    /// Area saving vs the group baseline (`1 − area/base`), the Table-2
+    /// savings convention.
+    pub fn area_saving(&self) -> Option<f64> {
+        self.baseline.as_ref().map(|b| 1.0 - self.point.area_mm2 / b.area_mm2)
+    }
+}
+
+type BaselineFn<'e> = Box<dyn Fn(&DesignPoint) -> bool + 'e>;
+type MetricFn<'e> = Box<dyn Fn(&DesignPoint) -> f64 + 'e>;
+
+/// A fluent, composable sweep over an [`Engine`] — see the module docs for
+/// the pipeline semantics.
+pub struct Query<'e> {
+    engine: &'e Engine,
+    archs: Option<Vec<String>>,
+    nets: Option<Vec<String>>,
+    nodes: Vec<Node>,
+    devices: Devices,
+    assignments: Assignments,
+    baseline: Option<BaselineFn<'e>>,
+    feasible_ips: Option<f64>,
+    pareto_ips: Option<f64>,
+    top_k: Option<(MetricFn<'e>, usize)>,
+}
+
+impl<'e> Query<'e> {
+    /// A query over every (arch × net) pair of the engine, defaulting to
+    /// all nodes, the paper's per-node MRAM pick, and the three named
+    /// flavors.
+    pub fn over(engine: &'e Engine) -> Query<'e> {
+        Query {
+            engine,
+            archs: None,
+            nets: None,
+            nodes: Node::ALL.to_vec(),
+            devices: Devices::PaperPick,
+            assignments: Assignments::Flavors(MemFlavor::ALL.to_vec()),
+            baseline: None,
+            feasible_ips: None,
+            pareto_ips: None,
+            top_k: None,
+        }
+    }
+
+    /// Restrict to the named architectures (engine entry order is kept).
+    /// Names must match the engine's entries exactly (e.g. `simba_v2`, not
+    /// the CLI alias `simba`); names matching no entry select nothing —
+    /// check [`Query::cardinality`] when an empty sweep would be a bug.
+    pub fn archs(mut self, names: &[&str]) -> Self {
+        self.archs = Some(names.iter().map(|s| s.to_string()).collect());
+        self
+    }
+
+    /// Restrict to the named networks (engine entry order is kept). Exact
+    /// names only, as with [`Query::archs`].
+    pub fn nets(mut self, names: &[&str]) -> Self {
+        self.nets = Some(names.iter().map(|s| s.to_string()).collect());
+        self
+    }
+
+    /// The process-node axis.
+    pub fn nodes(mut self, nodes: &[Node]) -> Self {
+        self.nodes = nodes.to_vec();
+        self
+    }
+
+    /// The MRAM-device axis.
+    pub fn devices(mut self, devices: Devices) -> Self {
+        self.devices = devices;
+        self
+    }
+
+    /// The assignment axis (named flavors, explicit masks, or the full
+    /// hybrid lattice).
+    pub fn assignments(mut self, assignments: Assignments) -> Self {
+        self.assignments = assignments;
+        self
+    }
+
+    /// Attach a baseline to every row: within each (arch, net, node,
+    /// device) group, the first point matching `pick` becomes the group's
+    /// baseline (e.g. `|p| p.flavor() == Some(MemFlavor::SramOnly)` for
+    /// vs-SRAM deltas).
+    pub fn baseline(mut self, pick: impl Fn(&DesignPoint) -> bool + 'e) -> Self {
+        self.baseline = Some(Box::new(pick));
+        self
+    }
+
+    /// Keep only points that can sustain `ips` (latency feasibility).
+    pub fn filter_feasible(mut self, ips: f64) -> Self {
+        self.feasible_ips = Some(ips);
+        self
+    }
+
+    /// Keep only the Pareto-undominated points in (P_mem @ `ips`, area,
+    /// latency) — the `dse::pareto` objectives. Survivors are emitted in
+    /// input order once the sweep finishes.
+    pub fn pareto(mut self, ips: f64) -> Self {
+        self.pareto_ips = Some(ips);
+        self
+    }
+
+    /// Keep the `k` points with the *smallest* `metric` (e.g.
+    /// `|p| p.p_mem_uw(10.0)`), emitted best-first. Ties keep arrival
+    /// order, so `k = usize::MAX` is a stable full sort by the metric.
+    pub fn top_k(mut self, metric: impl Fn(&DesignPoint) -> f64 + 'e, k: usize) -> Self {
+        self.top_k = Some((Box::new(metric), k));
+        self
+    }
+
+    // ---- axis enumeration -------------------------------------------------
+
+    fn selected_entries(&self) -> Vec<usize> {
+        let keep = |filter: &Option<Vec<String>>, name: &str| match filter {
+            None => true,
+            Some(names) => names.iter().any(|n| n == name),
+        };
+        (0..self.engine.entries().len())
+            .filter(|&i| {
+                let e = &self.engine.entries()[i];
+                keep(&self.archs, &e.arch.name) && keep(&self.nets, &e.map.network)
+            })
+            .collect()
+    }
+
+    fn devices_for(&self, node: Node) -> Vec<Device> {
+        match &self.devices {
+            Devices::PaperPick => vec![paper_mram_for(node)],
+            Devices::Fixed(d) => vec![*d],
+            Devices::Each(v) => v.clone(),
+        }
+    }
+
+    fn specs_for(&self, arch: &Arch) -> Vec<AssignSpec> {
+        match &self.assignments {
+            Assignments::Flavors(fs) => fs.iter().map(|&f| AssignSpec::Flavor(f)).collect(),
+            Assignments::Masks(ms) => ms.iter().map(|&m| AssignSpec::Mask(m)).collect(),
+            Assignments::Lattice => {
+                (0..DeviceAssignment::lattice_size(arch)).map(AssignSpec::Mask).collect()
+            }
+        }
+    }
+
+    /// Number of design points this query will evaluate (before filters).
+    pub fn cardinality(&self) -> usize {
+        let devs = match &self.devices {
+            Devices::PaperPick | Devices::Fixed(_) => 1,
+            Devices::Each(v) => v.len(),
+        };
+        self.selected_entries()
+            .iter()
+            .map(|&e| {
+                self.nodes.len() * devs * self.specs_for(&self.engine.entries()[e].arch).len()
+            })
+            .sum()
+    }
+
+    /// Coordinate groups sharing one (entry, node, device) — the baseline
+    /// scope — in canonical order. [`Query::coords`] is the flattened form
+    /// and `run` batches whole groups, so there is exactly one enumeration.
+    fn groups(&self) -> Vec<Vec<Coord>> {
+        let mut out = Vec::new();
+        for &e in &self.selected_entries() {
+            let specs = self.specs_for(&self.engine.entries()[e].arch);
+            for &node in &self.nodes {
+                for dev in self.devices_for(node) {
+                    out.push(specs.iter().map(|&spec| (e, node, spec, dev)).collect());
+                }
+            }
+        }
+        out
+    }
+
+    /// The full coordinate list in canonical order (entry → node → device
+    /// → assignment) — what the sinks evaluate.
+    pub fn coords(&self) -> Vec<Coord> {
+        self.groups().into_iter().flatten().collect()
+    }
+
+    // ---- execution --------------------------------------------------------
+
+    fn run(self, visit: &mut dyn FnMut(QueryRow)) {
+        let Query {
+            engine,
+            baseline,
+            feasible_ips,
+            pareto_ips,
+            top_k,
+            ..
+        } = &self;
+
+        let mut terminal = Terminal {
+            pareto: pareto_ips.map(|ips| (ips, Vec::new())),
+            topk: top_k.as_ref().map(|(m, k)| (m, *k, Vec::new())),
+        };
+
+        // Whole baseline groups accumulate until a batch is full, then the
+        // batch evaluates in parallel and emits in order.
+        let mut batch: Vec<Coord> = Vec::new();
+        let mut group_sizes: Vec<usize> = Vec::new();
+
+        let flush = |batch: &mut Vec<Coord>,
+                         group_sizes: &mut Vec<usize>,
+                         terminal: &mut Terminal,
+                         visit: &mut dyn FnMut(QueryRow)| {
+            if batch.is_empty() {
+                return;
+            }
+            // Points are moved (not cloned) out of the evaluated batch;
+            // only the group baseline is cloned per row.
+            let mut points = engine.eval_coords(batch).into_iter();
+            for &len in group_sizes.iter() {
+                let group: Vec<DesignPoint> = points.by_ref().take(len).collect();
+                let base = baseline
+                    .as_ref()
+                    .and_then(|pick| group.iter().find(|&p| pick(p)).cloned());
+                for point in group {
+                    if let Some(ips) = feasible_ips {
+                        if !point.feasible_at(*ips) {
+                            continue;
+                        }
+                    }
+                    terminal.push(QueryRow { point, baseline: base.clone() }, visit);
+                }
+            }
+            batch.clear();
+            group_sizes.clear();
+        };
+
+        for group in self.groups() {
+            group_sizes.push(group.len());
+            batch.extend(group);
+            if batch.len() >= STREAM_BATCH {
+                flush(&mut batch, &mut group_sizes, &mut terminal, visit);
+            }
+        }
+        flush(&mut batch, &mut group_sizes, &mut terminal, visit);
+        terminal.finish(visit);
+    }
+
+    // ---- sinks ------------------------------------------------------------
+
+    /// Stream every surviving row to `visit`, in canonical order, without
+    /// materializing the evaluated grid (evaluation happens in parallel
+    /// batches of whole baseline groups).
+    pub fn for_each(self, mut visit: impl FnMut(QueryRow)) {
+        self.run(&mut visit);
+    }
+
+    /// Collect the surviving rows.
+    pub fn collect(self) -> Vec<QueryRow> {
+        let mut rows = Vec::new();
+        self.run(&mut |row| rows.push(row));
+        rows
+    }
+
+    /// Collect the surviving design points (baselines dropped).
+    pub fn points(self) -> Vec<DesignPoint> {
+        let mut pts = Vec::new();
+        self.run(&mut |row| pts.push(row.point));
+        pts
+    }
+
+    /// Render the surviving rows as an ASCII table, one table row per
+    /// query row.
+    pub fn to_table(
+        self,
+        title: &str,
+        header: &[&str],
+        render: impl Fn(&QueryRow) -> Vec<String>,
+    ) -> Table {
+        let mut t = Table::new(title, header);
+        self.run(&mut |row| {
+            t.row(render(&row));
+        });
+        t
+    }
+
+    /// Render the surviving rows as a CSV series, one CSV row per query
+    /// row.
+    pub fn to_csv(self, header: &[&str], render: impl Fn(&QueryRow) -> Vec<String>) -> Csv {
+        let mut c = Csv::new(header);
+        self.run(&mut |row| {
+            c.row(render(&row));
+        });
+        c
+    }
+}
+
+/// The buffering tail stages: a running Pareto archive and/or a bounded
+/// best-k list. With neither set, rows pass straight through to the sink.
+#[allow(clippy::type_complexity)]
+struct Terminal<'q> {
+    pareto: Option<(f64, Vec<(QueryRow, Objectives)>)>,
+    topk: Option<(&'q MetricFn<'q>, usize, Vec<(QueryRow, f64)>)>,
+}
+
+impl Terminal<'_> {
+    fn push(&mut self, row: QueryRow, visit: &mut dyn FnMut(QueryRow)) {
+        if let Some((ips, archive)) = &mut self.pareto {
+            let o = objectives(&row.point, *ips);
+            if archive.iter().any(|(_, held)| dominates(held, &o)) {
+                return;
+            }
+            archive.retain(|(_, held)| !dominates(&o, held));
+            archive.push((row, o));
+        } else if let Some((metric, k, best)) = &mut self.topk {
+            if *k == usize::MAX {
+                // Unbounded (full-sort) mode: append now, one stable
+                // O(n log n) sort at finish — not n² insertions.
+                let m = (*metric)(&row.point);
+                best.push((row, m));
+            } else {
+                topk_insert(best, row, *metric, *k);
+            }
+        } else {
+            visit(row);
+        }
+    }
+
+    fn finish(self, visit: &mut dyn FnMut(QueryRow)) {
+        match (self.pareto, self.topk) {
+            (Some((_, archive)), Some((metric, k, _))) => {
+                // pareto ran first; rank its survivors by the metric.
+                let mut best = Vec::new();
+                for (row, _) in archive {
+                    topk_insert(&mut best, row, metric, k);
+                }
+                for (row, _) in best {
+                    visit(row);
+                }
+            }
+            (Some((_, archive)), None) => {
+                for (row, _) in archive {
+                    visit(row);
+                }
+            }
+            (None, Some((_, k, mut best))) => {
+                if k == usize::MAX {
+                    // stable: equal metrics keep arrival order, matching
+                    // the bounded path and the legacy sort_by(total_cmp)
+                    best.sort_by(|a, b| a.1.total_cmp(&b.1));
+                }
+                for (row, _) in best {
+                    visit(row);
+                }
+            }
+            (None, None) => {}
+        }
+    }
+}
+
+/// Stable bounded insert: keep the `k` smallest metric values, equal keys
+/// in arrival order (matches a stable `sort_by(total_cmp)` + truncate).
+fn topk_insert(
+    best: &mut Vec<(QueryRow, f64)>,
+    row: QueryRow,
+    metric: &MetricFn<'_>,
+    k: usize,
+) {
+    if k == 0 {
+        return;
+    }
+    let m = metric(&row.point);
+    let pos = best.partition_point(|(_, held)| held.total_cmp(&m).is_le());
+    if pos < k {
+        best.insert(pos, (row, m));
+        best.truncate(k);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{cpu, simba, PeConfig};
+    use crate::dse::pareto;
+    use crate::workload::builtin::{detnet, edsnet};
+
+    fn engine() -> Engine {
+        Engine::new(vec![cpu(), simba(PeConfig::V2)], vec![detnet(), edsnet()])
+    }
+
+    #[test]
+    fn query_matches_legacy_grid_order_and_bits() {
+        let e = engine();
+        let space = crate::eval::DesignSpace::new(&[Node::N28, Node::N7], &MemFlavor::ALL);
+        let legacy = e.grid(&space, paper_mram_for);
+        let q = Query::over(&e).nodes(&[Node::N28, Node::N7]).points();
+        assert_eq!(legacy.len(), q.len());
+        for (a, b) in legacy.iter().zip(&q) {
+            assert_eq!(a.arch, b.arch);
+            assert_eq!(a.network, b.network);
+            assert_eq!(a.node, b.node);
+            assert_eq!(a.flavor(), b.flavor());
+            assert_eq!(a.mram(), b.mram());
+            assert_eq!(a.energy.total_pj().to_bits(), b.energy.total_pj().to_bits());
+            assert_eq!(a.latency_ns.to_bits(), b.latency_ns.to_bits());
+        }
+    }
+
+    #[test]
+    fn axis_filters_and_cardinality() {
+        let e = engine();
+        let q = Query::over(&e)
+            .archs(&["simba_v2"])
+            .nets(&["detnet"])
+            .nodes(&[Node::N7])
+            .devices(Devices::Each(vec![Device::SttMram, Device::VgsotMram]));
+        // 1 arch × 1 net × 1 node × 2 devices × 3 flavors
+        assert_eq!(q.cardinality(), 6);
+        let pts = q.points();
+        assert_eq!(pts.len(), 6);
+        assert!(pts.iter().all(|p| p.arch == "simba_v2" && p.network == "detnet"));
+        // device axis is outer, assignment inner
+        assert_eq!(pts[0].mram(), Device::SttMram);
+        assert_eq!(pts[3].mram(), Device::VgsotMram);
+    }
+
+    #[test]
+    fn lattice_axis_enumerates_per_arch() {
+        let e = engine();
+        let q = Query::over(&e)
+            .nets(&["detnet"])
+            .nodes(&[Node::N7])
+            .devices(Devices::Fixed(Device::VgsotMram))
+            .assignments(Assignments::Lattice);
+        // cpu has 2 macro levels (4 masks), simba 5 (32 masks)
+        let cpu_lattice = DeviceAssignment::lattice_size(&cpu()) as usize;
+        let simba_lattice = DeviceAssignment::lattice_size(&simba(PeConfig::V2)) as usize;
+        assert_eq!(q.cardinality(), cpu_lattice + simba_lattice);
+        let pts = q.points();
+        assert_eq!(pts.len(), cpu_lattice + simba_lattice);
+        // mask lowering never carries a named-flavor tag
+        assert!(pts.iter().all(|p| p.flavor().is_none()));
+    }
+
+    #[test]
+    fn baseline_attaches_group_sram_point() {
+        let e = engine();
+        let rows = Query::over(&e)
+            .nodes(&[Node::N28, Node::N7])
+            .baseline(|p| p.flavor() == Some(MemFlavor::SramOnly))
+            .collect();
+        for row in &rows {
+            let b = row.baseline.as_ref().expect("every group has an SRAM point");
+            assert_eq!(b.arch, row.point.arch);
+            assert_eq!(b.network, row.point.network);
+            assert_eq!(b.node, row.point.node);
+            assert_eq!(b.flavor(), Some(MemFlavor::SramOnly));
+            if row.point.flavor() == Some(MemFlavor::SramOnly) {
+                assert_eq!(row.energy_vs_baseline().unwrap(), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_equals_collected() {
+        let e = engine();
+        let collected = Query::over(&e).nodes(&[Node::N28, Node::N7]).collect();
+        let mut streamed = Vec::new();
+        Query::over(&e)
+            .nodes(&[Node::N28, Node::N7])
+            .for_each(|row| streamed.push(row));
+        assert_eq!(collected.len(), streamed.len());
+        for (a, b) in collected.iter().zip(&streamed) {
+            assert_eq!(a.point.arch, b.point.arch);
+            assert_eq!(
+                a.point.energy.total_pj().to_bits(),
+                b.point.energy.total_pj().to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn pareto_stage_matches_frontier() {
+        let e = engine();
+        let all = Query::over(&e).nets(&["detnet"]).nodes(&[Node::N7]).points();
+        let front_idx = pareto::frontier(&all, 10.0);
+        let staged = Query::over(&e)
+            .nets(&["detnet"])
+            .nodes(&[Node::N7])
+            .pareto(10.0)
+            .points();
+        assert_eq!(staged.len(), front_idx.len());
+        for (p, &i) in staged.iter().zip(&front_idx) {
+            assert_eq!(p.arch, all[i].arch);
+            assert_eq!(p.flavor(), all[i].flavor());
+        }
+    }
+
+    #[test]
+    fn top_k_is_a_stable_bounded_sort() {
+        let e = engine();
+        let mut all = Query::over(&e).nodes(&[Node::N7]).points();
+        let staged = Query::over(&e)
+            .nodes(&[Node::N7])
+            .top_k(|p| p.p_mem_uw(10.0), 3)
+            .points();
+        all.sort_by(|a, b| a.p_mem_uw(10.0).total_cmp(&b.p_mem_uw(10.0)));
+        assert_eq!(staged.len(), 3);
+        for (a, b) in staged.iter().zip(&all) {
+            assert_eq!(a.p_mem_uw(10.0).to_bits(), b.p_mem_uw(10.0).to_bits());
+        }
+    }
+
+    #[test]
+    fn filter_feasible_screens_slow_points() {
+        let e = engine();
+        let all = Query::over(&e).nodes(&[Node::N7]).points();
+        let feasible = Query::over(&e).nodes(&[Node::N7]).filter_feasible(1e8).points();
+        assert!(feasible.len() < all.len());
+        assert!(feasible.iter().all(|p| p.feasible_at(1e8)));
+    }
+}

@@ -1,9 +1,11 @@
 //! The sweep driver: (arch × net) pairs mapped once and indexed by key
-//! ([`Engine`]), an axis enumerator ([`DesignSpace`]), and a parallel
-//! [`Engine::grid`] that shards evaluation across `std::thread::scope`
-//! workers with deterministic (sequential-identical) output ordering.
+//! ([`Engine`]), an axis enumerator ([`DesignSpace`]), and deterministic
+//! sharded evaluation ([`Engine::eval_coords`]) that splits coordinate
+//! lists across `std::thread::scope` workers with sequential-identical
+//! output ordering. The composable consumption surface over this driver is
+//! [`crate::eval::Query`].
 
-use std::collections::HashMap;
+use std::sync::OnceLock;
 
 use super::{DeviceAssignment, EvalContext};
 use crate::arch::{Arch, MemFlavor};
@@ -13,14 +15,18 @@ use crate::power::PowerModel;
 use crate::tech::{Device, Node};
 use crate::workload::Network;
 
-/// One evaluated design point.
+/// One evaluated design point, generalized over arbitrary per-level device
+/// assignments: the named flavors (SRAM-only/P0/P1) and the hybrid-split
+/// lattice points are both just [`DeviceAssignment`]s, distinguished only
+/// by the `Option<MemFlavor>` tag the assignment carries.
 #[derive(Debug, Clone)]
 pub struct DesignPoint {
     pub arch: String,
     pub network: String,
     pub node: Node,
-    pub flavor: MemFlavor,
-    pub mram: Device,
+    /// The per-level device choice this point was evaluated at. Its
+    /// `flavor` tag is `Some(..)` when it was lowered from a named flavor.
+    pub assignment: DeviceAssignment,
     pub energy: EnergyBreakdown,
     pub power: PowerModel,
     pub latency_ns: f64,
@@ -29,25 +35,78 @@ pub struct DesignPoint {
 }
 
 impl DesignPoint {
+    /// The named flavor this point was lowered from, when any.
+    pub fn flavor(&self) -> Option<MemFlavor> {
+        self.assignment.flavor
+    }
+
+    /// The MRAM device the assignment considered for its NVM levels.
+    pub fn mram(&self) -> Device {
+        self.assignment.mram
+    }
+
+    /// "SRAM-only" / "P0" / "P1" for named points, "hybrid" for arbitrary
+    /// lattice points (use [`DeviceAssignment::mram_level_names`] with the
+    /// architecture for the exact split).
+    pub fn flavor_label(&self) -> &'static str {
+        self.assignment.flavor.map(MemFlavor::label).unwrap_or("hybrid")
+    }
+
     pub fn edp(&self) -> f64 {
         crate::energy::edp(self.energy.total_pj(), self.latency_ns)
     }
+
+    /// Average memory power at `ips` inferences/second, µW.
+    pub fn p_mem_uw(&self, ips: f64) -> f64 {
+        self.power.p_mem_uw(ips)
+    }
+
+    /// Whether this point can sustain `ips` at all (latency feasibility).
+    pub fn feasible_at(&self, ips: f64) -> bool {
+        self.latency_ns * 1e-9 * ips <= 1.0
+    }
 }
 
+/// One coordinate of the assignment axis, before lowering against a
+/// concrete architecture: either a named flavor or a hybrid bitmask (the
+/// `dse::hybrid` bit-per-macro-level convention).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AssignSpec {
+    Flavor(MemFlavor),
+    Mask(u32),
+}
+
+impl AssignSpec {
+    /// Lower against an architecture and MRAM device.
+    pub fn lower(self, arch: &Arch, mram: Device) -> DeviceAssignment {
+        match self {
+            AssignSpec::Flavor(f) => DeviceAssignment::from_flavor(arch, f, mram),
+            AssignSpec::Mask(m) => DeviceAssignment::from_mask(arch, m, mram),
+        }
+    }
+}
+
+/// A fully specified sweep coordinate: (engine entry, node, assignment
+/// spec, MRAM device).
+pub type Coord = (usize, Node, AssignSpec, Device);
+
 /// One mapped (architecture, workload) pair — the node-independent part of
-/// a design point, cached so sweeps never re-run the mapper.
+/// a design point, cached so sweeps never re-run the mapper. The network
+/// name lives in `map.network`.
 pub struct EngineEntry {
     pub arch: Arch,
-    pub net: Network,
     pub map: NetworkMap,
 }
 
 /// The evaluation engine: every (arch × net) pair mapped once at
 /// construction and indexed by `(arch name, net name)` key, with point
-/// lookup and sequential/parallel grid sweeps on top.
+/// lookup and deterministic sequential/parallel coordinate evaluation on
+/// top.
 pub struct Engine {
     entries: Vec<EngineEntry>,
-    index: HashMap<(String, String), usize>,
+    /// Entry indices sorted by (arch name, net name) — binary-searchable
+    /// with borrowed `&str` keys, so hot-path lookups never allocate.
+    index: Vec<usize>,
 }
 
 impl Engine {
@@ -55,14 +114,29 @@ impl Engine {
     /// `Sweeper::new`).
     pub fn new(archs: Vec<Arch>, nets: Vec<Network>) -> Engine {
         let mut entries = Vec::with_capacity(archs.len() * nets.len());
-        let mut index = HashMap::new();
         for arch in &archs {
             for net in &nets {
                 let map = map_network(arch, net);
-                index.insert((arch.name.clone(), net.name.clone()), entries.len());
-                entries.push(EngineEntry { arch: arch.clone(), net: net.clone(), map });
+                entries.push(EngineEntry { arch: arch.clone(), map });
             }
         }
+        Engine::from_entries(entries)
+    }
+
+    /// Wrap an already-mapped (arch, workload) pair — lets callers that
+    /// hold a `NetworkMap` (e.g. the hybrid sweep) query without paying a
+    /// second mapper run.
+    pub fn from_mapped(arch: Arch, map: NetworkMap) -> Engine {
+        Engine::from_entries(vec![EngineEntry { arch, map }])
+    }
+
+    fn from_entries(entries: Vec<EngineEntry>) -> Engine {
+        let mut index: Vec<usize> = (0..entries.len()).collect();
+        index.sort_by(|&a, &b| {
+            let ka = (entries[a].arch.name.as_str(), entries[a].map.network.as_str());
+            let kb = (entries[b].arch.name.as_str(), entries[b].map.network.as_str());
+            ka.cmp(&kb)
+        });
         Engine { entries, index }
     }
 
@@ -70,23 +144,27 @@ impl Engine {
         &self.entries
     }
 
-    /// Keyed lookup (replaces the legacy linear name scan).
+    /// Keyed lookup by borrowed `(&str, &str)` — no per-lookup `String`
+    /// allocation (binary search over the sorted name index).
     pub fn entry(&self, arch_name: &str, net_name: &str) -> Option<&EngineEntry> {
         self.index
-            .get(&(arch_name.to_string(), net_name.to_string()))
-            .map(|&i| &self.entries[i])
+            .binary_search_by(|&i| {
+                (self.entries[i].arch.name.as_str(), self.entries[i].map.network.as_str())
+                    .cmp(&(arch_name, net_name))
+            })
+            .ok()
+            .map(|pos| &self.entries[self.index[pos]])
     }
 
-    /// Evaluate one entry at a named flavor: one [`EvalContext`] (one
-    /// macro-model construction) per design point.
-    pub fn eval_entry(
+    /// Evaluate one entry under an arbitrary per-level device assignment:
+    /// one [`EvalContext`] (one macro-model construction) per design point.
+    /// This is the single evaluation path behind every sweep surface.
+    pub fn eval_assigned(
         &self,
         entry: &EngineEntry,
         node: Node,
-        flavor: MemFlavor,
-        mram: Device,
+        assignment: DeviceAssignment,
     ) -> DesignPoint {
-        let assignment = DeviceAssignment::from_flavor(&entry.arch, flavor, mram);
         let ctx = EvalContext::new(&entry.arch, &entry.map, node, assignment);
         let energy = ctx.energy_breakdown();
         let power = ctx.power_model_from(&energy);
@@ -94,14 +172,24 @@ impl Engine {
             arch: entry.arch.name.clone(),
             network: entry.map.network.clone(),
             node,
-            flavor,
-            mram,
             utilization: entry.map.utilization(&entry.arch),
             energy,
             power,
             latency_ns: ctx.latency_ns,
             area_mm2: ctx.area_report().total_mm2(),
+            assignment: ctx.assignment().clone(),
         }
+    }
+
+    /// Evaluate one entry at a named flavor.
+    pub fn eval_entry(
+        &self,
+        entry: &EngineEntry,
+        node: Node,
+        flavor: MemFlavor,
+        mram: Device,
+    ) -> DesignPoint {
+        self.eval_assigned(entry, node, DeviceAssignment::from_flavor(&entry.arch, flavor, mram))
     }
 
     /// Evaluate one design point by (arch, net) name.
@@ -117,6 +205,45 @@ impl Engine {
         Some(self.eval_entry(entry, node, flavor, mram))
     }
 
+    fn eval_coord(&self, &(e, node, spec, mram): &Coord) -> DesignPoint {
+        let entry = &self.entries[e];
+        self.eval_assigned(entry, node, spec.lower(&entry.arch, mram))
+    }
+
+    /// Sequential reference evaluation of a coordinate list (the canonical
+    /// ordering every parallel path must reproduce bitwise).
+    pub fn eval_coords_seq(&self, coords: &[Coord]) -> Vec<DesignPoint> {
+        coords.iter().map(|c| self.eval_coord(c)).collect()
+    }
+
+    /// Parallel coordinate evaluation: the list is sharded over
+    /// `std::thread::scope` workers in contiguous chunks, each writing its
+    /// own disjoint slice of the (pre-sized) output, so the result order —
+    /// and every bit of every design point — is identical to
+    /// [`Engine::eval_coords_seq`].
+    pub fn eval_coords(&self, coords: &[Coord]) -> Vec<DesignPoint> {
+        let n = coords.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let workers = worker_count(n);
+        if workers <= 1 {
+            return self.eval_coords_seq(coords);
+        }
+        let chunk = n.div_ceil(workers);
+        let mut out: Vec<Option<DesignPoint>> = (0..n).map(|_| None).collect();
+        std::thread::scope(|s| {
+            for (slots, shard) in out.chunks_mut(chunk).zip(coords.chunks(chunk)) {
+                s.spawn(move || {
+                    for (slot, coord) in slots.iter_mut().zip(shard) {
+                        *slot = Some(self.eval_coord(coord));
+                    }
+                });
+            }
+        });
+        out.into_iter().map(|p| p.expect("every grid slot filled by its worker")).collect()
+    }
+
     /// Sequential grid sweep (the reference ordering): entries-major, then
     /// nodes, then flavors — identical to the legacy `Sweeper::grid` loop.
     pub fn grid_seq(
@@ -124,57 +251,25 @@ impl Engine {
         space: &DesignSpace,
         mram_of: impl Fn(Node) -> Device,
     ) -> Vec<DesignPoint> {
-        space
-            .coords(self)
-            .into_iter()
-            .map(|(e, node, flavor)| self.eval_entry(&self.entries[e], node, flavor, mram_of(node)))
-            .collect()
+        self.eval_coords_seq(&space.coords_with(self, mram_of))
     }
 
-    /// Parallel grid sweep: the same coordinate enumeration as
-    /// [`Engine::grid_seq`], sharded over `std::thread::scope` workers in
-    /// contiguous chunks. Each worker writes into its own disjoint slice of
-    /// the (pre-sized) output, so the result order — and every bit of every
-    /// design point — is identical to the sequential sweep.
+    /// Parallel grid sweep: same coordinates as [`Engine::grid_seq`],
+    /// evaluated through [`Engine::eval_coords`] (bitwise-identical
+    /// output, sharded across threads).
     pub fn grid(
         &self,
         space: &DesignSpace,
         mram_of: impl Fn(Node) -> Device + Sync,
     ) -> Vec<DesignPoint> {
-        let jobs = space.coords(self);
-        let n = jobs.len();
-        if n == 0 {
-            return Vec::new();
-        }
-        let workers = worker_count(n);
-        if workers <= 1 {
-            return jobs
-                .into_iter()
-                .map(|(e, node, flavor)| {
-                    self.eval_entry(&self.entries[e], node, flavor, mram_of(node))
-                })
-                .collect();
-        }
-        let chunk = n.div_ceil(workers);
-        let mut out: Vec<Option<DesignPoint>> = (0..n).map(|_| None).collect();
-        let mram_of = &mram_of;
-        std::thread::scope(|s| {
-            for (slots, coords) in out.chunks_mut(chunk).zip(jobs.chunks(chunk)) {
-                s.spawn(move || {
-                    for (slot, &(e, node, flavor)) in slots.iter_mut().zip(coords) {
-                        *slot =
-                            Some(self.eval_entry(&self.entries[e], node, flavor, mram_of(node)));
-                    }
-                });
-            }
-        });
-        out.into_iter().map(|p| p.expect("every grid slot filled by its worker")).collect()
+        self.eval_coords(&space.coords_with(self, mram_of))
     }
 }
 
-/// The sweep axes: evaluated as (entry × node × flavor), entry-major.
-/// Extending the lattice (more nodes, finer hybrid splits, more devices)
-/// means extending this enumerator — the evaluation path is shared.
+/// The classic sweep axes: evaluated as (entry × node × flavor),
+/// entry-major. Kept for the legacy `Sweeper` surface; richer axis
+/// combinations (device axes, hybrid lattices, masks) are expressed with
+/// [`crate::eval::Query`].
 #[derive(Debug, Clone)]
 pub struct DesignSpace {
     pub nodes: Vec<Node>,
@@ -203,17 +298,31 @@ impl DesignSpace {
         }
         out
     }
+
+    /// The same enumeration, lowered to full engine [`Coord`]s with the
+    /// per-node MRAM device resolved.
+    fn coords_with(&self, engine: &Engine, mram_of: impl Fn(Node) -> Device) -> Vec<Coord> {
+        self.coords(engine)
+            .into_iter()
+            .map(|(e, node, flavor)| (e, node, AssignSpec::Flavor(flavor), mram_of(node)))
+            .collect()
+    }
 }
 
 /// Worker-thread count for parallel sweeps: the machine's parallelism,
 /// capped by the job count, overridable with `XR_DSE_THREADS` (1 forces
-/// the sequential path — useful for benchmarking the speedup).
+/// the sequential path — useful for benchmarking the speedup). The env
+/// parse happens once per process (cached in a `OnceLock`), not per grid
+/// call.
 fn worker_count(jobs: usize) -> usize {
-    let hw = std::env::var("XR_DSE_THREADS")
-        .ok()
-        .and_then(|v| v.parse::<usize>().ok())
-        .filter(|&n| n > 0)
-        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1));
+    static CONFIGURED: OnceLock<usize> = OnceLock::new();
+    let hw = *CONFIGURED.get_or_init(|| {
+        std::env::var("XR_DSE_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+    });
     hw.min(jobs).max(1)
 }
 
@@ -235,6 +344,19 @@ mod tests {
         assert!(e.entry("simba_v2", "edsnet").is_some());
         assert!(e.entry("simba_v2", "nope").is_none());
         assert!(e.entry("tpu", "detnet").is_none());
+    }
+
+    #[test]
+    fn from_mapped_matches_fresh_engine() {
+        let arch = simba(PeConfig::V2);
+        let map = crate::mapping::map_network(&arch, &detnet());
+        let single = Engine::from_mapped(arch.clone(), map);
+        let fresh = Engine::new(vec![arch], vec![detnet()]);
+        let a = single.point("simba_v2", "detnet", Node::N7, MemFlavor::P1, Device::VgsotMram);
+        let b = fresh.point("simba_v2", "detnet", Node::N7, MemFlavor::P1, Device::VgsotMram);
+        let (a, b) = (a.unwrap(), b.unwrap());
+        assert_eq!(a.energy.total_pj().to_bits(), b.energy.total_pj().to_bits());
+        assert_eq!(a.latency_ns.to_bits(), b.latency_ns.to_bits());
     }
 
     #[test]
@@ -262,12 +384,34 @@ mod tests {
             assert_eq!(a.arch, b.arch);
             assert_eq!(a.network, b.network);
             assert_eq!(a.node, b.node);
-            assert_eq!(a.flavor, b.flavor);
-            assert_eq!(a.mram, b.mram);
+            assert_eq!(a.flavor(), b.flavor());
+            assert_eq!(a.mram(), b.mram());
             assert_eq!(a.energy.total_pj().to_bits(), b.energy.total_pj().to_bits());
             assert_eq!(a.latency_ns.to_bits(), b.latency_ns.to_bits());
             assert_eq!(a.area_mm2.to_bits(), b.area_mm2.to_bits());
             assert_eq!(a.power.p_mem_uw(10.0).to_bits(), b.power.p_mem_uw(10.0).to_bits());
+        }
+    }
+
+    #[test]
+    fn mask_coords_evaluate_like_flavor_coords() {
+        let e = engine();
+        let arch = &e.entries()[0].arch;
+        for flavor in MemFlavor::ALL {
+            let mask =
+                DeviceAssignment::from_flavor(arch, flavor, Device::VgsotMram).mask(arch);
+            let coords = [
+                (0usize, Node::N7, AssignSpec::Flavor(flavor), Device::VgsotMram),
+                (0usize, Node::N7, AssignSpec::Mask(mask), Device::VgsotMram),
+            ];
+            let pts = e.eval_coords_seq(&coords);
+            assert_eq!(
+                pts[0].energy.total_pj().to_bits(),
+                pts[1].energy.total_pj().to_bits(),
+                "{flavor:?}"
+            );
+            assert_eq!(pts[0].flavor(), Some(flavor));
+            assert_eq!(pts[1].flavor(), None, "mask lowering carries no flavor tag");
         }
     }
 

@@ -12,10 +12,11 @@
 //!    library), [`mapping`] (Timeloop-lite), [`energy`] (Accelergy-lite).
 //! 2. **The paper's contribution**: memory-oriented DTCO — [`eval`] (the
 //!    unified evaluation engine: one `EvalContext` + `DeviceAssignment`
-//!    core and a parallel grid sweep), with [`area`], [`power`]
-//!    (P_mem-vs-IPS with power gating) and [`energy`] as thin wrappers
-//!    over it, [`pipeline`] (temporal operation cycle), [`dse`] (sweep
-//!    driver over the engine), [`report`].
+//!    core, a parallel grid sweep, and the composable `eval::Query`
+//!    sweep surface every command/bench/example consumes), with [`area`],
+//!    [`power`] (P_mem-vs-IPS with power gating) and [`energy`] as thin
+//!    wrappers over it, [`pipeline`] (temporal operation cycle), [`dse`]
+//!    (legacy sweep shims + hybrid/pareto over the query), [`report`].
 //! 3. **The serving runtime** proving the stack end-to-end: [`runtime`]
 //!    (PJRT load/execute of JAX-AOT'd DetNet/EDSNet), [`coordinator`]
 //!    (sensor streams, scheduler, power-gate controller, metrics),

@@ -9,19 +9,25 @@
 //! xr-edge-dse edp                                        # Fig 2(f)
 //! xr-edge-dse fig3d                                      # Fig 3(d)
 //! xr-edge-dse pareto  --node 7 --ips 10                  # undominated designs
+//! xr-edge-dse hybrid  --arch simba --net detnet --ips 10 # NVM/SRAM lattice
 //! xr-edge-dse sweep   --out artifacts/figures            # all CSV series
 //! xr-edge-dse serve   --model detnet --fps 10 --seconds 5  # PJRT serving
 //! ```
 //!
-//! All analytical commands route through the unified evaluation engine
-//! (`xr_edge_dse::eval`): grids are sharded across threads (override with
-//! `XR_DSE_THREADS`, 1 = sequential) with deterministic output ordering.
+//! Every analytical command is a [`Query`] over the unified evaluation
+//! engine (`xr_edge_dse::eval`): the command picks its axes (archs × nets
+//! × nodes × MRAM devices × assignments — named flavors or the full hybrid
+//! lattice), chains stages (vs-SRAM baseline, feasibility, Pareto, top-k)
+//! and renders through a table/CSV sink. Grids are sharded across threads
+//! (override with `XR_DSE_THREADS`, 1 = sequential) with deterministic
+//! output ordering.
 
 use xr_edge_dse::arch::{self, MemFlavor, PeConfig};
-use xr_edge_dse::report::{pct, sci, Table};
+use xr_edge_dse::eval::{Assignments, DesignPoint, Devices, Engine, Query};
+use xr_edge_dse::report::{pct, sci, Csv, Table};
 use xr_edge_dse::tech::{paper_mram_for, Device, Node};
 use xr_edge_dse::util::cli::{parse, usage, OptSpec};
-use xr_edge_dse::{dse, energy, mapping, power, workload};
+use xr_edge_dse::{dse, power, workload};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -61,6 +67,13 @@ fn flavor_of(s: &str) -> anyhow::Result<MemFlavor> {
     })
 }
 
+/// Engine over one named (arch, net) pair.
+fn pair_engine(args: &xr_edge_dse::util::cli::Args) -> anyhow::Result<Engine> {
+    let a = arch::by_name(args.get("arch").unwrap())?;
+    let net = workload::builtin::by_name(args.get("net").unwrap())?;
+    Ok(Engine::new(vec![a], vec![net]))
+}
+
 fn run(argv: &[String]) -> anyhow::Result<()> {
     let Some(cmd) = argv.first() else {
         print_help();
@@ -75,11 +88,11 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
 
     match cmd.as_str() {
         "map" => {
-            let a = arch::by_name(args.get("arch").unwrap())?;
-            let net = workload::builtin::by_name(args.get("net").unwrap())?;
-            let map = mapping::map_network(&a, &net);
+            let engine = pair_engine(&args)?;
+            let entry = &engine.entries()[0];
+            let (a, map) = (&entry.arch, &entry.map);
             let mut t = Table::new(
-                &format!("mapping {} on {}", net.name, a.name),
+                &format!("mapping {} on {}", map.network, a.name),
                 &["layer", "macs", "cycles", "bw-bound", "util"],
             );
             for lm in &map.per_layer {
@@ -99,20 +112,25 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
                 "total: {} MACs, {} cycles, avg util {:.3}",
                 sci(map.total_macs()),
                 sci(map.total_cycles()),
-                map.utilization(&a)
+                map.utilization(a)
             );
         }
         "energy" => {
-            let a = arch::by_name(args.get("arch").unwrap())?;
-            let net = workload::builtin::by_name(args.get("net").unwrap())?;
             let flavor = flavor_of(args.get("flavor").unwrap())?;
-            let map = mapping::map_network(&a, &net);
-            let b = energy::estimate(&a, &map, node, flavor, mram);
+            let engine = pair_engine(&args)?;
+            let p = Query::over(&engine)
+                .nodes(&[node])
+                .devices(Devices::Fixed(mram))
+                .assignments(Assignments::Flavors(vec![flavor]))
+                .points()
+                .pop()
+                .expect("single-point query");
+            let b = &p.energy;
             let mut t = Table::new(
                 &format!(
                     "energy {} on {} @{} {} ({})",
-                    net.name,
-                    a.name,
+                    p.network,
+                    p.arch,
                     node.label(),
                     flavor.label(),
                     mram.label()
@@ -131,25 +149,35 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
             }
             t.row(vec!["TOTAL".into(), format!("{:.3}", b.mem_read_pj() * uj), format!("{:.3}", b.mem_write_pj() * uj), format!("{:.3}", b.total_pj() * uj)]);
             print!("{}", t.render());
-            let lat = energy::latency_ns(&a, &map, node, flavor, mram);
-            println!("latency: {:.3} ms   EDP: {}", lat / 1e6, sci(energy::edp(b.total_pj(), lat)));
+            println!("latency: {:.3} ms   EDP: {}", p.latency_ns / 1e6, sci(p.edp()));
         }
         "area" => {
+            // Table 2 as a query: flavor axis with a vs-SRAM baseline; the
+            // savings columns come from the baseline stage. Area is
+            // workload-independent, so the engine carries the cheapest
+            // builtin net purely to satisfy the (arch × net) pairing.
+            let engine = Engine::new(
+                vec![arch::simba(PeConfig::V2), arch::eyeriss(PeConfig::V2)],
+                vec![workload::builtin::tiny_cnn()],
+            );
+            let rows = Query::over(&engine)
+                .nodes(&[node])
+                .devices(Devices::Fixed(mram))
+                .baseline(|p| p.flavor() == Some(MemFlavor::SramOnly))
+                .collect();
             let mut t = Table::new(
                 &format!("Table 2 — area at {} ({})", node.label(), mram.label()),
                 &["architecture", "SRAM-only (mm²)", "P0 (mm²)", "P1 (mm²)", "P0 saving", "P1 saving"],
             );
-            for a in [arch::simba(PeConfig::V2), arch::eyeriss(PeConfig::V2)] {
-                let base = xr_edge_dse::area::estimate(&a, node, MemFlavor::SramOnly, mram).total_mm2();
-                let p0 = xr_edge_dse::area::estimate(&a, node, MemFlavor::P0, mram).total_mm2();
-                let p1 = xr_edge_dse::area::estimate(&a, node, MemFlavor::P1, mram).total_mm2();
+            for group in rows.chunks(MemFlavor::ALL.len()) {
+                let (base, p0, p1) = (&group[0], &group[1], &group[2]);
                 t.row(vec![
-                    a.name.clone(),
-                    format!("{base:.2}"),
-                    format!("{p0:.2}"),
-                    format!("{p1:.2}"),
-                    pct(1.0 - p0 / base),
-                    pct(1.0 - p1 / base),
+                    base.point.arch.clone(),
+                    format!("{:.2}", base.point.area_mm2),
+                    format!("{:.2}", p0.point.area_mm2),
+                    format!("{:.2}", p1.point.area_mm2),
+                    pct(p0.area_saving().expect("baseline attached")),
+                    pct(p1.area_saving().expect("baseline attached")),
                 ]);
             }
             print!("{}", t.render());
@@ -183,97 +211,109 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         }
         "edp" => {
             let s = dse::paper_sweeper()?;
-            let pts = s.grid(&Node::ALL, &[MemFlavor::SramOnly], paper_mram_for);
-            let mut t = Table::new(
-                "Fig 2(f) — EDP vs node (SRAM-only)",
-                &["arch", "net", "node", "energy (µJ)", "latency (ms)", "EDP (µJ·ms)"],
-            );
-            for p in pts {
-                t.row(vec![
-                    p.arch.clone(),
-                    p.network.clone(),
-                    p.node.label(),
-                    format!("{:.2}", p.energy.total_pj() * 1e-6),
-                    format!("{:.3}", p.latency_ns / 1e6),
-                    format!("{:.3}", p.energy.total_pj() * 1e-6 * p.latency_ns / 1e6),
-                ]);
-            }
+            let t = Query::over(s.engine())
+                .nodes(&Node::ALL)
+                .assignments(Assignments::Flavors(vec![MemFlavor::SramOnly]))
+                .to_table(
+                    "Fig 2(f) — EDP vs node (SRAM-only)",
+                    &["arch", "net", "node", "energy (µJ)", "latency (ms)", "EDP (µJ·ms)"],
+                    |row| {
+                        let p = &row.point;
+                        vec![
+                            p.arch.clone(),
+                            p.network.clone(),
+                            p.node.label(),
+                            format!("{:.2}", p.energy.total_pj() * 1e-6),
+                            format!("{:.3}", p.latency_ns / 1e6),
+                            format!("{:.3}", p.energy.total_pj() * 1e-6 * p.latency_ns / 1e6),
+                        ]
+                    },
+                );
             print!("{}", t.render());
         }
         "fig3d" => {
+            // vs-SRAM deltas via the baseline stage — one group-local
+            // lookup instead of the old O(n²) scan over the grid.
             let s = dse::paper_sweeper()?;
-            let mut t = Table::new(
-                "Fig 3(d) — single-inference energy, 9 variants × 2 nodes",
-                &["net", "node", "arch", "flavor", "total (µJ)", "vs SRAM"],
-            );
-            let pts = dse::fig3d_grid(&s);
-            for p in &pts {
-                let base = pts
-                    .iter()
-                    .find(|q| {
-                        q.arch == p.arch
-                            && q.network == p.network
-                            && q.node == p.node
-                            && q.flavor == MemFlavor::SramOnly
-                    })
-                    .unwrap();
-                t.row(vec![
-                    p.network.clone(),
-                    p.node.label(),
-                    p.arch.clone(),
-                    p.flavor.label().into(),
-                    format!("{:.2}", p.energy.total_pj() * 1e-6),
-                    pct(p.energy.total_pj() / base.energy.total_pj() - 1.0),
-                ]);
-            }
+            let t = Query::over(s.engine())
+                .nodes(&[Node::N28, Node::N7])
+                .baseline(|p| p.flavor() == Some(MemFlavor::SramOnly))
+                .to_table(
+                    "Fig 3(d) — single-inference energy, 9 variants × 2 nodes",
+                    &["net", "node", "arch", "flavor", "total (µJ)", "vs SRAM"],
+                    |row| {
+                        let p = &row.point;
+                        vec![
+                            p.network.clone(),
+                            p.node.label(),
+                            p.arch.clone(),
+                            p.flavor_label().into(),
+                            format!("{:.2}", p.energy.total_pj() * 1e-6),
+                            pct(row.energy_vs_baseline().expect("SRAM baseline present")),
+                        ]
+                    },
+                );
             print!("{}", t.render());
         }
         "hybrid" => {
-            // §5's concluding suggestion, executable: enumerate every
-            // NVM/SRAM split and rank by memory power at --ips.
-            let a = arch::by_name(args.get("arch").unwrap())?;
-            let net = workload::builtin::by_name(args.get("net").unwrap())?;
+            // §5's concluding suggestion, executable: the hybrid lattice is
+            // a first-class assignment axis; rank every NVM/SRAM split by
+            // memory power at --ips through the top-k stage.
             let ips = args.get_f64("ips")?.unwrap_or(10.0);
-            let map = mapping::map_network(&a, &net);
-            let pts = dse::hybrid::sweep(&a, &map, node, mram, ips);
+            let engine = pair_engine(&args)?;
+            let a = engine.entries()[0].arch.clone();
+            let net_name = engine.entries()[0].map.network.clone();
+            let top = Query::over(&engine)
+                .nodes(&[node])
+                .devices(Devices::Fixed(mram))
+                .assignments(Assignments::Lattice)
+                .top_k(move |p| p.p_mem_uw(ips), 8)
+                .points();
             let mut t = Table::new(
                 &format!("hybrid NVM/SRAM splits — {} on {} @{} {} IPS (best first)",
-                    net.name, a.name, node.label(), ips),
+                    net_name, a.name, node.label(), ips),
                 &["MRAM levels", "P_mem (µW)", "E_mem/inf (µJ)", "retention (µW)", "area (mm²)"],
             );
-            for p in pts.iter().take(8) {
+            for p in &top {
+                let levels = p.assignment.mram_level_names(&a);
                 t.row(vec![
-                    if p.mram_levels.is_empty() { "(none — SRAM-only)".into() } else { p.mram_levels.join("+") },
-                    format!("{:.2}", p.p_mem_uw),
-                    format!("{:.3}", p.e_mem_inf_pj * 1e-6),
-                    format!("{:.2}", p.p_retention_uw),
+                    if levels.is_empty() { "(none — SRAM-only)".into() } else { levels.join("+") },
+                    format!("{:.2}", p.p_mem_uw(ips)),
+                    format!("{:.3}", p.power.e_mem_inf_pj * 1e-6),
+                    format!("{:.2}", p.power.p_retention_uw),
                     format!("{:.2}", p.area_mm2),
                 ]);
             }
             print!("{}", t.render());
-            let p0 = dse::hybrid::flavor_mask(&a, MemFlavor::P0);
-            let p1 = dse::hybrid::flavor_mask(&a, MemFlavor::P1);
-            let find = |mask: u32| dse::hybrid::evaluate(&a, &map, node, mram, mask, ips).p_mem_uw;
+            let named = Query::over(&engine)
+                .nodes(&[node])
+                .devices(Devices::Fixed(mram))
+                .assignments(Assignments::Flavors(vec![MemFlavor::P0, MemFlavor::P1]))
+                .points();
             println!("named flavors: P0 {:.2} µW, P1 {:.2} µW, best split {:.2} µW",
-                find(p0), find(p1), pts[0].p_mem_uw);
+                named[0].p_mem_uw(ips), named[1].p_mem_uw(ips), top[0].p_mem_uw(ips));
         }
         "pareto" => {
             // Which (arch × flavor) variants at --node are undominated in
-            // (P_mem @ --ips, area, latency)? Engine-evaluated grid +
+            // (P_mem @ --ips, area, latency)? Query-evaluated grid +
             // pareto::frontier, the §5 decision procedure as a command.
             let ips = args.get_f64("ips")?.unwrap_or(10.0);
             let net = workload::builtin::by_name(args.get("net").unwrap())?;
-            let s = dse::Sweeper::new(
+            let net_name = net.name.clone();
+            let engine = Engine::new(
                 vec![arch::cpu(), arch::eyeriss(PeConfig::V2), arch::simba(PeConfig::V2)],
-                vec![net.clone()],
+                vec![net],
             );
-            let pts: Vec<dse::DesignPoint> = s.grid(&[node], &MemFlavor::ALL, |_| mram);
+            let pts = Query::over(&engine)
+                .nodes(&[node])
+                .devices(Devices::Fixed(mram))
+                .points();
             let feasible = dse::pareto::feasible(&pts, ips);
             let front = dse::pareto::frontier(&pts, ips);
             let mut t = Table::new(
                 &format!(
-                    "Pareto frontier — {} @{} {} IPS (engine grid, {} points)",
-                    net.name,
+                    "Pareto frontier — {} @{} {} IPS (query grid, {} points)",
+                    net_name,
                     node.label(),
                     ips,
                     pts.len()
@@ -284,7 +324,7 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
                 let o = dse::pareto::objectives(p, ips);
                 t.row(vec![
                     p.arch.clone(),
-                    p.flavor.label().into(),
+                    p.flavor_label().into(),
                     format!("{:.2}", o.p_mem_uw),
                     format!("{:.2}", o.area_mm2),
                     format!("{:.3}", o.latency_ms),
@@ -311,71 +351,85 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Write every figure's data series as CSV (used by `make figures`).
+/// Write every figure's data series as CSV (used by `make figures`). Each
+/// series is a query with a CSV sink; Fig 5 streams its curves through
+/// `for_each`, with the SRAM baseline emitted exactly once per panel
+/// (the old loop duplicated it under both the P0 and P1 labels).
 fn write_figure_csvs(out: &std::path::Path) -> anyhow::Result<usize> {
-    use xr_edge_dse::report::Csv;
     std::fs::create_dir_all(out)?;
     let s = dse::paper_sweeper()?;
     let mut n = 0;
 
     // Fig 2(f): EDP vs node.
-    let mut c = Csv::new(&["arch", "net", "node_nm", "energy_pj", "latency_ns", "edp"]);
-    for p in s.grid(&Node::ALL, &[MemFlavor::SramOnly], paper_mram_for) {
-        c.row(vec![
-            p.arch.clone(),
-            p.network.clone(),
-            format!("{}", p.node.nm()),
-            sci(p.energy.total_pj()),
-            sci(p.latency_ns),
-            sci(p.edp()),
-        ]);
-    }
-    c.save(&out.join("fig2f_edp.csv"))?;
+    Query::over(s.engine())
+        .nodes(&Node::ALL)
+        .assignments(Assignments::Flavors(vec![MemFlavor::SramOnly]))
+        .to_csv(&["arch", "net", "node_nm", "energy_pj", "latency_ns", "edp"], |row| {
+            let p = &row.point;
+            vec![
+                p.arch.clone(),
+                p.network.clone(),
+                format!("{}", p.node.nm()),
+                sci(p.energy.total_pj()),
+                sci(p.latency_ns),
+                sci(p.edp()),
+            ]
+        })
+        .save(&out.join("fig2f_edp.csv"))?;
     n += 1;
 
     // Fig 3(d) energies + Fig 4 breakdowns.
-    let mut c = Csv::new(&[
-        "net", "node_nm", "arch", "flavor", "compute_pj", "mem_read_pj", "mem_write_pj",
-    ]);
-    for p in dse::fig3d_grid(&s) {
-        c.row(vec![
-            p.network.clone(),
-            format!("{}", p.node.nm()),
-            p.arch.clone(),
-            p.flavor.label().into(),
-            sci(p.energy.compute_pj),
-            sci(p.energy.mem_read_pj()),
-            sci(p.energy.mem_write_pj()),
-        ]);
-    }
-    c.save(&out.join("fig3d_fig4_energy.csv"))?;
+    Query::over(s.engine())
+        .nodes(&[Node::N28, Node::N7])
+        .to_csv(
+            &["net", "node_nm", "arch", "flavor", "compute_pj", "mem_read_pj", "mem_write_pj"],
+            |row| {
+                let p = &row.point;
+                vec![
+                    p.network.clone(),
+                    format!("{}", p.node.nm()),
+                    p.arch.clone(),
+                    p.flavor_label().into(),
+                    sci(p.energy.compute_pj),
+                    sci(p.energy.mem_read_pj()),
+                    sci(p.energy.mem_write_pj()),
+                ]
+            },
+        )
+        .save(&out.join("fig3d_fig4_energy.csv"))?;
     n += 1;
 
-    // Fig 5: P_mem vs IPS curves for every device.
-    let mut c = Csv::new(&["arch", "net", "flavor", "device", "ips", "p_mem_uw"]);
-    for arch in [arch::simba(PeConfig::V2), arch::eyeriss(PeConfig::V2)] {
-        for net in [workload::builtin::by_name("detnet")?, workload::builtin::by_name("edsnet")?] {
-            let map = mapping::map_network(&arch, &net);
-            for flavor in [MemFlavor::P0, MemFlavor::P1] {
-                for device in Device::ALL {
-                    let f = if device == Device::Sram { MemFlavor::SramOnly } else { flavor };
-                    let pm = power::power_model(&arch, &map, Node::N7, f, device);
-                    let mut ips = 0.05;
-                    while ips <= pm.max_ips() && ips < 2e4 {
-                        c.row(vec![
-                            arch.name.clone(),
-                            net.name.clone(),
-                            flavor.label().into(),
-                            device.label().into(),
-                            sci(ips),
-                            sci(pm.p_mem_uw(ips)),
-                        ]);
-                        ips *= 1.5;
-                    }
-                }
-            }
+    // Fig 5: P_mem vs IPS curves — SRAM baseline once per (arch × net),
+    // then P0/P1 per MRAM device (a device axis in the query).
+    fn curve(c: &mut Csv, p: &DesignPoint) {
+        let mut ips = 0.05;
+        while ips <= p.power.max_ips() && ips < 2e4 {
+            c.row(vec![
+                p.arch.clone(),
+                p.network.clone(),
+                p.flavor_label().into(),
+                p.mram().label().into(),
+                sci(ips),
+                sci(p.p_mem_uw(ips)),
+            ]);
+            ips *= 1.5;
         }
     }
+    let fig5 = Engine::new(
+        vec![arch::simba(PeConfig::V2), arch::eyeriss(PeConfig::V2)],
+        vec![workload::builtin::by_name("detnet")?, workload::builtin::by_name("edsnet")?],
+    );
+    let mut c = Csv::new(&["arch", "net", "flavor", "device", "ips", "p_mem_uw"]);
+    Query::over(&fig5)
+        .nodes(&[Node::N7])
+        .devices(Devices::Fixed(Device::Sram))
+        .assignments(Assignments::Flavors(vec![MemFlavor::SramOnly]))
+        .for_each(|row| curve(&mut c, &row.point));
+    Query::over(&fig5)
+        .nodes(&[Node::N7])
+        .devices(Devices::Each(Device::MRAMS.to_vec()))
+        .assignments(Assignments::Flavors(vec![MemFlavor::P0, MemFlavor::P1]))
+        .for_each(|row| curve(&mut c, &row.point));
     c.save(&out.join("fig5_ips_power.csv"))?;
     n += 1;
     Ok(n)

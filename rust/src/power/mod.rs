@@ -38,7 +38,9 @@ pub struct PowerModel {
     pub arch: String,
     pub network: String,
     pub node: Node,
-    pub flavor: MemFlavor,
+    /// The named flavor this model was evaluated at; `None` for arbitrary
+    /// hybrid lattice points.
+    pub flavor: Option<MemFlavor>,
     pub mram: Device,
     /// Memory energy per inference, pJ (reads + writes over all levels).
     pub e_mem_inf_pj: f64,
@@ -140,27 +142,40 @@ pub struct IpsSummaryRow {
 }
 
 /// Build Table 3 for the given (workload, ips_min) pairs at 7 nm, v2 PEs.
+/// Evaluation routes through the query surface: one [`crate::eval::Query`]
+/// per (workload, arch) cell with a vs-SRAM baseline attached, so the
+/// savings columns come from the query's baseline stage rather than a
+/// hand-rolled model triple.
 pub fn table3(
     rows: &[(crate::workload::Network, f64)],
     archs: &[Arch],
     node: Node,
     mram: Device,
 ) -> Vec<IpsSummaryRow> {
+    use crate::eval::{Assignments, Devices, Engine, Query};
+    let nets: Vec<crate::workload::Network> = rows.iter().map(|(n, _)| n.clone()).collect();
+    let engine = Engine::new(archs.to_vec(), nets);
     let mut out = Vec::new();
     for (net, ips_min) in rows {
         for arch in archs {
-            let map = crate::mapping::map_network(arch, net);
-            let sram = power_model(arch, &map, node, MemFlavor::SramOnly, mram);
-            let p0 = power_model(arch, &map, node, MemFlavor::P0, mram);
-            let p1 = power_model(arch, &map, node, MemFlavor::P1, mram);
+            // flavor-innermost order: [SRAM-only, P0, P1]
+            let cells = Query::over(&engine)
+                .archs(&[arch.name.as_str()])
+                .nets(&[net.name.as_str()])
+                .nodes(&[node])
+                .devices(Devices::Fixed(mram))
+                .assignments(Assignments::Flavors(MemFlavor::ALL.to_vec()))
+                .baseline(|p| p.flavor() == Some(MemFlavor::SramOnly))
+                .collect();
+            let (p0, p1) = (&cells[1], &cells[2]);
             out.push(IpsSummaryRow {
                 workload: net.name.clone(),
                 arch: arch.name.clone(),
                 ips_min: *ips_min,
-                latency_p0_ms: p0.latency_ns / 1e6,
-                latency_p1_ms: p1.latency_ns / 1e6,
-                savings_p0: savings_at(&sram, &p0, *ips_min),
-                savings_p1: savings_at(&sram, &p1, *ips_min),
+                latency_p0_ms: p0.point.latency_ns / 1e6,
+                latency_p1_ms: p1.point.latency_ns / 1e6,
+                savings_p0: p0.p_mem_saving(*ips_min).expect("baseline attached"),
+                savings_p1: p1.p_mem_saving(*ips_min).expect("baseline attached"),
             });
         }
     }

@@ -145,8 +145,8 @@ fn parallel_grid_is_deterministic_and_bitwise_equal() {
         assert_eq!(a.arch, b.arch);
         assert_eq!(a.network, b.network);
         assert_eq!(a.node, b.node);
-        assert_eq!(a.flavor, b.flavor);
-        assert_eq!(a.mram, b.mram);
+        assert_eq!(a.flavor(), b.flavor());
+        assert_eq!(a.mram(), b.mram());
         assert_eq!(a.energy.total_pj().to_bits(), b.energy.total_pj().to_bits());
         assert_eq!(a.energy.compute_pj.to_bits(), b.energy.compute_pj.to_bits());
         assert_eq!(a.latency_ns.to_bits(), b.latency_ns.to_bits());
@@ -163,7 +163,7 @@ fn grid_is_stable_across_repeated_parallel_runs() {
     let b = fig3d_grid(&s);
     for (x, y) in a.iter().zip(&b) {
         assert_eq!(x.arch, y.arch);
-        assert_eq!(x.flavor, y.flavor);
+        assert_eq!(x.flavor(), y.flavor());
         assert_eq!(x.energy.total_pj().to_bits(), y.energy.total_pj().to_bits());
     }
 }

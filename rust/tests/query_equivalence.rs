@@ -1,0 +1,213 @@
+//! Query-surface equivalence gates:
+//!
+//! 1. **Query vs legacy grid** — a flavors query over the paper grids is
+//!    bitwise-identical (order included) to the legacy `Sweeper::grid`.
+//! 2. **Query vs legacy hybrid sweep** — `dse::hybrid::sweep` (now a
+//!    query with `Assignments::Lattice`) reproduces the per-mask
+//!    `evaluate` loop + stable sort, bitwise.
+//! 3. **Streaming vs collected** — `for_each` visits exactly the rows
+//!    `collect` returns, in the same order, with the same baselines.
+//! 4. **Baseline stage vs quadratic scan** — the group baseline equals
+//!    what the old O(n²) `find` over the whole grid produced.
+//! 5. **CLI smoke** — every migrated `xr-edge-dse` command runs and
+//!    produces output.
+
+use xr_edge_dse::arch::{eyeriss, simba, MemFlavor, PeConfig};
+use xr_edge_dse::dse::{hybrid, paper_sweeper};
+use xr_edge_dse::eval::{Assignments, DesignPoint, DeviceAssignment, Devices, Query};
+use xr_edge_dse::mapping::map_network;
+use xr_edge_dse::tech::{paper_mram_for, Device, Node};
+use xr_edge_dse::workload::builtin;
+
+fn assert_point_bitwise(a: &DesignPoint, b: &DesignPoint) {
+    assert_eq!(a.arch, b.arch);
+    assert_eq!(a.network, b.network);
+    assert_eq!(a.node, b.node);
+    assert_eq!(a.flavor(), b.flavor());
+    assert_eq!(a.mram(), b.mram());
+    assert_eq!(a.energy.total_pj().to_bits(), b.energy.total_pj().to_bits());
+    assert_eq!(a.energy.compute_pj.to_bits(), b.energy.compute_pj.to_bits());
+    assert_eq!(a.latency_ns.to_bits(), b.latency_ns.to_bits());
+    assert_eq!(a.area_mm2.to_bits(), b.area_mm2.to_bits());
+    assert_eq!(a.utilization.to_bits(), b.utilization.to_bits());
+    assert_eq!(a.power.p_mem_uw(10.0).to_bits(), b.power.p_mem_uw(10.0).to_bits());
+}
+
+#[test]
+fn query_equals_legacy_grid_on_fig3d_space() {
+    let s = paper_sweeper().unwrap();
+    let legacy = s.grid(&[Node::N28, Node::N7], &MemFlavor::ALL, paper_mram_for);
+    let q = Query::over(s.engine()).nodes(&[Node::N28, Node::N7]).points();
+    assert_eq!(legacy.len(), 36);
+    assert_eq!(legacy.len(), q.len());
+    for (a, b) in legacy.iter().zip(&q) {
+        assert_point_bitwise(a, b);
+    }
+}
+
+#[test]
+fn query_equals_legacy_grid_on_fig2f_space() {
+    let s = paper_sweeper().unwrap();
+    let legacy = s.grid(&Node::ALL, &[MemFlavor::SramOnly], paper_mram_for);
+    let q = Query::over(s.engine())
+        .nodes(&Node::ALL)
+        .assignments(Assignments::Flavors(vec![MemFlavor::SramOnly]))
+        .points();
+    assert_eq!(legacy.len(), q.len());
+    for (a, b) in legacy.iter().zip(&q) {
+        assert_point_bitwise(a, b);
+    }
+}
+
+#[test]
+fn lattice_query_equals_legacy_hybrid_sweep() {
+    for arch in [simba(PeConfig::V2), eyeriss(PeConfig::V2)] {
+        let net = builtin::by_name("detnet").unwrap();
+        let map = map_network(&arch, &net);
+        let (node, mram, ips) = (Node::N7, Device::VgsotMram, 10.0);
+
+        // The legacy algorithm: evaluate every mask, stable-sort by P_mem.
+        let mut legacy: Vec<hybrid::HybridPoint> = (0..DeviceAssignment::lattice_size(&arch))
+            .map(|mask| hybrid::evaluate(&arch, &map, node, mram, mask, ips))
+            .collect();
+        legacy.sort_by(|a, b| a.p_mem_uw.total_cmp(&b.p_mem_uw));
+
+        // The query path (sweep is Assignments::Lattice + top_k).
+        let swept = hybrid::sweep(&arch, &map, node, mram, ips);
+        assert_eq!(legacy.len(), swept.len(), "{}", arch.name);
+        for (a, b) in legacy.iter().zip(&swept) {
+            assert_eq!(a.mram_levels, b.mram_levels, "{}", arch.name);
+            assert_eq!(a.p_mem_uw.to_bits(), b.p_mem_uw.to_bits(), "{}", arch.name);
+            assert_eq!(a.e_mem_inf_pj.to_bits(), b.e_mem_inf_pj.to_bits());
+            assert_eq!(a.e_wakeup_pj.to_bits(), b.e_wakeup_pj.to_bits());
+            assert_eq!(a.p_retention_uw.to_bits(), b.p_retention_uw.to_bits());
+            assert_eq!(a.area_mm2.to_bits(), b.area_mm2.to_bits());
+        }
+    }
+}
+
+#[test]
+fn streaming_matches_collected_rows_and_baselines() {
+    let s = paper_sweeper().unwrap();
+    let collected = Query::over(s.engine())
+        .nodes(&[Node::N28, Node::N7])
+        .baseline(|p| p.flavor() == Some(MemFlavor::SramOnly))
+        .collect();
+    let mut streamed = Vec::new();
+    Query::over(s.engine())
+        .nodes(&[Node::N28, Node::N7])
+        .baseline(|p| p.flavor() == Some(MemFlavor::SramOnly))
+        .for_each(|row| streamed.push(row));
+    assert_eq!(collected.len(), streamed.len());
+    for (a, b) in collected.iter().zip(&streamed) {
+        assert_point_bitwise(&a.point, &b.point);
+        match (&a.baseline, &b.baseline) {
+            (Some(x), Some(y)) => assert_point_bitwise(x, y),
+            (None, None) => {}
+            _ => panic!("baseline presence differs between streaming and collect"),
+        }
+    }
+}
+
+#[test]
+fn baseline_stage_matches_quadratic_scan() {
+    let s = paper_sweeper().unwrap();
+    let pts = Query::over(s.engine()).nodes(&[Node::N28, Node::N7]).points();
+    let rows = Query::over(s.engine())
+        .nodes(&[Node::N28, Node::N7])
+        .baseline(|p| p.flavor() == Some(MemFlavor::SramOnly))
+        .collect();
+    assert_eq!(pts.len(), rows.len());
+    for row in &rows {
+        // the old fig3d lookup, as the reference
+        let scanned = pts
+            .iter()
+            .find(|q| {
+                q.arch == row.point.arch
+                    && q.network == row.point.network
+                    && q.node == row.point.node
+                    && q.flavor() == Some(MemFlavor::SramOnly)
+            })
+            .unwrap();
+        let attached = row.baseline.as_ref().expect("baseline attached");
+        assert_point_bitwise(scanned, attached);
+    }
+}
+
+#[test]
+fn device_axis_shares_the_sram_baseline_bits() {
+    // With an explicit device axis, the SRAM-only point is evaluated once
+    // per device group; its numbers must not depend on the MRAM device.
+    let s = paper_sweeper().unwrap();
+    let rows = Query::over(s.engine())
+        .archs(&["simba_v2"])
+        .nets(&["detnet"])
+        .nodes(&[Node::N7])
+        .devices(Devices::Each(Device::MRAMS.to_vec()))
+        .collect();
+    assert_eq!(rows.len(), Device::MRAMS.len() * MemFlavor::ALL.len());
+    let sram: Vec<&DesignPoint> = rows
+        .iter()
+        .map(|r| &r.point)
+        .filter(|p| p.flavor() == Some(MemFlavor::SramOnly))
+        .collect();
+    assert_eq!(sram.len(), 3);
+    for p in &sram[1..] {
+        assert_eq!(
+            p.energy.total_pj().to_bits(),
+            sram[0].energy.total_pj().to_bits(),
+            "all-SRAM assignment must be device-independent"
+        );
+    }
+}
+
+// ---- CLI smoke tests for the migrated commands -----------------------------
+
+fn run_cli(args: &[&str]) -> std::process::Output {
+    std::process::Command::new(env!("CARGO_BIN_EXE_xr-edge-dse"))
+        .args(args)
+        .output()
+        .expect("spawn xr-edge-dse")
+}
+
+#[test]
+fn cli_analytical_commands_smoke() {
+    for cmd in [
+        vec!["map"],
+        vec!["energy", "--flavor", "p1"],
+        vec!["area", "--node", "7"],
+        vec!["ips", "--node", "7"],
+        vec!["edp"],
+        vec!["fig3d"],
+        vec!["pareto", "--node", "7", "--ips", "10"],
+        vec!["hybrid", "--arch", "simba", "--net", "detnet", "--ips", "10"],
+    ] {
+        let out = run_cli(&cmd);
+        assert!(out.status.success(), "{cmd:?}: {}", String::from_utf8_lossy(&out.stderr));
+        assert!(!out.stdout.is_empty(), "{cmd:?} produced no output");
+    }
+}
+
+#[test]
+fn cli_sweep_writes_deduped_fig5_csv() {
+    let out_dir = std::env::temp_dir().join(format!("xr_dse_sweep_{}", std::process::id()));
+    let out = run_cli(&["sweep", "--out", out_dir.to_str().unwrap()]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    for f in ["fig2f_edp.csv", "fig3d_fig4_energy.csv", "fig5_ips_power.csv"] {
+        assert!(out_dir.join(f).exists(), "{f} missing");
+    }
+    // Fig-5 dedupe: the SRAM curve appears as its own flavor exactly once
+    // per (arch, net) panel — not duplicated under the P0 and P1 labels.
+    let fig5 = std::fs::read_to_string(out_dir.join("fig5_ips_power.csv")).unwrap();
+    let mut sram_rows: Vec<&str> =
+        fig5.lines().filter(|l| l.contains(",SRAM,")).collect();
+    assert!(!sram_rows.is_empty(), "SRAM baseline curves missing");
+    assert!(
+        sram_rows.iter().all(|l| l.contains("SRAM-only")),
+        "SRAM rows must carry the SRAM-only flavor label"
+    );
+    let before = sram_rows.len();
+    sram_rows.dedup();
+    assert_eq!(before, sram_rows.len(), "duplicate SRAM rows in fig5 CSV");
+    let _ = std::fs::remove_dir_all(&out_dir);
+}
