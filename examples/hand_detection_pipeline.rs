@@ -65,7 +65,7 @@ fn main() -> anyhow::Result<()> {
     // --- collect predictions and score them ---
     let mut n_scored = 0usize;
     let mut center_err_sum = 0.0f64;
-    while let Ok(res) = coord.results.try_recv() {
+    while let Ok(res) = coord.results(0).try_recv() {
         if let Some((_, truth)) = truths.iter().find(|(id, _)| *id == res.frame_id) {
             // outputs[0] = sigmoid centers (x,y for 2 hands); truth = cx,cy,r
             let c = &res.outputs[0];

@@ -43,6 +43,11 @@ impl GateController {
         self.mode
     }
 
+    /// The power model this ledger charges.
+    pub fn model(&self) -> &PowerModel {
+        &self.model
+    }
+
     /// Any NVM macros present → the variant pays a wakeup per event.
     fn has_nvm(&self) -> bool {
         self.model.e_wakeup_pj > 0.0
@@ -65,18 +70,26 @@ impl GateController {
     }
 
     /// Process one inference event: wakeup (NVM only) + inference energy +
-    /// the model's latency on the clock. Returns the charged energy (pJ).
+    /// the model's latency on the clock. The retained SRAM (hybrid P0, or
+    /// the SRAM-only baseline) keeps leaking through the wakeup and
+    /// inference intervals — retention is a continuous background power,
+    /// not an idle-only one; without this the hybrid ledger undercounts
+    /// retention energy relative to the closed-form `p_mem_uw`. Returns
+    /// the charged energy (pJ).
     pub fn inference(&mut self) -> f64 {
         let mut charged = 0.0;
+        let mut busy_ns = 0.0;
         if self.has_nvm() {
             self.mode = Mode::Wakeup;
             charged += self.model.e_wakeup_pj;
-            self.elapsed_ns += crate::mem::WAKEUP_NS;
+            busy_ns += crate::mem::WAKEUP_NS;
             self.wakeups += 1;
         }
         self.mode = Mode::Inference;
         charged += self.model.e_mem_inf_pj;
-        self.elapsed_ns += self.model.latency_ns;
+        busy_ns += self.model.latency_ns;
+        charged += self.model.p_retention_uw * busy_ns * 1e-3; // µW·ns → pJ
+        self.elapsed_ns += busy_ns;
         self.energy_pj += charged;
         self.inferences += 1;
         self.mode = if self.is_fully_gated() {
@@ -137,17 +150,47 @@ mod tests {
 
     #[test]
     fn ledger_matches_closed_form_power() {
+        // With retention charged through the wakeup + inference intervals
+        // the only residual vs the closed form is P_ret·ips·t_inf (the
+        // closed form's idle_frac stops at the inference window), well
+        // under 2% at these duty cycles — so the tolerance is 0.02, down
+        // from the 5% the undercounting ledger needed.
         for flavor in [MemFlavor::SramOnly, MemFlavor::P0, MemFlavor::P1] {
             let ips = 10.0;
             let g = run_schedule(flavor, ips, 100);
             let closed = model(flavor).p_mem_uw(ips);
             let rel = (g.avg_power_uw() - closed).abs() / closed;
             assert!(
-                rel < 0.05,
-                "{flavor:?}: ledger {} vs closed-form {closed}",
+                rel < 0.02,
+                "{flavor:?}: ledger {} vs closed-form {closed} (rel {rel})",
                 g.avg_power_uw()
             );
         }
+    }
+
+    #[test]
+    fn retention_charged_during_wakeup_and_inference() {
+        // Hand-built hybrid model with easy numbers: one inference must
+        // charge E_wakeup + E_inf + P_ret·(t_wakeup + t_inf).
+        let m = PowerModel {
+            arch: "t".into(),
+            network: "t".into(),
+            node: crate::tech::Node::N7,
+            flavor: None,
+            mram: crate::tech::Device::VgsotMram,
+            e_mem_inf_pj: 500.0,
+            e_weight_inf_pj: 0.0,
+            e_wakeup_pj: 1000.0,
+            p_retention_uw: 10.0,
+            latency_ns: 1e6,
+        };
+        let mut g = GateController::new(m);
+        let charged = g.inference();
+        let busy_ns = crate::mem::WAKEUP_NS + 1e6;
+        let expect = 1000.0 + 500.0 + 10.0 * busy_ns * 1e-3;
+        assert!((charged - expect).abs() < 1e-9, "charged {charged} vs {expect}");
+        assert_eq!(g.wakeups, 1);
+        assert!((g.elapsed_ns - busy_ns).abs() < 1e-9);
     }
 
     #[test]

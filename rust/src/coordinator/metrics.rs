@@ -27,6 +27,12 @@ impl WorkerStats {
         summarize(&self.queue_s)
     }
 
+    /// End-to-end (queue wait + execution) latency summary.
+    pub fn e2e_summary(&self) -> Summary {
+        let e2e: Vec<f64> = self.exec_s.iter().zip(&self.queue_s).map(|(e, q)| e + q).collect();
+        summarize(&e2e)
+    }
+
     /// Render a one-screen report.
     pub fn render(&self, title: &str, wall_s: f64, dropped: u64) -> String {
         let e = self.exec_summary();
@@ -35,7 +41,7 @@ impl WorkerStats {
             title,
             &["metric", "count", "mean", "p50", "p95", "p99", "max"],
         );
-        let ms = |x: f64| format!("{:.3} ms", x * 1e3);
+        let ms = crate::report::ms;
         t.row(vec![
             "exec latency".into(),
             e.count.to_string(),
@@ -79,6 +85,8 @@ mod tests {
         let e = w.exec_summary();
         assert!((e.mean - 0.0505).abs() < 1e-6);
         assert!(e.p99 >= e.p50);
+        let e2e = w.e2e_summary();
+        assert!((e2e.mean - 0.051).abs() < 1e-6);
         let r = w.render("t", 10.0, 2);
         assert!(r.contains("throughput: 10.00 IPS"));
         assert!(r.contains("dropped 2"));

@@ -1,22 +1,35 @@
-//! XR serving coordinator (L3): synthetic sensor streams feed frames to an
-//! inference worker that executes the AOT-compiled model via PJRT, with a
-//! power-gate controller tracking the Fig-3 operating modes and charging
-//! the energy model for every wakeup / inference / idle interval.
+//! XR serving coordinator (L3): synthetic sensor streams feed frames to
+//! per-stream inference workers executing AOT-compiled models via PJRT (or
+//! the deterministic synthetic backend when artifacts/PJRT are absent),
+//! with a power-gate controller per stream tracking the Fig-3 operating
+//! modes and charging the energy model for every wakeup / inference / idle
+//! interval.
 //!
-//! Concurrency is std threads + channels (tokio is not vendored in the
-//! offline environment — DESIGN.md §Substitutions): one worker thread owns
-//! the (non-Send-shared) PJRT executable, sensor threads produce frames,
-//! and the caller collects `InferenceResult`s from the output channel.
+//! A [`Coordinator`] owns N streams — one worker thread + one bounded
+//! [`queue::DropOldest`] frame queue each — sharing a single PJRT
+//! [`Runtime`]. The single-model `serve` path is the 1-stream special
+//! case; the multi-stream scenario layer ([`scenario`]) reproduces the
+//! paper's concurrent detnet@10 + edsnet@0.1 operating point on top of it.
+//!
+//! Concurrency is std threads + the drop-oldest queue (tokio is not
+//! vendored in the offline environment — DESIGN.md §Substitutions):
+//! each worker thread owns its (non-Send-shared) executable, sensor
+//! threads produce frames, and callers collect `InferenceResult`s from
+//! per-stream output channels.
 
-pub mod sensor;
 pub mod gating;
 pub mod metrics;
+pub mod queue;
+pub mod scenario;
+pub mod sensor;
 
 use std::path::PathBuf;
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
-use crate::runtime::{Executable, Runtime};
+use crate::runtime::{ModelExec, Runtime, SyntheticExec};
+use gating::GateController;
+use queue::DropOldest;
 use sensor::Frame;
 
 /// A completed inference with its bookkeeping.
@@ -34,12 +47,62 @@ pub struct InferenceResult {
     pub queue_latency_s: f64,
 }
 
-/// Coordinator configuration.
+/// How stream workers obtain their executables.
+#[derive(Debug, Clone)]
+pub enum Backend {
+    /// JAX-AOT'd HLO artifacts compiled + executed on PJRT (requires
+    /// `make artifacts` and a real `xla` crate — errors out on the offline
+    /// stub).
+    Pjrt { artifacts_dir: PathBuf },
+    /// Deterministic synthetic executables — no artifacts, no PJRT; the
+    /// fully-offline path CI exercises.
+    Synthetic,
+    /// PJRT when the client comes up *and* every stream's artifact exists,
+    /// otherwise synthetic.
+    Auto { artifacts_dir: PathBuf },
+}
+
+/// Per-stream serving configuration: the coordinator spawns one worker +
+/// one bounded drop-oldest queue per `StreamConfig`.
+pub struct StreamConfig {
+    pub name: String,
+    /// Model / artifact name (detnet | edsnet).
+    pub model: String,
+    /// Queue capacity; a full queue evicts its *oldest* frame (XR
+    /// freshness: stale frames are worthless — drop-oldest, not
+    /// reject-newest).
+    pub queue_depth: usize,
+    /// Power-gate ledger charged for every served frame against the
+    /// frame's modeled capture schedule ([`Frame::sched_s`]).
+    pub ledger: Option<GateController>,
+    /// Synthetic backend only: minimum exec wall time, seconds (emulates a
+    /// slow model; saturates the queue in stress tests).
+    pub exec_floor_s: f64,
+    /// Modeled horizon, seconds: on shutdown the ledger idles out to it so
+    /// observed IPS covers the whole scheduled run, not just the span of
+    /// served frames.
+    pub horizon_s: Option<f64>,
+}
+
+impl StreamConfig {
+    pub fn new(name: &str, model: &str, queue_depth: usize) -> StreamConfig {
+        StreamConfig {
+            name: name.to_string(),
+            model: model.to_string(),
+            queue_depth,
+            ledger: None,
+            exec_floor_s: 0.0,
+            horizon_s: None,
+        }
+    }
+}
+
+/// Legacy single-stream coordinator configuration (lowers to one
+/// [`StreamConfig`] on the PJRT backend).
 pub struct Config {
     pub artifacts_dir: PathBuf,
     pub model: String,
-    /// Queue capacity before backpressure drops the oldest frame (XR
-    /// freshness: stale frames are worthless — drop-oldest, not block).
+    /// Queue capacity before backpressure evicts the oldest frame.
     pub queue_depth: usize,
 }
 
@@ -53,126 +116,350 @@ impl Default for Config {
     }
 }
 
-enum WorkerMsg {
-    Frame(Frame),
-    Stop,
+/// Everything a stream worker hands back at shutdown.
+#[derive(Debug)]
+pub struct StreamOutcome {
+    pub name: String,
+    pub stats: metrics::WorkerStats,
+    /// The stream's energy ledger, final state (when one was configured).
+    pub ledger: Option<GateController>,
+    /// Frames actually executed.
+    pub served: u64,
 }
 
-/// Handle to a running coordinator.
+/// The per-worker view of a resolved backend.
+#[derive(Clone)]
+enum WorkerBackend {
+    Pjrt { runtime: Arc<Runtime>, artifacts_dir: PathBuf },
+    Synthetic,
+}
+
+struct StreamHandle {
+    name: String,
+    queue: Arc<DropOldest<Frame>>,
+    results: Option<mpsc::Receiver<InferenceResult>>,
+    worker: Option<std::thread::JoinHandle<crate::Result<StreamOutcome>>>,
+}
+
+/// Handle to a running multi-stream coordinator.
 pub struct Coordinator {
-    tx: mpsc::SyncSender<WorkerMsg>,
-    pub results: mpsc::Receiver<InferenceResult>,
-    worker: Option<std::thread::JoinHandle<crate::Result<metrics::WorkerStats>>>,
-    dropped: std::sync::Arc<std::sync::atomic::AtomicU64>,
+    streams: Vec<StreamHandle>,
+    synthetic: bool,
 }
 
 impl Coordinator {
-    /// Start the worker thread: loads + compiles + warms the model, and
-    /// only returns once it is ready to serve (so callers' sensor clocks
-    /// start after compilation, not during — §Perf iteration 2).
+    /// Start a single-stream coordinator on the PJRT backend (the legacy
+    /// `serve` surface).
     pub fn start(cfg: Config) -> crate::Result<Coordinator> {
-        let (tx, rx) = mpsc::sync_channel::<WorkerMsg>(cfg.queue_depth.max(1));
-        let (res_tx, res_rx) = mpsc::channel::<InferenceResult>();
-        let (ready_tx, ready_rx) = mpsc::channel::<crate::Result<()>>();
-        let dropped = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
-        let worker = std::thread::Builder::new()
-            .name("xr-infer-worker".into())
-            .spawn(move || -> crate::Result<metrics::WorkerStats> {
-                let setup = (|| -> crate::Result<Executable> {
-                    let rt = Runtime::cpu()?;
-                    let exe: Executable = rt.load(&cfg.artifacts_dir, &cfg.model)?;
-                    // XLA's first execution JITs/initializes internals
-                    // (~1 s observed) — pay it before signalling readiness.
-                    let (c, h, w) = exe.input_chw;
-                    let _ = exe.infer(&vec![0.0f32; c * h * w])?;
-                    Ok(exe)
-                })();
-                let exe = match setup {
-                    Ok(exe) => {
-                        let _ = ready_tx.send(Ok(()));
-                        exe
-                    }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(anyhow::anyhow!("{e:#}")));
-                        return Err(e);
-                    }
-                };
-                let mut stats = metrics::WorkerStats::default();
-                while let Ok(msg) = rx.recv() {
-                    let frame = match msg {
-                        WorkerMsg::Frame(f) => f,
-                        WorkerMsg::Stop => break,
-                    };
-                    let picked = Instant::now();
-                    let queue_s = picked.duration_since(frame.captured).as_secs_f64();
-                    let outputs = exe.infer(&frame.pixels)?;
-                    let exec_s = picked.elapsed().as_secs_f64();
-                    stats.record(exec_s, queue_s);
-                    let _ = res_tx.send(InferenceResult {
-                        frame_id: frame.id,
-                        sensor: frame.sensor.clone(),
-                        outputs,
-                        e2e_latency_s: queue_s + exec_s,
-                        exec_latency_s: exec_s,
-                        queue_latency_s: queue_s,
-                    });
+        Coordinator::start_streams(
+            Backend::Pjrt { artifacts_dir: cfg.artifacts_dir },
+            vec![StreamConfig::new("stream0", &cfg.model, cfg.queue_depth)],
+        )
+    }
+
+    /// Start one worker + bounded drop-oldest queue per stream, sharing a
+    /// single PJRT [`Runtime`] (synthetic streams need none). Loads +
+    /// compiles + warms every model and only returns once *all* streams
+    /// are ready to serve, so callers' sensor clocks start after
+    /// compilation, not during (§Perf iteration 2).
+    pub fn start_streams(backend: Backend, cfgs: Vec<StreamConfig>) -> crate::Result<Coordinator> {
+        anyhow::ensure!(!cfgs.is_empty(), "coordinator needs at least one stream");
+        let resolved = resolve_backend(backend, &cfgs)?;
+        let synthetic = matches!(resolved, WorkerBackend::Synthetic);
+        let mut streams = Vec::with_capacity(cfgs.len());
+        let mut readies = Vec::with_capacity(cfgs.len());
+        for cfg in cfgs {
+            let (handle, ready) = spawn_stream(&resolved, cfg)?;
+            streams.push(handle);
+            readies.push(ready);
+        }
+        let coord = Coordinator { streams, synthetic };
+        // Block until every model is compiled + warmed (or failed). An
+        // early return drops `coord`, which closes all queues and joins
+        // the already-running workers.
+        for (i, ready) in readies.iter().enumerate() {
+            match ready.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    anyhow::bail!("stream '{}': {e:#}", coord.streams[i].name);
                 }
-                Ok(stats)
-            })?;
-        // Block until the model is compiled + warmed (or failed).
-        match ready_rx.recv() {
-            Ok(Ok(())) => {}
-            Ok(Err(e)) => {
-                let _ = worker.join();
-                return Err(e);
-            }
-            Err(_) => {
-                let _ = worker.join();
-                anyhow::bail!("worker exited before signalling readiness");
+                Err(_) => {
+                    anyhow::bail!(
+                        "stream '{}' worker exited before signalling readiness",
+                        coord.streams[i].name
+                    );
+                }
             }
         }
-        Ok(Coordinator {
-            tx,
-            results: res_rx,
-            worker: Some(worker),
-            dropped,
-        })
+        Ok(coord)
     }
 
-    /// Submit a frame; drops (and counts) it when the queue is full —
-    /// freshness-first backpressure.
+    /// Whether the streams run on the synthetic (offline) backend.
+    pub fn is_synthetic(&self) -> bool {
+        self.synthetic
+    }
+
+    pub fn stream_count(&self) -> usize {
+        self.streams.len()
+    }
+
+    pub fn stream_names(&self) -> Vec<&str> {
+        self.streams.iter().map(|s| s.name.as_str()).collect()
+    }
+
+    /// Submit a frame to stream `i`. The frame is always admitted while
+    /// the stream is up; `false` means the queue was full and the *oldest*
+    /// queued frame was evicted to make room (freshness-first
+    /// backpressure, counted in [`Coordinator::dropped_frames`]) — or the
+    /// stream is already shut down.
+    pub fn submit_to(&self, i: usize, frame: Frame) -> bool {
+        matches!(self.streams[i].queue.push(frame), Ok(None))
+    }
+
+    /// Single-stream convenience: submit to stream 0.
     pub fn submit(&self, frame: Frame) -> bool {
-        match self.tx.try_send(WorkerMsg::Frame(frame)) {
-            Ok(()) => true,
-            Err(_) => {
-                self.dropped
-                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                false
+        self.submit_to(0, frame)
+    }
+
+    /// The result channel of stream `i` (panics if taken).
+    pub fn results(&self, i: usize) -> &mpsc::Receiver<InferenceResult> {
+        self.streams[i].results.as_ref().expect("results receiver was taken")
+    }
+
+    /// Take ownership of stream `i`'s result channel — lets callers drain
+    /// results after [`Coordinator::shutdown_all`] consumed the handle.
+    pub fn take_results(&mut self, i: usize) -> mpsc::Receiver<InferenceResult> {
+        self.streams[i].results.take().expect("results receiver already taken")
+    }
+
+    /// Frames evicted by backpressure on stream `i`.
+    pub fn dropped_for(&self, i: usize) -> u64 {
+        self.streams[i].queue.dropped()
+    }
+
+    /// Total frames evicted by backpressure across all streams.
+    pub fn dropped_frames(&self) -> u64 {
+        self.streams.iter().map(|s| s.queue.dropped()).sum()
+    }
+
+    /// Stop every stream (pending queued frames are still served) and
+    /// collect the per-stream outcomes, in stream order.
+    pub fn shutdown_all(mut self) -> crate::Result<Vec<StreamOutcome>> {
+        for s in &self.streams {
+            s.queue.close();
+        }
+        let mut out = Vec::with_capacity(self.streams.len());
+        for s in self.streams.iter_mut() {
+            if let Some(h) = s.worker.take() {
+                let joined = h
+                    .join()
+                    .map_err(|_| anyhow::anyhow!("worker thread '{}' panicked", s.name))?;
+                out.push(joined?);
             }
         }
+        Ok(out)
     }
 
-    pub fn dropped_frames(&self) -> u64 {
-        self.dropped.load(std::sync::atomic::Ordering::Relaxed)
-    }
-
-    /// Stop the worker and collect its stats.
-    pub fn shutdown(mut self) -> crate::Result<metrics::WorkerStats> {
-        let _ = self.tx.send(WorkerMsg::Stop);
-        match self.worker.take() {
-            Some(h) => h
-                .join()
-                .map_err(|_| anyhow::anyhow!("worker thread panicked"))?,
-            None => anyhow::bail!("already shut down"),
-        }
+    /// Single-stream convenience: stop and return stream 0's stats.
+    pub fn shutdown(self) -> crate::Result<metrics::WorkerStats> {
+        let mut outcomes = self.shutdown_all()?;
+        anyhow::ensure!(!outcomes.is_empty(), "already shut down");
+        Ok(outcomes.remove(0).stats)
     }
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        let _ = self.tx.send(WorkerMsg::Stop);
-        if let Some(h) = self.worker.take() {
-            let _ = h.join();
+        for s in &self.streams {
+            s.queue.close();
         }
+        for s in self.streams.iter_mut() {
+            if let Some(h) = s.worker.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// Resolve the backend once per coordinator: the PJRT runtime (client) is
+/// created here and shared by every stream worker via `Arc`.
+fn resolve_backend(backend: Backend, cfgs: &[StreamConfig]) -> crate::Result<WorkerBackend> {
+    match backend {
+        Backend::Pjrt { artifacts_dir } => {
+            let runtime = Arc::new(Runtime::cpu()?);
+            Ok(WorkerBackend::Pjrt { runtime, artifacts_dir })
+        }
+        Backend::Synthetic => Ok(WorkerBackend::Synthetic),
+        Backend::Auto { artifacts_dir } => {
+            let have_artifacts = cfgs
+                .iter()
+                .all(|c| artifacts_dir.join(format!("{}.hlo.txt", c.model)).exists());
+            match (have_artifacts, Runtime::cpu()) {
+                (true, Ok(rt)) => {
+                    Ok(WorkerBackend::Pjrt { runtime: Arc::new(rt), artifacts_dir })
+                }
+                _ => Ok(WorkerBackend::Synthetic),
+            }
+        }
+    }
+}
+
+/// Spawn one stream worker: loads/compiles/warms its model (PJRT) or
+/// builds the synthetic executable, signals readiness, then serves frames
+/// off its drop-oldest queue until the queue is closed and drained.
+fn spawn_stream(
+    backend: &WorkerBackend,
+    cfg: StreamConfig,
+) -> crate::Result<(StreamHandle, mpsc::Receiver<crate::Result<()>>)> {
+    let queue: Arc<DropOldest<Frame>> = Arc::new(DropOldest::new(cfg.queue_depth));
+    let (res_tx, res_rx) = mpsc::channel::<InferenceResult>();
+    let (ready_tx, ready_rx) = mpsc::channel::<crate::Result<()>>();
+    let worker_queue = Arc::clone(&queue);
+    let worker_backend = backend.clone();
+    let name = cfg.name.clone();
+    let worker = std::thread::Builder::new()
+        .name(format!("xr-stream-{name}"))
+        .spawn(move || -> crate::Result<StreamOutcome> {
+            let setup = (|| -> crate::Result<ModelExec> {
+                match &worker_backend {
+                    WorkerBackend::Pjrt { runtime, artifacts_dir } => {
+                        let exe = runtime.load(artifacts_dir, &cfg.model)?;
+                        // XLA's first execution JITs/initializes internals
+                        // (~1 s observed) — pay it before signalling ready.
+                        let (c, h, w) = exe.input_chw;
+                        let _ = exe.infer(&vec![0.0f32; c * h * w])?;
+                        Ok(ModelExec::Pjrt(exe))
+                    }
+                    WorkerBackend::Synthetic => Ok(ModelExec::Synthetic(
+                        SyntheticExec::for_model(&cfg.model, cfg.exec_floor_s)?,
+                    )),
+                }
+            })();
+            let exe = match setup {
+                Ok(exe) => {
+                    let _ = ready_tx.send(Ok(()));
+                    exe
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(anyhow::anyhow!("{e:#}")));
+                    return Err(e);
+                }
+            };
+            let mut stats = metrics::WorkerStats::default();
+            let mut ledger = cfg.ledger;
+            let mut served = 0u64;
+            while let Some(frame) = worker_queue.pop() {
+                let picked = Instant::now();
+                let queue_s = picked.duration_since(frame.captured).as_secs_f64();
+                let outputs = match exe.infer(&frame.pixels) {
+                    Ok(o) => o,
+                    Err(e) => {
+                        // Fail fast: close the queue so producers stop
+                        // feeding a dead stream instead of the error only
+                        // surfacing at shutdown.
+                        worker_queue.close();
+                        return Err(e);
+                    }
+                };
+                let exec_s = picked.elapsed().as_secs_f64();
+                stats.record(exec_s, queue_s);
+                served += 1;
+                if let Some(g) = ledger.as_mut() {
+                    // Modeled clock: idle out to this frame's scheduled
+                    // capture instant, then charge the inference event —
+                    // so ledger energy is deterministic per sensor seed,
+                    // independent of wall-clock jitter or `time_scale`.
+                    g.idle((frame.sched_s * 1e9 - g.elapsed_ns).max(0.0));
+                    g.inference();
+                }
+                let _ = res_tx.send(InferenceResult {
+                    frame_id: frame.id,
+                    sensor: frame.sensor.clone(),
+                    outputs,
+                    e2e_latency_s: queue_s + exec_s,
+                    exec_latency_s: exec_s,
+                    queue_latency_s: queue_s,
+                });
+            }
+            if let (Some(g), Some(h)) = (ledger.as_mut(), cfg.horizon_s) {
+                g.idle((h * 1e9 - g.elapsed_ns).max(0.0));
+            }
+            Ok(StreamOutcome { name: cfg.name, stats, ledger, served })
+        })?;
+    Ok((
+        StreamHandle { name, queue, results: Some(res_rx), worker: Some(worker) },
+        ready_rx,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sensor::Sensor;
+    use super::*;
+
+    #[test]
+    fn synthetic_single_stream_serves_and_shuts_down() {
+        let coord = Coordinator::start_streams(
+            Backend::Synthetic,
+            vec![StreamConfig::new("s", "detnet", 4)],
+        )
+        .unwrap();
+        assert!(coord.is_synthetic());
+        assert_eq!(coord.stream_count(), 1);
+        let mut cam = Sensor::hand_camera(100.0, 11);
+        for _ in 0..5 {
+            let _ = cam.next_gap_s();
+            assert!(coord.submit(cam.capture()));
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        let stats = coord.shutdown().unwrap();
+        assert_eq!(stats.count(), 5, "all submitted frames must be served");
+    }
+
+    #[test]
+    fn synthetic_multi_stream_shares_one_coordinator() {
+        let coord = Coordinator::start_streams(
+            Backend::Synthetic,
+            vec![
+                StreamConfig::new("hand", "detnet", 4),
+                StreamConfig::new("eye", "edsnet", 4),
+            ],
+        )
+        .unwrap();
+        assert_eq!(coord.stream_names(), vec!["hand", "eye"]);
+        let mut hand = Sensor::hand_camera(100.0, 1);
+        let mut eye = Sensor::eye_camera(100.0, 2);
+        let _ = hand.next_gap_s();
+        let _ = eye.next_gap_s();
+        coord.submit_to(0, hand.capture());
+        coord.submit_to(1, eye.capture());
+        let outcomes = coord.shutdown_all().unwrap();
+        assert_eq!(outcomes.len(), 2);
+        assert_eq!(outcomes[0].name, "hand");
+        assert_eq!(outcomes[0].served, 1);
+        assert_eq!(outcomes[1].served, 1);
+    }
+
+    #[test]
+    fn unknown_synthetic_model_fails_at_start() {
+        let err = match Coordinator::start_streams(
+            Backend::Synthetic,
+            vec![StreamConfig::new("s", "nonexistent", 2)],
+        ) {
+            Err(e) => e,
+            Ok(_) => panic!("starting an unknown synthetic model must fail"),
+        };
+        assert!(format!("{err}").contains("nonexistent"), "{err}");
+    }
+
+    #[test]
+    fn auto_backend_falls_back_to_synthetic_offline() {
+        // No artifacts dir (and/or the offline PJRT stub) → synthetic.
+        let coord = Coordinator::start_streams(
+            Backend::Auto { artifacts_dir: PathBuf::from("definitely-missing-dir") },
+            vec![StreamConfig::new("s", "detnet", 2)],
+        )
+        .unwrap();
+        assert!(coord.is_synthetic());
     }
 }

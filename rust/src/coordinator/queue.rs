@@ -1,0 +1,183 @@
+//! Bounded drop-oldest queue — the XR freshness-first backpressure
+//! primitive. A full queue evicts its *oldest* entry to admit the new one
+//! (stale frames are worthless to a tracker), unlike `mpsc::sync_channel`
+//! whose `try_send` rejects the *newest* — the bug that made a saturated
+//! coordinator serve the stalest frames. One queue per stream; producers
+//! push from sensor threads, the stream's worker blocks on [`DropOldest::pop`].
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// A bounded MPMC queue with drop-oldest overflow semantics.
+pub struct DropOldest<T> {
+    inner: Mutex<State<T>>,
+    avail: Condvar,
+    capacity: usize,
+    dropped: AtomicU64,
+}
+
+impl<T> DropOldest<T> {
+    /// `capacity` is clamped to at least 1.
+    pub fn new(capacity: usize) -> DropOldest<T> {
+        DropOldest {
+            inner: Mutex::new(State { items: VecDeque::new(), closed: false }),
+            avail: Condvar::new(),
+            capacity: capacity.max(1),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Enqueue `item`. When the queue is full the *oldest* entry is evicted
+    /// (counted in [`DropOldest::dropped`]) and returned as `Ok(Some(..))`
+    /// so callers can account for it. A closed queue rejects the item
+    /// (also counted) and hands it back as `Err(item)`.
+    pub fn push(&self, item: T) -> Result<Option<T>, T> {
+        let mut st = self.inner.lock().unwrap();
+        if st.closed {
+            drop(st);
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return Err(item);
+        }
+        let evicted = if st.items.len() >= self.capacity {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            st.items.pop_front()
+        } else {
+            None
+        };
+        st.items.push_back(item);
+        drop(st);
+        self.avail.notify_one();
+        Ok(evicted)
+    }
+
+    /// Block until an item is available (FIFO: always the oldest survivor)
+    /// or the queue is closed *and* drained, which yields `None`.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.avail.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Option<T> {
+        self.inner.lock().unwrap().items.pop_front()
+    }
+
+    /// Close the queue: pending items remain poppable, new pushes are
+    /// rejected, and blocked poppers wake up.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.avail.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Frames evicted by overflow (plus any rejected after close).
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_below_capacity() {
+        let q: DropOldest<u64> = DropOldest::new(4);
+        for i in 0..3 {
+            assert!(matches!(q.push(i), Ok(None)));
+        }
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.try_pop(), Some(0));
+        assert_eq!(q.try_pop(), Some(1));
+        assert_eq!(q.try_pop(), Some(2));
+        assert_eq!(q.try_pop(), None);
+        assert_eq!(q.dropped(), 0);
+    }
+
+    #[test]
+    fn overflow_evicts_oldest_not_newest() {
+        let q: DropOldest<u64> = DropOldest::new(4);
+        let mut evicted = Vec::new();
+        for i in 0..20 {
+            if let Ok(Some(old)) = q.push(i) {
+                evicted.push(old);
+            }
+        }
+        // the oldest 16 were evicted, in age order
+        assert_eq!(evicted, (0..16).collect::<Vec<_>>());
+        assert_eq!(q.dropped(), 16);
+        // the survivors are exactly the 4 newest, still FIFO
+        let survivors: Vec<u64> = std::iter::from_fn(|| q.try_pop()).collect();
+        assert_eq!(survivors, vec![16, 17, 18, 19]);
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let q: DropOldest<u64> = DropOldest::new(0);
+        assert!(matches!(q.push(1), Ok(None)));
+        assert!(matches!(q.push(2), Ok(Some(1))));
+        assert_eq!(q.try_pop(), Some(2));
+    }
+
+    #[test]
+    fn pop_blocks_until_push() {
+        let q: Arc<DropOldest<u64>> = Arc::new(DropOldest::new(2));
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.pop());
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(matches!(q.push(7), Ok(None)));
+        assert_eq!(h.join().unwrap(), Some(7));
+    }
+
+    #[test]
+    fn close_drains_then_yields_none() {
+        let q: DropOldest<u64> = DropOldest::new(4);
+        let _ = q.push(1);
+        let _ = q.push(2);
+        q.close();
+        assert!(q.is_closed());
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+        // pushes after close are rejected and counted
+        assert!(matches!(q.push(3), Err(3)));
+        assert_eq!(q.dropped(), 1);
+    }
+
+    #[test]
+    fn close_wakes_blocked_popper() {
+        let q: Arc<DropOldest<u64>> = Arc::new(DropOldest::new(2));
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.pop());
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert_eq!(h.join().unwrap(), None);
+    }
+}

@@ -1,0 +1,491 @@
+//! Multi-stream XR scenario serving — the paper's *device-level* story
+//! (§5, Table 3) as an executable spec: one XR SoC concurrently running N
+//! model streams (hand detection at IPS=10, eye segmentation at IPS=0.1,
+//! …), each with its own sensor schedule, bounded drop-oldest queue,
+//! memory flavor and power-gate ledger, all sharing one
+//! [`Coordinator`]/runtime. A run reports *modeled* per-flavor memory
+//! energy (ledger vs closed-form `p_mem_uw` at the observed IPS) alongside
+//! *measured* latency, per stream and aggregated across the device.
+//!
+//! Time runs on two clocks: the sensors' modeled clock (which the ledgers
+//! charge — deterministic per seed) and the wall clock (which latency
+//! measurements use). `time_scale` compresses the wall clock so a
+//! 60-modeled-second operating point replays in ~1 s without touching the
+//! modeled energy accounting.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::arch::{self, Arch, MemFlavor, PeConfig};
+use crate::eval::{Assignments, Devices, Engine, Query};
+use crate::report::{ms, pct, Csv, Table};
+use crate::tech::{paper_mram_for, Device, Node};
+use crate::util::stats::Summary;
+use crate::workload;
+
+use super::gating::GateController;
+use super::queue::DropOldest;
+use super::sensor::{Arrival, Frame, Sensor};
+use super::{Backend, Coordinator, StreamConfig};
+
+/// One stream of a scenario: (model, sensor rate, queue policy, memory
+/// flavor).
+#[derive(Debug, Clone)]
+pub struct StreamSpec {
+    pub name: String,
+    /// Served model / workload name (detnet | edsnet).
+    pub model: String,
+    pub arrival: Arrival,
+    pub queue_depth: usize,
+    /// Memory flavor of the modeled accelerator variant this stream's
+    /// ledger charges.
+    pub flavor: MemFlavor,
+    /// Sensor PRNG seed (frames and Poisson schedules are deterministic
+    /// per seed).
+    pub seed: u64,
+    /// Synthetic backend only: minimum exec wall time, seconds.
+    pub exec_floor_s: f64,
+}
+
+impl StreamSpec {
+    pub fn new(name: &str, model: &str, arrival: Arrival, flavor: MemFlavor) -> StreamSpec {
+        StreamSpec {
+            name: name.to_string(),
+            model: model.to_string(),
+            arrival,
+            queue_depth: 4,
+            flavor,
+            seed: 42,
+            exec_floor_s: 0.0,
+        }
+    }
+}
+
+/// A multi-stream serving scenario.
+#[derive(Clone)]
+pub struct Scenario {
+    pub name: String,
+    pub streams: Vec<StreamSpec>,
+    /// Modeled duration, seconds: sensor schedules and ledgers cover
+    /// exactly this horizon.
+    pub seconds: f64,
+    /// Wall-clock compression: producers sleep `gap / time_scale` between
+    /// captures (1.0 = real time).
+    pub time_scale: f64,
+    /// The modeled accelerator the ledgers charge.
+    pub arch: Arch,
+    pub node: Node,
+    pub mram: Device,
+    pub backend: Backend,
+}
+
+impl Scenario {
+    /// Named presets:
+    ///
+    /// - `paper` — the §5/Table-3 operating point: detnet@10 IPS (hybrid
+    ///   P0) + edsnet@0.1 IPS (full-NVM P1), 60 modeled seconds replayed
+    ///   at 60× (≈1 s wall).
+    /// - `hand` — single detnet@10 stream (P1).
+    /// - `stress` — an over-rate detnet stream with a slow synthetic model
+    ///   and a shallow queue (exercises drop-oldest under saturation),
+    ///   plus a Poisson eye stream.
+    pub fn preset(name: &str, artifacts_dir: std::path::PathBuf) -> crate::Result<Scenario> {
+        let base = Scenario {
+            name: name.to_string(),
+            streams: Vec::new(),
+            seconds: 60.0,
+            time_scale: 60.0,
+            arch: arch::simba(PeConfig::V2),
+            node: Node::N7,
+            mram: paper_mram_for(Node::N7),
+            backend: Backend::Auto { artifacts_dir },
+        };
+        Ok(match name {
+            "paper" => Scenario {
+                streams: vec![
+                    StreamSpec::new(
+                        "hand",
+                        "detnet",
+                        Arrival::Periodic { fps: 10.0 },
+                        MemFlavor::P0,
+                    ),
+                    StreamSpec {
+                        seed: 7,
+                        ..StreamSpec::new(
+                            "eye",
+                            "edsnet",
+                            Arrival::Periodic { fps: 0.1 },
+                            MemFlavor::P1,
+                        )
+                    },
+                ],
+                ..base
+            },
+            "hand" => Scenario {
+                streams: vec![StreamSpec::new(
+                    "hand",
+                    "detnet",
+                    Arrival::Periodic { fps: 10.0 },
+                    MemFlavor::P1,
+                )],
+                seconds: 30.0,
+                time_scale: 30.0,
+                ..base
+            },
+            "stress" => Scenario {
+                streams: vec![
+                    StreamSpec {
+                        queue_depth: 2,
+                        exec_floor_s: 0.02,
+                        ..StreamSpec::new(
+                            "hot",
+                            "detnet",
+                            Arrival::Periodic { fps: 50.0 },
+                            MemFlavor::SramOnly,
+                        )
+                    },
+                    StreamSpec {
+                        seed: 9,
+                        ..StreamSpec::new(
+                            "eye",
+                            "edsnet",
+                            Arrival::Poisson { rate: 1.0 },
+                            MemFlavor::P1,
+                        )
+                    },
+                ],
+                seconds: 8.0,
+                time_scale: 4.0,
+                ..base
+            },
+            other => anyhow::bail!("unknown scenario preset '{other}' (paper|hand|stress)"),
+        })
+    }
+
+    /// Run the scenario: build each stream's modeled power variant through
+    /// the unified evaluation engine, start the coordinator (one worker +
+    /// drop-oldest queue per stream, shared runtime), replay every
+    /// sensor's schedule from its own producer thread, then assemble the
+    /// [`ScenarioReport`].
+    pub fn run(&self) -> crate::Result<ScenarioReport> {
+        anyhow::ensure!(!self.streams.is_empty(), "scenario '{}' has no streams", self.name);
+        anyhow::ensure!(self.time_scale > 0.0, "time_scale must be positive");
+        anyhow::ensure!(self.seconds > 0.0, "seconds must be positive");
+
+        // One engine over the scenario's distinct workloads; every
+        // stream's PowerModel is a query against it (the same evaluation
+        // path as every figure/table).
+        let mut nets: Vec<workload::Network> = Vec::new();
+        for s in &self.streams {
+            if !nets.iter().any(|n| n.name == s.model) {
+                nets.push(workload::builtin::by_name(&s.model)?);
+            }
+        }
+        let engine = Engine::new(vec![self.arch.clone()], nets);
+        let mut cfgs = Vec::with_capacity(self.streams.len());
+        let mut powers = Vec::with_capacity(self.streams.len());
+        for s in &self.streams {
+            let point = Query::over(&engine)
+                .nets(&[s.model.as_str()])
+                .nodes(&[self.node])
+                .devices(Devices::Fixed(self.mram))
+                .assignments(Assignments::Flavors(vec![s.flavor]))
+                .points()
+                .pop()
+                .ok_or_else(|| {
+                    anyhow::anyhow!("no design point for ({}, {:?})", s.model, s.flavor)
+                })?;
+            powers.push(point.power.clone());
+            let mut cfg = StreamConfig::new(&s.name, &s.model, s.queue_depth);
+            cfg.ledger = Some(GateController::new(point.power.clone()));
+            cfg.exec_floor_s = s.exec_floor_s;
+            cfg.horizon_s = Some(self.seconds);
+            cfgs.push(cfg);
+        }
+
+        let coord = Coordinator::start_streams(self.backend.clone(), cfgs)?;
+        let synthetic = coord.is_synthetic();
+
+        // One producer thread per stream, replaying its sensor schedule
+        // (compressed by time_scale) straight into the stream's queue.
+        let queues: Vec<Arc<DropOldest<Frame>>> =
+            coord.streams.iter().map(|s| Arc::clone(&s.queue)).collect();
+        let t0 = Instant::now();
+        let seconds = self.seconds;
+        let scale = self.time_scale;
+        let submitted: Vec<u64> = std::thread::scope(|sc| {
+            let handles: Vec<_> = self
+                .streams
+                .iter()
+                .zip(queues)
+                .map(|(spec, q)| {
+                    let mut sensor = make_sensor(spec);
+                    sc.spawn(move || {
+                        let mut t = 0.0;
+                        let mut n = 0u64;
+                        loop {
+                            let gap = sensor.next_gap_s();
+                            if t + gap > seconds {
+                                break;
+                            }
+                            t += gap;
+                            std::thread::sleep(Duration::from_secs_f64(gap / scale));
+                            let _ = q.push(sensor.capture());
+                            n += 1;
+                        }
+                        n
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap_or(0)).collect()
+        });
+        let wall_s = t0.elapsed().as_secs_f64();
+        let dropped: Vec<u64> = (0..self.streams.len()).map(|i| coord.dropped_for(i)).collect();
+        let outcomes = coord.shutdown_all()?;
+
+        let mut streams = Vec::with_capacity(self.streams.len());
+        for (((spec, outcome), power), (sub, drop)) in self
+            .streams
+            .iter()
+            .zip(outcomes)
+            .zip(powers)
+            .zip(submitted.iter().zip(&dropped))
+        {
+            let ledger = outcome.ledger.as_ref();
+            let observed_ips = ledger.map(|g| g.observed_ips()).unwrap_or(0.0);
+            streams.push(StreamReport {
+                name: spec.name.clone(),
+                model: spec.model.clone(),
+                flavor: spec.flavor,
+                rate: spec.arrival.rate(),
+                submitted: *sub,
+                served: outcome.served,
+                dropped: *drop,
+                exec: outcome.stats.exec_summary(),
+                queue: outcome.stats.queue_summary(),
+                e2e: outcome.stats.e2e_summary(),
+                observed_ips,
+                ledger_uw: ledger.map(|g| g.avg_power_uw()).unwrap_or(0.0),
+                closed_form_uw: power.p_mem_uw(observed_ips),
+                energy_pj: ledger.map(|g| g.energy_pj).unwrap_or(0.0),
+                wakeups: ledger.map(|g| g.wakeups).unwrap_or(0),
+                feasible: crate::pipeline::meets_ips(&power, spec.arrival.rate()),
+            });
+        }
+        Ok(ScenarioReport {
+            scenario: self.name.clone(),
+            synthetic,
+            seconds: self.seconds,
+            time_scale: self.time_scale,
+            wall_s,
+            streams,
+        })
+    }
+}
+
+/// Sensor for a stream: frame geometry/statistics follow the model, the
+/// arrival process follows the spec.
+fn make_sensor(spec: &StreamSpec) -> Sensor {
+    let mut s = if spec.model.contains("eds") {
+        Sensor::eye_camera(spec.arrival.rate(), spec.seed)
+    } else {
+        Sensor::hand_camera(spec.arrival.rate(), spec.seed)
+    };
+    s.arrival = spec.arrival;
+    s
+}
+
+/// Per-stream results of a scenario run.
+#[derive(Debug, Clone)]
+pub struct StreamReport {
+    pub name: String,
+    pub model: String,
+    pub flavor: MemFlavor,
+    /// Configured mean arrival rate, frames/s.
+    pub rate: f64,
+    pub submitted: u64,
+    pub served: u64,
+    /// Frames evicted by drop-oldest backpressure.
+    pub dropped: u64,
+    /// Measured latency summaries (wall clock), seconds.
+    pub exec: Summary,
+    pub queue: Summary,
+    pub e2e: Summary,
+    /// Ledger-observed inference rate over the modeled horizon, IPS.
+    pub observed_ips: f64,
+    /// Ledger average memory power over the modeled horizon, µW.
+    pub ledger_uw: f64,
+    /// Closed-form `p_mem_uw` at the observed IPS, µW.
+    pub closed_form_uw: f64,
+    /// Modeled memory energy over the horizon, pJ.
+    pub energy_pj: f64,
+    pub wakeups: u64,
+    /// Whether the modeled variant can sustain the configured rate
+    /// (`pipeline::meets_ips`).
+    pub feasible: bool,
+}
+
+impl StreamReport {
+    /// |ledger − closed-form| / closed-form (the Table-3 agreement check).
+    pub fn p_mem_rel_err(&self) -> f64 {
+        crate::util::stats::rel_diff(self.ledger_uw, self.closed_form_uw)
+    }
+}
+
+/// The cross-stream report of one scenario run.
+#[derive(Debug, Clone)]
+pub struct ScenarioReport {
+    pub scenario: String,
+    /// True when the run used the synthetic (offline) backend.
+    pub synthetic: bool,
+    /// Modeled horizon, seconds.
+    pub seconds: f64,
+    pub time_scale: f64,
+    /// Measured wall time of the replay, seconds.
+    pub wall_s: f64,
+    pub streams: Vec<StreamReport>,
+}
+
+impl ScenarioReport {
+    pub fn total_submitted(&self) -> u64 {
+        self.streams.iter().map(|s| s.submitted).sum()
+    }
+
+    pub fn total_served(&self) -> u64 {
+        self.streams.iter().map(|s| s.served).sum()
+    }
+
+    pub fn total_dropped(&self) -> u64 {
+        self.streams.iter().map(|s| s.dropped).sum()
+    }
+
+    /// Device-level modeled memory power: the per-stream ledgers summed —
+    /// the SoC concurrently runs every stream's accelerator variant.
+    pub fn total_p_mem_uw(&self) -> f64 {
+        self.streams.iter().map(|s| s.ledger_uw).sum()
+    }
+
+    /// Worst per-stream ledger-vs-closed-form relative error.
+    pub fn worst_rel_err(&self) -> f64 {
+        self.streams.iter().map(|s| s.p_mem_rel_err()).fold(0.0, f64::max)
+    }
+
+    /// Render the per-stream table (the `xr-edge-dse scenario` output).
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            &format!(
+                "scenario '{}' — {:.0} s modeled @{}× ({} backend)",
+                self.scenario,
+                self.seconds,
+                self.time_scale,
+                if self.synthetic { "synthetic" } else { "pjrt" }
+            ),
+            &[
+                "stream", "model", "flavor", "rate", "served", "dropped", "e2e p50", "e2e p99",
+                "IPS obs", "P_mem ledger", "P_mem closed", "Δ",
+            ],
+        );
+        for s in &self.streams {
+            t.row(vec![
+                s.name.clone(),
+                s.model.clone(),
+                s.flavor.label().into(),
+                format!("{}", s.rate),
+                format!("{}", s.served),
+                format!("{}", s.dropped),
+                ms(s.e2e.p50),
+                ms(s.e2e.p99),
+                format!("{:.3}", s.observed_ips),
+                format!("{:.2} µW", s.ledger_uw),
+                format!("{:.2} µW", s.closed_form_uw),
+                pct(s.p_mem_rel_err()),
+            ]);
+        }
+        t
+    }
+
+    /// One CSV row per stream (figure-ready).
+    pub fn to_csv(&self) -> Csv {
+        let mut c = Csv::new(&[
+            "scenario", "stream", "model", "flavor", "rate", "submitted", "served", "dropped",
+            "e2e_p50_s", "e2e_p99_s", "observed_ips", "ledger_uw", "closed_form_uw", "rel_err",
+            "energy_pj", "wakeups", "feasible",
+        ]);
+        for s in &self.streams {
+            c.row(vec![
+                self.scenario.clone(),
+                s.name.clone(),
+                s.model.clone(),
+                s.flavor.label().into(),
+                format!("{}", s.rate),
+                format!("{}", s.submitted),
+                format!("{}", s.served),
+                format!("{}", s.dropped),
+                format!("{}", s.e2e.p50),
+                format!("{}", s.e2e.p99),
+                format!("{}", s.observed_ips),
+                format!("{}", s.ledger_uw),
+                format!("{}", s.closed_form_uw),
+                format!("{}", s.p_mem_rel_err()),
+                format!("{}", s.energy_pj),
+                format!("{}", s.wakeups),
+                format!("{}", s.feasible),
+            ]);
+        }
+        c
+    }
+
+    /// One-line aggregate for terminal output.
+    pub fn summary_line(&self) -> String {
+        format!(
+            "{} streams: {} submitted, {} served, {} dropped · device P_mem {:.2} µW · worst ledger Δ {} · wall {:.2} s",
+            self.streams.len(),
+            self.total_submitted(),
+            self.total_served(),
+            self.total_dropped(),
+            self.total_p_mem_uw(),
+            pct(self.worst_rel_err()),
+            self.wall_s
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve() {
+        for name in ["paper", "hand", "stress"] {
+            let sc = Scenario::preset(name, "artifacts".into()).unwrap();
+            assert!(!sc.streams.is_empty(), "{name}");
+            assert!(sc.seconds > 0.0 && sc.time_scale > 0.0);
+        }
+        assert!(Scenario::preset("nope", "artifacts".into()).is_err());
+        let paper = Scenario::preset("paper", "artifacts".into()).unwrap();
+        assert_eq!(paper.streams.len(), 2);
+        assert_eq!(paper.streams[0].model, "detnet");
+        assert_eq!(paper.streams[0].arrival.rate(), 10.0);
+        assert_eq!(paper.streams[1].model, "edsnet");
+        assert_eq!(paper.streams[1].arrival.rate(), 0.1);
+    }
+
+    #[test]
+    fn sensors_follow_model_and_spec() {
+        let eye = StreamSpec::new("e", "edsnet", Arrival::Periodic { fps: 0.5 }, MemFlavor::P1);
+        let s = make_sensor(&eye);
+        assert_eq!(s.chw, (1, 192, 320));
+        assert!(matches!(s.arrival, Arrival::Periodic { .. }));
+        let hand = StreamSpec::new("h", "detnet", Arrival::Poisson { rate: 3.0 }, MemFlavor::P0);
+        let s = make_sensor(&hand);
+        assert_eq!(s.chw, (1, 128, 128));
+        assert!(matches!(s.arrival, Arrival::Poisson { .. }));
+    }
+
+    #[test]
+    fn empty_scenario_is_rejected() {
+        let mut sc = Scenario::preset("hand", "artifacts".into()).unwrap();
+        sc.streams.clear();
+        assert!(sc.run().is_err());
+    }
+}

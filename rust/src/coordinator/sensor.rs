@@ -13,6 +13,12 @@ pub struct Frame {
     pub sensor: String,
     pub pixels: Vec<f32>,
     pub captured: Instant,
+    /// Scheduled capture time on the sensor's *modeled* clock, seconds
+    /// since stream start (the cumulative sum of [`Sensor::next_gap_s`]
+    /// draws). Wall time may be compressed (scenario `time_scale`); the
+    /// power-gate ledger charges idle intervals against this clock, so the
+    /// modeled energy is independent of real-time jitter.
+    pub sched_s: f64,
     /// Ground truth for accuracy tracking (hand sensor: circle cx,cy,r in
     /// normalized coords; eye sensor: pupil cx,cy + radii).
     pub truth: Vec<f32>,
@@ -36,6 +42,14 @@ impl Arrival {
             Arrival::Poisson { rate } => rng.exp(rate),
         }
     }
+
+    /// Mean arrival rate, frames/second.
+    pub fn rate(&self) -> f64 {
+        match *self {
+            Arrival::Periodic { fps } => fps,
+            Arrival::Poisson { rate } => rate,
+        }
+    }
 }
 
 /// Synthetic generator shared by hand/eye sensors.
@@ -45,6 +59,8 @@ pub struct Sensor {
     pub arrival: Arrival,
     rng: Prng,
     next_id: u64,
+    /// Modeled clock: cumulative [`Sensor::next_gap_s`] draws, seconds.
+    clock_s: f64,
 }
 
 impl Sensor {
@@ -55,6 +71,7 @@ impl Sensor {
             arrival: Arrival::Periodic { fps },
             rng: Prng::new(seed),
             next_id: 0,
+            clock_s: 0.0,
         }
     }
 
@@ -65,6 +82,7 @@ impl Sensor {
             arrival: Arrival::Poisson { rate },
             rng: Prng::new(seed),
             next_id: 0,
+            clock_s: 0.0,
         }
     }
 
@@ -72,7 +90,13 @@ impl Sensor {
         let mut rng = self.rng.clone();
         let gap = self.arrival.next_gap(&mut rng);
         self.rng = rng;
+        self.clock_s += gap;
         gap
+    }
+
+    /// Current modeled-clock time, seconds.
+    pub fn clock_s(&self) -> f64 {
+        self.clock_s
     }
 
     /// Produce the next frame: a dark background with 1–2 bright
@@ -115,6 +139,7 @@ impl Sensor {
             sensor: self.name.clone(),
             pixels,
             captured: Instant::now(),
+            sched_s: self.clock_s,
             truth,
         };
         self.next_id += 1;
@@ -187,5 +212,18 @@ mod tests {
         let mut a = Sensor::hand_camera(30.0, 9);
         let mut b = Sensor::hand_camera(30.0, 9);
         assert_eq!(a.capture().pixels, b.capture().pixels);
+    }
+
+    #[test]
+    fn sched_clock_accumulates_gaps() {
+        let mut s = Sensor::hand_camera(10.0, 1);
+        assert_eq!(s.capture().sched_s, 0.0);
+        let g1 = s.next_gap_s();
+        let g2 = s.next_gap_s();
+        let f = s.capture();
+        assert!((f.sched_s - (g1 + g2)).abs() < 1e-12);
+        assert!((s.clock_s() - 0.2).abs() < 1e-12);
+        assert_eq!(Arrival::Periodic { fps: 10.0 }.rate(), 10.0);
+        assert_eq!(Arrival::Poisson { rate: 0.1 }.rate(), 0.1);
     }
 }

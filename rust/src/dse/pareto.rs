@@ -30,12 +30,62 @@ pub fn dominates(a: &Objectives, b: &Objectives) -> bool {
     le && lt
 }
 
-/// Indices of the undominated points, in input order.
+/// Incremental Pareto archive: stream candidates in, keep the running
+/// undominated set. An offered point is rejected if any held point
+/// dominates it; otherwise it evicts everything it dominates and joins.
+/// Because dominance is a strict partial order, the final archive equals
+/// the full pairwise frontier, and survivors keep insertion order — so
+/// [`frontier`] and the `eval::Query::pareto` stage share this one
+/// implementation, and each offer costs O(|archive|) instead of the old
+/// O(n) pairwise pass per point (frontiers are small; lattice grids are
+/// not).
+pub struct ParetoArchive<T> {
+    entries: Vec<(T, Objectives)>,
+}
+
+impl<T> ParetoArchive<T> {
+    pub fn new() -> ParetoArchive<T> {
+        ParetoArchive { entries: Vec::new() }
+    }
+
+    /// Offer a candidate; returns whether it joined the archive.
+    pub fn offer(&mut self, item: T, o: Objectives) -> bool {
+        if self.entries.iter().any(|(_, held)| dominates(held, &o)) {
+            return false;
+        }
+        self.entries.retain(|(_, held)| !dominates(&o, held));
+        self.entries.push((item, o));
+        true
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The surviving items, in insertion order.
+    pub fn into_items(self) -> Vec<T> {
+        self.entries.into_iter().map(|(item, _)| item).collect()
+    }
+}
+
+impl<T> Default for ParetoArchive<T> {
+    fn default() -> Self {
+        ParetoArchive::new()
+    }
+}
+
+/// Indices of the undominated points, in input order (incremental archive;
+/// the old implementation was a full O(n²) pairwise scan).
 pub fn frontier(points: &[DesignPoint], ips: f64) -> Vec<usize> {
-    let objs: Vec<Objectives> = points.iter().map(|p| objectives(p, ips)).collect();
-    (0..points.len())
-        .filter(|&i| !objs.iter().enumerate().any(|(j, o)| j != i && dominates(o, &objs[i])))
-        .collect()
+    let mut archive = ParetoArchive::new();
+    for (i, p) in points.iter().enumerate() {
+        archive.offer(i, objectives(p, ips));
+    }
+    archive.into_items()
 }
 
 /// Filter to points that can sustain `ips` at all (latency feasibility —
@@ -100,6 +150,41 @@ mod tests {
         assert!(!dominates(&a, &a));
         assert!(dominates(&a, &b));
         assert!(!dominates(&b, &a));
+    }
+
+    #[test]
+    fn incremental_archive_matches_pairwise_scan() {
+        // reference: the old O(n²) definition, recomputed here
+        let pts = grid();
+        for ips in [1.0, 10.0, 100.0] {
+            let objs: Vec<Objectives> = pts.iter().map(|p| objectives(p, ips)).collect();
+            let pairwise: Vec<usize> = (0..pts.len())
+                .filter(|&i| {
+                    !objs.iter().enumerate().any(|(j, o)| j != i && dominates(o, &objs[i]))
+                })
+                .collect();
+            assert_eq!(frontier(&pts, ips), pairwise, "ips={ips}");
+        }
+    }
+
+    #[test]
+    fn archive_evicts_earlier_entries_dominated_later() {
+        // B (incomparable to A) then A, then C which dominates A only:
+        // the archive must converge to {B, C} in insertion order.
+        let a = Objectives { p_mem_uw: 2.0, area_mm2: 2.0, latency_ms: 2.0 };
+        let b = Objectives { p_mem_uw: 3.0, area_mm2: 1.0, latency_ms: 3.0 };
+        let c = Objectives { p_mem_uw: 1.0, area_mm2: 2.0, latency_ms: 1.0 };
+        let mut arch = ParetoArchive::new();
+        assert!(arch.offer("a", a));
+        assert!(arch.offer("b", b));
+        assert!(arch.offer("c", c));
+        assert_eq!(arch.len(), 2);
+        assert_eq!(arch.into_items(), vec!["b", "c"]);
+        // and a dominated offer is rejected without evicting anything
+        let mut arch = ParetoArchive::new();
+        assert!(arch.offer("c", c));
+        assert!(!arch.offer("a", a));
+        assert_eq!(arch.into_items(), vec!["c"]);
     }
 
     #[test]

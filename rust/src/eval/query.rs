@@ -37,7 +37,7 @@
 //! streaming.
 
 use crate::arch::{Arch, MemFlavor};
-use crate::dse::pareto::{dominates, objectives, Objectives};
+use crate::dse::pareto::{objectives, ParetoArchive};
 use crate::report::{Csv, Table};
 use crate::tech::{paper_mram_for, Device, Node};
 
@@ -293,7 +293,7 @@ impl<'e> Query<'e> {
         } = &self;
 
         let mut terminal = Terminal {
-            pareto: pareto_ips.map(|ips| (ips, Vec::new())),
+            pareto: pareto_ips.map(|ips| (ips, ParetoArchive::new())),
             topk: top_k.as_ref().map(|(m, k)| (m, *k, Vec::new())),
         };
 
@@ -390,11 +390,12 @@ impl<'e> Query<'e> {
     }
 }
 
-/// The buffering tail stages: a running Pareto archive and/or a bounded
-/// best-k list. With neither set, rows pass straight through to the sink.
+/// The buffering tail stages: a running Pareto archive (the shared
+/// `dse::pareto::ParetoArchive`) and/or a bounded best-k list. With
+/// neither set, rows pass straight through to the sink.
 #[allow(clippy::type_complexity)]
 struct Terminal<'q> {
-    pareto: Option<(f64, Vec<(QueryRow, Objectives)>)>,
+    pareto: Option<(f64, ParetoArchive<QueryRow>)>,
     topk: Option<(&'q MetricFn<'q>, usize, Vec<(QueryRow, f64)>)>,
 }
 
@@ -402,11 +403,7 @@ impl Terminal<'_> {
     fn push(&mut self, row: QueryRow, visit: &mut dyn FnMut(QueryRow)) {
         if let Some((ips, archive)) = &mut self.pareto {
             let o = objectives(&row.point, *ips);
-            if archive.iter().any(|(_, held)| dominates(held, &o)) {
-                return;
-            }
-            archive.retain(|(_, held)| !dominates(&o, held));
-            archive.push((row, o));
+            archive.offer(row, o);
         } else if let Some((metric, k, best)) = &mut self.topk {
             if *k == usize::MAX {
                 // Unbounded (full-sort) mode: append now, one stable
@@ -426,7 +423,7 @@ impl Terminal<'_> {
             (Some((_, archive)), Some((metric, k, _))) => {
                 // pareto ran first; rank its survivors by the metric.
                 let mut best = Vec::new();
-                for (row, _) in archive {
+                for row in archive.into_items() {
                     topk_insert(&mut best, row, metric, k);
                 }
                 for (row, _) in best {
@@ -434,7 +431,7 @@ impl Terminal<'_> {
                 }
             }
             (Some((_, archive)), None) => {
-                for (row, _) in archive {
+                for row in archive.into_items() {
                     visit(row);
                 }
             }

@@ -18,9 +18,12 @@
 //!    wrappers over it, [`pipeline`] (temporal operation cycle), [`dse`]
 //!    (legacy sweep shims + hybrid/pareto over the query), [`report`].
 //! 3. **The serving runtime** proving the stack end-to-end: [`runtime`]
-//!    (PJRT load/execute of JAX-AOT'd DetNet/EDSNet), [`coordinator`]
-//!    (sensor streams, scheduler, power-gate controller, metrics),
-//!    [`quant`] (INT8 pre/post-processing on the request path).
+//!    (PJRT load/execute of JAX-AOT'd DetNet/EDSNet, plus the offline
+//!    synthetic backend), [`coordinator`] (multi-stream serving: sensor
+//!    streams, drop-oldest queues, per-stream power-gate ledgers,
+//!    metrics, and the scenario runner reproducing the paper's concurrent
+//!    operating point), [`quant`] (INT8 pre/post-processing on the
+//!    request path).
 //!
 //! See `DESIGN.md` for the experiment index mapping every paper table and
 //! figure to a bench target, and `EXPERIMENTS.md` for measured results.

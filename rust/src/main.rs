@@ -12,6 +12,7 @@
 //! xr-edge-dse hybrid  --arch simba --net detnet --ips 10 # NVM/SRAM lattice
 //! xr-edge-dse sweep   --out artifacts/figures            # all CSV series
 //! xr-edge-dse serve   --model detnet --fps 10 --seconds 5  # PJRT serving
+//! xr-edge-dse scenario --preset paper                # multi-stream serving
 //! ```
 //!
 //! Every analytical command is a [`Query`] over the unified evaluation
@@ -54,6 +55,11 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "seconds", takes_value: true, help: "serve duration", default: Some("5") },
         OptSpec { name: "artifacts", takes_value: true, help: "artifacts directory", default: Some("artifacts") },
         OptSpec { name: "out", takes_value: true, help: "output dir for sweep CSVs", default: Some("artifacts/figures") },
+        OptSpec { name: "preset", takes_value: true, help: "scenario preset: paper|hand|stress", default: Some("paper") },
+        OptSpec { name: "backend", takes_value: true, help: "scenario backend: auto|pjrt|synthetic", default: Some("auto") },
+        OptSpec { name: "horizon", takes_value: true, help: "scenario: modeled seconds (default: preset's)", default: None },
+        OptSpec { name: "time-scale", takes_value: true, help: "scenario: wall-clock compression (default: preset's)", default: None },
+        OptSpec { name: "csv", takes_value: true, help: "scenario: write per-stream CSV to this path", default: None },
         OptSpec { name: "verbose", takes_value: false, help: "per-layer detail", default: None },
     ]
 }
@@ -342,6 +348,9 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         "serve" => {
             serve(&args)?;
         }
+        "scenario" => {
+            scenario(&args, node, mram)?;
+        }
         "help" | "--help" | "-h" => print_help(),
         other => {
             print_help();
@@ -469,10 +478,47 @@ fn serve(args: &xr_edge_dse::util::cli::Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `scenario`: run a multi-stream serving scenario (the paper's concurrent
+/// operating point) and report per-stream ledger-vs-closed-form power.
+fn scenario(args: &xr_edge_dse::util::cli::Args, node: Node, mram: Device) -> anyhow::Result<()> {
+    use xr_edge_dse::coordinator::scenario::Scenario;
+    use xr_edge_dse::coordinator::Backend;
+    let artifacts = std::path::PathBuf::from(args.get("artifacts").unwrap());
+    let mut sc = Scenario::preset(args.get("preset").unwrap(), artifacts.clone())?;
+    sc.node = node;
+    sc.mram = mram;
+    sc.backend = match args.get("backend").unwrap() {
+        "auto" => Backend::Auto { artifacts_dir: artifacts },
+        "pjrt" => Backend::Pjrt { artifacts_dir: artifacts },
+        "synthetic" => Backend::Synthetic,
+        other => anyhow::bail!("unknown backend '{other}' (auto|pjrt|synthetic)"),
+    };
+    if let Some(h) = args.get_f64("horizon")? {
+        sc.seconds = h;
+    }
+    if let Some(ts) = args.get_f64("time-scale")? {
+        sc.time_scale = ts;
+    }
+    let report = sc.run()?;
+    print!("{}", report.table().render());
+    println!("{}", report.summary_line());
+    for s in &report.streams {
+        if !s.feasible {
+            println!("warning: stream '{}' cannot sustain {} IPS with {:?}", s.name, s.rate, s.flavor);
+        }
+    }
+    if let Some(path) = args.get("csv") {
+        let path = std::path::PathBuf::from(path);
+        report.to_csv().save(&path)?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
 fn print_help() {
     println!(
         "xr-edge-dse — memory-oriented DSE of edge-AI hardware for XR (tinyML'23 reproduction)\n\
-         commands: map | energy | area | ips | edp | fig3d | pareto | hybrid | sweep | serve | help\n\n{}",
+         commands: map | energy | area | ips | edp | fig3d | pareto | hybrid | sweep | serve | scenario | help\n\n{}",
         usage(&specs())
     );
 }

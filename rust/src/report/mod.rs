@@ -114,6 +114,10 @@ impl Csv {
 pub fn pct(x: f64) -> String {
     format!("{:+.1}%", x * 100.0)
 }
+/// Seconds rendered as milliseconds (latency columns).
+pub fn ms(x: f64) -> String {
+    format!("{:.3} ms", x * 1e3)
+}
 pub fn sci(x: f64) -> String {
     if x == 0.0 {
         "0".into()
@@ -162,5 +166,6 @@ mod tests {
         assert_eq!(pct(-0.04), "-4.0%");
         assert_eq!(sci(0.0), "0");
         assert!(sci(1.234e9).contains('e'));
+        assert_eq!(ms(0.0125), "12.500 ms");
     }
 }

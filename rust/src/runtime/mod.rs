@@ -1,8 +1,19 @@
-//! PJRT runtime: load JAX-AOT'd HLO text artifacts, compile once on the
-//! PJRT CPU client, execute on the request path. Python never runs here
-//! (see `python/compile/aot.py` for the build-time half).
+//! Model execution backends for the serving stack:
+//!
+//! - **PJRT** ([`Runtime`] / [`Executable`]): load JAX-AOT'd HLO text
+//!   artifacts, compile once on the PJRT CPU client, execute on the request
+//!   path. Python never runs here (see `python/compile/aot.py` for the
+//!   build-time half).
+//! - **Synthetic** ([`SyntheticExec`]): a deterministic stand-in that
+//!   computes cheap image statistics shaped like the real model outputs —
+//!   no artifacts, no PJRT — so the serving layers (coordinator, scenario
+//!   runner, CI) exercise queueing/metrics/gating fully offline.
+//!
+//! [`ModelExec`] is the backend-agnostic handle stream workers hold.
 
 use std::path::Path;
+
+use crate::util::json::Json;
 
 /// A compiled model executable plus its I/O metadata (read from the
 /// artifact's sidecar `<name>.meta.json` written by `aot.py`).
@@ -18,6 +29,51 @@ pub struct Executable {
 /// The PJRT client wrapper; one per process, executables share it.
 pub struct Runtime {
     client: xla::PjRtClient,
+}
+
+/// Parse the sidecar metadata (`input_chw` + `outputs`), with errors that
+/// name the file and the offending field — a malformed `input_chw` used to
+/// panic on `arr[1]` when fewer than 3 dims were given, and non-numeric
+/// dims silently defaulted to 1, surfacing later as a misleading
+/// "frame len != 1x1x1".
+fn parse_meta(meta: &Json, meta_path: &Path) -> crate::Result<((usize, usize, usize), Vec<String>)> {
+    let where_ = meta_path.display();
+    let input = meta
+        .req("input_chw")
+        .map_err(|e| anyhow::anyhow!("{where_}: {e}"))?;
+    let arr = input
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("{where_}: field 'input_chw' must be a [c,h,w] array"))?;
+    anyhow::ensure!(
+        arr.len() == 3,
+        "{where_}: field 'input_chw' must have exactly 3 entries (c,h,w), got {}",
+        arr.len()
+    );
+    let dim = |i: usize| -> crate::Result<usize> {
+        let d = arr[i].as_usize().ok_or_else(|| {
+            anyhow::anyhow!("{where_}: field 'input_chw[{i}]' must be a non-negative integer")
+        })?;
+        anyhow::ensure!(d > 0, "{where_}: field 'input_chw[{i}]' must be positive, got 0");
+        Ok(d)
+    };
+    let chw = (dim(0)?, dim(1)?, dim(2)?);
+    let outs = meta
+        .req("outputs")
+        .map_err(|e| anyhow::anyhow!("{where_}: {e}"))?;
+    let outs = outs
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("{where_}: field 'outputs' must be an array"))?;
+    let mut outputs = Vec::with_capacity(outs.len());
+    for (i, o) in outs.iter().enumerate() {
+        outputs.push(
+            o.as_str()
+                .ok_or_else(|| {
+                    anyhow::anyhow!("{where_}: field 'outputs[{i}]' must be a string")
+                })?
+                .to_string(),
+        );
+    }
+    Ok((chw, outputs))
 }
 
 impl Runtime {
@@ -51,27 +107,13 @@ impl Runtime {
             .compile(&comp)
             .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
 
-        let meta =
-            crate::util::json::Json::parse_file(&artifacts_dir.join(format!("{name}.meta.json")))?;
-        let input = meta.req("input_chw")?;
-        let arr = input
-            .as_arr()
-            .ok_or_else(|| anyhow::anyhow!("input_chw must be [c,h,w]"))?;
-        let outputs = meta
-            .req("outputs")?
-            .as_arr()
-            .ok_or_else(|| anyhow::anyhow!("outputs must be an array"))?
-            .iter()
-            .map(|o| o.as_str().unwrap_or("out").to_string())
-            .collect();
+        let meta_path = artifacts_dir.join(format!("{name}.meta.json"));
+        let meta = Json::parse_file(&meta_path)?;
+        let (input_chw, outputs) = parse_meta(&meta, &meta_path)?;
         Ok(Executable {
             name: name.to_string(),
             exe,
-            input_chw: (
-                arr[0].as_usize().unwrap_or(1),
-                arr[1].as_usize().unwrap_or(1),
-                arr[2].as_usize().unwrap_or(1),
-            ),
+            input_chw,
             outputs,
         })
     }
@@ -111,5 +153,217 @@ impl Executable {
             );
         }
         Ok(out)
+    }
+}
+
+/// Deterministic synthetic executable: intensity-weighted centroid +
+/// spread statistics shaped like the real model's output tuple. Same frame
+/// in, same floats out — the scenario integration tests rely on that.
+pub struct SyntheticExec {
+    pub name: String,
+    pub input_chw: (usize, usize, usize),
+    pub outputs: Vec<String>,
+    /// Minimum wall-clock execution time, seconds (0 = free-running).
+    /// Lets tests and stress presets emulate a slow model and saturate the
+    /// stream queue.
+    pub exec_floor_s: f64,
+}
+
+impl SyntheticExec {
+    /// Synthetic stand-in for a known builtin model.
+    pub fn for_model(name: &str, exec_floor_s: f64) -> crate::Result<SyntheticExec> {
+        let (input_chw, outputs): ((usize, usize, usize), Vec<&str>) = match name {
+            "detnet" => ((1, 128, 128), vec!["centers", "radii", "label_logits"]),
+            "edsnet" => ((1, 192, 320), vec!["pupil", "iris"]),
+            other => anyhow::bail!("no synthetic model '{other}' (expected detnet|edsnet)"),
+        };
+        Ok(SyntheticExec {
+            name: name.to_string(),
+            input_chw,
+            outputs: outputs.into_iter().map(|s| s.to_string()).collect(),
+            exec_floor_s,
+        })
+    }
+
+    pub fn infer(&self, frame: &[f32]) -> crate::Result<Vec<Vec<f32>>> {
+        let t0 = std::time::Instant::now();
+        let (c, h, w) = self.input_chw;
+        anyhow::ensure!(
+            frame.len() == c * h * w,
+            "frame len {} != {}x{}x{} for synthetic {}",
+            frame.len(),
+            c,
+            h,
+            w,
+            self.name
+        );
+        // Intensity-weighted centroid over the first channel: a cheap,
+        // deterministic pseudo-prediction in the same normalized space the
+        // sensors draw their ground truth in.
+        let (mut sum, mut sx, mut sy) = (0.0f64, 0.0f64, 0.0f64);
+        let mut maxv = 0.0f32;
+        for y in 0..h {
+            for x in 0..w {
+                let v = frame[y * w + x];
+                sum += v as f64;
+                sx += v as f64 * x as f64;
+                sy += v as f64 * y as f64;
+                maxv = maxv.max(v);
+            }
+        }
+        let (cx, cy) = if sum > 0.0 {
+            ((sx / sum / w as f64) as f32, (sy / sum / h as f64) as f32)
+        } else {
+            (0.5, 0.5)
+        };
+        let mean = (sum / (h * w) as f64) as f32;
+        let out = if self.name == "detnet" {
+            // centers (2 hands × x,y), radii, label logits
+            vec![vec![cx, cy, cx, cy], vec![mean, mean], vec![maxv, -maxv]]
+        } else {
+            // pupil / iris parameter vectors (cx, cy, spread)
+            vec![vec![cx, cy, mean], vec![cx, cy, mean * 2.0]]
+        };
+        if self.exec_floor_s > 0.0 {
+            let remaining = self.exec_floor_s - t0.elapsed().as_secs_f64();
+            if remaining > 0.0 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(remaining));
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Backend-agnostic executable handle held by a stream worker.
+pub enum ModelExec {
+    Pjrt(Executable),
+    Synthetic(SyntheticExec),
+}
+
+impl ModelExec {
+    pub fn name(&self) -> &str {
+        match self {
+            ModelExec::Pjrt(e) => &e.name,
+            ModelExec::Synthetic(s) => &s.name,
+        }
+    }
+
+    pub fn input_chw(&self) -> (usize, usize, usize) {
+        match self {
+            ModelExec::Pjrt(e) => e.input_chw,
+            ModelExec::Synthetic(s) => s.input_chw,
+        }
+    }
+
+    pub fn outputs(&self) -> &[String] {
+        match self {
+            ModelExec::Pjrt(e) => &e.outputs,
+            ModelExec::Synthetic(s) => &s.outputs,
+        }
+    }
+
+    pub fn is_synthetic(&self) -> bool {
+        matches!(self, ModelExec::Synthetic(_))
+    }
+
+    pub fn infer(&self, frame: &[f32]) -> crate::Result<Vec<Vec<f32>>> {
+        match self {
+            ModelExec::Pjrt(e) => e.infer(frame),
+            ModelExec::Synthetic(s) => s.infer(frame),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(src: &str) -> Json {
+        Json::parse(src).unwrap()
+    }
+
+    #[test]
+    fn parse_meta_accepts_wellformed_sidecar() {
+        let m = meta(r#"{"input_chw":[1,128,128],"outputs":["a","b"]}"#);
+        let (chw, outs) = parse_meta(&m, Path::new("x.meta.json")).unwrap();
+        assert_eq!(chw, (1, 128, 128));
+        assert_eq!(outs, vec!["a", "b"]);
+    }
+
+    #[test]
+    fn parse_meta_rejects_short_chw_instead_of_panicking() {
+        let m = meta(r#"{"input_chw":[1,128],"outputs":[]}"#);
+        let e = parse_meta(&m, Path::new("short.meta.json")).unwrap_err();
+        let msg = format!("{e}");
+        assert!(msg.contains("short.meta.json"), "{msg}");
+        assert!(msg.contains("input_chw"), "{msg}");
+        assert!(msg.contains("exactly 3"), "{msg}");
+    }
+
+    #[test]
+    fn parse_meta_rejects_non_numeric_and_zero_dims() {
+        let m = meta(r#"{"input_chw":[1,"x",128],"outputs":[]}"#);
+        let e = parse_meta(&m, Path::new("bad.meta.json")).unwrap_err();
+        let msg = format!("{e}");
+        assert!(msg.contains("bad.meta.json") && msg.contains("input_chw[1]"), "{msg}");
+
+        let m = meta(r#"{"input_chw":[1,0,128],"outputs":[]}"#);
+        let e = parse_meta(&m, Path::new("zero.meta.json")).unwrap_err();
+        assert!(format!("{e}").contains("input_chw[1]"), "{e}");
+    }
+
+    #[test]
+    fn parse_meta_names_missing_fields() {
+        let m = meta(r#"{"outputs":[]}"#);
+        let e = parse_meta(&m, Path::new("m.meta.json")).unwrap_err();
+        assert!(format!("{e}").contains("input_chw"), "{e}");
+        let m = meta(r#"{"input_chw":[1,2,3]}"#);
+        let e = parse_meta(&m, Path::new("m.meta.json")).unwrap_err();
+        assert!(format!("{e}").contains("outputs"), "{e}");
+        let m = meta(r#"{"input_chw":[1,2,3],"outputs":[42]}"#);
+        let e = parse_meta(&m, Path::new("m.meta.json")).unwrap_err();
+        assert!(format!("{e}").contains("outputs[0]"), "{e}");
+    }
+
+    #[test]
+    fn synthetic_shapes_and_determinism() {
+        let s = SyntheticExec::for_model("detnet", 0.0).unwrap();
+        assert_eq!(s.input_chw, (1, 128, 128));
+        let frame = vec![0.25f32; 128 * 128];
+        let a = s.infer(&frame).unwrap();
+        assert_eq!(a.len(), 3);
+        assert_eq!(a[0].len(), 4);
+        let b = s.infer(&frame).unwrap();
+        assert_eq!(a, b, "synthetic outputs must be deterministic");
+        // centroid of a uniform frame is the center
+        assert!((a[0][0] - 0.5).abs() < 0.01, "{}", a[0][0]);
+
+        let e = SyntheticExec::for_model("edsnet", 0.0).unwrap();
+        assert_eq!(e.input_chw, (1, 192, 320));
+        let eye_frame = vec![0.1f32; 192 * 320];
+        assert_eq!(e.infer(&eye_frame).unwrap().len(), 2);
+
+        assert!(SyntheticExec::for_model("nope", 0.0).is_err());
+        assert!(s.infer(&[0.0; 7]).is_err(), "wrong frame size must error");
+    }
+
+    #[test]
+    fn synthetic_exec_floor_is_honored() {
+        let s = SyntheticExec::for_model("detnet", 0.02).unwrap();
+        let frame = vec![0.0f32; 128 * 128];
+        let t0 = std::time::Instant::now();
+        let _ = s.infer(&frame).unwrap();
+        assert!(t0.elapsed().as_secs_f64() >= 0.019, "exec floor not applied");
+    }
+
+    #[test]
+    fn model_exec_dispatches_to_synthetic() {
+        let m = ModelExec::Synthetic(SyntheticExec::for_model("detnet", 0.0).unwrap());
+        assert!(m.is_synthetic());
+        assert_eq!(m.name(), "detnet");
+        assert_eq!(m.input_chw(), (1, 128, 128));
+        assert_eq!(m.outputs().len(), 3);
+        let frame = vec![0.5f32; 128 * 128];
+        assert_eq!(m.infer(&frame).unwrap().len(), 3);
     }
 }

@@ -56,15 +56,21 @@ impl Accum {
 }
 
 /// Percentile over an unsorted sample (nearest-rank on a sorted copy).
-/// `q` in [0,1]. Returns NaN on an empty sample.
+/// `q` in [0,1]. Returns NaN on an empty sample. Callers that need several
+/// percentiles should sort once and use [`percentile_sorted`].
 pub fn percentile(samples: &[f64], q: f64) -> f64 {
-    if samples.is_empty() {
-        return f64::NAN;
-    }
     let mut v: Vec<f64> = samples.to_vec();
     v.sort_by(f64::total_cmp); // NaN-safe: total order instead of panicking partial_cmp
-    let rank = ((q.clamp(0.0, 1.0)) * (v.len() - 1) as f64).round() as usize;
-    v[rank]
+    percentile_sorted(&v, q)
+}
+
+/// Nearest-rank percentile over an already-sorted sample.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let rank = ((q.clamp(0.0, 1.0)) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[rank]
 }
 
 /// Latency summary used by coordinator metrics and the bench harness.
@@ -84,12 +90,16 @@ pub fn summarize(samples: &[f64]) -> Summary {
     for &s in samples {
         acc.push(s);
     }
+    // One sorted copy serves every percentile (the old code cloned and
+    // sorted the whole sample once per percentile — 3× the work).
+    let mut sorted: Vec<f64> = samples.to_vec();
+    sorted.sort_by(f64::total_cmp);
     Summary {
         count: samples.len(),
         mean: acc.mean(),
-        p50: percentile(samples, 0.50),
-        p95: percentile(samples, 0.95),
-        p99: percentile(samples, 0.99),
+        p50: percentile_sorted(&sorted, 0.50),
+        p95: percentile_sorted(&sorted, 0.95),
+        p99: percentile_sorted(&sorted, 0.99),
         min: if samples.is_empty() { f64::NAN } else { acc.min() },
         max: if samples.is_empty() { f64::NAN } else { acc.max() },
     }
@@ -158,7 +168,23 @@ mod tests {
 
     #[test]
     fn rel_diff_symmetric() {
-        assert!(rel_diff(100.0, 110.0) - rel_diff(110.0, 100.0) < 1e-15);
+        // the old assertion lacked .abs() and so could never fail when the
+        // left side came out negative — now it constrains both directions
+        assert!((rel_diff(100.0, 110.0) - rel_diff(110.0, 100.0)).abs() < 1e-15);
+        assert!((rel_diff(3.0, 7.0) - rel_diff(7.0, 3.0)).abs() < 1e-15);
         assert_eq!(rel_diff(0.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn summary_percentiles_match_single_percentile_calls() {
+        // deterministic shuffled-ish sample: summarize's shared sorted copy
+        // must agree with the one-off percentile() path
+        let xs: Vec<f64> = (0..200).map(|i| ((i * 7919) % 200) as f64).collect();
+        let s = summarize(&xs);
+        for (q, got) in [(0.50, s.p50), (0.95, s.p95), (0.99, s.p99)] {
+            assert_eq!(got.to_bits(), percentile(&xs, q).to_bits());
+        }
+        assert_eq!(s.min, 0.0);
+        assert_eq!(s.max, 199.0);
     }
 }

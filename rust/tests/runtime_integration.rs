@@ -79,7 +79,7 @@ fn coordinator_serves_frames_end_to_end() {
     let mut results = Vec::new();
     let deadline = std::time::Instant::now() + std::time::Duration::from_secs(120);
     while results.len() < accepted && std::time::Instant::now() < deadline {
-        if let Ok(r) = coord.results.recv_timeout(std::time::Duration::from_secs(30)) {
+        if let Ok(r) = coord.results(0).recv_timeout(std::time::Duration::from_secs(30)) {
             results.push(r);
         } else {
             break;
