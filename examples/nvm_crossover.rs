@@ -1,21 +1,27 @@
 //! Sensitivity analysis on the Fig-5 crossover points: sweep the three
-//! calibration knobs (`tech::knobs`) around their defaults by re-invoking
-//! this binary with the env overrides, and print the cut-off IPS for every
-//! (arch × workload × flavor × device) cell — the quantity Fig 5 annotates.
+//! calibration knobs (`tech::Knobs`) around their defaults and print the
+//! cut-off IPS for every (arch × workload × flavor × device) cell — the
+//! quantity Fig 5 annotates.
 //!
 //! The grid is one query with an explicit MRAM-device axis
 //! (`Devices::Each`) and the SRAM-only point of each (arch, net, device)
 //! group attached as baseline, so every crossover comes from the row
 //! itself.
 //!
+//! Knobs are an injectable value (`Engine::with_knobs`), so the VGSOT
+//! read-penalty sweep at the end runs **in-process** — one engine per
+//! knob setting, no env mutation, no stale `OnceLock` snapshot. The env
+//! overrides (`XR_DSE_VGSOT_READ_MULT` etc.) still seed the defaults for
+//! cross-process sweeps.
+//!
 //! Run: `cargo run --release --example nvm_crossover`
-//! Sweep: `XR_DSE_VGSOT_READ_MULT=2.0 cargo run --release --example nvm_crossover`
+//! Seeded: `XR_DSE_VGSOT_READ_MULT=2.0 cargo run --release --example nvm_crossover`
 
 use xr_edge_dse::arch::{eyeriss, simba, MemFlavor, PeConfig};
 use xr_edge_dse::eval::{Devices, Engine, Query};
 use xr_edge_dse::power::crossover_ips;
 use xr_edge_dse::report::Table;
-use xr_edge_dse::tech::{knobs, Device, Node};
+use xr_edge_dse::tech::{knobs, Device, Knobs, Node};
 use xr_edge_dse::workload::builtin;
 
 fn main() -> anyhow::Result<()> {
@@ -78,5 +84,40 @@ fn main() -> anyhow::Result<()> {
          and every crossover above the workload's IPS_min (10 / 0.1) means\n\
          the NVM variant saves power in deployment."
     );
+
+    // In-process sensitivity sweep: one engine per knob value. Before
+    // knobs were injectable this required re-invoking the binary — the
+    // first model construction froze the env in a OnceLock.
+    let mut sweep = Table::new(
+        "VGSOT read-mult sweep (in-process) — simba_v2/detnet P1@7nm vs SRAM",
+        &["×SRAM read", "E_mem P1 (µJ)", "E_mem SRAM (µJ)", "P1 cut-off IPS"],
+    );
+    let mut last_e = -1.0;
+    for mult in [2.0, 3.2, 4.5] {
+        let engine = Engine::new(vec![simba(PeConfig::V2)], vec![builtin::by_name("detnet")?])
+            .with_knobs(Knobs { vgsot_read_mult: mult, ..k });
+        let pts = Query::over(&engine)
+            .nodes(&[Node::N7])
+            .devices(Devices::Fixed(Device::VgsotMram))
+            .collect();
+        // canonical flavor order: SRAM-only, P0, P1
+        let sram = &pts[0].point.power;
+        let p1 = &pts[2].point.power;
+        sweep.row(vec![
+            format!("{mult:.1}"),
+            format!("{:.3}", p1.e_mem_inf_pj * 1e-6),
+            format!("{:.3}", sram.e_mem_inf_pj * 1e-6),
+            match crossover_ips(sram, p1) {
+                Some(x) => format!("{x:.1}"),
+                None => "-".into(),
+            },
+        ]);
+        assert!(
+            p1.e_mem_inf_pj > last_e,
+            "raising the read penalty must raise P1 memory energy in-process"
+        );
+        last_e = p1.e_mem_inf_pj;
+    }
+    print!("{}", sweep.render());
     Ok(())
 }

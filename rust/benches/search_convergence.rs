@@ -1,0 +1,76 @@
+//! Guided-search benches (EXPERIMENTS.md §Perf):
+//!   S1 — evaluation throughput of the search loop (candidate synth + map
+//!        + parallel engine eval), measured as a fixed-budget random
+//!        search over the 7 nm paper space;
+//!   S2 — convergence quality per strategy at equal budget: best
+//!        energy/inference found vs the best fixed-grid paper point
+//!        (the quantity `examples/search.rs` asserts on).
+
+use xr_edge_dse::arch::{MemFlavor, PeConfig};
+use xr_edge_dse::search::{
+    paper_baseline, run_search, Annealing, ArchSynth, Constraints, Family, HillClimb, KnobSpace,
+    Objective, RandomSearch, SearchConfig, Strategy,
+};
+use xr_edge_dse::tech::{Device, Node};
+use xr_edge_dse::util::benchkit::{bench, figure_header};
+use xr_edge_dse::workload::builtin;
+
+fn main() -> anyhow::Result<()> {
+    figure_header(
+        "§Search — strategy convergence and loop throughput",
+        "guided search finds off-grid designs below the best fixed-grid point",
+    );
+
+    let mut space = KnobSpace::paper();
+    space.nodes = vec![Node::N7];
+    let synth = ArchSynth::new(space, builtin::by_name("detnet")?)?;
+    let cfg = SearchConfig {
+        objective: Objective::Energy,
+        constraints: Constraints::at_ips(10.0),
+        budget: 64,
+        batch: 32,
+        seed: 42,
+    };
+
+    // S1: loop throughput — evaluations per second through one budgeted
+    // random search (synthesis + mapping + parallel evaluation included).
+    let (mean_s, _, _) = bench("S1 random search, 64-eval budget", 1, 5, || {
+        let r = run_search(&synth, &mut RandomSearch, &cfg);
+        std::hint::black_box(r.evaluations);
+    });
+    println!("S1 throughput: {:.0} evaluations/s", cfg.budget as f64 / mean_s.max(1e-9));
+
+    // S2: best-found per strategy at equal budget, vs the paper grid.
+    let baseline = paper_baseline(&synth.net, &cfg, &[Node::N7])
+        .map(|(_, s)| s)
+        .unwrap_or(f64::INFINITY);
+    println!("paper fixed-grid best: {baseline:.3e} pJ/inf");
+    let seed_vec = synth
+        .space
+        .paper_vector(
+            Family::WeightStationary,
+            PeConfig::V2,
+            MemFlavor::SramOnly,
+            Node::N7,
+            Device::VgsotMram,
+        )
+        .expect("paper point in space");
+    let mut strategies: Vec<(&'static str, Box<dyn Strategy>)> = vec![
+        ("random", Box::new(RandomSearch)),
+        ("hill-climb (paper seed)", Box::new(HillClimb::seeded(seed_vec))),
+        ("annealing", Box::new(Annealing::new())),
+    ];
+    for (label, strategy) in strategies.iter_mut() {
+        let r = run_search(&synth, strategy.as_mut(), &cfg);
+        match r.best_eval() {
+            Some(e) => println!(
+                "S2 {label:<26} best {:.3e} pJ/inf ({:+.1}% vs grid), frontier {}",
+                e.scalar,
+                (e.scalar / baseline - 1.0) * 100.0,
+                r.frontier.len()
+            ),
+            None => println!("S2 {label:<26} found nothing feasible in budget"),
+        }
+    }
+    Ok(())
+}

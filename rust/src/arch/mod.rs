@@ -10,7 +10,7 @@
 //! lanes (Table 2 / Table 3 / Fig 5 use v2, per the Table 3 caption).
 
 use crate::mem::{MacroModel, MacroSpec};
-use crate::tech::{Device, Node};
+use crate::tech::{Device, Knobs, Node};
 
 /// Dataflow family — determines the Timeloop-lite mapping formulas.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -177,6 +177,19 @@ impl Arch {
         node: Node,
         assign: &dyn Fn(&BufferLevel) -> Device,
     ) -> Vec<(&BufferLevel, MacroModel)> {
+        self.macro_models_assigned_with(node, assign, &crate::tech::knobs())
+    }
+
+    /// [`Arch::macro_models_assigned`] with an explicit calibration-knob
+    /// value: every macro model is a pure function of (level, node,
+    /// device, knobs), so in-process sensitivity sweeps can vary the
+    /// knobs without touching the environment.
+    pub fn macro_models_assigned_with(
+        &self,
+        node: Node,
+        assign: &dyn Fn(&BufferLevel) -> Device,
+        knobs: &Knobs,
+    ) -> Vec<(&BufferLevel, MacroModel)> {
         self.levels
             .iter()
             .map(|lvl| {
@@ -192,7 +205,7 @@ impl Arch {
                     node,
                     count: lvl.count,
                 }
-                .model();
+                .model_with(knobs);
                 (lvl, model)
             })
             .collect()

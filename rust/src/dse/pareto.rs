@@ -23,10 +23,27 @@ pub fn objectives(p: &DesignPoint, ips: f64) -> Objectives {
     }
 }
 
+impl Objectives {
+    /// The objective vector in the fixed (P_mem, area, latency) order the
+    /// slice-based dominance check consumes.
+    pub fn as_vec(&self) -> Vec<f64> {
+        vec![self.p_mem_uw, self.area_mm2, self.latency_ms]
+    }
+}
+
 /// `a` dominates `b` when it is ≤ on every objective and < on at least one.
 pub fn dominates(a: &Objectives, b: &Objectives) -> bool {
-    let le = a.p_mem_uw <= b.p_mem_uw && a.area_mm2 <= b.area_mm2 && a.latency_ms <= b.latency_ms;
-    let lt = a.p_mem_uw < b.p_mem_uw || a.area_mm2 < b.area_mm2 || a.latency_ms < b.latency_ms;
+    dominates_slice(&a.as_vec(), &b.as_vec())
+}
+
+/// Slice form of the dominance check, for callers with their own objective
+/// vectors (all minimized; e.g. the `search` layer's (energy, area, EDP)
+/// triple). Panics on mismatched lengths — silently zip-truncating would
+/// corrupt a frontier, and the check is trivial next to an evaluation.
+pub fn dominates_slice(a: &[f64], b: &[f64]) -> bool {
+    assert_eq!(a.len(), b.len(), "objective vectors must align");
+    let le = a.iter().zip(b).all(|(x, y)| x <= y);
+    let lt = a.iter().zip(b).any(|(x, y)| x < y);
     le && lt
 }
 
@@ -35,12 +52,17 @@ pub fn dominates(a: &Objectives, b: &Objectives) -> bool {
 /// dominates it; otherwise it evicts everything it dominates and joins.
 /// Because dominance is a strict partial order, the final archive equals
 /// the full pairwise frontier, and survivors keep insertion order — so
-/// [`frontier`] and the `eval::Query::pareto` stage share this one
-/// implementation, and each offer costs O(|archive|) instead of the old
-/// O(n) pairwise pass per point (frontiers are small; lattice grids are
-/// not).
+/// [`frontier`], the `eval::Query::pareto` stage and the guided-search
+/// frontier (`crate::search`) share this one implementation, and each
+/// offer costs O(|archive|) instead of the old O(n) pairwise pass per
+/// point (frontiers are small; lattice grids are not).
+///
+/// The archive is dimension-agnostic: [`ParetoArchive::offer`] takes the
+/// classic (P_mem, area, latency) [`Objectives`], while
+/// [`ParetoArchive::offer_vec`] accepts any fixed-length minimized
+/// objective vector.
 pub struct ParetoArchive<T> {
-    entries: Vec<(T, Objectives)>,
+    entries: Vec<(T, Vec<f64>)>,
 }
 
 impl<T> ParetoArchive<T> {
@@ -50,10 +72,16 @@ impl<T> ParetoArchive<T> {
 
     /// Offer a candidate; returns whether it joined the archive.
     pub fn offer(&mut self, item: T, o: Objectives) -> bool {
-        if self.entries.iter().any(|(_, held)| dominates(held, &o)) {
+        self.offer_vec(item, o.as_vec())
+    }
+
+    /// Offer a candidate with an arbitrary minimized objective vector.
+    /// Every offer to one archive must use the same vector length.
+    pub fn offer_vec(&mut self, item: T, o: Vec<f64>) -> bool {
+        if self.entries.iter().any(|(_, held)| dominates_slice(held, &o)) {
             return false;
         }
-        self.entries.retain(|(_, held)| !dominates(&o, held));
+        self.entries.retain(|(_, held)| !dominates_slice(&o, held));
         self.entries.push((item, o));
         true
     }
@@ -185,6 +213,71 @@ mod tests {
         assert!(arch.offer("c", c));
         assert!(!arch.offer("a", a));
         assert_eq!(arch.into_items(), vec!["c"]);
+    }
+
+    #[test]
+    fn archive_members_never_dominate_each_other() {
+        // Invariant the search loop relies on: whatever the offer stream,
+        // the held set is mutually undominated at every step.
+        crate::testkit::check("archive mutually undominated", 60, |g| {
+            let n = g.usize_in(2, 30);
+            let mut archive: ParetoArchive<usize> = ParetoArchive::new();
+            for i in 0..n {
+                let o = vec![
+                    g.f64_in(0.0, 4.0).round(),
+                    g.f64_in(0.0, 4.0).round(),
+                    g.f64_in(0.0, 4.0).round(),
+                ];
+                archive.offer_vec(i, o);
+            }
+            let held: Vec<(usize, Vec<f64>)> = archive
+                .entries
+                .iter()
+                .map(|(i, o)| (*i, o.clone()))
+                .collect();
+            for (i, oi) in &held {
+                for (j, oj) in &held {
+                    if i != j {
+                        assert!(!dominates_slice(oi, oj), "{i} dominates {j}");
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn survivor_set_is_insertion_order_independent() {
+        // The search loop offers points in whatever order candidate
+        // batches complete; the surviving *set* must not depend on it.
+        crate::testkit::check("archive order independence", 60, |g| {
+            let n = g.usize_in(2, 24);
+            let points: Vec<Vec<f64>> = (0..n)
+                .map(|_| {
+                    vec![
+                        g.f64_in(0.0, 3.0).round(),
+                        g.f64_in(0.0, 3.0).round(),
+                        g.f64_in(0.0, 3.0).round(),
+                    ]
+                })
+                .collect();
+            let survivors = |order: &[usize]| -> Vec<usize> {
+                let mut archive = ParetoArchive::new();
+                for &i in order {
+                    archive.offer_vec(i, points[i].clone());
+                }
+                let mut ids = archive.into_items();
+                ids.sort();
+                ids
+            };
+            let forward: Vec<usize> = (0..n).collect();
+            let mut shuffled = forward.clone();
+            let mut prng = crate::util::prng::Prng::new(g.u64_in(0, u64::MAX));
+            prng.shuffle(&mut shuffled);
+            let reverse: Vec<usize> = (0..n).rev().collect();
+            let base = survivors(&forward);
+            assert_eq!(base, survivors(&reverse), "reverse order changed the set");
+            assert_eq!(base, survivors(&shuffled), "shuffled order changed the set");
+        });
     }
 
     #[test]

@@ -9,7 +9,7 @@ use crate::energy::{EnergyBreakdown, LevelEnergy};
 use crate::mapping::{accesses_at, NetworkMap};
 use crate::mem::MacroModel;
 use crate::power::PowerModel;
-use crate::tech::{mac_area_um2, mac_energy_pj, Node};
+use crate::tech::{mac_area_um2, mac_energy_pj, Knobs, Node};
 use crate::util::units::UM2_PER_MM2;
 
 /// Fraction of a MAC's energy charged per elementwise ALU op (pool/add).
@@ -27,12 +27,22 @@ pub struct MacroSet<'a> {
 }
 
 impl<'a> MacroSet<'a> {
-    /// Build the macro models — the **single** `Arch::macro_models*` call
-    /// site of the evaluation engine.
+    /// Build the macro models with the env-seeded calibration knobs.
     pub fn new(arch: &'a Arch, node: Node, assignment: DeviceAssignment) -> MacroSet<'a> {
+        MacroSet::with_knobs(arch, node, assignment, &crate::tech::knobs())
+    }
+
+    /// Build the macro models with an explicit knob value — the **single**
+    /// `Arch::macro_models*` call site of the evaluation engine.
+    pub fn with_knobs(
+        arch: &'a Arch,
+        node: Node,
+        assignment: DeviceAssignment,
+        knobs: &Knobs,
+    ) -> MacroSet<'a> {
         let models = {
             let assign = |lvl: &BufferLevel| assignment.device_for(arch, lvl);
-            arch.macro_models_assigned(node, &assign)
+            arch.macro_models_assigned_with(node, &assign, knobs)
         };
         MacroSet { arch, node, assignment, models }
     }
@@ -145,7 +155,20 @@ impl<'a> EvalContext<'a> {
         node: Node,
         assignment: DeviceAssignment,
     ) -> EvalContext<'a> {
-        let macros = MacroSet::new(arch, node, assignment);
+        EvalContext::with_knobs(arch, map, node, assignment, &crate::tech::knobs())
+    }
+
+    /// [`EvalContext::new`] with an explicit calibration-knob value (the
+    /// knobs only matter during macro-model construction; everything else
+    /// derives from the built models).
+    pub fn with_knobs(
+        arch: &'a Arch,
+        map: &'a NetworkMap,
+        node: Node,
+        assignment: DeviceAssignment,
+        knobs: &Knobs,
+    ) -> EvalContext<'a> {
+        let macros = MacroSet::with_knobs(arch, node, assignment, knobs);
 
         let mac_pj = mac_energy_pj(node, arch.cpu_style);
         let mut compute_pj = 0.0;

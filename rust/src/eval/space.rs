@@ -12,7 +12,7 @@ use crate::arch::{Arch, MemFlavor};
 use crate::energy::EnergyBreakdown;
 use crate::mapping::{map_network, NetworkMap};
 use crate::power::PowerModel;
-use crate::tech::{Device, Node};
+use crate::tech::{Device, Knobs, Node};
 use crate::workload::Network;
 
 /// One evaluated design point, generalized over arbitrary per-level device
@@ -107,6 +107,11 @@ pub struct Engine {
     /// Entry indices sorted by (arch name, net name) — binary-searchable
     /// with borrowed `&str` keys, so hot-path lookups never allocate.
     index: Vec<usize>,
+    /// Calibration knobs every evaluation threads through macro-model
+    /// construction. Captured once at engine construction (env-seeded);
+    /// override with [`Engine::with_knobs`] for in-process sensitivity
+    /// sweeps.
+    knobs: Knobs,
 }
 
 impl Engine {
@@ -130,6 +135,15 @@ impl Engine {
         Engine::from_entries(vec![EngineEntry { arch, map }])
     }
 
+    /// Multi-entry form of [`Engine::from_mapped`], for callers that cache
+    /// mapper runs themselves (the guided search maps each distinct
+    /// candidate architecture once per run, not once per batch).
+    pub fn from_mapped_entries(pairs: Vec<(Arch, NetworkMap)>) -> Engine {
+        Engine::from_entries(
+            pairs.into_iter().map(|(arch, map)| EngineEntry { arch, map }).collect(),
+        )
+    }
+
     fn from_entries(entries: Vec<EngineEntry>) -> Engine {
         let mut index: Vec<usize> = (0..entries.len()).collect();
         index.sort_by(|&a, &b| {
@@ -137,7 +151,20 @@ impl Engine {
             let kb = (entries[b].arch.name.as_str(), entries[b].map.network.as_str());
             ka.cmp(&kb)
         });
-        Engine { entries, index }
+        Engine { entries, index, knobs: crate::tech::knobs() }
+    }
+
+    /// Replace the calibration knobs every subsequent evaluation uses.
+    /// This is the in-process sensitivity-sweep hook: build one engine per
+    /// knob value instead of mutating `XR_DSE_*` between evaluations.
+    pub fn with_knobs(mut self, knobs: Knobs) -> Engine {
+        self.knobs = knobs;
+        self
+    }
+
+    /// The calibration knobs this engine evaluates with.
+    pub fn knobs(&self) -> Knobs {
+        self.knobs
     }
 
     pub fn entries(&self) -> &[EngineEntry] {
@@ -165,7 +192,7 @@ impl Engine {
         node: Node,
         assignment: DeviceAssignment,
     ) -> DesignPoint {
-        let ctx = EvalContext::new(&entry.arch, &entry.map, node, assignment);
+        let ctx = EvalContext::with_knobs(&entry.arch, &entry.map, node, assignment, &self.knobs);
         let energy = ctx.energy_breakdown();
         let power = ctx.power_model_from(&energy);
         DesignPoint {
@@ -360,6 +387,19 @@ mod tests {
     }
 
     #[test]
+    fn from_mapped_entries_matches_fresh_engine() {
+        let arch = simba(PeConfig::V2);
+        let map = crate::mapping::map_network(&arch, &detnet());
+        let multi = Engine::from_mapped_entries(vec![(arch.clone(), map)]);
+        let fresh = Engine::new(vec![arch], vec![detnet()]);
+        let a = multi.point("simba_v2", "detnet", Node::N7, MemFlavor::P0, Device::SttMram);
+        let b = fresh.point("simba_v2", "detnet", Node::N7, MemFlavor::P0, Device::SttMram);
+        let (a, b) = (a.unwrap(), b.unwrap());
+        assert_eq!(a.energy.total_pj().to_bits(), b.energy.total_pj().to_bits());
+        assert_eq!(a.latency_ns.to_bits(), b.latency_ns.to_bits());
+    }
+
+    #[test]
     fn space_cardinality_and_order() {
         let e = engine();
         let space = DesignSpace::new(&[Node::N28, Node::N7], &MemFlavor::ALL);
@@ -413,6 +453,24 @@ mod tests {
             assert_eq!(pts[0].flavor(), Some(flavor));
             assert_eq!(pts[1].flavor(), None, "mask lowering carries no flavor tag");
         }
+    }
+
+    #[test]
+    fn engine_knobs_are_injectable_in_process() {
+        let base = engine();
+        let mut hot_knobs = base.knobs();
+        hot_knobs.vgsot_read_mult *= 2.0;
+        let hot = Engine::new(vec![simba(PeConfig::V2)], vec![detnet(), edsnet()])
+            .with_knobs(hot_knobs);
+        let key = |e: &Engine| {
+            e.point("simba_v2", "detnet", Node::N7, MemFlavor::P1, Device::VgsotMram)
+                .unwrap()
+                .energy
+                .total_pj()
+        };
+        // Doubling the VGSOT read multiplier must raise P1@7nm energy —
+        // in the same process, with no env mutation.
+        assert!(key(&hot) > key(&base), "hot={} base={}", key(&hot), key(&base));
     }
 
     #[test]

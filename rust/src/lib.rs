@@ -16,7 +16,10 @@
 //!    sweep surface every command/bench/example consumes), with [`area`],
 //!    [`power`] (P_mem-vs-IPS with power gating) and [`energy`] as thin
 //!    wrappers over it, [`pipeline`] (temporal operation cycle), [`dse`]
-//!    (legacy sweep shims + hybrid/pareto over the query), [`report`].
+//!    (legacy sweep shims + hybrid/pareto over the query), [`search`]
+//!    (guided multi-objective search over a parameterized architecture
+//!    space — the layer that goes *beyond* the paper's fixed grid),
+//!    [`report`].
 //! 3. **The serving runtime** proving the stack end-to-end: [`runtime`]
 //!    (PJRT load/execute of JAX-AOT'd DetNet/EDSNet, plus the offline
 //!    synthetic backend), [`coordinator`] (multi-stream serving: sensor
@@ -42,6 +45,7 @@ pub mod power;
 pub mod pipeline;
 pub mod quant;
 pub mod dse;
+pub mod search;
 pub mod report;
 pub mod runtime;
 pub mod coordinator;

@@ -10,6 +10,7 @@
 //! xr-edge-dse fig3d                                      # Fig 3(d)
 //! xr-edge-dse pareto  --node 7 --ips 10                  # undominated designs
 //! xr-edge-dse hybrid  --arch simba --net detnet --ips 10 # NVM/SRAM lattice
+//! xr-edge-dse search  --node 7 --ips 10 --budget 400     # guided DSE
 //! xr-edge-dse sweep   --out artifacts/figures            # all CSV series
 //! xr-edge-dse serve   --model detnet --fps 10 --seconds 5  # PJRT serving
 //! xr-edge-dse scenario --preset paper                # multi-stream serving
@@ -59,7 +60,14 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "backend", takes_value: true, help: "scenario backend: auto|pjrt|synthetic", default: Some("auto") },
         OptSpec { name: "horizon", takes_value: true, help: "scenario: modeled seconds (default: preset's)", default: None },
         OptSpec { name: "time-scale", takes_value: true, help: "scenario: wall-clock compression (default: preset's)", default: None },
-        OptSpec { name: "csv", takes_value: true, help: "scenario: write per-stream CSV to this path", default: None },
+        OptSpec { name: "csv", takes_value: true, help: "scenario/search: write CSV to this path", default: None },
+        OptSpec { name: "strategy", takes_value: true, help: "search: exhaustive|random|hill|anneal|all", default: Some("all") },
+        OptSpec { name: "budget", takes_value: true, help: "search: max candidate evaluations", default: Some("400") },
+        OptSpec { name: "seed", takes_value: true, help: "search: PRNG seed (deterministic replay)", default: Some("42") },
+        OptSpec { name: "batch", takes_value: true, help: "search: candidates evaluated in parallel per round", default: Some("64") },
+        OptSpec { name: "objective", takes_value: true, help: "search: energy|area|edp", default: Some("energy") },
+        OptSpec { name: "max-area", takes_value: true, help: "search: die-area budget, mm²", default: None },
+        OptSpec { name: "max-power", takes_value: true, help: "search: P_mem budget at --ips, µW", default: None },
         OptSpec { name: "verbose", takes_value: false, help: "per-layer detail", default: None },
     ]
 }
@@ -340,6 +348,12 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
             }
             print!("{}", t.render());
         }
+        "search" => {
+            // Guided design-space search over the parameterized space:
+            // the paper grid is a set of named points inside it; the
+            // strategies look for better designs under hard constraints.
+            search_cmd(&args, node, mram)?;
+        }
         "sweep" => {
             let out = std::path::PathBuf::from(args.get("out").unwrap());
             let n = write_figure_csvs(&out)?;
@@ -444,6 +458,98 @@ fn write_figure_csvs(out: &std::path::Path) -> anyhow::Result<usize> {
     Ok(n)
 }
 
+/// `search`: guided multi-objective DSE over the parameterized space
+/// (`xr_edge_dse::search`), constrained to --node (and --device when one
+/// is named explicitly). Deterministic from --seed; --csv writes the
+/// frontier plus a full per-evaluation trace.
+fn search_cmd(
+    args: &xr_edge_dse::util::cli::Args,
+    node: Node,
+    mram: Device,
+) -> anyhow::Result<()> {
+    use xr_edge_dse::search::{
+        ArchSynth, Constraints, KnobSpace, Objective, SearchConfig, SearchReport,
+    };
+    let net = workload::builtin::by_name(args.get("net").unwrap())?;
+    let ips = args.get_f64("ips")?.unwrap_or(10.0);
+    let mut space = KnobSpace::paper();
+    space.nodes = vec![node];
+    if args.get("device").is_some() {
+        space.mrams = vec![mram];
+    }
+    let synth = ArchSynth::new(space, net)?;
+    let cfg = SearchConfig {
+        objective: Objective::from_str(args.get("objective").unwrap())?,
+        constraints: Constraints {
+            min_ips: ips,
+            max_area_mm2: args.get_f64("max-area")?,
+            max_p_mem_uw: args.get_f64("max-power")?,
+        },
+        budget: args.get_usize("budget")?.unwrap_or(400),
+        batch: args.get_usize("batch")?.unwrap_or(64),
+        seed: args.get_usize("seed")?.unwrap_or(42) as u64,
+    };
+    let strategies = search_strategies(args.get("strategy").unwrap(), &synth, node)?;
+    let report = SearchReport::run(&synth, &cfg, strategies);
+    print!("{}", report.table().render());
+    match report.best_overall() {
+        Some((r, e)) => println!(
+            "best overall: {} {} via {} — {} = {}, area {:.2} mm², P_mem {:.2} µW @{} IPS (knobs {})",
+            e.arch,
+            e.assign,
+            r.strategy,
+            cfg.objective.label(),
+            sci(e.scalar),
+            e.area_mm2,
+            e.p_mem_uw,
+            ips,
+            e.vector_key()
+        ),
+        None => println!("no feasible design found under the given constraints"),
+    }
+    if let Some(path) = args.get("csv") {
+        let frontier_path = std::path::PathBuf::from(path);
+        report.frontier_csv().save(&frontier_path)?;
+        let trace_path = frontier_path.with_extension("trace.csv");
+        report.trace_csv().save(&trace_path)?;
+        println!("wrote {} and {}", frontier_path.display(), trace_path.display());
+    }
+    Ok(())
+}
+
+/// Resolve --strategy into concrete strategy instances. The hill climber
+/// is seeded at the paper-v2 weight-stationary SRAM-only point when the
+/// space contains it ("improve on the paper design"), and falls back to a
+/// random start otherwise.
+fn search_strategies(
+    which: &str,
+    synth: &xr_edge_dse::search::ArchSynth,
+    node: Node,
+) -> anyhow::Result<Vec<Box<dyn xr_edge_dse::search::Strategy>>> {
+    use xr_edge_dse::search::{Annealing, Exhaustive, Family, HillClimb, RandomSearch, Strategy};
+    let hill = || -> Box<dyn Strategy> {
+        let seed_mram = synth.space.mrams.first().copied().unwrap_or(paper_mram_for(node));
+        match synth.space.paper_vector(
+            Family::WeightStationary,
+            PeConfig::V2,
+            MemFlavor::SramOnly,
+            node,
+            seed_mram,
+        ) {
+            Some(v) => Box::new(HillClimb::seeded(v)),
+            None => Box::new(HillClimb::new()),
+        }
+    };
+    Ok(match which.to_ascii_lowercase().as_str() {
+        "exhaustive" => vec![Box::new(Exhaustive::new())],
+        "random" => vec![Box::new(RandomSearch)],
+        "hill" | "hill-climb" => vec![hill()],
+        "anneal" | "annealing" => vec![Box::new(Annealing::new())],
+        "all" => vec![Box::new(RandomSearch), hill(), Box::new(Annealing::new())],
+        other => anyhow::bail!("unknown strategy '{other}' (exhaustive|random|hill|anneal|all)"),
+    })
+}
+
 /// `serve`: run the PJRT serving pipeline on synthetic sensor frames.
 fn serve(args: &xr_edge_dse::util::cli::Args) -> anyhow::Result<()> {
     use xr_edge_dse::coordinator::{sensor::Sensor, Config, Coordinator};
@@ -518,7 +624,7 @@ fn scenario(args: &xr_edge_dse::util::cli::Args, node: Node, mram: Device) -> an
 fn print_help() {
     println!(
         "xr-edge-dse — memory-oriented DSE of edge-AI hardware for XR (tinyML'23 reproduction)\n\
-         commands: map | energy | area | ips | edp | fig3d | pareto | hybrid | sweep | serve | scenario | help\n\n{}",
+         commands: map | energy | area | ips | edp | fig3d | pareto | hybrid | search | sweep | serve | scenario | help\n\n{}",
         usage(&specs())
     );
 }

@@ -15,7 +15,7 @@
 //! - standby (retention) power = active read power / 100, the paper's
 //!   assumption from [11]; NVM macros power-gate to ≈0 instead.
 
-use crate::tech::{device_params, Device, DeviceParams, Node};
+use crate::tech::{device_params_with, Device, DeviceParams, Knobs, Node};
 
 /// A memory macro instance: what the arch description declares.
 #[derive(Debug, Clone, Copy)]
@@ -45,6 +45,10 @@ pub struct MacroModel {
     /// Peak active read power per instance, µW (used for wakeup-energy
     /// charging and the retention ratio).
     pub active_read_uw: f64,
+    /// Wakeup-from-power-gate energy per instance, pJ — precomputed at
+    /// model construction so the value is pinned to the knobs the model
+    /// was built with (see [`MacroModel::wakeup_pj`]).
+    wakeup_pj: f64,
 }
 
 /// Reference capacity for the √-scaling of energy/latency.
@@ -81,7 +85,13 @@ const ARRAY_OVERHEAD: f64 = 0.28;
 /// Calibration knob (see `tech::knobs` for the env override used by the
 /// sensitivity-analysis harness).
 pub fn retention_uw_per_kb(node: Node) -> f64 {
-    let base_7nm = crate::tech::knobs().ret_uw_per_kb_7nm;
+    retention_uw_per_kb_with(node, &crate::tech::knobs())
+}
+
+/// [`retention_uw_per_kb`] with an explicit knob value (the injectable
+/// form macro-model construction threads through).
+pub fn retention_uw_per_kb_with(node: Node, knobs: &Knobs) -> f64 {
+    let base_7nm = knobs.ret_uw_per_kb_7nm;
     // leakage worsens at scaled nodes; FDSOI 28 nm is the low point [11]
     base_7nm
         * match node {
@@ -101,8 +111,17 @@ pub const RETENTION_RATIO: f64 = 100.0;
 pub const WAKEUP_NS: f64 = 100_000.0;
 
 impl MacroSpec {
+    /// Build the model with the env-seeded calibration knobs.
     pub fn model(&self) -> MacroModel {
-        let p: DeviceParams = device_params(self.device, self.node);
+        self.model_with(&crate::tech::knobs())
+    }
+
+    /// Build the model with an explicit knob value. Every knob-sensitive
+    /// quantity (VGSOT read energy, retention power, wakeup energy) is
+    /// resolved *here*, so the returned model is a pure function of
+    /// (spec, knobs) — no later read of process-global state.
+    pub fn model_with(&self, knobs: &Knobs) -> MacroModel {
+        let p: DeviceParams = device_params_with(self.device, self.node, knobs);
         let cf = cap_factor(self.capacity_bytes);
         let bits = self.bus_bits as f64;
         let read_pj = bits * p.read_pj_bit * cf;
@@ -114,11 +133,14 @@ impl MacroSpec {
         let standby_uw = if p.non_volatile {
             0.0 // power-gated off; wakeup charged separately
         } else {
-            retention_uw_per_kb(self.node) * self.capacity_bytes as f64 / 1024.0
+            retention_uw_per_kb_with(self.node, knobs) * self.capacity_bytes as f64 / 1024.0
         };
         let cells_um2 = (self.capacity_bytes * 8) as f64 * p.cell_um2_bit;
         let area_um2 =
             cells_um2 * (1.0 + ARRAY_OVERHEAD) + fixed_periphery_um2(self.node, self.capacity_bytes);
+        let rel = crate::tech::node_scaling(self.node).energy
+            / crate::tech::node_scaling(Node::N7).energy;
+        let wakeup_pj = knobs.wakeup_pj_per_byte_7nm * rel * self.capacity_bytes as f64;
         MacroModel {
             spec: *self,
             read_pj,
@@ -128,6 +150,7 @@ impl MacroSpec {
             area_um2,
             standby_uw,
             active_read_uw,
+            wakeup_pj,
         }
     }
 }
@@ -143,13 +166,11 @@ impl MacroModel {
 
     /// Energy to wake the macro from power-gate: rail/bias recharge over
     /// the 100 µs window, proportional to the array size (C·V² of the
-    /// gated domain). SRAM never power-gates (retention instead), so this
-    /// applies to NVM variants only. Calibration knob — see `tech::knobs`.
+    /// gated domain). SRAM never power-gates (retention instead), so the
+    /// evaluation engine charges this for NVM macros only. Precomputed at
+    /// construction from the knobs the model was built with.
     pub fn wakeup_pj(&self) -> f64 {
-        let pj_per_byte_7nm = crate::tech::knobs().wakeup_pj_per_byte_7nm;
-        let rel = crate::tech::node_scaling(self.spec.node).energy
-            / crate::tech::node_scaling(Node::N7).energy;
-        pj_per_byte_7nm * rel * self.spec.capacity_bytes as f64
+        self.wakeup_pj
     }
 
     /// Total area over `count` instances, µm².
@@ -166,6 +187,7 @@ impl MacroModel {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tech::device_params;
 
     fn spec(kb: usize, device: Device, node: Node) -> MacroSpec {
         MacroSpec {
@@ -240,6 +262,22 @@ mod tests {
             let m = spec(64, d, Node::N7).model();
             assert!(m.read_ns <= 5.0 && m.write_ns <= 5.0, "{d:?}");
         }
+    }
+
+    #[test]
+    fn model_with_pins_knobs_at_construction() {
+        let base = Knobs::calibrated();
+        let hot = Knobs {
+            wakeup_pj_per_byte_7nm: base.wakeup_pj_per_byte_7nm * 3.0,
+            ret_uw_per_kb_7nm: base.ret_uw_per_kb_7nm * 2.0,
+            ..base
+        };
+        let nvm = spec(64, Device::VgsotMram, Node::N7);
+        let (m0, m1) = (nvm.model_with(&base), nvm.model_with(&hot));
+        assert!((m1.wakeup_pj() / m0.wakeup_pj() - 3.0).abs() < 1e-9);
+        let sram = spec(64, Device::Sram, Node::N7);
+        let ratio = sram.model_with(&hot).standby_uw / sram.model_with(&base).standby_uw;
+        assert!((ratio - 2.0).abs() < 1e-9, "ratio={ratio}");
     }
 
     #[test]

@@ -1,0 +1,45 @@
+//! Guided design-space **search** over a parameterized architecture space.
+//!
+//! The paper (and `dse::Sweeper` / `eval::Query`) evaluate a *fixed grid*:
+//! hand-picked architectures × nodes × named memory flavors. This
+//! subsystem turns the repro into an exploration tool — it answers
+//! questions the grid cannot, like *"what is the best 7 nm design under
+//! 2 mm² that sustains DetNet at 10 IPS?"*:
+//!
+//! - [`space`] — a [`KnobSpace`] of free design knobs (PE-array geometry,
+//!   per-role buffer capacities and banking, bus widths, node, MRAM
+//!   device, per-level device assignment drawn from the hybrid lattice)
+//!   and an [`ArchSynth`] that lowers a knob vector into a valid
+//!   [`crate::arch::Arch`] + device assignment, enforcing capacity floors
+//!   (the GWB must hold the whole INT8 model — there is no DRAM). The
+//!   paper's v1/v2 designs are named points of the space and synthesize
+//!   field-for-field identical architectures.
+//! - [`strategy`] — pluggable strategies behind one ask/tell [`Strategy`]
+//!   trait: [`Exhaustive`], [`RandomSearch`], [`HillClimb`] (random
+//!   restarts, optionally seeded at a paper point) and [`Annealing`]; all
+//!   deterministic from one [`crate::util::prng::Prng`] seed.
+//! - [`run`] — the budgeted loop: scalar objectives (energy/inference,
+//!   area, EDP), hard constraints (min IPS, area/power budgets), dedupe
+//!   of revisited vectors, candidate batches evaluated in parallel
+//!   through the existing [`crate::eval::Engine`], an incremental
+//!   [`crate::dse::pareto::ParetoArchive`] frontier over (energy, area,
+//!   EDP), a per-evaluation trace, and the [`SearchReport`] naming each
+//!   strategy's best design with its vs-paper-baseline delta.
+//!
+//! Surfaces: the `xr-edge-dse search` CLI command (table/CSV sinks,
+//! seed/budget/constraint flags) and `examples/search.rs` (recovers a
+//! paper design point bitwise and reports a cheaper off-grid 7 nm
+//! design). Determinism: same seed/budget/constraints → bitwise-identical
+//! trace and frontier, across runs and thread counts — see DESIGN.md §The
+//! search layer.
+
+pub mod run;
+pub mod space;
+pub mod strategy;
+
+pub use run::{
+    paper_baseline, run_search, Constraints, Evaluation, Objective, SearchConfig, SearchReport,
+    SearchResult,
+};
+pub use space::{ArchSynth, Candidate, Family, KnobSpace, KnobVector, DIMS};
+pub use strategy::{Annealing, Exhaustive, HillClimb, RandomSearch, Strategy};

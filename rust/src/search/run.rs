@@ -1,0 +1,734 @@
+//! `search::run` — the budgeted search loop and its report.
+//!
+//! [`run_search`] drives one [`Strategy`] against one [`ArchSynth`]:
+//! propose a batch of knob vectors → dedupe revisits (answered from a
+//! cache, consuming no budget) → lower the fresh ones (invalid vectors are
+//! rejected by the synthesizer, consuming no budget) → evaluate the valid
+//! candidates **in parallel** through a per-batch [`Engine`] (the same
+//! sharded, bitwise-deterministic path as `Engine::grid`) → score against
+//! the objective and hard constraints → feed the scalars back to the
+//! strategy. Every evaluation appends a [`Evaluation`] trace row, and
+//! every feasible one is offered to an incremental
+//! [`ParetoArchive`](crate::dse::pareto::ParetoArchive) over the
+//! (energy/inference, area, EDP) triple — the multi-objective frontier
+//! the CLI and example render.
+//!
+//! Determinism contract: a (space, strategy, seed, budget, batch,
+//! constraints) tuple replays bitwise-identically — across runs *and*
+//! thread counts — because all randomness flows through one seeded
+//! [`Prng`] and candidate evaluation reuses `Engine::eval_coords`, whose
+//! output is sequential-identical by construction.
+
+use std::collections::{HashMap, HashSet};
+
+use super::space::{ArchSynth, Candidate, KnobVector};
+use super::strategy::Strategy;
+use crate::arch::{Arch, PeConfig};
+use crate::dse::pareto::ParetoArchive;
+use crate::eval::{AssignSpec, Coord, DesignPoint, Engine, Query};
+use crate::mapping::{map_network, NetworkMap};
+use crate::report::{pct, sci, Csv, Table};
+use crate::tech::{Device, Node};
+use crate::util::prng::Prng;
+use crate::workload::Network;
+
+/// The scalarized objective a single-objective strategy minimizes. The
+/// Pareto frontier always tracks all three jointly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    /// Total energy per inference, pJ.
+    Energy,
+    /// Die area, mm².
+    Area,
+    /// Energy-delay product per inference, pJ·ns.
+    Edp,
+}
+
+impl Objective {
+    pub const ALL: [Objective; 3] = [Objective::Energy, Objective::Area, Objective::Edp];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Objective::Energy => "energy/inf (pJ)",
+            Objective::Area => "area (mm²)",
+            Objective::Edp => "EDP (pJ·ns)",
+        }
+    }
+
+    pub fn from_str(s: &str) -> crate::Result<Objective> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "energy" => Objective::Energy,
+            "area" => Objective::Area,
+            "edp" => Objective::Edp,
+            other => anyhow::bail!("unknown objective '{other}' (energy|area|edp)"),
+        })
+    }
+
+    pub fn value(self, p: &DesignPoint) -> f64 {
+        match self {
+            Objective::Energy => p.energy.total_pj(),
+            Objective::Area => p.area_mm2,
+            Objective::Edp => p.edp(),
+        }
+    }
+}
+
+/// Hard constraints: a design violating any is infeasible (scalar =
+/// `f64::INFINITY`, excluded from best/frontier) no matter how good its
+/// objective.
+#[derive(Debug, Clone, Copy)]
+pub struct Constraints {
+    /// The design must sustain this inference rate (latency feasibility);
+    /// also the rate `P_mem` is evaluated at.
+    pub min_ips: f64,
+    /// Die-area budget, mm².
+    pub max_area_mm2: Option<f64>,
+    /// Memory-power budget at `min_ips`, µW.
+    pub max_p_mem_uw: Option<f64>,
+}
+
+impl Constraints {
+    /// Rate-only constraints (the common interactive query).
+    pub fn at_ips(min_ips: f64) -> Constraints {
+        Constraints { min_ips, max_area_mm2: None, max_p_mem_uw: None }
+    }
+
+    pub fn satisfied(&self, p: &DesignPoint) -> bool {
+        let area_ok = match self.max_area_mm2 {
+            Some(a) => p.area_mm2 <= a,
+            None => true,
+        };
+        let power_ok = match self.max_p_mem_uw {
+            Some(w) => p.p_mem_uw(self.min_ips) <= w,
+            None => true,
+        };
+        p.feasible_at(self.min_ips) && area_ok && power_ok
+    }
+}
+
+/// One search run's configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SearchConfig {
+    pub objective: Objective,
+    pub constraints: Constraints,
+    /// Maximum number of candidate *evaluations* (engine runs). Revisited
+    /// and invalid vectors consume none of it.
+    pub budget: usize,
+    /// Batching hint per strategy round (parallel evaluation width).
+    pub batch: usize,
+    pub seed: u64,
+}
+
+/// One evaluated candidate — the per-evaluation trace row that makes a
+/// run reproducible and auditable.
+#[derive(Debug, Clone)]
+pub struct Evaluation {
+    /// 0-based evaluation number (budget consumption order).
+    pub index: usize,
+    pub vector: KnobVector,
+    pub arch: String,
+    pub node: Node,
+    pub mram: Device,
+    /// "SRAM-only"/"P0"/"P1" for named flavors, "mask<m>" for lattice
+    /// points.
+    pub assign: String,
+    pub energy_pj: f64,
+    pub area_mm2: f64,
+    pub edp: f64,
+    pub latency_ns: f64,
+    /// Memory power at the constraint rate, µW.
+    pub p_mem_uw: f64,
+    pub feasible: bool,
+    /// Objective value; `INFINITY` when infeasible.
+    pub scalar: f64,
+    /// Whether this point joined the running Pareto frontier when
+    /// evaluated (it may have been evicted by a later point).
+    pub joined_frontier: bool,
+}
+
+impl Evaluation {
+    /// The knob vector as a compact replay key, e.g. `1-4-4-4-3-3-0-2-1-4-2-0`.
+    pub fn vector_key(&self) -> String {
+        self.vector.iter().map(|i| i.to_string()).collect::<Vec<_>>().join("-")
+    }
+}
+
+/// The outcome of one strategy's run.
+pub struct SearchResult {
+    pub strategy: &'static str,
+    /// Evaluations actually spent (≤ budget).
+    pub evaluations: usize,
+    /// Vectors the synthesizer rejected as invalid (no budget spent).
+    pub rejected: usize,
+    /// Revisited vectors answered from the dedupe cache (no budget spent).
+    pub revisits: usize,
+    /// Every evaluation, in budget order.
+    pub trace: Vec<Evaluation>,
+    /// Trace index of the best feasible design, if any was found.
+    pub best: Option<usize>,
+    /// The best design's full evaluated point (for downstream reports).
+    pub best_point: Option<DesignPoint>,
+    /// The final (energy, area, EDP) Pareto frontier over the feasible
+    /// evaluations, in evaluation order.
+    pub frontier: Vec<Evaluation>,
+}
+
+impl SearchResult {
+    pub fn best_eval(&self) -> Option<&Evaluation> {
+        self.best.map(|i| &self.trace[i])
+    }
+}
+
+/// Run one strategy to its budget. See the module docs for the loop and
+/// the determinism contract.
+pub fn run_search(
+    synth: &ArchSynth,
+    strategy: &mut dyn Strategy,
+    cfg: &SearchConfig,
+) -> SearchResult {
+    let mut prng = Prng::new(cfg.seed);
+    let mut cache: HashMap<KnobVector, f64> = HashMap::new();
+    // Mapper runs cached per distinct synthesized architecture (the name
+    // encodes every arch-shaping knob): neighborhoods that revisit an
+    // architecture across rounds — node/mram/assignment moves always do —
+    // pay the Timeloop-lite mapping once per run, not once per batch.
+    let mut map_cache: HashMap<String, NetworkMap> = HashMap::new();
+    let mut archive: ParetoArchive<usize> = ParetoArchive::new();
+    let mut trace: Vec<Evaluation> = Vec::new();
+    let (mut rejected, mut revisits) = (0usize, 0usize);
+    let mut best: Option<usize> = None;
+    let mut best_scalar = f64::INFINITY;
+    let mut best_point: Option<DesignPoint> = None;
+
+    // A strategy that keeps re-proposing known vectors has converged (or
+    // its reachable set is exhausted): this many consecutive rounds with
+    // neither a fresh evaluation nor a fresh rejection ends the run early
+    // rather than spinning on the dedupe cache forever.
+    const MAX_STALL_ROUNDS: usize = 64;
+    let mut stall = 0usize;
+
+    while trace.len() < cfg.budget {
+        let ask = cfg.batch.max(1).min(cfg.budget - trace.len());
+        let proposed = strategy.propose(&synth.space, ask, &mut prng);
+        if proposed.is_empty() {
+            break; // space exhausted
+        }
+
+        // Partition the batch: cache hits answer immediately, invalid
+        // vectors are rejected with INFINITY, duplicates *within* the
+        // batch evaluate once (the copies are backfilled from the cache
+        // after evaluation), and fresh valid candidates queue for parallel
+        // evaluation. Proposals beyond the remaining budget are dropped
+        // (the strategy observes the truncated batch).
+        let mut results: Vec<(KnobVector, f64)> = Vec::with_capacity(proposed.len());
+        let mut fresh: Vec<(usize, Candidate)> = Vec::new();
+        let mut queued: HashSet<KnobVector> = HashSet::new();
+        let mut dup_slots: Vec<(usize, KnobVector)> = Vec::new();
+        let mut round_rejected = 0usize;
+        let mut budget_left = cfg.budget - trace.len();
+        for v in proposed {
+            if let Some(&s) = cache.get(&v) {
+                revisits += 1;
+                results.push((v, s));
+                continue;
+            }
+            if queued.contains(&v) {
+                revisits += 1;
+                dup_slots.push((results.len(), v.clone()));
+                results.push((v, f64::INFINITY)); // backfilled below
+                continue;
+            }
+            match synth.lower(&v) {
+                Ok(c) => {
+                    if budget_left == 0 {
+                        break;
+                    }
+                    budget_left -= 1;
+                    queued.insert(v.clone());
+                    fresh.push((results.len(), c));
+                    results.push((v, f64::INFINITY)); // overwritten below
+                }
+                Err(_) => {
+                    rejected += 1;
+                    round_rejected += 1;
+                    cache.insert(v.clone(), f64::INFINITY);
+                    results.push((v, f64::INFINITY));
+                }
+            }
+        }
+
+        let fresh_count = fresh.len();
+        if !fresh.is_empty() {
+            // One engine per batch, with candidates that synthesized the
+            // same architecture sharing one mapped entry and the mapper
+            // output reused across rounds via `map_cache`; all candidates
+            // then evaluate in parallel through the same sharded path as
+            // `Engine::grid` — output order (and every bit) matches the
+            // sequential loop.
+            let mut arch_index: HashMap<String, usize> = HashMap::new();
+            let mut pairs: Vec<(Arch, NetworkMap)> = Vec::new();
+            let mut entry_of: Vec<usize> = Vec::with_capacity(fresh.len());
+            for (_, c) in &fresh {
+                let next = pairs.len();
+                let e = *arch_index.entry(c.arch.name.clone()).or_insert(next);
+                if e == next {
+                    let map = map_cache
+                        .entry(c.arch.name.clone())
+                        .or_insert_with(|| map_network(&c.arch, &synth.net))
+                        .clone();
+                    pairs.push((c.arch.clone(), map));
+                }
+                entry_of.push(e);
+            }
+            let engine = Engine::from_mapped_entries(pairs);
+            let coords: Vec<Coord> = fresh
+                .iter()
+                .enumerate()
+                .map(|(j, (_, c))| (entry_of[j], c.node, c.spec, c.mram))
+                .collect();
+            let points = engine.eval_coords(&coords);
+            for ((slot, cand), point) in fresh.into_iter().zip(points) {
+                let feasible = cfg.constraints.satisfied(&point);
+                let scalar =
+                    if feasible { cfg.objective.value(&point) } else { f64::INFINITY };
+                let index = trace.len();
+                let mut eval = Evaluation {
+                    index,
+                    vector: cand.vector.clone(),
+                    arch: point.arch.clone(),
+                    node: cand.node,
+                    mram: cand.mram,
+                    assign: match cand.spec {
+                        AssignSpec::Flavor(f) => f.label().to_string(),
+                        AssignSpec::Mask(m) => format!("mask{m}"),
+                    },
+                    energy_pj: point.energy.total_pj(),
+                    area_mm2: point.area_mm2,
+                    edp: point.edp(),
+                    latency_ns: point.latency_ns,
+                    p_mem_uw: point.p_mem_uw(cfg.constraints.min_ips),
+                    feasible,
+                    scalar,
+                    joined_frontier: false,
+                };
+                if feasible {
+                    eval.joined_frontier = archive
+                        .offer_vec(index, vec![eval.energy_pj, eval.area_mm2, eval.edp]);
+                }
+                if scalar < best_scalar {
+                    best_scalar = scalar;
+                    best = Some(index);
+                    best_point = Some(point);
+                }
+                cache.insert(cand.vector, scalar);
+                results[slot].1 = scalar;
+                trace.push(eval);
+            }
+            // Intra-batch duplicates get the scalar their first occurrence
+            // just earned.
+            for (slot, v) in dup_slots {
+                if let Some(&s) = cache.get(&v) {
+                    results[slot].1 = s;
+                }
+            }
+        }
+
+        strategy.observe(&results, &mut prng);
+
+        // Only rounds that produced neither a fresh evaluation nor a fresh
+        // rejection count as stalls: an exhaustive enumeration grinding
+        // through a long invalid region is making progress, a strategy
+        // re-proposing cached vectors is not.
+        if fresh_count == 0 && round_rejected == 0 {
+            stall += 1;
+            if stall >= MAX_STALL_ROUNDS {
+                break;
+            }
+        } else {
+            stall = 0;
+        }
+    }
+
+    let frontier = archive.into_items().into_iter().map(|i| trace[i].clone()).collect();
+    SearchResult {
+        strategy: strategy.name(),
+        evaluations: trace.len(),
+        rejected,
+        revisits,
+        trace,
+        best,
+        best_point,
+        frontier,
+    }
+}
+
+/// The best *fixed-grid* paper design under the same objective and
+/// constraints: the paper's architectures (CPU, Eyeriss v1/v2, Simba
+/// v1/v2) × named flavors × the paper's per-node MRAM pick, over `nodes`.
+/// This is the yardstick [`SearchReport`] quotes deltas against.
+pub fn paper_baseline(
+    net: &Network,
+    cfg: &SearchConfig,
+    nodes: &[Node],
+) -> Option<(DesignPoint, f64)> {
+    let engine = Engine::new(
+        vec![
+            crate::arch::cpu(),
+            crate::arch::eyeriss(PeConfig::V1),
+            crate::arch::eyeriss(PeConfig::V2),
+            crate::arch::simba(PeConfig::V1),
+            crate::arch::simba(PeConfig::V2),
+        ],
+        vec![net.clone()],
+    );
+    let mut best: Option<(DesignPoint, f64)> = None;
+    Query::over(&engine).nodes(nodes).for_each(|row| {
+        let p = row.point;
+        if !cfg.constraints.satisfied(&p) {
+            return;
+        }
+        let s = cfg.objective.value(&p);
+        let improves = match &best {
+            None => true,
+            Some((_, b)) => s < *b,
+        };
+        if improves {
+            best = Some((p, s));
+        }
+    });
+    best
+}
+
+/// A multi-strategy search report: per-strategy results plus the
+/// vs-paper-baseline comparison the designer actually wants.
+pub struct SearchReport {
+    pub objective: Objective,
+    pub constraints: Constraints,
+    /// (label, scalar, point) of the best fixed-grid paper design, when
+    /// any satisfies the constraints.
+    pub baseline: Option<(String, f64, DesignPoint)>,
+    pub results: Vec<SearchResult>,
+}
+
+impl SearchReport {
+    /// Run every strategy (each from a fresh `cfg.seed`-seeded PRNG) and
+    /// assemble the report.
+    pub fn run(
+        synth: &ArchSynth,
+        cfg: &SearchConfig,
+        strategies: Vec<Box<dyn Strategy>>,
+    ) -> SearchReport {
+        let baseline = paper_baseline(&synth.net, cfg, &synth.space.nodes).map(|(p, s)| {
+            let label = format!("{} {} @{}", p.arch, p.flavor_label(), p.node.label());
+            (label, s, p)
+        });
+        let mut results = Vec::new();
+        for mut s in strategies {
+            results.push(run_search(synth, &mut *s, cfg));
+        }
+        SearchReport { objective: cfg.objective, constraints: cfg.constraints, baseline, results }
+    }
+
+    /// The best feasible design across all strategies.
+    pub fn best_overall(&self) -> Option<(&SearchResult, &Evaluation)> {
+        self.results
+            .iter()
+            .filter_map(|r| r.best_eval().map(|e| (r, e)))
+            .min_by(|a, b| a.1.scalar.total_cmp(&b.1.scalar))
+    }
+
+    /// Per-strategy summary table: budget accounting, frontier size, best
+    /// design and its delta vs the paper baseline (negative = the search
+    /// beat the paper's best fixed-grid design).
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            &format!(
+                "guided search — objective {} @ ≥{} IPS{}",
+                self.objective.label(),
+                self.constraints.min_ips,
+                match &self.baseline {
+                    Some((label, s, _)) => format!(" (paper best: {label} = {})", sci(*s)),
+                    None => " (no feasible paper baseline)".to_string(),
+                }
+            ),
+            &[
+                "strategy", "evals", "rejected", "revisits", "frontier", "best design",
+                "assign", "objective", "vs paper",
+            ],
+        );
+        for r in &self.results {
+            let (design, assign, obj, delta) = match r.best_eval() {
+                Some(e) => (
+                    e.arch.clone(),
+                    e.assign.clone(),
+                    sci(e.scalar),
+                    self.baseline
+                        .as_ref()
+                        .map(|(_, b, _)| pct(e.scalar / b - 1.0))
+                        .unwrap_or_else(|| "-".into()),
+                ),
+                None => ("(none feasible)".into(), "-".into(), "-".into(), "-".into()),
+            };
+            t.row(vec![
+                r.strategy.to_string(),
+                format!("{}", r.evaluations),
+                format!("{}", r.rejected),
+                format!("{}", r.revisits),
+                format!("{}", r.frontier.len()),
+                design,
+                assign,
+                obj,
+                delta,
+            ]);
+        }
+        t
+    }
+
+    /// Per-strategy Pareto frontiers as CSV.
+    pub fn frontier_csv(&self) -> Csv {
+        let mut c = Csv::new(&[
+            "strategy", "eval", "arch", "node_nm", "mram", "assign", "energy_pj", "area_mm2",
+            "edp", "latency_ns", "p_mem_uw", "vector",
+        ]);
+        for r in &self.results {
+            for e in &r.frontier {
+                c.row(vec![
+                    r.strategy.to_string(),
+                    format!("{}", e.index),
+                    e.arch.clone(),
+                    format!("{}", e.node.nm()),
+                    e.mram.label().to_string(),
+                    e.assign.clone(),
+                    sci(e.energy_pj),
+                    sci(e.area_mm2),
+                    sci(e.edp),
+                    sci(e.latency_ns),
+                    sci(e.p_mem_uw),
+                    e.vector_key(),
+                ]);
+            }
+        }
+        c
+    }
+
+    /// The full per-evaluation trace as CSV (the reproducibility record:
+    /// same seed/budget/constraints → bitwise-identical file).
+    pub fn trace_csv(&self) -> Csv {
+        let mut c = Csv::new(&[
+            "strategy", "eval", "arch", "node_nm", "mram", "assign", "energy_pj", "area_mm2",
+            "edp", "latency_ns", "p_mem_uw", "feasible", "scalar", "joined_frontier", "vector",
+        ]);
+        for r in &self.results {
+            for e in &r.trace {
+                c.row(vec![
+                    r.strategy.to_string(),
+                    format!("{}", e.index),
+                    e.arch.clone(),
+                    format!("{}", e.node.nm()),
+                    e.mram.label().to_string(),
+                    e.assign.clone(),
+                    sci(e.energy_pj),
+                    sci(e.area_mm2),
+                    sci(e.edp),
+                    sci(e.latency_ns),
+                    sci(e.p_mem_uw),
+                    format!("{}", e.feasible),
+                    if e.scalar.is_finite() { sci(e.scalar) } else { "inf".into() },
+                    format!("{}", e.joined_frontier),
+                    e.vector_key(),
+                ]);
+            }
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::space::KnobSpace;
+    use crate::search::strategy::{Exhaustive, HillClimb, RandomSearch};
+    use crate::workload::builtin::detnet;
+
+    fn tiny_synth() -> ArchSynth {
+        ArchSynth::new(KnobSpace::tiny(), detnet()).unwrap()
+    }
+
+    fn cfg(budget: usize) -> SearchConfig {
+        SearchConfig {
+            objective: Objective::Energy,
+            constraints: Constraints::at_ips(10.0),
+            budget,
+            batch: 4,
+            seed: 42,
+        }
+    }
+
+    #[test]
+    fn exhaustive_spends_exactly_the_valid_space() {
+        let synth = tiny_synth();
+        let r = run_search(&synth, &mut Exhaustive::new(), &cfg(1000));
+        // every tiny-space vector is valid, so evals == cardinality
+        assert_eq!(r.evaluations as u128, synth.space.cardinality());
+        assert_eq!(r.rejected, 0);
+        assert_eq!(r.revisits, 0);
+        assert!(r.best.is_some());
+        assert!(!r.frontier.is_empty());
+    }
+
+    #[test]
+    fn budget_caps_evaluations() {
+        let synth = tiny_synth();
+        let r = run_search(&synth, &mut Exhaustive::new(), &cfg(5));
+        assert_eq!(r.evaluations, 5);
+        assert_eq!(r.trace.len(), 5);
+    }
+
+    #[test]
+    fn revisits_consume_no_budget() {
+        let synth = tiny_synth();
+        // 12-point space, 60-eval budget: random sampling must revisit,
+        // and total spend can never exceed the distinct valid points.
+        let r = run_search(&synth, &mut RandomSearch, &cfg(60));
+        assert!(r.evaluations as u128 <= synth.space.cardinality());
+        assert!(r.revisits > 0, "60 draws over 12 points must revisit");
+    }
+
+    #[test]
+    fn intra_batch_duplicates_evaluate_once() {
+        // A strategy that proposes the same vector three times per round
+        // (annealing mutations collide like this) must spend exactly one
+        // evaluation on it, with the copies answered from the cache.
+        struct Dup;
+        impl Strategy for Dup {
+            fn name(&self) -> &'static str {
+                "dup"
+            }
+            fn propose(&mut self, space: &KnobSpace, _ask: usize, _prng: &mut Prng) -> Vec<KnobVector> {
+                let v = space.vector_at(0);
+                vec![v.clone(), v.clone(), v]
+            }
+            fn observe(&mut self, results: &[(KnobVector, f64)], _prng: &mut Prng) {
+                // every copy must carry the evaluated scalar, not a filler
+                assert!(results.iter().all(|(_, s)| s.is_finite()));
+                let bits: Vec<u64> = results.iter().map(|(_, s)| s.to_bits()).collect();
+                assert!(bits.windows(2).all(|w| w[0] == w[1]), "copies disagree");
+            }
+        }
+        let synth = tiny_synth();
+        let r = run_search(&synth, &mut Dup, &cfg(10));
+        assert_eq!(r.evaluations, 1, "duplicates consumed budget");
+        assert!(r.revisits >= 2, "copies must count as revisits");
+    }
+
+    #[test]
+    fn exhaustive_survives_long_invalid_runs() {
+        // >64 consecutive invalid vectors (two undersized GWB choices ×
+        // a 34-deep assignment axis) with batch 1: every early round is a
+        // fresh *rejection*, which must not count as a stall — the
+        // enumeration has to reach the valid region and evaluate it all.
+        let mut space = KnobSpace::tiny();
+        space.gwb_bytes = vec![1024, 2048, 512 * 1024];
+        space.glb_bytes = vec![2 * 1024 * 1024];
+        space.assigns.extend((1..32).map(crate::eval::AssignSpec::Mask));
+        assert_eq!(space.assigns.len(), 34);
+        let synth = ArchSynth::new(space, detnet()).unwrap();
+        let mut c = cfg(1000);
+        c.batch = 1;
+        let r = run_search(&synth, &mut Exhaustive::new(), &c);
+        assert_eq!(r.rejected, 2 * 34, "two invalid GWB blocks");
+        assert_eq!(r.evaluations, 34, "the whole valid block evaluates");
+        assert!(r.best.is_some());
+    }
+
+    #[test]
+    fn best_and_frontier_respect_constraints() {
+        let synth = tiny_synth();
+        let mut c = cfg(1000);
+        c.constraints.max_area_mm2 = Some(1e9); // non-binding, exercise the path
+        let r = run_search(&synth, &mut Exhaustive::new(), &c);
+        let b = r.best_eval().unwrap();
+        assert!(b.feasible && b.scalar.is_finite());
+        for e in &r.frontier {
+            assert!(e.feasible, "frontier member {} infeasible", e.index);
+        }
+        // the best design's scalar is minimal over feasible trace rows
+        let min = r
+            .trace
+            .iter()
+            .filter(|e| e.feasible)
+            .map(|e| e.scalar)
+            .fold(f64::INFINITY, f64::min);
+        assert_eq!(b.scalar.to_bits(), min.to_bits());
+    }
+
+    #[test]
+    fn same_seed_replays_bitwise() {
+        let synth = tiny_synth();
+        let a = run_search(&synth, &mut RandomSearch, &cfg(8));
+        let b = run_search(&synth, &mut RandomSearch, &cfg(8));
+        assert_eq!(a.evaluations, b.evaluations);
+        for (x, y) in a.trace.iter().zip(&b.trace) {
+            assert_eq!(x.vector, y.vector);
+            assert_eq!(x.scalar.to_bits(), y.scalar.to_bits());
+            assert_eq!(x.energy_pj.to_bits(), y.energy_pj.to_bits());
+            assert_eq!(x.joined_frontier, y.joined_frontier);
+        }
+    }
+
+    #[test]
+    fn hill_climb_from_paper_point_never_ends_worse() {
+        let synth = ArchSynth::new(KnobSpace::paper(), detnet()).unwrap();
+        let start = synth
+            .space
+            .paper_vector(
+                crate::search::Family::WeightStationary,
+                PeConfig::V2,
+                crate::arch::MemFlavor::SramOnly,
+                Node::N7,
+                Device::VgsotMram,
+            )
+            .unwrap();
+        let paper_scalar = {
+            let c = synth.lower(&start).unwrap();
+            let engine = Engine::new(vec![c.arch.clone()], vec![synth.net.clone()]);
+            let p = engine.eval_coords(&[(0, c.node, c.spec, c.mram)]).remove(0);
+            Objective::Energy.value(&p)
+        };
+        let mut config = cfg(40);
+        config.batch = 24;
+        let r = run_search(&synth, &mut HillClimb::seeded(start), &config);
+        let best = r.best_eval().expect("seeded climb evaluates the seed");
+        assert!(
+            best.scalar <= paper_scalar,
+            "climb ended worse than its seed: {} > {paper_scalar}",
+            best.scalar
+        );
+    }
+
+    #[test]
+    fn paper_baseline_exists_and_is_feasible() {
+        let c = cfg(1);
+        let (p, s) =
+            paper_baseline(&detnet(), &c, &[Node::N7]).expect("7nm grid has feasible points");
+        assert!(c.constraints.satisfied(&p));
+        assert!(s.is_finite() && s > 0.0);
+    }
+
+    #[test]
+    fn report_runs_multiple_strategies() {
+        let synth = tiny_synth();
+        let report = SearchReport::run(
+            &synth,
+            &cfg(30),
+            vec![Box::new(Exhaustive::new()), Box::new(RandomSearch)],
+        );
+        assert_eq!(report.results.len(), 2);
+        assert!(report.best_overall().is_some());
+        let table = report.table().render();
+        assert!(table.contains("exhaustive"));
+        assert!(table.contains("random"));
+        let csv = report.trace_csv().render();
+        assert!(csv.lines().count() > 2);
+    }
+}

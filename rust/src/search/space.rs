@@ -1,0 +1,731 @@
+//! `search::space` — the parameterized architecture space.
+//!
+//! The paper evaluates a handful of hand-picked design points (Eyeriss and
+//! Simba at their v1/v2 PE counts, fixed buffer sizings, three named
+//! memory flavors). This module turns those points into coordinates of a
+//! *space*: a [`KnobSpace`] declares the free design knobs (PE-array
+//! geometry, per-role buffer capacities and GLB banking, shared-bus width,
+//! process node, MRAM device, per-level device assignment drawn from the
+//! hybrid lattice), and an [`ArchSynth`] lowers a knob vector into a valid
+//! [`Arch`] + assignment the existing evaluation engine scores. The
+//! paper's designs are *named points* of the space
+//! ([`KnobSpace::paper_vector`]), and the synthesized paper-v1/v2 vectors
+//! reproduce `arch::eyeriss`/`arch::simba` field-for-field — so a search
+//! that lands on them evaluates bitwise-identically to the fixed grid.
+//!
+//! A knob vector is a plain `Vec<usize>` of per-dimension choice indices
+//! ([`KnobVector`]), which keeps the strategies generic: neighborhoods are
+//! ±1 steps per dimension, mutation re-draws a dimension, and dedupe is a
+//! hash lookup.
+
+use crate::arch::{Arch, BufferLevel, BufferRole, Dataflow, LevelKind, MemFlavor, PeConfig};
+use crate::eval::{AssignSpec, DeviceAssignment};
+use crate::tech::{Device, Node};
+use crate::util::prng::Prng;
+use crate::workload::Network;
+
+/// Accelerator family a knob vector lowers into. The two spatial families
+/// mirror the paper's modified Eyeriss (row-stationary, register-file
+/// operand spads) and Simba (weight-stationary, SRAM operand buffers);
+/// the CPU reference is a fixed point, not a family worth parameterizing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Family {
+    /// Eyeriss-like: per-PE weight spad (SRAM macro) + ifmap/psum register
+    /// files; 250 MHz @ 40 nm baseline.
+    RowStationary,
+    /// Simba-like: per-PE weight/input/accum SRAM buffers, 8-wide vector
+    /// MAC when the lane count allows; 500 MHz @ 40 nm baseline.
+    WeightStationary,
+}
+
+impl Family {
+    pub const ALL: [Family; 2] = [Family::RowStationary, Family::WeightStationary];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Family::RowStationary => "rs",
+            Family::WeightStationary => "ws",
+        }
+    }
+}
+
+/// A point of a [`KnobSpace`]: one choice index per dimension, in the
+/// fixed dimension order documented on [`KnobSpace`].
+pub type KnobVector = Vec<usize>;
+
+/// The free design knobs. Dimension order (fixed, index into a
+/// [`KnobVector`]):
+///
+/// | dim | knob        | meaning                                            |
+/// |-----|-------------|----------------------------------------------------|
+/// | 0   | `families`  | accelerator family (dataflow + level structure)    |
+/// | 1   | `pe_grids`  | RS: (rows, cols); WS: (PE count, MAC lanes per PE) |
+/// | 2   | `weight_bytes` | per-PE weight memory capacity                   |
+/// | 3   | `input_bytes`  | per-PE input spad/buffer capacity               |
+/// | 4   | `accum_bytes`  | per-PE accumulator spad/buffer capacity         |
+/// | 5   | `glb_bytes`    | global activation buffer total capacity         |
+/// | 6   | `glb_banks`    | GLB banking (instances; capacity splits across) |
+/// | 7   | `gwb_bytes`    | global weight buffer capacity                   |
+/// | 8   | `wide_bus_bits`| GLB/GWB access-bus width                        |
+/// | 9   | `nodes`        | process node                                    |
+/// | 10  | `mrams`        | MRAM device for NVM levels                      |
+/// | 11  | `assigns`      | per-level device assignment (flavor or lattice mask) |
+#[derive(Debug, Clone)]
+pub struct KnobSpace {
+    pub families: Vec<Family>,
+    pub pe_grids: Vec<(usize, usize)>,
+    pub weight_bytes: Vec<usize>,
+    pub input_bytes: Vec<usize>,
+    pub accum_bytes: Vec<usize>,
+    pub glb_bytes: Vec<usize>,
+    pub glb_banks: Vec<usize>,
+    pub gwb_bytes: Vec<usize>,
+    pub wide_bus_bits: Vec<usize>,
+    pub nodes: Vec<Node>,
+    pub mrams: Vec<Device>,
+    pub assigns: Vec<AssignSpec>,
+}
+
+/// Number of knob dimensions.
+pub const DIMS: usize = 12;
+
+impl KnobSpace {
+    /// The default exploration space: every paper design point is a member
+    /// (v1/v2 grids, the paper buffer sizings, all named flavors), widened
+    /// with off-grid capacities, banking factors, bus widths and the full
+    /// per-level hybrid lattice (masks up to the largest family's
+    /// `2^macro_levels`; masks out of a smaller family's range are
+    /// rejected by the synthesizer, not silently clamped).
+    pub fn paper() -> KnobSpace {
+        const KB: usize = 1024;
+        // Flavors first, then every nontrivial lattice mask of the largest
+        // (weight-stationary, 5-macro-level) family. Masks that coincide
+        // with a named flavor still earn their keep: they are distinct
+        // coordinates, and the flavor tag is what the reports key on.
+        let mut assigns = vec![
+            AssignSpec::Flavor(MemFlavor::SramOnly),
+            AssignSpec::Flavor(MemFlavor::P0),
+            AssignSpec::Flavor(MemFlavor::P1),
+        ];
+        assigns.extend((1..32).map(AssignSpec::Mask));
+        KnobSpace {
+            families: Family::ALL.to_vec(),
+            pe_grids: vec![(12, 14), (16, 16), (16, 64), (32, 32), (64, 64)],
+            weight_bytes: vec![128, 256, KB, 4 * KB, 12 * KB, 16 * KB],
+            input_bytes: vec![24, 64, KB, 4 * KB, 8 * KB],
+            accum_bytes: vec![48, 128, KB, 3 * KB],
+            glb_bytes: vec![256 * KB, 512 * KB, KB * KB, 2 * KB * KB, 4 * KB * KB],
+            glb_banks: vec![1, 2, 4],
+            gwb_bytes: vec![128 * KB, 256 * KB, 512 * KB, KB * KB],
+            wide_bus_bits: vec![32, 64, 128],
+            nodes: Node::ALL.to_vec(),
+            mrams: vec![Device::SttMram, Device::SotMram, Device::VgsotMram],
+            assigns,
+        }
+    }
+
+    /// A deliberately small space for exhaustive search in tests and
+    /// examples: the paper-v2 sizings plus strictly-dominated alternatives
+    /// (oversized GLB/GWB), named flavors only.
+    pub fn tiny() -> KnobSpace {
+        const KB: usize = 1024;
+        KnobSpace {
+            families: vec![Family::WeightStationary],
+            pe_grids: vec![(64, 64)],
+            weight_bytes: vec![12 * KB],
+            input_bytes: vec![8 * KB],
+            accum_bytes: vec![3 * KB],
+            glb_bytes: vec![2 * KB * KB, 4 * KB * KB],
+            glb_banks: vec![1],
+            gwb_bytes: vec![512 * KB, KB * KB],
+            wide_bus_bits: vec![64],
+            nodes: vec![Node::N7],
+            mrams: vec![Device::VgsotMram],
+            assigns: vec![
+                AssignSpec::Flavor(MemFlavor::SramOnly),
+                AssignSpec::Flavor(MemFlavor::P0),
+                AssignSpec::Flavor(MemFlavor::P1),
+            ],
+        }
+    }
+
+    /// Per-dimension axis sizes, in dimension order.
+    pub fn dim_sizes(&self) -> [usize; DIMS] {
+        [
+            self.families.len(),
+            self.pe_grids.len(),
+            self.weight_bytes.len(),
+            self.input_bytes.len(),
+            self.accum_bytes.len(),
+            self.glb_bytes.len(),
+            self.glb_banks.len(),
+            self.gwb_bytes.len(),
+            self.wide_bus_bits.len(),
+            self.nodes.len(),
+            self.mrams.len(),
+            self.assigns.len(),
+        ]
+    }
+
+    /// Total number of knob vectors (including ones the synthesizer will
+    /// reject as infeasible).
+    pub fn cardinality(&self) -> u128 {
+        self.dim_sizes().iter().map(|&n| n as u128).product()
+    }
+
+    /// Structural sanity of the axes themselves (non-empty, positive
+    /// capacities/widths/grids). Vector-level feasibility (capacity
+    /// floors, lattice range) lives in [`ArchSynth::lower`].
+    pub fn validate(&self) -> crate::Result<()> {
+        let sizes = self.dim_sizes();
+        anyhow::ensure!(
+            sizes.iter().all(|&n| n > 0),
+            "knob space has an empty axis (sizes {sizes:?})"
+        );
+        anyhow::ensure!(
+            self.pe_grids.iter().all(|&(a, b)| a > 0 && b > 0),
+            "PE grids must be positive"
+        );
+        for (name, axis) in [
+            ("weight_bytes", &self.weight_bytes),
+            ("input_bytes", &self.input_bytes),
+            ("accum_bytes", &self.accum_bytes),
+            ("glb_bytes", &self.glb_bytes),
+            ("glb_banks", &self.glb_banks),
+            ("gwb_bytes", &self.gwb_bytes),
+            ("wide_bus_bits", &self.wide_bus_bits),
+        ] {
+            anyhow::ensure!(axis.iter().all(|&v| v > 0), "{name} axis must be positive");
+        }
+        Ok(())
+    }
+
+    /// Whether `v` has the right shape for this space (length and
+    /// per-dimension bounds).
+    pub fn contains(&self, v: &KnobVector) -> bool {
+        v.len() == DIMS && v.iter().zip(self.dim_sizes()).all(|(&i, n)| i < n)
+    }
+
+    /// The `i`-th knob vector in canonical order (dimension 0 slowest,
+    /// dimension 11 fastest) — the exhaustive strategy's enumeration.
+    pub fn vector_at(&self, mut i: u128) -> KnobVector {
+        let sizes = self.dim_sizes();
+        let mut v = vec![0usize; DIMS];
+        for d in (0..DIMS).rev() {
+            let n = sizes[d] as u128;
+            v[d] = (i % n) as usize;
+            i /= n;
+        }
+        v
+    }
+
+    /// Uniform random knob vector.
+    pub fn random(&self, prng: &mut Prng) -> KnobVector {
+        self.dim_sizes().iter().map(|&n| prng.range_usize(0, n)).collect()
+    }
+
+    /// All one-step neighbors of `v` (±1 on each dimension, clamped to
+    /// the axis bounds) — the hill-climb neighborhood.
+    pub fn neighbors(&self, v: &KnobVector) -> Vec<KnobVector> {
+        let sizes = self.dim_sizes();
+        let mut out = Vec::new();
+        for d in 0..DIMS {
+            if v[d] + 1 < sizes[d] {
+                let mut n = v.clone();
+                n[d] += 1;
+                out.push(n);
+            }
+            if v[d] > 0 {
+                let mut n = v.clone();
+                n[d] -= 1;
+                out.push(n);
+            }
+        }
+        out
+    }
+
+    /// Mutate 1–2 random dimensions of `v` to fresh values (never the
+    /// current one) — the annealing move. Dimensions with a single choice
+    /// are skipped; a space with no free dimension returns `v` unchanged.
+    pub fn mutate(&self, v: &KnobVector, prng: &mut Prng) -> KnobVector {
+        let sizes = self.dim_sizes();
+        let free: Vec<usize> = (0..DIMS).filter(|&d| sizes[d] > 1).collect();
+        let mut out = v.clone();
+        if free.is_empty() {
+            return out;
+        }
+        let n_moves = (1 + prng.range_usize(0, 2)).min(free.len());
+        let mut dims = free;
+        prng.shuffle(&mut dims);
+        for &d in dims.iter().take(n_moves) {
+            let mut nv = prng.range_usize(0, sizes[d] - 1);
+            if nv >= out[d] {
+                nv += 1;
+            }
+            out[d] = nv;
+        }
+        out
+    }
+
+    /// The knob vector of a paper design point, when this space contains
+    /// every one of its coordinates: `family` at the v1/v2 `cfg` sizing,
+    /// the paper buffer capacities, un-banked 2 MB GLB + 512 kB GWB on a
+    /// 64-bit bus, at (`node`, `mram`, named `flavor`).
+    pub fn paper_vector(
+        &self,
+        family: Family,
+        cfg: PeConfig,
+        flavor: MemFlavor,
+        node: Node,
+        mram: Device,
+    ) -> Option<KnobVector> {
+        const KB: usize = 1024;
+        let (grid, weight, input, accum) = match family {
+            Family::RowStationary => {
+                let grid = match cfg {
+                    PeConfig::V1 => (12, 14),
+                    PeConfig::V2 => (64, 64),
+                };
+                (grid, 128, 24, 48)
+            }
+            Family::WeightStationary => {
+                let grid = match cfg {
+                    PeConfig::V1 => (16, 64),
+                    PeConfig::V2 => (64, 64),
+                };
+                (grid, 12 * KB, 8 * KB, 3 * KB)
+            }
+        };
+        let pos = |axis: &[usize], val: usize| axis.iter().position(|&x| x == val);
+        Some(vec![
+            self.families.iter().position(|&f| f == family)?,
+            self.pe_grids.iter().position(|&g| g == grid)?,
+            pos(&self.weight_bytes, weight)?,
+            pos(&self.input_bytes, input)?,
+            pos(&self.accum_bytes, accum)?,
+            pos(&self.glb_bytes, 2 * KB * KB)?,
+            pos(&self.glb_banks, 1)?,
+            pos(&self.gwb_bytes, 512 * KB)?,
+            pos(&self.wide_bus_bits, 64)?,
+            self.nodes.iter().position(|&n| n == node)?,
+            self.mrams.iter().position(|&m| m == mram)?,
+            self.assigns.iter().position(|&a| a == AssignSpec::Flavor(flavor))?,
+        ])
+    }
+}
+
+/// A lowered knob vector: the synthesized architecture plus the evaluation
+/// coordinates the engine needs.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub arch: Arch,
+    pub node: Node,
+    pub mram: Device,
+    /// The assignment coordinate as specified (flavor or mask); lowering
+    /// against `arch` yields `assignment`.
+    pub spec: AssignSpec,
+    pub assignment: DeviceAssignment,
+    pub vector: KnobVector,
+}
+
+/// Lowers knob vectors into candidates for one target workload, enforcing
+/// the capacity floors that make a candidate *valid* at all:
+///
+/// - the GWB must hold the entire INT8 model — there is no DRAM to stream
+///   weights from (the paper's §3 modification);
+/// - the GLB must hold the largest single activation tensor — with no
+///   backing store, a tensor that cannot reside on-chip cannot exist
+///   (the full in+out double-buffer peak is *not* required; the paper's
+///   own 2 MB GLB does not satisfy it for EDSNet);
+/// - a lattice mask must be in range for the synthesized family's
+///   `2^macro_levels`;
+/// - GLB banking must divide the GLB capacity.
+pub struct ArchSynth {
+    pub space: KnobSpace,
+    pub net: Network,
+    /// Largest single activation tensor of `net`, bytes at INT8 — the GLB
+    /// residency floor, computed once.
+    min_glb_bytes: u64,
+}
+
+impl ArchSynth {
+    pub fn new(space: KnobSpace, net: Network) -> crate::Result<ArchSynth> {
+        space.validate()?;
+        let min_glb_bytes = net
+            .layers
+            .iter()
+            .map(|l| l.input_elems().max(l.output_elems()))
+            .max()
+            .unwrap_or(0);
+        Ok(ArchSynth { space, net, min_glb_bytes })
+    }
+
+    /// The GLB residency floor for this workload, bytes.
+    pub fn min_glb_bytes(&self) -> u64 {
+        self.min_glb_bytes
+    }
+
+    /// Lower a knob vector into a [`Candidate`], or explain why it is not
+    /// a valid design.
+    pub fn lower(&self, v: &KnobVector) -> crate::Result<Candidate> {
+        anyhow::ensure!(
+            self.space.contains(v),
+            "knob vector {v:?} out of range for space {:?}",
+            self.space.dim_sizes()
+        );
+        let family = self.space.families[v[0]];
+        let grid = self.space.pe_grids[v[1]];
+        let weight = self.space.weight_bytes[v[2]];
+        let input = self.space.input_bytes[v[3]];
+        let accum = self.space.accum_bytes[v[4]];
+        let glb = self.space.glb_bytes[v[5]];
+        let banks = self.space.glb_banks[v[6]];
+        let gwb = self.space.gwb_bytes[v[7]];
+        let bus = self.space.wide_bus_bits[v[8]];
+        let node = self.space.nodes[v[9]];
+        let mram = self.space.mrams[v[10]];
+        let spec = self.space.assigns[v[11]];
+
+        anyhow::ensure!(
+            glb % banks == 0,
+            "GLB {glb} B not divisible into {banks} banks"
+        );
+        let weight_floor = self.net.weight_bytes(8);
+        anyhow::ensure!(
+            gwb as u64 >= weight_floor,
+            "GWB {gwb} B cannot hold the whole INT8 model ({weight_floor} B, no DRAM)"
+        );
+        anyhow::ensure!(
+            glb as u64 >= self.min_glb_bytes,
+            "GLB {glb} B cannot hold the largest activation tensor ({} B)",
+            self.min_glb_bytes
+        );
+
+        let arch = synthesize(family, grid, weight, input, accum, glb, banks, gwb, bus);
+        if let AssignSpec::Mask(m) = spec {
+            let lattice = DeviceAssignment::lattice_size(&arch);
+            anyhow::ensure!(
+                m < lattice,
+                "mask {m} out of range for {} ({} macro levels)",
+                arch.name,
+                lattice.trailing_zeros()
+            );
+        }
+        let assignment = spec.lower(&arch, mram);
+        Ok(Candidate { arch, node, mram, spec, assignment, vector: v.clone() })
+    }
+}
+
+/// Build the architecture for one set of lowered knob values. The level
+/// structure (names, roles, kinds, per-PE bus widths, base node and clock)
+/// is the family constant; everything else is a knob. The paper points
+/// reproduce `arch::eyeriss`/`arch::simba` field-for-field — covered by
+/// the equivalence tests.
+#[allow(clippy::too_many_arguments)]
+fn synthesize(
+    family: Family,
+    grid: (usize, usize),
+    weight: usize,
+    input: usize,
+    accum: usize,
+    glb: usize,
+    banks: usize,
+    gwb: usize,
+    bus: usize,
+) -> Arch {
+    let name = format!(
+        "{}{}x{}_w{}_i{}_a{}_g{}x{}_gw{}_b{}",
+        family.label(),
+        grid.0,
+        grid.1,
+        weight,
+        input,
+        accum,
+        glb,
+        banks,
+        gwb,
+        bus
+    );
+    let glb_level = BufferLevel {
+        name: "glb",
+        role: BufferRole::Activation,
+        kind: LevelKind::SramMacro,
+        capacity_bytes: glb / banks,
+        bus_bits: bus,
+        count: banks,
+    };
+    let gwb_level = BufferLevel {
+        name: "gwb",
+        role: BufferRole::GlobalWeight,
+        kind: LevelKind::SramMacro,
+        capacity_bytes: gwb,
+        bus_bits: bus,
+        count: 1,
+    };
+    match family {
+        Family::RowStationary => {
+            let pe_count = grid.0 * grid.1;
+            Arch {
+                name,
+                dataflow: Dataflow::RowStationary,
+                pe_count,
+                macs_per_pe: 1,
+                vec_out: 1,
+                datum_bits: 8,
+                levels: vec![
+                    BufferLevel {
+                        name: "weight_spad",
+                        role: BufferRole::Weight,
+                        kind: LevelKind::SramMacro,
+                        capacity_bytes: weight,
+                        bus_bits: 8,
+                        count: pe_count,
+                    },
+                    BufferLevel {
+                        name: "ifmap_spad",
+                        role: BufferRole::Input,
+                        kind: LevelKind::RegFile,
+                        capacity_bytes: input,
+                        bus_bits: 8,
+                        count: pe_count,
+                    },
+                    BufferLevel {
+                        name: "psum_spad",
+                        role: BufferRole::Accum,
+                        kind: LevelKind::RegFile,
+                        capacity_bytes: accum,
+                        bus_bits: 16,
+                        count: pe_count,
+                    },
+                    glb_level,
+                    gwb_level,
+                ],
+                base_node: Node::N40,
+                base_freq_mhz: 250.0,
+                cpu_style: false,
+            }
+        }
+        Family::WeightStationary => {
+            let (pe_count, macs_per_pe) = grid;
+            Arch {
+                name,
+                dataflow: Dataflow::WeightStationary,
+                pe_count,
+                macs_per_pe,
+                vec_out: if macs_per_pe % 8 == 0 { 8 } else { 1 },
+                datum_bits: 8,
+                levels: vec![
+                    BufferLevel {
+                        name: "weight_buf",
+                        role: BufferRole::Weight,
+                        kind: LevelKind::SramMacro,
+                        capacity_bytes: weight,
+                        bus_bits: 64,
+                        count: pe_count,
+                    },
+                    BufferLevel {
+                        name: "input_buf",
+                        role: BufferRole::Input,
+                        kind: LevelKind::SramMacro,
+                        capacity_bytes: input,
+                        bus_bits: 64,
+                        count: pe_count,
+                    },
+                    BufferLevel {
+                        name: "accum_buf",
+                        role: BufferRole::Accum,
+                        kind: LevelKind::SramMacro,
+                        capacity_bytes: accum,
+                        bus_bits: 24,
+                        count: pe_count,
+                    },
+                    glb_level,
+                    gwb_level,
+                ],
+                base_node: Node::N40,
+                base_freq_mhz: 500.0,
+                cpu_style: false,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{eyeriss, simba};
+    use crate::workload::builtin::detnet;
+
+    fn assert_same_arch(a: &Arch, b: &Arch) {
+        assert_eq!(a.dataflow, b.dataflow);
+        assert_eq!(a.pe_count, b.pe_count);
+        assert_eq!(a.macs_per_pe, b.macs_per_pe);
+        assert_eq!(a.vec_out, b.vec_out);
+        assert_eq!(a.datum_bits, b.datum_bits);
+        assert_eq!(a.base_node, b.base_node);
+        assert_eq!(a.base_freq_mhz.to_bits(), b.base_freq_mhz.to_bits());
+        assert_eq!(a.cpu_style, b.cpu_style);
+        assert_eq!(a.levels.len(), b.levels.len());
+        for (la, lb) in a.levels.iter().zip(&b.levels) {
+            assert_eq!(la.name, lb.name);
+            assert_eq!(la.role, lb.role);
+            assert_eq!(la.kind, lb.kind);
+            assert_eq!(la.capacity_bytes, lb.capacity_bytes, "{}", la.name);
+            assert_eq!(la.bus_bits, lb.bus_bits, "{}", la.name);
+            assert_eq!(la.count, lb.count, "{}", la.name);
+        }
+    }
+
+    #[test]
+    fn paper_vectors_synthesize_the_paper_archs() {
+        let synth = ArchSynth::new(KnobSpace::paper(), detnet()).unwrap();
+        for (family, cfg, reference) in [
+            (Family::WeightStationary, PeConfig::V1, simba(PeConfig::V1)),
+            (Family::WeightStationary, PeConfig::V2, simba(PeConfig::V2)),
+            (Family::RowStationary, PeConfig::V1, eyeriss(PeConfig::V1)),
+            (Family::RowStationary, PeConfig::V2, eyeriss(PeConfig::V2)),
+        ] {
+            let v = synth
+                .space
+                .paper_vector(family, cfg, MemFlavor::P1, Node::N7, Device::VgsotMram)
+                .expect("paper point in paper space");
+            let c = synth.lower(&v).expect("paper point is valid");
+            assert_same_arch(&c.arch, &reference);
+            assert_eq!(c.node, Node::N7);
+            assert_eq!(c.mram, Device::VgsotMram);
+            assert_eq!(c.assignment.flavor, Some(MemFlavor::P1));
+        }
+    }
+
+    #[test]
+    fn floors_reject_undersized_global_buffers() {
+        // Shrink the GWB/GLB axes so undersized choices definitely exist:
+        // 1 kB cannot hold any builtin model or activation tensor.
+        let mut space = KnobSpace::paper();
+        space.gwb_bytes = vec![1024, 512 * 1024];
+        space.glb_bytes = vec![1024, 2 * 1024 * 1024];
+        let synth = ArchSynth::new(space, detnet()).unwrap();
+        assert!(synth.min_glb_bytes() > 1024);
+        let v = synth
+            .space
+            .paper_vector(
+                Family::WeightStationary,
+                PeConfig::V2,
+                MemFlavor::SramOnly,
+                Node::N7,
+                Device::VgsotMram,
+            )
+            .expect("paper capacities still present at index 1");
+        assert!(synth.lower(&v).is_ok());
+        let mut small_gwb = v.clone();
+        small_gwb[7] = 0;
+        let err = synth.lower(&small_gwb).unwrap_err().to_string();
+        assert!(err.contains("cannot hold the whole INT8 model"), "{err}");
+        let mut small_glb = v.clone();
+        small_glb[5] = 0;
+        let err = synth.lower(&small_glb).unwrap_err().to_string();
+        assert!(err.contains("largest activation tensor"), "{err}");
+    }
+
+    #[test]
+    fn out_of_range_masks_are_rejected_not_clamped() {
+        let synth = ArchSynth::new(KnobSpace::paper(), detnet()).unwrap();
+        let mut v = synth
+            .space
+            .paper_vector(
+                Family::RowStationary,
+                PeConfig::V2,
+                MemFlavor::SramOnly,
+                Node::N7,
+                Device::SttMram,
+            )
+            .unwrap();
+        // RS has 3 macro levels → masks 0..8 valid. Find mask 31 (present
+        // in the paper space) and assert rejection.
+        let hi = synth
+            .space
+            .assigns
+            .iter()
+            .position(|&a| a == AssignSpec::Mask(31))
+            .expect("paper space includes mask 31");
+        v[11] = hi;
+        let err = synth.lower(&v).unwrap_err().to_string();
+        assert!(err.contains("mask 31 out of range"), "{err}");
+        // and the same mask is fine for the 5-macro-level WS family
+        let mut ws = synth
+            .space
+            .paper_vector(
+                Family::WeightStationary,
+                PeConfig::V2,
+                MemFlavor::SramOnly,
+                Node::N7,
+                Device::SttMram,
+            )
+            .unwrap();
+        ws[11] = hi;
+        assert!(synth.lower(&ws).is_ok());
+    }
+
+    #[test]
+    fn enumeration_roundtrips_and_counts() {
+        let space = KnobSpace::tiny();
+        let n = space.cardinality();
+        assert_eq!(n, 2 * 2 * 3);
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..n {
+            let v = space.vector_at(i);
+            assert!(space.contains(&v), "{v:?}");
+            assert!(seen.insert(v), "duplicate at {i}");
+        }
+        // canonical order: last dimension fastest
+        assert_eq!(space.vector_at(0)[11], 0);
+        assert_eq!(space.vector_at(1)[11], 1);
+    }
+
+    #[test]
+    fn neighbors_and_mutation_stay_in_bounds() {
+        let space = KnobSpace::paper();
+        let mut prng = Prng::new(11);
+        for _ in 0..50 {
+            let v = space.random(&mut prng);
+            for n in space.neighbors(&v) {
+                assert!(space.contains(&n), "{n:?}");
+                let diff: usize = n.iter().zip(&v).filter(|(a, b)| a != b).count();
+                assert_eq!(diff, 1);
+            }
+            let m = space.mutate(&v, &mut prng);
+            assert!(space.contains(&m), "{m:?}");
+            let diff: usize = m.iter().zip(&v).filter(|(a, b)| a != b).count();
+            assert!(diff >= 1 && diff <= 2, "mutation changed {diff} dims");
+        }
+    }
+
+    #[test]
+    fn banking_splits_capacity_and_requires_divisibility() {
+        // 1 MB across 3 banks does not divide evenly → rejected.
+        let mut space = KnobSpace::paper();
+        space.glb_bytes = vec![1024 * 1024];
+        space.glb_banks = vec![3];
+        let synth = ArchSynth::new(space, detnet()).unwrap();
+        let v = vec![1, 4, 4, 4, 3, 0, 0, 2, 1, 4, 2, 0];
+        let err = synth.lower(&v).unwrap_err().to_string();
+        assert!(err.contains("not divisible"), "{err}");
+
+        let synth2 = ArchSynth::new(KnobSpace::paper(), detnet()).unwrap();
+        let mut v2 = synth2
+            .space
+            .paper_vector(
+                Family::WeightStationary,
+                PeConfig::V2,
+                MemFlavor::SramOnly,
+                Node::N7,
+                Device::VgsotMram,
+            )
+            .unwrap();
+        v2[6] = synth2.space.glb_banks.iter().position(|&b| b == 4).unwrap();
+        let c = synth2.lower(&v2).unwrap();
+        let glb = c.arch.level("glb").unwrap();
+        assert_eq!(glb.count, 4);
+        assert_eq!(glb.capacity_bytes, 512 * 1024);
+    }
+}

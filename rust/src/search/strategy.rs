@@ -1,0 +1,358 @@
+//! `search::strategy` — pluggable, deterministic search strategies behind
+//! one ask/tell trait.
+//!
+//! The run loop ([`crate::search::run_search`]) drives a [`Strategy`] in
+//! rounds: `propose` a batch of knob vectors, evaluate them in parallel
+//! through the engine (dedupe and validity handled by the loop), then
+//! `observe` the scalarized results in proposal order. All randomness
+//! flows through the loop's single seeded [`Prng`], and evaluation results
+//! are bitwise-deterministic regardless of thread count, so a (strategy,
+//! seed, budget, space) tuple replays identically — the determinism
+//! contract the trace/frontier reproducibility tests pin.
+//!
+//! Four strategies cover the classic trade-offs:
+//! - [`Exhaustive`] — canonical enumeration; only viable on small spaces.
+//! - [`RandomSearch`] — uniform i.i.d. sampling; the unbiased baseline.
+//! - [`HillClimb`] — steepest-descent over the ±1 neighborhood with
+//!   random restarts when no neighbor improves.
+//! - [`Annealing`] — simulated annealing over 1–2-knob mutations with a
+//!   geometric temperature schedule.
+
+use super::space::{KnobSpace, KnobVector};
+use crate::util::prng::Prng;
+
+/// A search strategy. Implementations must be deterministic: all
+/// randomness comes from the `prng` handed in, and `observe` sees results
+/// in the exact order `propose` emitted them (truncated only when the
+/// evaluation budget ran out mid-batch).
+pub trait Strategy {
+    fn name(&self) -> &'static str;
+
+    /// Propose up to ~`ask` candidate vectors for the next round (`ask` is
+    /// a batching hint, not a cap — a neighborhood is proposed whole). An
+    /// empty batch ends the search (space exhausted / nothing left to
+    /// try).
+    fn propose(&mut self, space: &KnobSpace, ask: usize, prng: &mut Prng) -> Vec<KnobVector>;
+
+    /// Observe the scalarized objective for each proposed vector, in
+    /// proposal order. Invalid or constraint-violating candidates arrive
+    /// as `f64::INFINITY`.
+    fn observe(&mut self, results: &[(KnobVector, f64)], prng: &mut Prng);
+}
+
+/// Canonical enumeration of the whole space ([`KnobSpace::vector_at`]
+/// order). `propose` returns `ask`-sized slabs until the space runs out.
+pub struct Exhaustive {
+    next: u128,
+}
+
+impl Exhaustive {
+    pub fn new() -> Exhaustive {
+        Exhaustive { next: 0 }
+    }
+}
+
+impl Default for Exhaustive {
+    fn default() -> Self {
+        Exhaustive::new()
+    }
+}
+
+impl Strategy for Exhaustive {
+    fn name(&self) -> &'static str {
+        "exhaustive"
+    }
+
+    fn propose(&mut self, space: &KnobSpace, ask: usize, _prng: &mut Prng) -> Vec<KnobVector> {
+        let total = space.cardinality();
+        let mut out = Vec::new();
+        while self.next < total && out.len() < ask.max(1) {
+            out.push(space.vector_at(self.next));
+            self.next += 1;
+        }
+        out
+    }
+
+    fn observe(&mut self, _results: &[(KnobVector, f64)], _prng: &mut Prng) {}
+}
+
+/// Uniform i.i.d. sampling of the space.
+pub struct RandomSearch;
+
+impl Strategy for RandomSearch {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn propose(&mut self, space: &KnobSpace, ask: usize, prng: &mut Prng) -> Vec<KnobVector> {
+        (0..ask.max(1)).map(|_| space.random(prng)).collect()
+    }
+
+    fn observe(&mut self, _results: &[(KnobVector, f64)], _prng: &mut Prng) {}
+}
+
+/// Steepest-descent hill climbing over the ±1-per-knob neighborhood, with
+/// random restarts: when no neighbor strictly improves the incumbent, the
+/// climber abandons the local optimum and reseeds at a random vector
+/// (keeping the global best via the run loop's archive, not its own
+/// state).
+pub struct HillClimb {
+    /// The incumbent (vector, scalar); `None` before the first seed or
+    /// right after a restart was scheduled.
+    current: Option<(KnobVector, f64)>,
+    /// A caller-pinned start point for the first climb (e.g. the paper-v2
+    /// vector), consumed once.
+    start: Option<KnobVector>,
+}
+
+impl HillClimb {
+    /// Start from a random vector.
+    pub fn new() -> HillClimb {
+        HillClimb { current: None, start: None }
+    }
+
+    /// Start the first climb from a pinned vector (later restarts are
+    /// random). Seeding at a paper point turns the climber into "improve
+    /// on the paper design" — the most common interactive query.
+    pub fn seeded(start: KnobVector) -> HillClimb {
+        HillClimb { current: None, start: Some(start) }
+    }
+}
+
+impl Default for HillClimb {
+    fn default() -> Self {
+        HillClimb::new()
+    }
+}
+
+impl Strategy for HillClimb {
+    fn name(&self) -> &'static str {
+        "hill-climb"
+    }
+
+    fn propose(&mut self, space: &KnobSpace, _ask: usize, prng: &mut Prng) -> Vec<KnobVector> {
+        match &self.current {
+            None => {
+                let seed = self.start.take().unwrap_or_else(|| space.random(prng));
+                vec![seed]
+            }
+            Some((v, _)) => space.neighbors(v),
+        }
+    }
+
+    fn observe(&mut self, results: &[(KnobVector, f64)], _prng: &mut Prng) {
+        let best = results
+            .iter()
+            .min_by(|a, b| a.1.total_cmp(&b.1))
+            .map(|(v, s)| (v.clone(), *s));
+        let Some((bv, bs)) = best else {
+            self.current = None; // budget-truncated empty round: restart
+            return;
+        };
+        match &self.current {
+            None => self.current = Some((bv, bs)),
+            Some((_, cur)) => {
+                if bs < *cur {
+                    self.current = Some((bv, bs));
+                } else {
+                    // local optimum: random restart next round
+                    self.current = None;
+                }
+            }
+        }
+    }
+}
+
+/// Batch simulated annealing: each round proposes a *generation* of
+/// 1–2-knob mutations of the incumbent (evaluated in parallel by the run
+/// loop), Metropolis-accepts them sequentially against the advancing
+/// chain state, and cools the temperature **once per generation** — so
+/// the schedule depth is the round count, independent of the parallel
+/// batch width. The temperature is relative — the acceptance test uses
+/// the *ratio* of the scalar degradation to the incumbent's magnitude, so
+/// one schedule works across objectives with wildly different units
+/// (pJ vs mm²).
+pub struct Annealing {
+    /// Initial relative temperature (accepting a +t0·100% degradation
+    /// with probability 1/e at the start).
+    pub t0: f64,
+    /// Geometric cooling factor applied per observed generation that
+    /// contained at least one feasible candidate.
+    pub cooling: f64,
+    current: Option<(KnobVector, f64)>,
+    temp: f64,
+}
+
+impl Annealing {
+    pub fn new() -> Annealing {
+        Annealing::with_schedule(0.2, 0.8)
+    }
+
+    pub fn with_schedule(t0: f64, cooling: f64) -> Annealing {
+        Annealing { t0, cooling, current: None, temp: t0 }
+    }
+}
+
+impl Default for Annealing {
+    fn default() -> Self {
+        Annealing::new()
+    }
+}
+
+impl Strategy for Annealing {
+    fn name(&self) -> &'static str {
+        "annealing"
+    }
+
+    fn propose(&mut self, space: &KnobSpace, ask: usize, prng: &mut Prng) -> Vec<KnobVector> {
+        match &self.current {
+            None => vec![space.random(prng)],
+            Some((v, _)) => (0..ask.max(1)).map(|_| space.mutate(v, prng)).collect(),
+        }
+    }
+
+    fn observe(&mut self, results: &[(KnobVector, f64)], prng: &mut Prng) {
+        let mut any_finite = false;
+        for (v, s) in results {
+            any_finite |= s.is_finite();
+            match &self.current {
+                None => self.current = Some((v.clone(), *s)),
+                Some((_, cur)) => {
+                    let accept = if !cur.is_finite() {
+                        // Infeasible incumbent: hop to anything — the
+                        // chain must keep moving until it finds feasible
+                        // ground (a finite candidate always escapes).
+                        true
+                    } else if *s <= *cur {
+                        true
+                    } else if s.is_finite() {
+                        // relative degradation, so the schedule is
+                        // unit-free across objectives
+                        let rel = (*s - *cur) / cur.abs().max(f64::MIN_POSITIVE);
+                        prng.f64() < (-rel / self.temp.max(1e-12)).exp()
+                    } else {
+                        false // never trade feasible ground for infeasible
+                    };
+                    if accept {
+                        self.current = Some((v.clone(), *s));
+                    }
+                }
+            }
+        }
+        // One cooling step per observed generation (schedule depth =
+        // round count, not batch width), and only once the chain has
+        // feasible ground to learn from — a pre-feasibility random walk
+        // must not freeze the schedule before the real search begins.
+        if any_finite {
+            self.temp *= self.cooling;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exhaustive_enumerates_everything_once() {
+        let space = KnobSpace::tiny();
+        let mut s = Exhaustive::new();
+        let mut prng = Prng::new(1);
+        let mut all = Vec::new();
+        loop {
+            let batch = s.propose(&space, 5, &mut prng);
+            if batch.is_empty() {
+                break;
+            }
+            all.extend(batch);
+        }
+        assert_eq!(all.len() as u128, space.cardinality());
+        let set: std::collections::HashSet<_> = all.iter().cloned().collect();
+        assert_eq!(set.len(), all.len(), "no duplicates");
+    }
+
+    #[test]
+    fn random_is_deterministic_per_seed() {
+        let space = KnobSpace::paper();
+        let draw = |seed: u64| {
+            let mut prng = Prng::new(seed);
+            RandomSearch.propose(&space, 16, &mut prng)
+        };
+        assert_eq!(draw(7), draw(7));
+        assert_ne!(draw(7), draw(8));
+    }
+
+    #[test]
+    fn hill_climb_moves_only_downhill_and_restarts_when_stuck() {
+        let space = KnobSpace::tiny();
+        let mut s = HillClimb::new();
+        let mut prng = Prng::new(3);
+        // seed round
+        let seed = s.propose(&space, 8, &mut prng);
+        assert_eq!(seed.len(), 1);
+        s.observe(&[(seed[0].clone(), 10.0)], &mut prng);
+        // neighborhood round with an improving neighbor → move there
+        let hood = s.propose(&space, 8, &mut prng);
+        assert!(!hood.is_empty());
+        let results: Vec<(KnobVector, f64)> = hood
+            .iter()
+            .enumerate()
+            .map(|(i, v)| (v.clone(), if i == 0 { 5.0 } else { 20.0 }))
+            .collect();
+        s.observe(&results, &mut prng);
+        assert_eq!(s.current.as_ref().unwrap().1, 5.0);
+        // all-worse neighborhood → restart (current cleared)
+        let hood2 = s.propose(&space, 8, &mut prng);
+        let worse: Vec<(KnobVector, f64)> =
+            hood2.iter().map(|v| (v.clone(), 99.0)).collect();
+        s.observe(&worse, &mut prng);
+        assert!(s.current.is_none(), "stuck climber must restart");
+    }
+
+    #[test]
+    fn seeded_hill_climb_starts_at_the_pin() {
+        let space = KnobSpace::tiny();
+        let pin = space.vector_at(3);
+        let mut s = HillClimb::seeded(pin.clone());
+        let mut prng = Prng::new(9);
+        assert_eq!(s.propose(&space, 4, &mut prng), vec![pin]);
+    }
+
+    #[test]
+    fn annealing_always_takes_improvements_and_cools() {
+        let space = KnobSpace::tiny();
+        let mut s = Annealing::new();
+        let mut prng = Prng::new(5);
+        let seed = s.propose(&space, 4, &mut prng);
+        s.observe(&[(seed[0].clone(), 10.0)], &mut prng);
+        let t_after_one = s.temp;
+        assert!(t_after_one < s.t0);
+        let batch = s.propose(&space, 4, &mut prng);
+        let results: Vec<(KnobVector, f64)> =
+            batch.iter().map(|v| (v.clone(), 1.0)).collect();
+        s.observe(&results, &mut prng);
+        assert_eq!(s.current.as_ref().unwrap().1, 1.0);
+        // infeasible candidates are never adopted over a finite incumbent
+        s.observe(&[(space.vector_at(0), f64::INFINITY)], &mut prng);
+        assert_eq!(s.current.as_ref().unwrap().1, 1.0);
+    }
+
+    #[test]
+    fn annealing_escapes_infeasible_incumbents_without_cooling() {
+        let space = KnobSpace::tiny();
+        let mut s = Annealing::new();
+        let mut prng = Prng::new(5);
+        let seed = s.propose(&space, 4, &mut prng);
+        s.observe(&[(seed[0].clone(), f64::INFINITY)], &mut prng);
+        assert_eq!(s.temp, s.t0, "infeasible observations must not cool the schedule");
+        // infeasible incumbent: the chain keeps moving (even onto another
+        // infeasible point) rather than freezing in place
+        s.observe(&[(space.vector_at(1), f64::INFINITY)], &mut prng);
+        assert_eq!(s.current.as_ref().unwrap().0, space.vector_at(1));
+        assert_eq!(s.temp, s.t0);
+        // and hops onto the first feasible candidate unconditionally
+        s.observe(&[(space.vector_at(2), 7.0)], &mut prng);
+        assert_eq!(s.current.as_ref().unwrap().1, 7.0);
+        assert!(s.temp < s.t0, "feasible observations cool the schedule");
+    }
+}

@@ -10,13 +10,19 @@
 
 pub mod roofline;
 
-/// Calibration knobs with env-var overrides — the three constants the
-/// paper's Table-3 signs are most sensitive to. The defaults are the values
-/// calibrated against Table 2/3 (see EXPERIMENTS.md); the env overrides
+/// Calibration knobs — the three constants the paper's Table-3 signs are
+/// most sensitive to. The defaults are the values calibrated against
+/// Table 2/3 (see EXPERIMENTS.md); the env overrides
 /// (`XR_DSE_RET_UW_PER_KB`, `XR_DSE_WAKEUP_PJ_PER_B`,
-/// `XR_DSE_VGSOT_READ_MULT`) exist for sensitivity analysis
-/// (`examples/nvm_crossover.rs` sweeps them).
-#[derive(Debug, Clone, Copy)]
+/// `XR_DSE_VGSOT_READ_MULT`) exist for cross-process sensitivity analysis.
+///
+/// Knobs are an injectable *value*, not process-global state: macro-model
+/// construction threads a `Knobs` through (`MacroSpec::model_with`,
+/// `eval::Engine::with_knobs`), with the env-seeded [`knobs()`] as the
+/// default at every legacy entry point. In-process sensitivity sweeps
+/// (`examples/nvm_crossover.rs`) build engines with explicit knob values
+/// instead of mutating the environment between evaluations.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Knobs {
     /// SRAM retention-mode leakage at 7 nm, µW per KB.
     pub ret_uw_per_kb_7nm: f64,
@@ -26,6 +32,34 @@ pub struct Knobs {
     pub vgsot_read_mult: f64,
 }
 
+impl Knobs {
+    /// The Table-2/3-calibrated defaults (EXPERIMENTS.md), with no env
+    /// overrides applied.
+    pub const fn calibrated() -> Knobs {
+        Knobs {
+            ret_uw_per_kb_7nm: 0.008,
+            wakeup_pj_per_byte_7nm: 0.05,
+            vgsot_read_mult: 3.2,
+        }
+    }
+
+    /// Calibrated defaults with the `XR_DSE_*` env overrides applied.
+    pub fn from_env() -> Knobs {
+        let d = Knobs::calibrated();
+        Knobs {
+            ret_uw_per_kb_7nm: env_f64("XR_DSE_RET_UW_PER_KB", d.ret_uw_per_kb_7nm),
+            wakeup_pj_per_byte_7nm: env_f64("XR_DSE_WAKEUP_PJ_PER_B", d.wakeup_pj_per_byte_7nm),
+            vgsot_read_mult: env_f64("XR_DSE_VGSOT_READ_MULT", d.vgsot_read_mult),
+        }
+    }
+}
+
+impl Default for Knobs {
+    fn default() -> Knobs {
+        Knobs::calibrated()
+    }
+}
+
 fn env_f64(name: &str, default: f64) -> f64 {
     std::env::var(name)
         .ok()
@@ -33,15 +67,14 @@ fn env_f64(name: &str, default: f64) -> f64 {
         .unwrap_or(default)
 }
 
-/// Read-once calibration knobs.
+/// Env-seeded calibration knobs, re-read on every call. This used to be a
+/// `OnceLock` that froze the environment at first read — any model built
+/// before an env change silently pinned the old values for the rest of
+/// the process. The hot paths never pay for the re-read: `eval::Engine`
+/// captures one `Knobs` value at construction and threads it through
+/// every macro-model build.
 pub fn knobs() -> Knobs {
-    use std::sync::OnceLock;
-    static KNOBS: OnceLock<Knobs> = OnceLock::new();
-    *KNOBS.get_or_init(|| Knobs {
-        ret_uw_per_kb_7nm: env_f64("XR_DSE_RET_UW_PER_KB", 0.008),
-        wakeup_pj_per_byte_7nm: env_f64("XR_DSE_WAKEUP_PJ_PER_B", 0.05),
-        vgsot_read_mult: env_f64("XR_DSE_VGSOT_READ_MULT", 3.2),
-    })
+    Knobs::from_env()
 }
 
 /// Process nodes used in the study (Fig 2(f)). Baselines: 45 nm for the
@@ -185,6 +218,12 @@ pub struct DeviceParams {
 /// - Other nodes: scaled with [`node_scaling`] (energy) and ITRS-style
 ///   SRAM-cell scaling (SRAM cells scale *worse* than logic below 28 nm).
 pub fn device_params(device: Device, node: Node) -> DeviceParams {
+    device_params_with(device, node, &knobs())
+}
+
+/// [`device_params`] with an explicit knob value (the injectable form the
+/// evaluation engine threads through macro-model construction).
+pub fn device_params_with(device: Device, node: Node, knobs: &Knobs) -> DeviceParams {
     use Device::*;
     // SRAM anchors per node: (read/write pJ/bit, access ns, µm²/bit).
     // SRAM dynamic energy follows logic scaling; density saturates at
@@ -243,7 +282,7 @@ pub fn device_params(device: Device, node: Node) -> DeviceParams {
         VgsotMram => DeviceParams {
             device,
             node,
-            read_pj_bit: s_e * knobs().vgsot_read_mult,
+            read_pj_bit: s_e * knobs.vgsot_read_mult,
             write_pj_bit: s_e * 0.9,
             read_ns: s_lat * 2.0,
             write_ns: s_lat * 2.0,
@@ -343,6 +382,21 @@ mod tests {
     #[test]
     fn cpu_mac_carries_instruction_overhead() {
         assert!(mac_energy_pj(Node::N45, true) > 10.0 * mac_energy_pj(Node::N45, false));
+    }
+
+    #[test]
+    fn knobs_are_injectable_per_call() {
+        // Two calls with different knob values must see different device
+        // parameters — no process-global freeze.
+        let base = Knobs::calibrated();
+        let hot = Knobs { vgsot_read_mult: base.vgsot_read_mult * 2.0, ..base };
+        let r0 = device_params_with(Device::VgsotMram, Node::N7, &base).read_pj_bit;
+        let r1 = device_params_with(Device::VgsotMram, Node::N7, &hot).read_pj_bit;
+        assert!((r1 / r0 - 2.0).abs() < 1e-12, "r0={r0} r1={r1}");
+        // knob-independent parameters are untouched
+        let a0 = device_params_with(Device::SttMram, Node::N7, &base).read_pj_bit;
+        let a1 = device_params_with(Device::SttMram, Node::N7, &hot).read_pj_bit;
+        assert_eq!(a0.to_bits(), a1.to_bits());
     }
 
     #[test]

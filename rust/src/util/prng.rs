@@ -50,13 +50,18 @@ impl Prng {
     }
 
     /// Uniform integer in [lo, hi) — rejection-free Lemire reduction.
+    /// Panics on an empty range (`hi <= lo`): search strategies feed these
+    /// from user-supplied knob spaces, so the failure must name itself.
     pub fn range_u64(&mut self, lo: u64, hi: u64) -> u64 {
-        assert!(hi > lo, "empty range");
+        assert!(hi > lo, "Prng::range_u64: empty range [{lo}, {hi})");
         let span = hi - lo;
         lo + ((self.next_u64() as u128 * span as u128) >> 64) as u64
     }
 
+    /// Uniform integer in [lo, hi); panics with a clear message on an
+    /// empty range (see [`Prng::range_u64`]).
     pub fn range_usize(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi > lo, "Prng::range_usize: empty range [{lo}, {hi})");
         self.range_u64(lo as u64, hi as u64) as usize
     }
 
@@ -78,7 +83,8 @@ impl Prng {
         -self.f64().max(1e-300).ln() / rate
     }
 
-    /// Fisher–Yates shuffle.
+    /// Fisher–Yates shuffle. Degenerate slices (empty or single-element)
+    /// are a no-op by construction — the internal ranges are never empty.
     pub fn shuffle<T>(&mut self, items: &mut [T]) {
         for i in (1..items.len()).rev() {
             let j = self.range_usize(0, i + 1);
@@ -86,7 +92,10 @@ impl Prng {
         }
     }
 
+    /// Uniform pick; panics with a clear message on an empty slice rather
+    /// than an opaque index-out-of-bounds from the range reduction.
     pub fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        assert!(!items.is_empty(), "Prng::pick on an empty slice");
         &items[self.range_usize(0, items.len())]
     }
 }
@@ -154,6 +163,34 @@ mod tests {
         let n = 20_000;
         let mean = (0..n).map(|_| p.exp(rate)).sum::<f64>() / n as f64;
         assert!((mean - 1.0 / rate).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    #[should_panic(expected = "Prng::range_usize: empty range [5, 5)")]
+    fn empty_usize_range_names_itself() {
+        Prng::new(1).range_usize(5, 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "Prng::range_u64: empty range [9, 3)")]
+    fn inverted_u64_range_names_itself() {
+        Prng::new(1).range_u64(9, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "Prng::pick on an empty slice")]
+    fn pick_from_empty_slice_names_itself() {
+        Prng::new(1).pick::<u8>(&[]);
+    }
+
+    #[test]
+    fn shuffle_of_degenerate_slices_is_noop() {
+        let mut p = Prng::new(5);
+        let mut empty: [u8; 0] = [];
+        p.shuffle(&mut empty);
+        let mut one = [7u8];
+        p.shuffle(&mut one);
+        assert_eq!(one, [7]);
     }
 
     #[test]

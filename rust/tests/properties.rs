@@ -4,6 +4,7 @@
 
 use xr_edge_dse::arch::{cpu, eyeriss, simba, Arch, MemFlavor, PeConfig};
 use xr_edge_dse::mapping::map_network;
+use xr_edge_dse::mem::MacroSpec;
 use xr_edge_dse::power::{crossover_ips, power_model};
 use xr_edge_dse::tech::{Device, Node};
 use xr_edge_dse::testkit::{check, Gen};
@@ -150,6 +151,57 @@ fn prop_quant_roundtrip_error_bounded() {
             let err = (qp.fake_quant(x, 0, 255) - x).abs();
             assert!(err <= qp.scale * 0.5 + 1e-5);
         }
+    });
+}
+
+/// Random macro spec at a random operating point.
+fn random_macro(g: &mut Gen) -> MacroSpec {
+    MacroSpec {
+        capacity_bytes: g.usize_in(1, 4096) * 512,
+        bus_bits: g.choose(&[8usize, 16, 24, 32, 64, 128]),
+        device: g.choose(&[Device::Sram, Device::SttMram, Device::SotMram, Device::VgsotMram]),
+        node: g.choose(&[Node::N45, Node::N40, Node::N28, Node::N22, Node::N7]),
+        count: g.usize_in(1, 64),
+    }
+}
+
+#[test]
+fn prop_macro_model_monotone_in_capacity() {
+    // The CACTI-lite invariant the search-space validator (and the
+    // "right-size the global buffers" result) relies on: at fixed
+    // bus/device/node, growing a macro never makes any per-access cost or
+    // the area smaller.
+    check("macro model monotone in capacity", 150, |g| {
+        let base = random_macro(g);
+        let mut bigger = base;
+        bigger.capacity_bytes = base.capacity_bytes * g.usize_in(2, 16);
+        let (a, b) = (base.model(), bigger.model());
+        let tag = format!("{:?}@{:?} {}→{} B", base.device, base.node, base.capacity_bytes, bigger.capacity_bytes);
+        assert!(b.read_pj >= a.read_pj, "{tag}: read energy shrank");
+        assert!(b.write_pj >= a.write_pj, "{tag}: write energy shrank");
+        assert!(b.read_ns >= a.read_ns, "{tag}: read latency shrank");
+        assert!(b.write_ns >= a.write_ns, "{tag}: write latency shrank");
+        assert!(b.area_um2 >= a.area_um2, "{tag}: area shrank");
+        assert!(b.standby_uw >= a.standby_uw, "{tag}: standby shrank");
+    });
+}
+
+#[test]
+fn prop_macro_standby_nonnegative_and_nvm_exactly_zero() {
+    // Power-gating semantics: SRAM retains (standby > 0, scaling with
+    // capacity), NVM macros gate to exactly 0 and charge wakeup instead.
+    check("macro standby sign", 150, |g| {
+        let spec = random_macro(g);
+        let m = spec.model();
+        assert!(m.standby_uw >= 0.0, "{spec:?}");
+        assert!(m.standby_uw.is_finite() && m.area_um2.is_finite());
+        if spec.device.is_nvm() {
+            assert_eq!(m.standby_uw, 0.0, "NVM must gate to exactly zero: {spec:?}");
+            assert!(m.wakeup_pj() > 0.0, "NVM wakeup must cost energy: {spec:?}");
+        } else {
+            assert!(m.standby_uw > 0.0, "SRAM retention must cost power: {spec:?}");
+        }
+        assert!(m.total_standby_uw() >= m.standby_uw * (spec.count as f64) * (1.0 - 1e-12));
     });
 }
 
