@@ -1,0 +1,148 @@
+#!/usr/bin/env python3
+"""CI bench-regression harness (stdlib only).
+
+Merges the per-binary JSON records the rust benches emit (via
+``XR_DSE_BENCH_JSON=<path> cargo bench --bench <name>``) into one
+``BENCH_5.json`` trajectory file, then gates the measured wall times
+against the checked-in ``benches/baseline.json``:
+
+- a bench whose measured ``mean_s`` exceeds ``baseline * (1 + tolerance)``
+  is a **regression** → exit 1;
+- a baseline bench missing from the results is **lost coverage** → exit 1;
+- a bench more than ``tolerance`` *faster* than baseline is reported as a
+  stale-baseline warning (never fails — machine variance only hurts one
+  way);
+- benches present in the results but absent from the baseline are listed
+  as unbaselined (they start being gated once added to baseline.json).
+
+Refreshing the baseline: download a green run's ``BENCH_5.json`` artifact
+(or produce one locally with the same pinned ``XR_DSE_THREADS``) and run
+``python3 ci/bench_regression.py --refresh BENCH_5.json`` to rewrite
+``benches/baseline.json`` from it. See DESIGN.md §CI bench-regression.
+"""
+
+import argparse
+import json
+import sys
+
+
+def load_records(paths):
+    """Merge the `benches` arrays of the input files, in input order."""
+    merged = []
+    for path in paths:
+        with open(path) as f:
+            doc = json.load(f)
+        benches = doc.get("benches", [])
+        if not benches:
+            print(f"error: {path} contains no bench records", file=sys.stderr)
+            sys.exit(1)
+        merged.extend(benches)
+    return merged
+
+
+def write_trajectory(out_path, records):
+    doc = {
+        "schema": "xr-edge-dse bench trajectory v1",
+        "benches": records,
+    }
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {out_path} ({len(records)} benches)")
+
+
+def compare(records, baseline_path):
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    tolerance = float(baseline.get("tolerance", 0.25))
+    expected = baseline.get("benches", {})
+    measured = {r["name"]: r for r in records}
+
+    regressions, missing, stale, unbaselined = [], [], [], []
+    width = max((len(n) for n in set(expected) | set(measured)), default=4)
+    print(f"\nbench gate (tolerance ±{tolerance:.0%} vs {baseline_path}):")
+    for name, base in sorted(expected.items()):
+        base_mean = float(base["mean_s"])
+        rec = measured.get(name)
+        if rec is None:
+            missing.append(name)
+            print(f"  {name:<{width}}  MISSING (baseline {base_mean:.4f}s)")
+            continue
+        mean = float(rec["mean_s"])
+        ratio = mean / base_mean if base_mean > 0 else float("inf")
+        ups = rec.get("units_per_s")
+        thru = f"  {ups:,.0f} units/s" if ups else ""
+        verdict = "ok"
+        if ratio > 1.0 + tolerance:
+            verdict = "REGRESSION"
+            regressions.append((name, mean, base_mean))
+        elif ratio < 1.0 - tolerance:
+            verdict = "faster-than-baseline (stale?)"
+            stale.append(name)
+        print(
+            f"  {name:<{width}}  {mean:.4f}s vs {base_mean:.4f}s "
+            f"({ratio:.0%} of baseline)  {verdict}{thru}"
+        )
+    for name in sorted(set(measured) - set(expected)):
+        unbaselined.append(name)
+        print(f"  {name:<{width}}  {measured[name]['mean_s']:.4f}s  (not in baseline)")
+
+    if stale:
+        print(f"note: {len(stale)} bench(es) far below baseline — consider refreshing it")
+    if unbaselined:
+        print(f"note: {len(unbaselined)} bench(es) not gated yet — add them to the baseline")
+    if missing:
+        print(f"FAIL: {len(missing)} baseline bench(es) missing from the results", file=sys.stderr)
+    for name, mean, base_mean in regressions:
+        print(
+            f"FAIL: {name} regressed: {mean:.4f}s vs baseline {base_mean:.4f}s "
+            f"(+{(mean / base_mean - 1.0):.0%}, tolerance {tolerance:.0%})",
+            file=sys.stderr,
+        )
+    return not (regressions or missing)
+
+
+def refresh(baseline_path, trajectory_path, tolerance):
+    with open(trajectory_path) as f:
+        doc = json.load(f)
+    benches = {
+        r["name"]: {"mean_s": r["mean_s"]}
+        for r in doc.get("benches", [])
+        # only gate the model-evaluation benches; artifact-dependent ones
+        # (PJRT, workload-JSON parse) are machine-local extras
+        if not r["name"].startswith(("L3c", "util"))
+    }
+    out = {"tolerance": tolerance, "benches": benches}
+    with open(baseline_path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"rewrote {baseline_path} from {trajectory_path} ({len(benches)} benches)")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("inputs", nargs="*", help="per-binary bench JSON files to merge")
+    ap.add_argument("--out", default="BENCH_5.json", help="merged trajectory output")
+    ap.add_argument("--baseline", default="benches/baseline.json")
+    ap.add_argument("--tolerance", type=float, default=0.25, help="used with --refresh")
+    ap.add_argument(
+        "--refresh",
+        metavar="TRAJECTORY",
+        help="rewrite --baseline from an existing trajectory file and exit",
+    )
+    args = ap.parse_args()
+
+    if args.refresh:
+        refresh(args.baseline, args.refresh, args.tolerance)
+        return
+
+    if not args.inputs:
+        ap.error("no input bench JSON files given")
+    records = load_records(args.inputs)
+    write_trajectory(args.out, records)
+    if not compare(records, args.baseline):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,158 @@
+//! **Mixed-precision workload modeling demo** — the bit-width axis end to
+//! end, offline and deterministic (CI runs this; it doubles as the ISSUE-5
+//! acceptance gate):
+//!
+//! 1. *Identity*: an explicit INT8 [`PrecisionPolicy`] reproduces the
+//!    default evaluation **bitwise** (every precision effect is a
+//!    multiplication by `bits / datum_bits`, exactly 1.0 at INT8).
+//! 2. *Query axis*: one query sweeps DetNet on Simba-v2 @7 nm across
+//!    INT4 / INT8 / FP16 plus a hand-mixed per-layer schedule; energy,
+//!    memory power and the quantized weight footprint are monotone
+//!    nonincreasing in bit-width.
+//! 3. *Search*: `xr-edge-dse search`-equivalent guided search over
+//!    [`KnobSpace::paper_mixed_precision`] (the `--mixed-precision` CLI
+//!    space) at 7 nm / ≥10 IPS, hill-climbing from the INT8 paper point —
+//!    the best design found must be genuinely mixed-precision (non-INT8
+//!    bits) and **strictly beat the best all-INT8 fixed-grid point** on
+//!    energy per inference.
+//!
+//! Run: `cargo run --release --example mixed_precision`
+
+use xr_edge_dse::arch::{self, MemFlavor, PeConfig};
+use xr_edge_dse::dse::paper_sweeper;
+use xr_edge_dse::eval::{Assignments, Devices, Engine, Query};
+use xr_edge_dse::search::{
+    ArchSynth, Constraints, Family, HillClimb, KnobSpace, Objective, SearchConfig, SearchReport,
+    Strategy,
+};
+use xr_edge_dse::tech::{Device, Node};
+use xr_edge_dse::workload::{builtin, LayerBits, PrecisionPolicy};
+
+fn main() -> anyhow::Result<()> {
+    // ---- act 1: INT8 is the identity, bitwise ---------------------------
+    let default_pt = paper_sweeper()?
+        .point("simba_v2", "detnet", Node::N7, MemFlavor::P1, Device::VgsotMram)
+        .expect("paper grid point");
+    let int8_engine = Engine::new(
+        vec![arch::simba(PeConfig::V2)],
+        vec![builtin::by_name("detnet")?.with_precision(PrecisionPolicy::int8())],
+    );
+    let explicit_pt = int8_engine
+        .point("simba_v2", "detnet", Node::N7, MemFlavor::P1, Device::VgsotMram)
+        .expect("explicit-policy point");
+    anyhow::ensure!(
+        default_pt.energy.total_pj().to_bits() == explicit_pt.energy.total_pj().to_bits()
+            && default_pt.latency_ns.to_bits() == explicit_pt.latency_ns.to_bits()
+            && default_pt.p_mem_uw(10.0).to_bits() == explicit_pt.p_mem_uw(10.0).to_bits(),
+        "explicit INT8 policy diverged from the default path"
+    );
+    println!(
+        "INT8 identity holds bitwise: simba_v2/P1@7nm = {:.2} µJ/inf either way ✓",
+        default_pt.energy.total_pj() * 1e-6
+    );
+
+    // ---- act 2: the precision axis of the query surface -----------------
+    let det = builtin::by_name("detnet")?;
+    // Hand-mixed schedule: keep the stem at 8 bits, quantize everything
+    // else to 4 (a classic accuracy-preserving XR-NPE-style split).
+    let mut mixed = PrecisionPolicy::uniform("mixed", 4);
+    if let Some(first) = det.layers.first() {
+        mixed = mixed.with_layer(&first.name, LayerBits::INT8);
+    }
+    let engine = Engine::new(vec![arch::simba(PeConfig::V2)], vec![det.clone()]);
+    let policies = [
+        PrecisionPolicy::int4(),
+        mixed,
+        PrecisionPolicy::int8(),
+        PrecisionPolicy::fp16(),
+    ];
+    let pts = Query::over(&engine)
+        .nodes(&[Node::N7])
+        .devices(Devices::Fixed(Device::VgsotMram))
+        .assignments(Assignments::Flavors(vec![MemFlavor::P1]))
+        .precisions(&policies)
+        .points();
+    anyhow::ensure!(pts.len() == policies.len(), "one point per policy");
+    println!("\nDetNet on simba_v2 @7nm P1 (VGSOT), by precision policy:");
+    for p in &pts {
+        let qnet = det.clone().with_precision(
+            policies.iter().find(|q| q.name() == p.precision).unwrap().clone(),
+        );
+        println!(
+            "  {:<6} energy {:>8.2} µJ/inf   P_mem@10IPS {:>9.2} µW   weights {:>7} B   peak act {:>7} B",
+            p.precision,
+            p.energy.total_pj() * 1e-6,
+            p.p_mem_uw(10.0),
+            qnet.quantized_weight_bytes(),
+            qnet.quantized_peak_activation_bytes()
+        );
+    }
+    // monotone: int4 ≤ mixed ≤ int8 ≤ fp16 on energy
+    for pair in pts.windows(2) {
+        anyhow::ensure!(
+            pair[0].energy.total_pj() <= pair[1].energy.total_pj(),
+            "energy must be monotone nonincreasing in bit-width ({} vs {})",
+            pair[0].precision,
+            pair[1].precision
+        );
+    }
+    println!("monotone in bit-width (energy): int4 ≤ mixed ≤ int8 ≤ fp16 ✓");
+
+    // ---- act 3: mixed-precision guided search ---------------------------
+    // The ISSUE-5 acceptance gate: with the bit-width knobs enabled (the
+    // `--mixed-precision` space), the search must find a feasible design
+    // at 7 nm / ≥10 IPS that is mixed-precision and strictly beats the
+    // best all-INT8 fixed-grid paper point on energy.
+    let mut space = KnobSpace::paper_mixed_precision();
+    space.nodes = vec![Node::N7];
+    let synth = ArchSynth::new(space, det)?;
+    let cfg = SearchConfig {
+        objective: Objective::Energy,
+        constraints: Constraints::at_ips(10.0),
+        budget: 600,
+        batch: 32,
+        seed: 42,
+    };
+    let seed_vec = synth
+        .space
+        .paper_vector(
+            Family::WeightStationary,
+            PeConfig::V2,
+            MemFlavor::SramOnly,
+            Node::N7,
+            Device::VgsotMram,
+        )
+        .expect("INT8 paper point lives in the mixed space");
+    let strategies: Vec<Box<dyn Strategy>> = vec![Box::new(HillClimb::seeded(seed_vec))];
+    let report = SearchReport::run(&synth, &cfg, strategies);
+    print!("\n{}", report.table().render());
+
+    let (base_label, base_scalar, _) =
+        report.baseline.as_ref().expect("the 7nm paper grid has feasible INT8 points");
+    let (_, best) = report.best_overall().expect("search found a feasible design");
+    anyhow::ensure!(
+        best.scalar < *base_scalar,
+        "search did not beat the all-INT8 grid: {} vs {base_scalar}",
+        best.scalar
+    );
+    anyhow::ensure!(
+        (best.w_bits, best.a_bits) != (8, 8),
+        "best design must be mixed-precision, got w{}a{}",
+        best.w_bits,
+        best.a_bits
+    );
+    println!(
+        "mixed-precision search beat the all-INT8 grid: {} {} {} — {:.2} µJ/inf vs {:.2} µJ/inf \
+         for {} ({:.1}% less); knobs {} replay with seed {}",
+        best.arch,
+        best.assign,
+        best.precision_label(),
+        best.scalar * 1e-6,
+        base_scalar * 1e-6,
+        base_label,
+        (1.0 - best.scalar / base_scalar) * 100.0,
+        best.vector_key(),
+        cfg.seed
+    );
+    Ok(())
+}

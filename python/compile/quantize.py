@@ -16,32 +16,38 @@ from . import model as M
 from .kernels.ref import fake_quant_ref
 
 
-def quantize_weights(params: dict) -> tuple[dict, dict]:
-    """Symmetric per-tensor INT8 fake-quant of every weight tensor.
+def quantize_weights(params: dict, bits: int = 8) -> tuple[dict, dict]:
+    """Symmetric per-tensor fake-quant of every weight tensor on a
+    ``bits``-wide grid (INT8 by default — the TensorRT recipe).
     Returns (quantized params, {layer: scale})."""
+    qmax = (1 << (bits - 1)) - 1
     out = {}
     scales = {}
     for name, p in params.items():
         absmax = float(jnp.max(jnp.abs(p["w"])))
-        scale = max(absmax / 127.0, 1e-12)
-        wq = fake_quant_ref(p["w"], scale, 0, -127, 127)
+        scale = max(absmax / qmax, 1e-12)
+        wq = fake_quant_ref(p["w"], scale, 0, -qmax, qmax)
         out[name] = {"w": wq, "b": p["b"]}  # biases stay FP32 (TensorRT)
         scales[name] = scale
     return out, scales
 
 
-def calibrate_input(frames: np.ndarray) -> tuple[float, int]:
-    """Asymmetric UINT8 activation calibration over a batch of frames."""
+def calibrate_input(frames: np.ndarray, bits: int = 8) -> tuple[float, int]:
+    """Asymmetric unsigned activation calibration over a batch of frames.
+    The grid and the zero-point clamp derive from the same ``bits``
+    (mirrors ``rust/src/quant::QParams::calibrate_bits``)."""
+    qmax = (1 << bits) - 1
     lo = min(float(frames.min()), 0.0)
     hi = max(float(frames.max()), 0.0)
-    scale = max((hi - lo) / 255.0, 1e-12)
-    zero = int(round(-lo / scale))
+    scale = max((hi - lo) / qmax, 1e-12)
+    zero = min(max(int(round(-lo / scale)), 0), qmax)
     return scale, zero
 
 
-def quantize_input(frames, scale, zero):
+def quantize_input(frames, scale, zero, bits: int = 8):
+    qmax = (1 << bits) - 1
     q = jnp.round(frames / scale) + zero
-    return (jnp.clip(q, 0, 255) - zero) * scale
+    return (jnp.clip(q, 0, qmax) - zero) * scale
 
 
 def weight_histogram(params: dict, bins: int = 101):

@@ -12,15 +12,17 @@ use xr_edge_dse::arch::{simba, MemFlavor, PeConfig};
 use xr_edge_dse::dse::{fig3d_grid, paper_sweeper, DesignSpace};
 use xr_edge_dse::mapping::map_network;
 use xr_edge_dse::tech::{paper_mram_for, Node};
-use xr_edge_dse::util::benchkit::{bench, figure_header};
+use xr_edge_dse::util::benchkit::{bench, bench_units, figure_header, write_json_if_requested};
 use xr_edge_dse::workload::builtin;
 
 fn main() -> anyhow::Result<()> {
     figure_header("§Perf — hot-path benches", "see EXPERIMENTS.md §Perf for the iteration log");
 
     // L3a: full grid (includes mapper, energy, power, area per point).
+    // 36 design points per iteration → the regression harness tracks
+    // design-points/sec alongside the wall time.
     let s = paper_sweeper()?;
-    let (grid_mean, _, _) = bench("L3a fig3d 36-point DSE grid", 3, 30, || {
+    let (grid_mean, _, _) = bench_units("L3a fig3d 36-point DSE grid", 3, 30, 36.0, || {
         std::hint::black_box(fig3d_grid(&s));
     });
     assert!(grid_mean < 0.1, "DSE grid must stay interactive (<100 ms), got {grid_mean}s");
@@ -31,12 +33,14 @@ fn main() -> anyhow::Result<()> {
     {
         let space = DesignSpace::new(&[Node::N28, Node::N7], &MemFlavor::ALL);
         let engine = s.engine();
-        let (seq_mean, _, _) = bench("L3a' fig3d grid sequential (engine)", 3, 30, || {
-            std::hint::black_box(engine.grid_seq(&space, paper_mram_for));
-        });
-        let (par_mean, _, _) = bench("L3a' fig3d grid parallel   (engine)", 3, 30, || {
-            std::hint::black_box(engine.grid(&space, paper_mram_for));
-        });
+        let (seq_mean, _, _) =
+            bench_units("L3a' fig3d grid sequential (engine)", 3, 30, 36.0, || {
+                std::hint::black_box(engine.grid_seq(&space, paper_mram_for));
+            });
+        let (par_mean, _, _) =
+            bench_units("L3a' fig3d grid parallel   (engine)", 3, 30, 36.0, || {
+                std::hint::black_box(engine.grid(&space, paper_mram_for));
+            });
         println!(
             "engine speedup (seq/par): {:.2}× over {} points ({} workers available)",
             seq_mean / par_mean,
@@ -53,11 +57,12 @@ fn main() -> anyhow::Result<()> {
         // L3a'': the query surface over the same space — its batching /
         // staging layer must be ~free relative to raw engine grids.
         use xr_edge_dse::dse::Query;
-        let (query_mean, _, _) = bench("L3a'' fig3d grid via Query   (engine)", 3, 30, || {
-            std::hint::black_box(
-                Query::over(engine).nodes(&[Node::N28, Node::N7]).points(),
-            );
-        });
+        let (query_mean, _, _) =
+            bench_units("L3a'' fig3d grid via Query   (engine)", 3, 30, 36.0, || {
+                std::hint::black_box(
+                    Query::over(engine).nodes(&[Node::N28, Node::N7]).points(),
+                );
+            });
         assert!(
             query_mean < par_mean * 3.0 + 0.01,
             "query overhead unreasonable: {query_mean}s vs {par_mean}s"
@@ -83,6 +88,7 @@ fn main() -> anyhow::Result<()> {
         let streaming = NetworkMap {
             arch: arch.name.clone(),
             network: det.name.clone(),
+            precision: det.precision.clone(),
             per_layer: det.layers.iter().map(|l| map_layer(&arch, l)).collect::<Vec<LayerMap>>(),
         };
         let node = xr_edge_dse::tech::Node::N7;
@@ -129,5 +135,9 @@ fn main() -> anyhow::Result<()> {
     } else {
         println!("artifacts/detnet.hlo.txt missing — run `make artifacts` for the L3c bench");
     }
+
+    // CI bench-regression hook: dump the records when XR_DSE_BENCH_JSON
+    // names a path (no-op otherwise).
+    write_json_if_requested()?;
     Ok(())
 }

@@ -12,7 +12,7 @@ use xr_edge_dse::search::{
     Objective, RandomSearch, SearchConfig, Strategy,
 };
 use xr_edge_dse::tech::{Device, Node};
-use xr_edge_dse::util::benchkit::{bench, figure_header};
+use xr_edge_dse::util::benchkit::{bench_units, figure_header, write_json_if_requested};
 use xr_edge_dse::workload::builtin;
 
 fn main() -> anyhow::Result<()> {
@@ -33,11 +33,14 @@ fn main() -> anyhow::Result<()> {
     };
 
     // S1: loop throughput — evaluations per second through one budgeted
-    // random search (synthesis + mapping + parallel evaluation included).
-    let (mean_s, _, _) = bench("S1 random search, 64-eval budget", 1, 5, || {
-        let r = run_search(&synth, &mut RandomSearch, &cfg);
-        std::hint::black_box(r.evaluations);
-    });
+    // random search (synthesis + mapping + parallel evaluation included);
+    // 64 evaluations per iteration is the units/s the regression harness
+    // tracks.
+    let (mean_s, _, _) =
+        bench_units("S1 random search, 64-eval budget", 1, 5, cfg.budget as f64, || {
+            let r = run_search(&synth, &mut RandomSearch, &cfg);
+            std::hint::black_box(r.evaluations);
+        });
     println!("S1 throughput: {:.0} evaluations/s", cfg.budget as f64 / mean_s.max(1e-9));
 
     // S2: best-found per strategy at equal budget, vs the paper grid.
@@ -72,5 +75,9 @@ fn main() -> anyhow::Result<()> {
             None => println!("S2 {label:<26} found nothing feasible in budget"),
         }
     }
+
+    // CI bench-regression hook: dump the records when XR_DSE_BENCH_JSON
+    // names a path (no-op otherwise).
+    write_json_if_requested()?;
     Ok(())
 }

@@ -29,7 +29,7 @@ use super::sensor::{Arrival, Frame, Sensor};
 use super::{Backend, Coordinator, StreamConfig};
 
 /// One stream of a scenario: (model, sensor rate, queue policy, memory
-/// flavor).
+/// flavor, precision).
 #[derive(Debug, Clone)]
 pub struct StreamSpec {
     pub name: String,
@@ -40,6 +40,11 @@ pub struct StreamSpec {
     /// Memory flavor of the modeled accelerator variant this stream's
     /// ledger charges.
     pub flavor: MemFlavor,
+    /// Precision policy the stream's modeled workload runs at (INT8 by
+    /// default — the identity). Streams of the same model may declare
+    /// different policies; each stream's power variant is evaluated under
+    /// its own.
+    pub precision: workload::PrecisionPolicy,
     /// Sensor PRNG seed (frames and Poisson schedules are deterministic
     /// per seed).
     pub seed: u64,
@@ -55,9 +60,17 @@ impl StreamSpec {
             arrival,
             queue_depth: 4,
             flavor,
+            precision: workload::PrecisionPolicy::int8(),
             seed: 42,
             exec_floor_s: 0.0,
         }
+    }
+
+    /// Declare the stream's precision policy (returns `self` for
+    /// preset-style chaining).
+    pub fn with_precision(mut self, precision: workload::PrecisionPolicy) -> StreamSpec {
+        self.precision = precision;
+        self
     }
 }
 
@@ -172,20 +185,31 @@ impl Scenario {
         anyhow::ensure!(self.time_scale > 0.0, "time_scale must be positive");
         anyhow::ensure!(self.seconds > 0.0, "seconds must be positive");
 
-        // One engine over the scenario's distinct workloads; every
-        // stream's PowerModel is a query against it (the same evaluation
-        // path as every figure/table).
-        let mut nets: Vec<workload::Network> = Vec::new();
+        // One engine per distinct (workload, precision) pair; every
+        // stream's PowerModel is a query against its pair's engine (the
+        // same evaluation path as every figure/table — streams of one
+        // model may serve at different precisions).
+        let mut engines: Vec<(String, workload::PrecisionPolicy, Engine)> = Vec::new();
         for s in &self.streams {
-            if !nets.iter().any(|n| n.name == s.model) {
-                nets.push(workload::builtin::by_name(&s.model)?);
+            if !engines.iter().any(|(m, p, _)| *m == s.model && *p == s.precision) {
+                let net = workload::builtin::by_name(&s.model)?
+                    .with_precision(s.precision.clone());
+                engines.push((
+                    s.model.clone(),
+                    s.precision.clone(),
+                    Engine::new(vec![self.arch.clone()], vec![net]),
+                ));
             }
         }
-        let engine = Engine::new(vec![self.arch.clone()], nets);
         let mut cfgs = Vec::with_capacity(self.streams.len());
         let mut powers = Vec::with_capacity(self.streams.len());
         for s in &self.streams {
-            let point = Query::over(&engine)
+            let engine = engines
+                .iter()
+                .find(|(m, p, _)| *m == s.model && *p == s.precision)
+                .map(|(_, _, e)| e)
+                .expect("engine built for every (model, precision) pair");
+            let point = Query::over(engine)
                 .nets(&[s.model.as_str()])
                 .nodes(&[self.node])
                 .devices(Devices::Fixed(self.mram))
@@ -257,6 +281,7 @@ impl Scenario {
                 name: spec.name.clone(),
                 model: spec.model.clone(),
                 flavor: spec.flavor,
+                precision: spec.precision.name().to_string(),
                 rate: spec.arrival.rate(),
                 submitted: *sub,
                 served: outcome.served,
@@ -301,6 +326,8 @@ pub struct StreamReport {
     pub name: String,
     pub model: String,
     pub flavor: MemFlavor,
+    /// Label of the stream's precision policy ("int8" unless declared).
+    pub precision: String,
     /// Configured mean arrival rate, frames/s.
     pub rate: f64,
     pub submitted: u64,
@@ -381,8 +408,8 @@ impl ScenarioReport {
                 if self.synthetic { "synthetic" } else { "pjrt" }
             ),
             &[
-                "stream", "model", "flavor", "rate", "served", "dropped", "e2e p50", "e2e p99",
-                "IPS obs", "P_mem ledger", "P_mem closed", "Δ",
+                "stream", "model", "flavor", "prec", "rate", "served", "dropped", "e2e p50",
+                "e2e p99", "IPS obs", "P_mem ledger", "P_mem closed", "Δ",
             ],
         );
         for s in &self.streams {
@@ -390,6 +417,7 @@ impl ScenarioReport {
                 s.name.clone(),
                 s.model.clone(),
                 s.flavor.label().into(),
+                s.precision.clone(),
                 format!("{}", s.rate),
                 format!("{}", s.served),
                 format!("{}", s.dropped),
@@ -407,9 +435,9 @@ impl ScenarioReport {
     /// One CSV row per stream (figure-ready).
     pub fn to_csv(&self) -> Csv {
         let mut c = Csv::new(&[
-            "scenario", "stream", "model", "flavor", "rate", "submitted", "served", "dropped",
-            "e2e_p50_s", "e2e_p99_s", "observed_ips", "ledger_uw", "closed_form_uw", "rel_err",
-            "energy_pj", "wakeups", "feasible",
+            "scenario", "stream", "model", "flavor", "precision", "rate", "submitted", "served",
+            "dropped", "e2e_p50_s", "e2e_p99_s", "observed_ips", "ledger_uw", "closed_form_uw",
+            "rel_err", "energy_pj", "wakeups", "feasible",
         ]);
         for s in &self.streams {
             c.row(vec![
@@ -417,6 +445,7 @@ impl ScenarioReport {
                 s.name.clone(),
                 s.model.clone(),
                 s.flavor.label().into(),
+                s.precision.clone(),
                 format!("{}", s.rate),
                 format!("{}", s.submitted),
                 format!("{}", s.served),

@@ -173,7 +173,11 @@ impl<'a> EvalContext<'a> {
         let mac_pj = mac_energy_pj(node, arch.cpu_style);
         let mut compute_pj = 0.0;
         for lm in &map.per_layer {
-            compute_pj += lm.macs * mac_pj + lm.alu_ops * mac_pj * ALU_FRACTION;
+            // Per-layer operand-width scaling from the precision policy
+            // the map was lowered at (both scales are exactly 1.0 at INT8,
+            // so the INT8 policy reproduces the historical sum bitwise).
+            compute_pj += lm.macs * mac_pj * lm.mac_scale
+                + lm.alu_ops * mac_pj * ALU_FRACTION * lm.alu_scale;
         }
 
         let totals = map.level_totals();

@@ -38,8 +38,10 @@
 
 use crate::arch::{Arch, MemFlavor};
 use crate::dse::pareto::{objectives, ParetoArchive};
+use crate::mapping::map_network;
 use crate::report::{Csv, Table};
 use crate::tech::{paper_mram_for, Device, Node};
+use crate::workload::PrecisionPolicy;
 
 use super::space::{AssignSpec, Coord};
 use super::{DesignPoint, DeviceAssignment, Engine};
@@ -120,6 +122,7 @@ pub struct Query<'e> {
     nodes: Vec<Node>,
     devices: Devices,
     assignments: Assignments,
+    precisions: Option<Vec<PrecisionPolicy>>,
     baseline: Option<BaselineFn<'e>>,
     feasible_ips: Option<f64>,
     pareto_ips: Option<f64>,
@@ -138,6 +141,7 @@ impl<'e> Query<'e> {
             nodes: Node::ALL.to_vec(),
             devices: Devices::PaperPick,
             assignments: Assignments::Flavors(MemFlavor::ALL.to_vec()),
+            precisions: None,
             baseline: None,
             feasible_ips: None,
             pareto_ips: None,
@@ -177,6 +181,18 @@ impl<'e> Query<'e> {
     /// hybrid lattice).
     pub fn assignments(mut self, assignments: Assignments) -> Self {
         self.assignments = assignments;
+        self
+    }
+
+    /// The precision axis: evaluate every selected (arch × net) pair under
+    /// each listed [`PrecisionPolicy`] (each pair is re-lowered through
+    /// the mapper once per policy, entry-major / policy-minor, between the
+    /// net and node axes). The [`PrecisionPolicy::int8`] coordinate is
+    /// bitwise-identical to the default axis-free query. Requires an
+    /// engine whose entries remember their workloads ([`Engine::new`]);
+    /// an empty list clears the axis.
+    pub fn precisions(mut self, policies: &[PrecisionPolicy]) -> Self {
+        self.precisions = if policies.is_empty() { None } else { Some(policies.to_vec()) };
         self
     }
 
@@ -250,41 +266,80 @@ impl<'e> Query<'e> {
             Devices::PaperPick | Devices::Fixed(_) => 1,
             Devices::Each(v) => v.len(),
         };
+        let npol = self.precisions.as_ref().map_or(1, Vec::len);
         self.selected_entries()
             .iter()
             .map(|&e| {
                 self.nodes.len() * devs * self.specs_for(&self.engine.entries()[e].arch).len()
             })
-            .sum()
+            .sum::<usize>()
+            * npol
     }
 
-    /// Coordinate groups sharing one (entry, node, device) — the baseline
-    /// scope — in canonical order. [`Query::coords`] is the flattened form
-    /// and `run` batches whole groups, so there is exactly one enumeration.
+    /// Coordinate groups sharing one (entry, precision, node, device) —
+    /// the baseline scope — in canonical order. [`Query::coords`] is the
+    /// flattened form and `run` batches whole groups, so there is exactly
+    /// one enumeration. With a precision axis set, entry indices refer to
+    /// the internal per-precision engine (selected entries × policies, in
+    /// that order), which `run` materializes.
     fn groups(&self) -> Vec<Vec<Coord>> {
+        let npol = self.precisions.as_ref().map_or(1, Vec::len);
         let mut out = Vec::new();
-        for &e in &self.selected_entries() {
+        for (k, &e) in self.selected_entries().iter().enumerate() {
             let specs = self.specs_for(&self.engine.entries()[e].arch);
-            for &node in &self.nodes {
-                for dev in self.devices_for(node) {
-                    out.push(specs.iter().map(|&spec| (e, node, spec, dev)).collect());
+            for pi in 0..npol {
+                let entry = if self.precisions.is_some() { k * npol + pi } else { e };
+                for &node in &self.nodes {
+                    for dev in self.devices_for(node) {
+                        out.push(specs.iter().map(|&spec| (entry, node, spec, dev)).collect());
+                    }
                 }
             }
         }
         out
     }
 
-    /// The full coordinate list in canonical order (entry → node → device
-    /// → assignment) — what the sinks evaluate.
+    /// The full coordinate list in canonical order (entry → precision →
+    /// node → device → assignment) — what the sinks evaluate.
     pub fn coords(&self) -> Vec<Coord> {
         self.groups().into_iter().flatten().collect()
+    }
+
+    /// The per-precision engine the sinks evaluate against when a
+    /// `.precisions(..)` axis is set: every selected (arch, net) pair is
+    /// re-lowered through the mapper once per policy, in the entry-major /
+    /// policy-minor order [`Query::groups`] enumerates.
+    fn derived_engine(&self) -> Option<Engine> {
+        let policies = self.precisions.as_ref()?;
+        let mut pairs = Vec::new();
+        for &e in &self.selected_entries() {
+            let entry = &self.engine.entries()[e];
+            let net = match &entry.net {
+                Some(net) => net,
+                None => panic!(
+                    "precision axis needs an engine built with Engine::new \
+                     (entry '{}'/'{}' carries no workload)",
+                    entry.arch.name, entry.map.network
+                ),
+            };
+            for policy in policies {
+                let pnet = net.clone().with_precision(policy.clone());
+                pairs.push((entry.arch.clone(), map_network(&entry.arch, &pnet)));
+            }
+        }
+        Some(Engine::from_mapped_entries(pairs).with_knobs(self.engine.knobs()))
     }
 
     // ---- execution --------------------------------------------------------
 
     fn run(self, visit: &mut dyn FnMut(QueryRow)) {
+        let groups = self.groups();
+        let derived = self.derived_engine();
+        let engine: &Engine = match &derived {
+            Some(e) => e,
+            None => self.engine,
+        };
         let Query {
-            engine,
             baseline,
             feasible_ips,
             pareto_ips,
@@ -330,7 +385,7 @@ impl<'e> Query<'e> {
             group_sizes.clear();
         };
 
-        for group in self.groups() {
+        for group in groups {
             group_sizes.push(group.len());
             batch.extend(group);
             if batch.len() >= STREAM_BATCH {
@@ -601,6 +656,66 @@ mod tests {
         for (a, b) in staged.iter().zip(&all) {
             assert_eq!(a.p_mem_uw(10.0).to_bits(), b.p_mem_uw(10.0).to_bits());
         }
+    }
+
+    #[test]
+    fn int8_precision_axis_is_bitwise_identical_to_default() {
+        let e = engine();
+        let base = Query::over(&e).nodes(&[Node::N28, Node::N7]).points();
+        let via = Query::over(&e)
+            .nodes(&[Node::N28, Node::N7])
+            .precisions(&[PrecisionPolicy::int8()])
+            .points();
+        assert_eq!(base.len(), via.len());
+        for (a, b) in base.iter().zip(&via) {
+            assert_eq!(a.arch, b.arch);
+            assert_eq!(a.network, b.network);
+            assert_eq!(a.node, b.node);
+            assert_eq!(a.precision, b.precision);
+            assert_eq!(a.energy.total_pj().to_bits(), b.energy.total_pj().to_bits());
+            assert_eq!(a.latency_ns.to_bits(), b.latency_ns.to_bits());
+            assert_eq!(a.area_mm2.to_bits(), b.area_mm2.to_bits());
+            assert_eq!(a.power.p_mem_uw(10.0).to_bits(), b.power.p_mem_uw(10.0).to_bits());
+        }
+    }
+
+    #[test]
+    fn precision_axis_expands_entry_major_policy_minor() {
+        let e = engine();
+        let pols = [PrecisionPolicy::int4(), PrecisionPolicy::int8()];
+        let q = Query::over(&e).nets(&["detnet"]).nodes(&[Node::N7]).precisions(&pols);
+        // 2 archs × 2 policies × 1 node × 1 device × 3 flavors
+        assert_eq!(q.cardinality(), 12);
+        let pts = q.points();
+        assert_eq!(pts.len(), 12);
+        for (i, p) in pts.iter().enumerate() {
+            let expect = if (i / 3) % 2 == 0 { "int4" } else { "int8" };
+            assert_eq!(p.precision, expect, "point {i}");
+        }
+        // INT4 never costs more energy than INT8 on matching coordinates.
+        for block in [0usize, 6] {
+            for i in 0..3 {
+                let (p4, p8) = (&pts[block + i], &pts[block + 3 + i]);
+                assert_eq!(p4.arch, p8.arch);
+                assert_eq!(p4.flavor(), p8.flavor());
+                assert!(
+                    p4.energy.total_pj() <= p8.energy.total_pj(),
+                    "{}/{:?}: int4 {} above int8 {}",
+                    p4.arch,
+                    p4.flavor(),
+                    p4.energy.total_pj(),
+                    p8.energy.total_pj()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn empty_precision_list_clears_the_axis() {
+        let e = engine();
+        let q = Query::over(&e).nodes(&[Node::N7]).precisions(&[]);
+        let base = Query::over(&e).nodes(&[Node::N7]);
+        assert_eq!(q.cardinality(), base.cardinality());
     }
 
     #[test]

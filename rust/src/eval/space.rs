@@ -23,6 +23,9 @@ use crate::workload::Network;
 pub struct DesignPoint {
     pub arch: String,
     pub network: String,
+    /// Label of the precision policy the workload map was lowered at
+    /// ("int8" unless a policy or a `.precisions(..)` axis was attached).
+    pub precision: String,
     pub node: Node,
     /// The per-level device choice this point was evaluated at. Its
     /// `flavor` tag is `Some(..)` when it was lowered from a named flavor.
@@ -95,6 +98,10 @@ pub type Coord = (usize, Node, AssignSpec, Device);
 /// name lives in `map.network`.
 pub struct EngineEntry {
     pub arch: Arch,
+    /// The source workload, kept so precision axes can re-lower the map
+    /// under other policies ([`crate::eval::Query::precisions`]). `None`
+    /// for entries wrapped from a bare map ([`Engine::from_mapped`]).
+    pub net: Option<Network>,
     pub map: NetworkMap,
 }
 
@@ -122,7 +129,7 @@ impl Engine {
         for arch in &archs {
             for net in &nets {
                 let map = map_network(arch, net);
-                entries.push(EngineEntry { arch: arch.clone(), map });
+                entries.push(EngineEntry { arch: arch.clone(), net: Some(net.clone()), map });
             }
         }
         Engine::from_entries(entries)
@@ -132,7 +139,7 @@ impl Engine {
     /// hold a `NetworkMap` (e.g. the hybrid sweep) query without paying a
     /// second mapper run.
     pub fn from_mapped(arch: Arch, map: NetworkMap) -> Engine {
-        Engine::from_entries(vec![EngineEntry { arch, map }])
+        Engine::from_entries(vec![EngineEntry { arch, net: None, map }])
     }
 
     /// Multi-entry form of [`Engine::from_mapped`], for callers that cache
@@ -140,7 +147,7 @@ impl Engine {
     /// candidate architecture once per run, not once per batch).
     pub fn from_mapped_entries(pairs: Vec<(Arch, NetworkMap)>) -> Engine {
         Engine::from_entries(
-            pairs.into_iter().map(|(arch, map)| EngineEntry { arch, map }).collect(),
+            pairs.into_iter().map(|(arch, map)| EngineEntry { arch, net: None, map }).collect(),
         )
     }
 
@@ -198,6 +205,7 @@ impl Engine {
         DesignPoint {
             arch: entry.arch.name.clone(),
             network: entry.map.network.clone(),
+            precision: entry.map.precision.name().to_string(),
             node,
             utilization: entry.map.utilization(&entry.arch),
             energy,

@@ -25,8 +25,9 @@
 //!    synthetic backend), [`coordinator`] (multi-stream serving: sensor
 //!    streams, drop-oldest queues, per-stream power-gate ledgers,
 //!    metrics, and the scenario runner reproducing the paper's concurrent
-//!    operating point), [`quant`] (INT8 pre/post-processing on the
-//!    request path).
+//!    operating point), [`quant`] (bit-width-parameterized pre/post-
+//!    processing on the request path, mirroring the workload-level
+//!    [`workload::PrecisionPolicy`] axis).
 //!
 //! See `DESIGN.md` for the experiment index mapping every paper table and
 //! figure to a bench target, and `EXPERIMENTS.md` for measured results.

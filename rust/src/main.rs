@@ -68,6 +68,8 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "objective", takes_value: true, help: "search: energy|area|edp", default: Some("energy") },
         OptSpec { name: "max-area", takes_value: true, help: "search: die-area budget, mm²", default: None },
         OptSpec { name: "max-power", takes_value: true, help: "search: P_mem budget at --ips, µW", default: None },
+        OptSpec { name: "precision", takes_value: true, help: "workload precision policy: int8|int4|fp16|w<N>a<M>", default: Some("int8") },
+        OptSpec { name: "mixed-precision", takes_value: false, help: "search: add INT4/INT8/FP16 bit-width knob axes", default: None },
         OptSpec { name: "verbose", takes_value: false, help: "per-layer detail", default: None },
     ]
 }
@@ -81,10 +83,16 @@ fn flavor_of(s: &str) -> anyhow::Result<MemFlavor> {
     })
 }
 
-/// Engine over one named (arch, net) pair.
+/// The `--precision` policy (INT8 identity by default).
+fn precision_of(args: &xr_edge_dse::util::cli::Args) -> anyhow::Result<workload::PrecisionPolicy> {
+    workload::PrecisionPolicy::from_str(args.get("precision").unwrap())
+}
+
+/// Engine over one named (arch, net) pair at the `--precision` policy.
 fn pair_engine(args: &xr_edge_dse::util::cli::Args) -> anyhow::Result<Engine> {
     let a = arch::by_name(args.get("arch").unwrap())?;
-    let net = workload::builtin::by_name(args.get("net").unwrap())?;
+    let net = workload::builtin::by_name(args.get("net").unwrap())?
+        .with_precision(precision_of(args)?);
     Ok(Engine::new(vec![a], vec![net]))
 }
 
@@ -142,8 +150,9 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
             let b = &p.energy;
             let mut t = Table::new(
                 &format!(
-                    "energy {} on {} @{} {} ({})",
+                    "energy {} [{}] on {} @{} {} ({})",
                     p.network,
+                    p.precision,
                     p.arch,
                     node.label(),
                     flavor.label(),
@@ -312,7 +321,8 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
             // (P_mem @ --ips, area, latency)? Query-evaluated grid +
             // pareto::frontier, the §5 decision procedure as a command.
             let ips = args.get_f64("ips")?.unwrap_or(10.0);
-            let net = workload::builtin::by_name(args.get("net").unwrap())?;
+            let net = workload::builtin::by_name(args.get("net").unwrap())?
+                .with_precision(precision_of(&args)?);
             let net_name = net.name.clone();
             let engine = Engine::new(
                 vec![arch::cpu(), arch::eyeriss(PeConfig::V2), arch::simba(PeConfig::V2)],
@@ -472,7 +482,11 @@ fn search_cmd(
     };
     let net = workload::builtin::by_name(args.get("net").unwrap())?;
     let ips = args.get_f64("ips")?.unwrap_or(10.0);
-    let mut space = KnobSpace::paper();
+    let mut space = if args.flag("mixed-precision") {
+        KnobSpace::paper_mixed_precision()
+    } else {
+        KnobSpace::paper()
+    };
     space.nodes = vec![node];
     if args.get("device").is_some() {
         space.mrams = vec![mram];
@@ -494,9 +508,10 @@ fn search_cmd(
     print!("{}", report.table().render());
     match report.best_overall() {
         Some((r, e)) => println!(
-            "best overall: {} {} via {} — {} = {}, area {:.2} mm², P_mem {:.2} µW @{} IPS (knobs {})",
+            "best overall: {} {} {} via {} — {} = {}, area {:.2} mm², P_mem {:.2} µW @{} IPS (knobs {})",
             e.arch,
             e.assign,
+            e.precision_label(),
             r.strategy,
             cfg.objective.label(),
             sci(e.scalar),

@@ -19,9 +19,20 @@
 //!
 //! All counts are **element** accesses; [`accesses_at`] converts to
 //! bus-width transactions for energy/bandwidth.
+//!
+//! **Precision lowering.** Access counts are emitted in *datum-equivalent*
+//! elements: each layer's traffic is scaled by
+//! `bits / arch.datum_bits` at push time (weight widths for weight-role
+//! levels, activation widths elsewhere), taken from the workload's
+//! [`PrecisionPolicy`](crate::workload::PrecisionPolicy). Downstream
+//! conversion ([`accesses_at`], bandwidth bounds, the engine's level
+//! totals) is unchanged — and because the INT8 scale is exactly `1.0`,
+//! the INT8 policy reproduces the pre-precision maps bitwise. Byte-sized
+//! capacity decisions (weight residency, spad/weight-buffer fold factors)
+//! use the quantized footprints for the same reason.
 
 use crate::arch::{Arch, BufferLevel, Dataflow};
-use crate::workload::{Layer, Network, Op};
+use crate::workload::{Layer, LayerBits, Network, Op};
 
 /// Per-level traffic for one layer, in element accesses.
 #[derive(Debug, Clone)]
@@ -47,6 +58,12 @@ pub struct LayerMap {
     /// Bandwidth-bound cycle count (worst shared buffer).
     pub bandwidth_cycles: f64,
     pub access: Vec<LevelAccess>,
+    /// Per-MAC energy scale vs the datum width — the multiplier-energy
+    /// first-order model `(w_bits / datum) × (a_bits / datum)`, exactly
+    /// `1.0` at INT8.
+    pub mac_scale: f64,
+    /// Per-ALU-op energy scale vs the datum width (`a_bits / datum`).
+    pub alu_scale: f64,
 }
 
 impl LayerMap {
@@ -60,6 +77,9 @@ impl LayerMap {
 pub struct NetworkMap {
     pub arch: String,
     pub network: String,
+    /// The precision policy this map was lowered at (already folded into
+    /// the per-layer access counts and energy scales).
+    pub precision: crate::workload::PrecisionPolicy,
     pub per_layer: Vec<LayerMap>,
 }
 
@@ -109,6 +129,11 @@ pub fn map_layer(arch: &Arch, layer: &Layer) -> LayerMap {
     map_layer_ext(arch, layer, false)
 }
 
+/// [`map_layer_bits`] at the INT8 identity point.
+pub fn map_layer_ext(arch: &Arch, layer: &Layer, weights_resident: bool) -> LayerMap {
+    map_layer_bits(arch, layer, weights_resident, LayerBits::INT8)
+}
+
 /// `weights_resident`: the whole model fits the per-PE weight buffers
 /// (weight-stationary only) — weights are loaded once at boot, so the
 /// per-inference GWB traffic and weight-buffer refills vanish. This is the
@@ -116,24 +141,34 @@ pub fn map_layer(arch: &Arch, layer: &Layer) -> LayerMap {
 /// memory bandwidth … facilitates the applicability of NVM": Simba's
 /// 64×12 kB buffers hold DetNet/EDSNet entirely, Eyeriss's 128 B spads
 /// (per-PE *replicated* filter rows) cannot.
-pub fn map_layer_ext(arch: &Arch, layer: &Layer, weights_resident: bool) -> LayerMap {
+///
+/// `bits` gives the layer's operand widths; access counts are emitted in
+/// datum-equivalent elements (see the module docs — exact identity at
+/// INT8).
+pub fn map_layer_bits(
+    arch: &Arch,
+    layer: &Layer,
+    weights_resident: bool,
+    bits: LayerBits,
+) -> LayerMap {
     match layer.op {
-        Op::Conv2d { .. } | Op::Linear => map_compute_layer(arch, layer, weights_resident),
-        _ => map_elementwise_layer(arch, layer),
+        Op::Conv2d { .. } | Op::Linear => map_compute_layer(arch, layer, weights_resident, bits),
+        _ => map_elementwise_layer(arch, layer, bits),
     }
 }
 
 /// Pool / add / upsample / concat: streamed through the activation path,
 /// no MAC-array occupancy (charged as ALU ops on the vector lanes).
-fn map_elementwise_layer(arch: &Arch, layer: &Layer) -> LayerMap {
+fn map_elementwise_layer(arch: &Arch, layer: &Layer, bits: LayerBits) -> LayerMap {
+    let sa = bits.act_bits as f64 / arch.datum_bits as f64;
     let ops = layer.macs() as f64; // elementwise op count (k²-weighted pools)
     let in_e = layer.input_elems() as f64;
     let out_e = layer.output_elems() as f64;
     let glb = if arch.cpu_style { "unified_sram" } else { "glb" };
     let access = vec![LevelAccess {
         level: glb_name(arch, glb),
-        reads: in_e,
-        writes: out_e,
+        reads: in_e * sa,
+        writes: out_e * sa,
         accum: false,
     }];
     let lanes = arch.total_macs() as f64;
@@ -144,6 +179,8 @@ fn map_elementwise_layer(arch: &Arch, layer: &Layer) -> LayerMap {
         compute_cycles: ops / lanes,
         bandwidth_cycles: bandwidth_cycles(arch, &access),
         access,
+        mac_scale: sa * sa,
+        alu_scale: sa,
     }
 }
 
@@ -171,7 +208,16 @@ fn bandwidth_cycles(arch: &Arch, access: &[LevelAccess]) -> f64 {
     worst
 }
 
-fn map_compute_layer(arch: &Arch, layer: &Layer, weights_resident: bool) -> LayerMap {
+fn map_compute_layer(
+    arch: &Arch,
+    layer: &Layer,
+    weights_resident: bool,
+    bits: LayerBits,
+) -> LayerMap {
+    // Datum-equivalent scaling factors (exactly 1.0 at INT8 — the
+    // precision identity the equivalence tests pin).
+    let sw = bits.weight_bits as f64 / arch.datum_bits as f64;
+    let sa = bits.act_bits as f64 / arch.datum_bits as f64;
     let m = layer.true_macs() as f64;
     let w = layer.weights() as f64;
     let i = layer.input_elems() as f64;
@@ -203,8 +249,8 @@ fn map_compute_layer(arch: &Arch, layer: &Layer, weights_resident: bool) -> Laye
             // outputs stored back. Register blocking (4×4 tiles in the
             // architectural registers) cuts operand refetches by ~4×.
             const REG_BLOCK: f64 = 4.0;
-            push(glb_name(arch, "unified_sram"), m / REG_BLOCK, o, false);
-            push("gwb", m / REG_BLOCK, 0.0, false);
+            push(glb_name(arch, "unified_sram"), m / REG_BLOCK * sa, o * sa, false);
+            push("gwb", m / REG_BLOCK * sw, 0.0, false);
             compute_cycles = m;
         }
         // ------------------------------------------------------------------
@@ -232,23 +278,24 @@ fn map_compute_layer(arch: &Arch, layer: &Layer, weights_resident: bool) -> Laye
             // stream and buffer refill disappear entirely (boot-time cost).
             let wbuf = arch.level("weight_buf").expect("simba weight_buf");
             let w_per_pe_bytes =
-                (w / pe as f64 * (arch.datum_bits as f64 / 8.0)).max(1.0);
+                (w / pe as f64 * (bits.weight_bits as f64 / 8.0)).max(1.0);
             let w_folds = (w_per_pe_bytes / wbuf.capacity_bytes as f64).ceil().max(1.0);
             if weights_resident {
-                push("weight_buf", w, 0.0, false);
+                push("weight_buf", w * sw, 0.0, false);
             } else {
-                push("gwb", w * w_folds, 0.0, false);
-                push("weight_buf", w * w_folds, w * w_folds, false);
+                push("gwb", w * w_folds * sw, 0.0, false);
+                push("weight_buf", w * w_folds * sw, w * w_folds * sw, false);
             }
 
             // Inputs: refetched from GLB once per output-channel pass,
             // staged through the input buffer; each read feeds vec_out MACs.
-            let i_glb = i * oc_passes as f64;
-            push("glb", i_glb, o, false);
-            push("input_buf", m / vec_out as f64, i_glb, false);
+            let i_glb = i * oc_passes as f64 * sa;
+            push("glb", i_glb, o * sa, false);
+            push("input_buf", m / vec_out as f64 * sa, i_glb, false);
 
-            // Psums: one accumulation-buffer update per reduction pass.
-            let acc_updates = o * red_passes as f64;
+            // Psums: one accumulation-buffer update per reduction pass
+            // (psum width tracks the activation operand width).
+            let acc_updates = o * red_passes as f64 * sa;
             push("accum_buf", acc_updates, acc_updates, true);
         }
         // ------------------------------------------------------------------
@@ -265,10 +312,13 @@ fn map_compute_layer(arch: &Arch, layer: &Layer, weights_resident: bool) -> Laye
             let oc_passes = ceil_div(layer.out_c, oc_sim);
             // Output-row folding when out_h exceeds the columns.
             let h_folds = ceil_div(layer.out_h, cols);
-            // Filter-spad capacity bounds the input channels per pass.
+            // Filter-spad capacity bounds the input channels per pass
+            // (computed in bits so sub-byte weights pack more rows; at
+            // 8-bit weights this is exactly the old bytes/kw division).
             let spad = arch.level("weight_spad").expect("eyeriss weight_spad");
-            let ic_per_pass = (spad.capacity_bytes / (kw.max(1) * (arch.datum_bits / 8).max(1)))
-                .clamp(1, in_cg.max(1));
+            let ic_per_pass = ((spad.capacity_bytes * 8)
+                / (kw.max(1) * (bits.weight_bits as usize).max(1)))
+            .clamp(1, in_cg.max(1));
             let ic_passes = ceil_div(in_cg, ic_per_pass);
 
             let active = (kh * oc_sim * layer.out_h.min(cols)) as f64;
@@ -277,21 +327,21 @@ fn map_compute_layer(arch: &Arch, layer: &Layer, weights_resident: bool) -> Laye
             // Weights re-stream from the GWB once per output-row fold and
             // per ic pass (small spads — the §5 effect).
             let w_refetch = (h_folds * ic_passes.max(1)) as f64;
-            push("gwb", w * w_refetch, 0.0, false);
-            push("weight_spad", m, w * w_refetch, false);
+            push("gwb", w * w_refetch * sw, 0.0, false);
+            push("weight_spad", m * sw, w * w_refetch * sw, false);
 
             // Ifmap: GLB supplies the array once per output-channel pass
             // (diagonal reuse covers the kh rows within a pass).
-            let i_glb = i * oc_passes as f64;
-            push("glb", i_glb, o, false);
+            let i_glb = i * oc_passes as f64 * sa;
+            push("glb", i_glb, o * sa, false);
             // Ifmap spad: each datum enters once per pass and is reused kw
             // times horizontally.
-            push("ifmap_spad", m, m / kw.max(1) as f64, false);
+            push("ifmap_spad", m * sa, m / kw.max(1) as f64 * sa, false);
 
             // Psums accumulate in the psum spad; cross-ic-pass partials
             // spill to the GLB (read+write per extra pass).
-            push("psum_spad", m, m, true);
-            let spill = o * (ic_passes.saturating_sub(1)) as f64;
+            push("psum_spad", m * sa, m * sa, true);
+            let spill = o * (ic_passes.saturating_sub(1)) as f64 * sa;
             if spill > 0.0 {
                 push("glb", spill, spill, true);
             }
@@ -306,25 +356,30 @@ fn map_compute_layer(arch: &Arch, layer: &Layer, weights_resident: bool) -> Laye
         compute_cycles,
         bandwidth_cycles,
         access,
+        mac_scale: sw * sa,
+        alu_scale: sa,
     }
 }
 
 /// Map a whole network. Weight residency is decided here: under
-/// weight-stationary dataflow, if the entire INT8 model fits the combined
-/// per-PE weight buffers, weights are pinned across inferences.
+/// weight-stationary dataflow, if the entire *quantized* model (the
+/// attached [`crate::workload::PrecisionPolicy`]; INT8 by default) fits
+/// the combined per-PE weight buffers, weights are pinned across
+/// inferences.
 pub fn map_network(arch: &Arch, net: &Network) -> NetworkMap {
     let resident = arch.dataflow == Dataflow::WeightStationary
         && arch
             .level("weight_buf")
-            .map(|wb| net.weight_bytes(arch.datum_bits as u32) <= (wb.capacity_bytes * wb.count) as u64)
+            .map(|wb| net.quantized_weight_bytes() <= (wb.capacity_bytes * wb.count) as u64)
             .unwrap_or(false);
     NetworkMap {
         arch: arch.name.clone(),
         network: net.name.clone(),
+        precision: net.precision.clone(),
         per_layer: net
             .layers
             .iter()
-            .map(|l| map_layer_ext(arch, l, resident))
+            .map(|l| map_layer_bits(arch, l, resident, net.precision.bits_for(&l.name)))
             .collect(),
     }
 }
@@ -466,6 +521,106 @@ mod tests {
                 assert_eq!(lm.macs, 0.0, "{}", layer.name);
                 assert!(lm.alu_ops > 0.0);
             }
+        }
+    }
+
+    #[test]
+    fn int8_policy_maps_bitwise_identically_to_default() {
+        // The precision identity at the mapper level: an explicit INT8
+        // policy must reproduce the default map bit-for-bit (access
+        // counts, cycle bounds, energy scales).
+        let net = detnet();
+        let explicit = net.clone().with_precision(crate::workload::PrecisionPolicy::int8());
+        for arch in [cpu(), eyeriss(PeConfig::V2), simba(PeConfig::V2)] {
+            let a = map_network(&arch, &net);
+            let b = map_network(&arch, &explicit);
+            assert_eq!(a.per_layer.len(), b.per_layer.len());
+            for (x, y) in a.per_layer.iter().zip(&b.per_layer) {
+                assert_eq!(x.cycles().to_bits(), y.cycles().to_bits(), "{}", x.layer);
+                assert_eq!(x.mac_scale.to_bits(), y.mac_scale.to_bits());
+                assert_eq!(x.mac_scale.to_bits(), 1.0f64.to_bits());
+                assert_eq!(x.access.len(), y.access.len());
+                for (ax, ay) in x.access.iter().zip(&y.access) {
+                    assert_eq!(ax.level, ay.level);
+                    assert_eq!(ax.reads.to_bits(), ay.reads.to_bits(), "{}", x.layer);
+                    assert_eq!(ax.writes.to_bits(), ay.writes.to_bits(), "{}", x.layer);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn traffic_monotone_nonincreasing_as_bits_shrink() {
+        // Narrower operands can never cost more datum-equivalent traffic:
+        // byte-proportional streams shrink and capacity-driven refetch
+        // folds only relax (residency flips the same way).
+        use crate::workload::PrecisionPolicy;
+        for arch in [cpu(), eyeriss(PeConfig::V2), simba(PeConfig::V2)] {
+            let total = |bits: u32| -> f64 {
+                let net = detnet().with_precision(PrecisionPolicy::of_bits(bits, bits));
+                map_network(&arch, &net)
+                    .level_totals()
+                    .iter()
+                    .map(|t| t.reads + t.writes)
+                    .sum()
+            };
+            let (t4, t8, t16) = (total(4), total(8), total(16));
+            assert!(t4 <= t8, "{}: INT4 traffic {t4} above INT8 {t8}", arch.name);
+            assert!(t8 <= t16, "{}: INT8 traffic {t8} above FP16 {t16}", arch.name);
+            assert!(t4 < t16, "{}: traffic must strictly shrink 16→4 bits", arch.name);
+        }
+    }
+
+    #[test]
+    fn per_layer_override_scales_only_that_layer() {
+        use crate::workload::{LayerBits, PrecisionPolicy};
+        let arch = simba(PeConfig::V2);
+        let net = detnet();
+        let target = net
+            .layers
+            .iter()
+            .find(|l| l.is_compute())
+            .map(|l| l.name.clone())
+            .unwrap();
+        let mixed = net.clone().with_precision(
+            PrecisionPolicy::int8().with_layer(&target, LayerBits::uniform(4)),
+        );
+        let base = map_network(&arch, &net);
+        let m = map_network(&arch, &mixed);
+        for (x, y) in base.per_layer.iter().zip(&m.per_layer) {
+            let (xs, ys) = (
+                x.access.iter().map(|a| a.reads + a.writes).sum::<f64>(),
+                y.access.iter().map(|a| a.reads + a.writes).sum::<f64>(),
+            );
+            if x.layer == target {
+                assert!(ys < xs, "override layer must shrink: {ys} vs {xs}");
+            } else {
+                assert_eq!(xs.to_bits(), ys.to_bits(), "{} must be untouched", x.layer);
+            }
+        }
+    }
+
+    #[test]
+    fn fp16_can_break_weight_residency() {
+        // Residency is decided on the quantized footprint: DetNet fits
+        // Simba's per-PE weight buffers at INT8 but a 16-bit model can
+        // stream (GWB traffic reappears) — the §5 asymmetry, now
+        // precision-aware.
+        use crate::workload::PrecisionPolicy;
+        let arch = simba(PeConfig::V2);
+        let gwb_reads = |net: &Network| -> f64 {
+            map_network(&arch, net)
+                .level_totals()
+                .iter()
+                .filter(|a| a.level == "gwb")
+                .map(|a| a.reads)
+                .sum()
+        };
+        assert_eq!(gwb_reads(&detnet()), 0.0);
+        let wb = arch.level("weight_buf").unwrap();
+        let fp16 = detnet().with_precision(PrecisionPolicy::fp16());
+        if fp16.quantized_weight_bytes() > (wb.capacity_bytes * wb.count) as u64 {
+            assert!(gwb_reads(&fp16) > 0.0, "streaming model must touch the GWB");
         }
     }
 

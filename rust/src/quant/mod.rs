@@ -1,4 +1,4 @@
-//! INT8 post-training-quantization helpers used on the rust side of the
+//! Post-training-quantization helpers used on the rust side of the
 //! serving path (pre/post-processing around the PJRT executable) and by the
 //! quantization-accuracy report (Fig 1(g)-(i) analogue).
 //!
@@ -7,26 +7,83 @@
 //! TensorRT recipe the paper used); this module mirrors the arithmetic so
 //! rust can quantize camera frames into the model's expected scale and
 //! dequantize outputs, without python on the request path.
+//!
+//! [`QParams`] is parameterized by bit-width: the quantized grid, the
+//! zero-point clamp and the fake-quant clamp all derive from the **same**
+//! `(bits, signed)` pair, so a calibration and its round-trip can never disagree
+//! about the range (the historical u8-only code calibrated against a
+//! hard-wired `/255` while `fake_quant` took caller-supplied clamp bounds
+//! — a mismatched pair silently mis-clamped the zero point). This is the
+//! arithmetic side of the workload-level
+//! [`PrecisionPolicy`](crate::workload::PrecisionPolicy).
 
-/// Per-tensor affine quantization parameters: `real = scale × (q − zero)`.
+/// Per-tensor affine quantization parameters: `real = scale × (q − zero)`,
+/// on a `bits`-wide grid — unsigned `0..=2^bits − 1` for asymmetric
+/// activation calibrations, signed `±(2^(bits−1) − 1)` for symmetric
+/// weight calibrations.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct QParams {
     pub scale: f32,
     pub zero: i32,
+    /// Grid width in bits; every clamp bound derives from this (and
+    /// `signed`).
+    pub bits: u32,
+    /// Signed symmetric grid (weights) vs unsigned asymmetric grid
+    /// (activations).
+    pub signed: bool,
 }
 
 impl QParams {
-    /// Calibrate asymmetric UINT8-style params over a data range.
+    /// Calibrate asymmetric UINT8-style params over a data range (the
+    /// historical default grid).
     pub fn calibrate(min: f32, max: f32) -> QParams {
+        QParams::calibrate_bits(min, max, 8)
+    }
+
+    /// Calibrate asymmetric params over a data range on a `bits`-wide
+    /// grid. `bits` must be in 2..=16 (the f32 arithmetic keeps exact
+    /// integer levels well past that, but wider grids are not a
+    /// fixed-point story any more).
+    pub fn calibrate_bits(min: f32, max: f32, bits: u32) -> QParams {
+        assert!((2..=16).contains(&bits), "calibrate_bits: bits {bits} out of 2..=16");
+        let qmax = ((1u32 << bits) - 1) as f32;
         let (min, max) = (min.min(0.0), max.max(0.0)); // range must span 0
-        let scale = ((max - min) / 255.0).max(f32::EPSILON);
+        let scale = ((max - min) / qmax).max(f32::EPSILON);
         let zero = (-min / scale).round() as i32;
-        QParams { scale, zero: zero.clamp(0, 255) }
+        QParams { scale, zero: zero.clamp(0, qmax as i32), bits, signed: false }
     }
 
     /// Calibrate symmetric INT8 params (weights): zero = 0.
     pub fn calibrate_symmetric(absmax: f32) -> QParams {
-        QParams { scale: (absmax / 127.0).max(f32::EPSILON), zero: 0 }
+        QParams::calibrate_symmetric_bits(absmax, 8)
+    }
+
+    /// Calibrate symmetric params (weights) on a `bits`-wide grid:
+    /// zero = 0, full scale at ±(2^(bits−1) − 1).
+    pub fn calibrate_symmetric_bits(absmax: f32, bits: u32) -> QParams {
+        assert!((2..=16).contains(&bits), "calibrate_symmetric_bits: bits {bits} out of 2..=16");
+        let qmax = ((1u32 << (bits - 1)) - 1) as f32;
+        QParams { scale: (absmax / qmax).max(f32::EPSILON), zero: 0, bits, signed: true }
+    }
+
+    /// Bottom of the quantized grid (`−(2^(bits−1) − 1)` signed, 0
+    /// unsigned).
+    pub fn qmin(&self) -> i32 {
+        if self.signed {
+            -(((1u32 << (self.bits - 1)) - 1) as i32)
+        } else {
+            0
+        }
+    }
+
+    /// Top of the quantized grid (`2^(bits−1) − 1` signed, `2^bits − 1`
+    /// unsigned).
+    pub fn qmax(&self) -> i32 {
+        if self.signed {
+            ((1u32 << (self.bits - 1)) - 1) as i32
+        } else {
+            ((1u32 << self.bits) - 1) as i32
+        }
     }
 
     pub fn quantize(&self, x: f32) -> i32 {
@@ -37,22 +94,36 @@ impl QParams {
         (q - self.zero) as f32 * self.scale
     }
 
-    /// Quantize-dequantize round trip (fake-quant) — what the INT8 model
-    /// evaluation applies to tensors.
-    pub fn fake_quant(&self, x: f32, lo: i32, hi: i32) -> f32 {
-        self.dequantize(self.quantize(x).clamp(lo, hi))
+    /// Quantize-dequantize round trip (fake-quant) — what the quantized
+    /// model evaluation applies to tensors. The clamp range derives from
+    /// `self.bits` and `self.signed`, so it always matches the
+    /// calibration grid (asymmetric *and* symmetric).
+    pub fn fake_quant(&self, x: f32) -> f32 {
+        self.dequantize(self.quantize(x).clamp(self.qmin(), self.qmax()))
     }
 }
 
-/// Fake-quantize a buffer in place with u8 range.
-pub fn fake_quant_u8(xs: &mut [f32], qp: QParams) {
+/// Fake-quantize a buffer in place on the params' own grid.
+pub fn fake_quant_buf(xs: &mut [f32], qp: QParams) {
     for x in xs.iter_mut() {
-        *x = qp.fake_quant(*x, 0, 255);
+        *x = qp.fake_quant(*x);
     }
 }
 
-/// Calibrate over a sample buffer.
+/// Historical u8 entry point (kept for the serving path; `qp` must be an
+/// 8-bit calibration).
+pub fn fake_quant_u8(xs: &mut [f32], qp: QParams) {
+    debug_assert_eq!(qp.bits, 8, "fake_quant_u8 expects an 8-bit calibration");
+    fake_quant_buf(xs, qp);
+}
+
+/// Calibrate over a sample buffer (8-bit grid).
 pub fn calibrate_from(xs: &[f32]) -> QParams {
+    calibrate_from_bits(xs, 8)
+}
+
+/// Calibrate over a sample buffer on a `bits`-wide grid.
+pub fn calibrate_from_bits(xs: &[f32], bits: u32) -> QParams {
     let mut min = f32::INFINITY;
     let mut max = f32::NEG_INFINITY;
     for &x in xs {
@@ -60,9 +131,9 @@ pub fn calibrate_from(xs: &[f32]) -> QParams {
         max = max.max(x);
     }
     if !min.is_finite() || !max.is_finite() {
-        return QParams { scale: 1.0, zero: 0 };
+        return QParams { scale: 1.0, zero: 0, bits, signed: false };
     }
-    QParams::calibrate(min, max)
+    QParams::calibrate_bits(min, max, bits)
 }
 
 /// Histogram of a tensor (Fig 1(i) weight-distribution analogue): `bins`
@@ -80,7 +151,7 @@ pub fn histogram(xs: &[f32], lo: f32, hi: f32, bins: usize) -> Vec<usize> {
     h
 }
 
-/// Count distinct values — quantized tensors collapse to ≤256 levels
+/// Count distinct values — quantized tensors collapse to ≤ 2^bits levels
 /// ("discrete levels" in Fig 1(i)).
 pub fn distinct_levels(xs: &[f32]) -> usize {
     let mut v: Vec<u32> = xs.iter().map(|x| x.to_bits()).collect();
@@ -105,23 +176,61 @@ mod tests {
     }
 
     #[test]
-    fn fake_quant_error_bounded_by_half_scale() {
+    fn fake_quant_error_bounded_by_half_scale_at_any_width() {
         check("fq error bound", 300, |g| {
             let lo = g.f64_in(-10.0, -0.1) as f32;
             let hi = g.f64_in(0.1, 10.0) as f32;
-            let qp = QParams::calibrate(lo, hi);
+            let bits = g.usize_in(2, 10) as u32;
+            let qp = QParams::calibrate_bits(lo, hi, bits);
             let x = g.f64_in(lo as f64, hi as f64) as f32;
-            let err = (qp.fake_quant(x, 0, 255) - x).abs();
-            assert!(err <= qp.scale * 0.5 + 1e-6, "err {err} scale {}", qp.scale);
+            let err = (qp.fake_quant(x) - x).abs();
+            assert!(
+                err <= qp.scale * 0.5 + 1e-6,
+                "bits {bits}: err {err} scale {}",
+                qp.scale
+            );
         });
+    }
+
+    #[test]
+    fn zero_point_always_inside_the_grid() {
+        // The regression the one-bit-width design fixes: calibrating a
+        // narrow grid must clamp the zero point to *that* grid, not to
+        // 0..=255 — and fake_quant must clamp to the same range.
+        let qp = QParams::calibrate_bits(-100.0, 0.001, 4);
+        assert!(qp.zero <= qp.qmax(), "zero {} beyond 4-bit grid", qp.zero);
+        assert_eq!(qp.qmax(), 15);
+        // every representable value round-trips onto the grid
+        for q in 0..=qp.qmax() {
+            let x = qp.dequantize(q);
+            assert_eq!(qp.quantize(x).clamp(0, qp.qmax()), q);
+        }
     }
 
     #[test]
     fn symmetric_weights_have_zero_zero_point() {
         let qp = QParams::calibrate_symmetric(0.35);
         assert_eq!(qp.zero, 0);
+        assert_eq!((qp.qmin(), qp.qmax()), (-127, 127));
         assert!((qp.dequantize(127) - 0.35).abs() < 1e-3);
         assert!((qp.dequantize(-127) + 0.35).abs() < 1e-3);
+        let qp4 = QParams::calibrate_symmetric_bits(0.35, 4);
+        assert!((qp4.dequantize(7) - 0.35).abs() < 1e-3);
+    }
+
+    #[test]
+    fn symmetric_fake_quant_round_trips_negative_values() {
+        // Regression: the symmetric (signed-grid) calibration must not
+        // clamp negatives away — fake_quant's range derives from the same
+        // (bits, signed) pair the calibration used.
+        let qp = QParams::calibrate_symmetric(1.0);
+        for &x in &[-0.9f32, -0.25, 0.0, 0.4, 0.95] {
+            let err = (qp.fake_quant(x) - x).abs();
+            assert!(err <= qp.scale * 0.5 + 1e-6, "x {x}: err {err}");
+        }
+        // out-of-range values clamp to the signed rails, not to zero
+        assert!((qp.fake_quant(-2.0) + 1.0).abs() < 1e-3);
+        assert!((qp.fake_quant(2.0) - 1.0).abs() < 1e-3);
     }
 
     #[test]
@@ -132,6 +241,11 @@ mod tests {
         let qp = calibrate_from(&xs);
         fake_quant_u8(&mut xs, qp);
         assert!(distinct_levels(&xs) <= 256, "levels {}", distinct_levels(&xs));
+        // a 4-bit grid collapses much further
+        let mut ys: Vec<f32> = (0..10_000).map(|_| rng.gaussian() as f32 * 0.2).collect();
+        let qp4 = calibrate_from_bits(&ys, 4);
+        fake_quant_buf(&mut ys, qp4);
+        assert!(distinct_levels(&ys) <= 16, "levels {}", distinct_levels(&ys));
     }
 
     #[test]

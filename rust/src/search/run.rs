@@ -30,7 +30,7 @@ use crate::mapping::{map_network, NetworkMap};
 use crate::report::{pct, sci, Csv, Table};
 use crate::tech::{Device, Node};
 use crate::util::prng::Prng;
-use crate::workload::Network;
+use crate::workload::{Network, PrecisionPolicy};
 
 /// The scalarized objective a single-objective strategy minimizes. The
 /// Pareto frontier always tracks all three jointly.
@@ -132,6 +132,10 @@ pub struct Evaluation {
     /// "SRAM-only"/"P0"/"P1" for named flavors, "mask<m>" for lattice
     /// points.
     pub assign: String,
+    /// Uniform weight bit-width of the candidate (knob dim 12).
+    pub w_bits: u32,
+    /// Uniform activation bit-width of the candidate (knob dim 13).
+    pub a_bits: u32,
     pub energy_pj: f64,
     pub area_mm2: f64,
     pub edp: f64,
@@ -147,9 +151,15 @@ pub struct Evaluation {
 }
 
 impl Evaluation {
-    /// The knob vector as a compact replay key, e.g. `1-4-4-4-3-3-0-2-1-4-2-0`.
+    /// The knob vector as a compact replay key, e.g.
+    /// `1-4-4-4-3-3-0-2-1-4-2-0-1-1`.
     pub fn vector_key(&self) -> String {
         self.vector.iter().map(|i| i.to_string()).collect::<Vec<_>>().join("-")
+    }
+
+    /// Compact precision label ("w4a8"-style).
+    pub fn precision_label(&self) -> String {
+        format!("w{}a{}", self.w_bits, self.a_bits)
     }
 }
 
@@ -188,11 +198,13 @@ pub fn run_search(
 ) -> SearchResult {
     let mut prng = Prng::new(cfg.seed);
     let mut cache: HashMap<KnobVector, f64> = HashMap::new();
-    // Mapper runs cached per distinct synthesized architecture (the name
-    // encodes every arch-shaping knob): neighborhoods that revisit an
-    // architecture across rounds — node/mram/assignment moves always do —
-    // pay the Timeloop-lite mapping once per run, not once per batch.
-    let mut map_cache: HashMap<String, NetworkMap> = HashMap::new();
+    // Mapper runs cached per distinct (synthesized architecture, operand
+    // bit-widths) — the arch name encodes every arch-shaping knob and the
+    // precision knobs re-lower the same arch's map — so neighborhoods that
+    // revisit a coordinate across rounds (node/mram/assignment moves
+    // always do) pay the Timeloop-lite mapping once per run, not once per
+    // batch.
+    let mut map_cache: HashMap<(String, u32, u32), NetworkMap> = HashMap::new();
     let mut archive: ParetoArchive<usize> = ParetoArchive::new();
     let mut trace: Vec<Evaluation> = Vec::new();
     let (mut rejected, mut revisits) = (0usize, 0usize);
@@ -265,16 +277,23 @@ pub fn run_search(
             // then evaluate in parallel through the same sharded path as
             // `Engine::grid` — output order (and every bit) matches the
             // sequential loop.
-            let mut arch_index: HashMap<String, usize> = HashMap::new();
+            let mut arch_index: HashMap<(String, u32, u32), usize> = HashMap::new();
             let mut pairs: Vec<(Arch, NetworkMap)> = Vec::new();
             let mut entry_of: Vec<usize> = Vec::with_capacity(fresh.len());
             for (_, c) in &fresh {
+                let key = (c.arch.name.clone(), c.bits.0, c.bits.1);
                 let next = pairs.len();
-                let e = *arch_index.entry(c.arch.name.clone()).or_insert(next);
+                let e = *arch_index.entry(key.clone()).or_insert(next);
                 if e == next {
                     let map = map_cache
-                        .entry(c.arch.name.clone())
-                        .or_insert_with(|| map_network(&c.arch, &synth.net))
+                        .entry(key)
+                        .or_insert_with(|| {
+                            let qnet = synth
+                                .net
+                                .clone()
+                                .with_precision(PrecisionPolicy::of_bits(c.bits.0, c.bits.1));
+                            map_network(&c.arch, &qnet)
+                        })
                         .clone();
                     pairs.push((c.arch.clone(), map));
                 }
@@ -302,6 +321,8 @@ pub fn run_search(
                         AssignSpec::Flavor(f) => f.label().to_string(),
                         AssignSpec::Mask(m) => format!("mask{m}"),
                     },
+                    w_bits: cand.bits.0,
+                    a_bits: cand.bits.1,
                     energy_pj: point.energy.total_pj(),
                     area_mm2: point.area_mm2,
                     edp: point.edp(),
@@ -453,21 +474,28 @@ impl SearchReport {
             ),
             &[
                 "strategy", "evals", "rejected", "revisits", "frontier", "best design",
-                "assign", "objective", "vs paper",
+                "assign", "bits", "objective", "vs paper",
             ],
         );
         for r in &self.results {
-            let (design, assign, obj, delta) = match r.best_eval() {
+            let (design, assign, bits, obj, delta) = match r.best_eval() {
                 Some(e) => (
                     e.arch.clone(),
                     e.assign.clone(),
+                    e.precision_label(),
                     sci(e.scalar),
                     self.baseline
                         .as_ref()
                         .map(|(_, b, _)| pct(e.scalar / b - 1.0))
                         .unwrap_or_else(|| "-".into()),
                 ),
-                None => ("(none feasible)".into(), "-".into(), "-".into(), "-".into()),
+                None => (
+                    "(none feasible)".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ),
             };
             t.row(vec![
                 r.strategy.to_string(),
@@ -477,6 +505,7 @@ impl SearchReport {
                 format!("{}", r.frontier.len()),
                 design,
                 assign,
+                bits,
                 obj,
                 delta,
             ]);
@@ -487,8 +516,8 @@ impl SearchReport {
     /// Per-strategy Pareto frontiers as CSV.
     pub fn frontier_csv(&self) -> Csv {
         let mut c = Csv::new(&[
-            "strategy", "eval", "arch", "node_nm", "mram", "assign", "energy_pj", "area_mm2",
-            "edp", "latency_ns", "p_mem_uw", "vector",
+            "strategy", "eval", "arch", "node_nm", "mram", "assign", "w_bits", "a_bits",
+            "energy_pj", "area_mm2", "edp", "latency_ns", "p_mem_uw", "vector",
         ]);
         for r in &self.results {
             for e in &r.frontier {
@@ -499,6 +528,8 @@ impl SearchReport {
                     format!("{}", e.node.nm()),
                     e.mram.label().to_string(),
                     e.assign.clone(),
+                    format!("{}", e.w_bits),
+                    format!("{}", e.a_bits),
                     sci(e.energy_pj),
                     sci(e.area_mm2),
                     sci(e.edp),
@@ -515,8 +546,9 @@ impl SearchReport {
     /// same seed/budget/constraints → bitwise-identical file).
     pub fn trace_csv(&self) -> Csv {
         let mut c = Csv::new(&[
-            "strategy", "eval", "arch", "node_nm", "mram", "assign", "energy_pj", "area_mm2",
-            "edp", "latency_ns", "p_mem_uw", "feasible", "scalar", "joined_frontier", "vector",
+            "strategy", "eval", "arch", "node_nm", "mram", "assign", "w_bits", "a_bits",
+            "energy_pj", "area_mm2", "edp", "latency_ns", "p_mem_uw", "feasible", "scalar",
+            "joined_frontier", "vector",
         ]);
         for r in &self.results {
             for e in &r.trace {
@@ -527,6 +559,8 @@ impl SearchReport {
                     format!("{}", e.node.nm()),
                     e.mram.label().to_string(),
                     e.assign.clone(),
+                    format!("{}", e.w_bits),
+                    format!("{}", e.a_bits),
                     sci(e.energy_pj),
                     sci(e.area_mm2),
                     sci(e.edp),
@@ -702,6 +736,33 @@ mod tests {
         assert!(
             best.scalar <= paper_scalar,
             "climb ended worse than its seed: {} > {paper_scalar}",
+            best.scalar
+        );
+    }
+
+    #[test]
+    fn mixed_precision_search_beats_the_all_int8_best() {
+        // Widen the tiny space with bit-width knobs: exhaustive search
+        // must land on a mixed-precision design strictly below the best
+        // all-INT8 point on energy (byte traffic and MAC energy both
+        // shrink with the operand width).
+        let mut space = KnobSpace::tiny();
+        space.weight_bits = vec![4, 8];
+        space.act_bits = vec![4, 8];
+        let synth = ArchSynth::new(space, detnet()).unwrap();
+        let r = run_search(&synth, &mut Exhaustive::new(), &cfg(1000));
+        let best = r.best_eval().expect("tiny mixed space has feasible points");
+        assert_eq!((best.w_bits, best.a_bits), (4, 4), "INT4 must win on energy");
+        let best_int8 = r
+            .trace
+            .iter()
+            .filter(|e| e.feasible && e.w_bits == 8 && e.a_bits == 8)
+            .map(|e| e.scalar)
+            .fold(f64::INFINITY, f64::min);
+        assert!(best_int8.is_finite(), "all-INT8 block must have feasible points");
+        assert!(
+            best.scalar < best_int8,
+            "mixed best {} must beat all-INT8 best {best_int8}",
             best.scalar
         );
     }

@@ -70,6 +70,8 @@ pub type KnobVector = Vec<usize>;
 /// | 9   | `nodes`        | process node                                    |
 /// | 10  | `mrams`        | MRAM device for NVM levels                      |
 /// | 11  | `assigns`      | per-level device assignment (flavor or lattice mask) |
+/// | 12  | `weight_bits`  | uniform weight precision, bits                  |
+/// | 13  | `act_bits`     | uniform activation precision, bits              |
 #[derive(Debug, Clone)]
 pub struct KnobSpace {
     pub families: Vec<Family>,
@@ -84,10 +86,15 @@ pub struct KnobSpace {
     pub nodes: Vec<Node>,
     pub mrams: Vec<Device>,
     pub assigns: Vec<AssignSpec>,
+    /// Uniform weight bit-width axis (dim 12). A single `[8]` choice keeps
+    /// the search INT8-only (the historical behavior).
+    pub weight_bits: Vec<u32>,
+    /// Uniform activation bit-width axis (dim 13).
+    pub act_bits: Vec<u32>,
 }
 
 /// Number of knob dimensions.
-pub const DIMS: usize = 12;
+pub const DIMS: usize = 14;
 
 impl KnobSpace {
     /// The default exploration space: every paper design point is a member
@@ -121,7 +128,20 @@ impl KnobSpace {
             nodes: Node::ALL.to_vec(),
             mrams: vec![Device::SttMram, Device::SotMram, Device::VgsotMram],
             assigns,
+            weight_bits: vec![8],
+            act_bits: vec![8],
         }
+    }
+
+    /// [`KnobSpace::paper`] widened with mixed-precision bit-width axes
+    /// (INT4 / INT8 / FP16 on both operands) — the space behind
+    /// `xr-edge-dse search --mixed-precision`, letting the strategies
+    /// co-optimize per-network precision with the memory technology.
+    pub fn paper_mixed_precision() -> KnobSpace {
+        let mut space = KnobSpace::paper();
+        space.weight_bits = vec![4, 8, 16];
+        space.act_bits = vec![4, 8, 16];
+        space
     }
 
     /// A deliberately small space for exhaustive search in tests and
@@ -146,6 +166,8 @@ impl KnobSpace {
                 AssignSpec::Flavor(MemFlavor::P0),
                 AssignSpec::Flavor(MemFlavor::P1),
             ],
+            weight_bits: vec![8],
+            act_bits: vec![8],
         }
     }
 
@@ -164,6 +186,8 @@ impl KnobSpace {
             self.nodes.len(),
             self.mrams.len(),
             self.assigns.len(),
+            self.weight_bits.len(),
+            self.act_bits.len(),
         ]
     }
 
@@ -197,6 +221,10 @@ impl KnobSpace {
         ] {
             anyhow::ensure!(axis.iter().all(|&v| v > 0), "{name} axis must be positive");
         }
+        anyhow::ensure!(
+            self.weight_bits.iter().chain(&self.act_bits).all(|b| (1..=64).contains(b)),
+            "bit-width axes must lie in 1..=64"
+        );
         Ok(())
     }
 
@@ -270,7 +298,8 @@ impl KnobSpace {
     /// The knob vector of a paper design point, when this space contains
     /// every one of its coordinates: `family` at the v1/v2 `cfg` sizing,
     /// the paper buffer capacities, un-banked 2 MB GLB + 512 kB GWB on a
-    /// 64-bit bus, at (`node`, `mram`, named `flavor`).
+    /// 64-bit bus, at (`node`, `mram`, named `flavor`), INT8 on both
+    /// operand axes.
     pub fn paper_vector(
         &self,
         family: Family,
@@ -310,6 +339,8 @@ impl KnobSpace {
             self.nodes.iter().position(|&n| n == node)?,
             self.mrams.iter().position(|&m| m == mram)?,
             self.assigns.iter().position(|&a| a == AssignSpec::Flavor(flavor))?,
+            self.weight_bits.iter().position(|&b| b == 8)?,
+            self.act_bits.iter().position(|&b| b == 8)?,
         ])
     }
 }
@@ -325,44 +356,52 @@ pub struct Candidate {
     /// against `arch` yields `assignment`.
     pub spec: AssignSpec,
     pub assignment: DeviceAssignment,
+    /// Uniform (weight, activation) bit-widths from dims 12/13; the run
+    /// loop lowers them into a [`crate::workload::PrecisionPolicy`] when
+    /// mapping the workload.
+    pub bits: (u32, u32),
     pub vector: KnobVector,
 }
 
 /// Lowers knob vectors into candidates for one target workload, enforcing
 /// the capacity floors that make a candidate *valid* at all:
 ///
-/// - the GWB must hold the entire INT8 model — there is no DRAM to stream
-///   weights from (the paper's §3 modification);
-/// - the GLB must hold the largest single activation tensor — with no
-///   backing store, a tensor that cannot reside on-chip cannot exist
-///   (the full in+out double-buffer peak is *not* required; the paper's
-///   own 2 MB GLB does not satisfy it for EDSNet);
+/// - the GWB must hold the entire **quantized** model at the vector's
+///   weight bit-width — there is no DRAM to stream weights from (the
+///   paper's §3 modification);
+/// - the GLB must hold the largest single activation tensor at the
+///   vector's activation bit-width — with no backing store, a tensor that
+///   cannot reside on-chip cannot exist (the full in+out double-buffer
+///   peak is *not* required; the paper's own 2 MB GLB does not satisfy it
+///   for EDSNet);
 /// - a lattice mask must be in range for the synthesized family's
 ///   `2^macro_levels`;
 /// - GLB banking must divide the GLB capacity.
 pub struct ArchSynth {
     pub space: KnobSpace,
     pub net: Network,
-    /// Largest single activation tensor of `net`, bytes at INT8 — the GLB
-    /// residency floor, computed once.
-    min_glb_bytes: u64,
+    /// Largest single activation tensor of `net`, in **elements** — the
+    /// GLB residency floor before the activation width is applied,
+    /// computed once.
+    min_glb_elems: u64,
 }
 
 impl ArchSynth {
     pub fn new(space: KnobSpace, net: Network) -> crate::Result<ArchSynth> {
         space.validate()?;
-        let min_glb_bytes = net
+        let min_glb_elems = net
             .layers
             .iter()
             .map(|l| l.input_elems().max(l.output_elems()))
             .max()
             .unwrap_or(0);
-        Ok(ArchSynth { space, net, min_glb_bytes })
+        Ok(ArchSynth { space, net, min_glb_elems })
     }
 
-    /// The GLB residency floor for this workload, bytes.
+    /// The GLB residency floor for this workload at INT8, bytes (the
+    /// per-vector floors scale this by the activation width).
     pub fn min_glb_bytes(&self) -> u64 {
-        self.min_glb_bytes
+        self.min_glb_elems
     }
 
     /// Lower a knob vector into a [`Candidate`], or explain why it is not
@@ -385,20 +424,25 @@ impl ArchSynth {
         let node = self.space.nodes[v[9]];
         let mram = self.space.mrams[v[10]];
         let spec = self.space.assigns[v[11]];
+        let wbits = self.space.weight_bits[v[12]];
+        let abits = self.space.act_bits[v[13]];
 
         anyhow::ensure!(
             glb % banks == 0,
             "GLB {glb} B not divisible into {banks} banks"
         );
-        let weight_floor = self.net.weight_bytes(8);
+        // Capacity floors at the *quantized* footprints: narrower weights
+        // admit smaller GWBs (and vice versa for FP16) — precision and
+        // memory sizing co-optimize.
+        let weight_floor = self.net.weight_bytes(wbits);
         anyhow::ensure!(
             gwb as u64 >= weight_floor,
-            "GWB {gwb} B cannot hold the whole INT8 model ({weight_floor} B, no DRAM)"
+            "GWB {gwb} B cannot hold the whole {wbits}-bit model ({weight_floor} B, no DRAM)"
         );
+        let glb_floor = (self.min_glb_elems * abits as u64).div_ceil(8);
         anyhow::ensure!(
-            glb as u64 >= self.min_glb_bytes,
-            "GLB {glb} B cannot hold the largest activation tensor ({} B)",
-            self.min_glb_bytes
+            glb as u64 >= glb_floor,
+            "GLB {glb} B cannot hold the largest {abits}-bit activation tensor ({glb_floor} B)"
         );
 
         let arch = synthesize(family, grid, weight, input, accum, glb, banks, gwb, bus);
@@ -412,7 +456,15 @@ impl ArchSynth {
             );
         }
         let assignment = spec.lower(&arch, mram);
-        Ok(Candidate { arch, node, mram, spec, assignment, vector: v.clone() })
+        Ok(Candidate {
+            arch,
+            node,
+            mram,
+            spec,
+            assignment,
+            bits: (wbits, abits),
+            vector: v.clone(),
+        })
     }
 }
 
@@ -620,11 +672,41 @@ mod tests {
         let mut small_gwb = v.clone();
         small_gwb[7] = 0;
         let err = synth.lower(&small_gwb).unwrap_err().to_string();
-        assert!(err.contains("cannot hold the whole INT8 model"), "{err}");
+        assert!(err.contains("cannot hold the whole 8-bit model"), "{err}");
         let mut small_glb = v.clone();
         small_glb[5] = 0;
         let err = synth.lower(&small_glb).unwrap_err().to_string();
-        assert!(err.contains("largest activation tensor"), "{err}");
+        assert!(err.contains("activation tensor"), "{err}");
+    }
+
+    #[test]
+    fn quantized_floors_track_the_bit_width_knobs() {
+        // A GWB big enough for the INT4 model but not the INT8 one: the
+        // same vector must flip between valid and invalid on the weight
+        // bit-width knob alone.
+        let net = detnet();
+        let int8_floor = net.weight_bytes(8) as usize;
+        let int4_floor = net.weight_bytes(4) as usize;
+        let mut space = KnobSpace::paper_mixed_precision();
+        space.gwb_bytes = vec![int4_floor.max(1), 512 * 1024];
+        let synth = ArchSynth::new(space, net).unwrap();
+        let mut v = synth
+            .space
+            .paper_vector(
+                Family::WeightStationary,
+                PeConfig::V2,
+                MemFlavor::SramOnly,
+                crate::tech::Node::N7,
+                Device::VgsotMram,
+            )
+            .expect("paper point in mixed space");
+        v[7] = 0; // the INT4-sized GWB
+        assert!(int4_floor < int8_floor);
+        let err = synth.lower(&v).unwrap_err().to_string();
+        assert!(err.contains("8-bit model"), "{err}");
+        v[12] = synth.space.weight_bits.iter().position(|&b| b == 4).unwrap();
+        let cand = synth.lower(&v).expect("INT4 model fits the small GWB");
+        assert_eq!(cand.bits, (4, 8));
     }
 
     #[test]
@@ -707,7 +789,7 @@ mod tests {
         space.glb_bytes = vec![1024 * 1024];
         space.glb_banks = vec![3];
         let synth = ArchSynth::new(space, detnet()).unwrap();
-        let v = vec![1, 4, 4, 4, 3, 0, 0, 2, 1, 4, 2, 0];
+        let v = vec![1, 4, 4, 4, 3, 0, 0, 2, 1, 4, 2, 0, 0, 0];
         let err = synth.lower(&v).unwrap_err().to_string();
         assert!(err.contains("not divisible"), "{err}");
 

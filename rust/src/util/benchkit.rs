@@ -4,12 +4,54 @@
 //! that both *times* the model evaluation and *prints* the regenerated
 //! table/figure, so `cargo bench | tee bench_output.txt` is a full
 //! reproduction record.
+//!
+//! For the CI bench-regression harness every measured closure is also
+//! recorded in-process; a bench binary that calls
+//! [`write_json_if_requested`] before exiting dumps the records as JSON to
+//! the path named by `XR_DSE_BENCH_JSON` (no-op when the variable is
+//! unset). `ci/bench_regression.py` merges those files into `BENCH_5.json`
+//! and gates them against `benches/baseline.json`.
 
+use std::sync::{Mutex, OnceLock};
 use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// One recorded measurement (everything [`bench_units`] learned).
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    pub name: String,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub p50_s: f64,
+    pub iters: usize,
+    /// Work units processed per timed iteration (e.g. design points per
+    /// grid sweep); 0 = unspecified. The regression harness derives
+    /// units/second as `units_per_iter / mean_s`.
+    pub units_per_iter: f64,
+}
+
+fn records() -> &'static Mutex<Vec<BenchRecord>> {
+    static RECORDS: OnceLock<Mutex<Vec<BenchRecord>>> = OnceLock::new();
+    RECORDS.get_or_init(|| Mutex::new(Vec::new()))
+}
 
 /// Measure a closure: `warmup` unmeasured runs, then `iters` timed runs.
 /// Returns (mean_s, min_s, p50_s) and prints a criterion-style line.
-pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> (f64, f64, f64) {
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, f: F) -> (f64, f64, f64) {
+    bench_units(name, warmup, iters, 0.0, f)
+}
+
+/// [`bench`] with a work-unit annotation: `units_per_iter` names how many
+/// design points / evaluations one timed iteration processes, so the
+/// regression harness can report throughput (units/s) alongside wall time.
+pub fn bench_units<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    units_per_iter: f64,
+    mut f: F,
+) -> (f64, f64, f64) {
     for _ in 0..warmup {
         f();
     }
@@ -28,7 +70,54 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> (
         fmt_s(p50),
         fmt_s(min)
     );
+    records().lock().unwrap().push(BenchRecord {
+        name: name.to_string(),
+        mean_s: mean,
+        min_s: min,
+        p50_s: p50,
+        iters,
+        units_per_iter,
+    });
     (mean, min, p50)
+}
+
+/// Dump every bench recorded so far as JSON to `path` (one object per
+/// bench: wall-time stats plus derived units/s when annotated).
+pub fn write_json(path: &std::path::Path) -> crate::Result<()> {
+    let recs = records().lock().unwrap();
+    let mut benches = Vec::with_capacity(recs.len());
+    for r in recs.iter() {
+        let mut pairs = vec![
+            ("name", Json::str(r.name.clone())),
+            ("mean_s", Json::num(r.mean_s)),
+            ("min_s", Json::num(r.min_s)),
+            ("p50_s", Json::num(r.p50_s)),
+            ("iters", Json::num(r.iters as f64)),
+        ];
+        if r.units_per_iter > 0.0 {
+            pairs.push(("units_per_iter", Json::num(r.units_per_iter)));
+            pairs.push(("units_per_s", Json::num(r.units_per_iter / r.mean_s.max(1e-12))));
+        }
+        benches.push(Json::obj(pairs));
+    }
+    let doc = Json::obj(vec![("benches", Json::Arr(benches))]);
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, doc.to_pretty())?;
+    Ok(())
+}
+
+/// [`write_json`] to the path named by the `XR_DSE_BENCH_JSON` env var —
+/// the hook every bench binary calls before exiting; a no-op when the
+/// variable is unset (interactive `cargo bench` runs are unaffected).
+pub fn write_json_if_requested() -> crate::Result<()> {
+    match std::env::var("XR_DSE_BENCH_JSON") {
+        Ok(path) if !path.is_empty() => write_json(std::path::Path::new(&path)),
+        _ => Ok(()),
+    }
 }
 
 fn fmt_s(s: f64) -> String {
@@ -62,6 +151,26 @@ mod tests {
         assert_eq!(n, 12);
         assert!(mean >= min);
         assert!(p50 >= min);
+    }
+
+    #[test]
+    fn bench_units_records_throughput_json() {
+        bench_units("unit-bench-json", 0, 3, 36.0, || {
+            std::hint::black_box(1 + 1);
+        });
+        let dir = std::env::temp_dir().join(format!("xr_dse_bench_{}", std::process::id()));
+        let path = dir.join("bench.json");
+        write_json(&path).unwrap();
+        let doc = Json::parse_file(&path).unwrap();
+        let benches = doc.req("benches").unwrap().as_arr().unwrap().to_vec();
+        let rec = benches
+            .iter()
+            .find(|b| b.get("name").as_str() == Some("unit-bench-json"))
+            .expect("recorded bench present");
+        assert_eq!(rec.req_f64("units_per_iter").unwrap(), 36.0);
+        assert!(rec.req_f64("units_per_s").unwrap() > 0.0);
+        assert!(rec.req_f64("mean_s").unwrap() >= 0.0);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -194,6 +194,7 @@ impl NetBuilder {
             name: self.name.clone(),
             layers: self.layers.clone(),
             input: self.input,
+            precision: super::PrecisionPolicy::int8(),
         };
         net.validate().expect("builder produced invalid network");
         net

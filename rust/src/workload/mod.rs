@@ -13,6 +13,9 @@
 
 pub mod builder;
 pub mod builtin;
+pub mod precision;
+
+pub use precision::{LayerBits, PrecisionPolicy};
 
 use crate::util::json::Json;
 
@@ -209,6 +212,10 @@ pub struct Network {
     pub layers: Vec<Layer>,
     /// Input tensor (c, h, w).
     pub input: (usize, usize, usize),
+    /// Per-layer operand bit-widths ([`PrecisionPolicy::int8`] by default
+    /// — the identity policy that reproduces the pre-precision numbers
+    /// bitwise).
+    pub precision: PrecisionPolicy,
 }
 
 impl Network {
@@ -221,9 +228,21 @@ impl Network {
     pub fn total_weights(&self) -> u64 {
         self.layers.iter().map(|l| l.weights()).sum()
     }
-    /// Weight storage in bytes at the given per-element bit width.
+    /// Weight storage in bytes at the given *uniform* per-element bit
+    /// width (ignores the attached policy; the Fig-2(d) sizing anchor).
     pub fn weight_bytes(&self, bits: u32) -> u64 {
         (self.total_weights() * bits as u64).div_ceil(8)
+    }
+    /// Weight storage in bytes under the attached [`PrecisionPolicy`]
+    /// (per-layer widths summed in bits, then rounded up to bytes).
+    /// Identical to [`Network::weight_bytes`]`(8)` under the INT8 policy.
+    pub fn quantized_weight_bytes(&self) -> u64 {
+        let bits: u64 = self
+            .layers
+            .iter()
+            .map(|l| l.weights() * self.precision.bits_for(&l.name).weight_bits as u64)
+            .sum();
+        bits.div_ceil(8)
     }
     /// Largest single-layer activation working set (in+out), the sizing
     /// anchor for the global activation buffer (paper removes DRAM and sizes
@@ -238,13 +257,32 @@ impl Network {
     pub fn peak_activation_bytes(&self, bits: u32) -> u64 {
         (self.peak_activation_elems() * bits as u64).div_ceil(8)
     }
+    /// Peak single-layer activation working set (in+out) in bytes under
+    /// the attached [`PrecisionPolicy`]. Identical to
+    /// [`Network::peak_activation_bytes`]`(8)` under the INT8 policy.
+    pub fn quantized_peak_activation_bytes(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| {
+                let bits = self.precision.bits_for(&l.name).act_bits as u64;
+                ((l.input_elems() + l.output_elems()) * bits).div_ceil(8)
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Attach a precision policy (returns `self` for chaining).
+    pub fn with_precision(mut self, precision: PrecisionPolicy) -> Network {
+        self.precision = precision;
+        self
+    }
 
     pub fn compute_layers(&self) -> impl Iterator<Item = &Layer> {
         self.layers.iter().filter(|l| l.is_compute())
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("name", Json::str(self.name.clone())),
             (
                 "input",
@@ -258,7 +296,13 @@ impl Network {
                 "layers",
                 Json::Arr(self.layers.iter().map(|l| l.to_json()).collect()),
             ),
-        ])
+        ];
+        // The INT8 identity policy is implicit, keeping the artifact files
+        // exchanged with the python compile path byte-stable.
+        if !self.precision.is_int8() {
+            pairs.push(("precision", self.precision.to_json()));
+        }
+        Json::obj(pairs)
     }
 
     pub fn from_json(j: &Json) -> crate::Result<Network> {
@@ -274,6 +318,10 @@ impl Network {
             .iter()
             .map(Layer::from_json)
             .collect::<crate::Result<Vec<_>>>()?;
+        let precision = match j.get("precision") {
+            Json::Null => PrecisionPolicy::int8(),
+            p => PrecisionPolicy::from_json(p)?,
+        };
         let net = Network {
             name: j.req_str("name")?.to_string(),
             layers,
@@ -282,6 +330,7 @@ impl Network {
                 arr[1].as_usize().unwrap_or(0),
                 arr[2].as_usize().unwrap_or(0),
             ),
+            precision,
         };
         net.validate()?;
         Ok(net)
@@ -301,6 +350,7 @@ impl Network {
     /// depthwise groups divide channels, ...).
     pub fn validate(&self) -> crate::Result<()> {
         anyhow::ensure!(!self.layers.is_empty(), "network '{}' has no layers", self.name);
+        self.precision.validate()?;
         for l in &self.layers {
             anyhow::ensure!(
                 l.in_c > 0 && l.in_h > 0 && l.in_w > 0 && l.out_c > 0 && l.out_h > 0 && l.out_w > 0,
@@ -419,6 +469,7 @@ mod tests {
             name: "tiny".into(),
             input: (3, 32, 32),
             layers: vec![conv("c1", 3, 8, 32, 3, 2), conv("c2", 8, 16, 16, 3, 1)],
+            precision: PrecisionPolicy::int8(),
         };
         let j = net.to_json();
         let net2 = Network::from_json(&j).unwrap();
@@ -434,6 +485,7 @@ mod tests {
             name: "bad".into(),
             input: (3, 32, 32),
             layers: vec![l],
+            precision: PrecisionPolicy::int8(),
         };
         assert!(net.validate().is_err());
     }
@@ -444,11 +496,51 @@ mod tests {
             name: "t".into(),
             input: (3, 32, 32),
             layers: vec![conv("c1", 3, 8, 32, 3, 1), conv("c2", 8, 4, 32, 3, 1)],
+            precision: PrecisionPolicy::int8(),
         };
         // c1: 3*32*32 + 8*32*32 = 11*1024; c2: 8*32*32+4*32*32 = 12*1024
         assert_eq!(net.peak_activation_elems(), 12 * 1024);
         assert_eq!(net.peak_activation_bytes(8), 12 * 1024);
         assert_eq!(net.peak_activation_bytes(4), 6 * 1024);
+    }
+
+    #[test]
+    fn quantized_accounting_matches_uniform_at_int8_and_scales_down() {
+        let base = Network {
+            name: "t".into(),
+            input: (3, 32, 32),
+            layers: vec![conv("c1", 3, 8, 32, 3, 1), conv("c2", 8, 4, 32, 3, 1)],
+            precision: PrecisionPolicy::int8(),
+        };
+        assert_eq!(base.quantized_weight_bytes(), base.weight_bytes(8));
+        assert_eq!(base.quantized_peak_activation_bytes(), base.peak_activation_bytes(8));
+        let int4 = base.clone().with_precision(PrecisionPolicy::int4());
+        assert_eq!(int4.quantized_weight_bytes(), base.weight_bytes(4));
+        assert_eq!(int4.quantized_peak_activation_bytes(), base.peak_activation_bytes(4));
+        // per-layer override: only c2's weights shrink
+        let mixed = base
+            .clone()
+            .with_precision(PrecisionPolicy::int8().with_layer("c2", LayerBits::uniform(4)));
+        let c1_w = base.layers[0].weights();
+        let c2_w = base.layers[1].weights();
+        assert_eq!(mixed.quantized_weight_bytes(), (c1_w * 8 + c2_w * 4).div_ceil(8));
+    }
+
+    #[test]
+    fn precision_json_roundtrip_and_default_omission() {
+        let base = Network {
+            name: "t".into(),
+            input: (3, 32, 32),
+            layers: vec![conv("c1", 3, 8, 32, 3, 1)],
+            precision: PrecisionPolicy::int8(),
+        };
+        // INT8 stays implicit, keeping artifact files byte-stable.
+        assert!(!base.to_json().to_pretty().contains("precision"));
+        let policy = PrecisionPolicy::of_bits(4, 8).with_layer("c1", LayerBits::uniform(16));
+        let mixed = base.clone().with_precision(policy);
+        let round = Network::from_json(&mixed.to_json()).unwrap();
+        assert_eq!(round.precision, mixed.precision);
+        assert_eq!(round.quantized_weight_bytes(), mixed.quantized_weight_bytes());
     }
 
     #[test]

@@ -1,0 +1,286 @@
+//! Per-layer precision policies — the bit-width axis of the design space.
+//!
+//! The paper's reproduction was historically hard-wired to INT8: every
+//! element count was charged as one byte and the MAC energy table assumed
+//! 8-bit operands. XR perception accelerators (XR-NPE's mixed-precision
+//! SIMD, Siracusa's at-MRAM engine) show that *per-layer* operand width is
+//! the strongest energy/area lever on top of the memory-technology choice,
+//! so a [`PrecisionPolicy`] makes bit-width a first-class workload
+//! property: a default (weight, activation) width pair plus per-layer
+//! overrides, attached to [`super::Network`] and consumed by the mapper
+//! ([`crate::mapping`]), the evaluation engine ([`crate::eval`]), the
+//! guided search ([`crate::search`]) and the scenario layer.
+//!
+//! **INT8 identity guarantee**: the INT8 policy is the arithmetic
+//! identity. Every precision effect is applied as a multiplication by
+//! `bits / datum_bits` (exactly `1.0` for INT8 on the 8-bit datapaths), so
+//! evaluating under [`PrecisionPolicy::int8`] is bitwise-identical to the
+//! pre-precision code path — pinned by `tests/precision_equivalence.rs`.
+
+use crate::util::json::Json;
+
+/// Bit-widths of one layer's operands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct LayerBits {
+    /// Weight (parameter) width, bits.
+    pub weight_bits: u32,
+    /// Activation (input/output tensor) width, bits.
+    pub act_bits: u32,
+}
+
+impl LayerBits {
+    /// The INT8 identity point (8-bit weights and activations).
+    pub const INT8: LayerBits = LayerBits { weight_bits: 8, act_bits: 8 };
+
+    /// Same width for both operands.
+    pub fn uniform(bits: u32) -> LayerBits {
+        LayerBits { weight_bits: bits, act_bits: bits }
+    }
+
+    /// Structural sanity: widths must be in 1..=64 bits.
+    pub fn validate(&self) -> crate::Result<()> {
+        for (label, b) in [("weight", self.weight_bits), ("act", self.act_bits)] {
+            anyhow::ensure!(
+                (1..=64).contains(&b),
+                "{label} bit-width {b} out of range (1..=64)"
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Per-layer weight/activation bit-widths for one network: a default
+/// [`LayerBits`] pair plus per-layer overrides (keyed by layer name).
+/// Presets cover the common uniform policies (INT4/INT8/FP16); arbitrary
+/// mixed-precision schedules compose via [`PrecisionPolicy::with_layer`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrecisionPolicy {
+    /// Report label ("int8", "int4", "fp16", "w4a8", "mixed", …).
+    name: String,
+    /// Bits for layers without an override.
+    pub default: LayerBits,
+    /// Per-layer overrides, in insertion order (first match wins).
+    overrides: Vec<(String, LayerBits)>,
+}
+
+impl Default for PrecisionPolicy {
+    fn default() -> Self {
+        PrecisionPolicy::int8()
+    }
+}
+
+impl PrecisionPolicy {
+    /// The INT8 identity policy (the pre-precision behavior, bitwise).
+    pub fn int8() -> PrecisionPolicy {
+        PrecisionPolicy {
+            name: "int8".to_string(),
+            default: LayerBits::INT8,
+            overrides: Vec::new(),
+        }
+    }
+
+    /// Uniform INT4 (4-bit weights and activations).
+    pub fn int4() -> PrecisionPolicy {
+        PrecisionPolicy::uniform("int4", 4)
+    }
+
+    /// Uniform FP16 (16-bit weights and activations).
+    pub fn fp16() -> PrecisionPolicy {
+        PrecisionPolicy::uniform("fp16", 16)
+    }
+
+    /// Uniform policy with one width for both operands.
+    pub fn uniform(name: &str, bits: u32) -> PrecisionPolicy {
+        PrecisionPolicy {
+            name: name.to_string(),
+            default: LayerBits::uniform(bits),
+            overrides: Vec::new(),
+        }
+    }
+
+    /// Uniform policy with independent weight/activation widths, labeled
+    /// canonically ("w4a8"-style; "int8"/"int4"/"fp16" for the presets).
+    pub fn of_bits(weight_bits: u32, act_bits: u32) -> PrecisionPolicy {
+        let name = match (weight_bits, act_bits) {
+            (8, 8) => "int8".to_string(),
+            (4, 4) => "int4".to_string(),
+            (16, 16) => "fp16".to_string(),
+            (w, a) => format!("w{w}a{a}"),
+        };
+        PrecisionPolicy {
+            name,
+            default: LayerBits { weight_bits, act_bits },
+            overrides: Vec::new(),
+        }
+    }
+
+    /// Parse a CLI policy name: `int8` | `int4` | `fp16` | `w<N>a<M>`.
+    pub fn from_str(s: &str) -> crate::Result<PrecisionPolicy> {
+        let lower = s.to_ascii_lowercase();
+        match lower.as_str() {
+            "int8" => return Ok(PrecisionPolicy::int8()),
+            "int4" => return Ok(PrecisionPolicy::int4()),
+            "fp16" => return Ok(PrecisionPolicy::fp16()),
+            _ => {}
+        }
+        let parse_pair = || -> Option<(u32, u32)> {
+            let rest = lower.strip_prefix('w')?;
+            let (w, a) = rest.split_once('a')?;
+            Some((w.parse().ok()?, a.parse().ok()?))
+        };
+        match parse_pair() {
+            Some((w, a)) => {
+                let p = PrecisionPolicy::of_bits(w, a);
+                p.validate()?;
+                Ok(p)
+            }
+            None => anyhow::bail!("unknown precision policy '{s}' (int8|int4|fp16|w<N>a<M>)"),
+        }
+    }
+
+    /// Override one layer's widths (returns `self` for chaining). The
+    /// policy label becomes "mixed" once any override diverges from the
+    /// default.
+    pub fn with_layer(mut self, layer: &str, bits: LayerBits) -> PrecisionPolicy {
+        if bits != self.default && self.name != "mixed" {
+            self.name = "mixed".to_string();
+        }
+        self.overrides.push((layer.to_string(), bits));
+        self
+    }
+
+    /// The widths this policy assigns to a layer.
+    pub fn bits_for(&self, layer_name: &str) -> LayerBits {
+        self.overrides
+            .iter()
+            .find(|(name, _)| name == layer_name)
+            .map(|(_, b)| *b)
+            .unwrap_or(self.default)
+    }
+
+    /// Report label.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Whether this policy is the INT8 identity for every layer.
+    pub fn is_int8(&self) -> bool {
+        self.default == LayerBits::INT8
+            && self.overrides.iter().all(|(_, b)| *b == LayerBits::INT8)
+    }
+
+    /// Structural sanity of every width in the policy.
+    pub fn validate(&self) -> crate::Result<()> {
+        self.default.validate()?;
+        for (layer, bits) in &self.overrides {
+            bits.validate()
+                .map_err(|e| anyhow::anyhow!("layer '{layer}': {e}"))?;
+        }
+        Ok(())
+    }
+
+    // ---- JSON (interchange with python/compile) ---------------------------
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("name", Json::str(self.name.clone())),
+            ("weight_bits", Json::num(self.default.weight_bits as f64)),
+            ("act_bits", Json::num(self.default.act_bits as f64)),
+        ];
+        if !self.overrides.is_empty() {
+            let ovr = self
+                .overrides
+                .iter()
+                .map(|(layer, b)| {
+                    Json::obj(vec![
+                        ("layer", Json::str(layer.clone())),
+                        ("weight_bits", Json::num(b.weight_bits as f64)),
+                        ("act_bits", Json::num(b.act_bits as f64)),
+                    ])
+                })
+                .collect();
+            pairs.push(("overrides", Json::Arr(ovr)));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<PrecisionPolicy> {
+        let default = LayerBits {
+            weight_bits: j.req_usize("weight_bits")? as u32,
+            act_bits: j.req_usize("act_bits")? as u32,
+        };
+        let mut overrides = Vec::new();
+        if let Some(arr) = j.get("overrides").as_arr() {
+            for o in arr {
+                overrides.push((
+                    o.req_str("layer")?.to_string(),
+                    LayerBits {
+                        weight_bits: o.req_usize("weight_bits")? as u32,
+                        act_bits: o.req_usize("act_bits")? as u32,
+                    },
+                ));
+            }
+        }
+        let policy = PrecisionPolicy {
+            name: j.req_str("name")?.to_string(),
+            default,
+            overrides,
+        };
+        policy.validate()?;
+        Ok(policy)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_and_labels() {
+        assert_eq!(PrecisionPolicy::int8().name(), "int8");
+        assert!(PrecisionPolicy::int8().is_int8());
+        assert_eq!(PrecisionPolicy::int4().default, LayerBits::uniform(4));
+        assert!(!PrecisionPolicy::int4().is_int8());
+        assert_eq!(PrecisionPolicy::of_bits(4, 8).name(), "w4a8");
+        assert_eq!(PrecisionPolicy::of_bits(16, 16).name(), "fp16");
+    }
+
+    #[test]
+    fn overrides_apply_per_layer() {
+        let p = PrecisionPolicy::int8().with_layer("conv3", LayerBits::uniform(4));
+        assert_eq!(p.name(), "mixed");
+        assert!(!p.is_int8());
+        assert_eq!(p.bits_for("conv3"), LayerBits::uniform(4));
+        assert_eq!(p.bits_for("conv4"), LayerBits::INT8);
+        // an INT8 override keeps identity semantics
+        let q = PrecisionPolicy::int8().with_layer("conv0", LayerBits::INT8);
+        assert!(q.is_int8());
+        assert_eq!(q.name(), "int8");
+    }
+
+    #[test]
+    fn parse_round_trips() {
+        for s in ["int8", "int4", "fp16", "w4a8", "w8a16"] {
+            let p = PrecisionPolicy::from_str(s).unwrap();
+            assert_eq!(p.name(), s);
+        }
+        assert!(PrecisionPolicy::from_str("int2.5").is_err());
+        assert!(PrecisionPolicy::from_str("w0a8").is_err());
+        assert!(PrecisionPolicy::from_str("w4a99").is_err());
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let p = PrecisionPolicy::of_bits(4, 8).with_layer("head", LayerBits::uniform(16));
+        let j = p.to_json();
+        let q = PrecisionPolicy::from_json(&j).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_widths() {
+        assert!(LayerBits::uniform(0).validate().is_err());
+        assert!(LayerBits::uniform(65).validate().is_err());
+        assert!(LayerBits::uniform(4).validate().is_ok());
+    }
+}

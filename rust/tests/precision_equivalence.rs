@@ -1,0 +1,187 @@
+//! ISSUE 5 acceptance: the INT8 [`PrecisionPolicy`] is the *identity* —
+//! every figure, query and search result the repo produced before the
+//! precision dimension existed must reproduce bitwise under an explicit
+//! INT8 policy. The scaling design makes this exact (every precision
+//! effect is a multiplication by `bits / datum_bits`, which is exactly
+//! `1.0` at INT8), and these tests pin it end-to-end:
+//!
+//! - the fig2e/fig3d energy grid (per-level read/write breakdowns, the
+//!   figure-2e series, over all nine variants × two nodes);
+//! - the Table-2 areas and Table-3 memory-power savings;
+//! - the `.precisions(..)` query axis against the axis-free default;
+//! - monotonicity across INT4 → INT8 → FP16 on the full grid;
+//! - the `--precision` CLI surface.
+
+use xr_edge_dse::arch::{self, PeConfig};
+use xr_edge_dse::dse::{fig3d_grid, paper_sweeper};
+use xr_edge_dse::eval::{DesignPoint, Engine, Query};
+use xr_edge_dse::tech::Node;
+use xr_edge_dse::workload::{builtin, PrecisionPolicy};
+
+/// The paper evaluation set with an *explicit* INT8 policy attached to
+/// every workload (the default engine leaves the policy implicit).
+fn explicit_int8_engine() -> Engine {
+    Engine::new(
+        vec![
+            arch::cpu(),
+            arch::eyeriss(PeConfig::V2),
+            arch::simba(PeConfig::V2),
+        ],
+        vec![
+            builtin::by_name("detnet").unwrap().with_precision(PrecisionPolicy::int8()),
+            builtin::by_name("edsnet").unwrap().with_precision(PrecisionPolicy::int8()),
+        ],
+    )
+}
+
+fn assert_points_bitwise(a: &DesignPoint, b: &DesignPoint, tag: &str) {
+    assert_eq!(a.arch, b.arch, "{tag}");
+    assert_eq!(a.network, b.network, "{tag}");
+    assert_eq!(a.node, b.node, "{tag}");
+    assert_eq!(a.flavor(), b.flavor(), "{tag}");
+    assert_eq!(a.mram(), b.mram(), "{tag}");
+    // fig2e/fig3d: compute + per-level read/write energies
+    assert_eq!(a.energy.compute_pj.to_bits(), b.energy.compute_pj.to_bits(), "{tag}: compute");
+    assert_eq!(a.energy.levels.len(), b.energy.levels.len(), "{tag}");
+    for (x, y) in a.energy.levels.iter().zip(&b.energy.levels) {
+        assert_eq!(x.level, y.level, "{tag}");
+        assert_eq!(x.read_pj.to_bits(), y.read_pj.to_bits(), "{tag}: {} read", x.level);
+        assert_eq!(x.write_pj.to_bits(), y.write_pj.to_bits(), "{tag}: {} write", x.level);
+    }
+    assert_eq!(a.energy.total_pj().to_bits(), b.energy.total_pj().to_bits(), "{tag}: total");
+    // table 2: die area
+    assert_eq!(a.area_mm2.to_bits(), b.area_mm2.to_bits(), "{tag}: area");
+    // table 3: latency + memory power at both paper rates
+    assert_eq!(a.latency_ns.to_bits(), b.latency_ns.to_bits(), "{tag}: latency");
+    assert_eq!(a.p_mem_uw(10.0).to_bits(), b.p_mem_uw(10.0).to_bits(), "{tag}: P_mem@10");
+    assert_eq!(a.p_mem_uw(0.1).to_bits(), b.p_mem_uw(0.1).to_bits(), "{tag}: P_mem@0.1");
+    assert_eq!(a.utilization.to_bits(), b.utilization.to_bits(), "{tag}: util");
+}
+
+#[test]
+fn int8_policy_reproduces_the_paper_grid_bitwise() {
+    // The full fig3d grid (3 archs × 2 nets × 2 nodes × 3 flavors = the
+    // fig2e/fig3d/table2/table3 substrate) through the historical default
+    // path vs the explicit-INT8-policy path.
+    let legacy = fig3d_grid(&paper_sweeper().unwrap());
+    let explicit = Query::over(&explicit_int8_engine())
+        .nodes(&[Node::N28, Node::N7])
+        .points();
+    assert_eq!(legacy.len(), 36);
+    assert_eq!(legacy.len(), explicit.len());
+    for (a, b) in legacy.iter().zip(&explicit) {
+        let tag = format!("{}/{}/{:?}/{}", a.arch, a.network, a.node, a.flavor_label());
+        assert_points_bitwise(a, b, &tag);
+        assert_eq!(b.precision, "int8");
+    }
+}
+
+#[test]
+fn precision_axis_int8_coordinate_is_the_default_path() {
+    // The `.precisions(..)` axis re-lowers the map per policy; its INT8
+    // coordinate must be indistinguishable from not having the axis.
+    let s = paper_sweeper().unwrap();
+    let base = Query::over(s.engine()).nodes(&[Node::N28, Node::N7]).points();
+    let via_axis = Query::over(s.engine())
+        .nodes(&[Node::N28, Node::N7])
+        .precisions(&[PrecisionPolicy::int8()])
+        .points();
+    assert_eq!(base.len(), via_axis.len());
+    for (a, b) in base.iter().zip(&via_axis) {
+        assert_points_bitwise(a, b, &format!("{}/{}", a.arch, a.network));
+    }
+}
+
+#[test]
+fn grid_energy_monotone_nonincreasing_in_bits() {
+    // INT4 ≤ INT8 ≤ FP16 on energy, traffic-driven memory power and the
+    // quantized weight footprint, across the whole paper grid.
+    let s = paper_sweeper().unwrap();
+    let pols = [
+        PrecisionPolicy::int4(),
+        PrecisionPolicy::int8(),
+        PrecisionPolicy::fp16(),
+    ];
+    let pts = Query::over(s.engine())
+        .nodes(&[Node::N28, Node::N7])
+        .precisions(&pols)
+        .points();
+    // groups of 3 policies share (entry); within each (policy block) the
+    // node × flavor sub-grid is identical, so compare stride-wise.
+    // Enumeration: entry → policy → node → flavor; per entry the policy
+    // blocks are contiguous, each 2 nodes × 3 flavors = 6 points long.
+    assert_eq!(pts.len(), 6 * 3 * 6);
+    for entry in 0..6 {
+        let base = entry * 18;
+        for i in 0..6 {
+            let (p4, p8, p16) = (&pts[base + i], &pts[base + 6 + i], &pts[base + 12 + i]);
+            assert_eq!(p4.precision, "int4");
+            assert_eq!(p8.precision, "int8");
+            assert_eq!(p16.precision, "fp16");
+            assert_eq!(p4.arch, p8.arch);
+            assert_eq!(p4.flavor(), p16.flavor());
+            let tag = format!("{}/{}/{:?}/{}", p4.arch, p4.network, p4.node, p4.flavor_label());
+            assert!(
+                p4.energy.total_pj() <= p8.energy.total_pj(),
+                "{tag}: int4 energy above int8"
+            );
+            assert!(
+                p8.energy.total_pj() <= p16.energy.total_pj(),
+                "{tag}: int8 energy above fp16"
+            );
+            assert!(
+                p4.energy.total_pj() < p16.energy.total_pj(),
+                "{tag}: energy must strictly shrink 16→4 bits"
+            );
+        }
+    }
+}
+
+#[test]
+fn quantized_footprints_scale_with_policy() {
+    let det = builtin::by_name("detnet").unwrap();
+    let int8 = det.quantized_weight_bytes();
+    let int4 = det
+        .clone()
+        .with_precision(PrecisionPolicy::int4())
+        .quantized_weight_bytes();
+    let fp16 = det
+        .clone()
+        .with_precision(PrecisionPolicy::fp16())
+        .quantized_weight_bytes();
+    assert_eq!(int8, det.weight_bytes(8));
+    assert!(int4 <= int8 && int8 <= fp16);
+    assert_eq!(fp16, det.weight_bytes(16));
+}
+
+// ---- CLI ---------------------------------------------------------------
+
+fn run_cli(args: &[&str]) -> std::process::Output {
+    std::process::Command::new(env!("CARGO_BIN_EXE_xr-edge-dse"))
+        .args(args)
+        .output()
+        .expect("spawn xr-edge-dse")
+}
+
+#[test]
+fn cli_precision_flag_flows_through_energy() {
+    let int8 = run_cli(&["energy", "--node", "7", "--flavor", "p1"]);
+    assert!(int8.status.success(), "{}", String::from_utf8_lossy(&int8.stderr));
+    let int8_out = String::from_utf8_lossy(&int8.stdout).to_string();
+    assert!(int8_out.contains("[int8]"), "{int8_out}");
+
+    let int4 = run_cli(&["energy", "--node", "7", "--flavor", "p1", "--precision", "int4"]);
+    assert!(int4.status.success(), "{}", String::from_utf8_lossy(&int4.stderr));
+    let int4_out = String::from_utf8_lossy(&int4.stdout).to_string();
+    assert!(int4_out.contains("[int4]"), "{int4_out}");
+    assert_ne!(int8_out, int4_out, "precision must change the energy table");
+
+    // explicit INT8 is byte-identical to the default
+    let explicit = run_cli(&["energy", "--node", "7", "--flavor", "p1", "--precision", "int8"]);
+    assert_eq!(int8.stdout, explicit.stdout);
+
+    let bad = run_cli(&["energy", "--precision", "intX"]);
+    assert!(!bad.status.success());
+    assert!(String::from_utf8_lossy(&bad.stderr).contains("unknown precision"), "{}",
+        String::from_utf8_lossy(&bad.stderr));
+}

@@ -145,12 +145,69 @@ fn prop_quant_roundtrip_error_bounded() {
     check("quant error ≤ scale/2", 200, |g| {
         let lo = g.f64_in(-8.0, -0.01) as f32;
         let hi = g.f64_in(0.01, 8.0) as f32;
-        let qp = xr_edge_dse::quant::QParams::calibrate(lo, hi);
+        let bits = g.usize_in(2, 12) as u32;
+        let qp = xr_edge_dse::quant::QParams::calibrate_bits(lo, hi, bits);
         for _ in 0..16 {
             let x = g.f64_in(lo as f64, hi as f64) as f32;
-            let err = (qp.fake_quant(x, 0, 255) - x).abs();
-            assert!(err <= qp.scale * 0.5 + 1e-5);
+            let err = (qp.fake_quant(x) - x).abs();
+            assert!(err <= qp.scale * 0.5 + 1e-5, "bits {bits}");
         }
+    });
+}
+
+#[test]
+fn prop_energy_traffic_footprint_monotone_in_bits() {
+    // ISSUE 5 acceptance: modeled energy, memory traffic and weight
+    // footprint are monotone nonincreasing in operand bit-width, for any
+    // random workload on any architecture.
+    use xr_edge_dse::workload::PrecisionPolicy;
+    check("precision monotone", 40, |g| {
+        let net = random_net(g);
+        let arch = random_arch(g);
+        let flavor = g.choose(&[MemFlavor::SramOnly, MemFlavor::P0, MemFlavor::P1]);
+        let eval = |bits: u32| -> (f64, f64, u64) {
+            let qnet = net.clone().with_precision(PrecisionPolicy::of_bits(bits, bits));
+            let map = map_network(&arch, &qnet);
+            let traffic: f64 = map.level_totals().iter().map(|t| t.reads + t.writes).sum();
+            let energy = xr_edge_dse::energy::estimate(
+                &arch,
+                &map,
+                Node::N7,
+                flavor,
+                xr_edge_dse::tech::paper_mram_for(Node::N7),
+            )
+            .total_pj();
+            (energy, traffic, qnet.quantized_weight_bytes())
+        };
+        let mut last: Option<(f64, f64, u64)> = None;
+        for bits in [4u32, 8, 16] {
+            let cur = eval(bits);
+            if let Some(prev) = last {
+                assert!(prev.0 <= cur.0, "{}: energy not monotone at {bits}b", arch.name);
+                assert!(prev.1 <= cur.1, "{}: traffic not monotone at {bits}b", arch.name);
+                assert!(prev.2 <= cur.2, "{}: footprint not monotone at {bits}b", arch.name);
+            }
+            last = Some(cur);
+        }
+    });
+}
+
+#[test]
+fn prop_int8_policy_is_the_identity() {
+    // The other half of the acceptance bar: an explicit INT8 policy must
+    // be bitwise-invisible on any random workload/architecture.
+    use xr_edge_dse::workload::PrecisionPolicy;
+    check("int8 policy identity", 40, |g| {
+        let net = random_net(g);
+        let arch = random_arch(g);
+        let explicit = net.clone().with_precision(PrecisionPolicy::int8());
+        let (a, b) = (map_network(&arch, &net), map_network(&arch, &explicit));
+        assert_eq!(a.total_cycles().to_bits(), b.total_cycles().to_bits());
+        let flavor = g.choose(&[MemFlavor::SramOnly, MemFlavor::P0, MemFlavor::P1]);
+        let e = |m: &xr_edge_dse::mapping::NetworkMap| {
+            xr_edge_dse::energy::estimate(&arch, m, Node::N7, flavor, Device::VgsotMram).total_pj()
+        };
+        assert_eq!(e(&a).to_bits(), e(&b).to_bits(), "{}", arch.name);
     });
 }
 

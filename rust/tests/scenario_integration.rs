@@ -91,6 +91,43 @@ fn scenario_report_accounting_is_deterministic() {
 }
 
 #[test]
+fn per_stream_precision_lowers_modeled_power() {
+    // Two identical detnet streams, one declared INT4: its closed-form
+    // memory power (and ledger) must come in below the INT8 twin's, while
+    // the INT8 stream matches the undeclared-default behavior bitwise.
+    use xr_edge_dse::workload::PrecisionPolicy;
+    let mut sc = paper_scenario(20.0, 50.0);
+    sc.streams.truncate(1); // keep the detnet@10 P0 stream
+    let mut int4 = sc.streams[0].clone().with_precision(PrecisionPolicy::int4());
+    int4.name = "hand_int4".to_string();
+    sc.streams.push(int4);
+    let report = sc.run().unwrap();
+    assert_eq!(report.streams.len(), 2);
+    let (int8_s, int4_s) = (&report.streams[0], &report.streams[1]);
+    assert_eq!(int8_s.precision, "int8");
+    assert_eq!(int4_s.precision, "int4");
+    assert!(
+        int4_s.closed_form_uw < int8_s.closed_form_uw,
+        "int4 {} must undercut int8 {}",
+        int4_s.closed_form_uw,
+        int8_s.closed_form_uw
+    );
+    // ledgers still agree with their own closed forms
+    assert!(int8_s.p_mem_rel_err() < 0.02, "{}", int8_s.p_mem_rel_err());
+    assert!(int4_s.p_mem_rel_err() < 0.02, "{}", int4_s.p_mem_rel_err());
+
+    // and the INT8 stream is bitwise-unaffected by the precision field
+    // existing at all (identity vs a fresh single-stream run)
+    let mut solo = paper_scenario(20.0, 50.0);
+    solo.streams.truncate(1);
+    let solo_report = solo.run().unwrap();
+    assert_eq!(
+        solo_report.streams[0].closed_form_uw.to_bits(),
+        int8_s.closed_form_uw.to_bits()
+    );
+}
+
+#[test]
 fn saturating_producer_gets_drop_oldest_semantics() {
     // A producer far over the worker's capacity (exec floor 10 ms, ~1 ms
     // arrivals, queue depth 3): drop-oldest must evict the stale frames so

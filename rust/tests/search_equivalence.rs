@@ -217,6 +217,34 @@ fn cli_search_is_deterministic_and_writes_csv() {
 }
 
 #[test]
+fn cli_search_mixed_precision_flag_adds_bit_knobs() {
+    // `--mixed-precision` widens the space with the INT4/INT8/FP16 axes;
+    // the run must succeed, stay deterministic, and report the best
+    // design's bit-widths.
+    let args = [
+        "search",
+        "--node",
+        "7",
+        "--strategy",
+        "hill",
+        "--budget",
+        "64",
+        "--batch",
+        "32",
+        "--seed",
+        "11",
+        "--mixed-precision",
+    ];
+    let a = run_cli(&args);
+    assert!(a.status.success(), "{}", String::from_utf8_lossy(&a.stderr));
+    let stdout = String::from_utf8_lossy(&a.stdout);
+    assert!(stdout.contains("guided search"), "{stdout}");
+    assert!(stdout.contains("bits"), "bits column missing: {stdout}");
+    let b = run_cli(&args);
+    assert_eq!(a.stdout, b.stdout, "mixed-precision search must replay bitwise");
+}
+
+#[test]
 fn cli_search_rejects_bad_flags() {
     let out = run_cli(&["search", "--strategy", "genetic"]);
     assert!(!out.status.success());
