@@ -2,18 +2,52 @@
 //!   S1 — evaluation throughput of the search loop (candidate synth + map
 //!        + parallel engine eval), measured as a fixed-budget random
 //!        search over the 7 nm paper space;
-//!   S2 — convergence quality per strategy at equal budget: best
+//!   S2 — throughput at scale: a 1024-eval random search and a
+//!        hill-climb-neighborhood run (the memo-friendly case — most
+//!        moves change one knob), both annotated with the service's cache
+//!        hit-rates in the `XR_DSE_BENCH_JSON` artifact;
+//!   S3 — convergence quality per strategy at equal budget: best
 //!        energy/inference found vs the best fixed-grid paper point
 //!        (the quantity `examples/search.rs` asserts on).
 
 use xr_edge_dse::arch::{MemFlavor, PeConfig};
 use xr_edge_dse::search::{
-    paper_baseline, run_search, Annealing, ArchSynth, Constraints, Family, HillClimb, KnobSpace,
-    Objective, RandomSearch, SearchConfig, Strategy,
+    paper_baseline, run_search, Annealing, ArchSynth, CacheStats, Constraints, Family, HillClimb,
+    KnobSpace, Objective, RandomSearch, SearchConfig, Strategy,
 };
 use xr_edge_dse::tech::{Device, Node};
-use xr_edge_dse::util::benchkit::{bench_units, figure_header, write_json_if_requested};
+use xr_edge_dse::util::benchkit::{bench_annotate, bench_units, figure_header, write_json_if_requested};
 use xr_edge_dse::workload::builtin;
+
+/// Run one search bench: time `iters` fresh runs of `strategy_of`, print
+/// evals/s, and annotate the record with the last run's cache hit-rates
+/// (every iteration starts a cold service — the hit-rates measure reuse
+/// *within* one run, which is what the incremental engine accelerates).
+fn search_bench(
+    name: &str,
+    iters: usize,
+    synth: &ArchSynth,
+    cfg: &SearchConfig,
+    mut strategy_of: impl FnMut() -> Box<dyn Strategy>,
+) {
+    let mut stats = CacheStats::default();
+    let mut evals = 0usize;
+    let (mean_s, _, _) = bench_units(name, 1, iters, cfg.budget as f64, || {
+        let r = run_search(synth, &mut *strategy_of(), cfg);
+        stats = r.cache_stats;
+        evals = r.evaluations;
+        std::hint::black_box(r.evaluations);
+    });
+    bench_annotate(name, "map_hit_rate", stats.map_hit_rate());
+    bench_annotate(name, "macro_hit_rate", stats.macro_hit_rate());
+    bench_annotate(name, "evals_per_s", evals as f64 / mean_s.max(1e-9));
+    println!(
+        "{name}: {:.0} evaluations/s (map hit-rate {:.2}, macro hit-rate {:.2})",
+        evals as f64 / mean_s.max(1e-9),
+        stats.map_hit_rate(),
+        stats.macro_hit_rate()
+    );
+}
 
 fn main() -> anyhow::Result<()> {
     figure_header(
@@ -36,18 +70,16 @@ fn main() -> anyhow::Result<()> {
     // random search (synthesis + mapping + parallel evaluation included);
     // 64 evaluations per iteration is the units/s the regression harness
     // tracks.
-    let (mean_s, _, _) =
-        bench_units("S1 random search, 64-eval budget", 1, 5, cfg.budget as f64, || {
-            let r = run_search(&synth, &mut RandomSearch, &cfg);
-            std::hint::black_box(r.evaluations);
-        });
-    println!("S1 throughput: {:.0} evaluations/s", cfg.budget as f64 / mean_s.max(1e-9));
+    search_bench("S1 random search, 64-eval budget", 5, &synth, &cfg, || Box::new(RandomSearch));
 
-    // S2: best-found per strategy at equal budget, vs the paper grid.
-    let baseline = paper_baseline(&synth.net, &cfg, &[Node::N7])
-        .map(|(_, s)| s)
-        .unwrap_or(f64::INFINITY);
-    println!("paper fixed-grid best: {baseline:.3e} pJ/inf");
+    // S2: throughput at scale — the budgets the incremental engine exists
+    // for. Random search stresses the mapper-interning table (many
+    // distinct arch shapes); the seeded hill climb is the memo-friendly
+    // case (±1-knob neighborhoods revisit almost every sub-vector).
+    let mut big = cfg;
+    big.budget = 1024;
+    search_bench("S2 random search, 1024-eval budget", 3, &synth, &big, || Box::new(RandomSearch));
+
     let seed_vec = synth
         .space
         .paper_vector(
@@ -58,6 +90,19 @@ fn main() -> anyhow::Result<()> {
             Device::VgsotMram,
         )
         .expect("paper point in space");
+    let mut climb = cfg;
+    climb.budget = 256;
+    climb.batch = 28; // one ±1 neighborhood per round
+    let climb_seed = seed_vec.clone();
+    search_bench("S2 hill-climb neighborhood, 256-eval budget", 3, &synth, &climb, move || {
+        Box::new(HillClimb::seeded(climb_seed.clone()))
+    });
+
+    // S3: best-found per strategy at equal budget, vs the paper grid.
+    let baseline = paper_baseline(&synth.net, &cfg, &[Node::N7])
+        .map(|(_, s)| s)
+        .unwrap_or(f64::INFINITY);
+    println!("paper fixed-grid best: {baseline:.3e} pJ/inf");
     let mut strategies: Vec<(&'static str, Box<dyn Strategy>)> = vec![
         ("random", Box::new(RandomSearch)),
         ("hill-climb (paper seed)", Box::new(HillClimb::seeded(seed_vec))),
@@ -67,12 +112,12 @@ fn main() -> anyhow::Result<()> {
         let r = run_search(&synth, strategy.as_mut(), &cfg);
         match r.best_eval() {
             Some(e) => println!(
-                "S2 {label:<26} best {:.3e} pJ/inf ({:+.1}% vs grid), frontier {}",
+                "S3 {label:<26} best {:.3e} pJ/inf ({:+.1}% vs grid), frontier {}",
                 e.scalar,
                 (e.scalar / baseline - 1.0) * 100.0,
                 r.frontier.len()
             ),
-            None => println!("S2 {label:<26} found nothing feasible in budget"),
+            None => println!("S3 {label:<26} found nothing feasible in budget"),
         }
     }
 

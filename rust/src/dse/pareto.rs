@@ -27,13 +27,19 @@ impl Objectives {
     /// The objective vector in the fixed (P_mem, area, latency) order the
     /// slice-based dominance check consumes.
     pub fn as_vec(&self) -> Vec<f64> {
-        vec![self.p_mem_uw, self.area_mm2, self.latency_ms]
+        self.as_array().to_vec()
+    }
+
+    /// [`Objectives::as_vec`] without the heap allocation — the form the
+    /// per-evaluation hot paths (search loop, query pareto stage) borrow.
+    pub fn as_array(&self) -> [f64; 3] {
+        [self.p_mem_uw, self.area_mm2, self.latency_ms]
     }
 }
 
 /// `a` dominates `b` when it is ≤ on every objective and < on at least one.
 pub fn dominates(a: &Objectives, b: &Objectives) -> bool {
-    dominates_slice(&a.as_vec(), &b.as_vec())
+    dominates_slice(&a.as_array(), &b.as_array())
 }
 
 /// Slice form of the dominance check, for callers with their own objective
@@ -72,17 +78,24 @@ impl<T> ParetoArchive<T> {
 
     /// Offer a candidate; returns whether it joined the archive.
     pub fn offer(&mut self, item: T, o: Objectives) -> bool {
-        self.offer_vec(item, o.as_vec())
+        self.offer_slice(item, &o.as_array())
     }
 
     /// Offer a candidate with an arbitrary minimized objective vector.
     /// Every offer to one archive must use the same vector length.
     pub fn offer_vec(&mut self, item: T, o: Vec<f64>) -> bool {
-        if self.entries.iter().any(|(_, held)| dominates_slice(held, &o)) {
+        self.offer_slice(item, &o)
+    }
+
+    /// Borrowed form of [`ParetoArchive::offer_vec`]: rejected offers (the
+    /// common case once a frontier settles) allocate nothing — the vector
+    /// is only copied to the heap when the candidate actually joins.
+    pub fn offer_slice(&mut self, item: T, o: &[f64]) -> bool {
+        if self.entries.iter().any(|(_, held)| dominates_slice(held, o)) {
             return false;
         }
-        self.entries.retain(|(_, held)| !dominates_slice(&o, held));
-        self.entries.push((item, o));
+        self.entries.retain(|(_, held)| !dominates_slice(o, held));
+        self.entries.push((item, o.to_vec()));
         true
     }
 
@@ -213,6 +226,33 @@ mod tests {
         assert!(arch.offer("c", c));
         assert!(!arch.offer("a", a));
         assert_eq!(arch.into_items(), vec!["c"]);
+    }
+
+    #[test]
+    fn offer_slice_matches_offer_vec() {
+        // Same offer stream through both entry points → same survivors in
+        // the same order (offer_slice is the allocation-free hot path the
+        // search loop uses).
+        crate::testkit::check("offer_slice ≡ offer_vec", 40, |g| {
+            let n = g.usize_in(2, 24);
+            let points: Vec<[f64; 3]> = (0..n)
+                .map(|_| {
+                    [
+                        g.f64_in(0.0, 3.0).round(),
+                        g.f64_in(0.0, 3.0).round(),
+                        g.f64_in(0.0, 3.0).round(),
+                    ]
+                })
+                .collect();
+            let mut via_vec = ParetoArchive::new();
+            let mut via_slice = ParetoArchive::new();
+            for (i, p) in points.iter().enumerate() {
+                let a = via_vec.offer_vec(i, p.to_vec());
+                let b = via_slice.offer_slice(i, p);
+                assert_eq!(a, b, "offer {i} disagreed");
+            }
+            assert_eq!(via_vec.into_items(), via_slice.into_items());
+        });
     }
 
     #[test]

@@ -6,7 +6,7 @@ use super::DeviceAssignment;
 use crate::arch::{Arch, BufferLevel, LevelKind};
 use crate::area::AreaReport;
 use crate::energy::{EnergyBreakdown, LevelEnergy};
-use crate::mapping::{accesses_at, NetworkMap};
+use crate::mapping::{accesses_at, LevelAccess, NetworkMap};
 use crate::mem::MacroModel;
 use crate::power::PowerModel;
 use crate::tech::{mac_area_um2, mac_energy_pj, Knobs, Node};
@@ -14,6 +14,24 @@ use crate::util::units::UM2_PER_MM2;
 
 /// Fraction of a MAC's energy charged per elementwise ALU op (pool/add).
 pub(crate) const ALU_FRACTION: f64 = 0.15;
+
+/// Compute (MAC + ALU) energy per inference, pJ — a pure function of
+/// (map, node, cpu_style). Both the cold [`EvalContext::with_knobs`] path
+/// and the engine's per-entry memo call *this* function, so a cached value
+/// is bitwise-identical to a fresh one by construction (the summation
+/// order never changes).
+pub(crate) fn compute_energy_pj(map: &NetworkMap, node: Node, cpu_style: bool) -> f64 {
+    let mac_pj = mac_energy_pj(node, cpu_style);
+    let mut compute_pj = 0.0;
+    for lm in &map.per_layer {
+        // Per-layer operand-width scaling from the precision policy
+        // the map was lowered at (both scales are exactly 1.0 at INT8,
+        // so the INT8 policy reproduces the historical sum bitwise).
+        compute_pj += lm.macs * mac_pj * lm.mac_scale
+            + lm.alu_ops * mac_pj * ALU_FRACTION * lm.alu_scale;
+    }
+    compute_pj
+}
 
 /// The CACTI-lite macro models of one (arch, node, [`DeviceAssignment`]).
 /// Everything that needs only the *static* hardware view (area, clock
@@ -44,6 +62,19 @@ impl<'a> MacroSet<'a> {
             let assign = |lvl: &BufferLevel| assignment.device_for(arch, lvl);
             arch.macro_models_assigned_with(node, &assign, knobs)
         };
+        MacroSet { arch, node, assignment, models }
+    }
+
+    /// Assemble a macro set from models the caller already built — the
+    /// engine's memoized path. The models must be in `arch.levels` order
+    /// with regfile levels forced to SRAM, exactly as
+    /// [`MacroSet::with_knobs`] builds them.
+    pub(crate) fn from_models(
+        arch: &'a Arch,
+        node: Node,
+        assignment: DeviceAssignment,
+        models: Vec<(&'a BufferLevel, MacroModel)>,
+    ) -> MacroSet<'a> {
         MacroSet { arch, node, assignment, models }
     }
 
@@ -169,18 +200,26 @@ impl<'a> EvalContext<'a> {
         knobs: &Knobs,
     ) -> EvalContext<'a> {
         let macros = MacroSet::with_knobs(arch, node, assignment, knobs);
-
-        let mac_pj = mac_energy_pj(node, arch.cpu_style);
-        let mut compute_pj = 0.0;
-        for lm in &map.per_layer {
-            // Per-layer operand-width scaling from the precision policy
-            // the map was lowered at (both scales are exactly 1.0 at INT8,
-            // so the INT8 policy reproduces the historical sum bitwise).
-            compute_pj += lm.macs * mac_pj * lm.mac_scale
-                + lm.alu_ops * mac_pj * ALU_FRACTION * lm.alu_scale;
-        }
-
+        let compute_pj = compute_energy_pj(map, node, arch.cpu_style);
         let totals = map.level_totals();
+        EvalContext::assemble(macros, map, compute_pj, &totals, map.total_cycles())
+    }
+
+    /// The shared tail of every context build: per-level traffic/energy
+    /// conversion, gating characteristics and latency, from inputs the
+    /// caller supplies. The cold path ([`EvalContext::with_knobs`])
+    /// computes `compute_pj`/`totals`/`total_cycles` fresh; the engine's
+    /// incremental path feeds the same values from per-entry caches — each
+    /// cached value is the output of the same pure function the cold path
+    /// runs, so both paths are bitwise-identical.
+    pub(crate) fn assemble(
+        macros: MacroSet<'a>,
+        map: &'a NetworkMap,
+        compute_pj: f64,
+        totals: &[LevelAccess],
+        total_cycles: f64,
+    ) -> EvalContext<'a> {
+        let arch = macros.arch;
         let mut level_traffic = Vec::new();
         let mut level_energies = Vec::new();
         for (lvl, model) in macros.models() {
@@ -202,7 +241,7 @@ impl<'a> EvalContext<'a> {
         let e_wakeup_pj = macros.e_wakeup_pj();
         let p_retention_uw = macros.p_retention_uw();
         let clock_mhz = macros.clock_mhz();
-        let latency_ns = map.total_cycles() / clock_mhz * 1e3; // cycles/MHz = µs → ns
+        let latency_ns = total_cycles / clock_mhz * 1e3; // cycles/MHz = µs → ns
 
         EvalContext {
             macros,

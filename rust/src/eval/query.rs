@@ -458,7 +458,7 @@ impl Terminal<'_> {
     fn push(&mut self, row: QueryRow, visit: &mut dyn FnMut(QueryRow)) {
         if let Some((ips, archive)) = &mut self.pareto {
             let o = objectives(&row.point, *ips);
-            archive.offer(row, o);
+            archive.offer_slice(row, &o.as_array());
         } else if let Some((metric, k, best)) = &mut self.topk {
             if *k == usize::MAX {
                 // Unbounded (full-sort) mode: append now, one stable

@@ -1,16 +1,31 @@
 //! The sweep driver: (arch × net) pairs mapped once and indexed by key
 //! ([`Engine`]), an axis enumerator ([`DesignSpace`]), and deterministic
-//! sharded evaluation ([`Engine::eval_coords`]) that splits coordinate
-//! lists across `std::thread::scope` workers with sequential-identical
-//! output ordering. The composable consumption surface over this driver is
-//! [`crate::eval::Query`].
+//! work-stealing evaluation ([`Engine::eval_coords`]) where
+//! `std::thread::scope` workers claim coordinates from a shared atomic
+//! cursor and publish each result into its own slot — so the output is
+//! bitwise-identical to the sequential reference regardless of worker
+//! count or claim interleaving. The composable consumption surface over
+//! this driver is [`crate::eval::Query`].
+//!
+//! Evaluation is *incremental*: every [`EngineEntry`] caches its mapped
+//! aggregates (level totals, cycle count, per-node compute energy) after
+//! the first evaluation touches them, and the engine shares one memo of
+//! CACTI-lite macro models across all evaluations — a neighbor move that
+//! changes one knob re-derives only the macro models that actually
+//! changed. Every cached value is the output of the same pure function
+//! the cold path runs, which is what keeps warm and cold evaluations
+//! bitwise-identical (see DESIGN.md, "The incremental evaluation layer").
 
-use std::sync::OnceLock;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
 
-use super::{DeviceAssignment, EvalContext};
-use crate::arch::{Arch, MemFlavor};
+use super::context::compute_energy_pj;
+use super::{DeviceAssignment, EvalContext, MacroSet};
+use crate::arch::{Arch, BufferLevel, LevelKind, MemFlavor};
 use crate::energy::EnergyBreakdown;
-use crate::mapping::{map_network, NetworkMap};
+use crate::mapping::{map_network, LevelAccess, NetworkMap};
+use crate::mem::{MacroModel, MacroSpec};
 use crate::power::PowerModel;
 use crate::tech::{Device, Knobs, Node};
 use crate::workload::Network;
@@ -96,6 +111,15 @@ pub type Coord = (usize, Node, AssignSpec, Device);
 /// One mapped (architecture, workload) pair — the node-independent part of
 /// a design point, cached so sweeps never re-run the mapper. The network
 /// name lives in `map.network`.
+///
+/// Beyond the map itself, the entry lazily caches every per-map aggregate
+/// evaluation needs (`level_totals`, `total_cycles`, utilization, and the
+/// compute energy per node): each is a pure function of the immutable
+/// `arch`/`map`, computed by the same code the cold path runs, so a cache
+/// hit is bitwise-identical to a fresh derivation. The caches are
+/// `OnceLock`s — thread-safe under the parallel sweep, and untouched by
+/// knob injection (knobs only enter macro-model construction, which the
+/// [`Engine`] memoizes separately).
 pub struct EngineEntry {
     pub arch: Arch,
     /// The source workload, kept so precision axes can re-lower the map
@@ -103,6 +127,66 @@ pub struct EngineEntry {
     /// for entries wrapped from a bare map ([`Engine::from_mapped`]).
     pub net: Option<Network>,
     pub map: NetworkMap,
+    /// `map.level_totals()`, computed once per entry instead of once per
+    /// design point (the former per-point O(layers × levels) hot-loop
+    /// cost).
+    totals: OnceLock<Vec<LevelAccess>>,
+    /// `map.total_cycles()` as f64 bits.
+    total_cycles: OnceLock<u64>,
+    /// `map.utilization(&arch)` as f64 bits.
+    utilization: OnceLock<u64>,
+    /// Per-node compute energy ([`compute_energy_pj`]) as f64 bits,
+    /// indexed by the node's position in [`Node::ALL`].
+    compute_pj: [OnceLock<u64>; Node::ALL.len()],
+}
+
+impl EngineEntry {
+    /// Wrap an (arch, optional workload, map) triple with cold caches.
+    pub fn new(arch: Arch, net: Option<Network>, map: NetworkMap) -> EngineEntry {
+        EngineEntry {
+            arch,
+            net,
+            map,
+            totals: OnceLock::new(),
+            total_cycles: OnceLock::new(),
+            utilization: OnceLock::new(),
+            compute_pj: std::array::from_fn(|_| OnceLock::new()),
+        }
+    }
+
+    fn totals(&self) -> &[LevelAccess] {
+        self.totals.get_or_init(|| self.map.level_totals())
+    }
+
+    fn total_cycles(&self) -> f64 {
+        f64::from_bits(*self.total_cycles.get_or_init(|| self.map.total_cycles().to_bits()))
+    }
+
+    fn utilization(&self) -> f64 {
+        f64::from_bits(*self.utilization.get_or_init(|| self.map.utilization(&self.arch).to_bits()))
+    }
+
+    fn compute_pj(&self, node: Node) -> f64 {
+        let slot = Node::ALL.iter().position(|&n| n == node).expect("node in Node::ALL");
+        f64::from_bits(*self.compute_pj[slot].get_or_init(|| {
+            compute_energy_pj(&self.map, node, self.arch.cpu_style).to_bits()
+        }))
+    }
+}
+
+/// Key of one memoized macro model: the full [`MacroSpec`] identity. The
+/// calibration knobs are engine-wide (the other `model_with` input), so
+/// they are implicit — [`Engine::with_knobs`] resets the memo instead of
+/// widening the key.
+type MacroKey = (usize, usize, usize, Device, Node);
+
+/// The engine-wide macro-model memo plus its hit/miss counters (relaxed
+/// atomics: the counts are telemetry, not synchronization).
+#[derive(Default)]
+struct MacroCache {
+    models: Mutex<HashMap<MacroKey, MacroModel>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
 }
 
 /// The evaluation engine: every (arch × net) pair mapped once at
@@ -119,6 +203,10 @@ pub struct Engine {
     /// override with [`Engine::with_knobs`] for in-process sensitivity
     /// sweeps.
     knobs: Knobs,
+    /// Shared memo of built macro models, keyed by the full `MacroSpec`
+    /// identity (knobs implicit — see [`MacroKey`]). `MacroModel` is
+    /// `Copy`, so a hit is a 96-byte copy instead of a CACTI-lite build.
+    macros: MacroCache,
 }
 
 impl Engine {
@@ -129,7 +217,7 @@ impl Engine {
         for arch in &archs {
             for net in &nets {
                 let map = map_network(arch, net);
-                entries.push(EngineEntry { arch: arch.clone(), net: Some(net.clone()), map });
+                entries.push(EngineEntry::new(arch.clone(), Some(net.clone()), map));
             }
         }
         Engine::from_entries(entries)
@@ -139,7 +227,7 @@ impl Engine {
     /// hold a `NetworkMap` (e.g. the hybrid sweep) query without paying a
     /// second mapper run.
     pub fn from_mapped(arch: Arch, map: NetworkMap) -> Engine {
-        Engine::from_entries(vec![EngineEntry { arch, net: None, map }])
+        Engine::from_entries(vec![EngineEntry::new(arch, None, map)])
     }
 
     /// Multi-entry form of [`Engine::from_mapped`], for callers that cache
@@ -147,7 +235,7 @@ impl Engine {
     /// candidate architecture once per run, not once per batch).
     pub fn from_mapped_entries(pairs: Vec<(Arch, NetworkMap)>) -> Engine {
         Engine::from_entries(
-            pairs.into_iter().map(|(arch, map)| EngineEntry { arch, net: None, map }).collect(),
+            pairs.into_iter().map(|(arch, map)| EngineEntry::new(arch, None, map)).collect(),
         )
     }
 
@@ -158,15 +246,42 @@ impl Engine {
             let kb = (entries[b].arch.name.as_str(), entries[b].map.network.as_str());
             ka.cmp(&kb)
         });
-        Engine { entries, index, knobs: crate::tech::knobs() }
+        Engine { entries, index, knobs: crate::tech::knobs(), macros: MacroCache::default() }
+    }
+
+    /// Append an already-mapped (arch, workload) pair to a live engine,
+    /// keeping the name index sorted. Existing entry indices never move,
+    /// so held [`Coord`]s stay valid — this is how the search layer's
+    /// long-lived evaluation service grows one engine across rounds
+    /// instead of rebuilding it per batch. Returns the new entry's index.
+    pub fn push_entry(&mut self, arch: Arch, map: NetworkMap) -> usize {
+        let e = self.entries.len();
+        self.entries.push(EngineEntry::new(arch, None, map));
+        let entries = &self.entries;
+        let key = (entries[e].arch.name.as_str(), entries[e].map.network.as_str());
+        let pos = self.index.partition_point(|&i| {
+            (entries[i].arch.name.as_str(), entries[i].map.network.as_str()) < key
+        });
+        self.index.insert(pos, e);
+        e
     }
 
     /// Replace the calibration knobs every subsequent evaluation uses.
     /// This is the in-process sensitivity-sweep hook: build one engine per
     /// knob value instead of mutating `XR_DSE_*` between evaluations.
+    /// Resets the macro-model memo — its cached models were built under
+    /// the old knobs (the per-entry map aggregates are knob-independent
+    /// and survive).
     pub fn with_knobs(mut self, knobs: Knobs) -> Engine {
         self.knobs = knobs;
+        self.macros = MacroCache::default();
         self
+    }
+
+    /// (hits, misses) of the shared macro-model memo since construction
+    /// (or the last [`Engine::with_knobs`] reset).
+    pub fn macro_cache_stats(&self) -> (usize, usize) {
+        (self.macros.hits.load(Ordering::Relaxed), self.macros.misses.load(Ordering::Relaxed))
     }
 
     /// The calibration knobs this engine evaluates with.
@@ -190,16 +305,78 @@ impl Engine {
             .map(|pos| &self.entries[self.index[pos]])
     }
 
+    /// One memoized macro model: served from the engine-wide memo when the
+    /// same `(level geometry, device, node)` was built before (under the
+    /// engine's knobs), built by the same [`MacroSpec::model_with`] call
+    /// the cold path runs otherwise.
+    fn macro_model(&self, lvl: &BufferLevel, device: Device, node: Node) -> MacroModel {
+        let key = (lvl.capacity_bytes, lvl.bus_bits, lvl.count, device, node);
+        if let Some(m) = self.macros.models.lock().unwrap().get(&key) {
+            self.macros.hits.fetch_add(1, Ordering::Relaxed);
+            return *m;
+        }
+        // Build outside the lock: models are pure functions of (key,
+        // knobs), so two threads racing on the same key insert the same
+        // bits.
+        self.macros.misses.fetch_add(1, Ordering::Relaxed);
+        let m = MacroSpec {
+            capacity_bytes: lvl.capacity_bytes,
+            bus_bits: lvl.bus_bits,
+            device,
+            node,
+            count: lvl.count,
+        }
+        .model_with(&self.knobs);
+        self.macros.models.lock().unwrap().insert(key, m);
+        m
+    }
+
+    /// The memoized [`MacroSet`] of one (arch, node, assignment): per-level
+    /// device resolution mirrors `Arch::macro_models_assigned_with`
+    /// (regfile levels forced to SRAM), with each model drawn through the
+    /// engine-wide memo. A one-knob neighbor move re-derives only the
+    /// levels whose (geometry, device, node) actually changed.
+    fn memoized_macros<'a>(
+        &self,
+        arch: &'a Arch,
+        node: Node,
+        assignment: DeviceAssignment,
+    ) -> MacroSet<'a> {
+        let models = arch
+            .levels
+            .iter()
+            .map(|lvl| {
+                let device = if lvl.kind == LevelKind::RegFile {
+                    Device::Sram
+                } else {
+                    assignment.device_for(arch, lvl)
+                };
+                (lvl, self.macro_model(lvl, device, node))
+            })
+            .collect();
+        MacroSet::from_models(arch, node, assignment, models)
+    }
+
     /// Evaluate one entry under an arbitrary per-level device assignment:
-    /// one [`EvalContext`] (one macro-model construction) per design point.
-    /// This is the single evaluation path behind every sweep surface.
+    /// one [`EvalContext`] per design point, assembled from the entry's
+    /// cached map aggregates and the engine's macro-model memo (bitwise
+    /// equal to a cold [`EvalContext::with_knobs`] build — the warm/cold
+    /// equivalence tests pin this). This is the single evaluation path
+    /// behind every sweep surface.
     pub fn eval_assigned(
         &self,
         entry: &EngineEntry,
         node: Node,
         assignment: DeviceAssignment,
     ) -> DesignPoint {
-        let ctx = EvalContext::with_knobs(&entry.arch, &entry.map, node, assignment, &self.knobs);
+        let macros = self.memoized_macros(&entry.arch, node, assignment);
+        let ctx = EvalContext::assemble(
+            macros,
+            &entry.map,
+            entry.compute_pj(node),
+            entry.totals(),
+            entry.total_cycles(),
+        );
         let energy = ctx.energy_breakdown();
         let power = ctx.power_model_from(&energy);
         DesignPoint {
@@ -207,7 +384,7 @@ impl Engine {
             network: entry.map.network.clone(),
             precision: entry.map.precision.name().to_string(),
             node,
-            utilization: entry.map.utilization(&entry.arch),
+            utilization: entry.utilization(),
             energy,
             power,
             latency_ns: ctx.latency_ns,
@@ -251,32 +428,48 @@ impl Engine {
         coords.iter().map(|c| self.eval_coord(c)).collect()
     }
 
-    /// Parallel coordinate evaluation: the list is sharded over
-    /// `std::thread::scope` workers in contiguous chunks, each writing its
-    /// own disjoint slice of the (pre-sized) output, so the result order —
-    /// and every bit of every design point — is identical to
-    /// [`Engine::eval_coords_seq`].
+    /// Parallel coordinate evaluation with work stealing: workers claim
+    /// coordinates one at a time from a shared atomic cursor (so a shard
+    /// of expensive CPU-arch points can't straggle behind cheap
+    /// accelerator points), and each result is published into the slot of
+    /// its coordinate — the result order, and every bit of every design
+    /// point, is identical to [`Engine::eval_coords_seq`] regardless of
+    /// claim interleaving. Worker count comes from `XR_DSE_THREADS` /
+    /// available parallelism (see [`worker_count`]).
     pub fn eval_coords(&self, coords: &[Coord]) -> Vec<DesignPoint> {
+        self.eval_coords_with_workers(coords, worker_count(coords.len().max(1)))
+    }
+
+    /// [`Engine::eval_coords`] with an explicit worker count — the
+    /// testable entry point (the env-derived count is frozen per process,
+    /// so determinism across thread counts is pinned here).
+    pub fn eval_coords_with_workers(&self, coords: &[Coord], workers: usize) -> Vec<DesignPoint> {
         let n = coords.len();
         if n == 0 {
             return Vec::new();
         }
-        let workers = worker_count(n);
-        if workers <= 1 {
+        let workers = workers.clamp(1, n);
+        if workers == 1 {
             return self.eval_coords_seq(coords);
         }
-        let chunk = n.div_ceil(workers);
-        let mut out: Vec<Option<DesignPoint>> = (0..n).map(|_| None).collect();
+        let slots: Vec<OnceLock<DesignPoint>> = (0..n).map(|_| OnceLock::new()).collect();
+        let cursor = AtomicUsize::new(0);
         std::thread::scope(|s| {
-            for (slots, shard) in out.chunks_mut(chunk).zip(coords.chunks(chunk)) {
-                s.spawn(move || {
-                    for (slot, coord) in slots.iter_mut().zip(shard) {
-                        *slot = Some(self.eval_coord(coord));
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
                     }
+                    // Each claimed index is unique, so the set never races.
+                    let _ = slots[i].set(self.eval_coord(&coords[i]));
                 });
             }
         });
-        out.into_iter().map(|p| p.expect("every grid slot filled by its worker")).collect()
+        slots
+            .into_iter()
+            .map(|s| s.into_inner().expect("every coordinate slot filled by a worker"))
+            .collect()
     }
 
     /// Sequential grid sweep (the reference ordering): entries-major, then

@@ -18,10 +18,16 @@
 //!   trait: [`Exhaustive`], [`RandomSearch`], [`HillClimb`] (random
 //!   restarts, optionally seeded at a paper point) and [`Annealing`]; all
 //!   deterministic from one [`crate::util::prng::Prng`] seed.
+//! - [`service`] — the long-lived [`EvalService`]: one persistent
+//!   [`crate::eval::Engine`] grown across search rounds (and shared
+//!   across strategies in a report), with mapper runs interned by
+//!   arch-shaping knob sub-vector and [`CacheStats`] telemetry over the
+//!   interning table and the engine's macro-model memo.
 //! - [`run`] — the budgeted loop: scalar objectives (energy/inference,
 //!   area, EDP), hard constraints (min IPS, area/power budgets), dedupe
-//!   of revisited vectors, candidate batches evaluated in parallel
-//!   through the existing [`crate::eval::Engine`], an incremental
+//!   of revisited vectors keyed by canonical index (no per-lookup
+//!   clones), candidate batches evaluated in parallel through the
+//!   service's engine, an incremental
 //!   [`crate::dse::pareto::ParetoArchive`] frontier over (energy, area,
 //!   EDP), a per-evaluation trace, and the [`SearchReport`] naming each
 //!   strategy's best design with its vs-paper-baseline delta.
@@ -34,12 +40,14 @@
 //! search layer.
 
 pub mod run;
+pub mod service;
 pub mod space;
 pub mod strategy;
 
 pub use run::{
-    paper_baseline, run_search, Constraints, Evaluation, Objective, SearchConfig, SearchReport,
-    SearchResult,
+    paper_baseline, run_search, run_search_with, Constraints, Evaluation, Objective, SearchConfig,
+    SearchReport, SearchResult,
 };
+pub use service::{CacheStats, EvalService};
 pub use space::{ArchSynth, Candidate, Family, KnobSpace, KnobVector, DIMS};
 pub use strategy::{Annealing, Exhaustive, HillClimb, RandomSearch, Strategy};

@@ -4,33 +4,43 @@
 //! propose a batch of knob vectors → dedupe revisits (answered from a
 //! cache, consuming no budget) → lower the fresh ones (invalid vectors are
 //! rejected by the synthesizer, consuming no budget) → evaluate the valid
-//! candidates **in parallel** through a per-batch [`Engine`] (the same
-//! sharded, bitwise-deterministic path as `Engine::grid`) → score against
-//! the objective and hard constraints → feed the scalars back to the
-//! strategy. Every evaluation appends a [`Evaluation`] trace row, and
+//! candidates **in parallel** through a long-lived
+//! [`EvalService`](crate::search::EvalService) (the same work-stealing,
+//! bitwise-deterministic path as `Engine::grid`, over an engine that
+//! persists across rounds instead of being rebuilt per batch) → score
+//! against the objective and hard constraints → feed the scalars back to
+//! the strategy. Every evaluation appends a [`Evaluation`] trace row, and
 //! every feasible one is offered to an incremental
 //! [`ParetoArchive`](crate::dse::pareto::ParetoArchive) over the
 //! (energy/inference, area, EDP) triple — the multi-objective frontier
 //! the CLI and example render.
 //!
+//! The hot loop is allocation-free where it counts: the dedupe cache keys
+//! by the vector's canonical `u128` index ([`KnobSpace::index_of`]), the
+//! per-round partitions live in [`Scratch`] buffers cleared (not
+//! reallocated) each round, and frontier offers pass a stack slice
+//! ([`ParetoArchive::offer_slice`]).
+//!
 //! Determinism contract: a (space, strategy, seed, budget, batch,
 //! constraints) tuple replays bitwise-identically — across runs *and*
 //! thread counts — because all randomness flows through one seeded
 //! [`Prng`] and candidate evaluation reuses `Engine::eval_coords`, whose
-//! output is sequential-identical by construction.
+//! output is sequential-identical by construction (and whose caches only
+//! ever memoize the outputs of the same pure functions the cold path
+//! runs).
 
 use std::collections::{HashMap, HashSet};
 
+use super::service::{CacheStats, EvalService};
 use super::space::{ArchSynth, Candidate, KnobVector};
 use super::strategy::Strategy;
-use crate::arch::{Arch, PeConfig};
+use crate::arch::PeConfig;
 use crate::dse::pareto::ParetoArchive;
 use crate::eval::{AssignSpec, Coord, DesignPoint, Engine, Query};
-use crate::mapping::{map_network, NetworkMap};
 use crate::report::{pct, sci, Csv, Table};
 use crate::tech::{Device, Node};
 use crate::util::prng::Prng;
-use crate::workload::{Network, PrecisionPolicy};
+use crate::workload::Network;
 
 /// The scalarized objective a single-objective strategy minimizes. The
 /// Pareto frontier always tracks all three jointly.
@@ -181,6 +191,10 @@ pub struct SearchResult {
     /// The final (energy, area, EDP) Pareto frontier over the feasible
     /// evaluations, in evaluation order.
     pub frontier: Vec<Evaluation>,
+    /// Cache telemetry for *this run* (mapper interning + macro-model
+    /// memo deltas over the service, even when the service is shared
+    /// across runs).
+    pub cache_stats: CacheStats,
 }
 
 impl SearchResult {
@@ -189,24 +203,54 @@ impl SearchResult {
     }
 }
 
-/// Run one strategy to its budget. See the module docs for the loop and
-/// the determinism contract.
+/// Per-round scratch buffers, cleared (capacity kept) instead of
+/// reallocated each round — the arena behind the batch-partition loop.
+#[derive(Default)]
+struct Scratch {
+    /// (vector, scalar) pairs the strategy observes, in proposal order.
+    results: Vec<(KnobVector, f64)>,
+    /// Fresh valid candidates queued for evaluation:
+    /// (results slot, canonical index, engine entry, candidate).
+    fresh: Vec<(usize, u128, usize, Candidate)>,
+    /// Canonical indices queued this round (intra-batch dedupe).
+    queued: HashSet<u128>,
+    /// Intra-batch duplicates to backfill after evaluation.
+    dup_slots: Vec<(usize, u128)>,
+    /// Evaluation coordinates, parallel to `fresh`.
+    coords: Vec<Coord>,
+}
+
+/// Run one strategy to its budget against a fresh [`EvalService`]. See
+/// the module docs for the loop and the determinism contract.
 pub fn run_search(
     synth: &ArchSynth,
     strategy: &mut dyn Strategy,
     cfg: &SearchConfig,
 ) -> SearchResult {
+    let mut service = EvalService::new();
+    run_search_with(&mut service, synth, strategy, cfg)
+}
+
+/// [`run_search`] against a caller-owned service: the service's engine,
+/// mapped entries and memo caches persist across calls, so consecutive
+/// runs over the same synthesizer (multi-strategy reports, repeated
+/// benches) skip the mapper entirely on revisited architectures. Results
+/// are bitwise-identical either way — every cache answers with the output
+/// of the same pure function the cold path runs.
+pub fn run_search_with(
+    service: &mut EvalService,
+    synth: &ArchSynth,
+    strategy: &mut dyn Strategy,
+    cfg: &SearchConfig,
+) -> SearchResult {
+    let stats_at_start = service.stats();
     let mut prng = Prng::new(cfg.seed);
-    let mut cache: HashMap<KnobVector, f64> = HashMap::new();
-    // Mapper runs cached per distinct (synthesized architecture, operand
-    // bit-widths) — the arch name encodes every arch-shaping knob and the
-    // precision knobs re-lower the same arch's map — so neighborhoods that
-    // revisit a coordinate across rounds (node/mram/assignment moves
-    // always do) pay the Timeloop-lite mapping once per run, not once per
-    // batch.
-    let mut map_cache: HashMap<(String, u32, u32), NetworkMap> = HashMap::new();
+    // Dedupe cache keyed by the vector's canonical index — a `u128` per
+    // entry instead of a cloned `KnobVector` per lookup *and* per insert.
+    let mut cache: HashMap<u128, f64> = HashMap::new();
     let mut archive: ParetoArchive<usize> = ParetoArchive::new();
     let mut trace: Vec<Evaluation> = Vec::new();
+    let mut scratch = Scratch::default();
     let (mut rejected, mut revisits) = (0usize, 0usize);
     let mut best: Option<usize> = None;
     let mut best_scalar = f64::INFINITY;
@@ -232,22 +276,32 @@ pub fn run_search(
         // after evaluation), and fresh valid candidates queue for parallel
         // evaluation. Proposals beyond the remaining budget are dropped
         // (the strategy observes the truncated batch).
-        let mut results: Vec<(KnobVector, f64)> = Vec::with_capacity(proposed.len());
-        let mut fresh: Vec<(usize, Candidate)> = Vec::new();
-        let mut queued: HashSet<KnobVector> = HashSet::new();
-        let mut dup_slots: Vec<(usize, KnobVector)> = Vec::new();
+        scratch.results.clear();
+        scratch.fresh.clear();
+        scratch.queued.clear();
+        scratch.dup_slots.clear();
         let mut round_rejected = 0usize;
         let mut budget_left = cfg.budget - trace.len();
         for v in proposed {
-            if let Some(&s) = cache.get(&v) {
-                revisits += 1;
-                results.push((v, s));
+            // Out-of-shape vectors have no canonical index; reject before
+            // keying (strategies never produce them, but `lower` would
+            // reject them anyway).
+            if !synth.space.contains(&v) {
+                rejected += 1;
+                round_rejected += 1;
+                scratch.results.push((v, f64::INFINITY));
                 continue;
             }
-            if queued.contains(&v) {
+            let key = synth.space.index_of(&v);
+            if let Some(&s) = cache.get(&key) {
                 revisits += 1;
-                dup_slots.push((results.len(), v.clone()));
-                results.push((v, f64::INFINITY)); // backfilled below
+                scratch.results.push((v, s));
+                continue;
+            }
+            if scratch.queued.contains(&key) {
+                revisits += 1;
+                scratch.dup_slots.push((scratch.results.len(), key));
+                scratch.results.push((v, f64::INFINITY)); // backfilled below
                 continue;
             }
             match synth.lower(&v) {
@@ -256,64 +310,39 @@ pub fn run_search(
                         break;
                     }
                     budget_left -= 1;
-                    queued.insert(v.clone());
-                    fresh.push((results.len(), c));
-                    results.push((v, f64::INFINITY)); // overwritten below
+                    scratch.queued.insert(key);
+                    let e = service.entry_for(synth, &c);
+                    scratch.fresh.push((scratch.results.len(), key, e, c));
+                    scratch.results.push((v, f64::INFINITY)); // overwritten below
                 }
                 Err(_) => {
                     rejected += 1;
                     round_rejected += 1;
-                    cache.insert(v.clone(), f64::INFINITY);
-                    results.push((v, f64::INFINITY));
+                    cache.insert(key, f64::INFINITY);
+                    scratch.results.push((v, f64::INFINITY));
                 }
             }
         }
 
-        let fresh_count = fresh.len();
-        if !fresh.is_empty() {
-            // One engine per batch, with candidates that synthesized the
-            // same architecture sharing one mapped entry and the mapper
-            // output reused across rounds via `map_cache`; all candidates
-            // then evaluate in parallel through the same sharded path as
-            // `Engine::grid` — output order (and every bit) matches the
+        let fresh_count = scratch.fresh.len();
+        if fresh_count > 0 {
+            // All fresh candidates evaluate in parallel through the
+            // service's persistent engine — the same work-stealing path as
+            // `Engine::grid`, so output order (and every bit) matches the
             // sequential loop.
-            let mut arch_index: HashMap<(String, u32, u32), usize> = HashMap::new();
-            let mut pairs: Vec<(Arch, NetworkMap)> = Vec::new();
-            let mut entry_of: Vec<usize> = Vec::with_capacity(fresh.len());
-            for (_, c) in &fresh {
-                let key = (c.arch.name.clone(), c.bits.0, c.bits.1);
-                let next = pairs.len();
-                let e = *arch_index.entry(key.clone()).or_insert(next);
-                if e == next {
-                    let map = map_cache
-                        .entry(key)
-                        .or_insert_with(|| {
-                            let qnet = synth
-                                .net
-                                .clone()
-                                .with_precision(PrecisionPolicy::of_bits(c.bits.0, c.bits.1));
-                            map_network(&c.arch, &qnet)
-                        })
-                        .clone();
-                    pairs.push((c.arch.clone(), map));
-                }
-                entry_of.push(e);
-            }
-            let engine = Engine::from_mapped_entries(pairs);
-            let coords: Vec<Coord> = fresh
-                .iter()
-                .enumerate()
-                .map(|(j, (_, c))| (entry_of[j], c.node, c.spec, c.mram))
-                .collect();
-            let points = engine.eval_coords(&coords);
-            for ((slot, cand), point) in fresh.into_iter().zip(points) {
+            scratch.coords.clear();
+            scratch
+                .coords
+                .extend(scratch.fresh.iter().map(|&(_, _, e, ref c)| (e, c.node, c.spec, c.mram)));
+            let points = service.eval_coords(&scratch.coords);
+            for ((slot, key, _e, cand), point) in scratch.fresh.drain(..).zip(points) {
                 let feasible = cfg.constraints.satisfied(&point);
                 let scalar =
                     if feasible { cfg.objective.value(&point) } else { f64::INFINITY };
                 let index = trace.len();
                 let mut eval = Evaluation {
                     index,
-                    vector: cand.vector.clone(),
+                    vector: cand.vector,
                     arch: point.arch.clone(),
                     node: cand.node,
                     mram: cand.mram,
@@ -334,27 +363,27 @@ pub fn run_search(
                 };
                 if feasible {
                     eval.joined_frontier = archive
-                        .offer_vec(index, vec![eval.energy_pj, eval.area_mm2, eval.edp]);
+                        .offer_slice(index, &[eval.energy_pj, eval.area_mm2, eval.edp]);
                 }
                 if scalar < best_scalar {
                     best_scalar = scalar;
                     best = Some(index);
                     best_point = Some(point);
                 }
-                cache.insert(cand.vector, scalar);
-                results[slot].1 = scalar;
+                cache.insert(key, scalar);
+                scratch.results[slot].1 = scalar;
                 trace.push(eval);
             }
             // Intra-batch duplicates get the scalar their first occurrence
             // just earned.
-            for (slot, v) in dup_slots {
-                if let Some(&s) = cache.get(&v) {
-                    results[slot].1 = s;
+            for (slot, key) in scratch.dup_slots.drain(..) {
+                if let Some(&s) = cache.get(&key) {
+                    scratch.results[slot].1 = s;
                 }
             }
         }
 
-        strategy.observe(&results, &mut prng);
+        strategy.observe(&scratch.results, &mut prng);
 
         // Only rounds that produced neither a fresh evaluation nor a fresh
         // rejection count as stalls: an exhaustive enumeration grinding
@@ -380,6 +409,7 @@ pub fn run_search(
         best,
         best_point,
         frontier,
+        cache_stats: service.stats().since(&stats_at_start),
     }
 }
 
@@ -432,7 +462,9 @@ pub struct SearchReport {
 }
 
 impl SearchReport {
-    /// Run every strategy (each from a fresh `cfg.seed`-seeded PRNG) and
+    /// Run every strategy (each from a fresh `cfg.seed`-seeded PRNG)
+    /// against one shared [`EvalService`] — later strategies reuse every
+    /// mapped entry and macro model the earlier ones paid for — and
     /// assemble the report.
     pub fn run(
         synth: &ArchSynth,
@@ -443,9 +475,10 @@ impl SearchReport {
             let label = format!("{} {} @{}", p.arch, p.flavor_label(), p.node.label());
             (label, s, p)
         });
+        let mut service = EvalService::new();
         let mut results = Vec::new();
         for mut s in strategies {
-            results.push(run_search(synth, &mut *s, cfg));
+            results.push(run_search_with(&mut service, synth, &mut *s, cfg));
         }
         SearchReport { objective: cfg.objective, constraints: cfg.constraints, baseline, results }
     }

@@ -1,0 +1,195 @@
+//! `search::service` — the long-lived evaluation service behind the
+//! search loop.
+//!
+//! PR 4's loop rebuilt an [`Engine`] per batch (cloning every `Arch` and
+//! `NetworkMap` into it) and interned mapper runs in a side cache keyed by
+//! `(String, u32, u32)` — one `String` clone per lookup. [`EvalService`]
+//! replaces both: it owns **one** engine for the whole run (or across
+//! runs — [`crate::search::SearchReport::run`] shares one service over
+//! every strategy), grows it with [`Engine::push_entry`] as the search
+//! discovers new (architecture, precision) combinations, and interns
+//! mapper runs by the knob sub-vector that determines them — the
+//! arch-shaping dims 0–8 plus the operand bit-widths — so a hit is a
+//! `HashMap` probe on a `Copy` key, no allocation.
+//!
+//! Because the engine persists, so do its incremental caches: per-entry
+//! map aggregates and the engine-wide macro-model memo survive across
+//! rounds, which is what makes one-knob neighbor moves cheap (see
+//! DESIGN.md, "The incremental evaluation layer").
+//!
+//! A service is bound to the synthesizer it first evaluates under: the
+//! knob-sub-vector key is only meaningful for one `(KnobSpace, Network)`.
+//! Reusing a service across different synthesizers would alias unrelated
+//! architectures onto one entry — build a fresh service per (space,
+//! workload) instead.
+
+use std::collections::HashMap;
+
+use super::space::{ArchSynth, Candidate};
+use crate::eval::{Coord, DesignPoint, Engine};
+use crate::mapping::map_network;
+use crate::workload::PrecisionPolicy;
+
+/// Number of arch-shaping knob dimensions (dims 0–8: family, grid, buffer
+/// capacities, banking, bus). Together with the operand bit-widths these
+/// determine the mapper output; dims 9–11 (node, MRAM, assignment) only
+/// affect evaluation, never the map.
+const ARCH_DIMS: usize = 9;
+
+/// Interning key of one mapped entry: the arch-shaping knob sub-vector
+/// plus (weight, activation) bit-widths. `Copy`, so cache probes never
+/// allocate (the old key cloned the synthesized arch name per lookup).
+type MapKey = ([usize; ARCH_DIMS], u32, u32);
+
+/// Cache telemetry of one service (map interning) and its engine
+/// (macro-model memo), cumulative since construction. Snapshot before a
+/// run and diff with [`CacheStats::since`] for per-run rates.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Mapper runs answered from the interning table.
+    pub map_hits: usize,
+    /// Mapper runs actually executed (Timeloop-lite map + engine entry).
+    pub map_misses: usize,
+    /// Macro models served from the engine-wide memo.
+    pub macro_hits: usize,
+    /// Macro models built (CACTI-lite derivation).
+    pub macro_misses: usize,
+}
+
+impl CacheStats {
+    /// Hits / (hits + misses) of the map-interning cache; 0 when unused.
+    pub fn map_hit_rate(&self) -> f64 {
+        rate(self.map_hits, self.map_misses)
+    }
+
+    /// Hits / (hits + misses) of the macro-model memo; 0 when unused.
+    pub fn macro_hit_rate(&self) -> f64 {
+        rate(self.macro_hits, self.macro_misses)
+    }
+
+    /// The delta since an earlier snapshot (saturating — a knob reset may
+    /// zero the engine's counters mid-window).
+    pub fn since(&self, earlier: &CacheStats) -> CacheStats {
+        CacheStats {
+            map_hits: self.map_hits.saturating_sub(earlier.map_hits),
+            map_misses: self.map_misses.saturating_sub(earlier.map_misses),
+            macro_hits: self.macro_hits.saturating_sub(earlier.macro_hits),
+            macro_misses: self.macro_misses.saturating_sub(earlier.macro_misses),
+        }
+    }
+}
+
+fn rate(hits: usize, misses: usize) -> f64 {
+    if hits + misses == 0 {
+        0.0
+    } else {
+        hits as f64 / (hits + misses) as f64
+    }
+}
+
+/// The long-lived evaluation service: one growing [`Engine`] plus the
+/// mapper-interning table. See the module docs for what persists and why.
+pub struct EvalService {
+    engine: Engine,
+    entry_of: HashMap<MapKey, usize>,
+    map_hits: usize,
+    map_misses: usize,
+}
+
+impl Default for EvalService {
+    fn default() -> EvalService {
+        EvalService::new()
+    }
+}
+
+impl EvalService {
+    /// An empty service (engine with no entries, cold caches).
+    pub fn new() -> EvalService {
+        EvalService {
+            engine: Engine::from_mapped_entries(Vec::new()),
+            entry_of: HashMap::new(),
+            map_hits: 0,
+            map_misses: 0,
+        }
+    }
+
+    /// The engine entry index of a lowered candidate, mapping the workload
+    /// at the candidate's precision on first sight and interning the
+    /// result for every later candidate that shares the same arch-shaping
+    /// knobs and bit-widths (node/MRAM/assignment moves always do).
+    pub fn entry_for(&mut self, synth: &ArchSynth, cand: &Candidate) -> usize {
+        let mut dims = [0usize; ARCH_DIMS];
+        dims.copy_from_slice(&cand.vector[..ARCH_DIMS]);
+        let key: MapKey = (dims, cand.bits.0, cand.bits.1);
+        if let Some(&e) = self.entry_of.get(&key) {
+            self.map_hits += 1;
+            return e;
+        }
+        self.map_misses += 1;
+        let qnet = synth
+            .net
+            .clone()
+            .with_precision(PrecisionPolicy::of_bits(cand.bits.0, cand.bits.1));
+        let map = map_network(&cand.arch, &qnet);
+        let e = self.engine.push_entry(cand.arch.clone(), map);
+        self.entry_of.insert(key, e);
+        e
+    }
+
+    /// The engine (for direct evaluation or inspection).
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Evaluate coordinates through the shared engine — the same
+    /// work-stealing, bitwise-deterministic path as [`Engine::eval_coords`].
+    pub fn eval_coords(&self, coords: &[Coord]) -> Vec<DesignPoint> {
+        self.engine.eval_coords(coords)
+    }
+
+    /// Cumulative cache telemetry (map interning + macro-model memo).
+    pub fn stats(&self) -> CacheStats {
+        let (macro_hits, macro_misses) = self.engine.macro_cache_stats();
+        CacheStats { map_hits: self.map_hits, map_misses: self.map_misses, macro_hits, macro_misses }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::space::KnobSpace;
+    use crate::workload::builtin::detnet;
+
+    #[test]
+    fn entries_intern_by_arch_shape_and_bits() {
+        let synth = ArchSynth::new(KnobSpace::tiny(), detnet()).unwrap();
+        let mut svc = EvalService::new();
+        let a = synth.lower(&synth.space.vector_at(0)).unwrap();
+        // vector 1 differs only on dim 11 (assignment) — same map
+        let b = synth.lower(&synth.space.vector_at(1)).unwrap();
+        let ea = svc.entry_for(&synth, &a);
+        let eb = svc.entry_for(&synth, &b);
+        assert_eq!(ea, eb, "assignment moves must share one mapped entry");
+        // a different GLB sizing (dim 5) must map fresh
+        let far = synth.space.cardinality() - 1;
+        let c = synth.lower(&synth.space.vector_at(far)).unwrap();
+        let ec = svc.entry_for(&synth, &c);
+        assert_ne!(ea, ec, "distinct arch shapes must not alias");
+        let s = svc.stats();
+        assert_eq!((s.map_hits, s.map_misses), (1, 2));
+        assert!(s.map_hit_rate() > 0.0);
+    }
+
+    #[test]
+    fn stats_since_diffs_snapshots() {
+        let synth = ArchSynth::new(KnobSpace::tiny(), detnet()).unwrap();
+        let mut svc = EvalService::new();
+        let cand = synth.lower(&synth.space.vector_at(0)).unwrap();
+        svc.entry_for(&synth, &cand);
+        let snap = svc.stats();
+        svc.entry_for(&synth, &cand);
+        let delta = svc.stats().since(&snap);
+        assert_eq!((delta.map_hits, delta.map_misses), (1, 0));
+        assert_eq!(delta.map_hit_rate(), 1.0);
+    }
+}

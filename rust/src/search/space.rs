@@ -247,6 +247,21 @@ impl KnobSpace {
         v
     }
 
+    /// Canonical index of a knob vector — the exact inverse of
+    /// [`KnobSpace::vector_at`]. This is the search loop's allocation-free
+    /// dedupe key: a `u128` instead of a cloned `KnobVector` per cache
+    /// entry. The caller must pass an in-range vector
+    /// ([`KnobSpace::contains`]).
+    pub fn index_of(&self, v: &KnobVector) -> u128 {
+        debug_assert!(self.contains(v), "{v:?} out of range for {:?}", self.dim_sizes());
+        let sizes = self.dim_sizes();
+        let mut i = 0u128;
+        for d in 0..DIMS {
+            i = i * sizes[d] as u128 + v[d] as u128;
+        }
+        i
+    }
+
     /// Uniform random knob vector.
     pub fn random(&self, prng: &mut Prng) -> KnobVector {
         self.dim_sizes().iter().map(|&n| prng.range_usize(0, n)).collect()
@@ -762,6 +777,21 @@ mod tests {
         // canonical order: last dimension fastest
         assert_eq!(space.vector_at(0)[11], 0);
         assert_eq!(space.vector_at(1)[11], 1);
+    }
+
+    #[test]
+    fn index_of_inverts_vector_at() {
+        for space in [KnobSpace::tiny(), KnobSpace::paper(), KnobSpace::paper_mixed_precision()] {
+            let n = space.cardinality();
+            for i in [0, 1, n / 2, n.saturating_sub(1)] {
+                assert_eq!(space.index_of(&space.vector_at(i)), i);
+            }
+            let mut prng = Prng::new(7);
+            for _ in 0..200 {
+                let v = space.random(&mut prng);
+                assert_eq!(space.vector_at(space.index_of(&v)), v, "{v:?}");
+            }
+        }
     }
 
     #[test]

@@ -29,6 +29,9 @@ pub struct BenchRecord {
     /// grid sweep); 0 = unspecified. The regression harness derives
     /// units/second as `units_per_iter / mean_s`.
     pub units_per_iter: f64,
+    /// Extra numeric annotations ([`bench_annotate`]) — e.g. cache
+    /// hit-rates — emitted as additional keys of the bench's JSON object.
+    pub extras: Vec<(String, f64)>,
 }
 
 fn records() -> &'static Mutex<Vec<BenchRecord>> {
@@ -77,8 +80,20 @@ pub fn bench_units<F: FnMut()>(
         p50_s: p50,
         iters,
         units_per_iter,
+        extras: Vec::new(),
     });
     (mean, min, p50)
+}
+
+/// Attach a numeric annotation to the most recent record named `name`
+/// (e.g. a cache hit-rate the measured closure observed) — emitted as an
+/// extra key of that bench's JSON object. A no-op when no such record
+/// exists.
+pub fn bench_annotate(name: &str, key: &str, value: f64) {
+    let mut recs = records().lock().unwrap();
+    if let Some(r) = recs.iter_mut().rev().find(|r| r.name == name) {
+        r.extras.push((key.to_string(), value));
+    }
 }
 
 /// Dump every bench recorded so far as JSON to `path` (one object per
@@ -97,6 +112,9 @@ pub fn write_json(path: &std::path::Path) -> crate::Result<()> {
         if r.units_per_iter > 0.0 {
             pairs.push(("units_per_iter", Json::num(r.units_per_iter)));
             pairs.push(("units_per_s", Json::num(r.units_per_iter / r.mean_s.max(1e-12))));
+        }
+        for (k, v) in &r.extras {
+            pairs.push((k.as_str(), Json::num(*v)));
         }
         benches.push(Json::obj(pairs));
     }
@@ -158,6 +176,8 @@ mod tests {
         bench_units("unit-bench-json", 0, 3, 36.0, || {
             std::hint::black_box(1 + 1);
         });
+        bench_annotate("unit-bench-json", "cache_hit_rate", 0.75);
+        bench_annotate("no-such-bench", "ignored", 1.0); // must not panic
         let dir = std::env::temp_dir().join(format!("xr_dse_bench_{}", std::process::id()));
         let path = dir.join("bench.json");
         write_json(&path).unwrap();
@@ -170,6 +190,7 @@ mod tests {
         assert_eq!(rec.req_f64("units_per_iter").unwrap(), 36.0);
         assert!(rec.req_f64("units_per_s").unwrap() > 0.0);
         assert!(rec.req_f64("mean_s").unwrap() >= 0.0);
+        assert_eq!(rec.req_f64("cache_hit_rate").unwrap(), 0.75);
         std::fs::remove_dir_all(&dir).ok();
     }
 

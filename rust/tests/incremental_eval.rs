@@ -1,0 +1,203 @@
+//! Incremental-evaluation gates: the engine's memo layer and work-stealing
+//! scheduler must be *invisible* in the numbers.
+//!
+//! 1. **Warm vs cold** — a design point served through the engine's
+//!    per-entry aggregates and macro-model memo is bitwise-identical to a
+//!    fresh `EvalContext::with_knobs` build, on first touch and on every
+//!    repeat.
+//! 2. **Knobs in the key** — injected non-default `Knobs` reset the memo:
+//!    the warm path under new knobs matches a cold build under the same
+//!    knobs (never a stale model from the old calibration).
+//! 3. **Work stealing** — `eval_coords_with_workers` reproduces
+//!    `eval_coords_seq` bitwise for 1, 2 and 8 workers (the in-process
+//!    equivalent of `XR_DSE_THREADS ∈ {1, 2, 8}`, whose env parse is
+//!    frozen per process).
+//! 4. **Warm service** — re-running a search on an already-warm
+//!    `EvalService` replays the cold run's trace bitwise while skipping
+//!    the mapper entirely.
+//! 5. **Growing engine** — `Engine::push_entry` keeps the keyed lookup
+//!    index sorted under out-of-order inserts.
+
+use xr_edge_dse::arch::{cpu, eyeriss, simba, MemFlavor, PeConfig};
+use xr_edge_dse::eval::{AssignSpec, Coord, DeviceAssignment, Engine, EvalContext};
+use xr_edge_dse::mapping::map_network;
+use xr_edge_dse::search::{
+    run_search, run_search_with, ArchSynth, Constraints, EvalService, KnobSpace, Objective,
+    RandomSearch, SearchConfig,
+};
+use xr_edge_dse::tech::{Device, Node};
+use xr_edge_dse::workload::builtin::{detnet, edsnet};
+
+fn engine() -> Engine {
+    Engine::new(vec![simba(PeConfig::V2), eyeriss(PeConfig::V2)], vec![detnet()])
+}
+
+/// The assignments exercised per (arch, node): all named flavors plus two
+/// lattice masks valid for both families (3+ macro levels).
+fn assignments(arch: &xr_edge_dse::arch::Arch) -> Vec<DeviceAssignment> {
+    let mut out: Vec<DeviceAssignment> = MemFlavor::ALL
+        .iter()
+        .map(|&f| DeviceAssignment::from_flavor(arch, f, Device::VgsotMram))
+        .collect();
+    out.push(DeviceAssignment::from_mask(arch, 1, Device::SttMram));
+    out.push(DeviceAssignment::from_mask(arch, 5, Device::VgsotMram));
+    out
+}
+
+#[test]
+fn warm_cache_matches_cold_path_bitwise() {
+    let e = engine();
+    let knobs = e.knobs();
+    for entry in e.entries() {
+        for node in [Node::N28, Node::N7] {
+            for assignment in assignments(&entry.arch) {
+                let cold =
+                    EvalContext::with_knobs(&entry.arch, &entry.map, node, assignment.clone(), &knobs);
+                let cold_energy = cold.energy_breakdown();
+                let cold_power = cold.power_model_from(&cold_energy);
+                // first touch populates the caches, repeat hits them —
+                // both must equal the cold reference bitwise
+                for _ in 0..2 {
+                    let p = e.eval_assigned(entry, node, assignment.clone());
+                    assert_eq!(p.energy.total_pj().to_bits(), cold_energy.total_pj().to_bits());
+                    assert_eq!(p.latency_ns.to_bits(), cold.latency_ns.to_bits());
+                    assert_eq!(p.area_mm2.to_bits(), cold.area_report().total_mm2().to_bits());
+                    assert_eq!(
+                        p.power.p_mem_uw(10.0).to_bits(),
+                        cold_power.p_mem_uw(10.0).to_bits()
+                    );
+                    assert_eq!(
+                        p.utilization.to_bits(),
+                        entry.map.utilization(&entry.arch).to_bits()
+                    );
+                }
+            }
+        }
+    }
+    let (hits, misses) = e.macro_cache_stats();
+    assert!(hits > 0, "repeat evaluations must hit the macro memo");
+    assert!(misses > 0, "first touches must miss the macro memo");
+}
+
+#[test]
+fn injected_knobs_reset_the_memo() {
+    let base = engine();
+    let assignment = |arch: &xr_edge_dse::arch::Arch| {
+        DeviceAssignment::from_flavor(arch, MemFlavor::P1, Device::VgsotMram)
+    };
+    // warm the base engine's memo on the point we'll re-evaluate hot
+    let base_energy = {
+        let entry = &base.entries()[0];
+        base.eval_assigned(entry, Node::N7, assignment(&entry.arch)).energy.total_pj()
+    };
+    let mut hot_knobs = base.knobs();
+    hot_knobs.vgsot_read_mult *= 2.0;
+    let hot = base.with_knobs(hot_knobs);
+    let entry = &hot.entries()[0];
+    let p = hot.eval_assigned(entry, Node::N7, assignment(&entry.arch));
+    let cold = EvalContext::with_knobs(
+        &entry.arch,
+        &entry.map,
+        Node::N7,
+        assignment(&entry.arch),
+        &hot_knobs,
+    );
+    assert_eq!(
+        p.energy.total_pj().to_bits(),
+        cold.energy_breakdown().total_pj().to_bits(),
+        "warm path under injected knobs must match a cold build under the same knobs"
+    );
+    assert!(
+        p.energy.total_pj() > base_energy,
+        "doubled VGSOT read energy must show — a stale memo would leak the base model"
+    );
+}
+
+#[test]
+fn work_stealing_matches_sequential_for_1_2_8_workers() {
+    let e = Engine::new(
+        vec![simba(PeConfig::V2), eyeriss(PeConfig::V2), cpu()],
+        vec![detnet(), edsnet()],
+    );
+    // Coordinates of wildly varying cost (CPU vs accelerator entries,
+    // both nets, flavors and masks) — the case chunk-sharding straggled
+    // on and work stealing exists for.
+    let mut coords: Vec<Coord> = Vec::new();
+    for e_idx in 0..e.entries().len() {
+        for node in [Node::N28, Node::N7] {
+            for flavor in MemFlavor::ALL {
+                coords.push((e_idx, node, AssignSpec::Flavor(flavor), Device::VgsotMram));
+            }
+            coords.push((e_idx, node, AssignSpec::Mask(3), Device::SttMram));
+        }
+    }
+    let seq = e.eval_coords_seq(&coords);
+    for workers in [1, 2, 8] {
+        let par = e.eval_coords_with_workers(&coords, workers);
+        assert_eq!(seq.len(), par.len());
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.arch, b.arch, "{workers} workers");
+            assert_eq!(a.network, b.network);
+            assert_eq!(a.node, b.node);
+            assert_eq!(a.energy.total_pj().to_bits(), b.energy.total_pj().to_bits());
+            assert_eq!(a.latency_ns.to_bits(), b.latency_ns.to_bits());
+            assert_eq!(a.area_mm2.to_bits(), b.area_mm2.to_bits());
+            assert_eq!(a.power.p_mem_uw(10.0).to_bits(), b.power.p_mem_uw(10.0).to_bits());
+        }
+    }
+}
+
+#[test]
+fn warm_service_replays_search_bitwise_without_remapping() {
+    let synth = ArchSynth::new(KnobSpace::tiny(), detnet()).unwrap();
+    let cfg = SearchConfig {
+        objective: Objective::Energy,
+        constraints: Constraints::at_ips(10.0),
+        budget: 10,
+        batch: 4,
+        seed: 42,
+    };
+    let cold = run_search(&synth, &mut RandomSearch, &cfg);
+    let mut service = EvalService::new();
+    let first = run_search_with(&mut service, &synth, &mut RandomSearch, &cfg);
+    let warm = run_search_with(&mut service, &synth, &mut RandomSearch, &cfg);
+    for r in [&first, &warm] {
+        assert_eq!(cold.evaluations, r.evaluations);
+        assert_eq!(cold.frontier.len(), r.frontier.len());
+        for (a, b) in cold.trace.iter().zip(&r.trace) {
+            assert_eq!(a.vector, b.vector);
+            assert_eq!(a.arch, b.arch);
+            assert_eq!(a.scalar.to_bits(), b.scalar.to_bits());
+            assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits());
+            assert_eq!(a.edp.to_bits(), b.edp.to_bits());
+            assert_eq!(a.joined_frontier, b.joined_frontier);
+        }
+    }
+    assert!(first.cache_stats.map_misses > 0, "cold run must map");
+    assert_eq!(warm.cache_stats.map_misses, 0, "warm run must never re-map");
+    assert!(warm.cache_stats.map_hits > 0);
+    assert!(warm.cache_stats.macro_hits > 0);
+}
+
+#[test]
+fn push_entry_keeps_keyed_lookup_sorted() {
+    let mut e = Engine::from_mapped_entries(Vec::new());
+    // deliberately out of alphabetical order: simba_v2, cpu, eyeriss_v2
+    let net = detnet();
+    for arch in [simba(PeConfig::V2), cpu(), eyeriss(PeConfig::V2)] {
+        let map = map_network(&arch, &net);
+        let idx = e.push_entry(arch.clone(), map);
+        assert_eq!(e.entries()[idx].arch.name, arch.name, "indices must be stable");
+    }
+    for name in ["simba_v2", "cpu", "eyeriss_v2"] {
+        let entry = e.entry(name, "detnet").expect(name);
+        assert_eq!(entry.arch.name, name);
+    }
+    assert!(e.entry("cpu", "edsnet").is_none());
+    // and the grown engine evaluates like a fresh one
+    let fresh = Engine::new(vec![cpu()], vec![detnet()]);
+    let a = e.point("cpu", "detnet", Node::N7, MemFlavor::P0, Device::VgsotMram).unwrap();
+    let b = fresh.point("cpu", "detnet", Node::N7, MemFlavor::P0, Device::VgsotMram).unwrap();
+    assert_eq!(a.energy.total_pj().to_bits(), b.energy.total_pj().to_bits());
+    assert_eq!(a.latency_ns.to_bits(), b.latency_ns.to_bits());
+}
