@@ -1,0 +1,63 @@
+//! Fleet-simulation throughput benches (ISSUE-7 acceptance):
+//!   F1 — end-to-end `run_fleet` on 10k streams / 1k devices (placement
+//!        scan + virtual-clock simulation + aggregation), streams/s;
+//!   F2 — the acceptance point: 100k streams / 1k devices. The checked-in
+//!        baseline ceiling (8 s) × the ±25% gate tolerance equals the
+//!        ISSUE-7 bound — "a 100k-stream fleet simulates in < 10 s wall
+//!        on CI" — so a violation fails the bench-regression job.
+//!
+//! Both benches are deterministic (fixed master seed, virtual clock, no
+//! wall-time dependence in the modeled results); only the wall times vary
+//! with the machine.
+
+use xr_edge_dse::coordinator::sensor::Arrival;
+use xr_edge_dse::fleet::{run_fleet, FleetSpec, HwPoint, LeastLoaded, StreamLoad};
+use xr_edge_dse::tech::{Device, Node};
+use xr_edge_dse::util::benchkit::{bench_annotate, bench_units, figure_header, write_json_if_requested};
+
+/// One fleet spec at `n` streams: the paper palette replicated over 1k
+/// devices, 3/4 hand detnet @ 2 fps + 1/4 eye edsnet Poisson @ 1/s, 5 s
+/// modeled horizon. Rates are kept low so event count scales linearly
+/// with the stream count (≈ 30 events per hand stream, ≈ 10 per eye).
+fn spec(n: usize) -> FleetSpec {
+    let points = HwPoint::paper_palette(Node::N7, Device::VgsotMram);
+    let mut s = FleetSpec::new("bench", points, 1000, 5.0, 42)
+        .with_load(StreamLoad::new("hand", "detnet", Arrival::Periodic { fps: 2.0 }, n - n / 4))
+        .with_load(StreamLoad::new("eye", "edsnet", Arrival::Poisson { rate: 1.0 }, n / 4));
+    // The bench measures simulation throughput, not admission control —
+    // lift the synthetic util cap so every stream is placed and simulated.
+    s.constraints.max_util = Some(1e6);
+    s
+}
+
+fn fleet_bench(name: &str, n: usize, warmup: usize, iters: usize) {
+    let s = spec(n);
+    let mut events = 0u64;
+    let mut served = 0u64;
+    let (mean_s, _, _) = bench_units(name, warmup, iters, n as f64, || {
+        let r = run_fleet(&s, &mut LeastLoaded).expect("bench fleet runs");
+        assert_eq!(r.placed, n as u64, "bench fleet must place every stream");
+        events = r.events;
+        served = r.served;
+        std::hint::black_box(r.energy_pj);
+    });
+    bench_annotate(name, "events", events as f64);
+    bench_annotate(name, "events_per_s", events as f64 / mean_s.max(1e-9));
+    println!(
+        "{name}: {:.0} streams/s ({} events, {:.0} events/s, {served} served)",
+        n as f64 / mean_s.max(1e-9),
+        events,
+        events as f64 / mean_s.max(1e-9)
+    );
+}
+
+fn main() -> anyhow::Result<()> {
+    figure_header(
+        "§Fleet — virtual-clock simulation throughput",
+        "100k+ concurrent streams simulate on one machine in seconds, not wall-hours",
+    );
+    fleet_bench("F1 fleet sim, 10k streams / 1k devices", 10_000, 1, 3);
+    fleet_bench("F2 fleet sim, 100k streams / 1k devices", 100_000, 0, 2);
+    write_json_if_requested()?;
+    Ok(())
+}

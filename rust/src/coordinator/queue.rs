@@ -9,8 +9,60 @@ use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
 
-struct State<T> {
+/// Single-owner drop-oldest core: the eviction semantic and its counter
+/// without any locking. [`DropOldest`] wraps one in a mutex for the
+/// thread-per-stream runner; the virtual-clock executor
+/// (`fleet::executor`) uses it directly as each simulated stream's queue,
+/// so both runners share one backpressure behavior and the per-stream
+/// eviction counts the fleet telemetry reports.
+#[derive(Debug)]
+pub struct Ring<T> {
     items: VecDeque<T>,
+    capacity: usize,
+    evicted: u64,
+}
+
+impl<T> Ring<T> {
+    /// `capacity` is clamped to at least 1.
+    pub fn new(capacity: usize) -> Ring<T> {
+        let capacity = capacity.max(1);
+        Ring { items: VecDeque::with_capacity(capacity.min(64)), capacity, evicted: 0 }
+    }
+
+    /// Enqueue `item`; when full, the *oldest* entry is evicted (counted)
+    /// and returned.
+    pub fn push(&mut self, item: T) -> Option<T> {
+        let evicted = if self.items.len() >= self.capacity {
+            self.evicted += 1;
+            self.items.pop_front()
+        } else {
+            None
+        };
+        self.items.push_back(item);
+        evicted
+    }
+
+    /// FIFO pop: always the oldest survivor.
+    pub fn pop_front(&mut self) -> Option<T> {
+        self.items.pop_front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Entries evicted by overflow so far.
+    pub fn evicted(&self) -> u64 {
+        self.evicted
+    }
+}
+
+struct State<T> {
+    items: Ring<T>,
     closed: bool,
 }
 
@@ -18,7 +70,6 @@ struct State<T> {
 pub struct DropOldest<T> {
     inner: Mutex<State<T>>,
     avail: Condvar,
-    capacity: usize,
     dropped: AtomicU64,
 }
 
@@ -26,9 +77,8 @@ impl<T> DropOldest<T> {
     /// `capacity` is clamped to at least 1.
     pub fn new(capacity: usize) -> DropOldest<T> {
         DropOldest {
-            inner: Mutex::new(State { items: VecDeque::new(), closed: false }),
+            inner: Mutex::new(State { items: Ring::new(capacity), closed: false }),
             avail: Condvar::new(),
-            capacity: capacity.max(1),
             dropped: AtomicU64::new(0),
         }
     }
@@ -44,13 +94,10 @@ impl<T> DropOldest<T> {
             self.dropped.fetch_add(1, Ordering::Relaxed);
             return Err(item);
         }
-        let evicted = if st.items.len() >= self.capacity {
+        let evicted = st.items.push(item);
+        if evicted.is_some() {
             self.dropped.fetch_add(1, Ordering::Relaxed);
-            st.items.pop_front()
-        } else {
-            None
-        };
-        st.items.push_back(item);
+        }
         drop(st);
         self.avail.notify_one();
         Ok(evicted)
@@ -106,6 +153,24 @@ mod tests {
     use super::*;
     use std::sync::Arc;
     use std::time::Duration;
+
+    #[test]
+    fn ring_evicts_oldest_and_counts() {
+        let mut r: Ring<u64> = Ring::new(2);
+        assert!(r.is_empty());
+        assert_eq!(r.push(1), None);
+        assert_eq!(r.push(2), None);
+        assert_eq!(r.push(3), Some(1), "oldest entry must be evicted");
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.evicted(), 1);
+        assert_eq!(r.pop_front(), Some(2));
+        assert_eq!(r.pop_front(), Some(3));
+        assert_eq!(r.pop_front(), None);
+        // zero capacity clamps to one, like DropOldest
+        let mut z: Ring<u64> = Ring::new(0);
+        assert_eq!(z.push(7), None);
+        assert_eq!(z.push(8), Some(7));
+    }
 
     #[test]
     fn fifo_below_capacity() {

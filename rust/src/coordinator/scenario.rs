@@ -18,15 +18,33 @@ use std::time::{Duration, Instant};
 
 use crate::arch::{self, Arch, MemFlavor, PeConfig};
 use crate::eval::{Assignments, Devices, Engine, Query};
+use crate::fleet::executor::{modeled_service_s, Executor, FrameSource, SimStream};
+use crate::power::PowerModel;
 use crate::report::{ms, pct, Csv, Table};
 use crate::tech::{paper_mram_for, Device, Node};
-use crate::util::stats::Summary;
+use crate::util::stats::{summarize, SortedSamples, Summary};
 use crate::workload;
 
 use super::gating::GateController;
 use super::queue::DropOldest;
 use super::sensor::{Arrival, Frame, Sensor};
 use super::{Backend, Coordinator, StreamConfig};
+
+/// Which engine replays the scenario.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Runner {
+    /// The original thread-per-stream coordinator: real producer/worker
+    /// threads, wall-clock latency measurements, `time_scale`-compressed
+    /// sleeping.
+    #[default]
+    Threads,
+    /// The `fleet::executor` virtual clock: no threads, no sleeping —
+    /// the whole horizon replays in the time it takes to drain the event
+    /// heap, with identical modeled metrics (ledger energy, IPS, drop
+    /// counts) and *modeled* latency summaries in place of measured
+    /// wall-clock ones.
+    VirtualClock,
+}
 
 /// One stream of a scenario: (model, sensor rate, queue policy, memory
 /// flavor, precision).
@@ -90,6 +108,9 @@ pub struct Scenario {
     pub node: Node,
     pub mram: Device,
     pub backend: Backend,
+    /// Replay engine (thread runner by default; `Runner::VirtualClock`
+    /// simulates the same spec on the fleet executor without sleeping).
+    pub runner: Runner,
 }
 
 impl Scenario {
@@ -112,6 +133,7 @@ impl Scenario {
             node: Node::N7,
             mram: paper_mram_for(Node::N7),
             backend: Backend::Auto { artifacts_dir },
+            runner: Runner::default(),
         };
         Ok(match name {
             "paper" => Scenario {
@@ -149,7 +171,12 @@ impl Scenario {
                 streams: vec![
                     StreamSpec {
                         queue_depth: 2,
-                        exec_floor_s: 0.02,
+                        // 50 fps against a 50 ms floor: 2.5× over-rate, so
+                        // drop-oldest saturates on both runners (at exactly
+                        // the 20 ms gap the virtual clock would complete
+                        // each frame the instant the next arrives and never
+                        // drop — Done sorts before same-tick Arrival).
+                        exec_floor_s: 0.05,
                         ..StreamSpec::new(
                             "hot",
                             "detnet",
@@ -175,20 +202,12 @@ impl Scenario {
         })
     }
 
-    /// Run the scenario: build each stream's modeled power variant through
-    /// the unified evaluation engine, start the coordinator (one worker +
-    /// drop-oldest queue per stream, shared runtime), replay every
-    /// sensor's schedule from its own producer thread, then assemble the
-    /// [`ScenarioReport`].
-    pub fn run(&self) -> crate::Result<ScenarioReport> {
-        anyhow::ensure!(!self.streams.is_empty(), "scenario '{}' has no streams", self.name);
-        anyhow::ensure!(self.time_scale > 0.0, "time_scale must be positive");
-        anyhow::ensure!(self.seconds > 0.0, "seconds must be positive");
-
-        // One engine per distinct (workload, precision) pair; every
-        // stream's PowerModel is a query against its pair's engine (the
-        // same evaluation path as every figure/table — streams of one
-        // model may serve at different precisions).
+    /// Each stream's modeled power variant, built through the unified
+    /// evaluation engine — one engine per distinct (workload, precision)
+    /// pair; every stream's `PowerModel` is a query against its pair's
+    /// engine (the same evaluation path as every figure/table — streams
+    /// of one model may serve at different precisions).
+    fn stream_powers(&self) -> crate::Result<Vec<PowerModel>> {
         let mut engines: Vec<(String, workload::PrecisionPolicy, Engine)> = Vec::new();
         for s in &self.streams {
             if !engines.iter().any(|(m, p, _)| *m == s.model && *p == s.precision) {
@@ -201,7 +220,6 @@ impl Scenario {
                 ));
             }
         }
-        let mut cfgs = Vec::with_capacity(self.streams.len());
         let mut powers = Vec::with_capacity(self.streams.len());
         for s in &self.streams {
             let engine = engines
@@ -220,8 +238,32 @@ impl Scenario {
                     anyhow::anyhow!("no design point for ({}, {:?})", s.model, s.flavor)
                 })?;
             powers.push(point.power.clone());
+        }
+        Ok(powers)
+    }
+
+    /// Run the scenario on the configured [`Runner`] and assemble the
+    /// [`ScenarioReport`].
+    pub fn run(&self) -> crate::Result<ScenarioReport> {
+        anyhow::ensure!(!self.streams.is_empty(), "scenario '{}' has no streams", self.name);
+        anyhow::ensure!(self.time_scale > 0.0, "time_scale must be positive");
+        anyhow::ensure!(self.seconds > 0.0, "seconds must be positive");
+        match self.runner {
+            Runner::Threads => self.run_threads(),
+            Runner::VirtualClock => self.run_virtual(),
+        }
+    }
+
+    /// Thread-per-stream replay: start the coordinator (one worker +
+    /// drop-oldest queue per stream, shared runtime), replay every
+    /// sensor's schedule from its own producer thread at
+    /// `time_scale`-compressed wall pace.
+    fn run_threads(&self) -> crate::Result<ScenarioReport> {
+        let powers = self.stream_powers()?;
+        let mut cfgs = Vec::with_capacity(self.streams.len());
+        for (s, power) in self.streams.iter().zip(&powers) {
             let mut cfg = StreamConfig::new(&s.name, &s.model, s.queue_depth);
-            cfg.ledger = Some(GateController::new(point.power.clone()));
+            cfg.ledger = Some(GateController::new(power.clone()));
             cfg.exec_floor_s = s.exec_floor_s;
             cfg.horizon_s = Some(self.seconds);
             cfgs.push(cfg);
@@ -302,6 +344,70 @@ impl Scenario {
             synthetic,
             seconds: self.seconds,
             time_scale: self.time_scale,
+            runner: Runner::Threads,
+            wall_s,
+            streams,
+        })
+    }
+
+    /// Virtual-clock replay on the fleet executor: the same stream specs,
+    /// sensors, queues, and ledgers, with no threads and no sleeping.
+    /// Modeled metrics (submitted/served/dropped, ledger energy, observed
+    /// IPS) match the thread runner; latency summaries are *modeled*
+    /// (queue wait on the virtual clock + fixed modeled service time)
+    /// rather than measured wall-clock, so they are deterministic too.
+    fn run_virtual(&self) -> crate::Result<ScenarioReport> {
+        let powers = self.stream_powers()?;
+        let t0 = Instant::now();
+        let mut exec = Executor::new(self.seconds);
+        for (i, (spec, power)) in self.streams.iter().zip(&powers).enumerate() {
+            exec.add_stream(SimStream::new(
+                0,
+                i as u32,
+                FrameSource::Sensor(Box::new(make_sensor(spec))),
+                spec.queue_depth,
+                modeled_service_s(power, spec.exec_floor_s),
+                Some(GateController::new(power.clone())),
+            ));
+        }
+        exec.run();
+        let wall_s = t0.elapsed().as_secs_f64();
+
+        let mut streams = Vec::with_capacity(self.streams.len());
+        for ((spec, power), sim) in self.streams.iter().zip(&powers).zip(exec.streams()) {
+            let ledger = sim.ledger().expect("virtual streams always carry a ledger");
+            let observed_ips = ledger.observed_ips();
+            let service = sim.service_s();
+            let exec_samples = vec![service; sim.served() as usize];
+            let waits = SortedSamples::new(sim.queue_waits().to_vec());
+            let e2e =
+                SortedSamples::new(sim.queue_waits().iter().map(|w| w + service).collect());
+            streams.push(StreamReport {
+                name: spec.name.clone(),
+                model: spec.model.clone(),
+                flavor: spec.flavor,
+                precision: spec.precision.name().to_string(),
+                rate: spec.arrival.rate(),
+                submitted: sim.submitted(),
+                served: sim.served(),
+                dropped: sim.dropped(),
+                exec: summarize(&exec_samples),
+                queue: waits.summary(),
+                e2e: e2e.summary(),
+                observed_ips,
+                ledger_uw: ledger.avg_power_uw(),
+                closed_form_uw: power.p_mem_uw(observed_ips),
+                energy_pj: ledger.energy_pj,
+                wakeups: ledger.wakeups,
+                feasible: crate::pipeline::meets_ips(power, spec.arrival.rate()),
+            });
+        }
+        Ok(ScenarioReport {
+            scenario: self.name.clone(),
+            synthetic: true,
+            seconds: self.seconds,
+            time_scale: self.time_scale,
+            runner: Runner::VirtualClock,
             wall_s,
             streams,
         })
@@ -368,6 +474,8 @@ pub struct ScenarioReport {
     /// Modeled horizon, seconds.
     pub seconds: f64,
     pub time_scale: f64,
+    /// Which engine produced this report.
+    pub runner: Runner,
     /// Measured wall time of the replay, seconds.
     pub wall_s: f64,
     pub streams: Vec<StreamReport>,
@@ -399,14 +507,21 @@ impl ScenarioReport {
 
     /// Render the per-stream table (the `xr-edge-dse scenario` output).
     pub fn table(&self) -> Table {
-        let mut t = Table::new(
-            &format!(
+        let title = match self.runner {
+            Runner::Threads => format!(
                 "scenario '{}' — {:.0} s modeled @{}× ({} backend)",
                 self.scenario,
                 self.seconds,
                 self.time_scale,
                 if self.synthetic { "synthetic" } else { "pjrt" }
             ),
+            Runner::VirtualClock => format!(
+                "scenario '{}' — {:.0} s modeled (virtual clock)",
+                self.scenario, self.seconds
+            ),
+        };
+        let mut t = Table::new(
+            &title,
             &[
                 "stream", "model", "flavor", "prec", "rate", "served", "dropped", "e2e p50",
                 "e2e p99", "IPS obs", "P_mem ledger", "P_mem closed", "Δ",

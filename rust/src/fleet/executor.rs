@@ -1,0 +1,519 @@
+//! Event-driven virtual-clock executor: discrete-event simulation of
+//! many concurrent inference streams on one machine, with no wall-clock
+//! sleeping. Where the thread-per-stream runner replays a 60-second
+//! operating point in `60 / time_scale` real seconds, this executor
+//! replays it in the time it takes to pop ~2 events per frame off a
+//! binary heap — so 100k+ streams (a whole device fleet) simulate in
+//! seconds.
+//!
+//! ## Event model
+//!
+//! Two event kinds per stream, on one shared virtual clock:
+//!
+//! - **Arrival** — a frame's scheduled capture instant (the cumulative
+//!   sum of the source's inter-arrival gaps, exactly the thread
+//!   producer's modeled clock). An arrival is queued (drop-oldest
+//!   [`Ring`], the same backpressure primitive the thread runner locks)
+//!   or starts service immediately when the stream is idle; it then
+//!   draws the *next* gap and schedules the next arrival, unless that
+//!   would land past the horizon (the thread loop's `t + gap > seconds`
+//!   break, strict, so an arrival exactly at the horizon is admitted).
+//! - **Done** — service completion after the stream's fixed modeled
+//!   service time; pops the queue's oldest survivor, if any.
+//!
+//! ## Determinism
+//!
+//! The heap orders events by the fully spec-derived key
+//! `(time, device, stream, kind, seq)` — `Ord`-derived over the event
+//! struct with time as the order-preserving `f64::to_bits` of a
+//! non-negative finite timestamp, and Done (kind 0) ahead of Arrival
+//! (kind 1) at equal instants so a freed server picks up a same-tick
+//! frame without queueing it. Since every field of the key comes from
+//! the stream *spec* (ids, per-stream sequence numbers) and none from
+//! runtime state, two executors fed the same streams in **any insertion
+//! order** pop bitwise-identical event sequences — which makes every
+//! downstream ledger, counter, and latency sample bitwise-reproducible
+//! from the seeds alone. Callers must give streams distinct
+//! `(device, stream)` id pairs; ties beyond the key would otherwise
+//! fall through to insertion order.
+//!
+//! ## Ledger equivalence with the thread runner
+//!
+//! Per served frame, in serve order, the thread worker charges
+//! `idle(sched_s·1e9 − elapsed)` then `inference()` against the frame's
+//! *modeled* capture schedule, and idles out to the horizon at
+//! shutdown. [`SimStream`] replays the identical sequence at service
+//! start, so when both runners serve the same frame set (no drops, or
+//! identical drop decisions) the ledgers agree **bitwise** — the
+//! scenario equivalence tests pin this.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::coordinator::gating::GateController;
+use crate::coordinator::queue::Ring;
+use crate::coordinator::sensor::{Arrival, Sensor};
+use crate::power::PowerModel;
+use crate::util::prng::Prng;
+
+/// Done before Arrival at equal timestamps: a completion frees the
+/// server for a frame arriving the same instant.
+const KIND_DONE: u8 = 0;
+const KIND_ARRIVAL: u8 = 1;
+
+/// Heap key + payload. Field order *is* the priority order (derived
+/// lexicographic `Ord`): time bits, device, stream, kind, seq. `slot`
+/// (the stream's index in the executor) rides along after the key and
+/// can only decide between events of streams sharing a `(device,
+/// stream)` id pair, which the determinism contract forbids.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct Event {
+    t_bits: u64,
+    device: u32,
+    stream: u32,
+    kind: u8,
+    seq: u64,
+    slot: u32,
+}
+
+impl Event {
+    fn t_s(&self) -> f64 {
+        f64::from_bits(self.t_bits)
+    }
+}
+
+/// Order-preserving time key: for non-negative finite `f64`s the IEEE
+/// bit pattern compares like the value.
+fn time_bits(t_s: f64) -> u64 {
+    debug_assert!(t_s.is_finite() && t_s >= 0.0, "event time {t_s} out of domain");
+    t_s.to_bits()
+}
+
+/// One processed event, for trace-equality tests ([`Executor::record_trace`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub t_s: f64,
+    pub device: u32,
+    pub stream: u32,
+    /// 0 = done, 1 = arrival (the heap's kind ordering).
+    pub kind: u8,
+    pub seq: u64,
+}
+
+/// Where a stream's inter-arrival gaps (and frames) come from.
+pub enum FrameSource {
+    /// A full synthetic sensor: gap draws and pixel rendering share one
+    /// PRNG, exactly like the thread producer — so Poisson schedules
+    /// are bitwise-identical to the thread runner's. The rendered frame
+    /// is discarded (nothing executes pixels on the virtual clock), but
+    /// it **must** be rendered to keep the PRNG in lockstep.
+    Sensor(Box<Sensor>),
+    /// Schedule-only source for fleet-scale simulation: gap draws
+    /// without pixel rendering (100k streams never touch a framebuffer).
+    Schedule { arrival: Arrival, rng: Prng },
+}
+
+impl FrameSource {
+    fn next_gap_s(&mut self) -> f64 {
+        match self {
+            FrameSource::Sensor(s) => s.next_gap_s(),
+            FrameSource::Schedule { arrival, rng } => arrival.next_gap(rng),
+        }
+    }
+
+    /// Consume whatever per-frame randomness the source spends beyond
+    /// the gap draw. The thread producer interleaves `next_gap_s()` and
+    /// `capture()` per frame; replaying that exact order is what keeps
+    /// a [`Sensor`]'s Poisson gaps bitwise-aligned with the thread run.
+    fn materialize_frame(&mut self) {
+        if let FrameSource::Sensor(s) = self {
+            let _ = s.capture();
+        }
+    }
+}
+
+/// A waiting frame: its scheduled capture instant and arrival sequence.
+#[derive(Debug, Clone, Copy)]
+struct Queued {
+    sched_s: f64,
+    seq: u64,
+}
+
+/// One simulated stream: frame source, drop-oldest queue, fixed modeled
+/// service time, and an optional power-gate ledger replayed exactly like
+/// the thread worker's.
+pub struct SimStream {
+    device: u32,
+    stream: u32,
+    source: FrameSource,
+    queue: Ring<Queued>,
+    service_s: f64,
+    ledger: Option<GateController>,
+    in_service: bool,
+    /// Producer modeled clock: cumulative gap draws (bitwise equal to
+    /// the thread producer's `t` accumulator).
+    clock_s: f64,
+    done_arrivals: bool,
+    submitted: u64,
+    served: u64,
+    next_seq: u64,
+    queue_waits: Vec<f64>,
+}
+
+impl SimStream {
+    /// `service_s` is the modeled wall occupancy of one inference on
+    /// this stream's device (see [`modeled_service_s`]); `queue_depth`
+    /// is the drop-oldest capacity (clamped to ≥ 1, like the thread
+    /// queue).
+    pub fn new(
+        device: u32,
+        stream: u32,
+        source: FrameSource,
+        queue_depth: usize,
+        service_s: f64,
+        ledger: Option<GateController>,
+    ) -> SimStream {
+        SimStream {
+            device,
+            stream,
+            source,
+            queue: Ring::new(queue_depth),
+            service_s,
+            ledger,
+            in_service: false,
+            clock_s: 0.0,
+            done_arrivals: false,
+            submitted: 0,
+            served: 0,
+            next_seq: 0,
+            queue_waits: Vec::new(),
+        }
+    }
+
+    pub fn device(&self) -> u32 {
+        self.device
+    }
+
+    pub fn stream_id(&self) -> u32 {
+        self.stream
+    }
+
+    /// Frames that arrived (including ones later evicted).
+    pub fn submitted(&self) -> u64 {
+        self.submitted
+    }
+
+    /// Frames whose service completed.
+    pub fn served(&self) -> u64 {
+        self.served
+    }
+
+    /// Frames evicted by drop-oldest backpressure (the [`Ring`]'s count,
+    /// surfaced per stream through fleet telemetry).
+    pub fn dropped(&self) -> u64 {
+        self.queue.evicted()
+    }
+
+    /// Modeled service time per inference, seconds.
+    pub fn service_s(&self) -> f64 {
+        self.service_s
+    }
+
+    /// Per-served-frame wait between scheduled capture and service
+    /// start, seconds, in serve order (e2e latency = wait + service).
+    pub fn queue_waits(&self) -> &[f64] {
+        &self.queue_waits
+    }
+
+    /// The stream's energy ledger, final state after [`Executor::run`].
+    pub fn ledger(&self) -> Option<&GateController> {
+        self.ledger.as_ref()
+    }
+
+    /// Begin serving a frame at virtual time `now_s`: record its wait,
+    /// replay the thread worker's ledger charge (idle to the frame's
+    /// scheduled capture, then the inference event), and return the Done
+    /// completion event.
+    fn start_service(&mut self, slot: u32, now_s: f64, frame: Queued) -> Event {
+        self.queue_waits.push(now_s - frame.sched_s);
+        if let Some(g) = self.ledger.as_mut() {
+            g.idle((frame.sched_s * 1e9 - g.elapsed_ns).max(0.0));
+            g.inference();
+        }
+        self.in_service = true;
+        Event {
+            t_bits: time_bits(now_s + self.service_s),
+            device: self.device,
+            stream: self.stream,
+            kind: KIND_DONE,
+            seq: frame.seq,
+            slot,
+        }
+    }
+
+    /// Draw the next gap and build the next arrival event, or mark the
+    /// schedule finished when it would land past the horizon (the thread
+    /// producer's strict `t + gap > seconds` break).
+    fn schedule_next_arrival(&mut self, slot: u32, horizon_s: f64) -> Option<Event> {
+        let gap = self.source.next_gap_s();
+        if self.clock_s + gap > horizon_s {
+            self.done_arrivals = true;
+            return None;
+        }
+        self.clock_s += gap;
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        Some(Event {
+            t_bits: time_bits(self.clock_s),
+            device: self.device,
+            stream: self.stream,
+            kind: KIND_ARRIVAL,
+            seq,
+            slot,
+        })
+    }
+}
+
+/// The modeled wall occupancy of one inference: the ledger's busy time
+/// (wakeup for NVM variants + inference latency), floored by the
+/// synthetic-exec `exec_floor_s` — the same quantity that saturates the
+/// thread runner's queue, on the virtual clock.
+pub fn modeled_service_s(power: &PowerModel, exec_floor_s: f64) -> f64 {
+    let wakeup_ns = if power.e_wakeup_pj > 0.0 { crate::mem::WAKEUP_NS } else { 0.0 };
+    exec_floor_s.max((wakeup_ns + power.latency_ns) * 1e-9)
+}
+
+/// The virtual-clock executor: a binary heap of timestamped events over
+/// any number of [`SimStream`]s. See the module docs for the event
+/// model and the determinism argument.
+pub struct Executor {
+    horizon_s: f64,
+    streams: Vec<SimStream>,
+    heap: BinaryHeap<Reverse<Event>>,
+    trace: Option<Vec<TraceEvent>>,
+    processed: u64,
+    ran: bool,
+}
+
+impl Executor {
+    pub fn new(horizon_s: f64) -> Executor {
+        Executor {
+            horizon_s,
+            streams: Vec::new(),
+            heap: BinaryHeap::new(),
+            trace: None,
+            processed: 0,
+            ran: false,
+        }
+    }
+
+    /// Capture every processed event for trace-equality tests (off by
+    /// default — 100k-stream runs would hold millions of entries).
+    pub fn record_trace(&mut self) {
+        self.trace = Some(Vec::new());
+    }
+
+    pub fn horizon_s(&self) -> f64 {
+        self.horizon_s
+    }
+
+    /// Add a stream and seed its first arrival; returns its slot index.
+    /// Insertion order does not affect results (see the module docs),
+    /// but `(device, stream)` id pairs must be unique across streams.
+    pub fn add_stream(&mut self, mut stream: SimStream) -> usize {
+        let slot = self.streams.len() as u32;
+        if let Some(ev) = stream.schedule_next_arrival(slot, self.horizon_s) {
+            self.heap.push(Reverse(ev));
+        }
+        self.streams.push(stream);
+        slot as usize
+    }
+
+    /// Run the simulation to completion: every scheduled arrival within
+    /// the horizon is processed and every queue drains (the thread
+    /// runner's close-then-serve-pending shutdown), then each ledger
+    /// idles out to the horizon.
+    pub fn run(&mut self) {
+        assert!(!self.ran, "Executor::run is single-shot");
+        self.ran = true;
+        while let Some(Reverse(ev)) = self.heap.pop() {
+            self.processed += 1;
+            if let Some(trace) = self.trace.as_mut() {
+                trace.push(TraceEvent {
+                    t_s: ev.t_s(),
+                    device: ev.device,
+                    stream: ev.stream,
+                    kind: ev.kind,
+                    seq: ev.seq,
+                });
+            }
+            let slot = ev.slot as usize;
+            let now_s = ev.t_s();
+            match ev.kind {
+                KIND_ARRIVAL => {
+                    let st = &mut self.streams[slot];
+                    st.submitted += 1;
+                    let frame = Queued { sched_s: now_s, seq: ev.seq };
+                    if st.in_service {
+                        // Full queue → the Ring evicts (and counts) the
+                        // oldest waiter, the thread queue's semantics.
+                        let _ = st.queue.push(frame);
+                    } else {
+                        let done = st.start_service(ev.slot, now_s, frame);
+                        self.heap.push(Reverse(done));
+                    }
+                    st.source.materialize_frame();
+                    if let Some(next) = st.schedule_next_arrival(ev.slot, self.horizon_s) {
+                        self.heap.push(Reverse(next));
+                    }
+                }
+                _ => {
+                    let st = &mut self.streams[slot];
+                    st.served += 1;
+                    st.in_service = false;
+                    if let Some(frame) = st.queue.pop_front() {
+                        let done = st.start_service(ev.slot, now_s, frame);
+                        self.heap.push(Reverse(done));
+                    }
+                }
+            }
+        }
+        for st in &mut self.streams {
+            if let Some(g) = st.ledger.as_mut() {
+                g.idle((self.horizon_s * 1e9 - g.elapsed_ns).max(0.0));
+            }
+        }
+    }
+
+    pub fn streams(&self) -> &[SimStream] {
+        &self.streams
+    }
+
+    /// Events processed by [`Executor::run`].
+    pub fn events(&self) -> u64 {
+        self.processed
+    }
+
+    /// The recorded trace (empty unless [`Executor::record_trace`] was
+    /// called before `run`).
+    pub fn trace(&self) -> &[TraceEvent] {
+        self.trace.as_deref().unwrap_or(&[])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn periodic(fps: f64, seed: u64) -> FrameSource {
+        FrameSource::Schedule { arrival: Arrival::Periodic { fps }, rng: Prng::new(seed) }
+    }
+
+    #[test]
+    fn periodic_counts_are_exact() {
+        // 10 fps over 1 s: arrivals at 0.1..=1.0 (an arrival exactly at
+        // the horizon is admitted — strict `>` like the thread loop),
+        // fast service → all served, none dropped.
+        let mut ex = Executor::new(1.0);
+        ex.add_stream(SimStream::new(0, 0, periodic(10.0, 1), 4, 1e-4, None));
+        ex.run();
+        let st = &ex.streams()[0];
+        assert_eq!(st.submitted(), 10);
+        assert_eq!(st.served(), 10);
+        assert_eq!(st.dropped(), 0);
+        assert_eq!(st.queue_waits().len(), 10);
+        assert!(st.queue_waits().iter().all(|&w| w == 0.0), "{:?}", st.queue_waits());
+        // 10 arrivals + 10 completions
+        assert_eq!(ex.events(), 20);
+    }
+
+    #[test]
+    fn overload_drops_oldest_waiters() {
+        // Gap 10 ms, service 33 ms, queue depth 1: each in-service window
+        // sees ~3 arrivals of which the depth-1 queue keeps only the
+        // newest → served {.01,.04,.07,.10}, evicted the 6 between.
+        let mut ex = Executor::new(0.1);
+        ex.add_stream(SimStream::new(0, 0, periodic(100.0, 1), 1, 0.033, None));
+        ex.run();
+        let st = &ex.streams()[0];
+        assert_eq!(st.submitted(), 10);
+        assert_eq!(st.served(), 4, "waits {:?}", st.queue_waits());
+        assert_eq!(st.dropped(), 6);
+        assert_eq!(st.submitted(), st.served() + st.dropped());
+    }
+
+    #[test]
+    fn poisson_schedule_is_deterministic_per_seed() {
+        let run = || {
+            let mut ex = Executor::new(5.0);
+            ex.add_stream(SimStream::new(
+                0,
+                0,
+                FrameSource::Schedule { arrival: Arrival::Poisson { rate: 20.0 }, rng: Prng::new(9) },
+                2,
+                0.04,
+                None,
+            ));
+            ex.run();
+            let st = &ex.streams()[0];
+            (st.submitted(), st.served(), st.dropped(), st.queue_waits().to_vec())
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.0, b.0);
+        assert_eq!(a.1, b.1);
+        assert_eq!(a.2, b.2);
+        assert_eq!(a.1 + a.2, a.0, "conservation");
+        assert!(a.2 > 0, "rate 20 vs service 0.04 must drop");
+        for (x, y) in a.3.iter().zip(&b.3) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn sensor_source_keeps_prng_lockstep_with_thread_producer() {
+        // The executor's gap/capture interleaving must reproduce the
+        // thread producer's schedule bitwise: gap₀, capture₀, gap₁, …
+        let mut reference = Sensor::eye_camera(3.0, 7);
+        let mut sched = Vec::new();
+        let mut t = 0.0;
+        loop {
+            let gap = reference.next_gap_s();
+            if t + gap > 2.0 {
+                break;
+            }
+            t += gap;
+            sched.push(reference.capture().sched_s);
+        }
+        let mut ex = Executor::new(2.0);
+        ex.record_trace();
+        ex.add_stream(SimStream::new(
+            0,
+            0,
+            FrameSource::Sensor(Box::new(Sensor::eye_camera(3.0, 7))),
+            64,
+            1e-4,
+            None,
+        ));
+        ex.run();
+        let arrivals: Vec<f64> = ex
+            .trace()
+            .iter()
+            .filter(|e| e.kind == 1)
+            .map(|e| e.t_s)
+            .collect();
+        assert_eq!(arrivals.len(), sched.len());
+        for (a, s) in arrivals.iter().zip(&sched) {
+            assert_eq!(a.to_bits(), s.to_bits());
+        }
+    }
+
+    #[test]
+    fn empty_horizon_or_late_first_arrival_is_fine() {
+        // First gap lands past the horizon → no events at all.
+        let mut ex = Executor::new(0.05);
+        ex.add_stream(SimStream::new(0, 0, periodic(10.0, 1), 4, 0.01, None));
+        ex.run();
+        assert_eq!(ex.events(), 0);
+        assert_eq!(ex.streams()[0].submitted(), 0);
+    }
+}

@@ -1,0 +1,27 @@
+//! Fleet-scale orchestration: a virtual-clock discrete-event executor
+//! plus a device-fleet simulator with pluggable placement policies.
+//!
+//! Two layers:
+//!
+//! - [`executor`] — an event-driven virtual-clock engine. Stream
+//!   arrivals and service completions are timestamped events on one
+//!   binary heap; time advances by popping, never by sleeping, so 100k+
+//!   concurrent streams simulate in well under wall-time on one machine
+//!   and runs are bitwise-reproducible from a seed. The thread-per-
+//!   stream `coordinator::Scenario` runner re-expresses itself on this
+//!   engine via `Runner::VirtualClock`.
+//! - [`orchestrator`] — a fleet spec (N devices drawn from named arch
+//!   points or a search frontier, stream load mixes, deployment
+//!   constraints), placement policies behind one trait, and aggregate
+//!   telemetry ([`FleetReport`]: p50/p99 latency, energy per inference,
+//!   per-stream drop rates, placement rejections).
+
+pub mod executor;
+pub mod orchestrator;
+
+pub use executor::{modeled_service_s, Executor, FrameSource, SimStream, TraceEvent};
+pub use orchestrator::{
+    policy_by_name, run_fleet, DeployConstraints, DeviceReport, DeviceState, FleetReport,
+    FleetSpec, HwPoint, LeastLoaded, PlacementPolicy, RoundRobin, StreamLoad, StreamTelemetry,
+    WeightedRandom,
+};

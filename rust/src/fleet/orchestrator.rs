@@ -1,0 +1,883 @@
+//! Device-fleet orchestration: place N streams onto M heterogeneous
+//! devices under deployment constraints, then simulate the whole fleet
+//! on the virtual-clock [`Executor`] and aggregate telemetry.
+//!
+//! The paper evaluates one device serving two streams; the ROADMAP
+//! north-star is a production fleet. This layer models the step between:
+//! a [`FleetSpec`] names the hardware points deployed (paper-grid
+//! variants via [`HwPoint::paper_palette`]/[`HwPoint::named`], or
+//! off-grid designs straight from a search frontier via
+//! [`HwPoint::from_frontier`]), the stream load mix, and the deployment
+//! constraints; a [`PlacementPolicy`] decides which device each stream
+//! lands on; [`run_fleet`] simulates every placed stream with a
+//! per-stream power-gate ledger and rolls the results up into a
+//! [`FleetReport`] (p50/p99 latency, energy per inference, per-stream
+//! drop rates, placement rejections).
+//!
+//! Placement follows the EDGELESS ε-ORC shape: one trait, several
+//! interchangeable policies (round-robin with a wrap-around cursor,
+//! weighted-random by remaining per-device power budget, least-loaded
+//! by committed utilization). Constraint rejection consumes nothing: a
+//! stream with no eligible device is counted and skipped without
+//! touching any device's committed capacity or the placement PRNG.
+
+use std::time::Instant;
+
+use crate::arch::{self, Arch, MemFlavor, PeConfig};
+use crate::coordinator::gating::GateController;
+use crate::coordinator::sensor::Arrival;
+use crate::eval::{AssignSpec, Coord, Engine};
+use crate::power::PowerModel;
+use crate::report::{ms, pct, Csv, Table};
+use crate::search::{ArchSynth, SearchResult};
+use crate::tech::{Device, Node};
+use crate::util::prng::Prng;
+use crate::util::stats::{SortedSamples, Summary};
+use crate::workload::{self, PrecisionPolicy};
+
+use super::executor::{modeled_service_s, Executor, FrameSource, SimStream};
+
+/// One deployable hardware point: an architecture with its node, MRAM
+/// device, and memory assignment (named flavor or hybrid lattice mask).
+#[derive(Clone)]
+pub struct HwPoint {
+    pub name: String,
+    pub arch: Arch,
+    pub node: Node,
+    pub mram: Device,
+    pub spec: AssignSpec,
+}
+
+impl HwPoint {
+    /// A named paper-grid point, e.g. `named("simba", MemFlavor::P1, ..)`.
+    pub fn named(arch_name: &str, flavor: MemFlavor, node: Node, mram: Device) -> crate::Result<HwPoint> {
+        let a = arch::by_name(arch_name)?;
+        Ok(HwPoint {
+            name: format!("{}/{}@{}", a.name, flavor.label(), node.label()),
+            arch: a,
+            node,
+            mram,
+            spec: AssignSpec::Flavor(flavor),
+        })
+    }
+
+    /// The paper's §5 device menu: simba-v2 in all three memory flavors
+    /// plus eyeriss-v2 P1 — a heterogeneous palette out of the box.
+    pub fn paper_palette(node: Node, mram: Device) -> Vec<HwPoint> {
+        [
+            (arch::simba(PeConfig::V2), MemFlavor::SramOnly),
+            (arch::simba(PeConfig::V2), MemFlavor::P0),
+            (arch::simba(PeConfig::V2), MemFlavor::P1),
+            (arch::eyeriss(PeConfig::V2), MemFlavor::P1),
+        ]
+        .into_iter()
+        .map(|(a, flavor)| HwPoint {
+            name: format!("{}/{}@{}", a.name, flavor.label(), node.label()),
+            arch: a,
+            node,
+            mram,
+            spec: AssignSpec::Flavor(flavor),
+        })
+        .collect()
+    }
+
+    /// Deploy a search frontier: lower up to `limit` frontier vectors
+    /// back through the synthesizer into concrete hardware points (the
+    /// PR-6 incremental search populating a heterogeneous pool). Each
+    /// point is named `<arch>#<evaluation index>`. The frontier's
+    /// per-candidate precision knobs are not carried over — streams
+    /// declare their own serving precision in [`StreamLoad`].
+    pub fn from_frontier(
+        synth: &ArchSynth,
+        result: &SearchResult,
+        limit: usize,
+    ) -> crate::Result<Vec<HwPoint>> {
+        let mut points = Vec::new();
+        for e in result.frontier.iter().take(limit.max(1)) {
+            let c = synth.lower(&e.vector)?;
+            points.push(HwPoint {
+                name: format!("{}#{}", c.arch.name, e.index),
+                arch: c.arch,
+                node: c.node,
+                mram: c.mram,
+                spec: c.spec,
+            });
+        }
+        anyhow::ensure!(!points.is_empty(), "search frontier is empty — nothing to deploy");
+        Ok(points)
+    }
+}
+
+/// A homogeneous group of streams to place: `count` streams of one
+/// model at one arrival process (each gets its own derived PRNG seed).
+#[derive(Clone)]
+pub struct StreamLoad {
+    pub name: String,
+    /// Served model / workload name (detnet | edsnet).
+    pub model: String,
+    pub arrival: Arrival,
+    pub count: usize,
+    pub queue_depth: usize,
+    /// Per-stream serving precision (INT8 identity by default).
+    pub precision: PrecisionPolicy,
+    /// Minimum modeled service time, seconds (emulates a slow model).
+    pub exec_floor_s: f64,
+}
+
+impl StreamLoad {
+    pub fn new(name: &str, model: &str, arrival: Arrival, count: usize) -> StreamLoad {
+        StreamLoad {
+            name: name.to_string(),
+            model: model.to_string(),
+            arrival,
+            count,
+            queue_depth: 4,
+            precision: PrecisionPolicy::int8(),
+            exec_floor_s: 0.0,
+        }
+    }
+
+    pub fn with_precision(mut self, precision: PrecisionPolicy) -> StreamLoad {
+        self.precision = precision;
+        self
+    }
+}
+
+/// Deployment constraints a device must satisfy to accept a stream.
+/// All default to unconstrained except utilization, which caps at 1.0
+/// (a device cannot promise more service time than virtual time).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DeployConstraints {
+    /// The device must sustain this rate for every stream it hosts
+    /// (`pipeline::meets_ips` at `max(min_ips, stream rate)`).
+    pub min_ips: Option<f64>,
+    /// Per-device memory-power budget, µW (closed-form `p_mem_uw` at
+    /// each stream's arrival rate, summed over committed streams). Also
+    /// the budget the weighted-random policy spreads against.
+    pub max_p_mem_uw: Option<f64>,
+    /// Committed-utilization cap per device (default 1.0).
+    pub max_util: Option<f64>,
+}
+
+/// The full fleet specification: devices (round-robin over `points`),
+/// stream loads, constraints, horizon, and the master seed every
+/// stream schedule derives from.
+#[derive(Clone)]
+pub struct FleetSpec {
+    pub name: String,
+    pub points: Vec<HwPoint>,
+    pub n_devices: usize,
+    /// Modeled horizon, seconds.
+    pub seconds: f64,
+    pub seed: u64,
+    pub loads: Vec<StreamLoad>,
+    pub constraints: DeployConstraints,
+}
+
+impl FleetSpec {
+    pub fn new(name: &str, points: Vec<HwPoint>, n_devices: usize, seconds: f64, seed: u64) -> FleetSpec {
+        FleetSpec {
+            name: name.to_string(),
+            points,
+            n_devices,
+            seconds,
+            seed,
+            loads: Vec::new(),
+            constraints: DeployConstraints::default(),
+        }
+    }
+
+    pub fn with_load(mut self, load: StreamLoad) -> FleetSpec {
+        self.loads.push(load);
+        self
+    }
+
+    /// Total streams the loads request (placed + rejected).
+    pub fn requested_streams(&self) -> u64 {
+        self.loads.iter().map(|l| l.count as u64).sum()
+    }
+}
+
+/// Per-device placement state a policy sees while choosing.
+pub struct DeviceState {
+    /// Index into the spec's `points`.
+    pub point: usize,
+    /// Placed stream indices (into the report's stream telemetry).
+    pub streams: Vec<usize>,
+    /// Closed-form memory power committed so far, µW.
+    pub committed_p_mem_uw: f64,
+    /// Committed utilization (Σ rate × service time).
+    pub committed_util: f64,
+    /// The per-device power budget, when one is constrained.
+    pub budget_uw: Option<f64>,
+}
+
+impl DeviceState {
+    /// Remaining power budget, µW (infinite when unconstrained).
+    pub fn remaining_uw(&self) -> f64 {
+        match self.budget_uw {
+            Some(cap) => (cap - self.committed_p_mem_uw).max(0.0),
+            None => f64::INFINITY,
+        }
+    }
+}
+
+/// A placement policy: choose one device among the eligible (constraint-
+/// satisfying) candidates. `eligible` is never empty and is sorted by
+/// device index; rejected streams never reach a policy, so rejection
+/// can neither advance the PRNG nor consume capacity.
+pub trait PlacementPolicy {
+    fn name(&self) -> &'static str;
+    fn choose(&mut self, eligible: &[usize], devices: &[DeviceState], prng: &mut Prng) -> usize;
+}
+
+/// Round-robin with a wrap-around cursor over device indices (the
+/// ε-ORC round-robin shape): the first eligible device at or after the
+/// cursor, wrapping to the lowest eligible.
+#[derive(Default)]
+pub struct RoundRobin {
+    cursor: usize,
+}
+
+impl PlacementPolicy for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn choose(&mut self, eligible: &[usize], _devices: &[DeviceState], _prng: &mut Prng) -> usize {
+        let pick = eligible.iter().copied().find(|&d| d >= self.cursor).unwrap_or(eligible[0]);
+        self.cursor = pick + 1;
+        pick
+    }
+}
+
+/// Least committed utilization; ties break to the lowest device index
+/// (strict-less scan → deterministic).
+#[derive(Default)]
+pub struct LeastLoaded;
+
+impl PlacementPolicy for LeastLoaded {
+    fn name(&self) -> &'static str {
+        "least-loaded"
+    }
+
+    fn choose(&mut self, eligible: &[usize], devices: &[DeviceState], _prng: &mut Prng) -> usize {
+        let mut best = eligible[0];
+        for &d in &eligible[1..] {
+            if devices[d].committed_util < devices[best].committed_util {
+                best = d;
+            }
+        }
+        best
+    }
+}
+
+/// Weighted-random by remaining power budget (the ε-ORC capacity-
+/// weighted draw): devices with more headroom attract proportionally
+/// more streams. Unbudgeted fleets degrade to uniform random.
+#[derive(Default)]
+pub struct WeightedRandom;
+
+impl PlacementPolicy for WeightedRandom {
+    fn name(&self) -> &'static str {
+        "weighted-random"
+    }
+
+    fn choose(&mut self, eligible: &[usize], devices: &[DeviceState], prng: &mut Prng) -> usize {
+        let weight = |d: usize| {
+            let r = devices[d].remaining_uw();
+            if r.is_finite() {
+                r.max(1e-12)
+            } else {
+                1.0
+            }
+        };
+        let total: f64 = eligible.iter().map(|&d| weight(d)).sum();
+        let mut x = prng.f64() * total;
+        for &d in eligible {
+            x -= weight(d);
+            if x <= 0.0 {
+                return d;
+            }
+        }
+        *eligible.last().expect("eligible is never empty")
+    }
+}
+
+/// CLI-facing policy lookup.
+pub fn policy_by_name(name: &str) -> crate::Result<Box<dyn PlacementPolicy>> {
+    Ok(match name.to_ascii_lowercase().as_str() {
+        "round-robin" | "rr" => Box::new(RoundRobin::default()),
+        "weighted" | "weighted-random" => Box::new(WeightedRandom),
+        "least-loaded" | "ll" => Box::new(LeastLoaded),
+        other => anyhow::bail!("unknown placement policy '{other}' (round-robin|weighted|least-loaded)"),
+    })
+}
+
+/// Per-stream telemetry of one fleet run.
+#[derive(Debug, Clone)]
+pub struct StreamTelemetry {
+    /// `<load name>#<k>` within the load.
+    pub name: String,
+    pub device: usize,
+    pub model: String,
+    /// Configured mean arrival rate, frames/s.
+    pub rate: f64,
+    pub submitted: u64,
+    pub served: u64,
+    /// Frames evicted by this stream's drop-oldest queue (the `Ring`
+    /// eviction count surfaced through fleet telemetry).
+    pub dropped: u64,
+    /// dropped / submitted (0 for an idle stream).
+    pub drop_rate: f64,
+    /// Ledger average memory power over the horizon, µW.
+    pub ledger_uw: f64,
+    /// Closed-form `p_mem_uw` at the ledger-observed IPS, µW.
+    pub closed_form_uw: f64,
+    /// |ledger − closed-form| relative error (the Table-3 agreement
+    /// check, now fleet-wide).
+    pub rel_err: f64,
+}
+
+/// Per-device rollup of one fleet run.
+#[derive(Debug, Clone)]
+pub struct DeviceReport {
+    pub device: usize,
+    /// The hardware point's name.
+    pub point: String,
+    pub streams: usize,
+    pub submitted: u64,
+    pub served: u64,
+    pub dropped: u64,
+    /// Σ per-stream ledger power, µW (the device concurrently runs every
+    /// stream's accelerator variant, as in `ScenarioReport`).
+    pub p_mem_uw: f64,
+    /// Closed-form power committed at placement time, µW.
+    pub committed_uw: f64,
+    /// Committed utilization.
+    pub util: f64,
+    /// Σ per-stream ledger energy over the horizon, pJ.
+    pub energy_pj: f64,
+}
+
+/// Aggregate result of one [`run_fleet`] call.
+pub struct FleetReport {
+    pub name: String,
+    pub policy: String,
+    pub seconds: f64,
+    pub seed: u64,
+    pub n_devices: usize,
+    /// Streams the loads requested.
+    pub requested: u64,
+    /// Streams placed on a device.
+    pub placed: u64,
+    /// Streams no device could accept under the constraints.
+    pub rejections: u64,
+    pub submitted: u64,
+    pub served: u64,
+    pub dropped: u64,
+    /// Pooled end-to-end latency (queue wait + service), seconds —
+    /// p50/p99 from one sort ([`SortedSamples`]).
+    pub e2e: Summary,
+    /// Pooled queue-wait latency, seconds.
+    pub queue: Summary,
+    /// Σ ledger energy across the fleet, pJ.
+    pub energy_pj: f64,
+    /// Σ ledger average power across the fleet, µW.
+    pub p_mem_uw: f64,
+    /// Worst per-stream ledger-vs-closed-form relative error.
+    pub worst_rel_err: f64,
+    /// Events the executor processed.
+    pub events: u64,
+    /// Wall time of the simulation + aggregation, seconds.
+    pub wall_s: f64,
+    pub devices: Vec<DeviceReport>,
+    pub streams: Vec<StreamTelemetry>,
+}
+
+impl FleetReport {
+    /// Fleet-wide ledger energy per served inference, pJ.
+    pub fn energy_per_inference_pj(&self) -> f64 {
+        if self.served == 0 {
+            0.0
+        } else {
+            self.energy_pj / self.served as f64
+        }
+    }
+
+    /// Fleet-wide drop rate (dropped / submitted).
+    pub fn drop_rate(&self) -> f64 {
+        if self.submitted == 0 {
+            0.0
+        } else {
+            self.dropped as f64 / self.submitted as f64
+        }
+    }
+
+    /// Per-hardware-point rollup table (1k devices stay readable).
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            &format!(
+                "fleet '{}' — {} devices, {} streams placed, {:.0} s modeled [{}]",
+                self.name, self.n_devices, self.placed, self.seconds, self.policy
+            ),
+            &[
+                "point", "devices", "streams", "served", "dropped", "drop rate", "P_mem (µW)",
+                "E/inf (pJ)", "mean util",
+            ],
+        );
+        // Group devices by point name, preserving first-seen order.
+        let mut names: Vec<&str> = Vec::new();
+        for d in &self.devices {
+            if !names.contains(&d.point.as_str()) {
+                names.push(&d.point);
+            }
+        }
+        for name in names {
+            let group: Vec<&DeviceReport> =
+                self.devices.iter().filter(|d| d.point == name).collect();
+            let (mut streams, mut sub, mut served, mut dropped) = (0usize, 0u64, 0u64, 0u64);
+            let (mut p_mem, mut energy, mut util) = (0.0, 0.0, 0.0);
+            for d in &group {
+                streams += d.streams;
+                sub += d.submitted;
+                served += d.served;
+                dropped += d.dropped;
+                p_mem += d.p_mem_uw;
+                energy += d.energy_pj;
+                util += d.util;
+            }
+            t.row(vec![
+                name.to_string(),
+                format!("{}", group.len()),
+                format!("{streams}"),
+                format!("{served}"),
+                format!("{dropped}"),
+                pct(if sub == 0 { 0.0 } else { dropped as f64 / sub as f64 }),
+                format!("{p_mem:.2}"),
+                format!("{:.1}", if served == 0 { 0.0 } else { energy / served as f64 }),
+                format!("{:.3}", util / group.len().max(1) as f64),
+            ]);
+        }
+        t
+    }
+
+    /// One CSV row per device.
+    pub fn device_csv(&self) -> Csv {
+        let mut c = Csv::new(&[
+            "fleet", "policy", "device", "point", "streams", "submitted", "served", "dropped",
+            "p_mem_uw", "committed_uw", "util", "energy_pj",
+        ]);
+        for d in &self.devices {
+            c.row(vec![
+                self.name.clone(),
+                self.policy.clone(),
+                format!("{}", d.device),
+                d.point.clone(),
+                format!("{}", d.streams),
+                format!("{}", d.submitted),
+                format!("{}", d.served),
+                format!("{}", d.dropped),
+                format!("{}", d.p_mem_uw),
+                format!("{}", d.committed_uw),
+                format!("{}", d.util),
+                format!("{}", d.energy_pj),
+            ]);
+        }
+        c
+    }
+
+    /// One CSV row per placed stream.
+    pub fn stream_csv(&self) -> Csv {
+        let mut c = Csv::new(&[
+            "fleet", "stream", "device", "model", "rate", "submitted", "served", "dropped",
+            "drop_rate", "ledger_uw", "closed_form_uw", "rel_err",
+        ]);
+        for s in &self.streams {
+            c.row(vec![
+                self.name.clone(),
+                s.name.clone(),
+                format!("{}", s.device),
+                s.model.clone(),
+                format!("{}", s.rate),
+                format!("{}", s.submitted),
+                format!("{}", s.served),
+                format!("{}", s.dropped),
+                format!("{}", s.drop_rate),
+                format!("{}", s.ledger_uw),
+                format!("{}", s.closed_form_uw),
+                format!("{}", s.rel_err),
+            ]);
+        }
+        c
+    }
+
+    /// One-line aggregate for terminal output.
+    pub fn summary_line(&self) -> String {
+        format!(
+            "fleet '{}' [{}]: {}/{} streams placed ({} rejected) · {} submitted, {} served, {} dropped ({} drop rate) · e2e p50 {} p99 {} · P_mem {:.2} µW · {:.1} pJ/inf · worst ledger Δ {} · {} events in {:.2} s wall",
+            self.name,
+            self.policy,
+            self.placed,
+            self.requested,
+            self.rejections,
+            self.submitted,
+            self.served,
+            self.dropped,
+            pct(self.drop_rate()),
+            ms(self.e2e.p50),
+            ms(self.e2e.p99),
+            self.p_mem_uw,
+            self.energy_per_inference_pj(),
+            pct(self.worst_rel_err),
+            self.events,
+            self.wall_s
+        )
+    }
+}
+
+/// Split one master seed into decorrelated per-stream schedule seeds
+/// (SplitMix64 finalizer over the stream's global request index).
+fn derive_seed(seed: u64, index: u64) -> u64 {
+    let mut z = seed ^ index.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Everything placement and simulation need per (hardware point × load).
+struct PairData {
+    power: PowerModel,
+    service_s: f64,
+    /// Closed-form memory power at the load's arrival rate, µW.
+    p_mem_uw: f64,
+    /// Utilization one stream of this load commits (rate × service).
+    util: f64,
+    /// Whether the point sustains max(load rate, min_ips).
+    sustains: bool,
+}
+
+/// Evaluate every (point × load) power model through the unified engine
+/// — one engine per point over the loads' distinct (model, precision)
+/// nets, one `eval_coords` batch per point.
+fn intern_pairs(spec: &FleetSpec) -> crate::Result<Vec<Vec<PairData>>> {
+    let mut pairs = Vec::with_capacity(spec.points.len());
+    for point in &spec.points {
+        let mut keys: Vec<(String, PrecisionPolicy)> = Vec::new();
+        for l in &spec.loads {
+            if !keys.iter().any(|(m, p)| *m == l.model && *p == l.precision) {
+                keys.push((l.model.clone(), l.precision.clone()));
+            }
+        }
+        let nets = keys
+            .iter()
+            .map(|(m, p)| workload::builtin::by_name(m).map(|n| n.with_precision(p.clone())))
+            .collect::<crate::Result<Vec<_>>>()?;
+        // Entry order == nets order (one arch), so the coord index is
+        // the key index; AssignSpec covers flavors and lattice masks
+        // uniformly.
+        let engine = Engine::new(vec![point.arch.clone()], nets);
+        let coords: Vec<Coord> =
+            (0..keys.len()).map(|i| (i, point.node, point.spec, point.mram)).collect();
+        let dps = engine.eval_coords(&coords);
+        let row = spec
+            .loads
+            .iter()
+            .map(|l| {
+                let ki = keys
+                    .iter()
+                    .position(|(m, p)| *m == l.model && *p == l.precision)
+                    .expect("key interned for every load");
+                let power = dps[ki].power.clone();
+                let service_s = modeled_service_s(&power, l.exec_floor_s);
+                let rate = l.arrival.rate();
+                let required = spec.constraints.min_ips.map_or(rate, |m| m.max(rate));
+                PairData {
+                    p_mem_uw: power.p_mem_uw(rate),
+                    util: rate * service_s,
+                    sustains: crate::pipeline::meets_ips(&power, required),
+                    service_s,
+                    power,
+                }
+            })
+            .collect();
+        pairs.push(row);
+    }
+    Ok(pairs)
+}
+
+/// Place every requested stream (spec order), simulate the placed fleet
+/// on the virtual clock, and aggregate. Deterministic from `spec.seed`:
+/// placement consults the PRNG only through the policy, and every
+/// stream's schedule derives from the master seed and its request
+/// index — so reruns are bitwise-identical.
+pub fn run_fleet(spec: &FleetSpec, policy: &mut dyn PlacementPolicy) -> crate::Result<FleetReport> {
+    anyhow::ensure!(!spec.points.is_empty(), "fleet '{}' has no hardware points", spec.name);
+    anyhow::ensure!(spec.n_devices > 0, "fleet '{}' has no devices", spec.name);
+    anyhow::ensure!(!spec.loads.is_empty(), "fleet '{}' has no stream loads", spec.name);
+    anyhow::ensure!(spec.seconds > 0.0, "seconds must be positive");
+
+    let t0 = Instant::now();
+    let pairs = intern_pairs(spec)?;
+
+    // Devices: round-robin over the point palette.
+    let mut devices: Vec<DeviceState> = (0..spec.n_devices)
+        .map(|d| DeviceState {
+            point: d % spec.points.len(),
+            streams: Vec::new(),
+            committed_p_mem_uw: 0.0,
+            committed_util: 0.0,
+            budget_uw: spec.constraints.max_p_mem_uw,
+        })
+        .collect();
+    let max_util = spec.constraints.max_util.unwrap_or(1.0);
+
+    // Placement loop: loads in spec order, streams within a load in
+    // index order. `eligible` is reused scratch (allocation-free after
+    // the first stream).
+    struct Placement {
+        load: usize,
+        k: usize,
+        device: usize,
+        seed_index: u64,
+    }
+    let mut prng = Prng::new(spec.seed);
+    let mut placements: Vec<Placement> = Vec::new();
+    let mut eligible: Vec<usize> = Vec::with_capacity(spec.n_devices);
+    let mut rejections = 0u64;
+    let mut seed_index = 0u64;
+    for (li, load) in spec.loads.iter().enumerate() {
+        for k in 0..load.count {
+            eligible.clear();
+            for (d, dev) in devices.iter().enumerate() {
+                let pd = &pairs[dev.point][li];
+                let util_ok = dev.committed_util + pd.util <= max_util + 1e-12;
+                let power_ok = dev
+                    .budget_uw
+                    .is_none_or(|cap| dev.committed_p_mem_uw + pd.p_mem_uw <= cap + 1e-12);
+                if pd.sustains && util_ok && power_ok {
+                    eligible.push(d);
+                }
+            }
+            if eligible.is_empty() {
+                // Rejection consumes nothing: no capacity, no PRNG draw.
+                rejections += 1;
+                seed_index += 1;
+                continue;
+            }
+            let pick = policy.choose(&eligible, &devices, &mut prng);
+            debug_assert!(eligible.contains(&pick), "policy chose an ineligible device");
+            let pd = &pairs[devices[pick].point][li];
+            devices[pick].committed_util += pd.util;
+            devices[pick].committed_p_mem_uw += pd.p_mem_uw;
+            devices[pick].streams.push(placements.len());
+            placements.push(Placement { load: li, k, device: pick, seed_index });
+            seed_index += 1;
+        }
+    }
+
+    // Simulate every placed stream on one virtual clock.
+    let mut exec = Executor::new(spec.seconds);
+    for (pi, pl) in placements.iter().enumerate() {
+        let load = &spec.loads[pl.load];
+        let pd = &pairs[devices[pl.device].point][pl.load];
+        exec.add_stream(SimStream::new(
+            pl.device as u32,
+            pi as u32,
+            FrameSource::Schedule {
+                arrival: load.arrival,
+                rng: Prng::new(derive_seed(spec.seed, pl.seed_index)),
+            },
+            load.queue_depth,
+            pd.service_s,
+            Some(GateController::new(pd.power.clone())),
+        ));
+    }
+    exec.run();
+
+    // Aggregate: per-stream telemetry, per-device rollups, pooled
+    // latency percentiles from one sort each.
+    let mut streams = Vec::with_capacity(placements.len());
+    let mut dev_reports: Vec<DeviceReport> = devices
+        .iter()
+        .map(|d| DeviceReport {
+            device: 0,
+            point: spec.points[d.point].name.clone(),
+            streams: d.streams.len(),
+            submitted: 0,
+            served: 0,
+            dropped: 0,
+            p_mem_uw: 0.0,
+            committed_uw: d.committed_p_mem_uw,
+            util: d.committed_util,
+            energy_pj: 0.0,
+        })
+        .collect();
+    for (d, r) in dev_reports.iter_mut().enumerate() {
+        r.device = d;
+    }
+    let (mut submitted, mut served, mut dropped) = (0u64, 0u64, 0u64);
+    let (mut energy_pj, mut p_mem_uw, mut worst_rel_err) = (0.0f64, 0.0f64, 0.0f64);
+    let mut e2e_samples: Vec<f64> = Vec::new();
+    let mut wait_samples: Vec<f64> = Vec::new();
+    for (pl, sim) in placements.iter().zip(exec.streams()) {
+        let load = &spec.loads[pl.load];
+        let ledger = sim.ledger().expect("fleet streams always carry a ledger");
+        let observed_ips = ledger.observed_ips();
+        let ledger_uw = ledger.avg_power_uw();
+        let closed_form_uw = ledger.model().p_mem_uw(observed_ips);
+        let rel_err = crate::util::stats::rel_diff(ledger_uw, closed_form_uw);
+        let drop_rate = if sim.submitted() == 0 {
+            0.0
+        } else {
+            sim.dropped() as f64 / sim.submitted() as f64
+        };
+        submitted += sim.submitted();
+        served += sim.served();
+        dropped += sim.dropped();
+        energy_pj += ledger.energy_pj;
+        p_mem_uw += ledger_uw;
+        worst_rel_err = worst_rel_err.max(rel_err);
+        let service = sim.service_s();
+        wait_samples.extend_from_slice(sim.queue_waits());
+        e2e_samples.extend(sim.queue_waits().iter().map(|w| w + service));
+        let dr = &mut dev_reports[pl.device];
+        dr.submitted += sim.submitted();
+        dr.served += sim.served();
+        dr.dropped += sim.dropped();
+        dr.p_mem_uw += ledger_uw;
+        dr.energy_pj += ledger.energy_pj;
+        streams.push(StreamTelemetry {
+            name: format!("{}#{}", load.name, pl.k),
+            device: pl.device,
+            model: load.model.clone(),
+            rate: load.arrival.rate(),
+            submitted: sim.submitted(),
+            served: sim.served(),
+            dropped: sim.dropped(),
+            drop_rate,
+            ledger_uw,
+            closed_form_uw,
+            rel_err,
+        });
+    }
+    let e2e = SortedSamples::new(e2e_samples).summary();
+    let queue = SortedSamples::new(wait_samples).summary();
+
+    Ok(FleetReport {
+        name: spec.name.clone(),
+        policy: policy.name().to_string(),
+        seconds: spec.seconds,
+        seed: spec.seed,
+        n_devices: spec.n_devices,
+        requested: spec.requested_streams(),
+        placed: placements.len() as u64,
+        rejections,
+        submitted,
+        served,
+        dropped,
+        e2e,
+        queue,
+        energy_pj,
+        p_mem_uw,
+        worst_rel_err,
+        events: exec.events(),
+        wall_s: t0.elapsed().as_secs_f64(),
+        devices: dev_reports,
+        streams,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn devices(utils: &[f64], budgets: Option<&[f64]>) -> Vec<DeviceState> {
+        utils
+            .iter()
+            .enumerate()
+            .map(|(i, &u)| DeviceState {
+                point: 0,
+                streams: Vec::new(),
+                committed_p_mem_uw: 0.0,
+                committed_util: u,
+                budget_uw: budgets.map(|b| b[i]),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn round_robin_cycles_with_wraparound() {
+        let devs = devices(&[0.0, 0.0, 0.0], None);
+        let mut p = RoundRobin::default();
+        let mut prng = Prng::new(1);
+        let picks: Vec<usize> =
+            (0..6).map(|_| p.choose(&[0, 1, 2], &devs, &mut prng)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+        // skips ineligible devices, still wraps
+        let mut p = RoundRobin::default();
+        let picks: Vec<usize> = (0..4).map(|_| p.choose(&[1, 2], &devs, &mut prng)).collect();
+        assert_eq!(picks, vec![1, 2, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_picks_min_util_lowest_index_on_ties() {
+        let devs = devices(&[0.5, 0.2, 0.2, 0.9], None);
+        let mut p = LeastLoaded;
+        let mut prng = Prng::new(1);
+        assert_eq!(p.choose(&[0, 1, 2, 3], &devs, &mut prng), 1);
+        assert_eq!(p.choose(&[0, 2, 3], &devs, &mut prng), 2);
+        assert_eq!(p.choose(&[0, 3], &devs, &mut prng), 0);
+    }
+
+    #[test]
+    fn weighted_random_is_deterministic_and_respects_budget() {
+        // One device has zero headroom: with all weight on the other,
+        // every draw lands there.
+        let devs = devices(&[0.0, 0.0], Some(&[0.0, 100.0]));
+        let mut p = WeightedRandom;
+        let mut prng = Prng::new(7);
+        for _ in 0..20 {
+            assert_eq!(p.choose(&[0, 1], &devs, &mut prng), 1);
+        }
+        // and the sequence is a pure function of the seed
+        let open = devices(&[0.0, 0.0, 0.0], Some(&[10.0, 20.0, 30.0]));
+        let run = |seed| {
+            let mut p = WeightedRandom;
+            let mut prng = Prng::new(seed);
+            (0..32).map(|_| p.choose(&[0, 1, 2], &open, &mut prng)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(3), run(3));
+        assert_ne!(run(3), run(4), "different seeds should diverge");
+    }
+
+    #[test]
+    fn policy_by_name_resolves_and_rejects() {
+        for (n, want) in [
+            ("round-robin", "round-robin"),
+            ("rr", "round-robin"),
+            ("weighted", "weighted-random"),
+            ("least-loaded", "least-loaded"),
+            ("ll", "least-loaded"),
+        ] {
+            assert_eq!(policy_by_name(n).unwrap().name(), want);
+        }
+        assert!(policy_by_name("nope").is_err());
+    }
+
+    #[test]
+    fn remaining_budget_semantics() {
+        let d = DeviceState {
+            point: 0,
+            streams: Vec::new(),
+            committed_p_mem_uw: 30.0,
+            committed_util: 0.0,
+            budget_uw: Some(100.0),
+        };
+        assert_eq!(d.remaining_uw(), 70.0);
+        let unbounded = DeviceState { budget_uw: None, ..d };
+        assert!(unbounded.remaining_uw().is_infinite());
+        let overdrawn = DeviceState { committed_p_mem_uw: 130.0, budget_uw: Some(100.0), ..unbounded };
+        assert_eq!(overdrawn.remaining_uw(), 0.0);
+    }
+}

@@ -27,7 +27,11 @@
 //!    metrics, and the scenario runner reproducing the paper's concurrent
 //!    operating point), [`quant`] (bit-width-parameterized pre/post-
 //!    processing on the request path, mirroring the workload-level
-//!    [`workload::PrecisionPolicy`] axis).
+//!    [`workload::PrecisionPolicy`] axis), [`fleet`] (the deployment
+//!    layer: a virtual-clock discrete-event executor that replays
+//!    scenarios and 100k-stream fleets without wall-clock sleeping, plus
+//!    a device-fleet orchestrator with placement policies, deployment
+//!    constraints, and aggregate telemetry).
 //!
 //! See `DESIGN.md` for the experiment index mapping every paper table and
 //! figure to a bench target, and `EXPERIMENTS.md` for measured results.
@@ -50,6 +54,7 @@ pub mod search;
 pub mod report;
 pub mod runtime;
 pub mod coordinator;
+pub mod fleet;
 
 /// Crate-wide result alias (anyhow is the only error substrate vendored).
 pub type Result<T> = anyhow::Result<T>;

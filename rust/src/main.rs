@@ -14,6 +14,7 @@
 //! xr-edge-dse sweep   --out artifacts/figures            # all CSV series
 //! xr-edge-dse serve   --model detnet --fps 10 --seconds 5  # PJRT serving
 //! xr-edge-dse scenario --preset paper                # multi-stream serving
+//! xr-edge-dse fleet   --devices 8 --streams 64       # fleet placement sim
 //! ```
 //!
 //! Every analytical command is a [`Query`] over the unified evaluation
@@ -70,6 +71,12 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "max-power", takes_value: true, help: "search: P_mem budget at --ips, µW", default: None },
         OptSpec { name: "precision", takes_value: true, help: "workload precision policy: int8|int4|fp16|w<N>a<M>", default: Some("int8") },
         OptSpec { name: "mixed-precision", takes_value: false, help: "search: add INT4/INT8/FP16 bit-width knob axes", default: None },
+        OptSpec { name: "runner", takes_value: true, help: "scenario: virtual|threads replay engine", default: Some("virtual") },
+        OptSpec { name: "devices", takes_value: true, help: "fleet: device count", default: Some("8") },
+        OptSpec { name: "streams", takes_value: true, help: "fleet: total stream count", default: Some("64") },
+        OptSpec { name: "policy", takes_value: true, help: "fleet: round-robin|weighted|least-loaded", default: Some("least-loaded") },
+        OptSpec { name: "min-ips", takes_value: true, help: "fleet: per-stream sustained-IPS deployment constraint", default: None },
+        OptSpec { name: "from-search", takes_value: false, help: "fleet: deploy a search frontier instead of the paper palette", default: None },
         OptSpec { name: "verbose", takes_value: false, help: "per-layer detail", default: None },
     ]
 }
@@ -375,6 +382,9 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         "scenario" => {
             scenario(&args, node, mram)?;
         }
+        "fleet" => {
+            fleet_cmd(&args, node, mram)?;
+        }
         "help" | "--help" | "-h" => print_help(),
         other => {
             print_help();
@@ -602,7 +612,7 @@ fn serve(args: &xr_edge_dse::util::cli::Args) -> anyhow::Result<()> {
 /// `scenario`: run a multi-stream serving scenario (the paper's concurrent
 /// operating point) and report per-stream ledger-vs-closed-form power.
 fn scenario(args: &xr_edge_dse::util::cli::Args, node: Node, mram: Device) -> anyhow::Result<()> {
-    use xr_edge_dse::coordinator::scenario::Scenario;
+    use xr_edge_dse::coordinator::scenario::{Runner, Scenario};
     use xr_edge_dse::coordinator::Backend;
     let artifacts = std::path::PathBuf::from(args.get("artifacts").unwrap());
     let mut sc = Scenario::preset(args.get("preset").unwrap(), artifacts.clone())?;
@@ -620,6 +630,11 @@ fn scenario(args: &xr_edge_dse::util::cli::Args, node: Node, mram: Device) -> an
     if let Some(ts) = args.get_f64("time-scale")? {
         sc.time_scale = ts;
     }
+    sc.runner = match args.get("runner").unwrap() {
+        "virtual" | "virtual-clock" => Runner::VirtualClock,
+        "threads" | "thread" => Runner::Threads,
+        other => anyhow::bail!("unknown runner '{other}' (virtual|threads)"),
+    };
     let report = sc.run()?;
     print!("{}", report.table().render());
     println!("{}", report.summary_line());
@@ -636,10 +651,77 @@ fn scenario(args: &xr_edge_dse::util::cli::Args, node: Node, mram: Device) -> an
     Ok(())
 }
 
+/// `fleet`: place --streams streams across --devices devices (paper
+/// palette, or a search frontier with --from-search) under the given
+/// policy/constraints, simulate on the virtual clock, and report
+/// aggregate telemetry. Deterministic from --seed.
+fn fleet_cmd(args: &xr_edge_dse::util::cli::Args, node: Node, mram: Device) -> anyhow::Result<()> {
+    use xr_edge_dse::coordinator::sensor::Arrival;
+    use xr_edge_dse::fleet::{policy_by_name, run_fleet, FleetSpec, HwPoint, StreamLoad};
+
+    let n_devices = args.get_usize("devices")?.unwrap_or(8);
+    let n_streams = args.get_usize("streams")?.unwrap_or(64);
+    let seconds = args.get_f64("seconds")?.unwrap_or(5.0);
+    let seed = args.get_usize("seed")?.unwrap_or(42) as u64;
+
+    let points = if args.flag("from-search") {
+        // Populate the device pool straight off a search frontier (the
+        // PR-6 incremental search makes this cheap).
+        use xr_edge_dse::search::{
+            ArchSynth, Constraints, KnobSpace, Objective, RandomSearch, SearchConfig,
+        };
+        let mut space = KnobSpace::paper();
+        space.nodes = vec![node];
+        let synth = ArchSynth::new(space, workload::builtin::by_name("detnet")?)?;
+        let cfg = SearchConfig {
+            objective: Objective::Energy,
+            constraints: Constraints {
+                min_ips: args.get_f64("ips")?.unwrap_or(10.0),
+                max_area_mm2: args.get_f64("max-area")?,
+                max_p_mem_uw: None,
+            },
+            budget: args.get_usize("budget")?.unwrap_or(400).min(128),
+            batch: 32,
+            seed,
+        };
+        let result = xr_edge_dse::search::run_search(&synth, &mut RandomSearch, &cfg);
+        let points = HwPoint::from_frontier(&synth, &result, 4)?;
+        println!(
+            "deployed {} frontier points from a {}-eval random search",
+            points.len(),
+            result.evaluations
+        );
+        points
+    } else {
+        HwPoint::paper_palette(node, mram)
+    };
+
+    let hand = n_streams - n_streams / 4;
+    let eye = n_streams - hand;
+    let mut spec = FleetSpec::new("xr-mix", points, n_devices, seconds, seed)
+        .with_load(StreamLoad::new("hand", "detnet", Arrival::Periodic { fps: 10.0 }, hand))
+        .with_load(StreamLoad::new("eye", "edsnet", Arrival::Poisson { rate: 1.0 }, eye));
+    spec.constraints.min_ips = args.get_f64("min-ips")?;
+    spec.constraints.max_p_mem_uw = args.get_f64("max-power")?;
+
+    let mut policy = policy_by_name(args.get("policy").unwrap())?;
+    let report = run_fleet(&spec, policy.as_mut())?;
+    print!("{}", report.table().render());
+    println!("{}", report.summary_line());
+    if let Some(path) = args.get("csv") {
+        let path = std::path::PathBuf::from(path);
+        report.device_csv().save(&path)?;
+        let streams_path = path.with_extension("streams.csv");
+        report.stream_csv().save(&streams_path)?;
+        println!("wrote {} and {}", path.display(), streams_path.display());
+    }
+    Ok(())
+}
+
 fn print_help() {
     println!(
         "xr-edge-dse — memory-oriented DSE of edge-AI hardware for XR (tinyML'23 reproduction)\n\
-         commands: map | energy | area | ips | edp | fig3d | pareto | hybrid | search | sweep | serve | scenario | help\n\n{}",
+         commands: map | energy | area | ips | edp | fig3d | pareto | hybrid | search | sweep | serve | scenario | fleet | help\n\n{}",
         usage(&specs())
     );
 }

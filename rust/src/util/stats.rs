@@ -105,6 +105,74 @@ pub fn summarize(samples: &[f64]) -> Summary {
     }
 }
 
+/// [`summarize`] over a sample that is already sorted: one sort serves
+/// every percentile *and* min/max. This is the fleet-aggregation path —
+/// the pooled cross-stream latency vector is sorted once and every
+/// percentile afterwards is an O(1) rank lookup, instead of re-sorting
+/// per percentile.
+pub fn summarize_sorted(sorted: &[f64]) -> Summary {
+    let mut acc = Accum::new();
+    for &s in sorted {
+        acc.push(s);
+    }
+    Summary {
+        count: sorted.len(),
+        mean: acc.mean(),
+        p50: percentile_sorted(sorted, 0.50),
+        p95: percentile_sorted(sorted, 0.95),
+        p99: percentile_sorted(sorted, 0.99),
+        min: sorted.first().copied().unwrap_or(f64::NAN),
+        max: sorted.last().copied().unwrap_or(f64::NAN),
+    }
+}
+
+/// Samples sorted once up front: any percentile afterwards is an O(1)
+/// nearest-rank lookup ([`percentile_sorted`]), so aggregators that need
+/// p50 *and* p99 (plus a [`Summary`]) never pay a second sort.
+#[derive(Debug, Clone, Default)]
+pub struct SortedSamples {
+    sorted: Vec<f64>,
+}
+
+impl SortedSamples {
+    pub fn new(mut samples: Vec<f64>) -> SortedSamples {
+        samples.sort_by(f64::total_cmp);
+        SortedSamples { sorted: samples }
+    }
+
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sorted.is_empty()
+    }
+
+    pub fn percentile(&self, q: f64) -> f64 {
+        percentile_sorted(&self.sorted, q)
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.percentile(0.95)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(0.99)
+    }
+
+    pub fn summary(&self) -> Summary {
+        summarize_sorted(&self.sorted)
+    }
+
+    pub fn as_slice(&self) -> &[f64] {
+        &self.sorted
+    }
+}
+
 /// Geometric mean — used when aggregating energy ratios across workloads.
 pub fn geomean(xs: &[f64]) -> f64 {
     if xs.is_empty() {

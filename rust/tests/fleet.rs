@@ -1,0 +1,277 @@
+//! Fleet-layer integration tests: executor determinism (insertion-order
+//! invariance), thread-runner vs virtual-clock scenario equivalence on
+//! modeled metrics, placement-policy capacity accounting, fleet-scale
+//! bitwise reproducibility, drop telemetry, and the `fleet` CLI command.
+
+use xr_edge_dse::coordinator::scenario::{Runner, Scenario};
+use xr_edge_dse::coordinator::sensor::Arrival;
+use xr_edge_dse::coordinator::Backend;
+use xr_edge_dse::fleet::{
+    policy_by_name, run_fleet, Executor, FleetReport, FleetSpec, FrameSource, HwPoint, SimStream,
+    StreamLoad,
+};
+use xr_edge_dse::tech::{paper_mram_for, Node};
+use xr_edge_dse::util::prng::Prng;
+
+/// Three mutually-queueing Poisson streams with distinct (device, stream)
+/// ids; used forward and reversed to pin insertion-order invariance.
+fn stream_specs() -> Vec<(u32, u32, u64)> {
+    vec![(0, 0, 11), (0, 1, 22), (1, 0, 33)]
+}
+
+fn build_executor(order: &[usize]) -> Executor {
+    let specs = stream_specs();
+    let mut ex = Executor::new(10.0);
+    ex.record_trace();
+    for &i in order {
+        let (device, stream, seed) = specs[i];
+        ex.add_stream(SimStream::new(
+            device,
+            stream,
+            FrameSource::Schedule {
+                arrival: Arrival::Poisson { rate: 30.0 },
+                rng: Prng::new(seed),
+            },
+            2,
+            0.05, // rate 30 vs service 0.05: saturated, queueing + drops
+            None,
+        ));
+    }
+    ex
+}
+
+#[test]
+fn executor_trace_is_insertion_order_invariant() {
+    let mut fwd = build_executor(&[0, 1, 2]);
+    let mut rev = build_executor(&[2, 1, 0]);
+    fwd.run();
+    rev.run();
+    assert_eq!(fwd.events(), rev.events());
+    assert!(fwd.events() > 0);
+    // The popped event sequence is bitwise-identical…
+    assert_eq!(fwd.trace().len(), rev.trace().len());
+    for (a, b) in fwd.trace().iter().zip(rev.trace()) {
+        assert_eq!(a.t_s.to_bits(), b.t_s.to_bits(), "{a:?} vs {b:?}");
+        assert_eq!((a.device, a.stream, a.kind, a.seq), (b.device, b.stream, b.kind, b.seq));
+    }
+    // …and so is every per-stream outcome (matched by id, since the
+    // slot order differs).
+    for sf in fwd.streams() {
+        let sr = rev
+            .streams()
+            .iter()
+            .find(|s| s.device() == sf.device() && s.stream_id() == sf.stream_id())
+            .expect("same id set");
+        assert_eq!(sf.submitted(), sr.submitted());
+        assert_eq!(sf.served(), sr.served());
+        assert_eq!(sf.dropped(), sr.dropped());
+        assert!(sf.dropped() > 0, "saturated stream must drop");
+        assert_eq!(sf.queue_waits().len(), sr.queue_waits().len());
+        for (x, y) in sf.queue_waits().iter().zip(sr.queue_waits()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+}
+
+#[test]
+fn virtual_clock_matches_thread_runner_on_modeled_metrics() {
+    // The same paper spec on both runners: every modeled metric — counts,
+    // ledger energy and power, closed-form power, observed IPS — must be
+    // *bitwise* equal, because both runners serve the identical frame set
+    // in the identical order and replay the identical ledger charges.
+    // (Wall-clock latency summaries are runner-specific by design.)
+    let scenario = |runner| {
+        let mut sc = Scenario::preset("paper", "artifacts".into()).unwrap();
+        sc.backend = Backend::Synthetic;
+        sc.seconds = 20.0;
+        sc.time_scale = 50.0;
+        sc.runner = runner;
+        for s in sc.streams.iter_mut() {
+            s.queue_depth = 64;
+        }
+        sc.run().unwrap()
+    };
+    let threads = scenario(Runner::Threads);
+    let virt = scenario(Runner::VirtualClock);
+    assert_eq!(threads.streams.len(), virt.streams.len());
+    for (t, v) in threads.streams.iter().zip(&virt.streams) {
+        assert_eq!(t.name, v.name);
+        assert_eq!(t.submitted, v.submitted, "{}", t.name);
+        assert_eq!(t.served, v.served, "{}", t.name);
+        assert_eq!(t.dropped, 0, "{} must not drop at paper rates", t.name);
+        assert_eq!(v.dropped, 0);
+        assert_eq!(t.wakeups, v.wakeups);
+        assert_eq!(t.energy_pj.to_bits(), v.energy_pj.to_bits(), "{}", t.name);
+        assert_eq!(t.ledger_uw.to_bits(), v.ledger_uw.to_bits());
+        assert_eq!(t.observed_ips.to_bits(), v.observed_ips.to_bits());
+        assert_eq!(t.closed_form_uw.to_bits(), v.closed_form_uw.to_bits());
+        assert_eq!(t.feasible, v.feasible);
+    }
+    assert_eq!(
+        threads.total_p_mem_uw().to_bits(),
+        virt.total_p_mem_uw().to_bits(),
+        "device-level power must agree bitwise"
+    );
+    // And the virtual path holds the paper acceptance gate on its own.
+    assert!(virt.worst_rel_err() < 0.02, "{}", virt.worst_rel_err());
+}
+
+/// Base fleet used by the placement tests: the paper palette across 6
+/// devices, one well-behaved load.
+fn base_spec() -> FleetSpec {
+    let mut spec =
+        FleetSpec::new("t", HwPoint::paper_palette(Node::N7, paper_mram_for(Node::N7)), 6, 5.0, 42)
+            .with_load(StreamLoad::new("hand", "detnet", Arrival::Periodic { fps: 10.0 }, 6));
+    // The impossible load below is rejected by the sustains check (its
+    // 1 µs period is shorter than the wakeup alone); lift the synthetic
+    // util cap so the *normal* load always places in full.
+    spec.constraints.max_util = Some(1e6);
+    spec
+}
+
+#[test]
+fn rejected_streams_consume_no_capacity_or_randomness() {
+    // An unsustainable load (1 MHz arrivals exceed any point's IPS) after
+    // the normal one: every policy must reject those streams while
+    // producing a fleet bitwise-identical to one that never requested
+    // them — same placements, same committed capacity, same PRNG draws
+    // (the weighted policy would diverge if rejection consumed a draw),
+    // same energy.
+    let impossible = StreamLoad::new("sat", "detnet", Arrival::Periodic { fps: 1e6 }, 3);
+    for name in ["round-robin", "weighted", "least-loaded"] {
+        let mut clean_policy = policy_by_name(name).unwrap();
+        let clean = run_fleet(&base_spec(), clean_policy.as_mut()).unwrap();
+        let mut spiked_policy = policy_by_name(name).unwrap();
+        let spiked =
+            run_fleet(&base_spec().with_load(impossible.clone()), spiked_policy.as_mut()).unwrap();
+
+        assert_eq!(clean.rejections, 0, "{name}");
+        assert_eq!(spiked.rejections, 3, "{name}");
+        assert_eq!(spiked.placed, clean.placed, "{name}");
+        assert_eq!(spiked.requested, clean.requested + 3, "{name}");
+        assert_eq!(spiked.streams.len(), clean.streams.len());
+        for (a, b) in spiked.streams.iter().zip(&clean.streams) {
+            assert_eq!(a.name, b.name, "{name}");
+            assert_eq!(a.device, b.device, "{name}: placement must be unchanged");
+            assert_eq!(a.ledger_uw.to_bits(), b.ledger_uw.to_bits());
+        }
+        for (a, b) in spiked.devices.iter().zip(&clean.devices) {
+            assert_eq!(a.streams, b.streams, "{name}");
+            assert_eq!(a.util.to_bits(), b.util.to_bits(), "{name}: no capacity consumed");
+            assert_eq!(a.committed_uw.to_bits(), b.committed_uw.to_bits());
+        }
+        assert_eq!(spiked.energy_pj.to_bits(), clean.energy_pj.to_bits(), "{name}");
+    }
+}
+
+#[test]
+fn policies_distribute_differently_but_all_place_everything() {
+    let mut reports: Vec<FleetReport> = Vec::new();
+    for name in ["round-robin", "weighted", "least-loaded"] {
+        let mut spec = FleetSpec::new(
+            "mix",
+            HwPoint::paper_palette(Node::N7, paper_mram_for(Node::N7)),
+            8,
+            5.0,
+            7,
+        )
+        .with_load(StreamLoad::new("hand", "detnet", Arrival::Periodic { fps: 10.0 }, 24))
+        .with_load(StreamLoad::new("eye", "edsnet", Arrival::Poisson { rate: 1.0 }, 8));
+        // Streams each own a modeled server, so the util cap is purely a
+        // placement knob; lift it so the distribution assertions below are
+        // about policy order, not modeled service times.
+        spec.constraints.max_util = Some(1e6);
+        let mut policy = policy_by_name(name).unwrap();
+        let r = run_fleet(&spec, policy.as_mut()).unwrap();
+        assert_eq!(r.placed, 32, "{name}");
+        assert_eq!(r.rejections, 0, "{name}");
+        assert_eq!(r.submitted, r.served + r.dropped, "{name}: conservation");
+        assert!(r.served > 0, "{name}");
+        assert!(r.worst_rel_err < 0.02, "{name}: ledger gate, got {}", r.worst_rel_err);
+        reports.push(r);
+    }
+    // Round-robin spreads 32 streams over 8 devices exactly evenly.
+    let rr = &reports[0];
+    assert!(rr.devices.iter().all(|d| d.streams == 4), "round-robin must balance counts");
+}
+
+#[test]
+fn fleet_run_is_bitwise_reproducible_at_scale() {
+    // ~2k streams over 16 devices, twice: identical seed ⇒ identical
+    // everything, down to the pooled latency percentiles.
+    let run = || {
+        let mut spec = FleetSpec::new(
+            "big",
+            HwPoint::paper_palette(Node::N7, paper_mram_for(Node::N7)),
+            16,
+            2.0,
+            99,
+        )
+        .with_load(StreamLoad::new("hand", "detnet", Arrival::Periodic { fps: 10.0 }, 1500))
+        .with_load(StreamLoad::new("eye", "edsnet", Arrival::Poisson { rate: 1.0 }, 500));
+        // This test is about bitwise reproducibility, not admission
+        // control: lift the synthetic util cap so all 2000 streams land.
+        spec.constraints.max_util = Some(1e6);
+        let mut policy = policy_by_name("weighted").unwrap();
+        run_fleet(&spec, policy.as_mut()).unwrap()
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(a.placed, 2000);
+    assert_eq!(a.placed, b.placed);
+    assert_eq!(a.submitted, b.submitted);
+    assert_eq!(a.served, b.served);
+    assert_eq!(a.dropped, b.dropped);
+    assert_eq!(a.events, b.events);
+    assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits());
+    assert_eq!(a.p_mem_uw.to_bits(), b.p_mem_uw.to_bits());
+    assert_eq!(a.e2e.p50.to_bits(), b.e2e.p50.to_bits());
+    assert_eq!(a.e2e.p99.to_bits(), b.e2e.p99.to_bits());
+    for (x, y) in a.streams.iter().zip(&b.streams) {
+        assert_eq!(x.device, y.device);
+        assert_eq!(x.submitted, y.submitted);
+    }
+}
+
+#[test]
+fn drop_telemetry_surfaces_per_stream_eviction_counts() {
+    // One overloaded stream (20 fps against a 100 ms floor, depth-2
+    // queue): the Ring's eviction count must surface as a per-stream drop
+    // rate in the FleetReport, with exact conservation.
+    let mut load = StreamLoad::new("hot", "detnet", Arrival::Periodic { fps: 20.0 }, 1);
+    load.exec_floor_s = 0.1;
+    load.queue_depth = 2;
+    let mut spec = FleetSpec::new(
+        "overload",
+        HwPoint::paper_palette(Node::N7, paper_mram_for(Node::N7)),
+        1,
+        5.0,
+        3,
+    )
+    .with_load(load);
+    // util = 20 × 0.1 = 2.0 — raise the cap so the overload is placeable.
+    spec.constraints.max_util = Some(4.0);
+    let mut policy = policy_by_name("round-robin").unwrap();
+    let r = run_fleet(&spec, policy.as_mut()).unwrap();
+    assert_eq!(r.placed, 1);
+    let s = &r.streams[0];
+    assert!(s.dropped > 0, "overloaded stream must evict");
+    assert_eq!(s.submitted, s.served + s.dropped, "conservation");
+    assert!((s.drop_rate - s.dropped as f64 / s.submitted as f64).abs() < 1e-15);
+    assert!(r.drop_rate() > 0.0);
+    assert_eq!(r.dropped, s.dropped);
+    // the per-device rollup carries the same counts
+    assert_eq!(r.devices[0].dropped, s.dropped);
+}
+
+#[test]
+fn cli_fleet_smoke() {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_xr-edge-dse"))
+        .args(["fleet", "--devices", "4", "--streams", "16", "--seconds", "2"])
+        .output()
+        .expect("spawn xr-edge-dse");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("fleet 'xr-mix'"), "{stdout}");
+    assert!(stdout.contains("streams placed"), "{stdout}");
+    assert!(stdout.contains("least-loaded"), "default policy missing: {stdout}");
+}

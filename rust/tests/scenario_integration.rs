@@ -5,8 +5,16 @@
 //! ledger-vs-closed-form power agreement at the paper's concurrent
 //! operating point, drop-oldest ordering under a saturated queue, and
 //! deterministic `ScenarioReport` accounting.
+//!
+//! The preset tests run on the virtual-clock executor
+//! (`Runner::VirtualClock`): `cargo test -q` no longer sleeps
+//! `seconds / time_scale` of real time per scenario, and the accounting
+//! assertions can be exact because no OS scheduling jitter exists on the
+//! virtual clock. The thread runner keeps its own direct coverage in
+//! `saturating_producer_gets_drop_oldest_semantics` and the
+//! thread-vs-virtual equivalence test in `tests/fleet.rs`.
 
-use xr_edge_dse::coordinator::scenario::Scenario;
+use xr_edge_dse::coordinator::scenario::{Runner, Scenario};
 use xr_edge_dse::coordinator::sensor::Sensor;
 use xr_edge_dse::coordinator::{Backend, Coordinator, StreamConfig};
 
@@ -15,8 +23,9 @@ fn paper_scenario(seconds: f64, time_scale: f64) -> Scenario {
     sc.backend = Backend::Synthetic;
     sc.seconds = seconds;
     sc.time_scale = time_scale;
-    // Deep queues: these tests assert exact accounting, so a transient OS
-    // scheduling stall must never be able to evict a frame.
+    sc.runner = Runner::VirtualClock;
+    // Deep queues: these tests assert exact accounting, so a burst must
+    // never be able to evict a frame.
     for s in sc.streams.iter_mut() {
         s.queue_depth = 64;
     }
@@ -26,8 +35,8 @@ fn paper_scenario(seconds: f64, time_scale: f64) -> Scenario {
 #[test]
 fn paper_preset_ledgers_match_closed_form() {
     // Two synthetic streams at the paper rates: detnet@10 (P0) +
-    // edsnet@0.1 (P1), 40 modeled seconds at 50× (≈1 s wall; the 2 ms
-    // wall arrival gap keeps scheduler jitter from ever filling the queue).
+    // edsnet@0.1 (P1), 40 modeled seconds on the virtual clock (no wall
+    // sleeping at all).
     let report = paper_scenario(40.0, 50.0).run().unwrap();
     assert_eq!(report.streams.len(), 2);
     let hand = &report.streams[0];
@@ -36,7 +45,7 @@ fn paper_preset_ledgers_match_closed_form() {
     assert_eq!(eye.model, "edsnet");
 
     // Every scheduled frame is submitted and served at these rates — the
-    // synthetic model runs in microseconds, the arrival gap is ≥1 ms wall.
+    // modeled service time is microseconds against a 0.1 s arrival gap.
     assert!(hand.submitted >= 395, "≈400 hand frames, got {}", hand.submitted);
     assert_eq!(hand.served, hand.submitted);
     assert_eq!(hand.dropped, 0);
@@ -70,9 +79,9 @@ fn paper_preset_ledgers_match_closed_form() {
 
 #[test]
 fn scenario_report_accounting_is_deterministic() {
-    // Same spec, two runs: all modeled-clock accounting (counts, ledger
-    // energy, observed IPS) must be bitwise-identical — only wall-clock
-    // latency summaries may differ.
+    // Same spec, two runs: on the virtual clock *everything* is
+    // bitwise-identical — counts, ledger energy, observed IPS, and the
+    // (modeled) latency summaries too.
     let a = paper_scenario(20.0, 50.0).run().unwrap();
     let b = paper_scenario(20.0, 50.0).run().unwrap();
     assert_eq!(a.streams.len(), b.streams.len());
@@ -86,6 +95,8 @@ fn scenario_report_accounting_is_deterministic() {
         assert_eq!(x.ledger_uw.to_bits(), y.ledger_uw.to_bits());
         assert_eq!(x.closed_form_uw.to_bits(), y.closed_form_uw.to_bits());
         assert_eq!(x.energy_pj.to_bits(), y.energy_pj.to_bits());
+        assert_eq!(x.e2e.p50.to_bits(), y.e2e.p50.to_bits());
+        assert_eq!(x.e2e.p99.to_bits(), y.e2e.p99.to_bits());
     }
     assert_eq!(a.total_served(), b.total_served());
 }
@@ -187,12 +198,14 @@ fn cli_scenario_smoke() {
 
 #[test]
 fn stress_preset_reports_drops_without_failing() {
-    // The stress preset saturates its hot stream by construction; the run
-    // must still complete and account for every frame.
+    // The stress preset saturates its hot stream by construction (50 fps
+    // against a 50 ms exec floor); the run must still complete and
+    // account for every frame.
     let mut sc = Scenario::preset("stress", "artifacts".into()).unwrap();
     sc.backend = Backend::Synthetic;
     sc.seconds = 2.0;
     sc.time_scale = 2.0;
+    sc.runner = Runner::VirtualClock;
     let report = sc.run().unwrap();
     let hot = &report.streams[0];
     assert_eq!(hot.submitted, hot.served + hot.dropped);
