@@ -1,0 +1,39 @@
+//! LNT1: wall-time guard for the lint gate itself. A design-rule checker
+//! that CI runs on every push must stay cheap — the issue budget is a
+//! full-workspace check in ≤ 5 s. Timed via `benchkit::bench_units` so the
+//! record lands in `XR_DSE_BENCH_JSON` and the bench-regression harness
+//! gates it against `benches/baseline.json` like every other bench.
+
+use std::path::Path;
+
+use xr_edge_dse::util::benchkit;
+
+fn main() {
+    benchkit::figure_header(
+        "LNT1 — xr-dse-lint full-workspace check",
+        "design-rule gate stays fast enough to run on every push (≤ 5 s)",
+    );
+
+    // CARGO_MANIFEST_DIR = rust/lint; the workspace root is two levels up.
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let allows = xr_dse_lint::load_allowlist(&root.join("lint-allow.toml"), true)
+        .expect("lint-allow.toml parses");
+
+    let probe = xr_dse_lint::check_workspace(&root, &allows).expect("workspace scan");
+    let files = probe.files_scanned as f64;
+
+    let (mean_s, _, _) =
+        benchkit::bench_units("LNT1 xr-dse-lint full-workspace check", 1, 5, files, || {
+            let rep = xr_dse_lint::check_workspace(&root, &allows).expect("workspace scan");
+            assert!(rep.diags.is_empty(), "workspace must lint clean under the allowlist");
+        });
+    println!(
+        "full check: {} files, {} suppressed finding(s), mean {:.1} ms",
+        probe.files_scanned,
+        probe.suppressed,
+        mean_s * 1e3
+    );
+    assert!(mean_s <= 5.0, "lint check took {mean_s:.2} s — over the 5 s gate budget");
+
+    benchkit::write_json_if_requested().expect("bench JSON written");
+}

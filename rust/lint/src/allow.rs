@@ -1,0 +1,196 @@
+//! `lint-allow.toml` — vetted exceptions to the design rules, parsed by a
+//! hand-rolled line-based reader (the workspace vendors no TOML crate).
+//! Grammar (a deliberate subset of TOML):
+//!
+//! ```toml
+//! # comment
+//! [[allow]]
+//! rule = "D2"                      # required: D1 | D2 | D3 | U1
+//! path = "rust/src/main.rs"        # required: suffix-matched, '/'-separated
+//! contains = "Instant::now"        # optional: substring of the flagged line
+//! reason = "why this is vetted"    # required: one line of justification
+//! ```
+//!
+//! Every entry must carry a `reason` — an allowlist line without a
+//! justification is itself a parse error, so exceptions stay documented.
+
+use crate::rules::Diagnostic;
+
+/// One vetted exception.
+#[derive(Debug, Clone)]
+pub struct AllowEntry {
+    pub rule: String,
+    pub path: String,
+    pub contains: Option<String>,
+    pub reason: String,
+    /// Line of the `[[allow]]` header, for unused-entry reporting.
+    pub line: u32,
+}
+
+impl AllowEntry {
+    /// Does this entry suppress `d`? Rule must match exactly, `path` is a
+    /// suffix match, and `contains` (when present) must appear in the
+    /// flagged source line.
+    pub fn matches(&self, d: &Diagnostic) -> bool {
+        self.rule == d.rule
+            && d.path.ends_with(&self.path)
+            && match &self.contains {
+                None => true,
+                Some(c) => d.line_text.contains(c.as_str()),
+            }
+    }
+}
+
+const KNOWN_RULES: &[&str] = &["D1", "D2", "D3", "U1"];
+
+/// Parse an allowlist document. Errors carry `label:line:` spans.
+pub fn parse_allowlist(src: &str, label: &str) -> Result<Vec<AllowEntry>, String> {
+    let mut entries: Vec<AllowEntry> = Vec::new();
+    let mut current: Option<AllowEntry> = None;
+    for (idx, raw) in src.lines().enumerate() {
+        let lineno = (idx + 1) as u32;
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if line == "[[allow]]" {
+            if let Some(e) = current.take() {
+                validate(&e, label)?;
+                entries.push(e);
+            }
+            current = Some(AllowEntry {
+                rule: String::new(),
+                path: String::new(),
+                contains: None,
+                reason: String::new(),
+                line: lineno,
+            });
+            continue;
+        }
+        let Some((key, value)) = line.split_once('=') else {
+            return Err(format!("{label}:{lineno}: expected `[[allow]]` or `key = \"value\"`"));
+        };
+        let key = key.trim();
+        let value = unquote(value.trim())
+            .ok_or_else(|| format!("{label}:{lineno}: value for `{key}` must be a quoted string"))?;
+        let Some(e) = current.as_mut() else {
+            return Err(format!("{label}:{lineno}: `{key}` before the first [[allow]] header"));
+        };
+        match key {
+            "rule" => e.rule = value,
+            "path" => e.path = value.replace('\\', "/"),
+            "contains" => e.contains = Some(value),
+            "reason" => e.reason = value,
+            _ => {
+                return Err(format!(
+                    "{label}:{lineno}: unknown key `{key}` (expected rule/path/contains/reason)"
+                ));
+            }
+        }
+    }
+    if let Some(e) = current.take() {
+        validate(&e, label)?;
+        entries.push(e);
+    }
+    Ok(entries)
+}
+
+fn validate(e: &AllowEntry, label: &str) -> Result<(), String> {
+    if !KNOWN_RULES.contains(&e.rule.as_str()) {
+        return Err(format!(
+            "{label}:{}: entry has unknown rule `{}` (expected one of D1/D2/D3/U1)",
+            e.line, e.rule
+        ));
+    }
+    if e.path.is_empty() {
+        return Err(format!("{label}:{}: entry is missing `path`", e.line));
+    }
+    if e.reason.is_empty() {
+        return Err(format!(
+            "{label}:{}: entry for {} {} has no `reason` — every exception must be justified",
+            e.line, e.rule, e.path
+        ));
+    }
+    Ok(())
+}
+
+/// Strip surrounding double quotes and resolve `\"` / `\\` escapes.
+fn unquote(s: &str) -> Option<String> {
+    let inner = s.strip_prefix('"')?.strip_suffix('"')?;
+    let mut out = String::with_capacity(inner.len());
+    let mut chars = inner.chars();
+    while let Some(c) = chars.next() {
+        if c == '\\' {
+            match chars.next() {
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                Some(other) => {
+                    out.push('\\');
+                    out.push(other);
+                }
+                None => out.push('\\'),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rules::Severity;
+
+    fn diag(rule: &'static str, path: &str, line_text: &str) -> Diagnostic {
+        Diagnostic {
+            rule,
+            severity: Severity::Error,
+            path: path.to_string(),
+            line: 1,
+            message: String::new(),
+            line_text: line_text.to_string(),
+        }
+    }
+
+    #[test]
+    fn parses_and_matches() {
+        let src = r#"
+# vetted exceptions
+[[allow]]
+rule = "D2"
+path = "rust/src/main.rs"
+contains = "Instant::now"
+reason = "serve CLI drives the real-time runner"
+"#;
+        let entries = parse_allowlist(src, "lint-allow.toml").unwrap();
+        assert_eq!(entries.len(), 1);
+        let e = &entries[0];
+        assert!(e.matches(&diag("D2", "rust/src/main.rs", "let t0 = Instant::now();")));
+        assert!(!e.matches(&diag("D2", "rust/src/main.rs", "let t = SystemTime::now();")));
+        assert!(!e.matches(&diag("D1", "rust/src/main.rs", "let t0 = Instant::now();")));
+        assert!(!e.matches(&diag("D2", "rust/src/other.rs", "let t0 = Instant::now();")));
+    }
+
+    #[test]
+    fn reason_is_mandatory() {
+        let src = "[[allow]]\nrule = \"D1\"\npath = \"x.rs\"\n";
+        let err = parse_allowlist(src, "t").unwrap_err();
+        assert!(err.contains("no `reason`"), "{err}");
+    }
+
+    #[test]
+    fn unknown_rule_and_key_are_errors() {
+        let err = parse_allowlist("[[allow]]\nrule = \"D9\"\npath = \"x\"\nreason = \"r\"\n", "t")
+            .unwrap_err();
+        assert!(err.contains("unknown rule"), "{err}");
+        let err = parse_allowlist("[[allow]]\nbogus = \"v\"\n", "t").unwrap_err();
+        assert!(err.contains("unknown key"), "{err}");
+    }
+
+    #[test]
+    fn spanned_error_on_malformed_line() {
+        let err = parse_allowlist("[[allow]]\nrule: \"D1\"\n", "lint-allow.toml").unwrap_err();
+        assert!(err.starts_with("lint-allow.toml:2:"), "{err}");
+    }
+}

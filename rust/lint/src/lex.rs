@@ -1,0 +1,297 @@
+//! Minimal Rust lexer for the design-rule checker, in the hand-rolled
+//! recursive-scan idiom of the repo's JSON/CLI parsers: comments, string
+//! and char literals and lifetimes are consumed whole (their contents can
+//! never trigger a rule), identifiers and numbers become single tokens,
+//! and every other character becomes a one-character punctuation token.
+//! Line numbers are 1-based. The lexer never fails — unterminated
+//! literals simply consume to end of file — because a lint pass must
+//! degrade gracefully on code rustc itself would reject.
+
+/// Token class. Rules only ever distinguish "word" from "not a word".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`for`, `in`, `pub`, `HashMap`, ...).
+    Ident,
+    /// Numeric literal (`42`, `2.5`, `0x1f`). Range bounds `0..n` lex as
+    /// two numbers around the dot puncts.
+    Num,
+    /// Single punctuation character (`<`, `:`, `+`, ...). Multi-char
+    /// operators appear as consecutive puncts (`::` is `:` `:`).
+    Punct,
+}
+
+/// One token with its 1-based source line (the diagnostic span anchor).
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Tok {
+    /// Exact-text match, the workhorse of every rule's pattern scan.
+    pub fn is(&self, s: &str) -> bool {
+        self.text == s
+    }
+}
+
+/// Tokenize `src`.
+pub fn lex(src: &str) -> Vec<Tok> {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut line: u32 = 1;
+    let mut i = 0usize;
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment.
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+            continue;
+        }
+        // Nested block comment.
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if b[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw string: r"..", r#".."#, br#".."# (any hash depth).
+        if c == 'r' || (c == 'b' && i + 1 < n && b[i + 1] == 'r') {
+            let start = if c == 'b' { i + 2 } else { i + 1 };
+            let mut j = start;
+            while j < n && b[j] == '#' {
+                j += 1;
+            }
+            if j < n && b[j] == '"' {
+                let hashes = j - start;
+                j += 1;
+                while j < n {
+                    if b[j] == '\n' {
+                        line += 1;
+                    } else if b[j] == '"' {
+                        let mut k = 0usize;
+                        while k < hashes && j + 1 + k < n && b[j + 1 + k] == '#' {
+                            k += 1;
+                        }
+                        if k == hashes {
+                            j += hashes; // the quote itself is added below
+                            break;
+                        }
+                    }
+                    j += 1;
+                }
+                i = (j + 1).min(n);
+                continue;
+            }
+            // Not a raw string (e.g. the identifier `rel`): fall through.
+        }
+        // Plain or byte string literal.
+        if c == '"' || (c == 'b' && i + 1 < n && b[i + 1] == '"') {
+            i += if c == 'b' { 2 } else { 1 };
+            while i < n && b[i] != '"' {
+                if b[i] == '\\' {
+                    i += 1; // skip the escaped char
+                } else if b[i] == '\n' {
+                    line += 1;
+                }
+                i += 1;
+            }
+            i += 1; // closing quote
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            if i + 1 < n && b[i + 1] == '\\' {
+                // Escaped char literal ('\n', '\u{1F600}'): scan to the
+                // closing quote on this line.
+                let mut j = i + 2;
+                while j < n && b[j] != '\'' && b[j] != '\n' {
+                    j += 1;
+                }
+                i = if j < n && b[j] == '\'' { j + 1 } else { j };
+                continue;
+            }
+            if i + 2 < n && b[i + 2] == '\'' && b[i + 1] != '\'' {
+                i += 3; // plain 'x'
+                continue;
+            }
+            // Lifetime: consume the quote plus the identifier.
+            i += 1;
+            while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            continue;
+        }
+        if c.is_alphabetic() || c == '_' {
+            let mut j = i;
+            while j < n && (b[j].is_alphanumeric() || b[j] == '_') {
+                j += 1;
+            }
+            toks.push(Tok { kind: TokKind::Ident, text: b[i..j].iter().collect(), line });
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i;
+            while j < n && (b[j].is_alphanumeric() || b[j] == '_' || b[j] == '.') {
+                if b[j] == '.' && !(j + 1 < n && b[j + 1].is_ascii_digit()) {
+                    // `0..n` ranges and `x.1.method()` tuple-field calls:
+                    // the dot is punct unless a digit follows (`2.5`).
+                    break;
+                }
+                j += 1;
+            }
+            toks.push(Tok { kind: TokKind::Num, text: b[i..j].iter().collect(), line });
+            i = j;
+            continue;
+        }
+        toks.push(Tok { kind: TokKind::Punct, text: c.to_string(), line });
+        i += 1;
+    }
+    toks
+}
+
+/// Mark every token inside a `#[cfg(test)]` item (the attribute itself
+/// included). Rules skip masked tokens: unit-test modules measure wall
+/// time and compare floats legitimately, and the determinism contract is
+/// about *result paths*, not test scaffolding.
+pub fn cfg_test_mask(toks: &[Tok]) -> Vec<bool> {
+    let mut mask = vec![false; toks.len()];
+    let mut i = 0usize;
+    while i < toks.len() {
+        if is_cfg_test_at(toks, i) {
+            // Skip any further attributes, then the item: either a braced
+            // body (mod/fn) or a `;`-terminated item.
+            let mut j = i + 7;
+            while j < toks.len() && !toks[j].is("{") && !toks[j].is(";") {
+                j += 1;
+            }
+            if j < toks.len() && toks[j].is("{") {
+                let mut depth = 0usize;
+                while j < toks.len() {
+                    if toks[j].is("{") {
+                        depth += 1;
+                    } else if toks[j].is("}") {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    j += 1;
+                }
+            }
+            let end = (j + 1).min(toks.len());
+            for m in mask.iter_mut().take(end).skip(i) {
+                *m = true;
+            }
+            i = end;
+            continue;
+        }
+        i += 1;
+    }
+    mask
+}
+
+fn is_cfg_test_at(toks: &[Tok], i: usize) -> bool {
+    i + 6 < toks.len()
+        && toks[i].is("#")
+        && toks[i + 1].is("[")
+        && toks[i + 2].is("cfg")
+        && toks[i + 3].is("(")
+        && toks[i + 4].is("test")
+        && toks[i + 5].is(")")
+        && toks[i + 6].is("]")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_comments_and_lifetimes_are_consumed() {
+        let src = r##"
+// Instant::now in a comment
+/* nested /* SystemTime */ block */
+fn f<'a>(x: &'a str) -> char {
+    let _s = "thread_rng() in a string";
+    let _r = r#"rand:: in a raw string"#;
+    'x'
+}
+"##;
+        let toks = lex(src);
+        assert!(!toks.iter().any(|t| t.is("Instant")));
+        assert!(!toks.iter().any(|t| t.is("SystemTime")));
+        assert!(!toks.iter().any(|t| t.is("thread_rng")));
+        assert!(!toks.iter().any(|t| t.is("rand")));
+        assert!(toks.iter().any(|t| t.is("fn")));
+    }
+
+    #[test]
+    fn line_numbers_track_newlines() {
+        let toks = lex("a\nb\n  c");
+        assert_eq!(toks[0].line, 1);
+        assert_eq!(toks[1].line, 2);
+        assert_eq!(toks[2].line, 3);
+    }
+
+    #[test]
+    fn cfg_test_items_are_masked() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn after() {}";
+        let toks = lex(src);
+        let mask = cfg_test_mask(&toks);
+        let live = |name: &str| {
+            toks.iter()
+                .zip(&mask)
+                .find(|(t, _)| t.is(name))
+                .map(|(_, &m)| m)
+                .unwrap()
+        };
+        assert!(!live("live"));
+        assert!(live("tests"));
+        assert!(live("t"));
+        assert!(!live("after"));
+    }
+
+    #[test]
+    fn range_literals_split_before_dots() {
+        let toks = lex("for i in 0..10 {}");
+        let texts: Vec<&str> = toks.iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(texts, vec!["for", "i", "in", "0", ".", ".", "10", "{", "}"]);
+    }
+
+    #[test]
+    fn tuple_field_method_calls_keep_the_method_ident() {
+        // `a.1.partial_cmp(..)` must not swallow the method into the number.
+        let toks = lex("a.1.partial_cmp(&b.1)");
+        assert!(toks.iter().any(|t| t.is("partial_cmp")));
+        assert!(toks.iter().any(|t| t.kind == TokKind::Num && t.is("1")));
+        // Decimal literals still lex whole.
+        let toks = lex("let x = 2.5e3;");
+        assert!(toks.iter().any(|t| t.is("2.5e3")));
+    }
+}

@@ -1,0 +1,227 @@
+//! # xr-dse-lint
+//!
+//! Determinism & unit-safety design-rule checker for the xr-edge-dse
+//! workspace. Every reproduced result in this repo (energy/area claims,
+//! search frontiers, fleet traces) rests on invariants the compiler cannot
+//! see: bitwise-deterministic evaluation and consistent physical-unit
+//! naming. This tool rejects violations at CI time instead of waiting for
+//! an equivalence test to catch the drift.
+//!
+//! - [`lex`] — minimal Rust tokenizer (comments/strings consumed).
+//! - [`rules`] — the rule set: D1 (no hash iteration in result paths),
+//!   D2 (no wall clock / ambient RNG outside the real-time runner),
+//!   D3 (total float ordering, sequential reductions),
+//!   U1 (unit-suffix discipline).
+//! - [`allow`] — `lint-allow.toml`, vetted exceptions with justifications.
+//!
+//! Library API: [`lint_source`] for one file (fixture tests),
+//! [`check_workspace`] for the whole repo (CLI, bench, self-check test).
+
+#![forbid(unsafe_code)]
+#![deny(unused_must_use)]
+
+pub mod allow;
+pub mod lex;
+pub mod rules;
+
+use std::path::{Path, PathBuf};
+
+pub use allow::AllowEntry;
+pub use rules::{Diagnostic, Severity};
+
+/// Directories scanned by a workspace check, relative to the repo root.
+pub const DEFAULT_ROOTS: &[&str] = &[
+    "rust/src",
+    "rust/benches",
+    "rust/tests",
+    "rust/lint/src",
+    "rust/lint/tests",
+    "rust/lint/benches",
+    "examples",
+];
+
+/// Directory names never scanned: generated output, vendored stand-ins
+/// (not our determinism surface), and the linter's own rule fixtures
+/// (violations on purpose).
+const SKIP_DIRS: &[&str] = &["target", "vendor", "fixtures", ".git"];
+
+/// Lint one source file presented as `path` (workspace-relative,
+/// '/'-separated — rule scoping keys off this label, so fixture tests can
+/// place the same source inside or outside a scoped module).
+pub fn lint_source(path: &str, src: &str) -> Vec<Diagnostic> {
+    let toks = lex::lex(src);
+    let mask = lex::cfg_test_mask(&toks);
+    let lines: Vec<&str> = src.lines().collect();
+    rules::lint_tokens(path, &toks, &mask, &lines)
+}
+
+/// Result of a workspace check, after allowlist application.
+#[derive(Debug)]
+pub struct CheckReport {
+    /// Unsuppressed findings, in (path, line) order.
+    pub diags: Vec<Diagnostic>,
+    /// Findings suppressed by the allowlist.
+    pub suppressed: usize,
+    /// Allowlist entries that matched nothing (stale — worth pruning).
+    pub unused_allows: Vec<AllowEntry>,
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+}
+
+/// Recursively collect `.rs` files under `root`, sorted by path so every
+/// run reports in the same order (the linter obeys its own D1).
+pub fn collect_rs_files(root: &Path) -> std::io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        if !dir.is_dir() {
+            continue;
+        }
+        for entry in std::fs::read_dir(&dir)? {
+            let path = entry?.path();
+            if path.is_dir() {
+                let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+                if !SKIP_DIRS.contains(&name) {
+                    stack.push(path);
+                }
+            } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+                out.push(path);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Check every default root under `workspace_root`, applying `allows`.
+pub fn check_workspace(
+    workspace_root: &Path,
+    allows: &[AllowEntry],
+) -> std::io::Result<CheckReport> {
+    let mut diags = Vec::new();
+    let mut files_scanned = 0usize;
+    let mut used = vec![false; allows.len()];
+    let mut suppressed = 0usize;
+    for root in DEFAULT_ROOTS {
+        for file in collect_rs_files(&workspace_root.join(root))? {
+            files_scanned += 1;
+            let src = std::fs::read_to_string(&file)?;
+            let label = rel_label(workspace_root, &file);
+            for d in lint_source(&label, &src) {
+                let mut hit = false;
+                for (k, a) in allows.iter().enumerate() {
+                    if a.matches(&d) {
+                        used[k] = true;
+                        hit = true;
+                        break;
+                    }
+                }
+                if hit {
+                    suppressed += 1;
+                } else {
+                    diags.push(d);
+                }
+            }
+        }
+    }
+    let unused_allows = allows
+        .iter()
+        .zip(&used)
+        .filter(|(_, &u)| !u)
+        .map(|(a, _)| a.clone())
+        .collect();
+    Ok(CheckReport { diags, suppressed, unused_allows, files_scanned })
+}
+
+/// Workspace-relative, '/'-separated display label for a file.
+fn rel_label(root: &Path, file: &Path) -> String {
+    let rel = file.strip_prefix(root).unwrap_or(file);
+    let s = rel.to_string_lossy().replace('\\', "/");
+    s.trim_start_matches("./").to_string()
+}
+
+/// Load an allowlist file; a missing file yields an empty list only when
+/// `required` is false (the default path may simply not exist yet).
+pub fn load_allowlist(path: &Path, required: bool) -> Result<Vec<AllowEntry>, String> {
+    match std::fs::read_to_string(path) {
+        Ok(src) => allow::parse_allowlist(&src, &path.to_string_lossy()),
+        Err(e) if !required && e.kind() == std::io::ErrorKind::NotFound => Ok(Vec::new()),
+        Err(e) => Err(format!("{}: {e}", path.display())),
+    }
+}
+
+/// Render a check report as a JSON document (hand-rolled — the lint crate
+/// is dependency-free), stable across runs for artifact diffing.
+pub fn render_json(report: &CheckReport) -> String {
+    let mut s = String::from("{\n  \"diagnostics\": [");
+    for (i, d) in report.diags.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str("\n    {");
+        s.push_str(&format!("\"rule\": {}, ", json_str(d.rule)));
+        s.push_str(&format!("\"severity\": {}, ", json_str(d.severity.label())));
+        s.push_str(&format!("\"path\": {}, ", json_str(&d.path)));
+        s.push_str(&format!("\"line\": {}, ", d.line));
+        s.push_str(&format!("\"message\": {}", json_str(&d.message)));
+        s.push('}');
+    }
+    if !report.diags.is_empty() {
+        s.push_str("\n  ");
+    }
+    s.push_str("],\n");
+    s.push_str(&format!("  \"suppressed\": {},\n", report.suppressed));
+    s.push_str(&format!("  \"unused_allowlist_entries\": {},\n", report.unused_allows.len()));
+    s.push_str(&format!("  \"files_scanned\": {}\n", report.files_scanned));
+    s.push_str("}\n");
+    s
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_escaping() {
+        assert_eq!(json_str("a\"b\\c\nd"), "\"a\\\"b\\\\c\\nd\"");
+    }
+
+    #[test]
+    fn rel_label_strips_root() {
+        let root = Path::new("/repo");
+        let file = Path::new("/repo/rust/src/lib.rs");
+        assert_eq!(rel_label(root, file), "rust/src/lib.rs");
+    }
+
+    #[test]
+    fn render_json_of_empty_report_is_wellformed() {
+        let rep = CheckReport {
+            diags: Vec::new(),
+            suppressed: 3,
+            unused_allows: Vec::new(),
+            files_scanned: 7,
+        };
+        let j = render_json(&rep);
+        assert!(j.contains("\"diagnostics\": []"));
+        assert!(j.contains("\"suppressed\": 3"));
+        assert!(j.contains("\"files_scanned\": 7"));
+    }
+}

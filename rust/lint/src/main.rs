@@ -1,0 +1,108 @@
+//! `xr-dse-lint` — CLI for the workspace design-rule checker.
+//!
+//! ```text
+//! xr-dse-lint check [--json] [--out PATH] [--allowlist PATH] [--root DIR]
+//! ```
+//!
+//! Exit codes: 0 = clean, 1 = diagnostics reported, 2 = usage or I/O
+//! error. With `--json` the machine-readable report goes to stdout (or
+//! `--out PATH`); human diagnostics always render on stderr so CI logs
+//! show spans even when the JSON artifact is being captured.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use xr_dse_lint::{check_workspace, load_allowlist, render_json};
+
+const USAGE: &str = "usage: xr-dse-lint check [--json] [--out PATH] \
+                     [--allowlist PATH] [--root DIR]";
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(clean) => {
+            if clean {
+                ExitCode::SUCCESS
+            } else {
+                ExitCode::from(1)
+            }
+        }
+        Err(msg) => {
+            eprintln!("xr-dse-lint: {msg}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn run(args: &[String]) -> Result<bool, String> {
+    let mut it = args.iter();
+    match it.next().map(String::as_str) {
+        Some("check") => {}
+        Some("--help") | Some("-h") => {
+            println!("{USAGE}");
+            return Ok(true);
+        }
+        Some(other) => return Err(format!("unknown command `{other}`\n{USAGE}")),
+        None => return Err(USAGE.to_string()),
+    }
+
+    let mut json = false;
+    let mut out_path: Option<PathBuf> = None;
+    let mut allow_path: Option<PathBuf> = None;
+    let mut root = PathBuf::from(".");
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--json" => json = true,
+            "--out" => out_path = Some(take_value(&mut it, "--out")?),
+            "--allowlist" => allow_path = Some(take_value(&mut it, "--allowlist")?),
+            "--root" => root = take_value(&mut it, "--root")?,
+            other => return Err(format!("unknown flag `{other}`\n{USAGE}")),
+        }
+    }
+
+    // An explicit --allowlist must exist; the default one may not yet.
+    let (path, required) = match allow_path {
+        Some(p) => (p, true),
+        None => (root.join("lint-allow.toml"), false),
+    };
+    let allows = load_allowlist(&path, required)?;
+
+    let report = check_workspace(&root, &allows).map_err(|e| format!("scan failed: {e}"))?;
+
+    for d in &report.diags {
+        eprintln!("{}", d.render());
+    }
+    for a in &report.unused_allows {
+        eprintln!(
+            "note: allowlist entry at {}:{} ({} {}) matched nothing — prune it",
+            path.display(),
+            a.line,
+            a.rule,
+            a.path
+        );
+    }
+    eprintln!(
+        "xr-dse-lint: {} finding(s), {} suppressed, {} file(s) scanned",
+        report.diags.len(),
+        report.suppressed,
+        report.files_scanned
+    );
+
+    if json {
+        let doc = render_json(&report);
+        match &out_path {
+            Some(p) => std::fs::write(p, doc).map_err(|e| format!("{}: {e}", p.display()))?,
+            None => print!("{doc}"),
+        }
+    }
+    Ok(report.diags.is_empty())
+}
+
+fn take_value<'a>(
+    it: &mut impl Iterator<Item = &'a String>,
+    flag: &str,
+) -> Result<PathBuf, String> {
+    it.next()
+        .map(PathBuf::from)
+        .ok_or_else(|| format!("`{flag}` needs a value\n{USAGE}"))
+}

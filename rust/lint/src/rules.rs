@@ -1,0 +1,603 @@
+//! The design-rule set (D1–D3, U1) as token-pattern passes. Every rule is
+//! a deliberate *heuristic* over the token stream — no type information —
+//! tuned so that the live workspace is clean and each violation class the
+//! bitwise-equivalence tests guard against is caught at its usual spelling
+//! (see DESIGN.md §Determinism & unit invariants for the catalogue and the
+//! known blind spots).
+//!
+//! - **D1** — no `HashMap`/`HashSet` *iteration* in result paths
+//!   (`eval`, `search`, `fleet`, `report`): hash iteration order is
+//!   nondeterministic, so anything it feeds stops being bitwise-replayable.
+//!   Probe-only access (`get`/`insert`/`contains`) is fine and common.
+//! - **D2** — no `Instant::now`/`SystemTime`/`thread_rng`/`rand::` outside
+//!   the coordinator's real-time thread runner and `util::benchkit`:
+//!   modeled time flows through `Frame::sched_s`/the virtual clock,
+//!   randomness through seeded `util::Prng`.
+//! - **D3** — float ordering must be total (`f64::total_cmp`, never a
+//!   `partial_cmp` comparator), and result-path float reductions must stay
+//!   sequential (no `.par_*` re-association).
+//! - **U1** — unit-suffix discipline: `+`/`-`/comparisons between
+//!   identifiers carrying *different* unit suffixes are errors, and public
+//!   `f64` fields/functions named like physical quantities must carry a
+//!   suffix.
+
+use crate::lex::{Tok, TokKind};
+
+/// Diagnostic severity. Both levels gate the exit code — `Warning` only
+/// marks findings where the heuristic has a wider false-positive surface
+/// (U1 naming), so a reader knows which entries may earn an allowlist line
+/// rather than a fix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    Error,
+    Warning,
+}
+
+impl Severity {
+    pub fn label(self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+        }
+    }
+}
+
+/// One finding: rule ID, severity, file/line span, message, and the source
+/// line text (displayed under the span and matched by allowlist
+/// `contains` patterns).
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub rule: &'static str,
+    pub severity: Severity,
+    pub path: String,
+    pub line: u32,
+    pub message: String,
+    pub line_text: String,
+}
+
+impl Diagnostic {
+    pub fn render(&self) -> String {
+        format!(
+            "{}[{}]: {}:{}: {}\n    | {}",
+            self.severity.label(),
+            self.rule,
+            self.path,
+            self.line,
+            self.message,
+            self.line_text.trim()
+        )
+    }
+}
+
+/// Modules whose outputs are replayed bitwise (reports, frontiers, fleet
+/// traces): the D1/D3-parallel scopes.
+fn in_result_path(path: &str) -> bool {
+    ["/eval/", "/search/", "/fleet/", "/report/"].iter().any(|s| path.contains(s))
+}
+
+/// D2's sanctioned homes: the real-time thread runner (coordinator) and
+/// the bench timing substrate.
+fn d2_exempt(path: &str) -> bool {
+    path.contains("/coordinator/") || path.ends_with("util/benchkit.rs")
+}
+
+const ITER_METHODS: &[&str] = &[
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "drain",
+    "into_iter",
+    "into_keys",
+    "into_values",
+    "retain",
+];
+
+/// Type-position tokens the declaration back-walk steps over between an
+/// identifier and its `HashMap`/`HashSet` type.
+const TYPE_WRAPPERS: &[&str] = &[
+    "Mutex", "RwLock", "Option", "Box", "Arc", "Rc", "RefCell", "Cell", "OnceLock", "std", "sync",
+    "collections", "cell",
+];
+
+const CMP_METHODS: &[&str] =
+    &["sort_by", "sort_unstable_by", "max_by", "min_by", "binary_search_by"];
+
+/// Recognized unit suffixes → dimension. The repo convention from
+/// `util::units`: pJ-energy, ns-latency, µW-power, µm²-area, byte
+/// capacities, plus the second/µJ/Hz spellings the serving layers use.
+const UNIT_SUFFIXES: &[(&str, &str)] = &[
+    ("s", "time"),
+    ("ms", "time"),
+    ("us", "time"),
+    ("ns", "time"),
+    ("j", "energy"),
+    ("mj", "energy"),
+    ("uj", "energy"),
+    ("pj", "energy"),
+    ("w", "power"),
+    ("mw", "power"),
+    ("uw", "power"),
+    ("um2", "area"),
+    ("mm2", "area"),
+    ("bytes", "capacity"),
+    ("bits", "capacity"),
+    ("hz", "rate"),
+    ("khz", "rate"),
+    ("mhz", "rate"),
+    ("ips", "rate"),
+    ("fps", "rate"),
+];
+
+/// Name roots that mark a quantity as physical for the U1 naming check.
+const PHYS_ROOTS: &[&str] = &["energy", "power", "area", "latency", "duration", "capacity"];
+
+/// Suffixes that mark a name as deliberately dimensionless (ratios,
+/// multipliers): exempt from the U1 naming check.
+const DIMENSIONLESS_SUFFIXES: &[&str] =
+    &["_scale", "_ratio", "_frac", "_factor", "_rel", "_norm", "_util", "_share", "_pct"];
+
+/// The `(suffix, dimension)` of a unit-suffixed identifier, if any.
+fn unit_of(name: &str) -> Option<(&'static str, &'static str)> {
+    let idx = name.rfind('_')?;
+    let suf = &name[idx + 1..];
+    UNIT_SUFFIXES.iter().find(|(s, _)| *s == suf).copied()
+}
+
+/// Run every rule over one tokenized file. `lines` are the file's source
+/// lines (for diagnostic rendering and allowlist matching).
+pub fn lint_tokens(path: &str, toks: &[Tok], mask: &[bool], lines: &[&str]) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    {
+        let mut emit = |rule: &'static str, severity: Severity, line: u32, message: String| {
+            let idx = line.saturating_sub(1) as usize;
+            let line_text = lines.get(idx).map(|s| s.to_string()).unwrap_or_default();
+            let path = path.to_string();
+            out.push(Diagnostic { rule, severity, path, line, message, line_text });
+        };
+        rule_d1(path, toks, mask, &mut emit);
+        rule_d2(path, toks, mask, &mut emit);
+        rule_d3(path, toks, mask, &mut emit);
+        rule_u1_expr(toks, mask, &mut emit);
+        rule_u1_names(toks, mask, &mut emit);
+    }
+    // One diagnostic per (rule, line): overlapping patterns (e.g. a
+    // `partial_cmp` comparator that also unwraps) collapse to the first.
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out.dedup_by(|a, b| a.rule == b.rule && a.line == b.line);
+    out
+}
+
+/// D1: iteration over a hash-keyed collection in a result-path module.
+/// Collects identifiers declared with `HashMap`/`HashSet` types (let
+/// bindings, struct fields, fn params — including through `Mutex<..>`-style
+/// wrappers), then flags iterator-method calls and `for .. in` loops over
+/// them.
+fn rule_d1(
+    path: &str,
+    toks: &[Tok],
+    mask: &[bool],
+    emit: &mut impl FnMut(&'static str, Severity, u32, String),
+) {
+    if !in_result_path(path) {
+        return;
+    }
+    // Pass 1: names with hash-collection types.
+    let mut names: Vec<&str> = Vec::new();
+    for i in 0..toks.len() {
+        if !(toks[i].is("HashMap") || toks[i].is("HashSet")) {
+            continue;
+        }
+        let mut j = i;
+        while j > 0 {
+            let t = &toks[j - 1];
+            if t.is("<") || t.is("&") || TYPE_WRAPPERS.contains(&t.text.as_str()) {
+                j -= 1;
+            } else if t.is(":") && j > 1 && toks[j - 2].is(":") {
+                j -= 2; // a `::` path segment
+            } else {
+                break;
+            }
+        }
+        if j >= 2
+            && (toks[j - 1].is(":") || toks[j - 1].is("="))
+            && toks[j - 2].kind == TokKind::Ident
+        {
+            let name = toks[j - 2].text.as_str();
+            if !names.contains(&name) {
+                names.push(name);
+            }
+        }
+    }
+    // Pass 2: iteration sites.
+    for i in 0..toks.len() {
+        if mask[i] || toks[i].kind != TokKind::Ident {
+            continue;
+        }
+        // `name.iter()` / `.keys()` / `.drain()` / ...
+        if names.contains(&toks[i].text.as_str())
+            && i + 2 < toks.len()
+            && toks[i + 1].is(".")
+            && ITER_METHODS.contains(&toks[i + 2].text.as_str())
+        {
+            emit(
+                "D1",
+                Severity::Error,
+                toks[i].line,
+                format!(
+                    "`{}.{}()` iterates a hash collection in a result path; \
+                     iteration order is nondeterministic — use BTreeMap/BTreeSet \
+                     or sort the keys first",
+                    toks[i].text,
+                    toks[i + 2].text
+                ),
+            );
+        }
+        // `for pat in [&][mut] path.to.name { .. }`
+        if toks[i].is("in") {
+            let mut j = i + 1;
+            let mut last_ident: Option<&str> = None;
+            let mut plain_path = true;
+            while j < toks.len() && !toks[j].is("{") {
+                let t = &toks[j];
+                if t.kind == TokKind::Ident {
+                    if !t.is("mut") {
+                        last_ident = Some(t.text.as_str());
+                    }
+                } else if !(t.is("&") || t.is(".") || t.is(":")) {
+                    plain_path = false;
+                    break;
+                }
+                j += 1;
+            }
+            if plain_path && j < toks.len() && toks[j].is("{") {
+                if let Some(name) = last_ident {
+                    if names.contains(&name) {
+                        emit(
+                            "D1",
+                            Severity::Error,
+                            toks[i].line,
+                            format!(
+                                "`for .. in {name}` iterates a hash collection in a \
+                                 result path; iteration order is nondeterministic — \
+                                 use BTreeMap/BTreeSet or sort the keys first"
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// D2: wall-clock time or ambient randomness outside the real-time runner.
+fn rule_d2(
+    path: &str,
+    toks: &[Tok],
+    mask: &[bool],
+    emit: &mut impl FnMut(&'static str, Severity, u32, String),
+) {
+    if d2_exempt(path) {
+        return;
+    }
+    for i in 0..toks.len() {
+        if mask[i] {
+            continue;
+        }
+        let t = &toks[i];
+        if t.is("Instant")
+            && i + 3 < toks.len()
+            && toks[i + 1].is(":")
+            && toks[i + 2].is(":")
+            && toks[i + 3].is("now")
+        {
+            emit(
+                "D2",
+                Severity::Error,
+                t.line,
+                "wall-clock `Instant::now` outside the real-time runner; modeled time \
+                 must flow through `Frame::sched_s` / the virtual clock"
+                    .to_string(),
+            );
+        }
+        if t.is("SystemTime") {
+            emit(
+                "D2",
+                Severity::Error,
+                t.line,
+                "`SystemTime` outside the real-time runner; modeled time must flow \
+                 through `Frame::sched_s` / the virtual clock"
+                    .to_string(),
+            );
+        }
+        if t.is("thread_rng") {
+            emit(
+                "D2",
+                Severity::Error,
+                t.line,
+                "`thread_rng` breaks PRNG lockstep; randomness must flow through \
+                 seeded `util::Prng`"
+                    .to_string(),
+            );
+        }
+        if t.is("rand") && i + 2 < toks.len() && toks[i + 1].is(":") && toks[i + 2].is(":") {
+            emit(
+                "D2",
+                Severity::Error,
+                t.line,
+                "`rand::` breaks PRNG lockstep; randomness must flow through seeded \
+                 `util::Prng`"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+/// D3: non-total float ordering, and parallel-iterator reductions in
+/// result paths (re-associated float sums are not bitwise-replayable).
+fn rule_d3(
+    path: &str,
+    toks: &[Tok],
+    mask: &[bool],
+    emit: &mut impl FnMut(&'static str, Severity, u32, String),
+) {
+    for i in 0..toks.len() {
+        if mask[i] || toks[i].kind != TokKind::Ident {
+            continue;
+        }
+        let t = &toks[i];
+        // `sort_by(..partial_cmp..)` and friends.
+        if CMP_METHODS.contains(&t.text.as_str()) && i + 1 < toks.len() && toks[i + 1].is("(") {
+            let mut depth = 0usize;
+            let mut j = i + 1;
+            while j < toks.len() {
+                if toks[j].is("(") {
+                    depth += 1;
+                } else if toks[j].is(")") {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                } else if toks[j].is("partial_cmp") {
+                    emit(
+                        "D3",
+                        Severity::Error,
+                        toks[j].line,
+                        format!(
+                            "`partial_cmp` comparator in `{}` — NaN makes the order \
+                             partial; use `f64::total_cmp`",
+                            t.text
+                        ),
+                    );
+                    break;
+                }
+                j += 1;
+            }
+        }
+        // `partial_cmp(..).unwrap()` anywhere: an ordering that panics on
+        // NaN instead of totalizing it.
+        if t.is("partial_cmp") && i + 1 < toks.len() && toks[i + 1].is("(") {
+            let mut depth = 0usize;
+            let mut j = i + 1;
+            while j < toks.len() {
+                if toks[j].is("(") {
+                    depth += 1;
+                } else if toks[j].is(")") {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                j += 1;
+            }
+            if j + 2 < toks.len() && toks[j + 1].is(".") && toks[j + 2].is("unwrap") {
+                emit(
+                    "D3",
+                    Severity::Error,
+                    t.line,
+                    "`partial_cmp(..).unwrap()` ordering — NaN panics; use \
+                     `f64::total_cmp`"
+                        .to_string(),
+                );
+            }
+        }
+        // Parallel-iterator methods in result paths.
+        if in_result_path(path) && t.text.starts_with("par_") && i > 0 && toks[i - 1].is(".") {
+            emit(
+                "D3",
+                Severity::Error,
+                t.line,
+                format!(
+                    "parallel iterator `.{}` in a result path re-associates float \
+                     reductions; keep accumulation sequential (see \
+                     `Engine::eval_coords` for the sanctioned pattern)",
+                    t.text
+                ),
+            );
+        }
+    }
+}
+
+/// U1 (expressions): `+`, `-`, `+=`, `-=` and comparisons between
+/// identifiers whose unit suffixes disagree. Multiplication and division
+/// legally rebind dimensions, so operands adjacent to `*` or `/` (and
+/// call results) are skipped.
+fn rule_u1_expr(
+    toks: &[Tok],
+    mask: &[bool],
+    emit: &mut impl FnMut(&'static str, Severity, u32, String),
+) {
+    for i in 0..toks.len() {
+        if mask[i] || toks[i].kind != TokKind::Punct {
+            continue;
+        }
+        let op = toks[i].text.as_str();
+        if !matches!(op, "+" | "-" | "<" | ">") {
+            continue;
+        }
+        // Multi-char operators that are not arithmetic/comparison.
+        if i + 1 < toks.len() {
+            let next = toks[i + 1].text.as_str();
+            if op == "-" && next == ">" {
+                continue; // ->
+            }
+            if (op == "<" && next == "<") || (op == ">" && next == ">") {
+                continue; // shifts
+            }
+        }
+        // LHS: the identifier immediately before the operator.
+        if i == 0 || toks[i - 1].kind != TokKind::Ident {
+            continue;
+        }
+        let lhs = toks[i - 1].text.as_str();
+        // `Vec<..>`-style generics: skip angle brackets after type names.
+        if (op == "<" || op == ">") && lhs.starts_with(|c: char| c.is_ascii_uppercase()) {
+            continue;
+        }
+        // LHS inside a product/quotient: dimension already rebound.
+        if i >= 2 && (toks[i - 2].is("*") || toks[i - 2].is("/")) {
+            continue;
+        }
+        // RHS start: step over `=` of `+=`/`-=`/`<=`/`>=`, then `&`/`mut`.
+        let mut r = i + 1;
+        if r < toks.len() && toks[r].is("=") {
+            r += 1;
+        }
+        while r < toks.len() && (toks[r].is("&") || toks[r].is("mut")) {
+            r += 1;
+        }
+        if r >= toks.len() || toks[r].kind != TokKind::Ident {
+            continue;
+        }
+        // Follow a field path (`a.b.c`) to its final segment.
+        while r + 2 < toks.len() && toks[r + 1].is(".") && toks[r + 2].kind == TokKind::Ident {
+            r += 2;
+        }
+        let rhs = toks[r].text.as_str();
+        // RHS followed by `*`, `/` (product rebinds) or `(` (call result).
+        if r + 1 < toks.len()
+            && (toks[r + 1].is("*") || toks[r + 1].is("/") || toks[r + 1].is("("))
+        {
+            continue;
+        }
+        let (Some((ls, ld)), Some((rs, rd))) = (unit_of(lhs), unit_of(rhs)) else {
+            continue;
+        };
+        if ls != rs {
+            let detail = if ld != rd {
+                format!("{ld} vs {rd}")
+            } else {
+                format!("both {ld}, different scales")
+            };
+            emit(
+                "U1",
+                Severity::Error,
+                toks[i].line,
+                format!(
+                    "`{lhs}` (_{ls}) {op} `{rhs}` (_{rs}) mixes unit suffixes \
+                     ({detail}); convert one side explicitly"
+                ),
+            );
+        }
+    }
+}
+
+/// U1 (naming): public `f64` functions/fields named like physical
+/// quantities must carry a unit suffix (or a dimensionless marker such as
+/// `_scale`).
+fn rule_u1_names(
+    toks: &[Tok],
+    mask: &[bool],
+    emit: &mut impl FnMut(&'static str, Severity, u32, String),
+) {
+    let flag_name = |name: &str| -> bool {
+        unit_of(name).is_none()
+            && !DIMENSIONLESS_SUFFIXES.iter().any(|s| name.ends_with(s))
+            && PHYS_ROOTS.iter().any(|r| name.contains(r))
+    };
+    for i in 0..toks.len() {
+        if mask[i] || !toks[i].is("pub") {
+            continue;
+        }
+        // Step over a `pub(crate)`/`pub(super)` qualifier.
+        let mut j = i + 1;
+        if j < toks.len() && toks[j].is("(") {
+            let mut depth = 0usize;
+            while j < toks.len() {
+                if toks[j].is("(") {
+                    depth += 1;
+                } else if toks[j].is(")") {
+                    depth -= 1;
+                    if depth == 0 {
+                        j += 1;
+                        break;
+                    }
+                }
+                j += 1;
+            }
+        }
+        if j >= toks.len() {
+            continue;
+        }
+        // `pub fn name(..) -> f64 {`
+        if toks[j].is("fn") && j + 2 < toks.len() && toks[j + 1].kind == TokKind::Ident {
+            let name = toks[j + 1].text.as_str();
+            if !toks[j + 2].is("(") {
+                continue;
+            }
+            let mut depth = 0usize;
+            let mut p = j + 2;
+            while p < toks.len() {
+                if toks[p].is("(") {
+                    depth += 1;
+                } else if toks[p].is(")") {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                p += 1;
+            }
+            if p + 4 < toks.len()
+                && toks[p + 1].is("-")
+                && toks[p + 2].is(">")
+                && toks[p + 3].is("f64")
+                && (toks[p + 4].is("{") || toks[p + 4].is("where"))
+                && flag_name(name)
+            {
+                emit(
+                    "U1",
+                    Severity::Warning,
+                    toks[j + 1].line,
+                    format!(
+                        "pub fn `{name}` returns f64 but its name carries no unit \
+                         suffix; name the unit (`_uw`, `_pj`, ...) or mark it \
+                         dimensionless (`_scale`, `_ratio`)"
+                    ),
+                );
+            }
+        }
+        // `pub name: f64,` (struct field)
+        if toks[j].kind == TokKind::Ident
+            && j + 3 < toks.len()
+            && toks[j + 1].is(":")
+            && toks[j + 2].is("f64")
+            && (toks[j + 3].is(",") || toks[j + 3].is("}"))
+        {
+            let name = toks[j].text.as_str();
+            if flag_name(name) {
+                emit(
+                    "U1",
+                    Severity::Warning,
+                    toks[j].line,
+                    format!(
+                        "pub field `{name}: f64` carries no unit suffix; name the \
+                         unit (`_uw`, `_pj`, ...) or mark it dimensionless \
+                         (`_scale`, `_ratio`)"
+                    ),
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,30 @@
+//! D1 negative fixture: probe-only hash access and ordered-map iteration
+//! are both legal in result paths. Linted under a `rust/src/fleet/...`
+//! label — nothing below may flag.
+
+use std::collections::{BTreeMap, HashMap};
+
+pub struct Cache {
+    entries: HashMap<u64, f64>,
+    ordered: BTreeMap<String, f64>,
+}
+
+impl Cache {
+    pub fn lookup(&mut self, key: u64, fresh: f64) -> f64 {
+        // Probe-only access: get/insert/contains never observe hash order.
+        if let Some(v) = self.entries.get(&key) {
+            return *v;
+        }
+        self.entries.insert(key, fresh);
+        fresh
+    }
+
+    pub fn render(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        // BTreeMap iteration is ordered — deterministic by construction.
+        for (name, v) in &self.ordered {
+            out.push(format!("{name}: {v}"));
+        }
+        out
+    }
+}

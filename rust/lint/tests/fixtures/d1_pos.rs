@@ -1,0 +1,24 @@
+//! D1 positive fixture: hash-collection iteration feeding a result sink.
+//! Linted under a `rust/src/fleet/...` label — every site below must flag.
+
+use std::collections::{HashMap, HashSet};
+
+pub struct FleetReport {
+    pub per_device: HashMap<String, f64>,
+    pub lines: Vec<String>,
+}
+
+impl FleetReport {
+    pub fn render(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for (name, uw) in &self.per_device {
+            // for-in over a HashMap field
+            out.push(format!("{name}: {uw}"));
+        }
+        out
+    }
+}
+
+pub fn summarize(seen: HashSet<u64>) -> u64 {
+    seen.iter().sum() // .iter() on a HashSet param
+}

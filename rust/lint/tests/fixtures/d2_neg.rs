@@ -1,0 +1,27 @@
+//! D2 negative fixture: the sanctioned spellings — modeled time through
+//! `Frame::sched_s` arithmetic and randomness through seeded `util::Prng`.
+//! Linted under a `rust/src/eval/...` label — nothing below may flag.
+
+pub struct Frame {
+    pub sched_s: f64,
+}
+
+pub struct Prng {
+    state: u64,
+}
+
+impl Prng {
+    pub fn seeded(seed: u64) -> Self {
+        Prng { state: seed.wrapping_mul(0x9e3779b97f4a7c15) | 1 }
+    }
+
+    pub fn next_f64(&mut self) -> f64 {
+        self.state = self.state.wrapping_mul(6364136223846793005).wrapping_add(1);
+        (self.state >> 11) as f64 / (1u64 << 53) as f64
+    }
+}
+
+pub fn advance(frame: &mut Frame, dt_s: f64, prng: &mut Prng) -> f64 {
+    frame.sched_s += dt_s; // modeled time: virtual-clock arithmetic
+    frame.sched_s + prng.next_f64() * dt_s
+}

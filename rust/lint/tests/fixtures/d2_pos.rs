@@ -1,0 +1,19 @@
+//! D2 positive fixture: wall-clock time and ambient randomness outside the
+//! real-time runner. Linted under a `rust/src/eval/...` label — every site
+//! below must flag. (D2 applies workspace-wide, not just result paths.)
+
+use std::time::{Instant, SystemTime};
+
+pub fn elapsed_s() -> f64 {
+    let t0 = Instant::now(); // wall clock
+    t0.elapsed().as_secs_f64()
+}
+
+pub fn stamp() -> SystemTime {
+    SystemTime::now() // wall clock
+}
+
+pub fn jitter() -> f64 {
+    let mut rng = rand::thread_rng(); // ambient RNG
+    rng.gen()
+}

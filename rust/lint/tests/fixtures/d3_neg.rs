@@ -1,0 +1,19 @@
+//! D3 negative fixture: the sanctioned spellings — `total_cmp` ordering
+//! and sequential accumulation. Linted under a `rust/src/search/...`
+//! label — nothing below may flag.
+
+pub fn rank(xs: &mut Vec<(String, f64)>) {
+    xs.sort_by(|a, b| a.1.total_cmp(&b.1));
+}
+
+pub fn best(xs: &[f64]) -> Option<f64> {
+    xs.iter().copied().max_by(|a, b| a.total_cmp(b))
+}
+
+pub fn total_uj(xs: &[f64]) -> f64 {
+    let mut acc_uj = 0.0;
+    for x in xs {
+        acc_uj += x; // sequential: one fixed association order
+    }
+    acc_uj
+}

@@ -1,0 +1,18 @@
+//! D3 positive fixture: partial float ordering and parallel reductions.
+//! Linted under a `rust/src/search/...` label — every site below must flag.
+
+pub fn rank(xs: &mut Vec<(String, f64)>) {
+    xs.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap()); // partial order
+}
+
+pub fn best(xs: &[f64]) -> Option<f64> {
+    xs.iter().copied().max_by(|a, b| a.partial_cmp(b).unwrap()) // partial order
+}
+
+pub fn ordering(a: f64, b: f64) -> std::cmp::Ordering {
+    a.partial_cmp(&b).unwrap() // NaN panics instead of totalizing
+}
+
+pub fn total_uj(xs: &[f64]) -> f64 {
+    xs.par_iter().sum() // re-associated float reduction
+}

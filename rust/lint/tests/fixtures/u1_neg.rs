@@ -1,0 +1,26 @@
+//! U1 negative fixture: legal unit arithmetic. Linted under any label —
+//! nothing below may flag.
+
+pub struct MacBudget {
+    /// Suffixed physical field: names its unit.
+    pub energy_pj: f64,
+    /// Dimensionless marker: exempt from the naming rule.
+    pub energy_scale: f64,
+}
+
+pub fn same_suffix(budget_uj: f64, spent_uj: f64) -> f64 {
+    let headroom_uj = budget_uj - spent_uj; // same dimension, same scale
+    headroom_uj + spent_uj
+}
+
+pub fn products(energy_pj: f64, latency_ns: f64) -> f64 {
+    energy_pj * latency_ns // multiplication legally rebinds dimensions
+}
+
+pub fn guard(energy_uj: f64, window_s: f64, cap_uw: f64) -> bool {
+    energy_uj / window_s < cap_uw // quotient rebinds: µJ/s is µW
+}
+
+pub fn area_um2(tiles: u32, tile_um2: f64) -> f64 {
+    tiles as f64 * tile_um2 // suffixed fn name: no naming finding
+}

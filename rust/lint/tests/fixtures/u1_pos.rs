@@ -1,0 +1,20 @@
+//! U1 positive fixture: mismatched unit suffixes and unsuffixed physical
+//! names. Linted under any label — every site below must flag.
+
+pub struct MacBudget {
+    pub energy: f64, // pub f64 field named like a physical quantity, no suffix
+}
+
+pub fn violates(energy_uj: f64, power_uw: f64, latency_s: f64, energy_pj: f64) -> bool {
+    let hot = energy_uj > power_uw; // energy vs power comparison
+    let sum = latency_s + energy_pj; // time plus energy
+    hot && sum > 0.0
+}
+
+pub fn capacity_mismatch(cap_bytes: u64, cap_bits: u64) -> u64 {
+    cap_bytes - cap_bits // both capacity, different scales
+}
+
+pub fn chip_area(tiles: u32) -> f64 {
+    tiles as f64 * 1.5 // pub f64 fn named like a physical quantity, no suffix
+}

@@ -1,0 +1,226 @@
+//! Fixture-driven rule tests plus the live-workspace self-check.
+//!
+//! Each rule gets a positive fixture (every site must flag, with the
+//! exact rule ID and line) and a negative fixture (the sanctioned
+//! spelling must stay silent), both under `tests/fixtures/`. Scope tests
+//! re-lint the same sources under out-of-scope path labels — `lint_source`
+//! keys rule applicability off the label, so one fixture exercises both
+//! sides of a scope boundary.
+
+use std::path::Path;
+
+use xr_dse_lint::{check_workspace, lint_source, load_allowlist, render_json};
+use xr_dse_lint::{CheckReport, Diagnostic, Severity};
+
+const D1_POS: &str = include_str!("fixtures/d1_pos.rs");
+const D1_NEG: &str = include_str!("fixtures/d1_neg.rs");
+const D2_POS: &str = include_str!("fixtures/d2_pos.rs");
+const D2_NEG: &str = include_str!("fixtures/d2_neg.rs");
+const D3_POS: &str = include_str!("fixtures/d3_pos.rs");
+const D3_NEG: &str = include_str!("fixtures/d3_neg.rs");
+const U1_POS: &str = include_str!("fixtures/u1_pos.rs");
+const U1_NEG: &str = include_str!("fixtures/u1_neg.rs");
+
+/// 1-based line of the first fixture line containing `marker`.
+fn line_of(src: &str, marker: &str) -> u32 {
+    src.lines()
+        .position(|l| l.contains(marker))
+        .map(|i| (i + 1) as u32)
+        .unwrap_or_else(|| panic!("marker `{marker}` not found in fixture"))
+}
+
+fn lines_for(diags: &[Diagnostic], rule: &str) -> Vec<u32> {
+    diags.iter().filter(|d| d.rule == rule).map(|d| d.line).collect()
+}
+
+#[test]
+fn d1_flags_hash_iteration_in_result_paths() {
+    let diags = lint_source("rust/src/fleet/report.rs", D1_POS);
+    assert_eq!(
+        lines_for(&diags, "D1"),
+        vec![line_of(D1_POS, "&self.per_device"), line_of(D1_POS, "seen.iter()")],
+        "diags: {diags:#?}"
+    );
+    assert!(diags.iter().all(|d| d.severity == Severity::Error));
+    assert!(diags[0].message.contains("nondeterministic"), "{}", diags[0].message);
+}
+
+#[test]
+fn d1_allows_probe_access_and_ordered_maps() {
+    let diags = lint_source("rust/src/fleet/cache.rs", D1_NEG);
+    assert!(diags.is_empty(), "diags: {diags:#?}");
+}
+
+#[test]
+fn d1_is_scoped_to_result_paths() {
+    // The same violating source outside eval/search/fleet/report is legal.
+    let diags = lint_source("rust/src/util/table.rs", D1_POS);
+    assert!(diags.is_empty(), "diags: {diags:#?}");
+}
+
+#[test]
+fn d2_flags_wall_clock_and_ambient_rng() {
+    let diags = lint_source("rust/src/eval/model.rs", D2_POS);
+    assert_eq!(
+        lines_for(&diags, "D2"),
+        vec![
+            line_of(D2_POS, "use std::time"),
+            line_of(D2_POS, "Instant::now"),
+            line_of(D2_POS, "pub fn stamp"),
+            line_of(D2_POS, "SystemTime::now()"),
+            line_of(D2_POS, "rand::thread_rng"),
+        ],
+        "diags: {diags:#?}"
+    );
+}
+
+#[test]
+fn d2_allows_virtual_clock_and_seeded_prng() {
+    let diags = lint_source("rust/src/eval/model.rs", D2_NEG);
+    assert!(diags.is_empty(), "diags: {diags:#?}");
+}
+
+#[test]
+fn d2_exempts_the_real_time_runner_and_benchkit() {
+    for label in ["rust/src/coordinator/runner.rs", "rust/src/util/benchkit.rs"] {
+        let diags = lint_source(label, D2_POS);
+        assert!(lines_for(&diags, "D2").is_empty(), "{label}: {diags:#?}");
+    }
+}
+
+#[test]
+fn d3_flags_partial_ordering_and_parallel_reductions() {
+    let diags = lint_source("rust/src/search/rank.rs", D3_POS);
+    assert_eq!(
+        lines_for(&diags, "D3"),
+        vec![
+            line_of(D3_POS, "xs.sort_by"),
+            line_of(D3_POS, "max_by"),
+            line_of(D3_POS, "a.partial_cmp(&b).unwrap()"),
+            line_of(D3_POS, "par_iter"),
+        ],
+        "diags: {diags:#?}"
+    );
+    assert!(diags.iter().any(|d| d.message.contains("total_cmp")));
+}
+
+#[test]
+fn d3_allows_total_cmp_and_sequential_sums() {
+    let diags = lint_source("rust/src/search/rank.rs", D3_NEG);
+    assert!(diags.is_empty(), "diags: {diags:#?}");
+}
+
+#[test]
+fn d3_ordering_is_global_but_par_is_result_path_only() {
+    let diags = lint_source("rust/src/util/math.rs", D3_POS);
+    // partial_cmp findings survive outside result paths; `.par_iter` does not.
+    assert_eq!(lines_for(&diags, "D3").len(), 3, "diags: {diags:#?}");
+    assert!(!diags.iter().any(|d| d.message.contains("parallel iterator")));
+}
+
+#[test]
+fn u1_flags_mixed_suffixes_and_unsuffixed_physical_names() {
+    let diags = lint_source("rust/src/model.rs", U1_POS);
+    assert_eq!(
+        lines_for(&diags, "U1"),
+        vec![
+            line_of(U1_POS, "pub energy: f64"),
+            line_of(U1_POS, "energy_uj > power_uw"),
+            line_of(U1_POS, "latency_s + energy_pj"),
+            line_of(U1_POS, "cap_bytes - cap_bits"),
+            line_of(U1_POS, "pub fn chip_area"),
+        ],
+        "diags: {diags:#?}"
+    );
+    // Expression mismatches are errors; naming findings are warnings.
+    let by_line = |m: &str| diags.iter().find(|d| d.line == line_of(U1_POS, m)).unwrap().severity;
+    assert_eq!(by_line("energy_uj > power_uw"), Severity::Error);
+    assert_eq!(by_line("cap_bytes - cap_bits"), Severity::Error);
+    assert_eq!(by_line("pub energy: f64"), Severity::Warning);
+    assert_eq!(by_line("pub fn chip_area"), Severity::Warning);
+    // Same-dimension, different-scale mismatches say so.
+    assert!(diags.iter().any(|d| d.message.contains("both capacity, different scales")));
+}
+
+#[test]
+fn u1_allows_suffixed_names_and_dimension_rebinding() {
+    let diags = lint_source("rust/src/model.rs", U1_NEG);
+    assert!(diags.is_empty(), "diags: {diags:#?}");
+}
+
+#[test]
+fn cfg_test_items_are_exempt_everywhere() {
+    let src = "#[cfg(test)]\nmod tests {\n    use std::time::Instant;\n    fn t() -> f64 \
+               { Instant::now().elapsed().as_secs_f64() }\n}\n";
+    let diags = lint_source("rust/src/eval/model.rs", src);
+    assert!(diags.is_empty(), "diags: {diags:#?}");
+}
+
+#[test]
+fn diagnostics_render_with_rule_and_span() {
+    let diags = lint_source("rust/src/fleet/report.rs", D1_POS);
+    let rendered = diags[0].render();
+    let line = line_of(D1_POS, "&self.per_device");
+    assert!(
+        rendered.starts_with(&format!("error[D1]: rust/src/fleet/report.rs:{line}:")),
+        "{rendered}"
+    );
+    assert!(rendered.contains("| for (name, uw)"), "{rendered}");
+}
+
+#[test]
+fn allowlist_suppression_is_exact() {
+    let allows = load_and_check_entries(
+        r#"
+[[allow]]
+rule = "D2"
+path = "rust/src/eval/model.rs"
+contains = "Instant::now"
+reason = "fixture: suppress exactly one site"
+"#,
+    );
+    let diags = lint_source("rust/src/eval/model.rs", D2_POS);
+    let (suppressed, kept): (Vec<_>, Vec<_>) =
+        diags.iter().partition(|d| allows.iter().any(|a| a.matches(d)));
+    assert_eq!(suppressed.len(), 1);
+    assert_eq!(suppressed[0].line, line_of(D2_POS, "Instant::now"));
+    assert_eq!(kept.len(), 4);
+}
+
+fn load_and_check_entries(src: &str) -> Vec<xr_dse_lint::AllowEntry> {
+    xr_dse_lint::allow::parse_allowlist(src, "inline").unwrap()
+}
+
+#[test]
+fn json_report_carries_rule_path_line() {
+    let diags = lint_source("rust/src/fleet/report.rs", D1_POS);
+    let n = diags.len();
+    let report = CheckReport {
+        diags,
+        suppressed: 2,
+        unused_allows: Vec::new(),
+        files_scanned: 1,
+    };
+    let json = render_json(&report);
+    assert!(json.contains("\"rule\": \"D1\""), "{json}");
+    assert!(json.contains("\"path\": \"rust/src/fleet/report.rs\""), "{json}");
+    assert!(json.contains(&format!("\"line\": {}", line_of(D1_POS, "seen.iter()"))), "{json}");
+    assert!(json.contains("\"suppressed\": 2"), "{json}");
+    assert_eq!(json.matches("\"severity\"").count(), n);
+}
+
+/// The self-check the CI gate relies on: the committed workspace is clean
+/// under the committed allowlist, and the allowlist carries no dead weight.
+#[test]
+fn live_workspace_is_clean_under_the_committed_allowlist() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let allows = load_allowlist(&root.join("lint-allow.toml"), true).expect("allowlist parses");
+    let report = check_workspace(&root, &allows).expect("workspace scan");
+    let rendered: Vec<String> = report.diags.iter().map(|d| d.render()).collect();
+    assert!(report.diags.is_empty(), "live workspace has findings:\n{}", rendered.join("\n"));
+    let stale: Vec<String> =
+        report.unused_allows.iter().map(|a| format!("{} {}", a.rule, a.path)).collect();
+    assert!(report.unused_allows.is_empty(), "stale allowlist entries: {stale:?}");
+    assert!(report.files_scanned >= 30, "scanned only {} files", report.files_scanned);
+    assert!(report.suppressed >= 1, "the committed allowlist should be exercised");
+}

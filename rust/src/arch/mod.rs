@@ -139,8 +139,8 @@ impl Arch {
 
     /// Logic clock scaled to `node` (DeepScale delay factors).
     pub fn logic_freq_mhz(&self, node: Node) -> f64 {
-        let base = crate::tech::node_scaling(self.base_node).delay;
-        let target = crate::tech::node_scaling(node).delay;
+        let base = crate::tech::node_scaling(self.base_node).delay_scale;
+        let target = crate::tech::node_scaling(node).delay_scale;
         self.base_freq_mhz * base / target
     }
 

@@ -38,7 +38,8 @@ impl AreaReport {
 /// the SRAM cell (charged to *memory* area but never replaced by MRAM).
 pub(crate) fn regfile_um2_per_bit(node: Node) -> f64 {
     // ≈8 F²-equivalent FF + clocking at 40nm ≈ 2.2 µm²/bit, logic-scaled.
-    2.2 * crate::tech::node_scaling(node).area / crate::tech::node_scaling(Node::N40).area
+    2.2 * crate::tech::node_scaling(node).area_scale
+        / crate::tech::node_scaling(Node::N40).area_scale
 }
 
 /// Estimate the die area of `arch` at `node` under a memory flavor (thin

@@ -36,6 +36,14 @@
 //! See `DESIGN.md` for the experiment index mapping every paper table and
 //! figure to a bench target, and `EXPERIMENTS.md` for measured results.
 
+// Crate-wide lint table (see DESIGN.md §Determinism & unit invariants —
+// the compiler-enforced complement to the `xr-dse-lint` design rules).
+// `float_cmp` is denied only outside tests: equivalence tests compare
+// floats bitwise *on purpose*, and the testkit is their substrate.
+#![forbid(unsafe_code)]
+#![deny(unused_must_use)]
+#![cfg_attr(not(test), deny(clippy::float_cmp))]
+
 pub mod util;
 pub mod testkit;
 pub mod workload;

@@ -70,7 +70,8 @@ fn cap_factor(capacity_bytes: usize) -> f64 {
 fn fixed_periphery_um2(node: Node, capacity_bytes: usize) -> f64 {
     let bits = (capacity_bytes * 8) as f64;
     let um2_40nm = 700.0 + 55.0 * bits.sqrt();
-    um2_40nm * crate::tech::node_scaling(node).area / crate::tech::node_scaling(Node::N40).area
+    um2_40nm * crate::tech::node_scaling(node).area_scale
+        / crate::tech::node_scaling(Node::N40).area_scale
 }
 
 /// Proportional array overhead (intra-array periphery): fraction of cell
@@ -138,8 +139,8 @@ impl MacroSpec {
         let cells_um2 = (self.capacity_bytes * 8) as f64 * p.cell_um2_bit;
         let area_um2 =
             cells_um2 * (1.0 + ARRAY_OVERHEAD) + fixed_periphery_um2(self.node, self.capacity_bytes);
-        let rel = crate::tech::node_scaling(self.node).energy
-            / crate::tech::node_scaling(Node::N7).energy;
+        let rel = crate::tech::node_scaling(self.node).energy_scale
+            / crate::tech::node_scaling(Node::N7).energy_scale;
         let wakeup_pj = knobs.wakeup_pj_per_byte_7nm * rel * self.capacity_bytes as f64;
         MacroModel {
             spec: *self,

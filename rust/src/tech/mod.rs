@@ -123,22 +123,22 @@ impl Node {
 /// area follows transistor density, delay improves sub-linearly.
 #[derive(Debug, Clone, Copy)]
 pub struct NodeScaling {
-    /// Dynamic energy multiplier (1.0 at 45 nm).
-    pub energy: f64,
-    /// Logic area multiplier.
-    pub area: f64,
-    /// Gate-delay multiplier (clock-period scaling for compute).
-    pub delay: f64,
+    /// Dynamic energy multiplier (1.0 at 45 nm) — dimensionless.
+    pub energy_scale: f64,
+    /// Logic area multiplier — dimensionless.
+    pub area_scale: f64,
+    /// Gate-delay multiplier (clock-period scaling for compute) — dimensionless.
+    pub delay_scale: f64,
 }
 
 pub fn node_scaling(node: Node) -> NodeScaling {
     match node {
-        Node::N45 => NodeScaling { energy: 1.00, area: 1.000, delay: 1.00 },
-        Node::N40 => NodeScaling { energy: 0.87, area: 0.790, delay: 0.91 },
-        Node::N28 => NodeScaling { energy: 0.52, area: 0.390, delay: 0.72 },
-        Node::N22 => NodeScaling { energy: 0.40, area: 0.240, delay: 0.62 },
+        Node::N45 => NodeScaling { energy_scale: 1.00, area_scale: 1.000, delay_scale: 1.00 },
+        Node::N40 => NodeScaling { energy_scale: 0.87, area_scale: 0.790, delay_scale: 0.91 },
+        Node::N28 => NodeScaling { energy_scale: 0.52, area_scale: 0.390, delay_scale: 0.72 },
+        Node::N22 => NodeScaling { energy_scale: 0.40, area_scale: 0.240, delay_scale: 0.62 },
         // 45→7nm: 1/0.22 ≈ 4.5×, the paper's "up to 4.5×" energy reduction.
-        Node::N7 => NodeScaling { energy: 0.22, area: 0.048, delay: 0.38 },
+        Node::N7 => NodeScaling { energy_scale: 0.22, area_scale: 0.048, delay_scale: 0.38 },
     }
 }
 
@@ -308,7 +308,7 @@ pub fn paper_mram_for(node: Node) -> Device {
 /// (QKeras CPU model [2] charges full instruction energy).
 pub fn mac_energy_pj(node: Node, cpu_style: bool) -> f64 {
     let base_40nm = if cpu_style { 5.0 } else { 0.20 };
-    let rel = node_scaling(node).energy / node_scaling(Node::N40).energy;
+    let rel = node_scaling(node).energy_scale / node_scaling(Node::N40).energy_scale;
     base_40nm * rel
 }
 
@@ -316,7 +316,7 @@ pub fn mac_energy_pj(node: Node, cpu_style: bool) -> f64 {
 /// share and control), scaled from a 40 nm systolic-PE anchor.
 pub fn mac_area_um2(node: Node) -> f64 {
     let base_40nm = 4200.0; // Eyeriss-class PE logic at 40/45 nm
-    base_40nm * node_scaling(node).area / node_scaling(Node::N40).area
+    base_40nm * node_scaling(node).area_scale / node_scaling(Node::N40).area_scale
 }
 
 #[cfg(test)]
@@ -329,17 +329,17 @@ mod tests {
         let mut last_a = f64::INFINITY;
         for n in Node::ALL {
             let s = node_scaling(n);
-            assert!(s.energy < last_e || n == Node::N45);
-            assert!(s.area < last_a || n == Node::N45);
-            last_e = s.energy;
-            last_a = s.area;
+            assert!(s.energy_scale < last_e || n == Node::N45);
+            assert!(s.area_scale < last_a || n == Node::N45);
+            last_e = s.energy_scale;
+            last_a = s.area_scale;
         }
     }
 
     #[test]
     fn paper_energy_ceiling_45_to_7() {
         // "energy reduction of up to 4.5×" (§3)
-        let ratio = node_scaling(Node::N45).energy / node_scaling(Node::N7).energy;
+        let ratio = node_scaling(Node::N45).energy_scale / node_scaling(Node::N7).energy_scale;
         assert!((4.0..5.0).contains(&ratio), "ratio={ratio}");
     }
 
