@@ -26,6 +26,9 @@ use xr_edge_dse::tech::{Device, Node};
 use xr_edge_dse::workload::builtin;
 
 fn main() -> anyhow::Result<()> {
+    // CI artifact hook: XR_DSE_TRACE / XR_DSE_METRICS turn on the
+    // observability journal for this run (flushed at the bottom).
+    xr_edge_dse::obs::enable_from_env();
     // ---- act 1: the device pool ----------------------------------------
     let mut points = HwPoint::paper_palette(Node::N7, Device::VgsotMram);
     let mut space = KnobSpace::paper();
@@ -124,5 +127,6 @@ fn main() -> anyhow::Result<()> {
         r.rejections,
         r.worst_rel_err * 100.0
     );
+    xr_edge_dse::obs::write_if_requested()?;
     Ok(())
 }

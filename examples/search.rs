@@ -27,6 +27,9 @@ use xr_edge_dse::tech::{Device, Node};
 use xr_edge_dse::workload::builtin;
 
 fn main() -> anyhow::Result<()> {
+    // CI artifact hook: XR_DSE_TRACE / XR_DSE_METRICS turn on the
+    // observability journal for this run (flushed at the bottom).
+    xr_edge_dse::obs::enable_from_env();
     // The exploration space, pinned to the paper's 7 nm operating point.
     let mut space = KnobSpace::paper();
     space.nodes = vec![Node::N7];
@@ -164,6 +167,7 @@ fn main() -> anyhow::Result<()> {
             .collect::<Vec<_>>()
             .join(", ")
     );
+    xr_edge_dse::obs::write_if_requested()?;
     Ok(())
 }
 

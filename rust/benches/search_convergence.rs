@@ -8,9 +8,13 @@
 //!        hit-rates in the `XR_DSE_BENCH_JSON` artifact;
 //!   S3 — convergence quality per strategy at equal budget: best
 //!        energy/inference found vs the best fixed-grid paper point
-//!        (the quantity `examples/search.rs` asserts on).
+//!        (the quantity `examples/search.rs` asserts on);
+//!   OBS1 — observability overhead: the S1 search with full tracing on
+//!        must stay within 5% of the trace-off run (the "bitwise
+//!        invisible, nearly free" contract of DESIGN.md §Observability).
 
 use xr_edge_dse::arch::{MemFlavor, PeConfig};
+use xr_edge_dse::obs;
 use xr_edge_dse::search::{
     paper_baseline, run_search, Annealing, ArchSynth, CacheStats, Constraints, Family, HillClimb,
     KnobSpace, Objective, RandomSearch, SearchConfig, Strategy,
@@ -120,6 +124,37 @@ fn main() -> anyhow::Result<()> {
             None => println!("S3 {label:<26} found nothing feasible in budget"),
         }
     }
+
+    // OBS1: observability overhead gate (DESIGN.md §Observability) — the
+    // S1 search rerun with full tracing (every span journaled, sampling
+    // off) must stay within 5% of the trace-off run, plus a 20 ms absolute
+    // allowance for 2-core-runner noise on the ~0.4 s workload.
+    let (off_mean, _, _) =
+        bench_units("OBS1 S1 random search, tracing off", 1, 5, cfg.budget as f64, || {
+            let r = run_search(&synth, &mut RandomSearch, &cfg);
+            std::hint::black_box(r.evaluations);
+        });
+    obs::enable_tracing(1 << 16, 1);
+    let (on_mean, _, _) =
+        bench_units("OBS1 S1 random search, tracing on", 1, 5, cfg.budget as f64, || {
+            let r = run_search(&synth, &mut RandomSearch, &cfg);
+            std::hint::black_box(r.evaluations);
+        });
+    obs::set_enabled(false);
+    let journaled = obs::journal().accepted();
+    obs::journal().clear();
+    let overhead_rel = on_mean / off_mean.max(1e-12) - 1.0;
+    bench_annotate("OBS1 S1 random search, tracing on", "overhead_rel", overhead_rel);
+    bench_annotate("OBS1 S1 random search, tracing on", "journaled_events", journaled as f64);
+    println!(
+        "OBS1 tracing overhead: {:+.1}% ({journaled} events journaled over 5 traced runs)",
+        overhead_rel * 100.0
+    );
+    anyhow::ensure!(journaled > 0, "tracing-on runs must journal events");
+    anyhow::ensure!(
+        on_mean <= off_mean * 1.05 + 0.02,
+        "OBS1 overhead gate: tracing on {on_mean:.4}s vs off {off_mean:.4}s (>5% + 20ms)"
+    );
 
     // CI bench-regression hook: dump the records when XR_DSE_BENCH_JSON
     // names a path (no-op otherwise).

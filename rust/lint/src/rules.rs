@@ -10,9 +10,10 @@
 //!   nondeterministic, so anything it feeds stops being bitwise-replayable.
 //!   Probe-only access (`get`/`insert`/`contains`) is fine and common.
 //! - **D2** — no `Instant::now`/`SystemTime`/`thread_rng`/`rand::` outside
-//!   the coordinator's real-time thread runner and `util::benchkit`:
-//!   modeled time flows through `Frame::sched_s`/the virtual clock,
-//!   randomness through seeded `util::Prng`.
+//!   the coordinator's real-time thread runner, `util::benchkit`, and the
+//!   observability clock shim (`obs/clock.rs`): modeled time flows through
+//!   `Frame::sched_s`/the virtual clock, randomness through seeded
+//!   `util::Prng`.
 //! - **D3** — float ordering must be total (`f64::total_cmp`, never a
 //!   `partial_cmp` comparator), and result-path float reductions must stay
 //!   sequential (no `.par_*` re-association).
@@ -75,10 +76,14 @@ fn in_result_path(path: &str) -> bool {
     ["/eval/", "/search/", "/fleet/", "/report/"].iter().any(|s| path.contains(s))
 }
 
-/// D2's sanctioned homes: the real-time thread runner (coordinator) and
-/// the bench timing substrate.
+/// D2's sanctioned homes: the real-time thread runner (coordinator), the
+/// bench timing substrate, and the observability clock shim — wall time
+/// enters the obs layer only through `obs/clock.rs`, so `obs/journal.rs`
+/// etc. stay under the rule.
 fn d2_exempt(path: &str) -> bool {
-    path.contains("/coordinator/") || path.ends_with("util/benchkit.rs")
+    path.contains("/coordinator/")
+        || path.ends_with("util/benchkit.rs")
+        || path.ends_with("obs/clock.rs")
 }
 
 const ITER_METHODS: &[&str] = &[

@@ -1,0 +1,26 @@
+//! D2 observability fixture: the wall-clock shim idiom from the obs
+//! layer. Linted under the `rust/src/obs/clock.rs` label nothing below
+//! may flag (the sanctioned home); under any other `rust/src/obs/...`
+//! label every wall-clock site must flag — the rest of the obs layer
+//! stamps events with modeled/logical time only.
+
+use std::time::Instant;
+
+/// Seconds since the process-wide epoch (the one sanctioned wall read).
+pub fn wall_now_s(epoch: Instant) -> f64 {
+    Instant::now().duration_since(epoch).as_secs_f64() // wall clock
+}
+
+pub struct WallSpan {
+    t0: Instant,
+}
+
+impl WallSpan {
+    pub fn begin() -> WallSpan {
+        WallSpan { t0: Instant::now() } // wall clock
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+}

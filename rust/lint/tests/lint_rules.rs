@@ -16,6 +16,7 @@ const D1_POS: &str = include_str!("fixtures/d1_pos.rs");
 const D1_NEG: &str = include_str!("fixtures/d1_neg.rs");
 const D2_POS: &str = include_str!("fixtures/d2_pos.rs");
 const D2_NEG: &str = include_str!("fixtures/d2_neg.rs");
+const D2_OBS: &str = include_str!("fixtures/d2_obs.rs");
 const D3_POS: &str = include_str!("fixtures/d3_pos.rs");
 const D3_NEG: &str = include_str!("fixtures/d3_neg.rs");
 const U1_POS: &str = include_str!("fixtures/u1_pos.rs");
@@ -86,6 +87,24 @@ fn d2_exempts_the_real_time_runner_and_benchkit() {
         let diags = lint_source(label, D2_POS);
         assert!(lines_for(&diags, "D2").is_empty(), "{label}: {diags:#?}");
     }
+}
+
+#[test]
+fn d2_sanctions_the_obs_clock_shim_but_not_the_rest_of_obs() {
+    // The wall-clock shim idiom is legal only in its sanctioned home.
+    let diags = lint_source("rust/src/obs/clock.rs", D2_OBS);
+    assert!(lines_for(&diags, "D2").is_empty(), "diags: {diags:#?}");
+    // The same source anywhere else in the obs layer flags every
+    // `Instant::now` site — journals/metrics carry modeled time only.
+    let diags = lint_source("rust/src/obs/journal.rs", D2_OBS);
+    assert_eq!(
+        lines_for(&diags, "D2"),
+        vec![
+            line_of(D2_OBS, "Instant::now().duration_since"),
+            line_of(D2_OBS, "t0: Instant::now()"),
+        ],
+        "diags: {diags:#?}"
+    );
 }
 
 #[test]

@@ -1,35 +1,80 @@
 //! Serving metrics: latency distributions, throughput, drop accounting.
+//!
+//! Since the unified observability layer landed, `WorkerStats` is a thin
+//! view over [`obs::Series`](crate::obs::Series) on a per-worker
+//! [`MetricsRegistry`] — the bespoke `Vec<f64>` pair it used to carry is
+//! gone, and the summaries come from the exact same samples the registry
+//! snapshots (`serve.exec_s` / `serve.queue_s`, U1-suffixed seconds). The
+//! pinned `record_and_summarize` test is the parity gate: its expected
+//! means predate the port.
 
+use std::sync::Arc;
+
+use crate::obs::{MetricsRegistry, Series};
 use crate::util::stats::{summarize, Summary};
 
-/// Stats collected by the inference worker thread.
-#[derive(Debug, Clone, Default)]
+/// Stats collected by the inference worker thread: exec and queue-wait
+/// latency series (`serve.exec_s` / `serve.queue_s`) on a private
+/// registry, so concurrent workers never interleave samples.
+#[derive(Debug)]
 pub struct WorkerStats {
-    pub exec_s: Vec<f64>,
-    pub queue_s: Vec<f64>,
+    metrics: Arc<MetricsRegistry>,
+    exec: Arc<Series>,
+    queue: Arc<Series>,
+}
+
+impl Default for WorkerStats {
+    fn default() -> WorkerStats {
+        let metrics = Arc::new(MetricsRegistry::new());
+        let exec = metrics.series("serve.exec_s");
+        let queue = metrics.series("serve.queue_s");
+        WorkerStats { metrics, exec, queue }
+    }
+}
+
+impl Clone for WorkerStats {
+    /// Deep copy: the clone gets its own registry and samples (the old
+    /// derive copied the sample vectors; sharing handles would silently
+    /// alias two workers' telemetry).
+    fn clone(&self) -> WorkerStats {
+        let c = WorkerStats::default();
+        for v in self.exec.samples() {
+            c.exec.record(v);
+        }
+        for v in self.queue.samples() {
+            c.queue.record(v);
+        }
+        c
+    }
 }
 
 impl WorkerStats {
-    pub fn record(&mut self, exec_s: f64, queue_s: f64) {
-        self.exec_s.push(exec_s);
-        self.queue_s.push(queue_s);
+    pub fn record(&self, exec_s: f64, queue_s: f64) {
+        self.exec.record(exec_s);
+        self.queue.record(queue_s);
     }
 
     pub fn count(&self) -> usize {
-        self.exec_s.len()
+        self.exec.count()
+    }
+
+    /// The backing registry (deterministic snapshots for `--metrics`).
+    pub fn metrics(&self) -> &MetricsRegistry {
+        &self.metrics
     }
 
     pub fn exec_summary(&self) -> Summary {
-        summarize(&self.exec_s)
+        self.exec.summary()
     }
 
     pub fn queue_summary(&self) -> Summary {
-        summarize(&self.queue_s)
+        self.queue.summary()
     }
 
     /// End-to-end (queue wait + execution) latency summary.
     pub fn e2e_summary(&self) -> Summary {
-        let e2e: Vec<f64> = self.exec_s.iter().zip(&self.queue_s).map(|(e, q)| e + q).collect();
+        let (exec, queue) = (self.exec.samples(), self.queue.samples());
+        let e2e: Vec<f64> = exec.iter().zip(&queue).map(|(e, q)| e + q).collect();
         summarize(&e2e)
     }
 
@@ -77,7 +122,7 @@ mod tests {
 
     #[test]
     fn record_and_summarize() {
-        let mut w = WorkerStats::default();
+        let w = WorkerStats::default();
         for i in 1..=100 {
             w.record(i as f64 * 1e-3, 0.5e-3);
         }
@@ -90,5 +135,18 @@ mod tests {
         let r = w.render("t", 10.0, 2);
         assert!(r.contains("throughput: 10.00 IPS"));
         assert!(r.contains("dropped 2"));
+    }
+
+    #[test]
+    fn clone_is_deep_and_registry_sees_the_series() {
+        let w = WorkerStats::default();
+        w.record(1e-3, 2e-3);
+        let c = w.clone();
+        w.record(5e-3, 5e-3);
+        assert_eq!(w.count(), 2);
+        assert_eq!(c.count(), 1, "clone must not share samples");
+        let snap = w.metrics().snapshot();
+        assert_eq!(snap.series["serve.exec_s"].count, 2);
+        assert_eq!(snap.series["serve.queue_s"].count, 2);
     }
 }

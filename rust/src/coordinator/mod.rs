@@ -27,6 +27,7 @@ use std::path::PathBuf;
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
+use crate::obs::{self, Stamp};
 use crate::runtime::{ModelExec, Runtime, SyntheticExec};
 use gating::GateController;
 use queue::DropOldest;
@@ -168,8 +169,8 @@ impl Coordinator {
         let synthetic = matches!(resolved, WorkerBackend::Synthetic);
         let mut streams = Vec::with_capacity(cfgs.len());
         let mut readies = Vec::with_capacity(cfgs.len());
-        for cfg in cfgs {
-            let (handle, ready) = spawn_stream(&resolved, cfg)?;
+        for (lane, cfg) in cfgs.into_iter().enumerate() {
+            let (handle, ready) = spawn_stream(&resolved, cfg, lane as u32)?;
             streams.push(handle);
             readies.push(ready);
         }
@@ -248,6 +249,7 @@ impl Coordinator {
         for s in &self.streams {
             s.queue.close();
         }
+        let dropped: u64 = self.streams.iter().map(|s| s.queue.dropped()).sum();
         let mut out = Vec::with_capacity(self.streams.len());
         for s in self.streams.iter_mut() {
             if let Some(h) = s.worker.take() {
@@ -257,6 +259,10 @@ impl Coordinator {
                 out.push(joined?);
             }
         }
+        // Mirror the run's tallies into the global registry (the hooks
+        // gate on obs::enabled) so `--metrics` absorbs serving telemetry.
+        obs::count("serve.frames.served", out.iter().map(|o| o.served).sum());
+        obs::count("serve.frames.dropped", dropped);
         Ok(out)
     }
 
@@ -310,6 +316,7 @@ fn resolve_backend(backend: Backend, cfgs: &[StreamConfig]) -> crate::Result<Wor
 fn spawn_stream(
     backend: &WorkerBackend,
     cfg: StreamConfig,
+    lane: u32,
 ) -> crate::Result<(StreamHandle, mpsc::Receiver<crate::Result<()>>)> {
     let queue: Arc<DropOldest<Frame>> = Arc::new(DropOldest::new(cfg.queue_depth));
     let (res_tx, res_rx) = mpsc::channel::<InferenceResult>();
@@ -345,7 +352,7 @@ fn spawn_stream(
                     return Err(e);
                 }
             };
-            let mut stats = metrics::WorkerStats::default();
+            let stats = metrics::WorkerStats::default();
             let mut ledger = cfg.ledger;
             let mut served = 0u64;
             while let Some(frame) = worker_queue.pop() {
@@ -364,6 +371,19 @@ fn spawn_stream(
                 let exec_s = picked.elapsed().as_secs_f64();
                 stats.record(exec_s, queue_s);
                 served += 1;
+                // Serve span anchored at the frame's *modeled* capture
+                // instant (so traces line up with the virtual-clock
+                // replays); the duration is the measured exec wall time —
+                // the coordinator is a D2-sanctioned wall-clock home.
+                obs::span(
+                    Stamp::modeled(frame.sched_s),
+                    exec_s,
+                    "serve",
+                    "serve.frame",
+                    lane,
+                    0,
+                    &[("queue_s", queue_s), ("exec_s", exec_s)],
+                );
                 if let Some(g) = ledger.as_mut() {
                     // Modeled clock: idle out to this frame's scheduled
                     // capture instant, then charge the inference event —

@@ -18,7 +18,7 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Mutex, OnceLock};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use super::context::compute_energy_pj;
 use super::{DeviceAssignment, EvalContext, MacroSet};
@@ -26,6 +26,7 @@ use crate::arch::{Arch, BufferLevel, LevelKind, MemFlavor};
 use crate::energy::EnergyBreakdown;
 use crate::mapping::{map_network, LevelAccess, NetworkMap};
 use crate::mem::{MacroModel, MacroSpec};
+use crate::obs::{self, Counter, MetricsRegistry, Stamp};
 use crate::power::PowerModel;
 use crate::tech::{Device, Knobs, Node};
 use crate::workload::Network;
@@ -180,13 +181,25 @@ impl EngineEntry {
 /// widening the key.
 type MacroKey = (usize, usize, usize, Device, Node);
 
-/// The engine-wide macro-model memo plus its hit/miss counters (relaxed
+/// The engine-wide macro-model memo plus its hit/miss counters — the
+/// counters live on the engine's [`MetricsRegistry`] (`eval.macro.hit` /
+/// `eval.macro.miss`), held here as lock-free `Arc` handles (relaxed
 /// atomics: the counts are telemetry, not synchronization).
-#[derive(Default)]
 struct MacroCache {
     models: Mutex<HashMap<MacroKey, MacroModel>>,
-    hits: AtomicUsize,
-    misses: AtomicUsize,
+    hits: Arc<Counter>,
+    misses: Arc<Counter>,
+}
+
+impl MacroCache {
+    /// A cold memo whose telemetry registers on `metrics`.
+    fn on(metrics: &MetricsRegistry) -> MacroCache {
+        MacroCache {
+            models: Mutex::new(HashMap::new()),
+            hits: metrics.counter("eval.macro.hit"),
+            misses: metrics.counter("eval.macro.miss"),
+        }
+    }
 }
 
 /// The evaluation engine: every (arch × net) pair mapped once at
@@ -207,6 +220,11 @@ pub struct Engine {
     /// identity (knobs implicit — see [`MacroKey`]). `MacroModel` is
     /// `Copy`, so a hit is a 96-byte copy instead of a CACTI-lite build.
     macros: MacroCache,
+    /// Per-engine metrics registry: `eval.macro.{hit,miss}` live here, and
+    /// the search layer's [`EvalService`](crate::search::EvalService)
+    /// registers its `search.map.{hit,miss}` on the same registry — one
+    /// deterministic snapshot covers a whole search run's cache telemetry.
+    metrics: Arc<MetricsRegistry>,
 }
 
 impl Engine {
@@ -246,7 +264,9 @@ impl Engine {
             let kb = (entries[b].arch.name.as_str(), entries[b].map.network.as_str());
             ka.cmp(&kb)
         });
-        Engine { entries, index, knobs: crate::tech::knobs(), macros: MacroCache::default() }
+        let metrics = Arc::new(MetricsRegistry::new());
+        let macros = MacroCache::on(&metrics);
+        Engine { entries, index, knobs: crate::tech::knobs(), macros, metrics }
     }
 
     /// Append an already-mapped (arch, workload) pair to a live engine,
@@ -271,17 +291,30 @@ impl Engine {
     /// knob value instead of mutating `XR_DSE_*` between evaluations.
     /// Resets the macro-model memo — its cached models were built under
     /// the old knobs (the per-entry map aggregates are knob-independent
-    /// and survive).
+    /// and survive). The memo's hit/miss counters restart with it.
     pub fn with_knobs(mut self, knobs: Knobs) -> Engine {
         self.knobs = knobs;
-        self.macros = MacroCache::default();
+        self.macros.models.lock().unwrap().clear();
+        self.macros.hits.reset();
+        self.macros.misses.reset();
         self
     }
 
     /// (hits, misses) of the shared macro-model memo since construction
     /// (or the last [`Engine::with_knobs`] reset).
+    #[deprecated(
+        note = "read the `eval.macro.hit` / `eval.macro.miss` counters from \
+                `Engine::metrics()` instead"
+    )]
     pub fn macro_cache_stats(&self) -> (usize, usize) {
-        (self.macros.hits.load(Ordering::Relaxed), self.macros.misses.load(Ordering::Relaxed))
+        (self.macros.hits.get() as usize, self.macros.misses.get() as usize)
+    }
+
+    /// The engine's metrics registry (macro-memo hit/miss counters, plus
+    /// whatever its owning layers register — see the field docs). Snapshot
+    /// with [`MetricsRegistry::snapshot`] for a deterministic view.
+    pub fn metrics(&self) -> &MetricsRegistry {
+        &self.metrics
     }
 
     /// The calibration knobs this engine evaluates with.
@@ -312,13 +345,13 @@ impl Engine {
     fn macro_model(&self, lvl: &BufferLevel, device: Device, node: Node) -> MacroModel {
         let key = (lvl.capacity_bytes, lvl.bus_bits, lvl.count, device, node);
         if let Some(m) = self.macros.models.lock().unwrap().get(&key) {
-            self.macros.hits.fetch_add(1, Ordering::Relaxed);
+            self.macros.hits.incr();
             return *m;
         }
         // Build outside the lock: models are pure functions of (key,
         // knobs), so two threads racing on the same key insert the same
         // bits.
-        self.macros.misses.fetch_add(1, Ordering::Relaxed);
+        self.macros.misses.incr();
         let m = MacroSpec {
             capacity_bytes: lvl.capacity_bytes,
             bus_bits: lvl.bus_bits,
@@ -422,10 +455,39 @@ impl Engine {
         self.eval_assigned(entry, node, spec.lower(&entry.arch, mram))
     }
 
+    /// [`Engine::eval_coord`] plus its observability span: one
+    /// `eval.assign` event per coordinate, stamped with *logical* time
+    /// (the coordinate's index in the batch — replay-stable across runs
+    /// and worker counts) and the claiming worker as the span's thread.
+    /// While tracing is disabled this is the evaluation plus one relaxed
+    /// atomic load; the journal never feeds anything back into the
+    /// result, so the output is bitwise-identical either way.
+    fn eval_coord_traced(&self, c: &Coord, i: usize, worker: u32) -> DesignPoint {
+        let p = self.eval_coord(c);
+        if obs::enabled() {
+            let (e, node, _, _) = *c;
+            obs::span(
+                Stamp::logical(i as u64),
+                1.0,
+                "eval",
+                "eval.assign",
+                0,
+                worker,
+                &[
+                    ("entry", e as f64),
+                    ("node_nm", node.nm() as f64),
+                    ("energy_pj", p.energy.total_pj()),
+                    ("latency_ns", p.latency_ns),
+                ],
+            );
+        }
+        p
+    }
+
     /// Sequential reference evaluation of a coordinate list (the canonical
     /// ordering every parallel path must reproduce bitwise).
     pub fn eval_coords_seq(&self, coords: &[Coord]) -> Vec<DesignPoint> {
-        coords.iter().map(|c| self.eval_coord(c)).collect()
+        coords.iter().enumerate().map(|(i, c)| self.eval_coord_traced(c, i, 0)).collect()
     }
 
     /// Parallel coordinate evaluation with work stealing: workers claim
@@ -455,14 +517,15 @@ impl Engine {
         let slots: Vec<OnceLock<DesignPoint>> = (0..n).map(|_| OnceLock::new()).collect();
         let cursor = AtomicUsize::new(0);
         std::thread::scope(|s| {
-            for _ in 0..workers {
-                s.spawn(|| loop {
+            for w in 0..workers {
+                let (slots, cursor) = (&slots, &cursor);
+                s.spawn(move || loop {
                     let i = cursor.fetch_add(1, Ordering::Relaxed);
                     if i >= n {
                         break;
                     }
                     // Each claimed index is unique, so the set never races.
-                    let _ = slots[i].set(self.eval_coord(&coords[i]));
+                    let _ = slots[i].set(self.eval_coord_traced(&coords[i], i, w as u32));
                 });
             }
         });

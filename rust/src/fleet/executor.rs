@@ -53,6 +53,7 @@ use std::collections::BinaryHeap;
 use crate::coordinator::gating::GateController;
 use crate::coordinator::queue::Ring;
 use crate::coordinator::sensor::{Arrival, Sensor};
+use crate::obs::{self, Stamp};
 use crate::power::PowerModel;
 use crate::util::prng::Prng;
 
@@ -240,6 +241,19 @@ impl SimStream {
             g.idle((frame.sched_s * 1e9 - g.elapsed_ns).max(0.0));
             g.inference();
         }
+        // Serve span on *modeled* (virtual-clock) time: device as the
+        // trace lane, stream as the thread. One relaxed load when off.
+        if obs::enabled() {
+            obs::span(
+                Stamp::modeled(now_s),
+                self.service_s,
+                "fleet",
+                "fleet.frame.serve",
+                self.device,
+                self.stream,
+                &[("wait_s", now_s - frame.sched_s), ("seq", frame.seq as f64)],
+            );
+        }
         self.in_service = true;
         Event {
             t_bits: time_bits(now_s + self.service_s),
@@ -353,6 +367,16 @@ impl Executor {
                 KIND_ARRIVAL => {
                     let st = &mut self.streams[slot];
                     st.submitted += 1;
+                    if obs::enabled() {
+                        obs::instant(
+                            Stamp::modeled(now_s),
+                            "fleet",
+                            "fleet.frame.arrive",
+                            ev.device,
+                            ev.stream,
+                            &[("seq", ev.seq as f64)],
+                        );
+                    }
                     let frame = Queued { sched_s: now_s, seq: ev.seq };
                     if st.in_service {
                         // Full queue → the Ring evicts (and counts) the
@@ -382,6 +406,22 @@ impl Executor {
             if let Some(g) = st.ledger.as_mut() {
                 g.idle((self.horizon_s * 1e9 - g.elapsed_ns).max(0.0));
             }
+        }
+        // Mirror the run's tallies into the global registry (the hooks
+        // gate on obs::enabled) so `--metrics` absorbs fleet telemetry.
+        if obs::enabled() {
+            let mut submitted = 0u64;
+            let mut served = 0u64;
+            let mut dropped = 0u64;
+            for st in &self.streams {
+                submitted += st.submitted;
+                served += st.served;
+                dropped += st.dropped();
+            }
+            obs::count("fleet.frames.submitted", submitted);
+            obs::count("fleet.frames.served", served);
+            obs::count("fleet.frames.dropped", dropped);
+            obs::count("fleet.events.processed", self.processed);
         }
     }
 

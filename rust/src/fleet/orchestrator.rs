@@ -27,6 +27,7 @@ use crate::arch::{self, Arch, MemFlavor, PeConfig};
 use crate::coordinator::gating::GateController;
 use crate::coordinator::sensor::Arrival;
 use crate::eval::{AssignSpec, Coord, Engine};
+use crate::obs;
 use crate::power::PowerModel;
 use crate::report::{ms, pct, Csv, Table};
 use crate::search::{ArchSynth, SearchResult};
@@ -674,6 +675,13 @@ pub fn run_fleet(spec: &FleetSpec, policy: &mut dyn PlacementPolicy) -> crate::R
             placements.push(Placement { load: li, k, device: pick, seed_index });
             seed_index += 1;
         }
+    }
+    if obs::enabled() {
+        // Placement-level tallies; the executor mirrors the per-frame
+        // counts (`fleet.frames.*`) itself when it runs below.
+        obs::count("fleet.placement.rejected", rejections);
+        obs::count("fleet.placement.placed", placements.len() as u64);
+        obs::gauge("fleet.devices", spec.n_devices as f64);
     }
 
     // Simulate every placed stream on one virtual clock.

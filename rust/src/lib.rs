@@ -45,6 +45,7 @@
 #![cfg_attr(not(test), deny(clippy::float_cmp))]
 
 pub mod util;
+pub mod obs;
 pub mod testkit;
 pub mod workload;
 pub mod arch;

@@ -15,7 +15,12 @@
 //! xr-edge-dse serve   --model detnet --fps 10 --seconds 5  # PJRT serving
 //! xr-edge-dse scenario --preset paper                # multi-stream serving
 //! xr-edge-dse fleet   --devices 8 --streams 64       # fleet placement sim
+//! xr-edge-dse obs     artifacts/trace.json           # summarize a run journal
 //! ```
+//!
+//! Every command takes `--trace <path>` / `--metrics <path>` to write a
+//! Perfetto-loadable Chrome trace (plus a JSONL journal sibling) and the
+//! deterministic metrics snapshot; `obs` reads either back.
 //!
 //! Every analytical command is a [`Query`] over the unified evaluation
 //! engine (`xr_edge_dse::eval`): the command picks its axes (archs × nets
@@ -77,6 +82,8 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "policy", takes_value: true, help: "fleet: round-robin|weighted|least-loaded", default: Some("least-loaded") },
         OptSpec { name: "min-ips", takes_value: true, help: "fleet: per-stream sustained-IPS deployment constraint", default: None },
         OptSpec { name: "from-search", takes_value: false, help: "fleet: deploy a search frontier instead of the paper palette", default: None },
+        OptSpec { name: "trace", takes_value: true, help: "write Chrome trace_events JSON (+ .jsonl journal) here", default: None },
+        OptSpec { name: "metrics", takes_value: true, help: "write the metrics snapshot JSON here (obs: read it)", default: None },
         OptSpec { name: "verbose", takes_value: false, help: "per-layer detail", default: None },
     ]
 }
@@ -109,6 +116,14 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         return Ok(());
     };
     let args = parse(&argv[1..], &specs())?;
+    // `obs` *reads* journal/metrics files; every other command may record
+    // and flush them (declaring a path turns the global journal on).
+    if cmd != "obs" {
+        xr_edge_dse::obs::set_output_paths(
+            args.get("trace").map(std::path::PathBuf::from),
+            args.get("metrics").map(std::path::PathBuf::from),
+        );
+    }
     let node = Node::from_nm(args.get_usize("node")?.unwrap_or(7))?;
     let mram = match args.get("device") {
         Some(d) => Device::from_str(d)?,
@@ -385,10 +400,67 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         "fleet" => {
             fleet_cmd(&args, node, mram)?;
         }
+        "obs" => {
+            obs_cmd(&args)?;
+        }
         "help" | "--help" | "-h" => print_help(),
         other => {
             print_help();
             anyhow::bail!("unknown command '{other}'");
+        }
+    }
+    xr_edge_dse::obs::write_if_requested()?;
+    Ok(())
+}
+
+/// `obs`: summarize a run journal written by `--trace` / `XR_DSE_TRACE`
+/// (Chrome `trace_events` JSON or the JSONL sibling — detected by
+/// content): top spans by self time, per-clock event counts, and cache
+/// hit rates when a `--metrics` snapshot JSON is also given.
+fn obs_cmd(args: &xr_edge_dse::util::cli::Args) -> anyhow::Result<()> {
+    use std::collections::BTreeMap;
+    use xr_edge_dse::obs::{parse_events, span_totals};
+    let Some(path) = args.positional.first() else {
+        anyhow::bail!("usage: xr-edge-dse obs <trace.json|journal.jsonl> [--metrics snapshot.json]");
+    };
+    let events = parse_events(&std::fs::read_to_string(path)?)?;
+    anyhow::ensure!(!events.is_empty(), "no events in {path}");
+
+    let mut t = Table::new(
+        &format!("top spans by self time — {path} ({} events)", events.len()),
+        &["span", "count", "total (ms)", "self (ms)"],
+    );
+    for s in span_totals(&events).iter().take(12) {
+        t.row(vec![
+            s.name.clone(),
+            s.count.to_string(),
+            format!("{:.3}", s.total_s * 1e3),
+            format!("{:.3}", s.self_s * 1e3),
+        ]);
+    }
+    print!("{}", t.render());
+
+    let mut by_clock: BTreeMap<&str, u64> = BTreeMap::new();
+    for e in &events {
+        *by_clock.entry(e.clock.as_str()).or_default() += 1;
+    }
+    let clocks: Vec<String> =
+        by_clock.iter().map(|(c, n)| format!("{c} {n}")).collect();
+    println!("events by clock: {}", clocks.join(", "));
+
+    if let Some(mpath) = args.get("metrics") {
+        let snap = xr_edge_dse::util::json::Json::parse_file(std::path::Path::new(mpath))?;
+        if let Some(counters) = snap.get("counters").as_obj() {
+            for (name, v) in counters {
+                println!("  {name} = {}", v.as_u64().unwrap_or(0));
+            }
+            for base in ["eval.macro", "search.map"] {
+                let hit = snap.get("counters").opt_f64(&format!("{base}.hit"), 0.0);
+                let miss = snap.get("counters").opt_f64(&format!("{base}.miss"), 0.0);
+                if hit + miss > 0.0 {
+                    println!("  {base} hit rate: {}", pct(hit / (hit + miss)));
+                }
+            }
         }
     }
     Ok(())
@@ -721,7 +793,7 @@ fn fleet_cmd(args: &xr_edge_dse::util::cli::Args, node: Node, mram: Device) -> a
 fn print_help() {
     println!(
         "xr-edge-dse — memory-oriented DSE of edge-AI hardware for XR (tinyML'23 reproduction)\n\
-         commands: map | energy | area | ips | edp | fig3d | pareto | hybrid | search | sweep | serve | scenario | fleet | help\n\n{}",
+         commands: map | energy | area | ips | edp | fig3d | pareto | hybrid | search | sweep | serve | scenario | fleet | obs | help\n\n{}",
         usage(&specs())
     );
 }

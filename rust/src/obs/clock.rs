@@ -1,0 +1,183 @@
+//! Clock taxonomy for the observability layer (see DESIGN.md
+//! §Observability).
+//!
+//! Three clocks exist, and only the first two may appear on result paths:
+//!
+//! - **Modeled** — virtual time: `Frame::sched_s`, the fleet executor's
+//!   event time. Deterministic per seed; identical across runs and thread
+//!   counts.
+//! - **Logical** — a deterministic tick where no modeled clock exists
+//!   (search rounds, grid coordinate indices). Also replay-stable.
+//! - **Wall** — real elapsed time. The *only* sanctioned wall-clock read
+//!   in `obs/` is [`wall_now_s`] in this file: xr-dse-lint rule D2
+//!   exempts `obs/clock.rs` exactly so that every other `obs/` file (and
+//!   every result path recording through the journal) stays provably free
+//!   of `Instant::now`.
+//!
+//! Spans on result paths carry [`Stamp::Modeled`] or [`Stamp::Logical`];
+//! wall stamps are minted only here (or in the coordinator/benchkit homes
+//! D2 already sanctions) and are tagged so consumers never mistake them
+//! for replayable time.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// A point on one of the three clocks. The tag travels with the value all
+/// the way into the emitted journal (`"clock"` arg), so a Perfetto trace
+/// never silently mixes replayable and wall time on one lane.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Stamp {
+    /// Virtual time, seconds — `Frame::sched_s` / executor event time.
+    Modeled { t_s: f64 },
+    /// Deterministic sequence tick (round index, coordinate index).
+    Logical { tick: u64 },
+    /// Real elapsed seconds since the process [`epoch`].
+    Wall { t_s: f64 },
+}
+
+impl Stamp {
+    pub fn modeled(t_s: f64) -> Stamp {
+        Stamp::Modeled { t_s }
+    }
+
+    pub fn logical(tick: u64) -> Stamp {
+        Stamp::Logical { tick }
+    }
+
+    /// The stamp's position on its own clock, in seconds (logical ticks
+    /// count as whole seconds so traces render with visible extent).
+    pub fn t_s(&self) -> f64 {
+        match self {
+            Stamp::Modeled { t_s } | Stamp::Wall { t_s } => *t_s,
+            Stamp::Logical { tick } => *tick as f64,
+        }
+    }
+
+    /// Which clock minted the stamp: `"modeled" | "logical" | "wall"`.
+    pub fn clock(&self) -> &'static str {
+        match self {
+            Stamp::Modeled { .. } => "modeled",
+            Stamp::Logical { .. } => "logical",
+            Stamp::Wall { .. } => "wall",
+        }
+    }
+}
+
+/// Deterministic tick source for call sites with no modeled clock — each
+/// `next()` mints the following [`Stamp::Logical`].
+#[derive(Debug, Default)]
+pub struct LogicalClock {
+    tick: std::sync::atomic::AtomicU64,
+}
+
+impl LogicalClock {
+    pub fn new() -> LogicalClock {
+        LogicalClock::default()
+    }
+
+    pub fn next(&self) -> Stamp {
+        Stamp::Logical {
+            tick: self.tick.fetch_add(1, std::sync::atomic::Ordering::Relaxed),
+        }
+    }
+}
+
+/// Process-wide wall epoch: all wall stamps are offsets from the first
+/// wall-clock read, so one run's wall lane starts near zero.
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Seconds of real time since the process epoch — **the** sanctioned
+/// wall-clock read of the obs layer (D2-exempt home; see module docs).
+pub fn wall_now_s() -> f64 {
+    epoch().elapsed().as_secs_f64()
+}
+
+/// Wall-clock interval reader for the D2-sanctioned homes (CLI, benches,
+/// coordinator): offsets from the process epoch, never an `Instant` in
+/// caller code.
+#[derive(Debug, Clone, Copy)]
+pub struct WallClock {
+    t0_s: f64,
+}
+
+impl WallClock {
+    pub fn start() -> WallClock {
+        WallClock { t0_s: wall_now_s() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        wall_now_s() - self.t0_s
+    }
+
+    pub fn stamp(&self) -> Stamp {
+        Stamp::Wall { t_s: self.t0_s }
+    }
+}
+
+/// Drop-guard wall span: records a `Stamp::Wall` event into the global
+/// journal when dropped (a no-op while tracing is disabled). This is the
+/// `span!`-style guard for wall-clock phases — CLI command dispatch,
+/// bench sections — where the duration is genuinely wall time.
+#[derive(Debug)]
+pub struct WallSpan {
+    t0_s: f64,
+    cat: &'static str,
+    name: &'static str,
+    lane: u32,
+    worker: u32,
+}
+
+impl WallSpan {
+    pub fn begin(cat: &'static str, name: &'static str) -> WallSpan {
+        WallSpan { t0_s: wall_now_s(), cat, name, lane: 0, worker: 0 }
+    }
+}
+
+impl Drop for WallSpan {
+    fn drop(&mut self) {
+        crate::obs::span(
+            Stamp::Wall { t_s: self.t0_s },
+            wall_now_s() - self.t0_s,
+            self.cat,
+            self.name,
+            self.lane,
+            self.worker,
+            &[],
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stamps_carry_their_clock() {
+        assert_eq!(Stamp::modeled(1.5).clock(), "modeled");
+        assert_eq!(Stamp::logical(3).clock(), "logical");
+        assert_eq!((Stamp::Wall { t_s: 0.25 }).clock(), "wall");
+        assert_eq!(Stamp::modeled(1.5).t_s(), 1.5);
+        assert_eq!(Stamp::logical(3).t_s(), 3.0);
+    }
+
+    #[test]
+    fn logical_clock_ticks_monotonically() {
+        let c = LogicalClock::new();
+        assert_eq!(c.next(), Stamp::logical(0));
+        assert_eq!(c.next(), Stamp::logical(1));
+        assert_eq!(c.next(), Stamp::logical(2));
+    }
+
+    #[test]
+    fn wall_clock_is_monotone_nonnegative() {
+        let w = WallClock::start();
+        let a = w.elapsed_s();
+        let b = w.elapsed_s();
+        assert!(a >= 0.0);
+        assert!(b >= a);
+        assert!(wall_now_s() >= 0.0);
+    }
+}

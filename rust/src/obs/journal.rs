@@ -1,0 +1,599 @@
+//! Span-based event journal: bounded ring buffer, deterministic sampling,
+//! Chrome `trace_events` + JSONL emitters, and the journal summarizer
+//! behind `xr-edge-dse obs`.
+//!
+//! Determinism contract: recording *order* is nondeterministic under work
+//! stealing, so the journal is only ever read through
+//! [`Journal::events_sorted`] / [`Journal::take_sorted`], which impose a
+//! total order over `(stamp, clock, cat, name, lane, dur, args)` with the
+//! worker id as the final tiebreaker. Result-path spans carry modeled or
+//! logical stamps, so two runs of the same seed — at any worker count —
+//! sort to the same trace modulo the worker column. The sampling knob
+//! hashes event identity (never arrival order) for the same reason.
+
+use std::cmp::Ordering as CmpOrd;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::clock::Stamp;
+use crate::util::json::Json;
+
+/// Default ring capacity of the global journal (events).
+pub const DEFAULT_CAPACITY: usize = 1 << 16;
+
+/// One recorded span (or instant, when `dur_s == 0`). Args are numeric
+/// key/value pairs — static keys keep the hot path allocation-light.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    pub stamp: Stamp,
+    /// Span length on the stamp's own clock; 0 = instant event.
+    pub dur_s: f64,
+    /// Layer tag: `eval` | `search` | `fleet` | `serve` | `cli`.
+    pub cat: &'static str,
+    /// `layer.noun.verb` span name (DESIGN.md §Observability).
+    pub name: &'static str,
+    /// Perfetto `pid` analog — device id in fleet traces, 0 elsewhere.
+    pub lane: u32,
+    /// Perfetto `tid` analog — worker / stream index. Excluded from the
+    /// deterministic sort order (work stealing assigns it arbitrarily).
+    pub worker: u32,
+    pub args: Vec<(&'static str, f64)>,
+}
+
+impl Event {
+    pub fn instant(
+        stamp: Stamp,
+        cat: &'static str,
+        name: &'static str,
+        lane: u32,
+        worker: u32,
+        args: &[(&'static str, f64)],
+    ) -> Event {
+        Event::span(stamp, 0.0, cat, name, lane, worker, args)
+    }
+
+    pub fn span(
+        stamp: Stamp,
+        dur_s: f64,
+        cat: &'static str,
+        name: &'static str,
+        lane: u32,
+        worker: u32,
+        args: &[(&'static str, f64)],
+    ) -> Event {
+        Event { stamp, dur_s, cat, name, lane, worker, args: args.to_vec() }
+    }
+}
+
+/// Total order over everything except `worker` (final tiebreaker only) —
+/// see the module docs for why the worker id must not influence order.
+fn cmp_events(a: &Event, b: &Event) -> CmpOrd {
+    let key = |e: &Event| (e.stamp.t_s().to_bits(), e.stamp.clock(), e.cat, e.name, e.lane);
+    key(a)
+        .cmp(&key(b))
+        .then_with(|| a.dur_s.total_cmp(&b.dur_s))
+        .then_with(|| {
+            let ka: Vec<(&str, u64)> = a.args.iter().map(|(k, v)| (*k, v.to_bits())).collect();
+            let kb: Vec<(&str, u64)> = b.args.iter().map(|(k, v)| (*k, v.to_bits())).collect();
+            ka.cmp(&kb)
+        })
+        .then_with(|| a.worker.cmp(&b.worker))
+}
+
+/// FNV-1a over the event's identity (name, cat, stamp, lane) — the
+/// sampling hash. Arrival-order-free, so sampled traces stay
+/// worker-count-invariant.
+fn sample_hash(ev: &Event) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    };
+    eat(ev.name.as_bytes());
+    eat(ev.cat.as_bytes());
+    eat(&ev.stamp.t_s().to_bits().to_le_bytes());
+    eat(&ev.lane.to_le_bytes());
+    h
+}
+
+#[derive(Debug, Default)]
+struct Ring {
+    buf: Vec<Event>,
+    cap: usize,
+    /// Next overwrite position once `buf.len() == cap`.
+    head: usize,
+    /// Events evicted by ring overflow.
+    overwritten: u64,
+    /// Events accepted into the ring (pre-eviction).
+    accepted: u64,
+}
+
+impl Ring {
+    fn push(&mut self, ev: Event) {
+        self.accepted += 1;
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else if self.cap > 0 {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.cap;
+            self.overwritten += 1;
+        } else {
+            self.overwritten += 1;
+        }
+    }
+
+    /// Contents in arrival order (oldest surviving event first).
+    fn drain_in_order(&mut self) -> Vec<Event> {
+        let head = self.head;
+        let mut buf = std::mem::take(&mut self.buf);
+        buf.rotate_left(head);
+        self.head = 0;
+        buf
+    }
+}
+
+/// The journal: an enable flag, a sampling knob, and a bounded ring of
+/// [`Event`]s. One global instance lives behind [`crate::obs::journal`];
+/// tests may instantiate their own.
+#[derive(Debug)]
+pub struct Journal {
+    enabled: AtomicBool,
+    /// Record one event per `sample_period` by identity hash (1 = all).
+    sample_period: AtomicU64,
+    /// Events skipped by the sampling knob.
+    sampled_out: AtomicU64,
+    ring: Mutex<Ring>,
+}
+
+impl Default for Journal {
+    fn default() -> Journal {
+        Journal::with_capacity(DEFAULT_CAPACITY)
+    }
+}
+
+impl Journal {
+    pub fn with_capacity(cap: usize) -> Journal {
+        Journal {
+            enabled: AtomicBool::new(false),
+            sample_period: AtomicU64::new(1),
+            sampled_out: AtomicU64::new(0),
+            ring: Mutex::new(Ring { cap, ..Ring::default() }),
+        }
+    }
+
+    /// The disabled check every record pays: one relaxed load.
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Keep one event in `period` (by identity hash; 0/1 = keep all).
+    pub fn set_sample_period(&self, period: u64) {
+        self.sample_period.store(period.max(1), Ordering::Relaxed);
+    }
+
+    /// Resize the ring (drops buffered events).
+    pub fn set_capacity(&self, cap: usize) {
+        let mut r = self.ring.lock().unwrap();
+        *r = Ring { cap, ..Ring::default() };
+    }
+
+    pub fn record(&self, ev: Event) {
+        if !self.enabled() {
+            return;
+        }
+        let period = self.sample_period.load(Ordering::Relaxed);
+        if period > 1 && sample_hash(&ev) % period != 0 {
+            self.sampled_out.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        self.ring.lock().unwrap().push(ev);
+    }
+
+    /// Buffered event count.
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events accepted into the ring since the last clear (including any
+    /// later overwritten).
+    pub fn accepted(&self) -> u64 {
+        self.ring.lock().unwrap().accepted
+    }
+
+    /// Events lost to ring overflow — the overflow accounting surfaced in
+    /// `obs` summaries so a truncated trace is never mistaken for a
+    /// complete one.
+    pub fn overwritten(&self) -> u64 {
+        self.ring.lock().unwrap().overwritten
+    }
+
+    /// Events skipped by the sampling knob.
+    pub fn sampled_out(&self) -> u64 {
+        self.sampled_out.load(Ordering::Relaxed)
+    }
+
+    pub fn clear(&self) {
+        let mut r = self.ring.lock().unwrap();
+        let cap = r.cap;
+        *r = Ring { cap, ..Ring::default() };
+        self.sampled_out.store(0, Ordering::Relaxed);
+    }
+
+    /// Deterministically-ordered copy of the buffered events.
+    pub fn events_sorted(&self) -> Vec<Event> {
+        let mut evs = {
+            let r = self.ring.lock().unwrap();
+            let mut copy = r.buf.clone();
+            copy.rotate_left(r.head);
+            copy
+        };
+        evs.sort_by(cmp_events);
+        evs
+    }
+
+    /// Drain the ring, returning the deterministically-ordered trace.
+    pub fn take_sorted(&self) -> Vec<Event> {
+        let mut evs = self.ring.lock().unwrap().drain_in_order();
+        evs.sort_by(cmp_events);
+        evs
+    }
+}
+
+// ---- emitters -----------------------------------------------------------
+
+/// Chrome `trace_events` document (Perfetto-loadable): every event is a
+/// complete (`"ph": "X"`) event with microsecond `ts`/`dur`, `pid` =
+/// lane, `tid` = worker, and the minting clock recorded in `args.clock`.
+pub fn chrome_trace(events: &[Event]) -> Json {
+    let evs = events
+        .iter()
+        .map(|e| {
+            let mut args: BTreeMap<String, Json> = e
+                .args
+                .iter()
+                .map(|(k, v)| (k.to_string(), Json::num(*v)))
+                .collect();
+            args.insert("clock".to_string(), Json::str(e.stamp.clock()));
+            Json::obj(vec![
+                ("name", Json::str(e.name)),
+                ("cat", Json::str(e.cat)),
+                ("ph", Json::str("X")),
+                ("ts", Json::num(e.stamp.t_s() * 1e6)),
+                ("dur", Json::num(e.dur_s * 1e6)),
+                ("pid", Json::num(e.lane as f64)),
+                ("tid", Json::num(e.worker as f64)),
+                ("args", Json::Obj(args)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("displayTimeUnit", Json::str("ms")),
+        ("traceEvents", Json::Arr(evs)),
+    ])
+}
+
+/// JSONL run journal: one compact JSON object per line, keys sorted —
+/// greppable and diff-stable.
+pub fn jsonl(events: &[Event]) -> String {
+    let mut out = String::new();
+    for e in events {
+        let args: BTreeMap<String, Json> =
+            e.args.iter().map(|(k, v)| (k.to_string(), Json::num(*v))).collect();
+        let line = Json::obj(vec![
+            ("t_s", Json::num(e.stamp.t_s())),
+            ("dur_s", Json::num(e.dur_s)),
+            ("clock", Json::str(e.stamp.clock())),
+            ("cat", Json::str(e.cat)),
+            ("name", Json::str(e.name)),
+            ("lane", Json::num(e.lane as f64)),
+            ("worker", Json::num(e.worker as f64)),
+            ("args", Json::Obj(args)),
+        ]);
+        out.push_str(&line.to_string());
+        out.push('\n');
+    }
+    out
+}
+
+// ---- parsing + summarization (the `obs` command) ------------------------
+
+/// An event read back from a journal file (owned strings — the parsing
+/// side of [`Event`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct OwnedEvent {
+    pub t_s: f64,
+    pub dur_s: f64,
+    pub clock: String,
+    pub cat: String,
+    pub name: String,
+    pub lane: u64,
+    pub worker: u64,
+}
+
+/// Parse a journal file: Chrome `trace_events` JSON (as written by
+/// `--trace`) or the JSONL run journal — detected by content.
+pub fn parse_events(text: &str) -> crate::Result<Vec<OwnedEvent>> {
+    let trimmed = text.trim_start();
+    if trimmed.starts_with('{') {
+        // A whole-file parse that exposes `traceEvents` is a Chrome trace;
+        // anything else (including a one-line JSONL file) falls through.
+        if let Ok(doc) = Json::parse(text) {
+            if let Some(evs) = doc.get("traceEvents").as_arr() {
+                return evs.iter().map(chrome_event).collect();
+            }
+        }
+    }
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let v = Json::parse(line)
+            .map_err(|e| anyhow::anyhow!("journal line {}: {e}", i + 1))?;
+        out.push(OwnedEvent {
+            t_s: v.req_f64("t_s")?,
+            dur_s: v.req_f64("dur_s")?,
+            clock: v.req_str("clock")?.to_string(),
+            cat: v.req_str("cat")?.to_string(),
+            name: v.req_str("name")?.to_string(),
+            lane: v.req_f64("lane")? as u64,
+            worker: v.req_f64("worker")? as u64,
+        });
+    }
+    Ok(out)
+}
+
+fn chrome_event(v: &Json) -> crate::Result<OwnedEvent> {
+    Ok(OwnedEvent {
+        t_s: v.req_f64("ts")? / 1e6,
+        dur_s: v.opt_f64("dur", 0.0) / 1e6,
+        clock: v.get("args").get("clock").as_str().unwrap_or("wall").to_string(),
+        cat: v.req_str("cat")?.to_string(),
+        name: v.req_str("name")?.to_string(),
+        lane: v.req_f64("pid")? as u64,
+        worker: v.req_f64("tid")? as u64,
+    })
+}
+
+/// Per-span-name totals over a parsed journal: occurrence count, total
+/// span time, and *self* time (total minus time covered by nested spans
+/// on the same `(clock, lane, worker)` timeline).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanTotals {
+    pub name: String,
+    pub count: u64,
+    pub total_s: f64,
+    pub self_s: f64,
+}
+
+/// Aggregate [`SpanTotals`] per name, sorted by self time descending
+/// (name-ascending tiebreak) — the "top spans" table of `obs`. Spans are
+/// assumed properly nested per timeline (guards can only nest); a
+/// partially-overlapping pair is treated as nested under the earlier span.
+pub fn span_totals(events: &[OwnedEvent]) -> Vec<SpanTotals> {
+    // Group spans per independent timeline; nesting only makes sense on
+    // one clock of one lane/worker.
+    let mut lanes: BTreeMap<(&str, u64, u64), Vec<&OwnedEvent>> = BTreeMap::new();
+    for e in events {
+        lanes.entry((e.clock.as_str(), e.lane, e.worker)).or_default().push(e);
+    }
+    let mut totals: BTreeMap<String, SpanTotals> = BTreeMap::new();
+    for (_, mut evs) in lanes {
+        evs.sort_by(|a, b| a.t_s.total_cmp(&b.t_s).then(b.dur_s.total_cmp(&a.dur_s)));
+        // Open spans on this timeline: (start_s, end_s, name, child_s).
+        let mut stack: Vec<(f64, f64, &str, f64)> = Vec::new();
+        for e in &evs {
+            loop {
+                match stack.last() {
+                    Some(&(_, end_s, _, _)) if e.t_s >= end_s => {
+                        let (start_s, end_s, name, child_s) = stack.pop().unwrap();
+                        close_span(&mut totals, &mut stack, end_s - start_s, name, child_s);
+                    }
+                    _ => break,
+                }
+            }
+            let t = totals.entry(e.name.clone()).or_insert_with(|| SpanTotals {
+                name: e.name.clone(),
+                count: 0,
+                total_s: 0.0,
+                self_s: 0.0,
+            });
+            t.count += 1;
+            t.total_s += e.dur_s;
+            if e.dur_s > 0.0 {
+                stack.push((e.t_s, e.t_s + e.dur_s, e.name.as_str(), 0.0));
+            }
+        }
+        while let Some((start_s, end_s, name, child_s)) = stack.pop() {
+            close_span(&mut totals, &mut stack, end_s - start_s, name, child_s);
+        }
+    }
+    let mut out: Vec<SpanTotals> = totals.into_values().collect();
+    out.sort_by(|a, b| b.self_s.total_cmp(&a.self_s).then_with(|| a.name.cmp(&b.name)));
+    out
+}
+
+/// Close one span: its self time is its duration minus its children's
+/// coverage, and its full duration counts against the parent's children.
+fn close_span(
+    totals: &mut BTreeMap<String, SpanTotals>,
+    stack: &mut Vec<(f64, f64, &str, f64)>,
+    dur_s: f64,
+    name: &str,
+    child_s: f64,
+) {
+    if let Some(t) = totals.get_mut(name) {
+        t.self_s += dur_s - child_s;
+    }
+    if let Some(parent) = stack.last_mut() {
+        parent.3 += dur_s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(t: f64, dur: f64, name: &'static str, worker: u32) -> Event {
+        Event::span(Stamp::modeled(t), dur, "test", name, 0, worker, &[])
+    }
+
+    #[test]
+    fn disabled_journal_records_nothing() {
+        let j = Journal::with_capacity(8);
+        j.record(ev(0.0, 1.0, "a", 0));
+        assert!(j.is_empty());
+        assert_eq!(j.accepted(), 0);
+    }
+
+    #[test]
+    fn ring_overflow_keeps_newest_and_counts_evictions() {
+        let j = Journal::with_capacity(4);
+        j.set_enabled(true);
+        for i in 0..10 {
+            j.record(ev(i as f64, 0.0, "a", 0));
+        }
+        assert_eq!(j.len(), 4);
+        assert_eq!(j.accepted(), 10);
+        assert_eq!(j.overwritten(), 6);
+        let kept: Vec<f64> = j.take_sorted().iter().map(|e| e.stamp.t_s()).collect();
+        assert_eq!(kept, vec![6.0, 7.0, 8.0, 9.0]);
+        assert_eq!(j.len(), 0);
+    }
+
+    #[test]
+    fn sort_order_ignores_worker_and_arrival_order() {
+        let j = Journal::with_capacity(16);
+        j.set_enabled(true);
+        // Arrival order scrambled; worker differs per event.
+        j.record(ev(2.0, 0.5, "b", 7));
+        j.record(ev(1.0, 0.5, "a", 3));
+        j.record(ev(1.0, 0.5, "a", 1));
+        j.record(ev(0.5, 0.0, "c", 2));
+        let a = j.take_sorted();
+        j.record(ev(1.0, 0.5, "a", 1));
+        j.record(ev(0.5, 0.0, "c", 2));
+        j.record(ev(1.0, 0.5, "a", 3));
+        j.record(ev(2.0, 0.5, "b", 7));
+        let b = j.take_sorted();
+        assert_eq!(a, b);
+        assert_eq!(a[0].name, "c");
+        assert_eq!(a[3].name, "b");
+        // Equal events differing only in worker sort by worker (total order).
+        assert_eq!((a[1].worker, a[2].worker), (1, 3));
+    }
+
+    #[test]
+    fn sampling_is_identity_hashed_not_order_based() {
+        let mk = |t: f64| ev(t, 0.0, "s", 0);
+        let j = Journal::with_capacity(256);
+        j.set_enabled(true);
+        j.set_sample_period(3);
+        for i in 0..100 {
+            j.record(mk(i as f64));
+        }
+        let forward = j.take_sorted();
+        assert!(j.sampled_out() > 0);
+        let skipped = j.sampled_out();
+        j.clear();
+        assert_eq!(j.sampled_out(), 0);
+        for i in (0..100).rev() {
+            j.record(mk(i as f64));
+        }
+        let backward = j.take_sorted();
+        assert_eq!(forward, backward, "sampling must not depend on arrival order");
+        assert_eq!(j.sampled_out(), skipped);
+    }
+
+    #[test]
+    fn chrome_trace_golden() {
+        let events = vec![
+            Event::span(Stamp::modeled(0.5), 0.25, "fleet", "fleet.frame.serve", 1, 2, &[
+                ("stream", 3.0),
+            ]),
+            Event::instant(Stamp::logical(4), "search", "search.round.propose", 0, 0, &[]),
+        ];
+        let golden = concat!(
+            r#"{"displayTimeUnit":"ms","traceEvents":["#,
+            r#"{"args":{"clock":"modeled","stream":3},"cat":"fleet","dur":250000,"#,
+            r#""name":"fleet.frame.serve","ph":"X","pid":1,"tid":2,"ts":500000},"#,
+            r#"{"args":{"clock":"logical"},"cat":"search","dur":0,"#,
+            r#""name":"search.round.propose","ph":"X","pid":0,"tid":0,"ts":4000000}]}"#,
+        );
+        assert_eq!(chrome_trace(&events).to_string(), golden);
+    }
+
+    #[test]
+    fn jsonl_and_chrome_parse_back_to_the_same_events() {
+        let events = vec![
+            Event::span(Stamp::modeled(1.0), 0.5, "fleet", "fleet.frame.serve", 2, 3, &[]),
+            Event::instant(Stamp::logical(7), "eval", "eval.assign", 0, 1, &[("entry", 5.0)]),
+        ];
+        let from_chrome = parse_events(&chrome_trace(&events).to_string()).unwrap();
+        let from_jsonl = parse_events(&jsonl(&events)).unwrap();
+        assert_eq!(from_chrome, from_jsonl);
+        assert_eq!(from_chrome.len(), 2);
+        assert_eq!(from_chrome[0].name, "fleet.frame.serve");
+        assert_eq!(from_chrome[0].clock, "modeled");
+        assert!((from_chrome[0].t_s - 1.0).abs() < 1e-9);
+        assert!((from_chrome[0].dur_s - 0.5).abs() < 1e-9);
+        assert_eq!(from_chrome[1].clock, "logical");
+        assert_eq!(from_chrome[1].lane, 0);
+        assert_eq!(from_chrome[1].worker, 1);
+    }
+
+    #[test]
+    fn span_totals_subtract_nested_children() {
+        // outer [0,10) contains inner [2,5) on the same timeline; a third
+        // span on another worker must not nest into either.
+        let evs = vec![
+            OwnedEvent {
+                t_s: 0.0,
+                dur_s: 10.0,
+                clock: "modeled".into(),
+                cat: "t".into(),
+                name: "outer".into(),
+                lane: 0,
+                worker: 0,
+            },
+            OwnedEvent {
+                t_s: 2.0,
+                dur_s: 3.0,
+                clock: "modeled".into(),
+                cat: "t".into(),
+                name: "inner".into(),
+                lane: 0,
+                worker: 0,
+            },
+            OwnedEvent {
+                t_s: 1.0,
+                dur_s: 4.0,
+                clock: "modeled".into(),
+                cat: "t".into(),
+                name: "other".into(),
+                lane: 0,
+                worker: 1,
+            },
+        ];
+        let totals = span_totals(&evs);
+        let by_name = |n: &str| totals.iter().find(|t| t.name == n).unwrap().clone();
+        assert_eq!(by_name("outer").total_s, 10.0);
+        assert!((by_name("outer").self_s - 7.0).abs() < 1e-9, "{totals:?}");
+        assert_eq!(by_name("inner").self_s, 3.0);
+        assert_eq!(by_name("other").self_s, 4.0);
+        // Sorted by self time descending.
+        assert_eq!(totals[0].name, "outer");
+    }
+}

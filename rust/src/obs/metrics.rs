@@ -1,0 +1,486 @@
+//! Lock-cheap metrics registry: counters, gauges, log2-bucket histograms
+//! and exact-sample series behind one deterministic snapshot.
+//!
+//! The hot path never takes a lock: call sites hold `Arc` handles to
+//! their metrics ([`MetricsRegistry::counter`] registers once under a
+//! mutex, then every `add` is a relaxed atomic). Snapshots iterate
+//! `BTreeMap`s, so serialization order is stable across runs and thread
+//! counts — the registry is safe to print from equivalence-gated paths.
+//!
+//! Naming convention (enforced socially, documented in DESIGN.md
+//! §Observability): `layer.noun.verb` with U1 unit suffixes on physical
+//! quantities — `eval.macro.hit`, `fleet.frames.dropped`,
+//! `serve.exec_s`, `fleet.energy_pj`.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::Json;
+use crate::util::stats::{summarize, Summary};
+
+/// Monotone event counter (relaxed atomic — telemetry only, never a
+/// result input).
+#[derive(Debug, Default)]
+pub struct Counter {
+    n: AtomicU64,
+}
+
+impl Counter {
+    pub fn incr(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.n.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.n.load(Ordering::Relaxed)
+    }
+
+    /// Zero the counter — used by caches whose telemetry restarts when
+    /// their memo is invalidated (`Engine::with_knobs`).
+    pub fn reset(&self) {
+        self.n.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Last-write-wins f64 gauge (bits in an atomic — no lock, no tearing).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Number of log2 buckets a [`Histogram`] carries: bucket `b` counts
+/// samples in `[2^b, 2^(b+1))` (bucket 0 also absorbs everything below 2).
+pub const HISTOGRAM_BUCKETS: usize = 64;
+
+/// Fixed log2-bucket histogram over nonnegative samples. Callers record
+/// values already scaled to their unit of choice (the name's U1 suffix
+/// says which — e.g. `fleet.queue_wait_us` records microseconds).
+#[derive(Debug)]
+pub struct Histogram {
+    count: AtomicU64,
+    sum_bits: AtomicU64,
+    buckets: [AtomicU64; HISTOGRAM_BUCKETS],
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0.0f64.to_bits()),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn record(&self, v: f64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        add_f64(&self.sum_bits, v.max(0.0));
+        self.buckets[Self::bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Index of the log2 bucket covering `v` (clamped into range).
+    pub fn bucket_of(v: f64) -> usize {
+        let u = if v.is_finite() && v > 0.0 { v as u64 } else { 0 };
+        if u < 2 {
+            0
+        } else {
+            ((63 - u.leading_zeros()) as usize).min(HISTOGRAM_BUCKETS - 1)
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of recorded samples (unit per the metric's name suffix).
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Nonzero buckets as `(bucket_exponent, count)`, ascending.
+    pub fn nonzero_buckets(&self) -> Vec<(u32, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter_map(|(b, n)| {
+                let n = n.load(Ordering::Relaxed);
+                (n > 0).then_some((b as u32, n))
+            })
+            .collect()
+    }
+}
+
+/// Lock-free f64 accumulate via CAS on the bit pattern.
+fn add_f64(bits: &AtomicU64, v: f64) {
+    let mut cur = bits.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(cur) + v).to_bits();
+        match bits.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => break,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+/// Exact-sample series for the few metrics that need true percentiles
+/// (coordinator exec/queue latencies). Unlike [`Histogram`] it keeps
+/// every sample, so it is reserved for bounded-cardinality telemetry.
+#[derive(Debug, Default)]
+pub struct Series {
+    samples: Mutex<Vec<f64>>,
+}
+
+impl Series {
+    pub fn record(&self, v: f64) {
+        self.samples.lock().unwrap().push(v);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count() == 0
+    }
+
+    pub fn samples(&self) -> Vec<f64> {
+        self.samples.lock().unwrap().clone()
+    }
+
+    pub fn summary(&self) -> Summary {
+        summarize(&self.samples.lock().unwrap())
+    }
+}
+
+/// One registered family per metric kind, keyed by name. Registration
+/// (first `counter("x")` call) takes a mutex; the returned `Arc` handle
+/// is lock-free afterwards — hot paths register once at construction.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+    series: Mutex<BTreeMap<String, Arc<Series>>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Get-or-create the counter named `name`.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        get_or_insert(&self.counters, name)
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        get_or_insert(&self.gauges, name)
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        get_or_insert(&self.histograms, name)
+    }
+
+    pub fn series(&self, name: &str) -> Arc<Series> {
+        get_or_insert(&self.series, name)
+    }
+
+    /// Convenience: bump a counter by name (registers on first use).
+    pub fn add(&self, name: &str, n: u64) {
+        self.counter(name).add(n);
+    }
+
+    /// Convenience: set a gauge by name.
+    pub fn gauge_set(&self, name: &str, v: f64) {
+        self.gauge(name).set(v);
+    }
+
+    /// Deterministically-ordered point-in-time copy of every metric.
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot {
+            counters: self
+                .counters
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, c)| (k.clone(), c.get()))
+                .collect(),
+            gauges: self
+                .gauges
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, g)| (k.clone(), g.get()))
+                .collect(),
+            histograms: self
+                .histograms
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, h)| {
+                    (
+                        k.clone(),
+                        HistogramSnapshot {
+                            count: h.count(),
+                            sum: h.sum(),
+                            buckets: h.nonzero_buckets(),
+                        },
+                    )
+                })
+                .collect(),
+            series: self
+                .series
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, s)| (k.clone(), s.summary()))
+                .collect(),
+        }
+    }
+}
+
+fn get_or_insert<T: Default>(map: &Mutex<BTreeMap<String, Arc<T>>>, name: &str) -> Arc<T> {
+    let mut m = map.lock().unwrap();
+    if let Some(v) = m.get(name) {
+        return Arc::clone(v);
+    }
+    let v = Arc::new(T::default());
+    m.insert(name.to_string(), Arc::clone(&v));
+    v
+}
+
+/// Frozen copy of a histogram: total count, sample sum, nonzero log2
+/// buckets as `(bucket_exponent, count)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub sum: f64,
+    pub buckets: Vec<(u32, u64)>,
+}
+
+/// Deterministic (BTreeMap-ordered) point-in-time view of a registry —
+/// what `obs::snapshot()` returns and `--metrics` serializes.
+#[derive(Debug, Clone, Default)]
+pub struct Snapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, f64>,
+    pub histograms: BTreeMap<String, HistogramSnapshot>,
+    pub series: BTreeMap<String, Summary>,
+}
+
+impl Snapshot {
+    /// Counter value by name (0 when absent) — the view accessor the
+    /// deprecated telemetry shims are built on.
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// `hit / (hit + miss)` over `<base>.hit` / `<base>.miss` counters
+    /// (0 when neither has fired).
+    pub fn hit_rate(&self, base: &str) -> f64 {
+        let h = self.counter(&format!("{base}.hit")) as f64;
+        let m = self.counter(&format!("{base}.miss")) as f64;
+        if h + m > 0.0 {
+            h / (h + m)
+        } else {
+            0.0
+        }
+    }
+
+    /// Serialize for the `--metrics` sink / the `obs` command. Empty
+    /// sections are omitted; series summaries guard NaN (empty series)
+    /// to keep the output strict JSON.
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = Vec::new();
+        if !self.counters.is_empty() {
+            pairs.push((
+                "counters",
+                Json::Obj(
+                    self.counters
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::num(*v as f64)))
+                        .collect(),
+                ),
+            ));
+        }
+        if !self.gauges.is_empty() {
+            pairs.push((
+                "gauges",
+                Json::Obj(self.gauges.iter().map(|(k, v)| (k.clone(), Json::num(*v))).collect()),
+            ));
+        }
+        if !self.histograms.is_empty() {
+            pairs.push((
+                "histograms",
+                Json::Obj(
+                    self.histograms
+                        .iter()
+                        .map(|(k, h)| {
+                            (
+                                k.clone(),
+                                Json::obj(vec![
+                                    ("count", Json::num(h.count as f64)),
+                                    ("sum", Json::num(h.sum)),
+                                    (
+                                        "buckets",
+                                        Json::Arr(
+                                            h.buckets
+                                                .iter()
+                                                .map(|(b, n)| {
+                                                    Json::arr([
+                                                        Json::num(*b as f64),
+                                                        Json::num(*n as f64),
+                                                    ])
+                                                })
+                                                .collect(),
+                                        ),
+                                    ),
+                                ]),
+                            )
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        if !self.series.is_empty() {
+            pairs.push((
+                "series",
+                Json::Obj(
+                    self.series.iter().map(|(k, s)| (k.clone(), summary_json(s))).collect(),
+                ),
+            ));
+        }
+        Json::obj(pairs)
+    }
+}
+
+fn summary_json(s: &Summary) -> Json {
+    let safe = |v: f64| if v.is_finite() { v } else { 0.0 };
+    Json::obj(vec![
+        ("count", Json::num(s.count as f64)),
+        ("mean", Json::num(safe(s.mean))),
+        ("p50", Json::num(safe(s.p50))),
+        ("p95", Json::num(safe(s.p95))),
+        ("p99", Json::num(safe(s.p99))),
+        ("min", Json::num(safe(s.min))),
+        ("max", Json::num(safe(s.max))),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_round_trip() {
+        let r = MetricsRegistry::new();
+        let c = r.counter("eval.macro.hit");
+        c.incr();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        assert!(Arc::ptr_eq(&c, &r.counter("eval.macro.hit")));
+        c.reset();
+        assert_eq!(r.snapshot().counter("eval.macro.hit"), 0);
+        r.gauge_set("search.frontier.len", 7.0);
+        assert_eq!(r.gauge("search.frontier.len").get(), 7.0);
+    }
+
+    #[test]
+    fn histogram_buckets_are_log2() {
+        assert_eq!(Histogram::bucket_of(-1.0), 0);
+        assert_eq!(Histogram::bucket_of(0.0), 0);
+        assert_eq!(Histogram::bucket_of(1.5), 0);
+        assert_eq!(Histogram::bucket_of(2.0), 1);
+        assert_eq!(Histogram::bucket_of(3.9), 1);
+        assert_eq!(Histogram::bucket_of(4.0), 2);
+        assert_eq!(Histogram::bucket_of(1024.0), 10);
+        assert_eq!(Histogram::bucket_of(f64::INFINITY), 0);
+        let h = Histogram::default();
+        for v in [1.0, 3.0, 3.0, 5.0, 1000.0] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert!((h.sum() - 1012.0).abs() < 1e-9);
+        assert_eq!(h.nonzero_buckets(), vec![(0, 1), (1, 2), (2, 1), (9, 1)]);
+    }
+
+    #[test]
+    fn series_summarizes_exact_samples() {
+        let s = Series::default();
+        for v in [0.1, 0.2, 0.3] {
+            s.record(v);
+        }
+        assert_eq!(s.count(), 3);
+        let sum = s.summary();
+        assert!((sum.mean - 0.2).abs() < 1e-12);
+        assert_eq!(sum.count, 3);
+    }
+
+    #[test]
+    fn snapshot_orders_names_and_serializes() {
+        let r = MetricsRegistry::new();
+        r.add("z.last", 1);
+        r.add("a.first", 2);
+        r.histogram("fleet.queue_wait_us").record(3.0);
+        r.series("serve.exec_s").record(0.5);
+        r.series("serve.empty_s"); // registered but never recorded
+        let snap = r.snapshot();
+        let names: Vec<&String> = snap.counters.keys().collect();
+        assert_eq!(names, ["a.first", "z.last"]);
+        let json = snap.to_json().to_string();
+        // Strict JSON even with the empty series (NaN would be invalid).
+        let parsed = Json::parse(&json).unwrap();
+        assert_eq!(parsed.get("counters").req_f64("a.first").unwrap(), 2.0);
+        assert_eq!(
+            parsed.get("histograms").get("fleet.queue_wait_us").req_f64("count").unwrap(),
+            1.0
+        );
+        assert_eq!(parsed.get("series").get("serve.empty_s").req_f64("p99").unwrap(), 0.0);
+        // Identical registries snapshot to identical bytes.
+        assert_eq!(json, r.snapshot().to_json().to_string());
+    }
+
+    #[test]
+    fn hit_rate_view() {
+        let r = MetricsRegistry::new();
+        assert_eq!(r.snapshot().hit_rate("eval.macro"), 0.0);
+        r.add("eval.macro.hit", 3);
+        r.add("eval.macro.miss", 1);
+        assert!((r.snapshot().hit_rate("eval.macro") - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn concurrent_adds_do_not_lose_counts() {
+        let r = MetricsRegistry::new();
+        let c = r.counter("x");
+        let h = r.histogram("h");
+        std::thread::scope(|sc| {
+            for _ in 0..4 {
+                sc.spawn(|| {
+                    for _ in 0..1000 {
+                        c.incr();
+                        h.record(2.0);
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 4000);
+        assert_eq!(h.count(), 4000);
+        assert!((h.sum() - 8000.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,220 @@
+//! Unified observability layer: deterministic tracing, a metrics
+//! registry, and Perfetto-loadable run journals across eval/search/fleet
+//! (DESIGN.md §Observability).
+//!
+//! Three pieces, all zero-dependency:
+//!
+//! - [`clock`] — the clock taxonomy. Result paths stamp events with
+//!   *modeled* virtual time (`Frame::sched_s`, executor event time) or
+//!   deterministic *logical* ticks; wall time exists only behind the
+//!   D2-sanctioned shim in `obs/clock.rs` (plus the coordinator/benchkit
+//!   homes the linter already exempts).
+//! - [`metrics`] — a lock-cheap [`MetricsRegistry`] (counters, gauges,
+//!   log2-bucket histograms, exact-sample series) with deterministic
+//!   BTreeMap snapshots. Subsystem telemetry (`Engine`'s macro-model
+//!   memo, the search service's map cache, coordinator latency series,
+//!   fleet drop/rejection tallies) is expressed on these primitives; the
+//!   legacy accessors remain as `#[deprecated]` views.
+//! - [`journal`] — a span-based event journal in a bounded ring buffer
+//!   with a deterministic sampling knob, emitted as Chrome `trace_events`
+//!   JSON (loadable in Perfetto) plus a JSONL run journal, and
+//!   summarized by the `xr-edge-dse obs` command.
+//!
+//! **Bitwise invisibility.** Recording is globally gated: while disabled
+//! (the default) every hook is one relaxed atomic load, and no hook ever
+//! feeds a value back into a result path — equivalence tests pass with
+//! tracing on, and the OBS1 bench gates the trace-on overhead. The global
+//! registry only *absorbs* run telemetry while observability is enabled,
+//! so concurrently-running tests never pollute each other's snapshots.
+//!
+//! Surfaces: every `xr-edge-dse` command takes `--trace <path>` /
+//! `--metrics <path>`; examples honor the `XR_DSE_TRACE` /
+//! `XR_DSE_METRICS` environment variables (the CI artifact hook, like
+//! benchkit's `XR_DSE_BENCH_JSON`).
+
+pub mod clock;
+pub mod journal;
+pub mod metrics;
+
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, OnceLock};
+
+pub use clock::{wall_now_s, LogicalClock, Stamp, WallClock, WallSpan};
+pub use journal::{
+    chrome_trace, jsonl, parse_events, span_totals, Event, Journal, OwnedEvent, SpanTotals,
+};
+pub use metrics::{
+    Counter, Gauge, Histogram, HistogramSnapshot, MetricsRegistry, Series, Snapshot,
+};
+
+/// The process-global journal (disabled until [`enable_tracing`]).
+pub fn journal() -> &'static Journal {
+    static JOURNAL: OnceLock<Journal> = OnceLock::new();
+    JOURNAL.get_or_init(Journal::default)
+}
+
+/// The process-global metrics registry behind [`snapshot`].
+pub fn registry() -> &'static MetricsRegistry {
+    static REGISTRY: OnceLock<MetricsRegistry> = OnceLock::new();
+    REGISTRY.get_or_init(MetricsRegistry::new)
+}
+
+/// Deterministically-ordered snapshot of the global registry — the one
+/// place cache hit rates, drop/rejection tallies and serving latency
+/// telemetry surface together.
+pub fn snapshot() -> Snapshot {
+    registry().snapshot()
+}
+
+/// Is observability recording on? The single check every hook pays when
+/// tracing is off.
+pub fn enabled() -> bool {
+    journal().enabled()
+}
+
+pub fn set_enabled(on: bool) {
+    journal().set_enabled(on);
+}
+
+/// Turn recording on with the given ring capacity and sampling period
+/// (1 = keep every event).
+pub fn enable_tracing(capacity: usize, sample_period: u64) {
+    let j = journal();
+    j.set_capacity(capacity);
+    j.set_sample_period(sample_period);
+    j.set_enabled(true);
+}
+
+/// Record a span into the global journal (no-op while disabled).
+pub fn span(
+    stamp: Stamp,
+    dur_s: f64,
+    cat: &'static str,
+    name: &'static str,
+    lane: u32,
+    worker: u32,
+    args: &[(&'static str, f64)],
+) {
+    let j = journal();
+    if j.enabled() {
+        j.record(Event::span(stamp, dur_s, cat, name, lane, worker, args));
+    }
+}
+
+/// Record an instant event into the global journal (no-op while disabled).
+pub fn instant(
+    stamp: Stamp,
+    cat: &'static str,
+    name: &'static str,
+    lane: u32,
+    worker: u32,
+    args: &[(&'static str, f64)],
+) {
+    span(stamp, 0.0, cat, name, lane, worker, args);
+}
+
+/// Bump a global counter — gated on [`enabled`] so concurrent test runs
+/// never cross-pollute the global snapshot. Per-instance telemetry (the
+/// deprecated-view substrates) lives on its owner's registry instead and
+/// is always on.
+pub fn count(name: &str, n: u64) {
+    if enabled() {
+        registry().add(name, n);
+    }
+}
+
+/// Set a global gauge (gated like [`count`]).
+pub fn gauge(name: &str, v: f64) {
+    if enabled() {
+        registry().gauge_set(name, v);
+    }
+}
+
+fn output_paths() -> &'static Mutex<(Option<PathBuf>, Option<PathBuf>)> {
+    static PATHS: OnceLock<Mutex<(Option<PathBuf>, Option<PathBuf>)>> = OnceLock::new();
+    PATHS.get_or_init(|| Mutex::new((None, None)))
+}
+
+/// Declare where [`write_if_requested`] should put the trace and metrics
+/// files; enables recording when either is set.
+pub fn set_output_paths(trace: Option<PathBuf>, metrics_path: Option<PathBuf>) {
+    if trace.is_some() || metrics_path.is_some() {
+        enable_tracing(journal::DEFAULT_CAPACITY, 1);
+    }
+    *output_paths().lock().unwrap() = (trace, metrics_path);
+}
+
+/// Enable observability from `XR_DSE_TRACE` / `XR_DSE_METRICS` (the
+/// example/CI hook). Returns whether either variable was set.
+pub fn enable_from_env() -> bool {
+    let get = |k: &str| std::env::var(k).ok().filter(|v| !v.is_empty()).map(PathBuf::from);
+    let (trace, metrics_path) = (get("XR_DSE_TRACE"), get("XR_DSE_METRICS"));
+    let any = trace.is_some() || metrics_path.is_some();
+    set_output_paths(trace, metrics_path);
+    any
+}
+
+/// Write the journal as Chrome `trace_events` JSON to `path`, plus the
+/// JSONL run journal next to it (`<path>.jsonl` sibling, extension
+/// replaced). Drains the ring.
+pub fn write_trace(path: &Path) -> crate::Result<()> {
+    let events = journal().take_sorted();
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, chrome_trace(&events).to_pretty())?;
+    std::fs::write(path.with_extension("jsonl"), jsonl(&events))?;
+    Ok(())
+}
+
+/// Write the global metrics snapshot as JSON to `path`.
+pub fn write_metrics(path: &Path) -> crate::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, snapshot().to_json().to_pretty())?;
+    Ok(())
+}
+
+/// Flush trace/metrics files to the paths declared by
+/// [`set_output_paths`] / [`enable_from_env`] — the hook every example
+/// and the CLI call before exiting (a no-op when neither was requested).
+pub fn write_if_requested() -> crate::Result<()> {
+    let (trace, metrics_path) = output_paths().lock().unwrap().clone();
+    if let Some(p) = trace {
+        write_trace(&p)?;
+    }
+    if let Some(p) = metrics_path {
+        write_metrics(&p)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The global journal/registry are process-wide; this file's tests are
+    // the only in-crate users, and each leaves observability disabled.
+
+    #[test]
+    fn global_hooks_are_noops_while_disabled() {
+        assert!(!enabled());
+        span(Stamp::logical(0), 1.0, "test", "test.noop", 0, 0, &[]);
+        instant(Stamp::logical(1), "test", "test.noop", 0, 0, &[]);
+        count("test.counter", 5);
+        gauge("test.gauge_scale", 1.0);
+        assert!(journal().is_empty());
+        assert_eq!(snapshot().counter("test.counter"), 0);
+        assert!(!snapshot().gauges.contains_key("test.gauge_scale"));
+    }
+
+    #[test]
+    fn write_if_requested_without_paths_is_a_noop() {
+        write_if_requested().unwrap();
+    }
+}

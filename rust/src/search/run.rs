@@ -37,6 +37,7 @@ use super::strategy::Strategy;
 use crate::arch::PeConfig;
 use crate::dse::pareto::ParetoArchive;
 use crate::eval::{AssignSpec, Coord, DesignPoint, Engine, Query};
+use crate::obs::{self, Stamp};
 use crate::report::{pct, sci, Csv, Table};
 use crate::tech::{Device, Node};
 use crate::util::prng::Prng;
@@ -243,7 +244,7 @@ pub fn run_search_with(
     strategy: &mut dyn Strategy,
     cfg: &SearchConfig,
 ) -> SearchResult {
-    let stats_at_start = service.stats();
+    let stats_at_start = service.cache_stats();
     let mut prng = Prng::new(cfg.seed);
     // Dedupe cache keyed by the vector's canonical index — a `u128` per
     // entry instead of a cloned `KnobVector` per lookup *and* per insert.
@@ -262,6 +263,7 @@ pub fn run_search_with(
     // rather than spinning on the dedupe cache forever.
     const MAX_STALL_ROUNDS: usize = 64;
     let mut stall = 0usize;
+    let mut round: u64 = 0;
 
     while trace.len() < cfg.budget {
         let ask = cfg.batch.max(1).min(cfg.budget - trace.len());
@@ -269,6 +271,7 @@ pub fn run_search_with(
         if proposed.is_empty() {
             break; // space exhausted
         }
+        let proposed_n = proposed.len();
 
         // Partition the batch: cache hits answer immediately, invalid
         // vectors are rejected with INFINITY, duplicates *within* the
@@ -385,6 +388,52 @@ pub fn run_search_with(
 
         strategy.observe(&scratch.results, &mut prng);
 
+        // Per-round observability spans on *logical* time: each round owns
+        // ticks [3r, 3r+3), split into propose/eval/offer phases. Stamped
+        // after the work (the journal never feeds the loop), identical
+        // across runs and worker counts.
+        if obs::enabled() {
+            let t0 = 3 * round;
+            let evals = trace.len() as f64;
+            obs::span(
+                Stamp::logical(t0),
+                3.0,
+                "search",
+                "search.round",
+                0,
+                0,
+                &[("round", round as f64), ("evals", evals)],
+            );
+            obs::span(
+                Stamp::logical(t0),
+                1.0,
+                "search",
+                "search.propose",
+                0,
+                0,
+                &[("proposed", proposed_n as f64), ("rejected", round_rejected as f64)],
+            );
+            obs::span(
+                Stamp::logical(t0 + 1),
+                1.0,
+                "search",
+                "search.eval",
+                0,
+                0,
+                &[("fresh", fresh_count as f64)],
+            );
+            obs::span(
+                Stamp::logical(t0 + 2),
+                1.0,
+                "search",
+                "search.offer",
+                0,
+                0,
+                &[("evals", evals)],
+            );
+        }
+        round += 1;
+
         // Only rounds that produced neither a fresh evaluation nor a fresh
         // rejection count as stalls: an exhaustive enumeration grinding
         // through a long invalid region is making progress, a strategy
@@ -399,7 +448,20 @@ pub fn run_search_with(
         }
     }
 
-    let frontier = archive.into_items().into_iter().map(|i| trace[i].clone()).collect();
+    let frontier: Vec<Evaluation> =
+        archive.into_items().into_iter().map(|i| trace[i].clone()).collect();
+    let cache_stats = service.cache_stats().since(&stats_at_start);
+    // Mirror the run's telemetry into the global registry (gated on
+    // obs::enabled inside the hooks) so `--metrics` / `obs::snapshot()`
+    // absorb search runs next to coordinator/fleet tallies.
+    obs::count("search.map.hit", cache_stats.map_hits as u64);
+    obs::count("search.map.miss", cache_stats.map_misses as u64);
+    obs::count("search.macro.hit", cache_stats.macro_hits as u64);
+    obs::count("search.macro.miss", cache_stats.macro_misses as u64);
+    obs::count("search.evals", trace.len() as u64);
+    obs::count("search.rejected", rejected as u64);
+    obs::count("search.revisits", revisits as u64);
+    obs::count("search.frontier.kept", frontier.len() as u64);
     SearchResult {
         strategy: strategy.name(),
         evaluations: trace.len(),
@@ -409,7 +471,7 @@ pub fn run_search_with(
         best,
         best_point,
         frontier,
-        cache_stats: service.stats().since(&stats_at_start),
+        cache_stats,
     }
 }
 

@@ -24,10 +24,12 @@
 //! workload) instead.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use super::space::{ArchSynth, Candidate};
 use crate::eval::{Coord, DesignPoint, Engine};
 use crate::mapping::map_network;
+use crate::obs::Counter;
 use crate::workload::PrecisionPolicy;
 
 /// Number of arch-shaping knob dimensions (dims 0–8: family, grid, buffer
@@ -92,8 +94,12 @@ fn rate(hits: usize, misses: usize) -> f64 {
 pub struct EvalService {
     engine: Engine,
     entry_of: HashMap<MapKey, usize>,
-    map_hits: usize,
-    map_misses: usize,
+    /// Interning-cache telemetry, registered on the engine's metrics
+    /// registry (`search.map.hit` / `search.map.miss`) next to the macro
+    /// memo's `eval.macro.{hit,miss}` — one snapshot covers both, and
+    /// [`CacheStats`] is a view over it.
+    map_hits: Arc<Counter>,
+    map_misses: Arc<Counter>,
 }
 
 impl Default for EvalService {
@@ -105,12 +111,10 @@ impl Default for EvalService {
 impl EvalService {
     /// An empty service (engine with no entries, cold caches).
     pub fn new() -> EvalService {
-        EvalService {
-            engine: Engine::from_mapped_entries(Vec::new()),
-            entry_of: HashMap::new(),
-            map_hits: 0,
-            map_misses: 0,
-        }
+        let engine = Engine::from_mapped_entries(Vec::new());
+        let map_hits = engine.metrics().counter("search.map.hit");
+        let map_misses = engine.metrics().counter("search.map.miss");
+        EvalService { engine, entry_of: HashMap::new(), map_hits, map_misses }
     }
 
     /// The engine entry index of a lowered candidate, mapping the workload
@@ -122,10 +126,10 @@ impl EvalService {
         dims.copy_from_slice(&cand.vector[..ARCH_DIMS]);
         let key: MapKey = (dims, cand.bits.0, cand.bits.1);
         if let Some(&e) = self.entry_of.get(&key) {
-            self.map_hits += 1;
+            self.map_hits.incr();
             return e;
         }
-        self.map_misses += 1;
+        self.map_misses.incr();
         let qnet = synth
             .net
             .clone()
@@ -147,10 +151,25 @@ impl EvalService {
         self.engine.eval_coords(coords)
     }
 
+    /// Cumulative cache telemetry (map interning + macro-model memo) — a
+    /// [`CacheStats`] view over the engine's metrics registry, read from
+    /// one deterministic snapshot.
+    pub fn cache_stats(&self) -> CacheStats {
+        let snap = self.engine.metrics().snapshot();
+        CacheStats {
+            map_hits: snap.counter("search.map.hit") as usize,
+            map_misses: snap.counter("search.map.miss") as usize,
+            macro_hits: snap.counter("eval.macro.hit") as usize,
+            macro_misses: snap.counter("eval.macro.miss") as usize,
+        }
+    }
+
     /// Cumulative cache telemetry (map interning + macro-model memo).
+    #[deprecated(
+        note = "renamed to `EvalService::cache_stats` (a view over `Engine::metrics()`)"
+    )]
     pub fn stats(&self) -> CacheStats {
-        let (macro_hits, macro_misses) = self.engine.macro_cache_stats();
-        CacheStats { map_hits: self.map_hits, map_misses: self.map_misses, macro_hits, macro_misses }
+        self.cache_stats()
     }
 }
 
@@ -175,9 +194,13 @@ mod tests {
         let c = synth.lower(&synth.space.vector_at(far)).unwrap();
         let ec = svc.entry_for(&synth, &c);
         assert_ne!(ea, ec, "distinct arch shapes must not alias");
-        let s = svc.stats();
+        let s = svc.cache_stats();
         assert_eq!((s.map_hits, s.map_misses), (1, 2));
         assert!(s.map_hit_rate() > 0.0);
+        // The deprecated accessor is a parity shim over the same counters.
+        #[allow(deprecated)]
+        let legacy = svc.stats();
+        assert_eq!(legacy, s);
     }
 
     #[test]
@@ -186,9 +209,9 @@ mod tests {
         let mut svc = EvalService::new();
         let cand = synth.lower(&synth.space.vector_at(0)).unwrap();
         svc.entry_for(&synth, &cand);
-        let snap = svc.stats();
+        let snap = svc.cache_stats();
         svc.entry_for(&synth, &cand);
-        let delta = svc.stats().since(&snap);
+        let delta = svc.cache_stats().since(&snap);
         assert_eq!((delta.map_hits, delta.map_misses), (1, 0));
         assert_eq!(delta.map_hit_rate(), 1.0);
     }

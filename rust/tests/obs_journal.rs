@@ -1,0 +1,146 @@
+//! Observability journal gates (DESIGN.md §Observability):
+//!
+//! 1. **Worker-count invariance** — with tracing on, the work-stealing
+//!    evaluator journals the *same* sorted trace for 1, 2 and 8 workers
+//!    modulo the worker-id column (which stealing assigns arbitrarily),
+//!    and the evaluated points stay bitwise-identical.
+//! 2. **Bitwise invisibility** — a search run with tracing on replays the
+//!    tracing-off run's trace bitwise; recording observes, never feeds.
+//! 3. **Snapshot absorption** — one `obs::snapshot()` surfaces the search
+//!    mirrors (`search.*` counters) next to the journal's span stream.
+//!
+//! The ring-overflow accounting and the golden Chrome `trace_events`
+//! schema are pinned by `obs::journal`'s unit tests; these tests cover
+//! the cross-layer wiring the unit tests cannot see.
+//!
+//! The journal and mirror registry are process-global, so every test that
+//! toggles them serializes on [`OBS_LOCK`] and leaves recording disabled.
+
+use std::sync::Mutex;
+
+use xr_edge_dse::arch::{eyeriss, simba, MemFlavor, PeConfig};
+use xr_edge_dse::eval::{AssignSpec, Coord, Engine};
+use xr_edge_dse::obs::{self, Event};
+use xr_edge_dse::search::{
+    run_search, ArchSynth, Constraints, KnobSpace, Objective, RandomSearch, SearchConfig,
+};
+use xr_edge_dse::tech::{Device, Node};
+use xr_edge_dse::workload::builtin::detnet;
+
+static OBS_LOCK: Mutex<()> = Mutex::new(());
+
+/// Hold the global-observability lock (poison-tolerant: a failed test
+/// must not cascade into the others) with recording reset on both sides.
+fn obs_guard() -> std::sync::MutexGuard<'static, ()> {
+    let guard = OBS_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    obs::set_enabled(false);
+    obs::journal().clear();
+    guard
+}
+
+fn grid_coords(e: &Engine) -> Vec<Coord> {
+    let mut coords = Vec::new();
+    for e_idx in 0..e.entries().len() {
+        for node in [Node::N28, Node::N7] {
+            for flavor in MemFlavor::ALL {
+                coords.push((e_idx, node, AssignSpec::Flavor(flavor), Device::VgsotMram));
+            }
+            coords.push((e_idx, node, AssignSpec::Mask(3), Device::SttMram));
+        }
+    }
+    coords
+}
+
+#[test]
+fn trace_is_worker_count_invariant_modulo_worker_id() {
+    let _g = obs_guard();
+    let e = Engine::new(vec![simba(PeConfig::V2), eyeriss(PeConfig::V2)], vec![detnet()]);
+    let coords = grid_coords(&e);
+    obs::enable_tracing(1 << 14, 1);
+
+    let run = |workers: usize| {
+        obs::journal().clear();
+        let points = e.eval_coords_with_workers(&coords, workers);
+        let mut evs = obs::journal().take_sorted();
+        for ev in &mut evs {
+            ev.worker = 0; // stealing assigns workers arbitrarily
+        }
+        (points, evs)
+    };
+    let (ref_points, ref_evs) = run(1);
+    assert_eq!(ref_evs.len(), coords.len(), "one eval.assign span per coordinate");
+    assert!(ref_evs.iter().all(|ev| ev.name == "eval.assign"));
+    for workers in [2, 8] {
+        let (points, evs) = run(workers);
+        assert_eq!(evs, ref_evs, "{workers} workers: trace must match modulo worker id");
+        for (a, b) in ref_points.iter().zip(&points) {
+            assert_eq!(a.energy.total_pj().to_bits(), b.energy.total_pj().to_bits());
+            assert_eq!(a.latency_ns.to_bits(), b.latency_ns.to_bits());
+        }
+    }
+    obs::set_enabled(false);
+    obs::journal().clear();
+}
+
+#[test]
+fn tracing_is_bitwise_invisible_to_search() {
+    let _g = obs_guard();
+    let synth = ArchSynth::new(KnobSpace::tiny(), detnet()).unwrap();
+    let cfg = SearchConfig {
+        objective: Objective::Energy,
+        constraints: Constraints::at_ips(10.0),
+        budget: 16,
+        batch: 4,
+        seed: 7,
+    };
+    let off = run_search(&synth, &mut RandomSearch, &cfg);
+    assert!(obs::journal().is_empty(), "disabled journal must stay empty");
+
+    obs::enable_tracing(1 << 14, 1);
+    let on = run_search(&synth, &mut RandomSearch, &cfg);
+    let events: Vec<Event> = obs::journal().take_sorted();
+    obs::set_enabled(false);
+
+    assert!(!events.is_empty(), "tracing-on search must journal round spans");
+    assert!(events.iter().any(|ev| ev.name == "search.round"));
+    assert_eq!(off.evaluations, on.evaluations);
+    assert_eq!(off.frontier.len(), on.frontier.len());
+    assert_eq!(off.trace.len(), on.trace.len());
+    for (a, b) in off.trace.iter().zip(&on.trace) {
+        assert_eq!(a.vector, b.vector);
+        assert_eq!(a.scalar.to_bits(), b.scalar.to_bits());
+        assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits());
+        assert_eq!(a.joined_frontier, b.joined_frontier);
+    }
+}
+
+#[test]
+fn snapshot_absorbs_search_mirrors_while_enabled() {
+    let _g = obs_guard();
+    let synth = ArchSynth::new(KnobSpace::tiny(), detnet()).unwrap();
+    let cfg = SearchConfig {
+        objective: Objective::Energy,
+        constraints: Constraints::at_ips(10.0),
+        budget: 16,
+        batch: 4,
+        seed: 7,
+    };
+    obs::enable_tracing(1 << 14, 1);
+    let r = run_search(&synth, &mut RandomSearch, &cfg);
+    obs::set_enabled(false);
+    obs::journal().clear();
+
+    // The global registry accumulates across a process, so gate on ≥: the
+    // run just mirrored its tallies into the one shared snapshot.
+    let snap = obs::snapshot();
+    assert!(snap.counter("search.evals") >= r.evaluations as u64);
+    assert!(
+        snap.counter("search.macro.hit") + snap.counter("search.macro.miss") > 0,
+        "macro memo telemetry must be absorbed: {:?}",
+        snap.counters
+    );
+    // And the snapshot serializes deterministically (strict JSON).
+    let a = snap.to_json().to_string();
+    let b = obs::snapshot().to_json().to_string();
+    assert_eq!(a, b);
+}
