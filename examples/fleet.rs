@@ -17,48 +17,60 @@
 //!
 //! Run: `cargo run --release --example fleet`
 
-use xr_edge_dse::coordinator::sensor::Arrival;
-use xr_edge_dse::fleet::{policy_by_name, run_fleet, FleetSpec, HwPoint, StreamLoad};
-use xr_edge_dse::search::{
-    run_search, ArchSynth, Constraints, KnobSpace, Objective, RandomSearch, SearchConfig,
+use xr_edge_dse::fleet::{policy_by_name, run_fleet, HwPoint};
+use xr_edge_dse::manifest::{
+    exec, ArrivalDecl, FleetPlan, LoadDecl, SearchSpec, SpaceBase, SpaceSpec,
 };
+use xr_edge_dse::search::{run_search, RandomSearch};
 use xr_edge_dse::tech::{Device, Node};
-use xr_edge_dse::workload::builtin;
 
 fn main() -> anyhow::Result<()> {
     // CI artifact hook: XR_DSE_TRACE / XR_DSE_METRICS turn on the
     // observability journal for this run (flushed at the bottom).
     xr_edge_dse::obs::enable_from_env();
     // ---- act 1: the device pool ----------------------------------------
-    let mut points = HwPoint::paper_palette(Node::N7, Device::VgsotMram);
-    let mut space = KnobSpace::paper();
-    space.nodes = vec![Node::N7];
-    let synth = ArchSynth::new(space, builtin::by_name("detnet")?)?;
-    let cfg = SearchConfig {
-        objective: Objective::Energy,
-        constraints: Constraints::at_ips(10.0),
+    // The fleet and the frontier search are both declared through the
+    // ExperimentSpec surface (the same types a `.xrdse` manifest binds
+    // to); `exec::build_fleet` / `exec::build_search` lower them onto the
+    // fleet and search subsystems exactly as a manifest run would.
+    let plan = FleetPlan {
+        devices: 32,
+        seconds: 60.0,
+        node: Node::N7,
+        mram: Device::VgsotMram,
+        // Each stream owns its modeled server, so utilization is a
+        // placement knob, not a physical limit; lift it so act 2
+        // demonstrates full placement and act 3's rejections come from
+        // the power cap alone.
+        max_util: Some(1e6),
+        ..FleetPlan::default()
+    }
+    .with_load(LoadDecl::new("hand", "detnet", ArrivalDecl::Periodic { fps: 10.0 }, 192))
+    .with_load(LoadDecl::new("eye", "edsnet", ArrivalDecl::Poisson { rate: 1.0 }, 64));
+    let mut spec = exec::build_fleet("xr-fleet", &plan)?;
+
+    let search = SearchSpec {
+        space: SpaceSpec {
+            base: Some(SpaceBase::Paper),
+            nodes: Some(vec![Node::N7]),
+            ..SpaceSpec::default()
+        },
         budget: 48,
         batch: 24,
-        seed: 42,
+        ..SearchSpec::default()
     };
+    let (synth, cfg) = exec::build_search(&search)?;
     let result = run_search(&synth, &mut RandomSearch, &cfg);
     let frontier = HwPoint::from_frontier(&synth, &result, 4)?;
     println!(
         "device pool: {} paper points + {} frontier designs ({})",
-        points.len(),
+        spec.points.len(),
         frontier.len(),
         frontier.iter().map(|p| p.name.as_str()).collect::<Vec<_>>().join(", ")
     );
-    points.extend(frontier);
+    spec.points.extend(frontier);
 
     // ---- act 2: place + simulate under every policy --------------------
-    let mut spec = FleetSpec::new("xr-fleet", points, 32, 60.0, 42)
-        .with_load(StreamLoad::new("hand", "detnet", Arrival::Periodic { fps: 10.0 }, 192))
-        .with_load(StreamLoad::new("eye", "edsnet", Arrival::Poisson { rate: 1.0 }, 64));
-    // Each stream owns its modeled server, so utilization is a placement
-    // knob, not a physical limit; lift it so act 2 demonstrates full
-    // placement and act 3's rejections come from the power cap alone.
-    spec.constraints.max_util = Some(1e6);
 
     let mut baseline_total_uw = 0.0;
     for name in ["round-robin", "least-loaded", "weighted-random"] {

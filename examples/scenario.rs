@@ -10,11 +10,12 @@
 //!
 //! Run: `cargo run --release --example scenario`
 
-use xr_edge_dse::coordinator::scenario::Scenario;
 use xr_edge_dse::coordinator::Backend;
 
 fn main() -> anyhow::Result<()> {
-    let mut sc = Scenario::preset("paper", "artifacts".into())?;
+    // Presets are named manifests (`manifests/scenario_paper.xrdse`),
+    // resolved through the manifest binder.
+    let mut sc = xr_edge_dse::manifest::scenario_preset("paper", "artifacts".into())?;
     // Deterministic offline path; swap for Backend::Auto{..} to use PJRT
     // artifacts when `make artifacts` has been run.
     sc.backend = Backend::Synthetic;

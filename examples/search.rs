@@ -19,21 +19,32 @@
 use xr_edge_dse::arch::{MemFlavor, PeConfig};
 use xr_edge_dse::dse;
 use xr_edge_dse::eval::Engine;
+use xr_edge_dse::manifest::{exec, SearchSpec, SpaceBase, SpaceSpec};
 use xr_edge_dse::search::{
-    Annealing, ArchSynth, Constraints, Family, HillClimb, KnobSpace, Objective, RandomSearch,
-    SearchConfig, SearchReport, Strategy,
+    Annealing, ArchSynth, Family, HillClimb, RandomSearch, SearchReport, Strategy,
 };
 use xr_edge_dse::tech::{Device, Node};
-use xr_edge_dse::workload::builtin;
 
 fn main() -> anyhow::Result<()> {
     // CI artifact hook: XR_DSE_TRACE / XR_DSE_METRICS turn on the
     // observability journal for this run (flushed at the bottom).
     xr_edge_dse::obs::enable_from_env();
-    // The exploration space, pinned to the paper's 7 nm operating point.
-    let mut space = KnobSpace::paper();
-    space.nodes = vec![Node::N7];
-    let synth = ArchSynth::new(space, builtin::by_name("detnet")?)?;
+    // The experiment, declared through the same ExperimentSpec surface the
+    // manifest binder and the CLI flags produce: the paper knob space
+    // pinned to 7 nm, energy objective under a ≥10 IPS constraint (both
+    // defaults), a CI-sized budget. `exec::build_search` lowers it onto
+    // the synthesizer + config pair — identically to a `.xrdse` run.
+    let spec = SearchSpec {
+        space: SpaceSpec {
+            base: Some(SpaceBase::Paper),
+            nodes: Some(vec![Node::N7]),
+            ..SpaceSpec::default()
+        },
+        budget: 120,
+        batch: 32,
+        ..SearchSpec::default()
+    };
+    let (synth, cfg) = exec::build_search(&spec)?;
     println!(
         "space: {} knob vectors; floors: GWB ≥ {} B (whole INT8 model), GLB ≥ {} B",
         synth.space.cardinality(),
@@ -111,13 +122,6 @@ fn main() -> anyhow::Result<()> {
     );
 
     // ---- act 3: the guided search -------------------------------------
-    let cfg = SearchConfig {
-        objective: Objective::Energy,
-        constraints: Constraints::at_ips(10.0),
-        budget: 120,
-        batch: 32,
-        seed: 42,
-    };
     let rs_sram = synth
         .space
         .paper_vector(

@@ -1,0 +1,51 @@
+//! Manifest front-end benches (DESIGN.md §The manifest layer):
+//!   M1 — compile throughput of the eight builtin manifests (lex + parse
+//!        + bind, defaults resolved): the cost every `xr-edge-dse run`
+//!        pays before any evaluation starts;
+//!   M2 — the `manifest check` path: resolved dump (`to_manifest()`)
+//!        re-compiled, which is also the round-trip the tests pin.
+//!
+//! Both are pure front-end work — no engine, no search, no simulation —
+//! so the records double as a guard that the declarative surface stays
+//! negligible next to the experiments it launches.
+
+use xr_edge_dse::manifest::{compile, BUILTINS};
+use xr_edge_dse::util::benchkit::{
+    bench_annotate, bench_units, figure_header, write_json_if_requested,
+};
+
+fn main() -> anyhow::Result<()> {
+    figure_header(
+        "§Manifest — .xrdse compile throughput",
+        "the declarative surface parses+binds in microseconds — negligible next to any run",
+    );
+
+    let n = BUILTINS.len() as f64;
+    let m1 = "M1 compile 8 builtin manifests";
+    let (mean_s, _, _) = bench_units(m1, 20, 200, n, || {
+        for (name, src) in BUILTINS.iter().copied() {
+            let spec = compile(src, name, &[]).expect("builtins compile");
+            std::hint::black_box(&spec);
+        }
+    });
+    bench_annotate(m1, "manifests_per_s", n / mean_s.max(1e-9));
+    println!("{m1}: {:.0} manifests/s", n / mean_s.max(1e-9));
+
+    let dumps: Vec<String> = BUILTINS
+        .iter()
+        .copied()
+        .map(|(name, src)| compile(src, name, &[]).expect("builtins compile").to_manifest())
+        .collect();
+    let m2 = "M2 re-bind 8 resolved dumps";
+    let (mean_s, _, _) = bench_units(m2, 20, 200, n, || {
+        for d in &dumps {
+            let spec = compile(d, "dump.xrdse", &[]).expect("resolved dumps re-bind");
+            std::hint::black_box(&spec);
+        }
+    });
+    bench_annotate(m2, "manifests_per_s", n / mean_s.max(1e-9));
+    println!("{m2}: {:.0} manifests/s", n / mean_s.max(1e-9));
+
+    write_json_if_requested()?;
+    Ok(())
+}

@@ -71,9 +71,12 @@ impl Diagnostic {
 }
 
 /// Modules whose outputs are replayed bitwise (reports, frontiers, fleet
-/// traces): the D1/D3-parallel scopes.
+/// traces, and the manifest front-end that lowers onto all of them): the
+/// D1/D3-parallel scopes.
 fn in_result_path(path: &str) -> bool {
-    ["/eval/", "/search/", "/fleet/", "/report/"].iter().any(|s| path.contains(s))
+    ["/eval/", "/search/", "/fleet/", "/report/", "/manifest/"]
+        .iter()
+        .any(|s| path.contains(s))
 }
 
 /// D2's sanctioned homes: the real-time thread runner (coordinator), the

@@ -54,9 +54,21 @@ fn d1_allows_probe_access_and_ordered_maps() {
 
 #[test]
 fn d1_is_scoped_to_result_paths() {
-    // The same violating source outside eval/search/fleet/report is legal.
+    // The same violating source outside the result scopes is legal.
     let diags = lint_source("rust/src/util/table.rs", D1_POS);
     assert!(diags.is_empty(), "diags: {diags:#?}");
+}
+
+#[test]
+fn d1_covers_the_manifest_scope() {
+    // The manifest layer lowers onto every result path, so its sources
+    // sit inside the D1/D3 scope: the D1 fixture must flag there too.
+    let diags = lint_source("rust/src/manifest/bind.rs", D1_POS);
+    assert_eq!(
+        lines_for(&diags, "D1"),
+        vec![line_of(D1_POS, "&self.per_device"), line_of(D1_POS, "seen.iter()")],
+        "diags: {diags:#?}"
+    );
 }
 
 #[test]

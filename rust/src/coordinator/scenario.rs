@@ -16,12 +16,12 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::arch::{self, Arch, MemFlavor, PeConfig};
+use crate::arch::{Arch, MemFlavor};
 use crate::eval::{Assignments, Devices, Engine, Query};
 use crate::fleet::executor::{modeled_service_s, Executor, FrameSource, SimStream};
 use crate::power::PowerModel;
 use crate::report::{ms, pct, Csv, Table};
-use crate::tech::{paper_mram_for, Device, Node};
+use crate::tech::{Device, Node};
 use crate::util::stats::{summarize, SortedSamples, Summary};
 use crate::workload;
 
@@ -114,92 +114,18 @@ pub struct Scenario {
 }
 
 impl Scenario {
-    /// Named presets:
-    ///
-    /// - `paper` — the §5/Table-3 operating point: detnet@10 IPS (hybrid
-    ///   P0) + edsnet@0.1 IPS (full-NVM P1), 60 modeled seconds replayed
-    ///   at 60× (≈1 s wall).
-    /// - `hand` — single detnet@10 stream (P1).
-    /// - `stress` — an over-rate detnet stream with a slow synthetic model
-    ///   and a shallow queue (exercises drop-oldest under saturation),
-    ///   plus a Poisson eye stream.
+    /// Named presets (`paper` | `hand` | `stress`). Presets are named
+    /// manifests now — the definitions live in `manifests/*.xrdse`
+    /// (embedded at build time) and resolve through the manifest binder,
+    /// so this shim and [`crate::manifest::scenario_preset`] return
+    /// identical scenarios.
+    #[deprecated(
+        since = "0.10.0",
+        note = "presets are named manifests now; use crate::manifest::scenario_preset \
+                (or `xr-edge-dse run manifests/scenario_paper.xrdse`)"
+    )]
     pub fn preset(name: &str, artifacts_dir: std::path::PathBuf) -> crate::Result<Scenario> {
-        let base = Scenario {
-            name: name.to_string(),
-            streams: Vec::new(),
-            seconds: 60.0,
-            time_scale: 60.0,
-            arch: arch::simba(PeConfig::V2),
-            node: Node::N7,
-            mram: paper_mram_for(Node::N7),
-            backend: Backend::Auto { artifacts_dir },
-            runner: Runner::default(),
-        };
-        Ok(match name {
-            "paper" => Scenario {
-                streams: vec![
-                    StreamSpec::new(
-                        "hand",
-                        "detnet",
-                        Arrival::Periodic { fps: 10.0 },
-                        MemFlavor::P0,
-                    ),
-                    StreamSpec {
-                        seed: 7,
-                        ..StreamSpec::new(
-                            "eye",
-                            "edsnet",
-                            Arrival::Periodic { fps: 0.1 },
-                            MemFlavor::P1,
-                        )
-                    },
-                ],
-                ..base
-            },
-            "hand" => Scenario {
-                streams: vec![StreamSpec::new(
-                    "hand",
-                    "detnet",
-                    Arrival::Periodic { fps: 10.0 },
-                    MemFlavor::P1,
-                )],
-                seconds: 30.0,
-                time_scale: 30.0,
-                ..base
-            },
-            "stress" => Scenario {
-                streams: vec![
-                    StreamSpec {
-                        queue_depth: 2,
-                        // 50 fps against a 50 ms floor: 2.5× over-rate, so
-                        // drop-oldest saturates on both runners (at exactly
-                        // the 20 ms gap the virtual clock would complete
-                        // each frame the instant the next arrives and never
-                        // drop — Done sorts before same-tick Arrival).
-                        exec_floor_s: 0.05,
-                        ..StreamSpec::new(
-                            "hot",
-                            "detnet",
-                            Arrival::Periodic { fps: 50.0 },
-                            MemFlavor::SramOnly,
-                        )
-                    },
-                    StreamSpec {
-                        seed: 9,
-                        ..StreamSpec::new(
-                            "eye",
-                            "edsnet",
-                            Arrival::Poisson { rate: 1.0 },
-                            MemFlavor::P1,
-                        )
-                    },
-                ],
-                seconds: 8.0,
-                time_scale: 4.0,
-                ..base
-            },
-            other => anyhow::bail!("unknown scenario preset '{other}' (paper|hand|stress)"),
-        })
+        crate::manifest::scenario_preset(name, artifacts_dir)
     }
 
     /// Each stream's modeled power variant, built through the unified
@@ -601,12 +527,12 @@ mod tests {
     #[test]
     fn presets_resolve() {
         for name in ["paper", "hand", "stress"] {
-            let sc = Scenario::preset(name, "artifacts".into()).unwrap();
+            let sc = crate::manifest::scenario_preset(name, "artifacts".into()).unwrap();
             assert!(!sc.streams.is_empty(), "{name}");
             assert!(sc.seconds > 0.0 && sc.time_scale > 0.0);
         }
-        assert!(Scenario::preset("nope", "artifacts".into()).is_err());
-        let paper = Scenario::preset("paper", "artifacts".into()).unwrap();
+        assert!(crate::manifest::scenario_preset("nope", "artifacts".into()).is_err());
+        let paper = crate::manifest::scenario_preset("paper", "artifacts".into()).unwrap();
         assert_eq!(paper.streams.len(), 2);
         assert_eq!(paper.streams[0].model, "detnet");
         assert_eq!(paper.streams[0].arrival.rate(), 10.0);
@@ -628,7 +554,7 @@ mod tests {
 
     #[test]
     fn empty_scenario_is_rejected() {
-        let mut sc = Scenario::preset("hand", "artifacts".into()).unwrap();
+        let mut sc = crate::manifest::scenario_preset("hand", "artifacts".into()).unwrap();
         sc.streams.clear();
         assert!(sc.run().is_err());
     }

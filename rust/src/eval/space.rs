@@ -300,16 +300,6 @@ impl Engine {
         self
     }
 
-    /// (hits, misses) of the shared macro-model memo since construction
-    /// (or the last [`Engine::with_knobs`] reset).
-    #[deprecated(
-        note = "read the `eval.macro.hit` / `eval.macro.miss` counters from \
-                `Engine::metrics()` instead"
-    )]
-    pub fn macro_cache_stats(&self) -> (usize, usize) {
-        (self.macros.hits.get() as usize, self.macros.misses.get() as usize)
-    }
-
     /// The engine's metrics registry (macro-memo hit/miss counters, plus
     /// whatever its owning layers register — see the field docs). Snapshot
     /// with [`MetricsRegistry::snapshot`] for a deterministic view.

@@ -64,6 +64,7 @@ pub mod report;
 pub mod runtime;
 pub mod coordinator;
 pub mod fleet;
+pub mod manifest;
 
 /// Crate-wide result alias (anyhow is the only error substrate vendored).
 pub type Result<T> = anyhow::Result<T>;

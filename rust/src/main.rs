@@ -16,6 +16,9 @@
 //! xr-edge-dse scenario --preset paper                # multi-stream serving
 //! xr-edge-dse fleet   --devices 8 --streams 64       # fleet placement sim
 //! xr-edge-dse obs     artifacts/trace.json           # summarize a run journal
+//! xr-edge-dse run manifests/scenario_paper.xrdse     # run a .xrdse manifest
+//! xr-edge-dse run manifests/search_7nm.xrdse --set budget=100
+//! xr-edge-dse manifest check manifests/*.xrdse       # validate + resolved dump
 //! ```
 //!
 //! Every command takes `--trace <path>` / `--metrics <path>` to write a
@@ -82,6 +85,7 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "policy", takes_value: true, help: "fleet: round-robin|weighted|least-loaded", default: Some("least-loaded") },
         OptSpec { name: "min-ips", takes_value: true, help: "fleet: per-stream sustained-IPS deployment constraint", default: None },
         OptSpec { name: "from-search", takes_value: false, help: "fleet: deploy a search frontier instead of the paper palette", default: None },
+        OptSpec { name: "set", takes_value: true, help: "manifest override: key=value with dotted paths (repeatable)", default: None },
         OptSpec { name: "trace", takes_value: true, help: "write Chrome trace_events JSON (+ .jsonl journal) here", default: None },
         OptSpec { name: "metrics", takes_value: true, help: "write the metrics snapshot JSON here (obs: read it)", default: None },
         OptSpec { name: "verbose", takes_value: false, help: "per-layer detail", default: None },
@@ -384,7 +388,10 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
             // Guided design-space search over the parameterized space:
             // the paper grid is a set of named points inside it; the
             // strategies look for better designs under hard constraints.
-            search_cmd(&args, node, mram)?;
+            // Flags translate into the same ExperimentSpec a manifest
+            // binds to and execute through the manifest layer.
+            let spec = xr_edge_dse::manifest::flags::search_spec(&args, node, mram)?;
+            xr_edge_dse::manifest::run(&spec)?;
         }
         "sweep" => {
             let out = std::path::PathBuf::from(args.get("out").unwrap());
@@ -395,10 +402,18 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
             serve(&args)?;
         }
         "scenario" => {
-            scenario(&args, node, mram)?;
+            let spec = xr_edge_dse::manifest::flags::scenario_spec(&args, node, mram)?;
+            xr_edge_dse::manifest::run(&spec)?;
         }
         "fleet" => {
-            fleet_cmd(&args, node, mram)?;
+            let spec = xr_edge_dse::manifest::flags::fleet_spec(&args, node, mram)?;
+            xr_edge_dse::manifest::run(&spec)?;
+        }
+        "run" => {
+            run_manifest(&args)?;
+        }
+        "manifest" => {
+            manifest_cmd(&args)?;
         }
         "obs" => {
             obs_cmd(&args)?;
@@ -550,101 +565,33 @@ fn write_figure_csvs(out: &std::path::Path) -> anyhow::Result<usize> {
     Ok(n)
 }
 
-/// `search`: guided multi-objective DSE over the parameterized space
-/// (`xr_edge_dse::search`), constrained to --node (and --device when one
-/// is named explicitly). Deterministic from --seed; --csv writes the
-/// frontier plus a full per-evaluation trace.
-fn search_cmd(
-    args: &xr_edge_dse::util::cli::Args,
-    node: Node,
-    mram: Device,
-) -> anyhow::Result<()> {
-    use xr_edge_dse::search::{
-        ArchSynth, Constraints, KnobSpace, Objective, SearchConfig, SearchReport,
+/// `run`: execute a `.xrdse` manifest, with `--set key=value` overrides
+/// applied to the parsed tree before binding (dotted paths reach nested
+/// blocks: `--set knobs.nodes=[28]`, `--set hand.seed=7`).
+fn run_manifest(args: &xr_edge_dse::util::cli::Args) -> anyhow::Result<()> {
+    let Some(path) = args.positional.first() else {
+        anyhow::bail!("usage: xr-edge-dse run <manifest.xrdse> [--set key=value]...");
     };
-    let net = workload::builtin::by_name(args.get("net").unwrap())?;
-    let ips = args.get_f64("ips")?.unwrap_or(10.0);
-    let mut space = if args.flag("mixed-precision") {
-        KnobSpace::paper_mixed_precision()
-    } else {
-        KnobSpace::paper()
-    };
-    space.nodes = vec![node];
-    if args.get("device").is_some() {
-        space.mrams = vec![mram];
-    }
-    let synth = ArchSynth::new(space, net)?;
-    let cfg = SearchConfig {
-        objective: Objective::from_str(args.get("objective").unwrap())?,
-        constraints: Constraints {
-            min_ips: ips,
-            max_area_mm2: args.get_f64("max-area")?,
-            max_p_mem_uw: args.get_f64("max-power")?,
-        },
-        budget: args.get_usize("budget")?.unwrap_or(400),
-        batch: args.get_usize("batch")?.unwrap_or(64),
-        seed: args.get_usize("seed")?.unwrap_or(42) as u64,
-    };
-    let strategies = search_strategies(args.get("strategy").unwrap(), &synth, node)?;
-    let report = SearchReport::run(&synth, &cfg, strategies);
-    print!("{}", report.table().render());
-    match report.best_overall() {
-        Some((r, e)) => println!(
-            "best overall: {} {} {} via {} — {} = {}, area {:.2} mm², P_mem {:.2} µW @{} IPS (knobs {})",
-            e.arch,
-            e.assign,
-            e.precision_label(),
-            r.strategy,
-            cfg.objective.label(),
-            sci(e.scalar),
-            e.area_mm2,
-            e.p_mem_uw,
-            ips,
-            e.vector_key()
-        ),
-        None => println!("no feasible design found under the given constraints"),
-    }
-    if let Some(path) = args.get("csv") {
-        let frontier_path = std::path::PathBuf::from(path);
-        report.frontier_csv().save(&frontier_path)?;
-        let trace_path = frontier_path.with_extension("trace.csv");
-        report.trace_csv().save(&trace_path)?;
-        println!("wrote {} and {}", frontier_path.display(), trace_path.display());
-    }
-    Ok(())
+    let spec = xr_edge_dse::manifest::load(std::path::Path::new(path), args.get_all("set"))?;
+    xr_edge_dse::manifest::run(&spec)
 }
 
-/// Resolve --strategy into concrete strategy instances. The hill climber
-/// is seeded at the paper-v2 weight-stationary SRAM-only point when the
-/// space contains it ("improve on the paper design"), and falls back to a
-/// random start otherwise.
-fn search_strategies(
-    which: &str,
-    synth: &xr_edge_dse::search::ArchSynth,
-    node: Node,
-) -> anyhow::Result<Vec<Box<dyn xr_edge_dse::search::Strategy>>> {
-    use xr_edge_dse::search::{Annealing, Exhaustive, Family, HillClimb, RandomSearch, Strategy};
-    let hill = || -> Box<dyn Strategy> {
-        let seed_mram = synth.space.mrams.first().copied().unwrap_or(paper_mram_for(node));
-        match synth.space.paper_vector(
-            Family::WeightStationary,
-            PeConfig::V2,
-            MemFlavor::SramOnly,
-            node,
-            seed_mram,
-        ) {
-            Some(v) => Box::new(HillClimb::seeded(v)),
-            None => Box::new(HillClimb::new()),
-        }
-    };
-    Ok(match which.to_ascii_lowercase().as_str() {
-        "exhaustive" => vec![Box::new(Exhaustive::new())],
-        "random" => vec![Box::new(RandomSearch)],
-        "hill" | "hill-climb" => vec![hill()],
-        "anneal" | "annealing" => vec![Box::new(Annealing::new())],
-        "all" => vec![Box::new(RandomSearch), hill(), Box::new(Annealing::new())],
-        other => anyhow::bail!("unknown strategy '{other}' (exhaustive|random|hill|anneal|all)"),
-    })
+/// `manifest check`: parse + validate manifests and print each one's
+/// fully-resolved spec (every default written out) without running
+/// anything. Exit status is the validation verdict.
+fn manifest_cmd(args: &xr_edge_dse::util::cli::Args) -> anyhow::Result<()> {
+    let usage = "usage: xr-edge-dse manifest check <manifest.xrdse>...";
+    if args.positional.first().map(|s| s.as_str()) != Some("check") {
+        anyhow::bail!("{usage}");
+    }
+    let files = &args.positional[1..];
+    anyhow::ensure!(!files.is_empty(), "{usage}");
+    for path in files {
+        let spec = xr_edge_dse::manifest::load(std::path::Path::new(path), args.get_all("set"))?;
+        println!("# {path}: ok — {} '{}', resolved:", spec.kind_label(), spec.name);
+        print!("{}", spec.to_manifest());
+    }
+    Ok(())
 }
 
 /// `serve`: run the PJRT serving pipeline on synthetic sensor frames.
@@ -681,119 +628,10 @@ fn serve(args: &xr_edge_dse::util::cli::Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// `scenario`: run a multi-stream serving scenario (the paper's concurrent
-/// operating point) and report per-stream ledger-vs-closed-form power.
-fn scenario(args: &xr_edge_dse::util::cli::Args, node: Node, mram: Device) -> anyhow::Result<()> {
-    use xr_edge_dse::coordinator::scenario::{Runner, Scenario};
-    use xr_edge_dse::coordinator::Backend;
-    let artifacts = std::path::PathBuf::from(args.get("artifacts").unwrap());
-    let mut sc = Scenario::preset(args.get("preset").unwrap(), artifacts.clone())?;
-    sc.node = node;
-    sc.mram = mram;
-    sc.backend = match args.get("backend").unwrap() {
-        "auto" => Backend::Auto { artifacts_dir: artifacts },
-        "pjrt" => Backend::Pjrt { artifacts_dir: artifacts },
-        "synthetic" => Backend::Synthetic,
-        other => anyhow::bail!("unknown backend '{other}' (auto|pjrt|synthetic)"),
-    };
-    if let Some(h) = args.get_f64("horizon")? {
-        sc.seconds = h;
-    }
-    if let Some(ts) = args.get_f64("time-scale")? {
-        sc.time_scale = ts;
-    }
-    sc.runner = match args.get("runner").unwrap() {
-        "virtual" | "virtual-clock" => Runner::VirtualClock,
-        "threads" | "thread" => Runner::Threads,
-        other => anyhow::bail!("unknown runner '{other}' (virtual|threads)"),
-    };
-    let report = sc.run()?;
-    print!("{}", report.table().render());
-    println!("{}", report.summary_line());
-    for s in &report.streams {
-        if !s.feasible {
-            println!("warning: stream '{}' cannot sustain {} IPS with {:?}", s.name, s.rate, s.flavor);
-        }
-    }
-    if let Some(path) = args.get("csv") {
-        let path = std::path::PathBuf::from(path);
-        report.to_csv().save(&path)?;
-        println!("wrote {}", path.display());
-    }
-    Ok(())
-}
-
-/// `fleet`: place --streams streams across --devices devices (paper
-/// palette, or a search frontier with --from-search) under the given
-/// policy/constraints, simulate on the virtual clock, and report
-/// aggregate telemetry. Deterministic from --seed.
-fn fleet_cmd(args: &xr_edge_dse::util::cli::Args, node: Node, mram: Device) -> anyhow::Result<()> {
-    use xr_edge_dse::coordinator::sensor::Arrival;
-    use xr_edge_dse::fleet::{policy_by_name, run_fleet, FleetSpec, HwPoint, StreamLoad};
-
-    let n_devices = args.get_usize("devices")?.unwrap_or(8);
-    let n_streams = args.get_usize("streams")?.unwrap_or(64);
-    let seconds = args.get_f64("seconds")?.unwrap_or(5.0);
-    let seed = args.get_usize("seed")?.unwrap_or(42) as u64;
-
-    let points = if args.flag("from-search") {
-        // Populate the device pool straight off a search frontier (the
-        // PR-6 incremental search makes this cheap).
-        use xr_edge_dse::search::{
-            ArchSynth, Constraints, KnobSpace, Objective, RandomSearch, SearchConfig,
-        };
-        let mut space = KnobSpace::paper();
-        space.nodes = vec![node];
-        let synth = ArchSynth::new(space, workload::builtin::by_name("detnet")?)?;
-        let cfg = SearchConfig {
-            objective: Objective::Energy,
-            constraints: Constraints {
-                min_ips: args.get_f64("ips")?.unwrap_or(10.0),
-                max_area_mm2: args.get_f64("max-area")?,
-                max_p_mem_uw: None,
-            },
-            budget: args.get_usize("budget")?.unwrap_or(400).min(128),
-            batch: 32,
-            seed,
-        };
-        let result = xr_edge_dse::search::run_search(&synth, &mut RandomSearch, &cfg);
-        let points = HwPoint::from_frontier(&synth, &result, 4)?;
-        println!(
-            "deployed {} frontier points from a {}-eval random search",
-            points.len(),
-            result.evaluations
-        );
-        points
-    } else {
-        HwPoint::paper_palette(node, mram)
-    };
-
-    let hand = n_streams - n_streams / 4;
-    let eye = n_streams - hand;
-    let mut spec = FleetSpec::new("xr-mix", points, n_devices, seconds, seed)
-        .with_load(StreamLoad::new("hand", "detnet", Arrival::Periodic { fps: 10.0 }, hand))
-        .with_load(StreamLoad::new("eye", "edsnet", Arrival::Poisson { rate: 1.0 }, eye));
-    spec.constraints.min_ips = args.get_f64("min-ips")?;
-    spec.constraints.max_p_mem_uw = args.get_f64("max-power")?;
-
-    let mut policy = policy_by_name(args.get("policy").unwrap())?;
-    let report = run_fleet(&spec, policy.as_mut())?;
-    print!("{}", report.table().render());
-    println!("{}", report.summary_line());
-    if let Some(path) = args.get("csv") {
-        let path = std::path::PathBuf::from(path);
-        report.device_csv().save(&path)?;
-        let streams_path = path.with_extension("streams.csv");
-        report.stream_csv().save(&streams_path)?;
-        println!("wrote {} and {}", path.display(), streams_path.display());
-    }
-    Ok(())
-}
-
 fn print_help() {
     println!(
         "xr-edge-dse — memory-oriented DSE of edge-AI hardware for XR (tinyML'23 reproduction)\n\
-         commands: map | energy | area | ips | edp | fig3d | pareto | hybrid | search | sweep | serve | scenario | fleet | obs | help\n\n{}",
+         commands: map | energy | area | ips | edp | fig3d | pareto | hybrid | search | sweep | serve | scenario | fleet | run | manifest | obs | help\n\n{}",
         usage(&specs())
     );
 }

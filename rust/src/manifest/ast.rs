@@ -1,0 +1,274 @@
+//! `manifest::ast` — the raw (untyped) manifest tree.
+//!
+//! The parser produces a [`Block`] tree that still remembers every key's
+//! span; the binder (`manifest::bind`) turns it into the typed
+//! [`super::ExperimentSpec`]. Keeping this intermediate form means
+//! `--set key=value` overrides and CLI-flag translation both edit the
+//! *same* tree the manifest text parses into, so the two surfaces cannot
+//! drift: one binder validates everything.
+
+use super::lex::Span;
+use super::parse::Diag;
+
+/// One manifest value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// `10`, `0.1`, `1e6`.
+    Num(f64, Span),
+    /// `"artifacts/figures"`.
+    Str(String, Span),
+    /// `detnet`, `p1`, `true`.
+    Ident(String, Span),
+    /// `[7, 28]`, `[sram, p0]`, `[[16, 16], [32, 32]]`.
+    List(Vec<Value>, Span),
+    /// `periodic(10)`, `mask(5)`, `p_mem(8)`.
+    Call(String, Vec<Value>, Span),
+}
+
+impl Value {
+    pub fn span(&self) -> Span {
+        match self {
+            Value::Num(_, s)
+            | Value::Str(_, s)
+            | Value::Ident(_, s)
+            | Value::List(_, s)
+            | Value::Call(_, _, s) => *s,
+        }
+    }
+
+    /// Human label for type-mismatch diagnostics.
+    pub fn describe(&self) -> String {
+        match self {
+            Value::Num(n, _) => format!("number '{}'", fmt_num(*n)),
+            Value::Str(s, _) => format!("string \"{s}\""),
+            Value::Ident(s, _) => format!("identifier '{s}'"),
+            Value::List(..) => "list".to_string(),
+            Value::Call(name, ..) => format!("call '{name}(..)'"),
+        }
+    }
+
+    fn render(&self) -> String {
+        match self {
+            Value::Num(n, _) => fmt_num(*n),
+            Value::Str(s, _) => format!("\"{}\"", s.replace('\\', "\\\\").replace('"', "\\\"")),
+            Value::Ident(s, _) => s.clone(),
+            Value::List(items, _) => {
+                let inner: Vec<String> = items.iter().map(|v| v.render()).collect();
+                format!("[{}]", inner.join(", "))
+            }
+            Value::Call(name, args, _) => {
+                let inner: Vec<String> = args.iter().map(|v| v.render()).collect();
+                format!("{name}({})", inner.join(", "))
+            }
+        }
+    }
+}
+
+/// Format an f64 so it re-lexes to the identical bit pattern (`Display`
+/// for `f64` is shortest-round-trip in Rust).
+pub fn fmt_num(n: f64) -> String {
+    format!("{n}")
+}
+
+/// A `key = value` item.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Entry {
+    pub key: String,
+    pub key_span: Span,
+    pub value: Value,
+}
+
+/// One item of a block body: an entry or a nested block.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Item {
+    Entry(Entry),
+    Block(Block),
+}
+
+/// `kind ["label"] { items }` — the universal manifest shape. The
+/// top-level block's kind selects the experiment subsystem
+/// (query|search|scenario|fleet); nested blocks declare streams, loads,
+/// knob ranges, precision schedules and search-built device pools.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Block {
+    pub kind: String,
+    pub kind_span: Span,
+    /// `"paper_hand_10ips"` in `scenario "paper_hand_10ips" { .. }`, or a
+    /// bare-identifier variant tag (`pool from_search { .. }`).
+    pub label: Option<String>,
+    pub items: Vec<Item>,
+}
+
+impl Block {
+    pub fn new(kind: &str) -> Block {
+        Block { kind: kind.to_string(), kind_span: Span::default(), label: None, items: Vec::new() }
+    }
+
+    pub fn labeled(kind: &str, label: &str) -> Block {
+        Block { label: Some(label.to_string()), ..Block::new(kind) }
+    }
+
+    /// Append a `key = value` entry (builder-style, spans synthesized).
+    pub fn entry(mut self, key: &str, value: Value) -> Block {
+        self.items.push(Item::Entry(Entry {
+            key: key.to_string(),
+            key_span: Span::default(),
+            value,
+        }));
+        self
+    }
+
+    pub fn child(mut self, block: Block) -> Block {
+        self.items.push(Item::Block(block));
+        self
+    }
+
+    /// The entry named `key`, if present.
+    pub fn get(&self, key: &str) -> Option<&Entry> {
+        self.items.iter().find_map(|it| match it {
+            Item::Entry(e) if e.key == key => Some(e),
+            _ => None,
+        })
+    }
+
+    /// Render the canonical manifest text (the `manifest check` resolved
+    /// dump and the round-trip serializer).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out, 0);
+        out
+    }
+
+    fn render_into(&self, out: &mut String, depth: usize) {
+        let pad = "  ".repeat(depth);
+        out.push_str(&pad);
+        out.push_str(&self.kind);
+        if let Some(label) = &self.label {
+            // Quoted unless it lexes as a bare identifier (variant tags).
+            let bare = !label.is_empty()
+                && label.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+                && !label.starts_with(|c: char| c.is_ascii_digit());
+            if bare && self.kind != self.top_level_hint() {
+                out.push_str(&format!(" {label}"));
+            } else {
+                out.push_str(&format!(" \"{label}\""));
+            }
+        }
+        out.push_str(" {\n");
+        for item in &self.items {
+            match item {
+                Item::Entry(e) => {
+                    out.push_str(&"  ".repeat(depth + 1));
+                    out.push_str(&format!("{} = {}\n", e.key, e.value.render()));
+                }
+                Item::Block(b) => b.render_into(out, depth + 1),
+            }
+        }
+        out.push_str(&pad);
+        out.push_str("}\n");
+    }
+
+    /// Experiment-kind blocks always quote their label (it is a run name,
+    /// not a variant tag).
+    fn top_level_hint(&self) -> &str {
+        match self.kind.as_str() {
+            "query" | "search" | "scenario" | "fleet" => self.kind.as_str(),
+            _ => "",
+        }
+    }
+
+    /// Apply one `--set path=value` override. The path is `.`-separated:
+    /// intermediate segments name nested blocks (by kind, or by label for
+    /// labeled repeats like `stream.hand`), the final segment names the
+    /// entry to replace or append. The value text is parsed with the full
+    /// manifest value grammar, so `--set knobs.nodes=[7,28]` works.
+    pub fn set(&mut self, path: &str, value_text: &str) -> crate::Result<()> {
+        let value = super::parse::parse_value_str(value_text, "<--set>")
+            .map_err(|d| anyhow::anyhow!("--set {path}: {d}"))?;
+        let segs: Vec<&str> = path.split('.').filter(|s| !s.is_empty()).collect();
+        anyhow::ensure!(!segs.is_empty(), "--set needs a non-empty key path");
+        self.set_segs(&segs, value, path)
+    }
+
+    fn set_segs(&mut self, segs: &[&str], value: Value, full: &str) -> crate::Result<()> {
+        if segs.len() == 1 {
+            let key = segs[0];
+            for it in &mut self.items {
+                if let Item::Entry(e) = it {
+                    if e.key == key {
+                        e.value = value;
+                        return Ok(());
+                    }
+                }
+            }
+            self.items.push(Item::Entry(Entry {
+                key: key.to_string(),
+                key_span: Span::default(),
+                value,
+            }));
+            return Ok(());
+        }
+        let seg = segs[0];
+        for it in &mut self.items {
+            if let Item::Block(b) = it {
+                if b.kind == seg || b.label.as_deref() == Some(seg) {
+                    return b.set_segs(&segs[1..], value, full);
+                }
+            }
+        }
+        anyhow::bail!(
+            "--set {full}: no block '{seg}' in '{}' (declare it in the manifest first)",
+            self.kind
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn num(n: f64) -> Value {
+        Value::Num(n, Span::default())
+    }
+
+    #[test]
+    fn render_is_canonical_and_reparses() {
+        let b = Block::labeled("scenario", "t")
+            .entry("seconds", num(60.0))
+            .child(Block::labeled("stream", "hand").entry("model", Value::Ident("detnet".into(), Span::default())));
+        let text = b.render();
+        assert!(text.contains("scenario \"t\" {"));
+        assert!(text.contains("  stream \"hand\" {"));
+        let again = super::super::parse::parse_str(&text, "t.xrdse").unwrap();
+        assert_eq!(again.render(), text);
+    }
+
+    #[test]
+    fn set_replaces_and_appends() {
+        let mut b = Block::labeled("search", "s").entry("budget", num(400.0));
+        b.set("budget", "100").unwrap();
+        assert_eq!(b.get("budget").unwrap().value, num(100.0));
+        b.set("seed", "7").unwrap();
+        assert_eq!(b.get("seed").unwrap().value, num(7.0));
+    }
+
+    #[test]
+    fn set_navigates_nested_blocks_by_kind_and_label() {
+        let mut b = Block::labeled("scenario", "t")
+            .child(Block::labeled("stream", "hand").entry("seed", num(42.0)));
+        b.set("stream.seed", "9").unwrap();
+        b.set("hand.model", "edsnet").unwrap();
+        let Item::Block(s) = &b.items[0] else { panic!() };
+        assert_eq!(s.get("seed").unwrap().value, num(9.0));
+        assert!(matches!(&s.get("model").unwrap().value, Value::Ident(m, _) if m == "edsnet"));
+        assert!(b.set("missing.key", "1").is_err());
+    }
+
+    #[test]
+    fn numbers_render_shortest_roundtrip() {
+        for x in [0.1, 1e6, -2.5e-3, 10.0, 0.0000001] {
+            let text = fmt_num(x);
+            assert_eq!(text.parse::<f64>().unwrap().to_bits(), x.to_bits(), "{text}");
+        }
+    }
+}

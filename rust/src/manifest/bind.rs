@@ -1,0 +1,1085 @@
+//! `manifest::bind` — the binder from the raw [`Block`] tree to the typed
+//! [`ExperimentSpec`].
+//!
+//! One binder validates every surface: manifest text, `--set` overrides
+//! and CLI flags all edit the same raw tree before binding, so a key that
+//! works in one place provably works in the others. Every failure is a
+//! spanned [`Diag`] (`error: file:line:col: message`) with a
+//! did-you-mean suggestion when a known key/word is within typo distance
+//! — e.g. `unknown knob 'glb_bankz', did you mean 'glb_banks'?`.
+//!
+//! Binding also *resolves*: every omitted key takes its documented
+//! default, so the bound spec is complete and `spec.to_manifest()` is the
+//! canonical resolved dump (`xr-edge-dse manifest check` prints it; the
+//! round-trip test re-binds it and requires equality).
+
+use crate::arch::MemFlavor;
+use crate::eval::AssignSpec;
+use crate::search::Family;
+use crate::tech::{paper_mram_for, Device, Node};
+use crate::workload::PrecisionPolicy;
+
+use super::ast::{Block, Entry, Item, Value};
+use super::lex::Span;
+use super::parse::{did_you_mean, Diag};
+use super::spec::{
+    ArrivalDecl, AssignAxis, BackendSel, DeviceAxis, ExperimentKind, ExperimentSpec, FleetPlan,
+    LoadDecl, PoolSel, PrecisionDecl, QueryMetric, QuerySpec, RunnerSel, ScenarioSpec,
+    SearchSpec, Sinks, SpaceBase, SpaceSpec, StreamDecl,
+};
+
+/// The knob vocabulary of a `knobs { .. }` block — exactly the
+/// [`crate::search::KnobSpace`] axes, plus `base`.
+pub const KNOB_KEYS: &[&str] = &[
+    "base", "families", "pe_grids", "weight_bytes", "input_bytes", "accum_bytes", "glb_bytes",
+    "glb_banks", "gwb_bytes", "wide_bus_bits", "nodes", "mrams", "assigns", "weight_bits",
+    "act_bits",
+];
+
+const SINK_KEYS: &[&str] = &["csv", "trace", "metrics"];
+const QUERY_KEYS: &[&str] = &[
+    "archs", "nets", "nodes", "devices", "assignments", "precisions", "ips", "baseline",
+    "feasible", "pareto", "top_k", "csv", "trace", "metrics",
+];
+const SEARCH_KEYS: &[&str] = &[
+    "net", "objective", "strategy", "budget", "batch", "seed", "min_ips", "max_area_mm2",
+    "max_p_mem_uw", "csv", "trace", "metrics",
+];
+const SCENARIO_KEYS: &[&str] = &[
+    "arch", "node", "mram", "seconds", "time_scale", "backend", "artifacts", "runner", "csv",
+    "trace", "metrics",
+];
+const STREAM_KEYS: &[&str] =
+    &["model", "arrival", "flavor", "queue_depth", "precision", "seed", "exec_floor_s"];
+const FLEET_KEYS: &[&str] = &[
+    "devices", "seconds", "seed", "node", "mram", "policy", "pool", "min_ips", "max_p_mem_uw",
+    "max_util", "csv", "trace", "metrics",
+];
+const LOAD_KEYS: &[&str] =
+    &["model", "arrival", "count", "queue_depth", "precision", "exec_floor_s"];
+const POOL_KEYS: &[&str] = &[
+    "net", "objective", "strategy", "budget", "batch", "seed", "min_ips", "max_area_mm2",
+    "max_p_mem_uw", "limit",
+];
+
+const ARCH_NAMES: &[&str] =
+    &["cpu", "eyeriss", "eyeriss_v1", "eyeriss_v2", "simba", "simba_v1", "simba_v2"];
+const NET_NAMES: &[&str] = &["detnet", "edsnet", "tiny_cnn"];
+const DEVICE_NAMES: &[&str] = &["sram", "stt", "sot", "vgsot"];
+const MRAM_NAMES: &[&str] = &["stt", "sot", "vgsot"];
+const FLAVOR_NAMES: &[&str] = &["sram", "sram_only", "p0", "p1"];
+const METRIC_NAMES: &[&str] = &["energy", "area", "edp", "p_mem", "latency"];
+
+/// Bind one parsed experiment block into a fully-resolved spec. `file`
+/// labels the diagnostics.
+pub fn bind(b: &Block, file: &str) -> Result<ExperimentSpec, Diag> {
+    let bx = Binder { file };
+    let kind = match b.kind.as_str() {
+        "query" => ExperimentKind::Query(bx.query(b)?),
+        "search" => ExperimentKind::Search(bx.search(b)?),
+        "scenario" => ExperimentKind::Scenario(bx.scenario(b)?),
+        "fleet" => ExperimentKind::Fleet(bx.fleet(b)?),
+        other => {
+            return Err(bx.unknown(
+                b.kind_span,
+                "experiment kind",
+                other,
+                &["query", "search", "scenario", "fleet"],
+            ))
+        }
+    };
+    Ok(ExperimentSpec {
+        name: b.label.clone().unwrap_or_else(|| b.kind.clone()),
+        kind,
+        sinks: bx.sinks(b)?,
+    })
+}
+
+struct Binder<'a> {
+    file: &'a str,
+}
+
+impl Binder<'_> {
+    fn err(&self, span: Span, msg: &str) -> Diag {
+        Diag::span(self.file, span, msg)
+    }
+
+    fn unknown(&self, span: Span, what: &str, word: &str, known: &[&str]) -> Diag {
+        self.err(span, &format!("unknown {what} '{word}'{}", did_you_mean(word, known)))
+    }
+
+    /// Structural pass over a block: every entry key must be in `keys`
+    /// and appear once; every nested block's kind must be in `children`.
+    fn check(&self, b: &Block, keys: &[&str], children: &[&str], knob_block: bool) -> Result<(), Diag> {
+        let mut seen: Vec<&str> = Vec::new();
+        let mut seen_children: Vec<&str> = Vec::new();
+        for item in &b.items {
+            match item {
+                Item::Entry(e) => {
+                    if !keys.contains(&e.key.as_str()) {
+                        return Err(if knob_block {
+                            self.unknown(e.key_span, "knob", &e.key, keys)
+                        } else {
+                            self.err(
+                                e.key_span,
+                                &format!(
+                                    "unknown key '{}' in '{}'{}",
+                                    e.key,
+                                    b.kind,
+                                    did_you_mean(&e.key, keys)
+                                ),
+                            )
+                        });
+                    }
+                    if seen.contains(&e.key.as_str()) {
+                        return Err(self.err(e.key_span, &format!("duplicate key '{}'", e.key)));
+                    }
+                    seen.push(&e.key);
+                }
+                Item::Block(cb) => {
+                    if !children.contains(&cb.kind.as_str()) {
+                        return Err(self.err(
+                            cb.kind_span,
+                            &format!(
+                                "unknown block '{}' in '{}'{}",
+                                cb.kind,
+                                b.kind,
+                                did_you_mean(&cb.kind, children)
+                            ),
+                        ));
+                    }
+                    // Repeatable blocks carry labels (stream/load); the
+                    // singleton ones (knobs, pool, precision) must not
+                    // repeat.
+                    if cb.label.is_none() {
+                        if seen_children.contains(&cb.kind.as_str()) {
+                            return Err(self
+                                .err(cb.kind_span, &format!("duplicate block '{}'", cb.kind)));
+                        }
+                        seen_children.push(&cb.kind);
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // ---- typed entry readers --------------------------------------------
+
+    fn num(&self, e: &Entry) -> Result<f64, Diag> {
+        match &e.value {
+            Value::Num(n, _) => Ok(*n),
+            other => Err(self.err(
+                other.span(),
+                &format!("expected a number for '{}', found {}", e.key, other.describe()),
+            )),
+        }
+    }
+
+    fn pos_num(&self, e: &Entry) -> Result<f64, Diag> {
+        let n = self.num(e)?;
+        if n > 0.0 {
+            Ok(n)
+        } else {
+            Err(self.err(
+                e.value.span(),
+                &format!("'{}' must be positive (got {})", e.key, super::ast::fmt_num(n)),
+            ))
+        }
+    }
+
+    fn uint(&self, e: &Entry) -> Result<u64, Diag> {
+        let n = self.num(e)?;
+        if n >= 0.0 && n.fract() == 0.0 && n <= u64::MAX as f64 {
+            Ok(n as u64)
+        } else {
+            Err(self.err(
+                e.value.span(),
+                &format!(
+                    "expected a non-negative integer for '{}', found {}",
+                    e.key,
+                    super::ast::fmt_num(n)
+                ),
+            ))
+        }
+    }
+
+    fn count(&self, e: &Entry) -> Result<usize, Diag> {
+        Ok(self.uint(e)? as usize)
+    }
+
+    /// A bare identifier or quoted string.
+    fn word(&self, e: &Entry) -> Result<(String, Span), Diag> {
+        match &e.value {
+            Value::Ident(s, sp) | Value::Str(s, sp) => Ok((s.clone(), *sp)),
+            other => Err(self.err(
+                other.span(),
+                &format!("expected a name for '{}', found {}", e.key, other.describe()),
+            )),
+        }
+    }
+
+    /// A quoted string (paths; idents cannot spell `/` or `.`).
+    fn path(&self, e: &Entry) -> Result<String, Diag> {
+        match &e.value {
+            Value::Str(s, _) => Ok(s.clone()),
+            other => Err(self.err(
+                other.span(),
+                &format!(
+                    "expected a quoted string path for '{}', found {}",
+                    e.key,
+                    other.describe()
+                ),
+            )),
+        }
+    }
+
+    fn boolean(&self, e: &Entry) -> Result<bool, Diag> {
+        let (w, sp) = self.word(e)?;
+        match w.as_str() {
+            "true" => Ok(true),
+            "false" => Ok(false),
+            other => Err(self.unknown(sp, &format!("value for '{}'", e.key), other, &["true", "false"])),
+        }
+    }
+
+    /// One of an enumerated keyword set, with did-you-mean.
+    fn keyword(&self, e: &Entry, what: &str, known: &[&str]) -> Result<(String, Span), Diag> {
+        let (w, sp) = self.word(e)?;
+        if known.contains(&w.as_str()) {
+            Ok((w, sp))
+        } else {
+            Err(self.unknown(sp, what, &w, known))
+        }
+    }
+
+    fn node_num(&self, v: &Value, key: &str) -> Result<Node, Diag> {
+        let n = match v {
+            Value::Num(n, _) => *n,
+            other => {
+                return Err(self.err(
+                    other.span(),
+                    &format!("expected a node in nm for '{key}', found {}", other.describe()),
+                ))
+            }
+        };
+        if n.fract() == 0.0 && n > 0.0 {
+            if let Ok(node) = Node::from_nm(n as usize) {
+                return Ok(node);
+            }
+        }
+        Err(self.err(
+            v.span(),
+            &format!("unknown node '{}' (45|40|28|22|7)", super::ast::fmt_num(n)),
+        ))
+    }
+
+    fn device_word(&self, w: &str, sp: Span, known: &[&str]) -> Result<Device, Diag> {
+        match w {
+            "sram" => Ok(Device::Sram),
+            "stt" => Ok(Device::SttMram),
+            "sot" => Ok(Device::SotMram),
+            "vgsot" => Ok(Device::VgsotMram),
+            other => Err(self.unknown(sp, "device", other, known)),
+        }
+    }
+
+    fn flavor_word(&self, w: &str, sp: Span) -> Result<MemFlavor, Diag> {
+        match w {
+            "sram" | "sram_only" => Ok(MemFlavor::SramOnly),
+            "p0" => Ok(MemFlavor::P0),
+            "p1" => Ok(MemFlavor::P1),
+            other => Err(self.unknown(sp, "memory flavor", other, FLAVOR_NAMES)),
+        }
+    }
+
+    fn precision_name(&self, w: &str, sp: Span) -> Result<String, Diag> {
+        if PrecisionPolicy::from_str(w).is_ok() {
+            Ok(w.to_string())
+        } else {
+            Err(self.err(
+                sp,
+                &format!("unknown precision policy '{w}' (int8|int4|fp16|w<N>a<M>)"),
+            ))
+        }
+    }
+
+    fn arrival(&self, e: &Entry) -> Result<ArrivalDecl, Diag> {
+        match &e.value {
+            Value::Call(name, args, sp) => {
+                let rate = match args.as_slice() {
+                    [Value::Num(n, _)] => *n,
+                    _ => {
+                        return Err(self.err(
+                            *sp,
+                            &format!("{name}(..) takes exactly one number (the rate in frames/s)"),
+                        ))
+                    }
+                };
+                match name.as_str() {
+                    "periodic" => Ok(ArrivalDecl::Periodic { fps: rate }),
+                    "poisson" => Ok(ArrivalDecl::Poisson { rate }),
+                    other => Err(self.unknown(*sp, "arrival process", other, &["periodic", "poisson"])),
+                }
+            }
+            other => Err(self.err(
+                other.span(),
+                &format!(
+                    "expected periodic(fps) or poisson(rate) for '{}', found {}",
+                    e.key,
+                    other.describe()
+                ),
+            )),
+        }
+    }
+
+    fn list<'v>(&self, e: &'v Entry) -> Result<&'v [Value], Diag> {
+        match &e.value {
+            Value::List(items, _) => Ok(items),
+            other => Err(self.err(
+                other.span(),
+                &format!("expected a list for '{}', found {}", e.key, other.describe()),
+            )),
+        }
+    }
+
+    fn word_list(&self, e: &Entry, what: &str, known: &[&str]) -> Result<Vec<String>, Diag> {
+        let mut out = Vec::new();
+        for v in self.list(e)? {
+            match v {
+                Value::Ident(s, sp) | Value::Str(s, sp) => {
+                    if known.contains(&s.as_str()) {
+                        out.push(s.clone());
+                    } else {
+                        return Err(self.unknown(*sp, what, s, known));
+                    }
+                }
+                other => {
+                    return Err(self.err(
+                        other.span(),
+                        &format!("expected a {what} name, found {}", other.describe()),
+                    ))
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn uint_list(&self, e: &Entry) -> Result<Vec<u64>, Diag> {
+        let mut out = Vec::new();
+        for v in self.list(e)? {
+            match v {
+                Value::Num(n, sp) if *n >= 0.0 && n.fract() == 0.0 => out.push(*n as u64),
+                other => {
+                    return Err(self.err(
+                        other.span(),
+                        &format!(
+                            "expected a non-negative integer in '{}', found {}",
+                            e.key,
+                            other.describe()
+                        ),
+                    ))
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    // ---- sinks -----------------------------------------------------------
+
+    fn sinks(&self, b: &Block) -> Result<Sinks, Diag> {
+        let mut s = Sinks::default();
+        for item in &b.items {
+            if let Item::Entry(e) = item {
+                if SINK_KEYS.contains(&e.key.as_str()) {
+                    let p = Some(self.path(e)?);
+                    match e.key.as_str() {
+                        "csv" => s.csv = p,
+                        "trace" => s.trace = p,
+                        _ => s.metrics = p,
+                    }
+                }
+            }
+        }
+        Ok(s)
+    }
+
+    // ---- query -----------------------------------------------------------
+
+    fn query(&self, b: &Block) -> Result<QuerySpec, Diag> {
+        self.check(b, QUERY_KEYS, &[], false)?;
+        let mut q = QuerySpec::default();
+        for item in &b.items {
+            let Item::Entry(e) = item else { continue };
+            match e.key.as_str() {
+                "archs" => q.archs = self.word_list(e, "architecture", ARCH_NAMES)?,
+                "nets" => q.nets = self.word_list(e, "network", NET_NAMES)?,
+                "nodes" => {
+                    let mut nodes = Vec::new();
+                    for v in self.list(e)? {
+                        nodes.push(self.node_num(v, &e.key)?);
+                    }
+                    q.nodes = nodes;
+                }
+                "devices" => q.devices = self.device_axis(e)?,
+                "assignments" => q.assignments = self.assign_axis(e)?,
+                "precisions" => {
+                    let mut ps = Vec::new();
+                    for v in self.list(e)? {
+                        match v {
+                            Value::Ident(s, sp) | Value::Str(s, sp) => {
+                                ps.push(self.precision_name(s, *sp)?)
+                            }
+                            other => {
+                                return Err(self.err(
+                                    other.span(),
+                                    &format!(
+                                        "expected a precision policy name, found {}",
+                                        other.describe()
+                                    ),
+                                ))
+                            }
+                        }
+                    }
+                    q.precisions = ps;
+                }
+                "ips" => q.ips = self.pos_num(e)?,
+                "baseline" => {
+                    let (w, _) = self.keyword(e, "baseline", &["sram", "none"])?;
+                    q.baseline_sram = w == "sram";
+                }
+                "feasible" => q.feasible = self.boolean(e)?,
+                "pareto" => q.pareto = self.boolean(e)?,
+                "top_k" => {
+                    let Value::Call(name, args, sp) = &e.value else {
+                        return Err(self.err(
+                            e.value.span(),
+                            &format!(
+                                "expected <metric>(<k>) for 'top_k' (e.g. p_mem(8)), found {}",
+                                e.value.describe()
+                            ),
+                        ));
+                    };
+                    let metric = match name.as_str() {
+                        "energy" => QueryMetric::Energy,
+                        "area" => QueryMetric::Area,
+                        "edp" => QueryMetric::Edp,
+                        "p_mem" => QueryMetric::PMem,
+                        "latency" => QueryMetric::Latency,
+                        other => return Err(self.unknown(*sp, "metric", other, METRIC_NAMES)),
+                    };
+                    let k = match args.as_slice() {
+                        [Value::Num(n, _)] if *n >= 1.0 && n.fract() == 0.0 => *n as usize,
+                        _ => {
+                            return Err(self
+                                .err(*sp, &format!("{name}(..) takes exactly one positive integer")))
+                        }
+                    };
+                    q.top_k = Some((metric, k));
+                }
+                _ => {} // sinks
+            }
+        }
+        Ok(q)
+    }
+
+    fn device_axis(&self, e: &Entry) -> Result<DeviceAxis, Diag> {
+        match &e.value {
+            Value::Ident(s, sp) if s == "paper" => {
+                let _ = sp;
+                Ok(DeviceAxis::Paper)
+            }
+            Value::Ident(s, sp) => Ok(DeviceAxis::Fixed(self.device_word(
+                s,
+                *sp,
+                &["paper", "sram", "stt", "sot", "vgsot"],
+            )?)),
+            Value::List(items, _) => {
+                let mut ds = Vec::new();
+                for v in items {
+                    match v {
+                        Value::Ident(s, sp) => ds.push(self.device_word(s, *sp, DEVICE_NAMES)?),
+                        other => {
+                            return Err(self.err(
+                                other.span(),
+                                &format!("expected a device name, found {}", other.describe()),
+                            ))
+                        }
+                    }
+                }
+                Ok(DeviceAxis::Each(ds))
+            }
+            other => Err(self.err(
+                other.span(),
+                &format!(
+                    "expected paper, a device name, or a device list for '{}', found {}",
+                    e.key,
+                    other.describe()
+                ),
+            )),
+        }
+    }
+
+    fn assign_axis(&self, e: &Entry) -> Result<AssignAxis, Diag> {
+        match &e.value {
+            Value::Ident(s, _) if s == "lattice" => Ok(AssignAxis::Lattice),
+            Value::Ident(s, sp) => {
+                Err(self.unknown(*sp, "assignment axis", s, &["lattice"]))
+            }
+            Value::List(items, sp) => {
+                let mut flavors = Vec::new();
+                let mut masks = Vec::new();
+                for v in items {
+                    match v {
+                        Value::Ident(s, vsp) => flavors.push(self.flavor_word(s, *vsp)?),
+                        Value::Call(name, args, vsp) if name == "mask" => {
+                            match args.as_slice() {
+                                [Value::Num(n, _)] if *n >= 0.0 && n.fract() == 0.0 => {
+                                    masks.push(*n as u32)
+                                }
+                                _ => {
+                                    return Err(self.err(
+                                        *vsp,
+                                        "mask(..) takes exactly one non-negative integer",
+                                    ))
+                                }
+                            }
+                        }
+                        other => {
+                            return Err(self.err(
+                                other.span(),
+                                &format!(
+                                    "expected a flavor name or mask(<m>), found {}",
+                                    other.describe()
+                                ),
+                            ))
+                        }
+                    }
+                }
+                match (flavors.is_empty(), masks.is_empty()) {
+                    (false, true) => Ok(AssignAxis::Flavors(flavors)),
+                    (true, false) => Ok(AssignAxis::Masks(masks)),
+                    _ => Err(self.err(
+                        *sp,
+                        "an assignment list is either all flavors or all mask(..) calls",
+                    )),
+                }
+            }
+            other => Err(self.err(
+                other.span(),
+                &format!(
+                    "expected lattice or a flavor/mask list for '{}', found {}",
+                    e.key,
+                    other.describe()
+                ),
+            )),
+        }
+    }
+
+    // ---- search ----------------------------------------------------------
+
+    fn search(&self, b: &Block) -> Result<SearchSpec, Diag> {
+        self.check(b, SEARCH_KEYS, &["knobs"], false)?;
+        let mut s = SearchSpec::default();
+        self.search_entries(b, &mut s)?;
+        for item in &b.items {
+            if let Item::Block(kb) = item {
+                self.knobs(kb, &mut s.space)?;
+            }
+        }
+        Ok(s)
+    }
+
+    /// The entry keys shared by `search` blocks and `pool from_search`.
+    fn search_entries(&self, b: &Block, s: &mut SearchSpec) -> Result<(), Diag> {
+        for item in &b.items {
+            let Item::Entry(e) = item else { continue };
+            match e.key.as_str() {
+                "net" => s.net = self.keyword(e, "network", NET_NAMES)?.0,
+                "objective" => {
+                    let (w, _) = self.keyword(e, "objective", &["energy", "area", "edp"])?;
+                    s.objective = crate::search::Objective::from_str(&w)
+                        .expect("keyword() validated the objective");
+                }
+                "strategy" => {
+                    s.strategy = self
+                        .keyword(e, "strategy", &["exhaustive", "random", "hill", "anneal", "all"])?
+                        .0
+                }
+                "budget" => s.budget = self.count(e)?,
+                "batch" => s.batch = self.count(e)?,
+                "seed" => s.seed = self.uint(e)?,
+                "min_ips" => s.min_ips = self.pos_num(e)?,
+                "max_area_mm2" => s.max_area_mm2 = Some(self.pos_num(e)?),
+                "max_p_mem_uw" => s.max_p_mem_uw = Some(self.pos_num(e)?),
+                _ => {} // sinks / pool-only keys, handled by the caller
+            }
+        }
+        Ok(())
+    }
+
+    fn knobs(&self, b: &Block, space: &mut SpaceSpec) -> Result<(), Diag> {
+        self.check(b, KNOB_KEYS, &[], true)?;
+        for item in &b.items {
+            let Item::Entry(e) = item else { continue };
+            match e.key.as_str() {
+                "base" => {
+                    let (w, _) = self.keyword(e, "knob space", &["paper", "paper_mixed", "tiny"])?;
+                    space.base = Some(match w.as_str() {
+                        "paper" => SpaceBase::Paper,
+                        "paper_mixed" => SpaceBase::PaperMixed,
+                        _ => SpaceBase::Tiny,
+                    });
+                }
+                "families" => {
+                    let words = self.word_list(e, "family", &["rs", "ws"])?;
+                    space.families = Some(
+                        words
+                            .iter()
+                            .map(|w| {
+                                if w == "rs" {
+                                    Family::RowStationary
+                                } else {
+                                    Family::WeightStationary
+                                }
+                            })
+                            .collect(),
+                    );
+                }
+                "pe_grids" => {
+                    let mut grids = Vec::new();
+                    for v in self.list(e)? {
+                        match v {
+                            Value::List(pair, sp) => match pair.as_slice() {
+                                [Value::Num(a, _), Value::Num(c, _)]
+                                    if *a >= 1.0
+                                        && *c >= 1.0
+                                        && a.fract() == 0.0
+                                        && c.fract() == 0.0 =>
+                                {
+                                    grids.push((*a as usize, *c as usize))
+                                }
+                                _ => {
+                                    return Err(self.err(
+                                        *sp,
+                                        "a PE grid is a two-integer list, e.g. [64, 64]",
+                                    ))
+                                }
+                            },
+                            other => {
+                                return Err(self.err(
+                                    other.span(),
+                                    &format!(
+                                        "expected a [rows, cols] pair, found {}",
+                                        other.describe()
+                                    ),
+                                ))
+                            }
+                        }
+                    }
+                    space.pe_grids = Some(grids);
+                }
+                "weight_bytes" | "input_bytes" | "accum_bytes" | "glb_bytes" | "glb_banks"
+                | "gwb_bytes" | "wide_bus_bits" => {
+                    let vals: Vec<usize> =
+                        self.uint_list(e)?.into_iter().map(|v| v as usize).collect();
+                    match e.key.as_str() {
+                        "weight_bytes" => space.weight_bytes = Some(vals),
+                        "input_bytes" => space.input_bytes = Some(vals),
+                        "accum_bytes" => space.accum_bytes = Some(vals),
+                        "glb_bytes" => space.glb_bytes = Some(vals),
+                        "glb_banks" => space.glb_banks = Some(vals),
+                        "gwb_bytes" => space.gwb_bytes = Some(vals),
+                        _ => space.wide_bus_bits = Some(vals),
+                    }
+                }
+                "nodes" => {
+                    let mut nodes = Vec::new();
+                    for v in self.list(e)? {
+                        nodes.push(self.node_num(v, &e.key)?);
+                    }
+                    space.nodes = Some(nodes);
+                }
+                "mrams" => {
+                    let words = self.word_list(e, "MRAM device", MRAM_NAMES)?;
+                    let mut ds = Vec::new();
+                    for w in &words {
+                        ds.push(self.device_word(w, e.value.span(), MRAM_NAMES)?);
+                    }
+                    space.mrams = Some(ds);
+                }
+                "assigns" => {
+                    let axis = self.assign_axis(e)?;
+                    space.assigns = Some(match axis {
+                        AssignAxis::Flavors(fs) => {
+                            fs.into_iter().map(AssignSpec::Flavor).collect()
+                        }
+                        AssignAxis::Masks(ms) => ms.into_iter().map(AssignSpec::Mask).collect(),
+                        AssignAxis::Lattice => {
+                            return Err(self.err(
+                                e.value.span(),
+                                "the 'assigns' knob takes an explicit flavor/mask list, not 'lattice'",
+                            ))
+                        }
+                    });
+                }
+                "weight_bits" | "act_bits" => {
+                    let vals: Vec<u32> =
+                        self.uint_list(e)?.into_iter().map(|v| v as u32).collect();
+                    if e.key == "weight_bits" {
+                        space.weight_bits = Some(vals);
+                    } else {
+                        space.act_bits = Some(vals);
+                    }
+                }
+                _ => unreachable!("check() admits only KNOB_KEYS"),
+            }
+        }
+        Ok(())
+    }
+
+    // ---- scenario --------------------------------------------------------
+
+    fn scenario(&self, b: &Block) -> Result<ScenarioSpec, Diag> {
+        self.check(b, SCENARIO_KEYS, &["stream"], false)?;
+        let mut s = ScenarioSpec::default();
+        let mut mram_set = false;
+        for item in &b.items {
+            match item {
+                Item::Entry(e) => match e.key.as_str() {
+                    "arch" => s.arch = self.keyword(e, "architecture", ARCH_NAMES)?.0,
+                    "node" => s.node = self.node_num(&e.value, &e.key)?,
+                    "mram" => {
+                        s.mram = {
+                            let (w, sp) = self.word(e)?;
+                            self.device_word(&w, sp, DEVICE_NAMES)?
+                        };
+                        mram_set = true;
+                    }
+                    "seconds" => s.seconds = self.pos_num(e)?,
+                    "time_scale" => s.time_scale = self.pos_num(e)?,
+                    "backend" => {
+                        let (w, _) =
+                            self.keyword(e, "backend", &["auto", "pjrt", "synthetic"])?;
+                        s.backend = match w.as_str() {
+                            "auto" => BackendSel::Auto,
+                            "pjrt" => BackendSel::Pjrt,
+                            _ => BackendSel::Synthetic,
+                        };
+                    }
+                    "artifacts" => s.artifacts_dir = self.path(e)?,
+                    "runner" => {
+                        let (w, _) = self.keyword(e, "runner", &["virtual", "threads"])?;
+                        s.runner =
+                            if w == "virtual" { RunnerSel::Virtual } else { RunnerSel::Threads };
+                    }
+                    _ => {} // sinks
+                },
+                Item::Block(sb) => s.streams.push(self.stream(sb)?),
+            }
+        }
+        if !mram_set {
+            s.mram = paper_mram_for(s.node);
+        }
+        Ok(s)
+    }
+
+    fn stream(&self, b: &Block) -> Result<StreamDecl, Diag> {
+        self.check(b, STREAM_KEYS, &["precision"], false)?;
+        let Some(name) = b.label.clone() else {
+            return Err(self.err(
+                b.kind_span,
+                "a stream needs a name: stream \"hand\" { .. }",
+            ));
+        };
+        let mut model = None;
+        let mut arrival = None;
+        let mut d = StreamDecl::new(&name, "", ArrivalDecl::Periodic { fps: 1.0 }, MemFlavor::P1);
+        for item in &b.items {
+            match item {
+                Item::Entry(e) => match e.key.as_str() {
+                    "model" => model = Some(self.keyword(e, "network", NET_NAMES)?.0),
+                    "arrival" => arrival = Some(self.arrival(e)?),
+                    "flavor" => {
+                        d.flavor = {
+                            let (w, sp) = self.word(e)?;
+                            self.flavor_word(&w, sp)?
+                        }
+                    }
+                    "queue_depth" => d.queue_depth = self.count(e)?,
+                    "precision" => {
+                        let (w, sp) = self.word(e)?;
+                        d.precision = PrecisionDecl::named(&self.precision_name(&w, sp)?);
+                    }
+                    "seed" => d.seed = self.uint(e)?,
+                    "exec_floor_s" => d.exec_floor_s = self.num(e)?,
+                    _ => unreachable!("check() admits only STREAM_KEYS"),
+                },
+                Item::Block(pb) => d.precision = self.precision_block(pb)?,
+            }
+        }
+        d.model = model.ok_or_else(|| {
+            self.err(b.kind_span, &format!("stream '{name}' is missing 'model'"))
+        })?;
+        d.arrival = arrival.ok_or_else(|| {
+            self.err(b.kind_span, &format!("stream '{name}' is missing 'arrival'"))
+        })?;
+        Ok(d)
+    }
+
+    /// `precision { default = w4a8  conv1 = int8 }` — every key except
+    /// `default` names a layer override.
+    fn precision_block(&self, b: &Block) -> Result<PrecisionDecl, Diag> {
+        let mut decl = PrecisionDecl::named("int8");
+        let mut seen: Vec<&str> = Vec::new();
+        for item in &b.items {
+            match item {
+                Item::Entry(e) => {
+                    if seen.contains(&e.key.as_str()) {
+                        return Err(self.err(e.key_span, &format!("duplicate key '{}'", e.key)));
+                    }
+                    seen.push(&e.key);
+                    let (w, sp) = self.word(e)?;
+                    let name = self.precision_name(&w, sp)?;
+                    if e.key == "default" {
+                        decl.default = name;
+                    } else {
+                        decl.overrides.push((e.key.clone(), name));
+                    }
+                }
+                Item::Block(cb) => {
+                    return Err(self.err(
+                        cb.kind_span,
+                        &format!("unknown block '{}' in 'precision'", cb.kind),
+                    ))
+                }
+            }
+        }
+        Ok(decl)
+    }
+
+    // ---- fleet -----------------------------------------------------------
+
+    fn fleet(&self, b: &Block) -> Result<FleetPlan, Diag> {
+        self.check(b, FLEET_KEYS, &["load", "pool"], false)?;
+        let mut f = FleetPlan::default();
+        let mut mram_set = false;
+        for item in &b.items {
+            match item {
+                Item::Entry(e) => match e.key.as_str() {
+                    "devices" => f.devices = self.count(e)?,
+                    "seconds" => f.seconds = self.pos_num(e)?,
+                    "seed" => f.seed = self.uint(e)?,
+                    "node" => f.node = self.node_num(&e.value, &e.key)?,
+                    "mram" => {
+                        f.mram = {
+                            let (w, sp) = self.word(e)?;
+                            self.device_word(&w, sp, DEVICE_NAMES)?
+                        };
+                        mram_set = true;
+                    }
+                    "policy" => {
+                        let (w, _) = self.keyword(
+                            e,
+                            "placement policy",
+                            &["round_robin", "rr", "weighted", "weighted_random", "least_loaded", "ll"],
+                        )?;
+                        f.policy = w.replace('_', "-");
+                    }
+                    "pool" => {
+                        let (w, sp) = self.word(e)?;
+                        if w != "palette" {
+                            return Err(self.unknown(sp, "device pool", &w, &["palette"]));
+                        }
+                        f.pool = PoolSel::Palette;
+                    }
+                    "min_ips" => f.min_ips = Some(self.pos_num(e)?),
+                    "max_p_mem_uw" => f.max_p_mem_uw = Some(self.pos_num(e)?),
+                    "max_util" => f.max_util = Some(self.pos_num(e)?),
+                    _ => {} // sinks
+                },
+                Item::Block(cb) if cb.kind == "pool" => f.pool = self.pool(cb)?,
+                Item::Block(cb) => f.loads.push(self.load(cb)?),
+            }
+        }
+        if !mram_set {
+            f.mram = paper_mram_for(f.node);
+        }
+        Ok(f)
+    }
+
+    /// `pool from_search { <search keys> limit = 4 knobs { .. } }`.
+    fn pool(&self, b: &Block) -> Result<PoolSel, Diag> {
+        match b.label.as_deref() {
+            Some("from_search") => {}
+            Some(other) => {
+                return Err(self.unknown(b.kind_span, "pool variant", other, &["from_search"]))
+            }
+            None => {
+                return Err(self.err(
+                    b.kind_span,
+                    "a pool block needs a variant tag: pool from_search { .. }",
+                ))
+            }
+        }
+        self.check(b, POOL_KEYS, &["knobs"], false)?;
+        let mut s = SearchSpec::default();
+        self.search_entries(b, &mut s)?;
+        let mut limit = 4usize;
+        for item in &b.items {
+            match item {
+                Item::Entry(e) if e.key == "limit" => limit = self.count(e)?,
+                Item::Block(kb) => self.knobs(kb, &mut s.space)?,
+                _ => {}
+            }
+        }
+        Ok(PoolSel::FromSearch { search: Box::new(s), limit })
+    }
+
+    fn load(&self, b: &Block) -> Result<LoadDecl, Diag> {
+        self.check(b, LOAD_KEYS, &[], false)?;
+        let Some(name) = b.label.clone() else {
+            return Err(
+                self.err(b.kind_span, "a load needs a name: load \"hand\" { .. }")
+            );
+        };
+        let mut model = None;
+        let mut arrival = None;
+        let mut count = None;
+        let mut d = LoadDecl::new(&name, "", ArrivalDecl::Periodic { fps: 1.0 }, 0);
+        for item in &b.items {
+            let Item::Entry(e) = item else { continue };
+            match e.key.as_str() {
+                "model" => model = Some(self.keyword(e, "network", NET_NAMES)?.0),
+                "arrival" => arrival = Some(self.arrival(e)?),
+                "count" => count = Some(self.count(e)?),
+                "queue_depth" => d.queue_depth = self.count(e)?,
+                "precision" => {
+                    let (w, sp) = self.word(e)?;
+                    d.precision = PrecisionDecl::named(&self.precision_name(&w, sp)?);
+                }
+                "exec_floor_s" => d.exec_floor_s = self.num(e)?,
+                _ => unreachable!("check() admits only LOAD_KEYS"),
+            }
+        }
+        d.model = model
+            .ok_or_else(|| self.err(b.kind_span, &format!("load '{name}' is missing 'model'")))?;
+        d.arrival = arrival
+            .ok_or_else(|| self.err(b.kind_span, &format!("load '{name}' is missing 'arrival'")))?;
+        d.count = count
+            .ok_or_else(|| self.err(b.kind_span, &format!("load '{name}' is missing 'count'")))?;
+        Ok(d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::parse::parse_str;
+    use super::*;
+
+    fn bind_src(src: &str) -> Result<ExperimentSpec, Diag> {
+        bind(&parse_str(src, "t.xrdse")?, "t.xrdse")
+    }
+
+    #[test]
+    fn minimal_scenario_binds_with_defaults() {
+        let spec = bind_src(
+            r#"scenario "s" {
+                stream "hand" { model = detnet  arrival = periodic(10)  flavor = p1 }
+            }"#,
+        )
+        .unwrap();
+        let ExperimentKind::Scenario(s) = &spec.kind else { panic!() };
+        assert_eq!(s.node, Node::N7);
+        assert_eq!(s.mram, Device::VgsotMram);
+        assert_eq!(s.seconds, 60.0);
+        assert_eq!(s.streams.len(), 1);
+        assert_eq!(s.streams[0].queue_depth, 4);
+        assert_eq!(s.streams[0].seed, 42);
+        assert_eq!(s.streams[0].precision, PrecisionDecl::named("int8"));
+    }
+
+    #[test]
+    fn mram_default_tracks_the_node() {
+        let spec = bind_src(
+            r#"scenario "s" {
+                node = 28
+                stream "h" { model = detnet  arrival = periodic(10)  flavor = p1 }
+            }"#,
+        )
+        .unwrap();
+        let ExperimentKind::Scenario(s) = &spec.kind else { panic!() };
+        assert_eq!(s.mram, paper_mram_for(Node::N28));
+    }
+
+    #[test]
+    fn unknown_knob_gets_the_issue_diagnostic() {
+        let err = bind_src(
+            "search \"s\" {\n  knobs {\n    glb_bankz = [1, 2]\n  }\n}",
+        )
+        .unwrap_err();
+        assert_eq!(
+            err.to_string(),
+            "error: t.xrdse:3:5: unknown knob 'glb_bankz', did you mean 'glb_banks'?"
+        );
+    }
+
+    #[test]
+    fn duplicate_and_unknown_keys_are_spanned() {
+        let err = bind_src("search \"s\" {\n  budget = 1\n  budget = 2\n}").unwrap_err();
+        assert_eq!(err.to_string(), "error: t.xrdse:3:3: duplicate key 'budget'");
+        let err = bind_src("scenario \"s\" {\n  secondz = 10\n}").unwrap_err();
+        assert_eq!(
+            err.to_string(),
+            "error: t.xrdse:2:3: unknown key 'secondz' in 'scenario', did you mean 'seconds'?"
+        );
+    }
+
+    #[test]
+    fn fleet_pool_variants_bind() {
+        let spec = bind_src(
+            r#"fleet "f" {
+                pool = palette
+                load "hand" { model = detnet  arrival = periodic(10)  count = 6 }
+            }"#,
+        )
+        .unwrap();
+        let ExperimentKind::Fleet(f) = &spec.kind else { panic!() };
+        assert_eq!(f.pool, PoolSel::Palette);
+        assert_eq!(f.loads[0].count, 6);
+        assert_eq!(f.policy, "least-loaded");
+
+        let spec = bind_src(
+            r#"fleet "f" {
+                pool from_search { budget = 48  batch = 24  limit = 2  knobs { nodes = [7] } }
+                load "hand" { model = detnet  arrival = periodic(10)  count = 6 }
+            }"#,
+        )
+        .unwrap();
+        let ExperimentKind::Fleet(f) = &spec.kind else { panic!() };
+        let PoolSel::FromSearch { search, limit } = &f.pool else { panic!() };
+        assert_eq!(*limit, 2);
+        assert_eq!(search.budget, 48);
+        assert_eq!(search.space.nodes.as_deref(), Some(&[Node::N7][..]));
+    }
+
+    #[test]
+    fn precision_blocks_collect_layer_overrides() {
+        let spec = bind_src(
+            r#"scenario "s" {
+                stream "h" {
+                    model = detnet
+                    arrival = periodic(10)
+                    flavor = p0
+                    precision { default = w4a8  conv1 = int8 }
+                }
+            }"#,
+        )
+        .unwrap();
+        let ExperimentKind::Scenario(s) = &spec.kind else { panic!() };
+        let p = &s.streams[0].precision;
+        assert_eq!(p.default, "w4a8");
+        assert_eq!(p.overrides, vec![("conv1".to_string(), "int8".to_string())]);
+        assert_eq!(p.policy().unwrap().name(), "mixed");
+    }
+}

@@ -1,0 +1,441 @@
+//! `manifest::exec` — lower an [`ExperimentSpec`] onto the existing
+//! subsystems and run it.
+//!
+//! Lowering adds **no evaluation semantics**: a `QuerySpec` becomes an
+//! [`crate::eval::Query`] over an engine built from the named archs/nets,
+//! a `SearchSpec` becomes [`crate::search::ArchSynth`] +
+//! [`crate::search::SearchConfig`] + the same strategy set the CLI always
+//! resolved, a `ScenarioSpec` becomes a
+//! [`crate::coordinator::scenario::Scenario`], and a `FleetPlan` becomes a
+//! [`crate::fleet::FleetSpec`]. The equivalence tests in
+//! `tests/manifest.rs` pin the bitwise identity between a manifest-driven
+//! run and the equivalent hand-built one, per subsystem.
+
+use std::path::PathBuf;
+
+use crate::arch::{self, MemFlavor};
+use crate::coordinator::scenario::{Runner, Scenario, ScenarioReport, StreamSpec};
+use crate::coordinator::Backend;
+use crate::eval::{Assignments, Devices, Engine, Query, QueryRow};
+use crate::fleet::{policy_by_name, run_fleet, FleetSpec, HwPoint, StreamLoad};
+use crate::report::{pct, sci, Csv, Table};
+use crate::search::{
+    Annealing, ArchSynth, Constraints, Exhaustive, Family, HillClimb, KnobSpace, RandomSearch,
+    SearchConfig, SearchReport, Strategy,
+};
+use crate::tech::{paper_mram_for, Node};
+use crate::workload;
+
+use super::spec::{
+    AssignAxis, BackendSel, DeviceAxis, ExperimentKind, ExperimentSpec, FleetPlan, LoadDecl,
+    PoolSel, QueryMetric, QuerySpec, RunnerSel, ScenarioSpec, SearchSpec, SpaceBase, SpaceSpec,
+    StreamDecl,
+};
+
+/// Execute one experiment end to end: lower, run, render the report to
+/// stdout, and write the declared sinks.
+pub fn run(spec: &ExperimentSpec) -> crate::Result<()> {
+    // Manifest-declared observability sinks override any flag-set paths
+    // (the manifest is the experiment's single source of truth).
+    if spec.sinks.trace.is_some() || spec.sinks.metrics.is_some() {
+        crate::obs::set_output_paths(
+            spec.sinks.trace.as_ref().map(PathBuf::from),
+            spec.sinks.metrics.as_ref().map(PathBuf::from),
+        );
+    }
+    match &spec.kind {
+        ExperimentKind::Query(q) => run_query(spec, q),
+        ExperimentKind::Search(s) => run_search_spec(spec, s),
+        ExperimentKind::Scenario(s) => run_scenario(spec, s),
+        ExperimentKind::Fleet(f) => run_fleet_plan(spec, f),
+    }
+}
+
+// ---- query ---------------------------------------------------------------
+
+/// Lower a [`QuerySpec`] and collect its rows (the pure half of the query
+/// path; rendering is separate so tests can compare rows bitwise).
+pub fn query_rows(q: &QuerySpec) -> crate::Result<Vec<QueryRow>> {
+    let engine = query_engine(q)?;
+    Ok(query_over(&engine, q)?.collect())
+}
+
+/// The engine a query runs over: every named arch × every named net.
+pub fn query_engine(q: &QuerySpec) -> crate::Result<Engine> {
+    let mut archs = Vec::new();
+    for name in &q.archs {
+        archs.push(arch::by_name(name)?);
+    }
+    let mut nets = Vec::new();
+    for name in &q.nets {
+        nets.push(workload::builtin::by_name(name)?);
+    }
+    Ok(Engine::new(archs, nets))
+}
+
+fn query_over<'e>(engine: &'e Engine, q: &QuerySpec) -> crate::Result<Query<'e>> {
+    let mut query = Query::over(engine).nodes(&q.nodes);
+    query = query.devices(match &q.devices {
+        DeviceAxis::Paper => Devices::PaperPick,
+        DeviceAxis::Fixed(d) => Devices::Fixed(*d),
+        DeviceAxis::Each(v) => Devices::Each(v.clone()),
+    });
+    query = query.assignments(match &q.assignments {
+        AssignAxis::Flavors(fs) => Assignments::Flavors(fs.clone()),
+        AssignAxis::Masks(ms) => Assignments::Masks(ms.clone()),
+        AssignAxis::Lattice => Assignments::Lattice,
+    });
+    if !q.precisions.is_empty() {
+        let mut policies = Vec::new();
+        for name in &q.precisions {
+            policies.push(workload::PrecisionPolicy::from_str(name)?);
+        }
+        query = query.precisions(&policies);
+    }
+    if q.baseline_sram {
+        query = query.baseline(|p| p.flavor() == Some(MemFlavor::SramOnly));
+    }
+    if q.feasible {
+        query = query.filter_feasible(q.ips);
+    }
+    if q.pareto {
+        query = query.pareto(q.ips);
+    }
+    if let Some((metric, k)) = q.top_k {
+        let ips = q.ips;
+        query = match metric {
+            QueryMetric::Energy => query.top_k(|p| p.energy.total_pj(), k),
+            QueryMetric::Area => query.top_k(|p| p.area_mm2, k),
+            QueryMetric::Edp => query.top_k(|p| p.edp(), k),
+            QueryMetric::PMem => query.top_k(move |p| p.p_mem_uw(ips), k),
+            QueryMetric::Latency => query.top_k(|p| p.latency_ns, k),
+        };
+    }
+    Ok(query)
+}
+
+fn run_query(spec: &ExperimentSpec, q: &QuerySpec) -> crate::Result<()> {
+    let rows = query_rows(q)?;
+    let mut header = vec![
+        "arch", "net", "node", "flavor", "device", "precision", "energy (µJ)", "latency (ms)",
+        "area (mm²)", "P_mem (µW)",
+    ];
+    if q.baseline_sram {
+        header.push("vs SRAM");
+    }
+    let mut t = Table::new(
+        &format!("query '{}' — {} points @{} IPS", spec.name, rows.len(), q.ips),
+        &header,
+    );
+    for row in &rows {
+        let p = &row.point;
+        let mut cells = vec![
+            p.arch.clone(),
+            p.network.clone(),
+            p.node.label(),
+            p.flavor_label().into(),
+            p.mram().label().into(),
+            p.precision.clone(),
+            format!("{:.3}", p.energy.total_pj() * 1e-6),
+            format!("{:.3}", p.latency_ns / 1e6),
+            format!("{:.2}", p.area_mm2),
+            format!("{:.2}", p.p_mem_uw(q.ips)),
+        ];
+        if q.baseline_sram {
+            cells.push(match row.energy_vs_baseline() {
+                Some(v) => pct(v),
+                None => "-".into(),
+            });
+        }
+        t.row(cells);
+    }
+    print!("{}", t.render());
+    if let Some(path) = &spec.sinks.csv {
+        let mut header = vec![
+            "arch", "net", "node_nm", "flavor", "device", "precision", "energy_pj", "latency_ns",
+            "area_mm2", "p_mem_uw",
+        ];
+        if q.baseline_sram {
+            header.push("energy_vs_sram");
+        }
+        let mut c = Csv::new(&header);
+        for row in &rows {
+            let p = &row.point;
+            let mut cells = vec![
+                p.arch.clone(),
+                p.network.clone(),
+                format!("{}", p.node.nm()),
+                p.flavor_label().into(),
+                p.mram().label().into(),
+                p.precision.clone(),
+                sci(p.energy.total_pj()),
+                sci(p.latency_ns),
+                sci(p.area_mm2),
+                sci(p.p_mem_uw(q.ips)),
+            ];
+            if q.baseline_sram {
+                cells.push(row.energy_vs_baseline().map(sci).unwrap_or_default());
+            }
+            c.row(cells);
+        }
+        let path = PathBuf::from(path);
+        c.save(&path)?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
+// ---- search --------------------------------------------------------------
+
+/// Lower a [`SpaceSpec`] onto a concrete [`KnobSpace`]: start from the
+/// declared base and replace every overridden axis wholesale.
+pub fn build_space(s: &SpaceSpec) -> KnobSpace {
+    let mut k = match s.base.unwrap_or(SpaceBase::Paper) {
+        SpaceBase::Paper => KnobSpace::paper(),
+        SpaceBase::PaperMixed => KnobSpace::paper_mixed_precision(),
+        SpaceBase::Tiny => KnobSpace::tiny(),
+    };
+    if let Some(v) = &s.families {
+        k.families = v.clone();
+    }
+    if let Some(v) = &s.pe_grids {
+        k.pe_grids = v.clone();
+    }
+    if let Some(v) = &s.weight_bytes {
+        k.weight_bytes = v.clone();
+    }
+    if let Some(v) = &s.input_bytes {
+        k.input_bytes = v.clone();
+    }
+    if let Some(v) = &s.accum_bytes {
+        k.accum_bytes = v.clone();
+    }
+    if let Some(v) = &s.glb_bytes {
+        k.glb_bytes = v.clone();
+    }
+    if let Some(v) = &s.glb_banks {
+        k.glb_banks = v.clone();
+    }
+    if let Some(v) = &s.gwb_bytes {
+        k.gwb_bytes = v.clone();
+    }
+    if let Some(v) = &s.wide_bus_bits {
+        k.wide_bus_bits = v.clone();
+    }
+    if let Some(v) = &s.nodes {
+        k.nodes = v.clone();
+    }
+    if let Some(v) = &s.mrams {
+        k.mrams = v.clone();
+    }
+    if let Some(v) = &s.assigns {
+        k.assigns = v.clone();
+    }
+    if let Some(v) = &s.weight_bits {
+        k.weight_bits = v.clone();
+    }
+    if let Some(v) = &s.act_bits {
+        k.act_bits = v.clone();
+    }
+    k
+}
+
+/// Lower a [`SearchSpec`] into the synthesizer + config pair the search
+/// entry points take.
+pub fn build_search(s: &SearchSpec) -> crate::Result<(ArchSynth, SearchConfig)> {
+    let net = workload::builtin::by_name(&s.net)?;
+    let synth = ArchSynth::new(build_space(&s.space), net)?;
+    let cfg = SearchConfig {
+        objective: s.objective,
+        constraints: Constraints {
+            min_ips: s.min_ips,
+            max_area_mm2: s.max_area_mm2,
+            max_p_mem_uw: s.max_p_mem_uw,
+        },
+        budget: s.budget,
+        batch: s.batch,
+        seed: s.seed,
+    };
+    Ok((synth, cfg))
+}
+
+/// Resolve a strategy name into concrete instances. The hill climber is
+/// seeded at the paper-v2 weight-stationary SRAM-only point of the
+/// space's first node when the space contains it ("improve on the paper
+/// design"), and falls back to a random start otherwise — the CLI's
+/// historical behavior.
+pub fn strategies_for(which: &str, synth: &ArchSynth) -> crate::Result<Vec<Box<dyn Strategy>>> {
+    let node = synth.space.nodes.first().copied().unwrap_or(Node::N7);
+    let hill = || -> Box<dyn Strategy> {
+        let seed_mram = synth.space.mrams.first().copied().unwrap_or(paper_mram_for(node));
+        match synth.space.paper_vector(
+            Family::WeightStationary,
+            arch::PeConfig::V2,
+            MemFlavor::SramOnly,
+            node,
+            seed_mram,
+        ) {
+            Some(v) => Box::new(HillClimb::seeded(v)),
+            None => Box::new(HillClimb::new()),
+        }
+    };
+    Ok(match which.to_ascii_lowercase().as_str() {
+        "exhaustive" => vec![Box::new(Exhaustive::new())],
+        "random" => vec![Box::new(RandomSearch)],
+        "hill" | "hill-climb" => vec![hill()],
+        "anneal" | "annealing" => vec![Box::new(Annealing::new())],
+        "all" => vec![Box::new(RandomSearch), hill(), Box::new(Annealing::new())],
+        other => anyhow::bail!("unknown strategy '{other}' (exhaustive|random|hill|anneal|all)"),
+    })
+}
+
+fn run_search_spec(spec: &ExperimentSpec, s: &SearchSpec) -> crate::Result<()> {
+    let (synth, cfg) = build_search(s)?;
+    let strategies = strategies_for(&s.strategy, &synth)?;
+    let report = SearchReport::run(&synth, &cfg, strategies);
+    print!("{}", report.table().render());
+    match report.best_overall() {
+        Some((r, e)) => println!(
+            "best overall: {} {} {} via {} — {} = {}, area {:.2} mm², P_mem {:.2} µW @{} IPS (knobs {})",
+            e.arch,
+            e.assign,
+            e.precision_label(),
+            r.strategy,
+            cfg.objective.label(),
+            sci(e.scalar),
+            e.area_mm2,
+            e.p_mem_uw,
+            cfg.constraints.min_ips,
+            e.vector_key()
+        ),
+        None => println!("no feasible design found under the given constraints"),
+    }
+    if let Some(path) = &spec.sinks.csv {
+        let frontier_path = PathBuf::from(path);
+        report.frontier_csv().save(&frontier_path)?;
+        let trace_path = frontier_path.with_extension("trace.csv");
+        report.trace_csv().save(&trace_path)?;
+        println!("wrote {} and {}", frontier_path.display(), trace_path.display());
+    }
+    Ok(())
+}
+
+// ---- scenario ------------------------------------------------------------
+
+fn build_stream(d: &StreamDecl) -> crate::Result<StreamSpec> {
+    let mut s = StreamSpec::new(&d.name, &d.model, d.arrival.to_arrival(), d.flavor);
+    s.queue_depth = d.queue_depth;
+    s.precision = d.precision.policy()?;
+    s.seed = d.seed;
+    s.exec_floor_s = d.exec_floor_s;
+    Ok(s)
+}
+
+/// Lower a [`ScenarioSpec`] onto the coordinator's [`Scenario`].
+pub fn build_scenario(name: &str, s: &ScenarioSpec) -> crate::Result<Scenario> {
+    let artifacts = PathBuf::from(&s.artifacts_dir);
+    let mut streams = Vec::new();
+    for d in &s.streams {
+        streams.push(build_stream(d)?);
+    }
+    Ok(Scenario {
+        name: name.to_string(),
+        streams,
+        seconds: s.seconds,
+        time_scale: s.time_scale,
+        arch: arch::by_name(&s.arch)?,
+        node: s.node,
+        mram: s.mram,
+        backend: match s.backend {
+            BackendSel::Auto => Backend::Auto { artifacts_dir: artifacts },
+            BackendSel::Pjrt => Backend::Pjrt { artifacts_dir: artifacts },
+            BackendSel::Synthetic => Backend::Synthetic,
+        },
+        runner: match s.runner {
+            RunnerSel::Virtual => Runner::VirtualClock,
+            RunnerSel::Threads => Runner::Threads,
+        },
+    })
+}
+
+/// Render a scenario report exactly as the CLI always has (table, summary
+/// line, infeasibility warnings, optional CSV).
+pub fn render_scenario(report: &ScenarioReport, csv: Option<&str>) -> crate::Result<()> {
+    print!("{}", report.table().render());
+    println!("{}", report.summary_line());
+    for s in &report.streams {
+        if !s.feasible {
+            println!(
+                "warning: stream '{}' cannot sustain {} IPS with {:?}",
+                s.name, s.rate, s.flavor
+            );
+        }
+    }
+    if let Some(path) = csv {
+        let path = PathBuf::from(path);
+        report.to_csv().save(&path)?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
+fn run_scenario(spec: &ExperimentSpec, s: &ScenarioSpec) -> crate::Result<()> {
+    let report = build_scenario(&spec.name, s)?.run()?;
+    render_scenario(&report, spec.sinks.csv.as_deref())
+}
+
+// ---- fleet ---------------------------------------------------------------
+
+fn build_load(l: &LoadDecl) -> crate::Result<StreamLoad> {
+    let mut load = StreamLoad::new(&l.name, &l.model, l.arrival.to_arrival(), l.count)
+        .with_precision(l.precision.policy()?);
+    load.queue_depth = l.queue_depth;
+    load.exec_floor_s = l.exec_floor_s;
+    Ok(load)
+}
+
+/// Lower a [`FleetPlan`] onto a [`FleetSpec`], resolving the device pool
+/// (running the embedded search for `pool from_search`, which prints the
+/// CLI's historical "deployed N frontier points" line).
+pub fn build_fleet(name: &str, f: &FleetPlan) -> crate::Result<FleetSpec> {
+    let points = match &f.pool {
+        PoolSel::Palette => HwPoint::paper_palette(f.node, f.mram),
+        PoolSel::FromSearch { search, limit } => {
+            let (synth, cfg) = build_search(search)?;
+            let mut strategies = strategies_for(&search.strategy, &synth)?;
+            let result = crate::search::run_search(&synth, strategies[0].as_mut(), &cfg);
+            let points = HwPoint::from_frontier(&synth, &result, *limit)?;
+            println!(
+                "deployed {} frontier points from a {}-eval {} search",
+                points.len(),
+                result.evaluations,
+                result.strategy
+            );
+            points
+        }
+    };
+    let mut spec = FleetSpec::new(name, points, f.devices, f.seconds, f.seed);
+    for l in &f.loads {
+        spec = spec.with_load(build_load(l)?);
+    }
+    spec.constraints.min_ips = f.min_ips;
+    spec.constraints.max_p_mem_uw = f.max_p_mem_uw;
+    spec.constraints.max_util = f.max_util;
+    Ok(spec)
+}
+
+fn run_fleet_plan(spec: &ExperimentSpec, f: &FleetPlan) -> crate::Result<()> {
+    let fleet = build_fleet(&spec.name, f)?;
+    let mut policy = policy_by_name(&f.policy)?;
+    let report = run_fleet(&fleet, policy.as_mut())?;
+    print!("{}", report.table().render());
+    println!("{}", report.summary_line());
+    if let Some(path) = &spec.sinks.csv {
+        let path = PathBuf::from(path);
+        report.device_csv().save(&path)?;
+        let streams_path = path.with_extension("streams.csv");
+        report.stream_csv().save(&streams_path)?;
+        println!("wrote {} and {}", path.display(), streams_path.display());
+    }
+    Ok(())
+}

@@ -1,0 +1,230 @@
+//! `manifest::flags` — the CLI's historical per-command flags, translated
+//! into the same [`ExperimentSpec`] a manifest binds to.
+//!
+//! Before this module each subcommand in `main.rs` hand-rolled its own
+//! flag-to-subsystem plumbing; now `scenario`/`search`/`fleet` flags all
+//! resolve here, into the identical spec type the manifest binder
+//! produces, and execute through `manifest::exec`. `--set key=value`
+//! overrides edit the spec's raw [`super::ast::Block`] tree and re-bind,
+//! so every surface (manifest text, flags, overrides) is validated by the
+//! one binder. The golden test in `tests/manifest.rs` pins flags-built ==
+//! manifest-built per command.
+
+use crate::tech::{Device, Node};
+use crate::util::cli::Args;
+
+use super::spec::{
+    ArrivalDecl, BackendSel, ExperimentKind, ExperimentSpec, FleetPlan, LoadDecl, PoolSel,
+    RunnerSel, SearchSpec, Sinks, SpaceBase, SpaceSpec,
+};
+
+/// Apply every `--set key=value` override: dump the spec to its raw tree,
+/// edit, and re-bind, so overrides get the same validation (and the same
+/// spanned diagnostics) as manifest text.
+pub fn apply_sets(spec: ExperimentSpec, sets: &[String]) -> crate::Result<ExperimentSpec> {
+    if sets.is_empty() {
+        return Ok(spec);
+    }
+    let mut block = spec.to_block();
+    for s in sets {
+        let (key, value) = s
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("--set takes key=value, got '{s}'"))?;
+        block.set(key.trim(), value.trim())?;
+    }
+    super::bind::bind(&block, "<cli>").map_err(super::diag_err)
+}
+
+/// The sink flags shared by every command.
+fn sinks(args: &Args) -> Sinks {
+    Sinks {
+        csv: args.get("csv").map(str::to_string),
+        trace: args.get("trace").map(str::to_string),
+        metrics: args.get("metrics").map(str::to_string),
+    }
+}
+
+/// `xr-edge-dse scenario` flags → spec: start from the named preset's
+/// builtin manifest, then apply the overrides the command always honored
+/// (`--node`/`--device` resolution happens in `main.rs`, like before).
+pub fn scenario_spec(args: &Args, node: Node, mram: Device) -> crate::Result<ExperimentSpec> {
+    let preset = args.get("preset").unwrap_or("paper");
+    let base = super::builtin_scenario(preset)?;
+    let ExperimentKind::Scenario(mut s) = base.kind else {
+        anyhow::bail!("preset '{preset}' is not a scenario manifest");
+    };
+    s.node = node;
+    s.mram = mram;
+    s.backend = match args.get("backend").unwrap_or("auto") {
+        "auto" => BackendSel::Auto,
+        "pjrt" => BackendSel::Pjrt,
+        "synthetic" => BackendSel::Synthetic,
+        other => anyhow::bail!("unknown backend '{other}' (auto|pjrt|synthetic)"),
+    };
+    s.artifacts_dir = args.get("artifacts").unwrap_or("artifacts").to_string();
+    if let Some(h) = args.get_f64("horizon")? {
+        s.seconds = h;
+    }
+    if let Some(ts) = args.get_f64("time-scale")? {
+        s.time_scale = ts;
+    }
+    s.runner = match args.get("runner").unwrap_or("virtual") {
+        "virtual" | "virtual-clock" => RunnerSel::Virtual,
+        "threads" | "thread" => RunnerSel::Threads,
+        other => anyhow::bail!("unknown runner '{other}' (virtual|threads)"),
+    };
+    let spec = ExperimentSpec::scenario(preset, s).with_sinks(sinks(args));
+    apply_sets(spec, args.get_all("set"))
+}
+
+/// `xr-edge-dse search` flags → spec, mirroring the command's historical
+/// defaults exactly (paper space constrained to `--node`, `--device` only
+/// when named, `--ips` as the min-IPS constraint).
+pub fn search_spec(args: &Args, node: Node, mram: Device) -> crate::Result<ExperimentSpec> {
+    let strategy = match args.get("strategy").unwrap_or("all").to_ascii_lowercase().as_str() {
+        "hill-climb" => "hill".to_string(),
+        "annealing" => "anneal".to_string(),
+        other => other.to_string(),
+    };
+    let mut space = SpaceSpec {
+        base: Some(if args.flag("mixed-precision") {
+            SpaceBase::PaperMixed
+        } else {
+            SpaceBase::Paper
+        }),
+        nodes: Some(vec![node]),
+        ..SpaceSpec::default()
+    };
+    if args.get("device").is_some() {
+        space.mrams = Some(vec![mram]);
+    }
+    let s = SearchSpec {
+        net: args.get("net").unwrap_or("detnet").to_string(),
+        space,
+        strategy,
+        objective: crate::search::Objective::from_str(args.get("objective").unwrap_or("energy"))?,
+        budget: args.get_usize("budget")?.unwrap_or(400),
+        batch: args.get_usize("batch")?.unwrap_or(64),
+        seed: args.get_usize("seed")?.unwrap_or(42) as u64,
+        min_ips: args.get_f64("ips")?.unwrap_or(10.0),
+        max_area_mm2: args.get_f64("max-area")?,
+        max_p_mem_uw: args.get_f64("max-power")?,
+    };
+    let spec = ExperimentSpec::search("search", s).with_sinks(sinks(args));
+    apply_sets(spec, args.get_all("set"))
+}
+
+/// `xr-edge-dse fleet` flags → spec: the historical 3:1 hand/eye stream
+/// mix over the paper palette, or a random-search frontier pool with
+/// `--from-search` (budget capped at 128, batch 32, best 4 points).
+pub fn fleet_spec(args: &Args, node: Node, mram: Device) -> crate::Result<ExperimentSpec> {
+    let n_streams = args.get_usize("streams")?.unwrap_or(64);
+    let hand = n_streams - n_streams / 4;
+    let eye = n_streams - hand;
+    let seed = args.get_usize("seed")?.unwrap_or(42) as u64;
+    let pool = if args.flag("from-search") {
+        PoolSel::FromSearch {
+            search: Box::new(SearchSpec {
+                net: "detnet".into(),
+                space: SpaceSpec {
+                    base: Some(SpaceBase::Paper),
+                    nodes: Some(vec![node]),
+                    ..SpaceSpec::default()
+                },
+                strategy: "random".into(),
+                objective: crate::search::Objective::Energy,
+                budget: args.get_usize("budget")?.unwrap_or(400).min(128),
+                batch: 32,
+                seed,
+                min_ips: args.get_f64("ips")?.unwrap_or(10.0),
+                max_area_mm2: args.get_f64("max-area")?,
+                max_p_mem_uw: None,
+            }),
+            limit: 4,
+        }
+    } else {
+        PoolSel::Palette
+    };
+    let f = FleetPlan {
+        devices: args.get_usize("devices")?.unwrap_or(8),
+        seconds: args.get_f64("seconds")?.unwrap_or(5.0),
+        seed,
+        node,
+        mram,
+        pool,
+        loads: vec![
+            LoadDecl::new("hand", "detnet", ArrivalDecl::Periodic { fps: 10.0 }, hand),
+            LoadDecl::new("eye", "edsnet", ArrivalDecl::Poisson { rate: 1.0 }, eye),
+        ],
+        policy: args.get("policy").unwrap_or("least-loaded").to_string(),
+        min_ips: args.get_f64("min-ips")?,
+        max_p_mem_uw: args.get_f64("max-power")?,
+        max_util: None,
+    };
+    let spec = ExperimentSpec::fleet("xr-mix", f).with_sinks(sinks(args));
+    apply_sets(spec, args.get_all("set"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::cli::{parse, OptSpec};
+
+    fn args(argv: &[&str]) -> Args {
+        // A minimal spec list covering the options these tests exercise.
+        let specs: Vec<OptSpec> = [
+            "preset", "backend", "artifacts", "horizon", "time-scale", "runner", "csv", "trace",
+            "metrics", "set", "net", "strategy", "objective", "budget", "batch", "seed", "ips",
+            "max-area", "max-power", "device", "devices", "streams", "seconds", "policy",
+            "min-ips",
+        ]
+        .iter()
+        .map(|&n| OptSpec { name: n, takes_value: true, help: "", default: None })
+        .chain(
+            ["mixed-precision", "from-search"]
+                .iter()
+                .map(|&n| OptSpec { name: n, takes_value: false, help: "", default: None }),
+        )
+        .collect();
+        let argv: Vec<String> = argv.iter().map(|s| s.to_string()).collect();
+        parse(&argv, &specs).unwrap()
+    }
+
+    #[test]
+    fn scenario_flags_override_the_preset() {
+        let a = args(&["--preset", "hand", "--horizon", "5", "--runner", "threads"]);
+        let spec = scenario_spec(&a, Node::N28, Device::SttMram).unwrap();
+        assert_eq!(spec.name, "hand");
+        let ExperimentKind::Scenario(s) = &spec.kind else { panic!() };
+        assert_eq!(s.node, Node::N28);
+        assert_eq!(s.mram, Device::SttMram);
+        assert_eq!(s.seconds, 5.0);
+        assert_eq!(s.runner, RunnerSel::Threads);
+        assert_eq!(s.streams.len(), 1);
+    }
+
+    #[test]
+    fn set_overrides_go_through_the_binder() {
+        let a = args(&["--set", "budget=64", "--set", "knobs.nodes=[28]"]);
+        let spec = search_spec(&a, Node::N7, Device::VgsotMram).unwrap();
+        let ExperimentKind::Search(s) = &spec.kind else { panic!() };
+        assert_eq!(s.budget, 64);
+        assert_eq!(s.space.nodes.as_deref(), Some(&[Node::N28][..]));
+
+        let a = args(&["--set", "budgett=64"]);
+        let err = search_spec(&a, Node::N7, Device::VgsotMram).unwrap_err();
+        assert!(err.to_string().contains("unknown key 'budgett'"), "{err}");
+        assert!(err.to_string().contains("did you mean 'budget'?"), "{err}");
+    }
+
+    #[test]
+    fn fleet_flags_keep_the_historical_stream_mix() {
+        let a = args(&["--streams", "64", "--devices", "8"]);
+        let spec = fleet_spec(&a, Node::N7, Device::VgsotMram).unwrap();
+        let ExperimentKind::Fleet(f) = &spec.kind else { panic!() };
+        assert_eq!(f.loads[0].count, 48);
+        assert_eq!(f.loads[1].count, 16);
+        assert_eq!(f.policy, "least-loaded");
+        assert_eq!(f.pool, PoolSel::Palette);
+    }
+}

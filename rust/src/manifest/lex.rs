@@ -1,0 +1,243 @@
+//! `manifest::lex` — the hand-rolled tokenizer for `.xrdse` manifests.
+//!
+//! Zero-dependency, byte-span tracking: every token remembers its byte
+//! offset plus the 1-based (line, column) the diagnostics print. The
+//! grammar is deliberately small — identifiers, numbers (with scientific
+//! notation), double-quoted strings, seven punctuation marks and `#`
+//! line comments — so the lexer is a single forward scan with no modes.
+
+use super::parse::Diag;
+
+/// Byte-span of a token (or a synthesized node) in one manifest source.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Span {
+    /// Byte offset of the first byte.
+    pub offset: usize,
+    /// Byte length.
+    pub len: usize,
+    /// 1-based source line.
+    pub line: u32,
+    /// 1-based source column (bytes; manifests are ASCII by convention).
+    pub col: u32,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// `ident`, `w4a8`, `least_loaded` — `[A-Za-z_][A-Za-z0-9_]*`.
+    Ident,
+    /// `10`, `0.1`, `-3`, `1e6`, `2.5e-3`.
+    Num,
+    /// `"quoted"` (supports `\"` and `\\` escapes).
+    Str,
+    /// One of `{ } [ ] ( ) = ,`.
+    Punct,
+    /// End of input (synthesized once, at the final offset).
+    Eof,
+}
+
+/// One lexed token: kind, source text (unquoted for strings) and span.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub span: Span,
+}
+
+impl Tok {
+    /// Human label for "expected X, found Y" diagnostics.
+    pub fn describe(&self) -> String {
+        match self.kind {
+            TokKind::Ident => format!("identifier '{}'", self.text),
+            TokKind::Num => format!("number '{}'", self.text),
+            TokKind::Str => format!("string \"{}\"", self.text),
+            TokKind::Punct => format!("'{}'", self.text),
+            TokKind::Eof => "end of input".to_string(),
+        }
+    }
+}
+
+/// Tokenize one manifest source. `file` only labels diagnostics.
+pub fn lex(src: &str, file: &str) -> Result<Vec<Tok>, Diag> {
+    let bytes = src.as_bytes();
+    let mut toks = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let mut col = 1u32;
+    let span_here = |i: usize, len: usize, line: u32, col: u32| Span { offset: i, len, line, col };
+    while i < bytes.len() {
+        let c = bytes[i];
+        match c {
+            b'\n' => {
+                i += 1;
+                line += 1;
+                col = 1;
+            }
+            b' ' | b'\t' | b'\r' => {
+                i += 1;
+                col += 1;
+            }
+            b'#' => {
+                while i < bytes.len() && bytes[i] != b'\n' {
+                    i += 1;
+                }
+            }
+            b'{' | b'}' | b'[' | b']' | b'(' | b')' | b'=' | b',' => {
+                toks.push(Tok {
+                    kind: TokKind::Punct,
+                    text: (c as char).to_string(),
+                    span: span_here(i, 1, line, col),
+                });
+                i += 1;
+                col += 1;
+            }
+            b'"' => {
+                let (start, start_line, start_col) = (i, line, col);
+                i += 1;
+                col += 1;
+                let mut text = String::new();
+                loop {
+                    if i >= bytes.len() || bytes[i] == b'\n' {
+                        return Err(Diag::at(file, start_line, start_col, "unterminated string"));
+                    }
+                    match bytes[i] {
+                        b'"' => {
+                            i += 1;
+                            col += 1;
+                            break;
+                        }
+                        b'\\' if i + 1 < bytes.len()
+                            && (bytes[i + 1] == b'"' || bytes[i + 1] == b'\\') =>
+                        {
+                            text.push(bytes[i + 1] as char);
+                            i += 2;
+                            col += 2;
+                        }
+                        b => {
+                            text.push(b as char);
+                            i += 1;
+                            col += 1;
+                        }
+                    }
+                }
+                toks.push(Tok {
+                    kind: TokKind::Str,
+                    text,
+                    span: span_here(start, i - start, start_line, start_col),
+                });
+            }
+            b'-' | b'0'..=b'9' => {
+                let (start, start_line, start_col) = (i, line, col);
+                i += 1; // sign or first digit
+                while i < bytes.len() && bytes[i].is_ascii_digit() {
+                    i += 1;
+                }
+                if i < bytes.len() && bytes[i] == b'.' {
+                    i += 1;
+                    while i < bytes.len() && bytes[i].is_ascii_digit() {
+                        i += 1;
+                    }
+                }
+                if i < bytes.len() && (bytes[i] == b'e' || bytes[i] == b'E') {
+                    let mut j = i + 1;
+                    if j < bytes.len() && (bytes[j] == b'+' || bytes[j] == b'-') {
+                        j += 1;
+                    }
+                    if j < bytes.len() && bytes[j].is_ascii_digit() {
+                        i = j;
+                        while i < bytes.len() && bytes[i].is_ascii_digit() {
+                            i += 1;
+                        }
+                    }
+                }
+                let text = &src[start..i];
+                if text.parse::<f64>().is_err() {
+                    return Err(Diag::at(
+                        file,
+                        start_line,
+                        start_col,
+                        &format!("malformed number '{text}'"),
+                    ));
+                }
+                col += (i - start) as u32;
+                toks.push(Tok {
+                    kind: TokKind::Num,
+                    text: text.to_string(),
+                    span: span_here(start, i - start, start_line, start_col),
+                });
+            }
+            b'A'..=b'Z' | b'a'..=b'z' | b'_' => {
+                let (start, start_line, start_col) = (i, line, col);
+                while i < bytes.len()
+                    && (bytes[i].is_ascii_alphanumeric() || bytes[i] == b'_')
+                {
+                    i += 1;
+                }
+                col += (i - start) as u32;
+                toks.push(Tok {
+                    kind: TokKind::Ident,
+                    text: src[start..i].to_string(),
+                    span: span_here(start, i - start, start_line, start_col),
+                });
+            }
+            other => {
+                return Err(Diag::at(
+                    file,
+                    line,
+                    col,
+                    &format!("unexpected character '{}'", other as char),
+                ));
+            }
+        }
+    }
+    toks.push(Tok {
+        kind: TokKind::Eof,
+        text: String::new(),
+        span: span_here(bytes.len(), 0, line, col),
+    });
+    Ok(toks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_track_lines_and_columns() {
+        let toks = lex("a = 1\n  b = \"x\"\n", "t.xrdse").unwrap();
+        let b = toks.iter().find(|t| t.text == "b").unwrap();
+        assert_eq!((b.span.line, b.span.col), (2, 3));
+        let s = toks.iter().find(|t| t.kind == TokKind::Str).unwrap();
+        assert_eq!((s.span.line, s.span.col), (2, 7));
+        assert_eq!(s.text, "x");
+        assert_eq!(toks.last().unwrap().kind, TokKind::Eof);
+    }
+
+    #[test]
+    fn numbers_cover_scientific_and_negatives() {
+        let toks = lex("1e6 -0.5 2.5e-3 10", "t").unwrap();
+        let nums: Vec<&str> = toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Num)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(nums, ["1e6", "-0.5", "2.5e-3", "10"]);
+    }
+
+    #[test]
+    fn comments_are_skipped() {
+        let toks = lex("# header\nkey = 1 # trailing\n", "t").unwrap();
+        assert_eq!(toks.iter().filter(|t| t.kind != TokKind::Eof).count(), 3);
+    }
+
+    #[test]
+    fn unterminated_string_points_at_the_quote() {
+        let err = lex("name = \"oops\n", "m.xrdse").unwrap_err();
+        assert_eq!(err.to_string(), "error: m.xrdse:1:8: unterminated string");
+    }
+
+    #[test]
+    fn stray_bytes_are_rejected_with_position() {
+        let err = lex("a = 1\nb ? 2\n", "m.xrdse").unwrap_err();
+        assert_eq!(err.to_string(), "error: m.xrdse:2:3: unexpected character '?'");
+    }
+}

@@ -1,0 +1,162 @@
+//! `.xrdse` experiment manifests — one declarative surface for every
+//! query, search, scenario and fleet run.
+//!
+//! A manifest is a small text file declaring a complete experiment:
+//!
+//! ```text
+//! scenario "paper_hand_10ips" {
+//!   arch = simba_v2
+//!   node = 7
+//!   seconds = 30
+//!   stream "hand" {
+//!     model = detnet
+//!     arrival = periodic(10)
+//!     flavor = p1
+//!   }
+//! }
+//! ```
+//!
+//! The pipeline is `lex` → `parse` (raw [`Block`] tree with byte spans) →
+//! `--set` overrides (edit the tree) → `bind` (typed, fully-resolved
+//! [`ExperimentSpec`]) → `exec` (lower onto `eval::Query` /
+//! `search::run_search_with` / `coordinator::Scenario` / `fleet` — no new
+//! evaluation semantics; a manifest run is bitwise-identical to the
+//! hand-built equivalent). Every failure is a spanned diagnostic:
+//!
+//! ```text
+//! error: manifests/fig3d.xrdse:12:8: unknown knob 'glb_bankz', did you mean 'glb_banks'?
+//! ```
+//!
+//! The CLI drives it with `xr-edge-dse run <manifest> [--set key=value]`
+//! and `xr-edge-dse manifest check <file>` (parse + validate + print the
+//! resolved spec). CLI flags for `scenario`/`search`/`fleet` translate
+//! into the same spec type through [`flags`], and the checked-in
+//! `manifests/` files are embedded here so scenario presets resolve
+//! without a repository checkout. The grammar's EBNF, the lowering table
+//! and the diagnostics format live in DESIGN.md §The manifest layer.
+
+pub mod ast;
+pub mod bind;
+pub mod exec;
+pub mod flags;
+pub mod lex;
+pub mod parse;
+pub mod spec;
+
+pub use ast::Block;
+pub use bind::bind;
+pub use exec::run;
+pub use parse::{parse_str, Diag};
+pub use spec::{
+    ArrivalDecl, AssignAxis, BackendSel, DeviceAxis, ExperimentKind, ExperimentSpec, FleetPlan,
+    LoadDecl, PoolSel, PrecisionDecl, QueryMetric, QuerySpec, RunnerSel, ScenarioSpec, SearchSpec,
+    Sinks, SpaceBase, SpaceSpec, StreamDecl,
+};
+
+/// A [`Diag`] as an `anyhow` error *without* the `error: ` prefix (the
+/// CLI's error printer adds its own).
+pub(crate) fn diag_err(d: Diag) -> anyhow::Error {
+    anyhow::anyhow!("{}", d.bare())
+}
+
+/// Compile manifest text into a fully-resolved spec: parse, apply `--set`
+/// overrides to the raw tree, bind. `file` labels the diagnostics.
+pub fn compile(src: &str, file: &str, sets: &[String]) -> crate::Result<ExperimentSpec> {
+    let mut block = parse_str(src, file).map_err(diag_err)?;
+    for s in sets {
+        let (key, value) = s
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("--set takes key=value, got '{s}'"))?;
+        block.set(key.trim(), value.trim())?;
+    }
+    bind(&block, file).map_err(diag_err)
+}
+
+/// Load and compile a manifest file.
+pub fn load(path: &std::path::Path, sets: &[String]) -> crate::Result<ExperimentSpec> {
+    let src = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", path.display()))?;
+    compile(&src, &path.display().to_string(), sets)
+}
+
+/// The checked-in `manifests/` files, embedded at build time (so the
+/// scenario presets and the manifest tests work from any directory).
+pub const BUILTINS: &[(&str, &str)] = &[
+    ("paper_hand_10ips", include_str!("../../../manifests/paper_hand_10ips.xrdse")),
+    ("paper_eye_0p1ips", include_str!("../../../manifests/paper_eye_0p1ips.xrdse")),
+    ("scenario_paper", include_str!("../../../manifests/scenario_paper.xrdse")),
+    ("scenario_stress", include_str!("../../../manifests/scenario_stress.xrdse")),
+    ("search_7nm", include_str!("../../../manifests/search_7nm.xrdse")),
+    ("search_mixed_precision", include_str!("../../../manifests/search_mixed_precision.xrdse")),
+    ("fleet_1k", include_str!("../../../manifests/fleet_1k.xrdse")),
+    ("fig3d", include_str!("../../../manifests/fig3d.xrdse")),
+];
+
+/// Builtin manifest text by name (the file stem under `manifests/`).
+pub fn builtin(name: &str) -> Option<&'static str> {
+    BUILTINS.iter().find(|(n, _)| *n == name).map(|(_, t)| *t)
+}
+
+/// The builtin manifest behind a scenario preset name (the historical
+/// `--preset paper|hand|stress` vocabulary), compiled.
+pub(crate) fn builtin_scenario(preset: &str) -> crate::Result<ExperimentSpec> {
+    let src = match preset {
+        "paper" => builtin("scenario_paper"),
+        "hand" => builtin("paper_hand_10ips"),
+        "stress" => builtin("scenario_stress"),
+        _ => None,
+    }
+    .ok_or_else(|| anyhow::anyhow!("unknown scenario preset '{preset}' (paper|hand|stress)"))?;
+    compile(src, &format!("<preset {preset}>"), &[])
+}
+
+/// Resolve a scenario preset into a runnable
+/// [`Scenario`](crate::coordinator::scenario::Scenario) — the replacement
+/// for the deprecated `Scenario::preset` string surface. Presets are
+/// named manifests now; this keeps the historical resolution (preset name
+/// as the scenario name, thread runner, auto backend at `artifacts_dir`).
+pub fn scenario_preset(
+    name: &str,
+    artifacts_dir: std::path::PathBuf,
+) -> crate::Result<crate::coordinator::scenario::Scenario> {
+    let spec = builtin_scenario(name)?;
+    let ExperimentKind::Scenario(s) = &spec.kind else {
+        anyhow::bail!("preset '{name}' is not a scenario manifest");
+    };
+    let mut sc = exec::build_scenario(name, s)?;
+    sc.backend = crate::coordinator::Backend::Auto { artifacts_dir };
+    sc.runner = crate::coordinator::scenario::Runner::Threads;
+    Ok(sc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_builtin_compiles() {
+        for (name, src) in BUILTINS {
+            let spec = compile(src, &format!("{name}.xrdse"), &[])
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(!spec.name.is_empty());
+        }
+    }
+
+    #[test]
+    fn compile_applies_set_overrides() {
+        let src = builtin("search_7nm").unwrap();
+        let spec = compile(src, "t.xrdse", &["budget=16".to_string()]).unwrap();
+        let ExperimentKind::Search(s) = &spec.kind else { panic!() };
+        assert_eq!(s.budget, 16);
+    }
+
+    #[test]
+    fn preset_names_resolve_like_the_old_surface() {
+        for name in ["paper", "hand", "stress"] {
+            let sc = scenario_preset(name, std::path::PathBuf::from("artifacts")).unwrap();
+            assert_eq!(sc.name, name);
+            assert_eq!(sc.runner, crate::coordinator::scenario::Runner::Threads);
+        }
+        assert!(scenario_preset("nope", std::path::PathBuf::from("a")).is_err());
+    }
+}

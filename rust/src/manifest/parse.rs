@@ -1,0 +1,335 @@
+//! `manifest::parse` — recursive-descent parser for `.xrdse` manifests.
+//!
+//! One function per grammar rule (the lexicle/parse-rosetta idiom), each
+//! returning a node or a spanned [`Diag`]. The grammar (EBNF, also in
+//! DESIGN.md §The manifest layer):
+//!
+//! ```text
+//! manifest := block EOF ;
+//! block    := IDENT label? "{" item* "}" ;
+//! label    := STRING | IDENT ;            (* quoted run name, or variant tag *)
+//! item     := IDENT "=" value             (* entry *)
+//!           | block ;                     (* nested block *)
+//! value    := NUMBER | STRING | IDENT
+//!           | IDENT "(" args? ")"         (* call: periodic(10), mask(5) *)
+//!           | "[" args? "]" ;             (* list *)
+//! args     := value ("," value)* ","? ;
+//! ```
+//!
+//! Every error is a [`Diag`] that renders as
+//! `error: <file>:<line>:<col>: <message>` — the format the golden
+//! snapshot tests in `tests/manifest.rs` pin exactly.
+
+use super::ast::{Block, Entry, Item, Value};
+use super::lex::{lex, Span, Tok, TokKind};
+
+/// A spanned manifest diagnostic (`error: file:line:col: message`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diag {
+    pub file: String,
+    pub line: u32,
+    pub col: u32,
+    pub msg: String,
+}
+
+impl Diag {
+    pub fn at(file: &str, line: u32, col: u32, msg: &str) -> Diag {
+        Diag { file: file.to_string(), line, col, msg: msg.to_string() }
+    }
+
+    pub fn span(file: &str, span: Span, msg: &str) -> Diag {
+        Diag::at(file, span.line, span.col, msg)
+    }
+
+    /// The diagnostic without the `error: ` prefix — for embedding in
+    /// error chains whose printer adds its own prefix (the CLI's
+    /// `error: {e}`).
+    pub fn bare(&self) -> String {
+        format!("{}:{}:{}: {}", self.file, self.line, self.col, self.msg)
+    }
+}
+
+impl std::fmt::Display for Diag {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "error: {}", self.bare())
+    }
+}
+
+impl std::error::Error for Diag {}
+
+/// "did you mean 'x'?" suffix: the closest of `known` within an edit
+/// distance budget of 2 (the typo radius of the diagnostics in the
+/// ISSUE/DESIGN examples).
+pub fn did_you_mean(word: &str, known: &[&str]) -> String {
+    let mut best: Option<(usize, &str)> = None;
+    for k in known {
+        let d = edit_distance(word, k);
+        if best.map(|(bd, _)| d < bd).unwrap_or(true) {
+            best = Some((d, k));
+        }
+    }
+    match best {
+        Some((d, k)) if d <= 2 && d < word.len() => format!(", did you mean '{k}'?"),
+        _ => String::new(),
+    }
+}
+
+/// Plain Levenshtein distance over bytes (manifest keys are ASCII).
+fn edit_distance(a: &str, b: &str) -> usize {
+    let (a, b) = (a.as_bytes(), b.as_bytes());
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+struct Parser<'a> {
+    toks: &'a [Tok],
+    pos: usize,
+    file: &'a str,
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> &Tok {
+        &self.toks[self.pos]
+    }
+
+    fn bump(&mut self) -> &Tok {
+        let t = &self.toks[self.pos];
+        if self.pos + 1 < self.toks.len() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn err(&self, span: Span, msg: &str) -> Diag {
+        Diag::span(self.file, span, msg)
+    }
+
+    fn expect_punct(&mut self, p: &str, context: &str) -> Result<Span, Diag> {
+        let t = self.peek().clone();
+        if t.kind == TokKind::Punct && t.text == p {
+            self.bump();
+            Ok(t.span)
+        } else {
+            Err(self.err(t.span, &format!("expected '{p}' {context}, found {}", t.describe())))
+        }
+    }
+
+    /// block := IDENT label? "{" item* "}"
+    fn block(&mut self) -> Result<Block, Diag> {
+        let head = self.peek().clone();
+        if head.kind != TokKind::Ident {
+            return Err(self.err(
+                head.span,
+                &format!("expected a block kind (identifier), found {}", head.describe()),
+            ));
+        }
+        self.bump();
+        let mut label = None;
+        let t = self.peek().clone();
+        match t.kind {
+            TokKind::Str => {
+                label = Some(t.text.clone());
+                self.bump();
+            }
+            TokKind::Ident => {
+                // Variant tag: `pool from_search { .. }`.
+                label = Some(t.text.clone());
+                self.bump();
+            }
+            _ => {}
+        }
+        self.expect_punct("{", &format!("to open block '{}'", head.text))?;
+        let mut items = Vec::new();
+        loop {
+            let t = self.peek().clone();
+            match t.kind {
+                TokKind::Punct if t.text == "}" => {
+                    self.bump();
+                    break;
+                }
+                TokKind::Eof => {
+                    return Err(self.err(
+                        t.span,
+                        &format!("unclosed block '{}' (missing '}}')", head.text),
+                    ));
+                }
+                TokKind::Ident => items.push(self.item()?),
+                _ => {
+                    return Err(self.err(
+                        t.span,
+                        &format!(
+                            "expected 'key = value' or a nested block, found {}",
+                            t.describe()
+                        ),
+                    ));
+                }
+            }
+        }
+        Ok(Block { kind: head.text.clone(), kind_span: head.span, label, items })
+    }
+
+    /// item := IDENT "=" value | block
+    fn item(&mut self) -> Result<Item, Diag> {
+        let key = self.peek().clone();
+        let next = &self.toks[(self.pos + 1).min(self.toks.len() - 1)];
+        if next.kind == TokKind::Punct && next.text == "=" {
+            self.bump(); // key
+            self.bump(); // =
+            let value = self.value()?;
+            Ok(Item::Entry(Entry { key: key.text.clone(), key_span: key.span, value }))
+        } else {
+            Ok(Item::Block(self.block()?))
+        }
+    }
+
+    /// value := NUMBER | STRING | IDENT call? | list
+    fn value(&mut self) -> Result<Value, Diag> {
+        let t = self.peek().clone();
+        match t.kind {
+            TokKind::Num => {
+                self.bump();
+                // The lexer already validated the float syntax.
+                Ok(Value::Num(t.text.parse::<f64>().expect("lexer-validated number"), t.span))
+            }
+            TokKind::Str => {
+                self.bump();
+                Ok(Value::Str(t.text.clone(), t.span))
+            }
+            TokKind::Ident => {
+                self.bump();
+                let next = self.peek().clone();
+                if next.kind == TokKind::Punct && next.text == "(" {
+                    self.bump();
+                    let args = self.args(")")?;
+                    Ok(Value::Call(t.text.clone(), args, t.span))
+                } else {
+                    Ok(Value::Ident(t.text.clone(), t.span))
+                }
+            }
+            TokKind::Punct if t.text == "[" => {
+                self.bump();
+                let items = self.args("]")?;
+                Ok(Value::List(items, t.span))
+            }
+            _ => Err(self.err(
+                t.span,
+                &format!("expected a value (number, string, identifier, list or call), found {}", t.describe()),
+            )),
+        }
+    }
+
+    /// args := value ("," value)* ","?  — up to the closing `close`.
+    fn args(&mut self, close: &str) -> Result<Vec<Value>, Diag> {
+        let mut out = Vec::new();
+        loop {
+            let t = self.peek().clone();
+            if t.kind == TokKind::Punct && t.text == close {
+                self.bump();
+                return Ok(out);
+            }
+            if t.kind == TokKind::Eof {
+                return Err(self.err(t.span, &format!("expected '{close}', found end of input")));
+            }
+            out.push(self.value()?);
+            let t = self.peek().clone();
+            if t.kind == TokKind::Punct && t.text == "," {
+                self.bump();
+            } else if !(t.kind == TokKind::Punct && t.text == close) {
+                return Err(self.err(
+                    t.span,
+                    &format!("expected ',' or '{close}', found {}", t.describe()),
+                ));
+            }
+        }
+    }
+}
+
+/// Parse one manifest source into its raw block tree. `file` labels the
+/// diagnostics (use the on-disk path; tests use fixture names).
+pub fn parse_str(src: &str, file: &str) -> Result<Block, Diag> {
+    let toks = lex(src, file)?;
+    let mut p = Parser { toks: &toks, pos: 0, file };
+    let block = p.block()?;
+    let t = p.peek().clone();
+    if t.kind != TokKind::Eof {
+        return Err(p.err(
+            t.span,
+            &format!("expected end of input after the experiment block, found {}", t.describe()),
+        ));
+    }
+    Ok(block)
+}
+
+/// Parse one value written in the manifest value grammar (the `--set`
+/// override payloads).
+pub fn parse_value_str(src: &str, file: &str) -> Result<Value, Diag> {
+    let toks = lex(src, file)?;
+    let mut p = Parser { toks: &toks, pos: 0, file };
+    let v = p.value()?;
+    let t = p.peek().clone();
+    if t.kind != TokKind::Eof {
+        return Err(p.err(t.span, &format!("trailing input after value: {}", t.describe())));
+    }
+    Ok(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_nested_blocks_calls_and_lists() {
+        let src = r#"
+            scenario "t" {
+              node = 7
+              stream "hand" {
+                arrival = periodic(10)
+                flags = [1, 2, 3]
+              }
+            }
+        "#;
+        let b = parse_str(src, "t.xrdse").unwrap();
+        assert_eq!(b.kind, "scenario");
+        assert_eq!(b.label.as_deref(), Some("t"));
+        assert_eq!(b.items.len(), 2);
+        let Item::Block(s) = &b.items[1] else { panic!("expected stream block") };
+        assert!(matches!(&s.get("arrival").unwrap().value, Value::Call(n, a, _) if n == "periodic" && a.len() == 1));
+        assert!(matches!(&s.get("flags").unwrap().value, Value::List(v, _) if v.len() == 3));
+    }
+
+    #[test]
+    fn missing_brace_is_spanned() {
+        let err = parse_str("scenario \"t\"\n  node = 7\n", "m.xrdse").unwrap_err();
+        assert_eq!(
+            err.to_string(),
+            "error: m.xrdse:2:3: expected '{' to open block 'scenario', found identifier 'node'"
+        );
+    }
+
+    #[test]
+    fn unclosed_block_names_the_block() {
+        let err = parse_str("search \"s\" {\n  budget = 10\n", "m.xrdse").unwrap_err();
+        assert_eq!(err.to_string(), "error: m.xrdse:3:1: unclosed block 'search' (missing '}')");
+    }
+
+    #[test]
+    fn did_you_mean_suggests_within_distance_two() {
+        assert_eq!(did_you_mean("glb_bankz", &["glb_banks", "glb_bytes"]), ", did you mean 'glb_banks'?");
+        assert_eq!(did_you_mean("zzz", &["glb_banks"]), "");
+    }
+
+    #[test]
+    fn value_parser_rejects_trailing_tokens() {
+        assert!(parse_value_str("[7, 28]", "t").is_ok());
+        assert!(parse_value_str("7 28", "t").is_err());
+    }
+}

@@ -1,0 +1,808 @@
+//! `manifest::spec` — the typed [`ExperimentSpec`] AST.
+//!
+//! One `ExperimentSpec` declares a complete experiment: the subsystem to
+//! drive (query sweep, guided search, multi-stream scenario, device
+//! fleet), every axis/constraint/seed it needs, and the output sinks. It
+//! is the *single programmatic front door*: the manifest binder
+//! (`manifest::bind`), the CLI flag translator (`manifest::flags`) and
+//! Rust callers (`examples/search.rs`, `examples/fleet.rs`) all construct
+//! this type, and `manifest::exec` lowers it onto the existing
+//! `eval::Query` / `search` / `coordinator::Scenario` / `fleet` entry
+//! points with **no new evaluation semantics** — a manifest-driven run is
+//! bitwise-identical to the equivalent hand-built one.
+//!
+//! Specs are fully resolved (every default filled in at bind/build time),
+//! `PartialEq`, and serialize back to canonical manifest text via
+//! [`ExperimentSpec::to_manifest`] — `bind(parse(spec.to_manifest())) ==
+//! spec` is a pinned round-trip property.
+
+use crate::arch::MemFlavor;
+use crate::coordinator::sensor::Arrival;
+use crate::eval::AssignSpec;
+use crate::search::{Family, Objective};
+use crate::tech::{paper_mram_for, Device, Node};
+use crate::workload::PrecisionPolicy;
+
+use super::ast::{Block, Value};
+use super::lex::Span;
+
+/// A complete, resolved experiment declaration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentSpec {
+    /// Run name (the quoted manifest label; report titles use it).
+    pub name: String,
+    pub kind: ExperimentKind,
+    pub sinks: Sinks,
+}
+
+/// The subsystem an experiment drives, with its full configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ExperimentKind {
+    Query(QuerySpec),
+    Search(SearchSpec),
+    Scenario(ScenarioSpec),
+    Fleet(FleetPlan),
+}
+
+impl ExperimentSpec {
+    /// A query-sweep experiment (lowers onto [`crate::eval::Query`]).
+    pub fn query(name: &str, q: QuerySpec) -> ExperimentSpec {
+        ExperimentSpec { name: name.to_string(), kind: ExperimentKind::Query(q), sinks: Sinks::default() }
+    }
+
+    /// A guided-search experiment (lowers onto [`crate::search`]).
+    pub fn search(name: &str, s: SearchSpec) -> ExperimentSpec {
+        ExperimentSpec { name: name.to_string(), kind: ExperimentKind::Search(s), sinks: Sinks::default() }
+    }
+
+    /// A multi-stream serving scenario (lowers onto
+    /// [`crate::coordinator::scenario::Scenario`]).
+    pub fn scenario(name: &str, s: ScenarioSpec) -> ExperimentSpec {
+        ExperimentSpec { name: name.to_string(), kind: ExperimentKind::Scenario(s), sinks: Sinks::default() }
+    }
+
+    /// A device-fleet placement simulation (lowers onto
+    /// [`crate::fleet::FleetSpec`]).
+    pub fn fleet(name: &str, f: FleetPlan) -> ExperimentSpec {
+        ExperimentSpec { name: name.to_string(), kind: ExperimentKind::Fleet(f), sinks: Sinks::default() }
+    }
+
+    /// Attach output sinks (builder-style).
+    pub fn with_sinks(mut self, sinks: Sinks) -> ExperimentSpec {
+        self.sinks = sinks;
+        self
+    }
+
+    /// The experiment kind as the manifest block keyword.
+    pub fn kind_label(&self) -> &'static str {
+        match self.kind {
+            ExperimentKind::Query(_) => "query",
+            ExperimentKind::Search(_) => "search",
+            ExperimentKind::Scenario(_) => "scenario",
+            ExperimentKind::Fleet(_) => "fleet",
+        }
+    }
+
+    /// Canonical manifest text (the `manifest check` resolved-spec dump;
+    /// re-binding it reproduces `self` exactly).
+    pub fn to_manifest(&self) -> String {
+        self.to_block().render()
+    }
+
+    /// The raw-tree form of the spec (every default written out).
+    pub fn to_block(&self) -> Block {
+        let mut b = Block::labeled(self.kind_label(), &self.name);
+        match &self.kind {
+            ExperimentKind::Query(q) => b = q.fill(b),
+            ExperimentKind::Search(s) => b = s.fill(b),
+            ExperimentKind::Scenario(s) => b = s.fill(b),
+            ExperimentKind::Fleet(f) => b = f.fill(b),
+        }
+        if let Some(p) = &self.sinks.csv {
+            b = b.entry("csv", str_v(p));
+        }
+        if let Some(p) = &self.sinks.trace {
+            b = b.entry("trace", str_v(p));
+        }
+        if let Some(p) = &self.sinks.metrics {
+            b = b.entry("metrics", str_v(p));
+        }
+        b
+    }
+}
+
+/// Output sinks: CSV path plus the observability journal/metrics paths
+/// (`obs::set_output_paths`). The table sink is always on (stdout).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Sinks {
+    pub csv: Option<String>,
+    pub trace: Option<String>,
+    pub metrics: Option<String>,
+}
+
+// ---- query ---------------------------------------------------------------
+
+/// The MRAM-device axis of a query (mirrors [`crate::eval::Devices`],
+/// with `PartialEq` for spec equality).
+#[derive(Debug, Clone, PartialEq)]
+pub enum DeviceAxis {
+    /// The paper's node-appropriate pick (STT ≤28 nm, VGSOT at 7 nm).
+    Paper,
+    Fixed(Device),
+    Each(Vec<Device>),
+}
+
+/// The assignment axis (mirrors [`crate::eval::Assignments`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum AssignAxis {
+    Flavors(Vec<MemFlavor>),
+    Masks(Vec<u32>),
+    Lattice,
+}
+
+/// Ranking metric for the query `top_k` stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueryMetric {
+    Energy,
+    Area,
+    Edp,
+    /// Memory power at the query's `ips`.
+    PMem,
+    Latency,
+}
+
+impl QueryMetric {
+    pub fn label(self) -> &'static str {
+        match self {
+            QueryMetric::Energy => "energy",
+            QueryMetric::Area => "area",
+            QueryMetric::Edp => "edp",
+            QueryMetric::PMem => "p_mem",
+            QueryMetric::Latency => "latency",
+        }
+    }
+}
+
+/// A declarative sweep over the evaluation engine. Defaults reproduce the
+/// paper's standard set (cpu + eyeriss_v2 + simba_v2 over detnet+edsnet,
+/// all nodes, paper MRAM pick, the three named flavors, no stages).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuerySpec {
+    pub archs: Vec<String>,
+    pub nets: Vec<String>,
+    pub nodes: Vec<Node>,
+    pub devices: DeviceAxis,
+    pub assignments: AssignAxis,
+    /// Precision-policy axis by name (empty = INT8-only, no axis).
+    pub precisions: Vec<String>,
+    /// Inference rate the power stages (`feasible`/`pareto`/`p_mem`
+    /// ranking) evaluate at.
+    pub ips: f64,
+    /// Attach the vs-SRAM baseline stage (delta columns).
+    pub baseline_sram: bool,
+    /// Keep only points sustaining `ips`.
+    pub feasible: bool,
+    /// Keep only the (P_mem@ips, area, latency) Pareto frontier.
+    pub pareto: bool,
+    /// Keep the k best points under the metric (best first).
+    pub top_k: Option<(QueryMetric, usize)>,
+}
+
+impl Default for QuerySpec {
+    fn default() -> Self {
+        QuerySpec {
+            archs: vec!["cpu".into(), "eyeriss_v2".into(), "simba_v2".into()],
+            nets: vec!["detnet".into(), "edsnet".into()],
+            nodes: Node::ALL.to_vec(),
+            devices: DeviceAxis::Paper,
+            assignments: AssignAxis::Flavors(MemFlavor::ALL.to_vec()),
+            precisions: Vec::new(),
+            ips: 10.0,
+            baseline_sram: false,
+            feasible: false,
+            pareto: false,
+            top_k: None,
+        }
+    }
+}
+
+impl QuerySpec {
+    fn fill(&self, b: Block) -> Block {
+        let mut b = b
+            .entry("archs", ident_list(&self.archs))
+            .entry("nets", ident_list(&self.nets))
+            .entry("nodes", num_list(self.nodes.iter().map(|n| n.nm())))
+            .entry(
+                "devices",
+                match &self.devices {
+                    DeviceAxis::Paper => ident_v("paper"),
+                    DeviceAxis::Fixed(d) => ident_v(device_key(*d)),
+                    DeviceAxis::Each(v) => {
+                        Value::List(v.iter().map(|d| ident_v(device_key(*d))).collect(), Span::default())
+                    }
+                },
+            )
+            .entry(
+                "assignments",
+                match &self.assignments {
+                    AssignAxis::Flavors(fs) => Value::List(
+                        fs.iter().map(|f| ident_v(flavor_key(*f))).collect(),
+                        Span::default(),
+                    ),
+                    AssignAxis::Masks(ms) => Value::List(
+                        ms.iter().map(|m| Value::Call("mask".into(), vec![num_v(*m as f64)], Span::default())).collect(),
+                        Span::default(),
+                    ),
+                    AssignAxis::Lattice => ident_v("lattice"),
+                },
+            )
+            .entry("ips", num_v(self.ips));
+        if !self.precisions.is_empty() {
+            b = b.entry("precisions", ident_list(&self.precisions));
+        }
+        b = b
+            .entry("baseline", ident_v(if self.baseline_sram { "sram" } else { "none" }))
+            .entry("feasible", bool_v(self.feasible))
+            .entry("pareto", bool_v(self.pareto));
+        if let Some((metric, k)) = &self.top_k {
+            b = b.entry(
+                "top_k",
+                Value::Call(metric.label().into(), vec![num_v(*k as f64)], Span::default()),
+            );
+        }
+        b
+    }
+}
+
+// ---- search --------------------------------------------------------------
+
+/// Base knob space a search starts from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpaceBase {
+    /// [`crate::search::KnobSpace::paper`] (INT8-only axes).
+    Paper,
+    /// [`crate::search::KnobSpace::paper_mixed_precision`].
+    PaperMixed,
+    /// [`crate::search::KnobSpace::tiny`] (test-sized).
+    Tiny,
+}
+
+impl SpaceBase {
+    pub fn label(self) -> &'static str {
+        match self {
+            SpaceBase::Paper => "paper",
+            SpaceBase::PaperMixed => "paper_mixed",
+            SpaceBase::Tiny => "tiny",
+        }
+    }
+}
+
+/// Knob-range overrides over a base [`crate::search::KnobSpace`]. `None`
+/// keeps the base axis; `Some` replaces it wholesale (the manifest
+/// `knobs { .. }` block). Axis names match `KnobSpace` fields — the
+/// binder's "unknown knob" diagnostic suggests across exactly this list.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SpaceSpec {
+    pub base: Option<SpaceBase>,
+    pub families: Option<Vec<Family>>,
+    pub pe_grids: Option<Vec<(usize, usize)>>,
+    pub weight_bytes: Option<Vec<usize>>,
+    pub input_bytes: Option<Vec<usize>>,
+    pub accum_bytes: Option<Vec<usize>>,
+    pub glb_bytes: Option<Vec<usize>>,
+    pub glb_banks: Option<Vec<usize>>,
+    pub gwb_bytes: Option<Vec<usize>>,
+    pub wide_bus_bits: Option<Vec<usize>>,
+    pub nodes: Option<Vec<Node>>,
+    pub mrams: Option<Vec<Device>>,
+    pub assigns: Option<Vec<AssignSpec>>,
+    pub weight_bits: Option<Vec<u32>>,
+    pub act_bits: Option<Vec<u32>>,
+}
+
+/// A guided design-space search declaration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchSpec {
+    pub net: String,
+    pub space: SpaceSpec,
+    /// `exhaustive|random|hill|anneal|all` (validated at bind time).
+    pub strategy: String,
+    pub objective: Objective,
+    pub budget: usize,
+    pub batch: usize,
+    pub seed: u64,
+    pub min_ips: f64,
+    pub max_area_mm2: Option<f64>,
+    pub max_p_mem_uw: Option<f64>,
+}
+
+impl Default for SearchSpec {
+    fn default() -> Self {
+        SearchSpec {
+            net: "detnet".into(),
+            space: SpaceSpec::default(),
+            strategy: "all".into(),
+            objective: Objective::Energy,
+            budget: 400,
+            batch: 64,
+            seed: 42,
+            min_ips: 10.0,
+            max_area_mm2: None,
+            max_p_mem_uw: None,
+        }
+    }
+}
+
+impl SearchSpec {
+    fn fill(&self, b: Block) -> Block {
+        let mut b = b
+            .entry("net", ident_v(&self.net))
+            .entry("objective", ident_v(objective_key(self.objective)))
+            .entry("strategy", ident_v(&self.strategy))
+            .entry("budget", num_v(self.budget as f64))
+            .entry("batch", num_v(self.batch as f64))
+            .entry("seed", num_v(self.seed as f64))
+            .entry("min_ips", num_v(self.min_ips));
+        if let Some(a) = self.max_area_mm2 {
+            b = b.entry("max_area_mm2", num_v(a));
+        }
+        if let Some(p) = self.max_p_mem_uw {
+            b = b.entry("max_p_mem_uw", num_v(p));
+        }
+        b.child(self.space.fill(Block::new("knobs")))
+    }
+}
+
+impl SpaceSpec {
+    pub(super) fn fill(&self, b: Block) -> Block {
+        let mut b = b;
+        if let Some(base) = self.base {
+            b = b.entry("base", ident_v(base.label()));
+        }
+        if let Some(f) = &self.families {
+            b = b.entry(
+                "families",
+                Value::List(f.iter().map(|f| ident_v(f.label())).collect(), Span::default()),
+            );
+        }
+        if let Some(g) = &self.pe_grids {
+            b = b.entry(
+                "pe_grids",
+                Value::List(
+                    g.iter()
+                        .map(|(r, c)| {
+                            Value::List(vec![num_v(*r as f64), num_v(*c as f64)], Span::default())
+                        })
+                        .collect(),
+                    Span::default(),
+                ),
+            );
+        }
+        for (key, axis) in [
+            ("weight_bytes", &self.weight_bytes),
+            ("input_bytes", &self.input_bytes),
+            ("accum_bytes", &self.accum_bytes),
+            ("glb_bytes", &self.glb_bytes),
+            ("glb_banks", &self.glb_banks),
+            ("gwb_bytes", &self.gwb_bytes),
+            ("wide_bus_bits", &self.wide_bus_bits),
+        ] {
+            if let Some(v) = axis {
+                b = b.entry(key, num_list(v.iter().map(|&x| x as f64)));
+            }
+        }
+        if let Some(nodes) = &self.nodes {
+            b = b.entry("nodes", num_list(nodes.iter().map(|n| n.nm())));
+        }
+        if let Some(mrams) = &self.mrams {
+            b = b.entry(
+                "mrams",
+                Value::List(mrams.iter().map(|d| ident_v(device_key(*d))).collect(), Span::default()),
+            );
+        }
+        if let Some(assigns) = &self.assigns {
+            b = b.entry(
+                "assigns",
+                Value::List(
+                    assigns
+                        .iter()
+                        .map(|a| match a {
+                            AssignSpec::Flavor(f) => ident_v(flavor_key(*f)),
+                            AssignSpec::Mask(m) => {
+                                Value::Call("mask".into(), vec![num_v(*m as f64)], Span::default())
+                            }
+                        })
+                        .collect(),
+                    Span::default(),
+                ),
+            );
+        }
+        for (key, axis) in [("weight_bits", &self.weight_bits), ("act_bits", &self.act_bits)] {
+            if let Some(v) = axis {
+                b = b.entry(key, num_list(v.iter().map(|&x| x as f64)));
+            }
+        }
+        b
+    }
+}
+
+// ---- scenario ------------------------------------------------------------
+
+/// Frame-arrival declaration (mirrors
+/// [`crate::coordinator::sensor::Arrival`], with `PartialEq`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalDecl {
+    Periodic { fps: f64 },
+    Poisson { rate: f64 },
+}
+
+impl ArrivalDecl {
+    pub fn to_arrival(self) -> Arrival {
+        match self {
+            ArrivalDecl::Periodic { fps } => Arrival::Periodic { fps },
+            ArrivalDecl::Poisson { rate } => Arrival::Poisson { rate },
+        }
+    }
+
+    fn value(self) -> Value {
+        match self {
+            ArrivalDecl::Periodic { fps } => {
+                Value::Call("periodic".into(), vec![num_v(fps)], Span::default())
+            }
+            ArrivalDecl::Poisson { rate } => {
+                Value::Call("poisson".into(), vec![num_v(rate)], Span::default())
+            }
+        }
+    }
+}
+
+/// A precision-policy declaration: a default policy name plus optional
+/// per-layer overrides (`w4a8`, `conv1 = int8`, …), lowered through
+/// [`PrecisionPolicy::from_str`] / [`PrecisionPolicy::with_layer`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct PrecisionDecl {
+    pub default: String,
+    /// `(layer, policy-name)` overrides in declaration order.
+    pub overrides: Vec<(String, String)>,
+}
+
+impl PrecisionDecl {
+    pub fn named(name: &str) -> PrecisionDecl {
+        PrecisionDecl { default: name.to_string(), overrides: Vec::new() }
+    }
+
+    /// Lower into the workload-layer policy type.
+    pub fn policy(&self) -> crate::Result<PrecisionPolicy> {
+        let mut p = PrecisionPolicy::from_str(&self.default)?;
+        for (layer, name) in &self.overrides {
+            let bits = PrecisionPolicy::from_str(name)?.default;
+            p = p.with_layer(layer, bits);
+        }
+        Ok(p)
+    }
+}
+
+/// One scenario stream declaration (mirrors
+/// [`crate::coordinator::scenario::StreamSpec`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamDecl {
+    pub name: String,
+    pub model: String,
+    pub arrival: ArrivalDecl,
+    pub queue_depth: usize,
+    pub flavor: MemFlavor,
+    pub precision: PrecisionDecl,
+    pub seed: u64,
+    pub exec_floor_s: f64,
+}
+
+impl StreamDecl {
+    /// Same defaults as `StreamSpec::new` (queue 4, seed 42, INT8, no
+    /// exec floor).
+    pub fn new(name: &str, model: &str, arrival: ArrivalDecl, flavor: MemFlavor) -> StreamDecl {
+        StreamDecl {
+            name: name.to_string(),
+            model: model.to_string(),
+            arrival,
+            queue_depth: 4,
+            flavor,
+            precision: PrecisionDecl::named("int8"),
+            seed: 42,
+            exec_floor_s: 0.0,
+        }
+    }
+
+    fn fill(&self) -> Block {
+        let mut b = Block::labeled("stream", &self.name)
+            .entry("model", ident_v(&self.model))
+            .entry("arrival", self.arrival.value())
+            .entry("flavor", ident_v(flavor_key(self.flavor)))
+            .entry("queue_depth", num_v(self.queue_depth as f64))
+            .entry("seed", num_v(self.seed as f64))
+            .entry("exec_floor_s", num_v(self.exec_floor_s));
+        if self.precision.overrides.is_empty() {
+            b = b.entry("precision", ident_v(&self.precision.default));
+        } else {
+            let mut p = Block::new("precision").entry("default", ident_v(&self.precision.default));
+            for (layer, name) in &self.precision.overrides {
+                p = p.entry(layer, ident_v(name));
+            }
+            b = b.child(p);
+        }
+        b
+    }
+}
+
+/// Scenario backend selector (mirrors [`crate::coordinator::Backend`]
+/// without the artifacts path, which lives in
+/// [`ScenarioSpec::artifacts_dir`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendSel {
+    Auto,
+    Pjrt,
+    Synthetic,
+}
+
+impl BackendSel {
+    pub fn label(self) -> &'static str {
+        match self {
+            BackendSel::Auto => "auto",
+            BackendSel::Pjrt => "pjrt",
+            BackendSel::Synthetic => "synthetic",
+        }
+    }
+}
+
+/// Replay engine selector (mirrors
+/// [`crate::coordinator::scenario::Runner`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunnerSel {
+    Virtual,
+    Threads,
+}
+
+impl RunnerSel {
+    pub fn label(self) -> &'static str {
+        match self {
+            RunnerSel::Virtual => "virtual",
+            RunnerSel::Threads => "threads",
+        }
+    }
+}
+
+/// A multi-stream serving scenario declaration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpec {
+    pub streams: Vec<StreamDecl>,
+    /// Modeled horizon, seconds.
+    pub seconds: f64,
+    pub time_scale: f64,
+    /// Accelerator name (`arch::by_name`).
+    pub arch: String,
+    pub node: Node,
+    pub mram: Device,
+    pub backend: BackendSel,
+    pub artifacts_dir: String,
+    pub runner: RunnerSel,
+}
+
+impl Default for ScenarioSpec {
+    fn default() -> Self {
+        ScenarioSpec {
+            streams: Vec::new(),
+            seconds: 60.0,
+            time_scale: 60.0,
+            arch: "simba_v2".into(),
+            node: Node::N7,
+            mram: paper_mram_for(Node::N7),
+            backend: BackendSel::Auto,
+            artifacts_dir: "artifacts".into(),
+            runner: RunnerSel::Virtual,
+        }
+    }
+}
+
+impl ScenarioSpec {
+    /// Append a stream (builder-style).
+    pub fn with_stream(mut self, s: StreamDecl) -> ScenarioSpec {
+        self.streams.push(s);
+        self
+    }
+
+    fn fill(&self, b: Block) -> Block {
+        let mut b = b
+            .entry("arch", ident_v(&self.arch))
+            .entry("node", num_v(self.node.nm()))
+            .entry("mram", ident_v(device_key(self.mram)))
+            .entry("seconds", num_v(self.seconds))
+            .entry("time_scale", num_v(self.time_scale))
+            .entry("backend", ident_v(self.backend.label()))
+            .entry("artifacts", str_v(&self.artifacts_dir))
+            .entry("runner", ident_v(self.runner.label()));
+        for s in &self.streams {
+            b = b.child(s.fill());
+        }
+        b
+    }
+}
+
+// ---- fleet ---------------------------------------------------------------
+
+/// Device-pool selector for a fleet.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PoolSel {
+    /// [`crate::fleet::HwPoint::paper_palette`] at the plan's node/MRAM.
+    Palette,
+    /// Run the embedded search and deploy its frontier
+    /// ([`crate::fleet::HwPoint::from_frontier`], best `limit` points).
+    /// The first resolved strategy drives the search.
+    FromSearch { search: Box<SearchSpec>, limit: usize },
+}
+
+/// One fleet load-group declaration (mirrors
+/// [`crate::fleet::StreamLoad`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoadDecl {
+    pub name: String,
+    pub model: String,
+    pub arrival: ArrivalDecl,
+    pub count: usize,
+    pub queue_depth: usize,
+    pub precision: PrecisionDecl,
+    pub exec_floor_s: f64,
+}
+
+impl LoadDecl {
+    /// Same defaults as `StreamLoad::new` (queue 4, INT8, no floor).
+    pub fn new(name: &str, model: &str, arrival: ArrivalDecl, count: usize) -> LoadDecl {
+        LoadDecl {
+            name: name.to_string(),
+            model: model.to_string(),
+            arrival,
+            count,
+            queue_depth: 4,
+            precision: PrecisionDecl::named("int8"),
+            exec_floor_s: 0.0,
+        }
+    }
+
+    fn fill(&self) -> Block {
+        Block::labeled("load", &self.name)
+            .entry("model", ident_v(&self.model))
+            .entry("arrival", self.arrival.value())
+            .entry("count", num_v(self.count as f64))
+            .entry("queue_depth", num_v(self.queue_depth as f64))
+            .entry("precision", ident_v(&self.precision.default))
+            .entry("exec_floor_s", num_v(self.exec_floor_s))
+    }
+}
+
+/// A fleet placement-simulation declaration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetPlan {
+    pub devices: usize,
+    /// Modeled horizon, seconds.
+    pub seconds: f64,
+    pub seed: u64,
+    pub node: Node,
+    pub mram: Device,
+    pub pool: PoolSel,
+    pub loads: Vec<LoadDecl>,
+    /// Placement policy name (`fleet::policy_by_name`).
+    pub policy: String,
+    pub min_ips: Option<f64>,
+    pub max_p_mem_uw: Option<f64>,
+    pub max_util: Option<f64>,
+}
+
+impl Default for FleetPlan {
+    fn default() -> Self {
+        FleetPlan {
+            devices: 8,
+            seconds: 5.0,
+            seed: 42,
+            node: Node::N7,
+            mram: paper_mram_for(Node::N7),
+            pool: PoolSel::Palette,
+            loads: Vec::new(),
+            policy: "least-loaded".into(),
+            min_ips: None,
+            max_p_mem_uw: None,
+            max_util: None,
+        }
+    }
+}
+
+impl FleetPlan {
+    /// Append a load group (builder-style).
+    pub fn with_load(mut self, l: LoadDecl) -> FleetPlan {
+        self.loads.push(l);
+        self
+    }
+
+    fn fill(&self, b: Block) -> Block {
+        let mut b = b
+            .entry("devices", num_v(self.devices as f64))
+            .entry("seconds", num_v(self.seconds))
+            .entry("seed", num_v(self.seed as f64))
+            .entry("node", num_v(self.node.nm()))
+            .entry("mram", ident_v(device_key(self.mram)))
+            .entry("policy", ident_v(&self.policy.replace('-', "_")));
+        match &self.pool {
+            PoolSel::Palette => b = b.entry("pool", ident_v("palette")),
+            PoolSel::FromSearch { search, limit } => {
+                let inner = search
+                    .fill(Block::labeled("pool", "from_search"))
+                    .entry("limit", num_v(*limit as f64));
+                b = b.child(inner);
+            }
+        }
+        if let Some(x) = self.min_ips {
+            b = b.entry("min_ips", num_v(x));
+        }
+        if let Some(x) = self.max_p_mem_uw {
+            b = b.entry("max_p_mem_uw", num_v(x));
+        }
+        if let Some(x) = self.max_util {
+            b = b.entry("max_util", num_v(x));
+        }
+        for l in &self.loads {
+            b = b.child(l.fill());
+        }
+        b
+    }
+}
+
+// ---- shared serialization helpers ---------------------------------------
+
+pub(super) fn num_v(n: f64) -> Value {
+    Value::Num(n, Span::default())
+}
+
+pub(super) fn ident_v(s: &str) -> Value {
+    Value::Ident(s.to_string(), Span::default())
+}
+
+pub(super) fn str_v(s: &str) -> Value {
+    Value::Str(s.to_string(), Span::default())
+}
+
+pub(super) fn bool_v(b: bool) -> Value {
+    ident_v(if b { "true" } else { "false" })
+}
+
+pub(super) fn num_list(vals: impl Iterator<Item = f64>) -> Value {
+    Value::List(vals.map(num_v).collect(), Span::default())
+}
+
+pub(super) fn ident_list(vals: &[String]) -> Value {
+    Value::List(vals.iter().map(|s| ident_v(s)).collect(), Span::default())
+}
+
+/// Manifest keyword for a device (the `Device::from_str` spellings).
+pub(super) fn device_key(d: Device) -> &'static str {
+    match d {
+        Device::Sram => "sram",
+        Device::SttMram => "stt",
+        Device::SotMram => "sot",
+        Device::VgsotMram => "vgsot",
+    }
+}
+
+/// Manifest keyword for a memory flavor.
+pub(super) fn flavor_key(f: MemFlavor) -> &'static str {
+    match f {
+        MemFlavor::SramOnly => "sram",
+        MemFlavor::P0 => "p0",
+        MemFlavor::P1 => "p1",
+    }
+}
+
+/// Manifest keyword for a search objective.
+pub(super) fn objective_key(o: Objective) -> &'static str {
+    match o {
+        Objective::Energy => "energy",
+        Objective::Area => "area",
+        Objective::Edp => "edp",
+    }
+}

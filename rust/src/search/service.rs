@@ -164,13 +164,6 @@ impl EvalService {
         }
     }
 
-    /// Cumulative cache telemetry (map interning + macro-model memo).
-    #[deprecated(
-        note = "renamed to `EvalService::cache_stats` (a view over `Engine::metrics()`)"
-    )]
-    pub fn stats(&self) -> CacheStats {
-        self.cache_stats()
-    }
 }
 
 #[cfg(test)]
@@ -197,10 +190,6 @@ mod tests {
         let s = svc.cache_stats();
         assert_eq!((s.map_hits, s.map_misses), (1, 2));
         assert!(s.map_hit_rate() > 0.0);
-        // The deprecated accessor is a parity shim over the same counters.
-        #[allow(deprecated)]
-        let legacy = svc.stats();
-        assert_eq!(legacy, s);
     }
 
     #[test]

@@ -13,16 +13,26 @@ pub struct OptSpec {
     pub default: Option<&'static str>,
 }
 
-/// Parsed arguments: options (flags map to "true"), positionals.
+/// Parsed arguments: options (flags map to "true"), positionals. For
+/// repeatable options every occurrence is also collected in order
+/// (`get_all`); `opts` keeps the last one (the historical behavior).
 #[derive(Debug, Clone, Default)]
 pub struct Args {
     pub opts: BTreeMap<String, String>,
     pub positional: Vec<String>,
+    /// Every occurrence of each value-taking option, in argv order
+    /// (defaults are not included).
+    pub multi: BTreeMap<String, Vec<String>>,
 }
 
 impl Args {
     pub fn get(&self, name: &str) -> Option<&str> {
         self.opts.get(name).map(|s| s.as_str())
+    }
+    /// All occurrences of a repeatable option (`--set a=1 --set b=2`), in
+    /// order. Empty when the option never appeared on the command line.
+    pub fn get_all(&self, name: &str) -> &[String] {
+        self.multi.get(name).map(|v| v.as_slice()).unwrap_or(&[])
     }
     pub fn flag(&self, name: &str) -> bool {
         self.get(name) == Some("true")
@@ -83,6 +93,9 @@ pub fn parse(argv: &[String], specs: &[OptSpec]) -> crate::Result<Args> {
                 }
                 "true".to_string()
             };
+            if spec.takes_value {
+                args.multi.entry(name.to_string()).or_default().push(value.clone());
+            }
             args.opts.insert(name.to_string(), value);
         } else {
             args.positional.push(a.clone());
@@ -162,6 +175,14 @@ mod tests {
         assert!(parse(&sv(&["--bogus"]), &specs()).is_err());
         assert!(parse(&sv(&["--node"]), &specs()).is_err());
         assert!(parse(&sv(&["--verbose=1"]), &specs()).is_err());
+    }
+
+    #[test]
+    fn repeated_options_collect_in_order() {
+        let a = parse(&sv(&["--node", "28", "--node=7"]), &specs()).unwrap();
+        assert_eq!(a.get("node"), Some("7"));
+        assert_eq!(a.get_all("node"), ["28".to_string(), "7".to_string()]);
+        assert!(a.get_all("verbose").is_empty());
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! modeled metrics, placement-policy capacity accounting, fleet-scale
 //! bitwise reproducibility, drop telemetry, and the `fleet` CLI command.
 
-use xr_edge_dse::coordinator::scenario::{Runner, Scenario};
+use xr_edge_dse::coordinator::scenario::Runner;
 use xr_edge_dse::coordinator::sensor::Arrival;
 use xr_edge_dse::coordinator::Backend;
 use xr_edge_dse::fleet::{
@@ -81,7 +81,7 @@ fn virtual_clock_matches_thread_runner_on_modeled_metrics() {
     // in the identical order and replay the identical ledger charges.
     // (Wall-clock latency summaries are runner-specific by design.)
     let scenario = |runner| {
-        let mut sc = Scenario::preset("paper", "artifacts".into()).unwrap();
+        let mut sc = xr_edge_dse::manifest::scenario_preset("paper", "artifacts".into()).unwrap();
         sc.backend = Backend::Synthetic;
         sc.seconds = 20.0;
         sc.time_scale = 50.0;

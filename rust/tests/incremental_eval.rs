@@ -78,10 +78,6 @@ fn warm_cache_matches_cold_path_bitwise() {
     let (hits, misses) = (snap.counter("eval.macro.hit"), snap.counter("eval.macro.miss"));
     assert!(hits > 0, "repeat evaluations must hit the macro memo");
     assert!(misses > 0, "first touches must miss the macro memo");
-    // The deprecated tuple accessor is a parity shim over the same counters.
-    #[allow(deprecated)]
-    let legacy = e.macro_cache_stats();
-    assert_eq!(legacy, (hits as usize, misses as usize));
 }
 
 #[test]

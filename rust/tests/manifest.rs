@@ -1,0 +1,609 @@
+//! Manifest-layer gates: the `.xrdse` surface must be a *pure* front-end.
+//!
+//! 1. **Golden diagnostics** — parser and binder errors are pinned to the
+//!    exact message *and* byte span (`error: file:line:col: msg`), so a
+//!    reworded diagnostic or an off-by-one span is a test failure, not a
+//!    silent UX regression.
+//! 2. **Round-trips** — `ExperimentSpec::to_manifest()` re-binds to an
+//!    equal spec, for hand-built specs exercising every axis and for all
+//!    embedded builtin manifests.
+//! 3. **Bitwise equivalence** — a manifest run of each subsystem (query,
+//!    search, scenario, fleet) reproduces the hand-built Rust surface
+//!    bit-for-bit. Lowering adds *no* evaluation semantics.
+//! 4. **Flags parity** — the legacy CLI flag surface and equivalent
+//!    manifest text bind to identical specs.
+//! 5. **CLI smoke** — `run` / `manifest check` end to end, including
+//!    `--set` overrides and the exit-2 spanned-error contract.
+
+use std::path::Path;
+use std::process::Command;
+
+use xr_edge_dse::arch::{cpu, eyeriss, simba, MemFlavor, PeConfig};
+use xr_edge_dse::coordinator::scenario::{Runner, Scenario, StreamSpec};
+use xr_edge_dse::coordinator::sensor::Arrival;
+use xr_edge_dse::coordinator::Backend;
+use xr_edge_dse::eval::{AssignSpec, Assignments, Devices, Engine, Query};
+use xr_edge_dse::fleet::{policy_by_name, run_fleet, FleetSpec, HwPoint, StreamLoad};
+use xr_edge_dse::manifest::{
+    self, bind, compile, exec, flags, parse_str, ArrivalDecl, AssignAxis, BackendSel, DeviceAxis,
+    ExperimentKind, ExperimentSpec, FleetPlan, LoadDecl, PoolSel, PrecisionDecl, QueryMetric,
+    QuerySpec, RunnerSel, ScenarioSpec, SearchSpec, Sinks, SpaceBase, SpaceSpec, StreamDecl,
+};
+use xr_edge_dse::search::{
+    run_search, ArchSynth, Constraints, Family, KnobSpace, Objective, RandomSearch, SearchConfig,
+};
+use xr_edge_dse::tech::{Device, Node};
+use xr_edge_dse::util::cli::{parse, Args, OptSpec};
+use xr_edge_dse::workload::builtin::{detnet, edsnet};
+
+// ---- golden diagnostics ---------------------------------------------------
+
+/// Parser-stage golden: source → exact `Diag` rendering.
+fn perr(src: &str) -> String {
+    parse_str(src, "g.xrdse").expect_err("source must fail to parse").to_string()
+}
+
+/// Binder-stage golden: source parses, then fails to bind.
+fn berr(src: &str) -> String {
+    let b = parse_str(src, "g.xrdse").expect("source must parse");
+    bind(&b, "g.xrdse").expect_err("source must fail to bind").to_string()
+}
+
+#[test]
+fn parser_diagnostics_pin_message_and_span() {
+    assert_eq!(
+        perr("7 { }"),
+        "error: g.xrdse:1:1: expected a block kind (identifier), found number '7'"
+    );
+    assert_eq!(
+        perr("query \"q\" {\n  = 3\n}"),
+        "error: g.xrdse:2:3: expected 'key = value' or a nested block, found '='"
+    );
+    assert_eq!(
+        perr("query \"q\" {\n  ips = ,\n}"),
+        "error: g.xrdse:2:9: expected a value (number, string, identifier, list or call), found ','"
+    );
+    assert_eq!(
+        perr("query \"q\" {\n  nodes = [7 28]\n}"),
+        "error: g.xrdse:2:14: expected ',' or ']', found number '28'"
+    );
+    assert_eq!(
+        perr("query \"q\" {\n  nodes = [7,"),
+        "error: g.xrdse:2:14: expected ']', found end of input"
+    );
+    assert_eq!(
+        perr("query \"q\" { }\nfleet \"f\" { }"),
+        "error: g.xrdse:2:1: expected end of input after the experiment block, found identifier 'fleet'"
+    );
+}
+
+#[test]
+fn binder_diagnostics_pin_message_and_span() {
+    assert_eq!(
+        berr("scenari \"s\" { }"),
+        "error: g.xrdse:1:1: unknown experiment kind 'scenari', did you mean 'scenario'?"
+    );
+    assert_eq!(
+        berr("search \"s\" {\n  budget = lots\n}"),
+        "error: g.xrdse:2:12: expected a number for 'budget', found identifier 'lots'"
+    );
+    assert_eq!(
+        berr("scenario \"s\" {\n  seconds = 0\n}"),
+        "error: g.xrdse:2:13: 'seconds' must be positive (got 0)"
+    );
+    assert_eq!(
+        berr("search \"s\" {\n  seed = 1.5\n}"),
+        "error: g.xrdse:2:10: expected a non-negative integer for 'seed', found 1.5"
+    );
+    assert_eq!(
+        berr("query \"q\" {\n  nodes = [14]\n}"),
+        "error: g.xrdse:2:12: unknown node '14' (45|40|28|22|7)"
+    );
+    assert_eq!(
+        berr("search \"s\" {\n  strategy = greedy\n}"),
+        "error: g.xrdse:2:14: unknown strategy 'greedy'"
+    );
+    assert_eq!(
+        berr("search \"s\" {\n  knobs { }\n  knobs { }\n}"),
+        "error: g.xrdse:3:3: duplicate block 'knobs'"
+    );
+    assert_eq!(
+        berr("scenario \"s\" {\n  artifacts = artifacts\n}"),
+        "error: g.xrdse:2:15: expected a quoted string path for 'artifacts', found identifier 'artifacts'"
+    );
+}
+
+#[test]
+fn nested_block_diagnostics_pin_message_and_span() {
+    let bad_precision = "scenario \"s\" {\n  stream \"hand\" {\n    model = detnet\n    \
+                         arrival = periodic(10)\n    precision = int9\n  }\n}";
+    assert_eq!(
+        berr(bad_precision),
+        "error: g.xrdse:5:17: unknown precision policy 'int9' (int8|int4|fp16|w<N>a<M>)"
+    );
+    let bad_arity = "scenario \"s\" {\n  stream \"hand\" {\n    model = detnet\n    \
+                     arrival = periodic(10, 2)\n  }\n}";
+    assert_eq!(
+        berr(bad_arity),
+        "error: g.xrdse:4:15: periodic(..) takes exactly one number (the rate in frames/s)"
+    );
+    assert_eq!(
+        berr("scenario \"s\" {\n  stream \"h\" { arrival = periodic(10) }\n}"),
+        "error: g.xrdse:2:3: stream 'h' is missing 'model'"
+    );
+    assert_eq!(
+        berr("fleet \"f\" {\n  pool { budget = 4 }\n}"),
+        "error: g.xrdse:2:3: a pool block needs a variant tag: pool from_search { .. }"
+    );
+    assert_eq!(
+        berr("fleet \"f\" {\n  load \"hand\" { model = detnet  arrival = periodic(10) }\n}"),
+        "error: g.xrdse:2:3: load 'hand' is missing 'count'"
+    );
+    assert_eq!(
+        berr("query \"q\" {\n  assignments = [p0, mask(3)]\n}"),
+        "error: g.xrdse:2:17: an assignment list is either all flavors or all mask(..) calls"
+    );
+}
+
+// ---- round-trips ----------------------------------------------------------
+
+/// `to_manifest()` must re-bind to the identical spec.
+fn assert_round_trip(spec: &ExperimentSpec) {
+    let text = spec.to_manifest();
+    let again = compile(&text, "rt.xrdse", &[]).unwrap_or_else(|e| panic!("{e}\n{text}"));
+    assert_eq!(&again, spec, "round-trip changed the spec:\n{text}");
+}
+
+#[test]
+fn every_builtin_round_trips_through_its_resolved_dump() {
+    for (name, src) in manifest::BUILTINS.iter().copied() {
+        let spec = compile(src, &format!("{name}.xrdse"), &[])
+            .unwrap_or_else(|e| panic!("builtin {name}: {e}"));
+        assert_round_trip(&spec);
+    }
+}
+
+#[test]
+fn query_spec_round_trips_with_every_axis_exercised() {
+    let spec = ExperimentSpec::query(
+        "rt-query",
+        QuerySpec {
+            archs: vec!["cpu".into()],
+            nets: vec!["edsnet".into()],
+            nodes: vec![Node::N28, Node::N7],
+            devices: DeviceAxis::Each(vec![Device::SttMram, Device::VgsotMram]),
+            assignments: AssignAxis::Masks(vec![1, 5]),
+            precisions: vec!["int8".into(), "w4a8".into()],
+            ips: 25.0,
+            baseline_sram: true,
+            feasible: true,
+            pareto: false,
+            top_k: Some((QueryMetric::PMem, 8)),
+        },
+    )
+    .with_sinks(Sinks {
+        csv: Some("out/q.csv".into()),
+        trace: None,
+        metrics: Some("out/m.json".into()),
+    });
+    assert_round_trip(&spec);
+}
+
+#[test]
+fn search_spec_round_trips_with_every_knob_overridden() {
+    let spec = ExperimentSpec::search(
+        "rt_search",
+        SearchSpec {
+            net: "edsnet".into(),
+            space: SpaceSpec {
+                base: Some(SpaceBase::Tiny),
+                families: Some(vec![Family::RowStationary]),
+                pe_grids: Some(vec![(16, 16), (32, 32)]),
+                glb_bytes: Some(vec![65536, 131072]),
+                glb_banks: Some(vec![2, 4]),
+                nodes: Some(vec![Node::N28]),
+                mrams: Some(vec![Device::SttMram]),
+                assigns: Some(vec![
+                    AssignSpec::Flavor(MemFlavor::P0),
+                    AssignSpec::Flavor(MemFlavor::P1),
+                ]),
+                weight_bits: Some(vec![4, 8]),
+                act_bits: Some(vec![8]),
+                ..SpaceSpec::default()
+            },
+            strategy: "anneal".into(),
+            objective: Objective::Edp,
+            budget: 77,
+            batch: 11,
+            seed: 9,
+            min_ips: 5.0,
+            max_area_mm2: Some(12.0),
+            max_p_mem_uw: Some(800.0),
+        },
+    );
+    assert_round_trip(&spec);
+}
+
+#[test]
+fn scenario_spec_round_trips_with_layered_precision() {
+    let spec = ExperimentSpec::scenario(
+        "rt_scenario",
+        ScenarioSpec {
+            seconds: 12.0,
+            time_scale: 24.0,
+            arch: "eyeriss_v2".into(),
+            node: Node::N28,
+            mram: Device::SttMram,
+            backend: BackendSel::Synthetic,
+            artifacts_dir: "my/arts".into(),
+            runner: RunnerSel::Threads,
+            streams: Vec::new(),
+        }
+        .with_stream(StreamDecl {
+            name: "hand".into(),
+            model: "detnet".into(),
+            arrival: ArrivalDecl::Poisson { rate: 2.5 },
+            queue_depth: 8,
+            flavor: MemFlavor::P0,
+            precision: PrecisionDecl {
+                default: "w4a8".into(),
+                overrides: vec![("conv1".into(), "int8".into())],
+            },
+            seed: 7,
+            exec_floor_s: 0.01,
+        })
+        .with_stream(StreamDecl::new(
+            "eye",
+            "edsnet",
+            ArrivalDecl::Periodic { fps: 0.1 },
+            MemFlavor::P1,
+        )),
+    );
+    assert_round_trip(&spec);
+}
+
+#[test]
+fn fleet_plan_round_trips_with_an_embedded_search_pool() {
+    let spec = ExperimentSpec::fleet(
+        "rt_fleet",
+        FleetPlan {
+            devices: 3,
+            seconds: 1.5,
+            seed: 5,
+            node: Node::N28,
+            mram: Device::SttMram,
+            pool: PoolSel::FromSearch {
+                search: Box::new(SearchSpec {
+                    space: SpaceSpec {
+                        base: Some(SpaceBase::Paper),
+                        nodes: Some(vec![Node::N28]),
+                        ..SpaceSpec::default()
+                    },
+                    strategy: "random".into(),
+                    budget: 32,
+                    batch: 8,
+                    seed: 5,
+                    ..SearchSpec::default()
+                }),
+                limit: 2,
+            },
+            loads: vec![LoadDecl {
+                name: "hand".into(),
+                model: "detnet".into(),
+                arrival: ArrivalDecl::Periodic { fps: 10.0 },
+                count: 6,
+                queue_depth: 2,
+                precision: PrecisionDecl::named("int4"),
+                exec_floor_s: 0.002,
+            }],
+            policy: "round-robin".into(),
+            min_ips: Some(5.0),
+            max_p_mem_uw: Some(10000.0),
+            max_util: Some(0.9),
+        },
+    );
+    assert_round_trip(&spec);
+}
+
+// ---- bitwise equivalence: manifest run == hand-built run ------------------
+
+#[test]
+fn fig3d_manifest_matches_the_hand_built_query_bitwise() {
+    let spec = compile(manifest::builtin("fig3d").unwrap(), "fig3d.xrdse", &[]).unwrap();
+    let ExperimentKind::Query(q) = &spec.kind else { panic!("fig3d is a query") };
+    let manifest_rows = exec::query_rows(q).unwrap();
+
+    let engine = Engine::new(
+        vec![cpu(), eyeriss(PeConfig::V2), simba(PeConfig::V2)],
+        vec![detnet(), edsnet()],
+    );
+    let hand_rows = Query::over(&engine)
+        .nodes(&[Node::N28, Node::N7])
+        .devices(Devices::PaperPick)
+        .assignments(Assignments::Flavors(vec![MemFlavor::SramOnly, MemFlavor::P0, MemFlavor::P1]))
+        .baseline(|p| p.flavor() == Some(MemFlavor::SramOnly))
+        .collect();
+
+    assert_eq!(manifest_rows.len(), hand_rows.len());
+    assert!(!manifest_rows.is_empty(), "fig3d grid must produce rows");
+    for (a, b) in manifest_rows.iter().zip(&hand_rows) {
+        assert_eq!(a.point.arch, b.point.arch);
+        assert_eq!(a.point.network, b.point.network);
+        assert_eq!(a.point.node, b.point.node);
+        assert_eq!(a.point.flavor_label(), b.point.flavor_label());
+        assert_eq!(a.point.precision, b.point.precision);
+        assert_eq!(a.point.energy.total_pj().to_bits(), b.point.energy.total_pj().to_bits());
+        assert_eq!(a.point.latency_ns.to_bits(), b.point.latency_ns.to_bits());
+        assert_eq!(a.point.area_mm2.to_bits(), b.point.area_mm2.to_bits());
+        assert_eq!(a.point.p_mem_uw(q.ips).to_bits(), b.point.p_mem_uw(q.ips).to_bits());
+        assert_eq!(
+            a.energy_vs_baseline().map(f64::to_bits),
+            b.energy_vs_baseline().map(f64::to_bits)
+        );
+    }
+}
+
+#[test]
+fn search_manifest_matches_the_hand_built_search_bitwise() {
+    // `--set` trims the builtin's budget so the gate stays CI-sized.
+    let sets = ["budget=40".to_string(), "batch=16".to_string()];
+    let spec =
+        compile(manifest::builtin("search_7nm").unwrap(), "search_7nm.xrdse", &sets).unwrap();
+    let ExperimentKind::Search(s) = &spec.kind else { panic!("search_7nm is a search") };
+    let (synth_m, cfg_m) = exec::build_search(s).unwrap();
+    let from_manifest = run_search(&synth_m, &mut RandomSearch, &cfg_m);
+
+    let mut space = KnobSpace::paper();
+    space.nodes = vec![Node::N7];
+    let synth_h = ArchSynth::new(space, detnet()).unwrap();
+    let cfg_h = SearchConfig {
+        objective: Objective::Energy,
+        constraints: Constraints::at_ips(10.0),
+        budget: 40,
+        batch: 16,
+        seed: 42,
+    };
+    let hand = run_search(&synth_h, &mut RandomSearch, &cfg_h);
+
+    assert_eq!(from_manifest.evaluations, hand.evaluations);
+    assert_eq!(from_manifest.frontier.len(), hand.frontier.len());
+    assert_eq!(from_manifest.trace.len(), hand.trace.len());
+    assert!(!from_manifest.trace.is_empty(), "search must evaluate something");
+    for (a, b) in from_manifest.trace.iter().zip(&hand.trace) {
+        assert_eq!(a.vector, b.vector);
+        assert_eq!(a.arch, b.arch);
+        assert_eq!(a.scalar.to_bits(), b.scalar.to_bits());
+        assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits());
+        assert_eq!(a.edp.to_bits(), b.edp.to_bits());
+        assert_eq!(a.joined_frontier, b.joined_frontier);
+    }
+}
+
+#[test]
+fn scenario_manifest_matches_the_hand_built_scenario_bitwise() {
+    // Force the offline backend so the gate never needs PJRT artifacts.
+    let sets = ["backend=synthetic".to_string()];
+    let spec = compile(
+        manifest::builtin("paper_hand_10ips").unwrap(),
+        "paper_hand_10ips.xrdse",
+        &sets,
+    )
+    .unwrap();
+    let ExperimentKind::Scenario(s) = &spec.kind else { panic!("builtin is a scenario") };
+    let from_manifest = exec::build_scenario(&spec.name, s).unwrap().run().unwrap();
+
+    let hand = Scenario {
+        name: "paper_hand_10ips".into(),
+        streams: vec![StreamSpec::new(
+            "hand",
+            "detnet",
+            Arrival::Periodic { fps: 10.0 },
+            MemFlavor::P1,
+        )],
+        seconds: 30.0,
+        time_scale: 30.0,
+        arch: simba(PeConfig::V2),
+        node: Node::N7,
+        mram: Device::VgsotMram,
+        backend: Backend::Synthetic,
+        runner: Runner::VirtualClock,
+    }
+    .run()
+    .unwrap();
+
+    assert_eq!(from_manifest.streams.len(), hand.streams.len());
+    for (a, b) in from_manifest.streams.iter().zip(&hand.streams) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.submitted, b.submitted);
+        assert_eq!(a.served, b.served);
+        assert_eq!(a.dropped, b.dropped);
+        assert_eq!(a.wakeups, b.wakeups);
+        assert_eq!(a.feasible, b.feasible);
+        assert_eq!(a.e2e.p50.to_bits(), b.e2e.p50.to_bits());
+        assert_eq!(a.e2e.p99.to_bits(), b.e2e.p99.to_bits());
+        assert_eq!(a.observed_ips.to_bits(), b.observed_ips.to_bits());
+        assert_eq!(a.ledger_uw.to_bits(), b.ledger_uw.to_bits());
+        assert_eq!(a.closed_form_uw.to_bits(), b.closed_form_uw.to_bits());
+        assert_eq!(a.energy_pj.to_bits(), b.energy_pj.to_bits());
+    }
+}
+
+#[test]
+fn fleet_manifest_matches_the_hand_built_fleet_bitwise() {
+    let src = r#"fleet "equiv" {
+  devices = 4
+  seconds = 2
+  seed = 42
+  node = 7
+  mram = vgsot
+  pool = palette
+  policy = least_loaded
+  load "hand" { model = detnet  arrival = periodic(10)  count = 12 }
+  load "eye" { model = edsnet  arrival = poisson(1)  count = 4 }
+}"#;
+    let spec = compile(src, "equiv.xrdse", &[]).unwrap();
+    let ExperimentKind::Fleet(f) = &spec.kind else { panic!("spec is a fleet") };
+    assert_eq!(f.policy, "least-loaded");
+    let lowered = exec::build_fleet(&spec.name, f).unwrap();
+    let mut policy = policy_by_name(&f.policy).unwrap();
+    let from_manifest = run_fleet(&lowered, policy.as_mut()).unwrap();
+
+    let hand_spec =
+        FleetSpec::new("equiv", HwPoint::paper_palette(Node::N7, Device::VgsotMram), 4, 2.0, 42)
+            .with_load(StreamLoad::new("hand", "detnet", Arrival::Periodic { fps: 10.0 }, 12))
+            .with_load(StreamLoad::new("eye", "edsnet", Arrival::Poisson { rate: 1.0 }, 4));
+    let mut policy = policy_by_name("least-loaded").unwrap();
+    let hand = run_fleet(&hand_spec, policy.as_mut()).unwrap();
+
+    assert_eq!(from_manifest.requested, hand.requested);
+    assert_eq!(from_manifest.placed, hand.placed);
+    assert_eq!(from_manifest.rejections, hand.rejections);
+    assert_eq!(from_manifest.submitted, hand.submitted);
+    assert_eq!(from_manifest.served, hand.served);
+    assert_eq!(from_manifest.dropped, hand.dropped);
+    assert_eq!(from_manifest.events, hand.events);
+    assert_eq!(from_manifest.energy_pj.to_bits(), hand.energy_pj.to_bits());
+    assert_eq!(from_manifest.p_mem_uw.to_bits(), hand.p_mem_uw.to_bits());
+    assert_eq!(from_manifest.e2e.p99.to_bits(), hand.e2e.p99.to_bits());
+}
+
+#[test]
+fn strategies_resolve_like_the_cli_always_did() {
+    let s = SearchSpec {
+        space: SpaceSpec { base: Some(SpaceBase::Tiny), ..SpaceSpec::default() },
+        ..SearchSpec::default()
+    };
+    let (synth, _) = exec::build_search(&s).unwrap();
+    assert_eq!(exec::strategies_for("all", &synth).unwrap().len(), 3);
+    assert_eq!(exec::strategies_for("hill", &synth).unwrap().len(), 1);
+    let err = exec::strategies_for("bogus", &synth).unwrap_err();
+    assert!(err.to_string().contains("unknown strategy 'bogus'"), "{err}");
+}
+
+// ---- flags parity ---------------------------------------------------------
+
+/// The same OptSpec vocabulary the CLI registers for these commands.
+fn cli_args(argv: &[&str]) -> Args {
+    let specs: Vec<OptSpec> = [
+        "preset", "backend", "artifacts", "horizon", "time-scale", "runner", "csv", "trace",
+        "metrics", "set", "net", "strategy", "objective", "budget", "batch", "seed", "ips",
+        "max-area", "max-power", "device", "devices", "streams", "seconds", "policy", "min-ips",
+    ]
+    .iter()
+    .map(|&n| OptSpec { name: n, takes_value: true, help: "", default: None })
+    .chain(
+        ["mixed-precision", "from-search"]
+            .iter()
+            .map(|&n| OptSpec { name: n, takes_value: false, help: "", default: None }),
+    )
+    .collect();
+    let argv: Vec<String> = argv.iter().map(|s| s.to_string()).collect();
+    parse(&argv, &specs).unwrap()
+}
+
+#[test]
+fn search_flags_and_manifest_text_bind_identically() {
+    let a = cli_args(&[
+        "--strategy", "random", "--budget", "32", "--batch", "8", "--seed", "9", "--ips", "12",
+    ]);
+    let from_flags = flags::search_spec(&a, Node::N28, Device::SttMram).unwrap();
+    let src = r#"search "search" {
+  net = detnet
+  objective = energy
+  strategy = random
+  budget = 32
+  batch = 8
+  seed = 9
+  min_ips = 12
+  knobs { base = paper  nodes = [28] }
+}"#;
+    assert_eq!(compile(src, "flags.xrdse", &[]).unwrap(), from_flags);
+}
+
+#[test]
+fn fleet_flags_and_manifest_text_bind_identically() {
+    let a = cli_args(&["--streams", "8", "--devices", "2", "--seconds", "1"]);
+    let from_flags = flags::fleet_spec(&a, Node::N7, Device::VgsotMram).unwrap();
+    let src = r#"fleet "xr-mix" {
+  devices = 2
+  seconds = 1
+  seed = 42
+  node = 7
+  mram = vgsot
+  policy = least_loaded
+  pool = palette
+  load "hand" { model = detnet  arrival = periodic(10)  count = 6 }
+  load "eye" { model = edsnet  arrival = poisson(1)  count = 2 }
+}"#;
+    assert_eq!(compile(src, "flags.xrdse", &[]).unwrap(), from_flags);
+}
+
+// ---- CLI smoke ------------------------------------------------------------
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_xr-edge-dse"))
+}
+
+fn tmp_manifest(name: &str, contents: &str) -> std::path::PathBuf {
+    let dir = Path::new(env!("CARGO_TARGET_TMPDIR"));
+    std::fs::create_dir_all(dir).unwrap();
+    let path = dir.join(name);
+    std::fs::write(&path, contents).unwrap();
+    path
+}
+
+#[test]
+fn cli_manifest_check_validates_every_checked_in_manifest() {
+    let names = [
+        "paper_hand_10ips",
+        "paper_eye_0p1ips",
+        "scenario_paper",
+        "scenario_stress",
+        "search_7nm",
+        "search_mixed_precision",
+        "fleet_1k",
+        "fig3d",
+    ];
+    let mut cmd = bin();
+    cmd.arg("manifest").arg("check");
+    for n in &names {
+        cmd.arg(format!("{}/../manifests/{n}.xrdse", env!("CARGO_MANIFEST_DIR")));
+    }
+    let out = cmd.output().expect("spawn xr-edge-dse");
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert_eq!(stdout.matches(": ok — ").count(), names.len(), "{stdout}");
+    assert!(stdout.contains("scenario 'paper_hand_10ips'"), "{stdout}");
+    assert!(stdout.contains("query 'fig3d'"), "{stdout}");
+}
+
+#[test]
+fn cli_run_applies_set_overrides() {
+    let path = tmp_manifest(
+        "cli_run_smoke.xrdse",
+        "query \"smoke\" {\n  archs = [cpu]\n  nets = [detnet]\n  nodes = [7]\n  assignments = [p1]\n}\n",
+    );
+    let out = bin().arg("run").arg(&path).args(["--set", "ips=20"]).output().expect("spawn");
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("query 'smoke'"), "{stdout}");
+    assert!(stdout.contains("@20 IPS"), "{stdout}");
+}
+
+#[test]
+fn cli_reports_spanned_errors_on_exit_2() {
+    let path = tmp_manifest("cli_bad_manifest.xrdse", "scenario \"s\" {\n  secondz = 10\n}\n");
+    let out = bin().arg("run").arg(&path).output().expect("spawn");
+    assert_eq!(out.status.code(), Some(2));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    let want = format!(
+        "error: {}:2:3: unknown key 'secondz' in 'scenario', did you mean 'seconds'?",
+        path.display()
+    );
+    assert!(stderr.contains(&want), "stderr: {stderr}");
+
+    let out = bin().args(["run", "definitely_missing.xrdse"]).output().expect("spawn");
+    assert_eq!(out.status.code(), Some(2));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("cannot read"), "stderr: {stderr}");
+}

@@ -19,7 +19,7 @@ use xr_edge_dse::coordinator::sensor::Sensor;
 use xr_edge_dse::coordinator::{Backend, Coordinator, StreamConfig};
 
 fn paper_scenario(seconds: f64, time_scale: f64) -> Scenario {
-    let mut sc = Scenario::preset("paper", "artifacts".into()).unwrap();
+    let mut sc = xr_edge_dse::manifest::scenario_preset("paper", "artifacts".into()).unwrap();
     sc.backend = Backend::Synthetic;
     sc.seconds = seconds;
     sc.time_scale = time_scale;
@@ -201,7 +201,7 @@ fn stress_preset_reports_drops_without_failing() {
     // The stress preset saturates its hot stream by construction (50 fps
     // against a 50 ms exec floor); the run must still complete and
     // account for every frame.
-    let mut sc = Scenario::preset("stress", "artifacts".into()).unwrap();
+    let mut sc = xr_edge_dse::manifest::scenario_preset("stress", "artifacts".into()).unwrap();
     sc.backend = Backend::Synthetic;
     sc.seconds = 2.0;
     sc.time_scale = 2.0;
